@@ -1,0 +1,51 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!  - hardware co-design gain: ARCO vs ARCO with frozen hardware knobs;
+//!  - MARL vs single-agent RL (CHAMELEON's explorer) on the same space;
+//!  - Confidence Sampling vs surrogate top-k (fig4 bench covers the
+//!    measurement-count side; this one compares final quality).
+
+mod common;
+
+use arco::tuner::{tune_model, Framework};
+use arco::workload::model_by_name;
+
+fn main() {
+    arco::util::log::init_from_env();
+    let model = model_by_name("resnet18").unwrap();
+    let budget = common::budget();
+    let seed = common::seed();
+
+    let full = tune_model(Framework::Arco, &model, budget, true, seed);
+    let sw_only = tune_model(Framework::ArcoSwOnly, &model, budget, true, seed);
+    let no_cs = tune_model(Framework::ArcoNoCs, &model, budget, true, seed);
+    let chameleon = tune_model(Framework::Chameleon, &model, budget, true, seed);
+    let random = tune_model(Framework::Random, &model, budget, true, seed);
+
+    println!("\nablation results on resnet18 (mean inference secs; lower is better):");
+    let rows = [
+        ("arco (full)", &full),
+        ("arco w/o hardware knobs", &sw_only),
+        ("arco w/o confidence sampling", &no_cs),
+        ("single-agent RL (chameleon)", &chameleon),
+        ("random search", &random),
+    ];
+    for (name, o) in rows {
+        println!(
+            "  {name:<30} {:.5} s   ({} measurements, {:.1}s modeled compile)",
+            o.inference_secs, o.measurements, o.compile_secs
+        );
+    }
+
+    // Co-design gain: hardware knobs must matter.
+    assert!(
+        full.inference_secs < sw_only.inference_secs,
+        "hardware co-design should improve over software-only"
+    );
+    // MARL on the *co-design* space should beat single-agent RL on the
+    // software-only space (the paper's core claim).
+    assert!(
+        full.inference_secs < chameleon.inference_secs,
+        "ARCO should beat CHAMELEON"
+    );
+    println!("\nshape OK: co-design gain and MARL advantage both present");
+}

@@ -1,0 +1,56 @@
+#![allow(dead_code)] // shared across bench targets; each uses a subset
+//! Shared helpers for the paper-figure benches.
+//!
+//! Every bench honours two environment knobs so the full suite can run at
+//! CI scale or paper scale:
+//!   - `ARCO_BENCH_TRIALS`   measurements per task (default 192)
+//!   - `ARCO_BENCH_MODELS`   comma list or "all" (default a 3-model subset)
+
+use arco::tuner::TuneBudget;
+
+pub fn trials() -> usize {
+    std::env::var("ARCO_BENCH_TRIALS").ok().and_then(|v| v.parse().ok()).unwrap_or(192)
+}
+
+pub fn budget() -> TuneBudget {
+    TuneBudget { total_measurements: trials(), batch: 64, ..Default::default() }
+}
+
+pub fn models() -> Vec<String> {
+    let spec = std::env::var("ARCO_BENCH_MODELS").unwrap_or_else(|_| "alexnet,resnet18,vgg11".into());
+    if spec == "all" {
+        arco::workload::model_names().iter().map(|s| s.to_string()).collect()
+    } else {
+        spec.split(',').map(|s| s.trim().to_string()).collect()
+    }
+}
+
+pub fn seed() -> u64 {
+    20260710
+}
+
+use arco::tuner::{compare_frameworks, CompareReport, Framework};
+use arco::workload::model_by_name;
+
+/// Run the paper's three-framework comparison over the bench model set.
+/// Shared by the table6/fig5/fig6/fig7 bench targets.
+pub fn run_paper_comparison() -> Vec<CompareReport> {
+    let budget = budget();
+    let mut reports = Vec::new();
+    for name in models() {
+        let model = model_by_name(&name).unwrap_or_else(|| panic!("unknown model {name}"));
+        eprintln!(
+            "[bench] comparing on {name} ({} unique tasks, {} trials/task)",
+            model.unique_tasks().len(),
+            trials()
+        );
+        reports.push(compare_frameworks(
+            &Framework::paper_set(),
+            &model,
+            budget,
+            true,
+            seed(),
+        ));
+    }
+    reports
+}

@@ -1,0 +1,99 @@
+//! Bench: regenerate Fig. 4 — configurations measured over time for
+//! ResNet-18, before vs after applying Confidence Sampling.
+//!
+//! Both variants run to the same measurement budget (the tuner exhausts
+//! whatever it is given), so the CS effect shows up as (a) fewer
+//! configurations measured *per planning iteration* and (b) fewer
+//! measurements needed to reach the same code quality — exactly the
+//! "sampling gravitates towards configurations that demonstrate superior
+//! performance over time" reading of the paper's figure.
+
+mod common;
+
+use arco::report;
+use arco::tuner::{tune_model, Framework, ModelOutcome};
+use arco::workload::model_by_name;
+
+/// Mean measurements per planning iteration across a model's tasks.
+fn per_iteration(o: &ModelOutcome) -> f64 {
+    let mut total_meas = 0usize;
+    let mut total_iters = 0usize;
+    for t in &o.tasks {
+        total_meas += t.result.trace.len();
+        total_iters += t.result.trace.iter().map(|e| e.iteration).max().map_or(0, |i| i + 1);
+    }
+    total_meas as f64 / total_iters.max(1) as f64
+}
+
+/// Measurements needed (heaviest task) to reach `frac` of a target GFLOPS.
+fn measurements_to(o: &ModelOutcome, target: f64, frac: f64) -> usize {
+    let t = o
+        .tasks
+        .iter()
+        .max_by_key(|t| t.result.trace.len())
+        .expect("tasks");
+    for e in &t.result.trace {
+        if e.best_gflops >= target * frac {
+            return e.ordinal;
+        }
+    }
+    t.result.trace.len()
+}
+
+fn main() {
+    arco::util::log::init_from_env();
+    let model = model_by_name("resnet18").unwrap();
+    let budget = common::budget();
+
+    let with_cs = tune_model(Framework::Arco, &model, budget, true, common::seed());
+    let without_cs = tune_model(Framework::ArcoNoCs, &model, budget, true, common::seed());
+
+    let pick = |o: &ModelOutcome| {
+        o.tasks
+            .iter()
+            .max_by_key(|t| t.result.trace.len())
+            .map(|t| t.result.trace.clone())
+            .unwrap_or_default()
+    };
+    let csv = report::fig4_configs_over_time(
+        "after_cs",
+        &pick(&with_cs),
+        "before_cs",
+        &pick(&without_cs),
+    );
+    report::write_result("fig4_cs_resnet18.csv", &csv).unwrap();
+
+    let cs_rate = per_iteration(&with_cs);
+    let nocs_rate = per_iteration(&without_cs);
+    println!(
+        "with CS:    {:.1} configs/iteration, {} total, {:.5}s final inference",
+        cs_rate, with_cs.measurements, with_cs.inference_secs
+    );
+    println!(
+        "without CS: {:.1} configs/iteration, {} total, {:.5}s final inference",
+        nocs_rate, without_cs.measurements, without_cs.inference_secs
+    );
+
+    // Measurements to reach 95% of the no-CS variant's final quality.
+    let target = without_cs
+        .tasks
+        .iter()
+        .max_by_key(|t| t.result.trace.len())
+        .map(|t| t.result.best.gflops)
+        .unwrap_or(0.0);
+    let m_cs = measurements_to(&with_cs, target, 0.95);
+    let m_nocs = measurements_to(&without_cs, target, 0.95);
+    println!("measurements to 95% quality: with CS {m_cs}, without {m_nocs}");
+
+    // Fig 4's claims: CS measures fewer configs per iteration and loses no
+    // meaningful final quality.
+    assert!(
+        cs_rate < nocs_rate * 0.95,
+        "CS should measure fewer configs per iteration ({cs_rate:.1} vs {nocs_rate:.1})"
+    );
+    assert!(
+        with_cs.inference_secs <= without_cs.inference_secs * 1.15,
+        "CS should preserve final quality"
+    );
+    println!("shape OK: CS reduces per-iteration measurements at comparable quality");
+}

@@ -1,0 +1,23 @@
+//! Bench: regenerate Fig. 5 — throughput of each framework normalized to
+//! AutoTVM (paper: ARCO averages 1.17x, up to +37.95%).
+
+mod common;
+
+use arco::report;
+use arco::tuner::Framework;
+
+fn main() {
+    arco::util::log::init_from_env();
+    let reports = common::run_paper_comparison();
+    let csv = report::fig5_throughput(&reports);
+    let summary = report::fig5_summary(&reports);
+    println!("\n{csv}\n{summary}");
+    report::write_result("fig5_throughput.csv", &csv).unwrap();
+    report::write_result("fig5_summary.txt", &summary).unwrap();
+
+    for r in &reports {
+        let rel = r.throughput_vs_autotvm(Framework::Arco).unwrap();
+        assert!(rel >= 0.95, "{}: ARCO relative throughput {rel} < 1", r.model);
+        println!("{}: ARCO {rel:.3}x vs AutoTVM", r.model);
+    }
+}

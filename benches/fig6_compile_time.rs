@@ -1,0 +1,27 @@
+//! Bench: regenerate Fig. 6 — optimization (compilation) time comparison.
+//! Metric: modeled time-to-parity with AutoTVM's final quality (the
+//! testbed-independent reading of "same compilation duration"); the paper
+//! reports ARCO up to 42.2% faster.
+
+mod common;
+
+use arco::report;
+use arco::tuner::Framework;
+
+fn main() {
+    arco::util::log::init_from_env();
+    let reports = common::run_paper_comparison();
+    let csv = report::fig6_compile_time(&reports);
+    println!("\n{csv}");
+    report::write_result("fig6_compile_time.csv", &csv).unwrap();
+
+    for r in &reports {
+        let auto = r.compile_secs_to_parity(Framework::AutoTvm).unwrap();
+        let ours = r.compile_secs_to_parity(Framework::Arco).unwrap();
+        println!(
+            "{}: ARCO reaches AutoTVM quality in {ours:.1}s vs {auto:.1}s ({:+.1}%)",
+            r.model,
+            (1.0 - ours / auto) * 100.0
+        );
+    }
+}

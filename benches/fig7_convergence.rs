@@ -1,0 +1,43 @@
+//! Bench: regenerate Fig. 7 — compiled-code GFLOPS vs number of hardware
+//! measurements for ResNet-18's heaviest task under each framework.
+
+mod common;
+
+use arco::report;
+use arco::tuner::{compare_frameworks, Framework};
+use arco::workload::model_by_name;
+
+fn main() {
+    arco::util::log::init_from_env();
+    let model = model_by_name("resnet18").unwrap();
+    let report_ = compare_frameworks(
+        &Framework::paper_set(),
+        &model,
+        common::budget(),
+        true,
+        common::seed(),
+    );
+    let csv = report::fig7_convergence(&report_);
+    report::write_result("fig7_convergence_resnet18.csv", &csv).unwrap();
+    println!("{}", csv.lines().take(12).collect::<Vec<_>>().join("\n"));
+    println!("... ({} rows) -> results/fig7_convergence_resnet18.csv", csv.lines().count());
+
+    // Shape: ARCO's final best GFLOPS >= both baselines' (it can reshape
+    // the hardware).
+    let final_best = |f: Framework| {
+        report_
+            .outcome(f)
+            .unwrap()
+            .tasks
+            .iter()
+            .map(|t| t.result.best.gflops)
+            .fold(0.0f64, f64::max)
+    };
+    let (a, c, o) = (
+        final_best(Framework::AutoTvm),
+        final_best(Framework::Chameleon),
+        final_best(Framework::Arco),
+    );
+    println!("peak GFLOPS: autotvm {a:.1}, chameleon {c:.1}, arco {o:.1}");
+    assert!(o >= a.max(c) * 0.98, "ARCO should reach at least baseline peak GFLOPS");
+}

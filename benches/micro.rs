@@ -1,0 +1,97 @@
+//! Micro-benchmarks of every hot component (the §Perf profiling harness):
+//! simulator instruction throughput, codegen lowering, GBT fit/predict,
+//! MARL backend calls (native and, when artifacts exist, XLA).
+
+mod common;
+
+use arco::codegen::{lower_conv, measure_point};
+use arco::costmodel::{featurize, CostModel, Gbt};
+use arco::marl::Backend;
+use arco::runtime::ModelDims;
+use arco::space::{ConfigSpace, SwConfig};
+use arco::util::bench::BenchRunner;
+use arco::util::rng::Pcg32;
+use arco::vta::{simulate, VtaConfig};
+use arco::workload::Conv2dTask;
+
+fn main() {
+    arco::util::log::init_from_env();
+    let mut runner = BenchRunner::new("micro");
+    let task = Conv2dTask::new(1, 64, 56, 56, 64, 3, 3, 1, 1);
+    let hw = VtaConfig::default();
+    let sw = SwConfig { tile_h: 8, tile_w: 8, h_threading: 2, oc_threading: 1 };
+
+    // Codegen lowering.
+    runner.bench("codegen/lower_conv_56x56", || lower_conv(&task, &hw, &sw).unwrap());
+
+    // Simulator throughput (elements = instructions per call).
+    let kernel = lower_conv(&task, &hw, &sw).unwrap();
+    let n_instr = kernel.stream.len() as u64;
+    runner.bench_with_elements("sim/pipeline_56x56", Some(n_instr), || {
+        arco::util::bench::black_box(simulate(&kernel.stream, &hw).unwrap());
+    });
+
+    // End-to-end measurement (decode + lower + simulate).
+    let space = ConfigSpace::for_task(&task, true);
+    let point = space.default_point();
+    runner.bench("measure/measure_point", || measure_point(&space, &point));
+
+    // Featurization + GBT.
+    let mut rng = Pcg32::seeded(1);
+    runner.bench("costmodel/featurize", || featurize(&space, &point));
+    let xs: Vec<Vec<f64>> = (0..512)
+        .map(|_| featurize(&space, &space.random_point(&mut rng)))
+        .collect();
+    let ys: Vec<f64> = xs.iter().map(|f| f.iter().sum::<f64>()).collect();
+    let mut gbt = Gbt::default();
+    runner.bench("costmodel/gbt_fit_512", || {
+        let mut m = Gbt::default();
+        m.fit(&xs, &ys);
+        m
+    });
+    gbt.fit(&xs, &ys);
+    runner.bench("costmodel/gbt_predict", || gbt.predict(&xs[0]));
+
+    // MARL backend calls.
+    let dims = ModelDims::default();
+    for backend in backends(dims) {
+        let name = backend.name();
+        let mut rng = Pcg32::seeded(2);
+        let params: Vec<f32> = (0..dims.p_policy).map(|_| rng.gen_f32() * 0.1).collect();
+        let vparams: Vec<f32> = (0..dims.p_value).map(|_| rng.gen_f32() * 0.1).collect();
+        let obs: Vec<f32> = (0..dims.b_pol * dims.obs_dim).map(|_| rng.gen_f32()).collect();
+        let state: Vec<f32> = (0..dims.b_pol * dims.gstate_dim).map(|_| rng.gen_f32()).collect();
+        let mask = vec![1.0f32; dims.act_dim];
+        runner.bench_with_elements(
+            &format!("backend[{name}]/policy_forward_b64"),
+            Some(dims.b_pol as u64),
+            || {
+                arco::util::bench::black_box(backend.policy_forward(&params, &obs, &mask));
+            },
+        );
+        runner.bench_with_elements(
+            &format!("backend[{name}]/value_forward_b64"),
+            Some(dims.b_pol as u64),
+            || {
+                arco::util::bench::black_box(backend.value_forward(&vparams, &state));
+            },
+        );
+        let rewards = vec![0.1f32; dims.t_gae];
+        let values = vec![0.05f32; dims.t_gae];
+        runner.bench(&format!("backend[{name}]/gae_t512"), || {
+            arco::util::bench::black_box(backend.gae(&rewards, &values, 0.0, 0.99, 0.95));
+        });
+    }
+    runner.finish();
+}
+
+fn backends(dims: ModelDims) -> Vec<Backend> {
+    let mut v = vec![Backend::native(dims)];
+    let dir = arco::runtime::manifest::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        if let Ok(b) = Backend::xla(&dir) {
+            v.push(b);
+        }
+    }
+    v
+}

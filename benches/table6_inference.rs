@@ -1,0 +1,30 @@
+//! Bench: regenerate Table 6 — mean inference times (s) on VTA++ for
+//! AutoTVM / CHAMELEON / ARCO across the zoo.
+//!
+//! Scale with ARCO_BENCH_TRIALS (default 192) and ARCO_BENCH_MODELS
+//! (default alexnet,resnet18,vgg11; "all" for the paper's seven).
+
+mod common;
+
+use arco::report;
+
+fn main() {
+    arco::util::log::init_from_env();
+    let reports = common::run_paper_comparison();
+    let table = report::table6_inference(&reports);
+    println!("\nTable 6 — mean inference times (s) on VTA++:\n{table}");
+    let path = report::write_result("table6_inference.md", &table).unwrap();
+    println!("wrote {}", path.display());
+
+    // Shape assertion: ARCO never slower than AutoTVM on any model.
+    for r in &reports {
+        let auto = r.outcome(arco::tuner::Framework::AutoTvm).unwrap().inference_secs;
+        let ours = r.outcome(arco::tuner::Framework::Arco).unwrap().inference_secs;
+        assert!(
+            ours <= auto * 1.05,
+            "{}: ARCO {ours} vs AutoTVM {auto} — Table 6 shape violated",
+            r.model
+        );
+    }
+    println!("shape OK: ARCO <= AutoTVM inference time on every model");
+}

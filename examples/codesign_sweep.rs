@@ -1,0 +1,108 @@
+//! Hardware/software co-design sweep: the design-space view behind ARCO's
+//! hardware agent.
+//!
+//! ```bash
+//! cargo run --release --example codesign_sweep
+//! ```
+//!
+//! Enumerates every legal VTA++ GEMM geometry (BATCH x BLOCK_IN x
+//! BLOCK_OUT), tunes the *software* knobs for each via a short random
+//! search on a representative layer, and prints the area/latency Pareto
+//! front. This shows why per-layer hardware shaping matters: the best
+//! geometry differs between an early high-resolution layer and a late
+//! channel-heavy layer, which is exactly the signal ARCO's hardware agent
+//! learns.
+
+use arco::codegen::measure_point;
+use arco::space::ConfigSpace;
+use arco::util::rng::Pcg32;
+use arco::vta::area::{default_area_budget_mm2, total_area_mm2};
+use arco::vta::VtaConfig;
+use arco::workload::Conv2dTask;
+
+/// Best software configuration for a fixed hardware geometry, by sampling.
+fn best_sw_for_hw(
+    task: &Conv2dTask,
+    batch: usize,
+    block_in: usize,
+    block_out: usize,
+    samples: usize,
+    rng: &mut Pcg32,
+) -> Option<(f64, String)> {
+    let space = ConfigSpace::for_task(task, true);
+    let bi = |name: &str| space.knob_index(name).unwrap();
+    let pos = |name: &str, v: usize| {
+        space.knobs[bi(name)].values.iter().position(|&x| x == v)
+    };
+    let (ib, ici, ico) = (pos("tile_b", batch)?, pos("tile_ci", block_in)?, pos("tile_co", block_out)?);
+
+    let mut best: Option<(f64, String)> = None;
+    for _ in 0..samples {
+        let mut p = space.random_point(rng);
+        p.0[bi("tile_b")] = ib;
+        p.0[bi("tile_ci")] = ici;
+        p.0[bi("tile_co")] = ico;
+        let m = measure_point(&space, &p);
+        if m.valid && best.as_ref().map_or(true, |(s, _)| m.seconds < *s) {
+            best = Some((m.seconds, space.render(&p)));
+        }
+    }
+    best
+}
+
+fn sweep_layer(name: &str, task: &Conv2dTask) {
+    println!("\n== {} {} ({:.2} GFLOPs) ==", name, task.short_id(), task.flops() as f64 / 1e9);
+    let budget = default_area_budget_mm2();
+    let mut rng = Pcg32::seeded(99);
+    let mut rows: Vec<(f64, f64, String, String)> = Vec::new(); // (area, secs, geom, cfg)
+
+    for &b in &[1usize, 2, 4] {
+        for &ci in &[8usize, 16, 32, 64] {
+            for &co in &[8usize, 16, 32, 64] {
+                let hw = VtaConfig::with_gemm(b, ci, co);
+                let area = total_area_mm2(&hw);
+                if area > budget {
+                    continue; // infeasible under Eq. 4's budget
+                }
+                if let Some((secs, cfg)) = best_sw_for_hw(task, b, ci, co, 40, &mut rng) {
+                    rows.push((area, secs, format!("{b}x{ci}x{co}"), cfg));
+                }
+            }
+        }
+    }
+
+    // Pareto front on (area, latency).
+    rows.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut best_secs = f64::INFINITY;
+    println!("{:<10} {:>9} {:>11}   pareto", "geometry", "area mm2", "latency ms");
+    for (area, secs, geom, _cfg) in &rows {
+        let pareto = *secs < best_secs;
+        if pareto {
+            best_secs = *secs;
+        }
+        println!(
+            "{:<10} {:>9.3} {:>11.3}   {}",
+            geom,
+            area,
+            secs * 1e3,
+            if pareto { "*" } else { "" }
+        );
+    }
+    let winner = rows
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .expect("at least one feasible geometry");
+    println!("best geometry for this layer: {} ({:.3} ms)", winner.2, winner.1 * 1e3);
+}
+
+fn main() {
+    arco::util::log::init_from_env();
+    println!(
+        "area budget: {:.3} mm^2 (1.25x default VTA++ instance)",
+        default_area_budget_mm2()
+    );
+    // An early wide layer vs a late channel-heavy layer: the co-design
+    // optimum moves.
+    sweep_layer("early layer (ResNet-18 conv2_x)", &Conv2dTask::new(1, 64, 56, 56, 64, 3, 3, 1, 1));
+    sweep_layer("late layer (ResNet-18 conv5_x)", &Conv2dTask::new(1, 512, 7, 7, 512, 3, 3, 1, 1));
+}

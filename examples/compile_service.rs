@@ -1,0 +1,86 @@
+//! Compilation-as-a-service: a leader/worker deployment of the tuner.
+//!
+//! ```bash
+//! cargo run --release --example compile_service
+//! ```
+//!
+//! Models a small compilation farm: clients submit (model, framework)
+//! compilation jobs into a queue; a pool of worker threads drains it, each
+//! worker running the full per-task tuning pipeline; the leader aggregates
+//! results and prints a job report. This is the deployment shape a team
+//! would actually run ARCO in — one tuning service, many networks.
+
+use arco::tuner::{tune_model, Framework, TuneBudget};
+use arco::workload::model_by_name;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+struct Job {
+    id: usize,
+    model: &'static str,
+    framework: Framework,
+    trials: usize,
+}
+
+fn main() {
+    arco::util::log::init_from_env();
+    let t0 = Instant::now();
+
+    // Client-submitted job queue.
+    let jobs = vec![
+        Job { id: 0, model: "alexnet", framework: Framework::Arco, trials: 128 },
+        Job { id: 1, model: "alexnet", framework: Framework::AutoTvm, trials: 128 },
+        Job { id: 2, model: "resnet18", framework: Framework::Arco, trials: 96 },
+        Job { id: 3, model: "vgg11", framework: Framework::Arco, trials: 96 },
+        Job { id: 4, model: "alexnet", framework: Framework::Chameleon, trials: 128 },
+    ];
+    let queue = Arc::new(Mutex::new(jobs));
+    let (tx, rx) = mpsc::channel();
+
+    let service_workers = 2usize; // concurrent jobs
+    let sim_workers = 2usize; // simulator threads per job
+    println!("compile service: {service_workers} job workers x {sim_workers} sim threads");
+
+    std::thread::scope(|scope| {
+        for wid in 0..service_workers {
+            let queue = Arc::clone(&queue);
+            let tx = tx.clone();
+            scope.spawn(move || loop {
+                let job = { queue.lock().unwrap().pop() };
+                let Some(job) = job else { break };
+                let model = model_by_name(job.model).unwrap();
+                let budget = TuneBudget {
+                    total_measurements: job.trials,
+                    batch: 32,
+                    workers: sim_workers,
+                    ..Default::default()
+                };
+                let started = Instant::now();
+                let out = tune_model(job.framework, &model, budget, true, 7 + job.id as u64);
+                tx.send((wid, job, out, started.elapsed())).unwrap();
+            });
+        }
+        drop(tx);
+
+        // Leader: aggregate results as they stream in.
+        let mut done = 0usize;
+        for (wid, job, out, took) in rx {
+            done += 1;
+            println!(
+                "[{:>6.2}s] worker{} job#{} {:<9} {:<9} -> inference {:.5}s, {} measurements, took {:.1}s",
+                t0.elapsed().as_secs_f64(),
+                wid,
+                job.id,
+                job.model,
+                job.framework.name(),
+                out.inference_secs,
+                out.measurements,
+                took.as_secs_f64()
+            );
+        }
+        println!("service drained: {done} jobs");
+        assert_eq!(done, 5);
+    });
+}

@@ -1,0 +1,62 @@
+//! Quickstart: co-optimize one convolution layer with ARCO.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Tunes ResNet-18's most expensive 3x3 layer for ~200 simulated hardware
+//! measurements, then compares the discovered (hardware, software)
+//! configuration against the default VTA++ operating point.
+
+use arco::codegen::measure_point;
+use arco::marl::strategy::{Arco, ArcoParams};
+use arco::space::ConfigSpace;
+use arco::tuner::{tune_task, Strategy, TuneBudget};
+use arco::workload::Conv2dTask;
+
+fn main() {
+    arco::util::log::init_from_env();
+
+    // ResNet-18 stage-1 conv: 64ch 56x56, 3x3.
+    let task = Conv2dTask::new(1, 64, 56, 56, 64, 3, 3, 1, 1);
+    println!("task: {} ({:.2} GFLOPs)", task.short_id(), task.flops() as f64 / 1e9);
+
+    // Full co-design space: hardware knobs tunable.
+    let space = ConfigSpace::for_task(&task, true);
+    println!("design space: {} knobs, {} configurations", space.num_knobs(), space.size());
+
+    // Baseline: the default VTA++ point.
+    let default_point = space.default_point();
+    let default = measure_point(&space, &default_point);
+    println!(
+        "default config: {}\n  -> {:.3} ms, {:.1} GFLOPS, {:.2} mm^2",
+        space.render(&default_point),
+        default.seconds * 1e3,
+        default.gflops,
+        default.area_mm2
+    );
+
+    // ARCO: three MAPPO agents + confidence sampling.
+    let mut strategy = Arco::new(space.clone(), ArcoParams::quick(), 42);
+    let budget = TuneBudget { total_measurements: 200, batch: 32, ..Default::default() };
+    let result = tune_task(&space, &mut strategy, budget);
+
+    let best_point = result.best_point.expect("tuning found a config");
+    println!(
+        "\nARCO best after {} measurements ({} invalid, {:.2}s wall):",
+        result.measurements, result.invalid, result.wall_secs
+    );
+    println!("  {}", space.render(&best_point));
+    println!(
+        "  -> {:.3} ms, {:.1} GFLOPS, {:.2} mm^2 ({})",
+        result.best.seconds * 1e3,
+        result.best.gflops,
+        result.best.area_mm2,
+        strategy.diag()
+    );
+    println!(
+        "\nspeedup over default VTA++: {:.2}x",
+        default.seconds / result.best.seconds
+    );
+    assert!(result.best.seconds <= default.seconds, "tuned config must not regress");
+}

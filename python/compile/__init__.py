@@ -1,0 +1,1 @@
+"""ARCO build-time compile package (never imported at runtime)."""

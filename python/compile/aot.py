@@ -1,0 +1,132 @@
+"""AOT export: lower every L2 entry point to HLO *text* + write the manifest.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the runtime's xla_extension
+0.5.1 rejects; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/gen_hlo.py). Lowering uses ``return_tuple=True``; the rust
+side unwraps with ``to_tuple()``.
+
+Run once via ``make artifacts``; python never executes on the tuning path.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import dims, model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def entry_points():
+    """(name, fn, example_args) for every exported graph."""
+    P, V = dims.P_POLICY, dims.P_VALUE
+    B, BT, T = dims.B_POL, dims.B_TRAIN, dims.T_GAE
+    return [
+        (
+            "policy_forward",
+            model.policy_forward_flat,
+            (f32(P), f32(B, dims.OBS_DIM), f32(dims.ACT_DIM)),
+        ),
+        (
+            "value_forward",
+            model.value_forward_flat,
+            (f32(V), f32(B, dims.GSTATE_DIM)),
+        ),
+        (
+            "gae",
+            model.gae_flat,
+            (f32(T), f32(T), f32(1), f32(2)),
+        ),
+        (
+            "policy_train",
+            model.policy_train_step,
+            (
+                f32(P), f32(P), f32(P), f32(1),
+                f32(BT, dims.OBS_DIM), f32(dims.ACT_DIM),
+                i32(BT), f32(BT), f32(BT), f32(BT),
+            ),
+        ),
+        (
+            "value_train",
+            model.value_train_step,
+            (
+                f32(V), f32(V), f32(V), f32(1),
+                f32(BT, dims.GSTATE_DIM), f32(BT), f32(BT),
+            ),
+        ),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "dims": {
+            "obs_dim": dims.OBS_DIM,
+            "act_dim": dims.ACT_DIM,
+            "gstate_dim": dims.GSTATE_DIM,
+            "hidden": dims.HIDDEN,
+            "b_pol": dims.B_POL,
+            "b_train": dims.B_TRAIN,
+            "t_gae": dims.T_GAE,
+            "p_policy": dims.P_POLICY,
+            "p_value": dims.P_VALUE,
+        },
+        "hyper": {
+            "clip_eps": model.CLIP_EPS,
+            "entropy_coef": model.ENTROPY_COEF,
+            "lr_policy": model.LR_POLICY,
+            "lr_value": model.LR_VALUE,
+            "max_grad_norm": model.MAX_GRAD_NORM,
+        },
+        "artifacts": {},
+    }
+
+    for name, fn, example in entry_points():
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "sha256_16": digest,
+            "bytes": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+        f.write("\n")
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

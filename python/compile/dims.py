@@ -1,0 +1,42 @@
+"""Static shape contract between the L2 JAX graphs and the L3 rust runtime.
+
+AOT compilation fixes every shape at lowering time; these constants are the
+single source of truth. `aot.py` copies them into ``artifacts/manifest.json``
+so the rust coordinator never hardcodes them.
+"""
+
+# Observation fed to each agent's policy: normalized knob settings (7),
+# agent one-hot (3), last reward, best-so-far, step fraction, occupancy,
+# area ratio + 2 spare slots = 16.
+OBS_DIM = 16
+
+# Padded action space: the hardware agent steps 3 knobs x {dec,stay,inc}
+# = 27 joint actions; the two software agents use 9 of the 27 via masks.
+ACT_DIM = 27
+
+# Global state for the centralized critic: concat of per-agent summaries
+# plus task descriptors.
+GSTATE_DIM = 24
+
+# Hidden width of every MLP (paper §4.1: 20 neurons).
+HIDDEN = 20
+
+# Policy/value forward batch (candidate-set scoring); rust pads to this.
+B_POL = 64
+
+# PPO train-step minibatch; rust pads rollout slices to this.
+B_TRAIN = 256
+
+# GAE horizon (covers the paper's step_rl=500).
+T_GAE = 512
+
+# Parameter counts (flattened per layer: W row-major then b).
+P_POLICY = (OBS_DIM * HIDDEN + HIDDEN) + (HIDDEN * ACT_DIM + ACT_DIM)
+P_VALUE = (
+    (GSTATE_DIM * HIDDEN + HIDDEN)
+    + 2 * (HIDDEN * HIDDEN + HIDDEN)
+    + (HIDDEN * 1 + 1)
+)
+
+assert P_POLICY == 907
+assert P_VALUE == 1361

@@ -1,0 +1,1 @@
+"""L1 Pallas kernels and their pure-jnp oracles."""

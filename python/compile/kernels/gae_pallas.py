@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: Generalized Advantage Estimation (Eq. 2).
+
+A single-program sequential kernel: GAE is a strict reverse recurrence
+(adv[t] = delta[t] + gamma*lam*adv[t+1]), so the kernel keeps the whole
+horizon (T_GAE=512 f32 = 2 KiB per array) resident in VMEM and runs one
+fori_loop backwards. On TPU the win over the jnp version is avoiding T
+separate scan-step dispatches; under interpret=True it is validated for
+numerics only.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gae_kernel(rew_ref, val_ref, boot_ref, gl_ref, adv_ref, ret_ref):
+    T = rew_ref.shape[0]
+    gamma = gl_ref[0]
+    lam = gl_ref[1]
+
+    def body(i, acc):
+        t = T - 1 - i
+        next_v = jnp.where(t + 1 < T, val_ref[jnp.minimum(t + 1, T - 1)], boot_ref[0])
+        delta = rew_ref[t] + gamma * next_v - val_ref[t]
+        acc = delta + gamma * lam * acc
+        adv_ref[t] = acc
+        ret_ref[t] = acc + val_ref[t]
+        return acc
+
+    jax.lax.fori_loop(0, T, body, jnp.float32(0.0))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gae(rewards, values, bootstrap, gamma_lam):
+    """rewards/values: (T,) f32; bootstrap: (1,) f32; gamma_lam: (2,) f32.
+
+    Returns (advantages, returns), each (T,) f32.
+    """
+    T = rewards.shape[0]
+    return pl.pallas_call(
+        _gae_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((T,), jnp.float32),
+            jax.ShapeDtypeStruct((T,), jnp.float32),
+        ),
+        interpret=True,
+    )(rewards, values, bootstrap, gamma_lam)

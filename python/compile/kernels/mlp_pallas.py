@@ -1,0 +1,123 @@
+"""L1 Pallas kernels: fused MLP forward passes.
+
+The MARL hot-spot is scoring batches of candidate configurations with the
+policy and (for Confidence Sampling, Algorithm 2 line 2) the critic. These
+kernels fuse the whole MLP — every matmul, bias and nonlinearity — into one
+Pallas program so the intermediate activations never leave VMEM.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation):
+
+- the grid is 1-D over batch blocks; each program computes a
+  ``(BLOCK_B, features)`` tile.
+- the weight operands use "load whole" BlockSpecs (``None`` grid mapping):
+  20-wide layers are a few KiB and live in VMEM for the kernel's lifetime.
+- matmuls request ``preferred_element_type=f32`` so lowering targets the
+  MXU with f32 accumulation.
+- everything here runs with ``interpret=True``: the CPU PJRT plugin cannot
+  execute Mosaic custom-calls, and the AOT HLO must load in the rust
+  runtime. On a real TPU the same kernels compile unchanged.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch tile: small networks, modest batches — one VMEM-friendly block.
+BLOCK_B = 32
+
+
+def _policy_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, out_ref):
+    """One batch block: logits = relu(x@w1+b1) @ w2 + b2."""
+    x = x_ref[...]
+    h = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32) + b1_ref[...]
+    h = jnp.maximum(h, 0.0)
+    out = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32) + b2_ref[...]
+    out_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=())
+def policy_forward(x, w1, b1, w2, b2):
+    """Fused policy-MLP forward.
+
+    x: (B, OBS) f32; w1: (OBS, H); b1: (H,); w2: (H, A); b2: (A,).
+    Returns logits (B, A) f32. B must be a multiple of BLOCK_B (rust pads).
+    """
+    B, obs = x.shape
+    H = w1.shape[1]
+    A = w2.shape[1]
+    assert B % BLOCK_B == 0, f"batch {B} not a multiple of {BLOCK_B}"
+    grid = (B // BLOCK_B,)
+    return pl.pallas_call(
+        _policy_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, obs), lambda i: (i, 0)),
+            pl.BlockSpec((obs, H), lambda i: (0, 0)),
+            pl.BlockSpec((H,), lambda i: (0,)),
+            pl.BlockSpec((H, A), lambda i: (0, 0)),
+            pl.BlockSpec((A,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, A), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, A), jnp.float32),
+        interpret=True,
+    )(x, w1, b1, w2, b2)
+
+
+def _value_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, w3_ref, b3_ref, w4_ref, b4_ref, out_ref):
+    """One batch block of the critic: 3x tanh hidden, scalar head."""
+    h = x_ref[...]
+    h = jnp.tanh(jnp.dot(h, w1_ref[...], preferred_element_type=jnp.float32) + b1_ref[...])
+    h = jnp.tanh(jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32) + b2_ref[...])
+    h = jnp.tanh(jnp.dot(h, w3_ref[...], preferred_element_type=jnp.float32) + b3_ref[...])
+    v = jnp.dot(h, w4_ref[...], preferred_element_type=jnp.float32) + b4_ref[...]
+    out_ref[...] = v
+
+
+@functools.partial(jax.jit, static_argnames=())
+def value_forward(x, w1, b1, w2, b2, w3, b3, w4, b4):
+    """Fused critic forward. x: (B, GSTATE); returns (B,) f32."""
+    B, gs = x.shape
+    H = w1.shape[1]
+    assert B % BLOCK_B == 0, f"batch {B} not a multiple of {BLOCK_B}"
+    grid = (B // BLOCK_B,)
+    out = pl.pallas_call(
+        _value_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, gs), lambda i: (i, 0)),
+            pl.BlockSpec((gs, H), lambda i: (0, 0)),
+            pl.BlockSpec((H,), lambda i: (0,)),
+            pl.BlockSpec((H, H), lambda i: (0, 0)),
+            pl.BlockSpec((H,), lambda i: (0,)),
+            pl.BlockSpec((H, H), lambda i: (0, 0)),
+            pl.BlockSpec((H,), lambda i: (0,)),
+            pl.BlockSpec((H, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        interpret=True,
+    )(x, w1, b1, w2, b2, w3, b3, w4, b4)
+    return out[:, 0]
+
+
+def vmem_footprint_bytes(obs_dim, act_dim, gstate_dim, hidden):
+    """Estimated per-program VMEM working set (f32), for DESIGN.md §Perf."""
+    policy = (
+        BLOCK_B * obs_dim  # x tile
+        + obs_dim * hidden + hidden  # layer 1
+        + hidden * act_dim + act_dim  # layer 2
+        + BLOCK_B * hidden  # activations
+        + BLOCK_B * act_dim  # out tile
+    ) * 4
+    value = (
+        BLOCK_B * gstate_dim
+        + gstate_dim * hidden + hidden
+        + 2 * (hidden * hidden + hidden)
+        + hidden + 1
+        + 3 * BLOCK_B * hidden
+        + BLOCK_B
+    ) * 4
+    return {"policy": policy, "value": value}

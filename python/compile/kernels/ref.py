@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``*_ref`` function is the mathematically-plain definition; pytest
+(``python/tests/test_kernels.py``) sweeps shapes/dtypes with hypothesis and
+asserts the Pallas kernels match to float32 tolerance. The L2 train-step
+graphs also use these definitions directly (autodiff needs jnp, not Pallas
+calls), so kernel == ref is what keeps inference and training consistent.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def dense(x, w, b):
+    """x @ w + b with f32 accumulation."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+
+
+def policy_forward_ref(x, w1, b1, w2, b2):
+    """Policy MLP: one 20-wide ReLU hidden layer, linear logits head."""
+    h = jnp.maximum(dense(x, w1, b1), 0.0)
+    return dense(h, w2, b2)
+
+
+def value_forward_ref(x, ws, bs):
+    """Centralized critic: three tanh hidden layers, scalar head.
+
+    ``ws``/``bs`` are length-4 lists (3 hidden + head).
+    """
+    h = x
+    for w, b in zip(ws[:-1], bs[:-1]):
+        h = jnp.tanh(dense(h, w, b))
+    return dense(h, ws[-1], bs[-1])[:, 0]
+
+
+def masked_log_softmax_ref(logits, mask):
+    """Log-softmax over the unmasked action columns; masked cols -> large-neg."""
+    neg = jnp.float32(-1e30)
+    masked = jnp.where(mask > 0, logits, neg)
+    m = jnp.max(masked, axis=-1, keepdims=True)
+    z = jnp.sum(jnp.where(mask > 0, jnp.exp(masked - m), 0.0), axis=-1, keepdims=True)
+    lse = m + jnp.log(z)
+    return jnp.where(mask > 0, logits - lse, neg)
+
+
+def gae_ref(rewards, values, bootstrap, gamma, lam):
+    """Generalized Advantage Estimation, reverse recurrence (Eq. 2).
+
+    Returns (advantages, returns).
+    """
+    next_values = jnp.concatenate([values[1:], jnp.reshape(bootstrap, (1,))])
+    deltas = rewards + gamma * next_values - values
+
+    def step(carry, delta):
+        acc = delta + gamma * lam * carry
+        return acc, acc
+
+    _, rev_adv = jax.lax.scan(step, jnp.zeros((), deltas.dtype), deltas[::-1])
+    adv = rev_adv[::-1]
+    return adv, adv + values

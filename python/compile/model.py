@@ -1,0 +1,177 @@
+"""L2: the MAPPO compute graphs (§2.2, Eqs. 1-3), built on the L1 kernels.
+
+Entry points (all functions of flat f32 parameter vectors, matching the
+rust-side flattening order: per layer, weights row-major then bias):
+
+- ``policy_forward_flat``  — fused Pallas policy MLP + masked log-softmax
+- ``value_forward_flat``   — fused Pallas critic MLP
+- ``policy_train_step``    — PPO-clip actor update (loss, jax.grad, Adam)
+- ``value_train_step``     — critic MSE update (Eq. 1)
+- ``gae_flat``             — Pallas GAE kernel (Eq. 2)
+
+Train steps use the pure-jnp ref math (pallas_call has no autodiff rule),
+which the kernel tests pin to the kernels; forwards use the kernels
+themselves, so the exported HLO exercises the Pallas path where it matters:
+candidate scoring is the hot call (thousands per tuning iteration),
+updates run once per iteration.
+
+Hyper-parameters (clip epsilon, entropy coef, Adam lr, grad clip) are baked
+into the lowered HLO as compile-time constants, mirroring how the paper
+fixes them per run (Table 4); `aot.py` records them in the manifest.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import dims
+from .kernels import gae_pallas, mlp_pallas, ref
+
+# --- Baked hyper-parameters (MAPPO paper defaults; Table 4 pipeline) -------
+CLIP_EPS = 0.2
+ENTROPY_COEF = 0.01
+LR_POLICY = 5e-3
+LR_VALUE = 5e-3
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+MAX_GRAD_NORM = 10.0
+
+
+# --- Parameter (un)flattening ----------------------------------------------
+
+def policy_shapes():
+    return [
+        (dims.OBS_DIM, dims.HIDDEN),
+        (dims.HIDDEN,),
+        (dims.HIDDEN, dims.ACT_DIM),
+        (dims.ACT_DIM,),
+    ]
+
+
+def value_shapes():
+    return [
+        (dims.GSTATE_DIM, dims.HIDDEN),
+        (dims.HIDDEN,),
+        (dims.HIDDEN, dims.HIDDEN),
+        (dims.HIDDEN,),
+        (dims.HIDDEN, dims.HIDDEN),
+        (dims.HIDDEN,),
+        (dims.HIDDEN, 1),
+        (1,),
+    ]
+
+
+def unflatten(flat, shapes):
+    out = []
+    off = 0
+    for s in shapes:
+        n = 1
+        for d in s:
+            n *= d
+        out.append(jnp.reshape(flat[off:off + n], s))
+        off += n
+    return out
+
+
+# --- Forward entry points (Pallas path) -------------------------------------
+
+def policy_forward_flat(params, obs, mask):
+    """params: (P_POLICY,), obs: (B, OBS_DIM), mask: (ACT_DIM,).
+
+    Returns masked log-probs (B, ACT_DIM).
+    """
+    w1, b1, w2, b2 = unflatten(params, policy_shapes())
+    logits = mlp_pallas.policy_forward(obs, w1, b1, w2, b2)
+    return ref.masked_log_softmax_ref(logits, mask)
+
+
+def value_forward_flat(params, state):
+    """params: (P_VALUE,), state: (B, GSTATE_DIM). Returns values (B,)."""
+    w1, b1, w2, b2, w3, b3, w4, b4 = unflatten(params, value_shapes())
+    return mlp_pallas.value_forward(state, w1, b1, w2, b2, w3, b3, w4, b4)
+
+
+def gae_flat(rewards, values, bootstrap, gamma_lam):
+    """Pallas GAE over a fixed T_GAE horizon."""
+    return gae_pallas.gae(rewards, values, bootstrap, gamma_lam)
+
+
+# --- Train-step entry points (jnp ref math + jax.grad + Adam) ---------------
+
+def _policy_forward_ref_flat(params, obs, mask):
+    w1, b1, w2, b2 = unflatten(params, policy_shapes())
+    logits = ref.policy_forward_ref(obs, w1, b1, w2, b2)
+    return ref.masked_log_softmax_ref(logits, mask)
+
+
+def _value_forward_ref_flat(params, state):
+    ws_bs = unflatten(params, value_shapes())
+    ws = ws_bs[0::2]
+    bs = ws_bs[1::2]
+    return ref.value_forward_ref(state, ws, bs)
+
+
+def _ppo_loss(params, obs, mask, actions, old_logp, adv, weight):
+    """Mean PPO-clip surrogate + entropy bonus over weighted rows (Eq. 3)."""
+    logp_all = _policy_forward_ref_flat(params, obs, mask)
+    logp = jnp.take_along_axis(logp_all, actions[:, None], axis=1)[:, 0]
+    ratio = jnp.exp(logp - old_logp)
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - CLIP_EPS, 1.0 + CLIP_EPS) * adv
+    surrogate = jnp.minimum(unclipped, clipped)
+    probs = jnp.where(mask > 0, jnp.exp(logp_all), 0.0)
+    ent = -jnp.sum(jnp.where(probs > 0, probs * jnp.log(jnp.maximum(probs, 1e-30)), 0.0), axis=1)
+    wsum = jnp.maximum(jnp.sum(weight), 1.0)
+    loss = -jnp.sum(surrogate * weight) / wsum - ENTROPY_COEF * jnp.sum(ent * weight) / wsum
+    clip_frac = jnp.sum((unclipped > clipped).astype(jnp.float32) * weight) / wsum
+    return loss, (jnp.sum(ent * weight) / wsum, clip_frac)
+
+
+def _adam_update(params, grads, m, v, t, lr):
+    """One Adam step with global-norm clipping; returns new (params, m, v, t)."""
+    norm = jnp.sqrt(jnp.sum(grads * grads))
+    scale = jnp.minimum(1.0, MAX_GRAD_NORM / jnp.maximum(norm, 1e-12))
+    grads = grads * scale
+    t_new = t + 1.0
+    m_new = ADAM_B1 * m + (1.0 - ADAM_B1) * grads
+    v_new = ADAM_B2 * v + (1.0 - ADAM_B2) * grads * grads
+    mhat = m_new / (1.0 - ADAM_B1 ** t_new)
+    vhat = v_new / (1.0 - ADAM_B2 ** t_new)
+    params_new = params - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return params_new, m_new, v_new, t_new
+
+
+def policy_train_step(params, m, v, t, obs, mask, actions, old_logp, adv, weight):
+    """One PPO-clip update of an agent's policy.
+
+    Shapes: params/m/v (P_POLICY,); t (1,); obs (B_TRAIN, OBS_DIM);
+    mask (ACT_DIM,); actions (B_TRAIN,) i32; old_logp/adv/weight (B_TRAIN,).
+    Returns (params', m', v', t', loss, entropy, clip_frac).
+    """
+    (loss, (entropy, clip_frac)), grads = jax.value_and_grad(_ppo_loss, has_aux=True)(
+        params, obs, mask, actions, old_logp, adv, weight
+    )
+    params_n, m_n, v_n, t_n = _adam_update(params, grads, m, v, t[0], LR_POLICY)
+    return (
+        params_n,
+        m_n,
+        v_n,
+        jnp.reshape(t_n, (1,)),
+        jnp.reshape(loss, (1,)),
+        jnp.reshape(entropy, (1,)),
+        jnp.reshape(clip_frac, (1,)),
+    )
+
+
+def _value_loss(params, state, returns, weight):
+    pred = _value_forward_ref_flat(params, state)
+    err = pred - returns
+    wsum = jnp.maximum(jnp.sum(weight), 1.0)
+    return jnp.sum(err * err * weight) / wsum
+
+
+def value_train_step(params, m, v, t, state, returns, weight):
+    """One critic MSE update (Eq. 1). Returns (params', m', v', t', loss)."""
+    loss, grads = jax.value_and_grad(_value_loss)(params, state, returns, weight)
+    params_n, m_n, v_n, t_n = _adam_update(params, grads, m, v, t[0], LR_VALUE)
+    return params_n, m_n, v_n, jnp.reshape(t_n, (1,)), jnp.reshape(loss, (1,))

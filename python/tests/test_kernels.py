@@ -1,0 +1,158 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+Hypothesis sweeps batch sizes, value magnitudes and seeds; assert_allclose
+against ref.py is THE correctness signal for the kernels that end up inside
+the AOT artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import dims
+from compile.kernels import gae_pallas, mlp_pallas, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, *shape, scale=1.0):
+    return scale * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def policy_params(seed, obs=dims.OBS_DIM, hid=dims.HIDDEN, act=dims.ACT_DIM):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    return (
+        rand(ks[0], obs, hid, scale=0.5),
+        rand(ks[1], hid, scale=0.1),
+        rand(ks[2], hid, act, scale=0.5),
+        rand(ks[3], act, scale=0.1),
+    )
+
+
+def value_params(seed, gs=dims.GSTATE_DIM, hid=dims.HIDDEN):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+    return (
+        rand(ks[0], gs, hid, scale=0.5), rand(ks[1], hid, scale=0.1),
+        rand(ks[2], hid, hid, scale=0.5), rand(ks[3], hid, scale=0.1),
+        rand(ks[4], hid, hid, scale=0.5), rand(ks[5], hid, scale=0.1),
+        rand(ks[6], hid, 1, scale=0.5), rand(ks[7], 1, scale=0.1),
+    )
+
+
+class TestPolicyKernel:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        blocks=st.integers(1, 4),
+        scale=st.sampled_from([0.01, 1.0, 10.0]),
+    )
+    def test_matches_ref(self, seed, blocks, scale):
+        B = blocks * mlp_pallas.BLOCK_B
+        w1, b1, w2, b2 = policy_params(seed)
+        x = rand(jax.random.PRNGKey(seed + 1), B, dims.OBS_DIM, scale=scale)
+        got = mlp_pallas.policy_forward(x, w1, b1, w2, b2)
+        want = ref.policy_forward_ref(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_rejects_unpadded_batch(self):
+        w1, b1, w2, b2 = policy_params(0)
+        x = jnp.zeros((7, dims.OBS_DIM), jnp.float32)
+        with pytest.raises(AssertionError):
+            mlp_pallas.policy_forward(x, w1, b1, w2, b2)
+
+    def test_zero_input_gives_bias_path(self):
+        w1, b1, w2, b2 = policy_params(3)
+        x = jnp.zeros((mlp_pallas.BLOCK_B, dims.OBS_DIM), jnp.float32)
+        got = mlp_pallas.policy_forward(x, w1, b1, w2, b2)
+        want = ref.policy_forward_ref(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+        # All rows identical.
+        np.testing.assert_allclose(got[0], got[-1], rtol=0, atol=0)
+
+
+class TestValueKernel:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), blocks=st.integers(1, 3))
+    def test_matches_ref(self, seed, blocks):
+        B = blocks * mlp_pallas.BLOCK_B
+        params = value_params(seed)
+        x = rand(jax.random.PRNGKey(seed + 9), B, dims.GSTATE_DIM)
+        got = mlp_pallas.value_forward(x, *params)
+        ws = list(params[0::2])
+        bs = list(params[1::2])
+        want = ref.value_forward_ref(x, ws, bs)
+        assert got.shape == (B,)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_outputs_bounded_by_tanh_head(self):
+        # tanh hidden keeps activations in [-1, 1]; head is linear, so
+        # |v| <= ||w4||_1 + |b4|.
+        params = value_params(5)
+        x = rand(jax.random.PRNGKey(6), mlp_pallas.BLOCK_B, dims.GSTATE_DIM, scale=100.0)
+        v = mlp_pallas.value_forward(x, *params)
+        bound = float(jnp.sum(jnp.abs(params[6])) + jnp.abs(params[7])[0]) + 1e-4
+        assert np.all(np.abs(np.asarray(v)) <= bound)
+
+
+class TestGaeKernel:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        t=st.sampled_from([4, 16, 100, dims.T_GAE]),
+        gamma=st.sampled_from([0.0, 0.9, 0.99, 1.0]),
+        lam=st.sampled_from([0.0, 0.95, 1.0]),
+    )
+    def test_matches_ref(self, seed, t, gamma, lam):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        rewards = rand(ks[0], t)
+        values = rand(ks[1], t)
+        boot = rand(ks[2], 1)
+        gl = jnp.array([gamma, lam], jnp.float32)
+        adv, ret = gae_pallas.gae(rewards, values, boot, gl)
+        adv_ref, ret_ref = ref.gae_ref(rewards, values, boot[0], gamma, lam)
+        np.testing.assert_allclose(adv, adv_ref, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(ret, ret_ref, rtol=1e-4, atol=1e-4)
+
+    def test_zero_rewards_zero_values(self):
+        t = 16
+        z = jnp.zeros((t,), jnp.float32)
+        adv, ret = gae_pallas.gae(z, z, jnp.zeros((1,)), jnp.array([0.9, 0.95], jnp.float32))
+        np.testing.assert_allclose(adv, np.zeros(t), atol=0)
+        np.testing.assert_allclose(ret, np.zeros(t), atol=0)
+
+    def test_terminal_reward_discounts_backward(self):
+        t = 3
+        rewards = jnp.array([0.0, 0.0, 1.0], jnp.float32)
+        values = jnp.zeros((t,), jnp.float32)
+        adv, _ = gae_pallas.gae(
+            rewards, values, jnp.zeros((1,)), jnp.array([0.9, 1.0], jnp.float32)
+        )
+        np.testing.assert_allclose(adv, [0.81, 0.9, 1.0], rtol=1e-6)
+
+
+class TestMaskedLogSoftmax:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n_masked=st.integers(0, dims.ACT_DIM - 1))
+    def test_normalizes_over_unmasked(self, seed, n_masked):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        logits = rand(k1, 8, dims.ACT_DIM, scale=3.0)
+        mask = np.ones(dims.ACT_DIM, np.float32)
+        idx = jax.random.permutation(k2, dims.ACT_DIM)[:n_masked]
+        mask[np.asarray(idx)] = 0.0
+        lp = ref.masked_log_softmax_ref(logits, jnp.asarray(mask))
+        p = np.where(mask > 0, np.exp(np.asarray(lp)), 0.0)
+        np.testing.assert_allclose(p.sum(axis=1), np.ones(8), rtol=1e-5)
+        assert np.all(np.asarray(lp)[:, mask == 0.0] <= -1e29)
+
+
+class TestVmemFootprint:
+    def test_fits_tpu_vmem(self):
+        # The whole working set must fit a v4/v5 core's ~16 MiB VMEM with
+        # huge margin (these are 20-neuron nets).
+        fp = mlp_pallas.vmem_footprint_bytes(
+            dims.OBS_DIM, dims.ACT_DIM, dims.GSTATE_DIM, dims.HIDDEN
+        )
+        assert fp["policy"] < 1 << 20
+        assert fp["value"] < 1 << 20

@@ -1,0 +1,142 @@
+"""L2 graph tests: train steps behave like RL updates should, and the AOT
+entry points lower to HLO cleanly."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, dims, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def init_policy_params(seed):
+    return 0.1 * jax.random.normal(jax.random.PRNGKey(seed), (dims.P_POLICY,), jnp.float32)
+
+
+def init_value_params(seed):
+    return 0.1 * jax.random.normal(jax.random.PRNGKey(seed), (dims.P_VALUE,), jnp.float32)
+
+
+def full_mask():
+    return jnp.ones((dims.ACT_DIM,), jnp.float32)
+
+
+class TestPolicyTrain:
+    def _batch(self, seed, b=dims.B_TRAIN):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        obs = jax.random.normal(ks[0], (b, dims.OBS_DIM), jnp.float32)
+        actions = jax.random.randint(ks[1], (b,), 0, dims.ACT_DIM)
+        adv = jax.random.normal(ks[2], (b,), jnp.float32)
+        weight = jnp.ones((b,), jnp.float32)
+        return obs, actions, adv, weight
+
+    def test_update_changes_params_and_improves_surrogate(self):
+        params = init_policy_params(0)
+        m = jnp.zeros_like(params)
+        v = jnp.zeros_like(params)
+        t = jnp.zeros((1,), jnp.float32)
+        obs, actions, adv, weight = self._batch(1)
+        mask = full_mask()
+        lp = model.policy_forward_flat(params, jnp.tile(obs[: dims.B_POL], (1, 1)), mask)
+        del lp
+        old_logp = jax.vmap(lambda o, a: model._policy_forward_ref_flat(params, o[None], mask)[0, a])(
+            obs, actions
+        )
+        losses = []
+        for _ in range(10):
+            params, m, v, t, loss, ent, cf = model.policy_train_step(
+                params, m, v, t, obs, mask, actions, old_logp, adv, weight
+            )
+            losses.append(float(loss[0]))
+        assert losses[-1] < losses[0], losses
+        assert float(t[0]) == 10.0
+
+    def test_padded_rows_do_not_contribute(self):
+        params = init_policy_params(3)
+        zeros = jnp.zeros_like(params)
+        t = jnp.zeros((1,), jnp.float32)
+        obs, actions, adv, _ = self._batch(2)
+        mask = full_mask()
+        old_logp = jax.vmap(lambda o, a: model._policy_forward_ref_flat(params, o[None], mask)[0, a])(
+            obs, actions
+        )
+        half = dims.B_TRAIN // 2
+        w_half = jnp.concatenate([jnp.ones(half), jnp.zeros(half)]).astype(jnp.float32)
+
+        # Same update from (a) first half weighted, garbage in second half,
+        # (b) first half weighted, different garbage.
+        obs_b = obs.at[half:].set(123.0)
+        adv_b = adv.at[half:].set(-99.0)
+        p_a = model.policy_train_step(params, zeros, zeros, t, obs, mask, actions, old_logp, adv, w_half)[0]
+        p_b = model.policy_train_step(params, zeros, zeros, t, obs_b, mask, actions, old_logp, adv_b, w_half)[0]
+        np.testing.assert_allclose(np.asarray(p_a), np.asarray(p_b), rtol=1e-5, atol=1e-6)
+
+    def test_masked_actions_never_gain_probability_mass(self):
+        params = init_policy_params(4)
+        mask = np.ones(dims.ACT_DIM, np.float32)
+        mask[9:] = 0.0  # software agent: only 9 legal actions
+        mask = jnp.asarray(mask)
+        obs = jax.random.normal(jax.random.PRNGKey(5), (dims.B_POL, dims.OBS_DIM), jnp.float32)
+        lp = model.policy_forward_flat(params, obs, mask)
+        p = np.exp(np.asarray(lp))
+        assert p[:, 9:].max() < 1e-20
+        np.testing.assert_allclose(p[:, :9].sum(axis=1), np.ones(dims.B_POL), rtol=1e-5)
+
+
+class TestValueTrain:
+    def test_regresses_to_targets(self):
+        params = init_value_params(7)
+        m = jnp.zeros_like(params)
+        v = jnp.zeros_like(params)
+        t = jnp.zeros((1,), jnp.float32)
+        state = jax.random.normal(jax.random.PRNGKey(8), (dims.B_TRAIN, dims.GSTATE_DIM), jnp.float32)
+        returns = jnp.tanh(state[:, 0]) * 2.0
+        weight = jnp.ones((dims.B_TRAIN,), jnp.float32)
+        first = None
+        last = None
+        for _ in range(150):
+            params, m, v, t, loss = model.value_train_step(params, m, v, t, state, returns, weight)
+            last = float(loss[0])
+            if first is None:
+                first = last
+        assert last < first * 0.3, (first, last)
+
+
+class TestAotExport:
+    @pytest.mark.parametrize("name,fn,example", aot.entry_points(), ids=lambda e: str(e)[:24])
+    def test_every_entry_point_lowers(self, name, fn, example):
+        lowered = jax.jit(fn).lower(*example)
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text
+        assert len(text) > 500
+
+    def test_manifest_dims_match(self):
+        eps = {name: example for name, _, example in aot.entry_points()}
+        pf = eps["policy_forward"]
+        assert pf[0].shape == (dims.P_POLICY,)
+        assert pf[1].shape == (dims.B_POL, dims.OBS_DIM)
+        pt = eps["policy_train"]
+        assert pt[4].shape == (dims.B_TRAIN, dims.OBS_DIM)
+        g = eps["gae"]
+        assert g[0].shape == (dims.T_GAE,)
+
+
+class TestParamFlattening:
+    def test_policy_unflatten_layout(self):
+        # The flat layout must be: W1 row-major, b1, W2 row-major, b2 —
+        # the exact order rust's Mlp::flatten produces.
+        flat = jnp.arange(dims.P_POLICY, dtype=jnp.float32)
+        w1, b1, w2, b2 = model.unflatten(flat, model.policy_shapes())
+        assert w1.shape == (dims.OBS_DIM, dims.HIDDEN)
+        assert float(w1[0, 0]) == 0.0
+        assert float(w1[0, 1]) == 1.0  # row-major
+        nb1 = dims.OBS_DIM * dims.HIDDEN
+        assert float(b1[0]) == nb1
+        assert float(w2[0, 0]) == nb1 + dims.HIDDEN
+
+    def test_value_param_count(self):
+        shapes = model.value_shapes()
+        total = sum(int(np.prod(s)) for s in shapes)
+        assert total == dims.P_VALUE

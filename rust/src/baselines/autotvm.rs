@@ -1,0 +1,255 @@
+//! AutoTVM baseline: GBT cost model + parallel simulated annealing.
+//!
+//! Mirrors Chen et al. (OSDI'18) as configured in Table 5: a gradient-
+//! boosted-tree regressor (`xgb-reg`) is refit on all measured
+//! (features → fitness) pairs each iteration; `n_sa` simulated-annealing
+//! chains of `step_sa` steps walk the knob space maximizing the predicted
+//! score; the top-`b` distinct unmeasured visits become the next
+//! measurement batch. Before the model has data, planning is uniform.
+
+use super::kmeans; // only for the greedy-diversity helper reuse
+use crate::codegen::MeasureResult;
+use crate::costmodel::{featurize, CostModel, Gbt, GbtParams};
+use crate::space::{ConfigSpace, PointConfig};
+use crate::tuner::Strategy;
+use crate::util::rng::Pcg32;
+use std::collections::{HashMap, HashSet};
+
+/// Table 5 knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct AutoTvmParams {
+    /// Parallel Markov chains in the SA planner.
+    pub n_sa: usize,
+    /// Steps per SA chain.
+    pub step_sa: usize,
+    /// SA temperature schedule (start, end).
+    pub temp: (f64, f64),
+    /// ε-greedy fraction of the batch planned uniformly at random.
+    pub eps_random: f64,
+    /// GBT settings.
+    pub gbt: GbtParams,
+}
+
+impl Default for AutoTvmParams {
+    fn default() -> Self {
+        AutoTvmParams {
+            n_sa: 128,
+            step_sa: 500,
+            temp: (1.0, 0.0),
+            eps_random: 0.05,
+            gbt: GbtParams::default(),
+        }
+    }
+}
+
+/// Scaled-down SA budget for CI-speed runs (same structure).
+impl AutoTvmParams {
+    pub fn quick() -> AutoTvmParams {
+        AutoTvmParams { n_sa: 32, step_sa: 60, ..Default::default() }
+    }
+}
+
+/// The AutoTVM strategy.
+pub struct AutoTvm {
+    space: ConfigSpace,
+    params: AutoTvmParams,
+    rng: Pcg32,
+    model: Gbt,
+    /// Measured data: features + fitness.
+    xs: Vec<Vec<f64>>,
+    ys: Vec<f64>,
+    seen: HashSet<usize>,
+}
+
+impl AutoTvm {
+    /// `space` should have hardware knobs frozen (the paper runs AutoTVM
+    /// on the default VTA++ spec).
+    pub fn new(space: ConfigSpace, params: AutoTvmParams, seed: u64) -> AutoTvm {
+        let gbt = Gbt::new(params.gbt);
+        AutoTvm {
+            space,
+            params,
+            rng: Pcg32::seeded(seed),
+            model: gbt,
+            xs: Vec::new(),
+            ys: Vec::new(),
+            seen: HashSet::new(),
+        }
+    }
+
+    /// Run the parallel-SA planner; returns candidate points with
+    /// predicted scores, best-per-chain visits included.
+    fn simulated_annealing(&mut self) -> Vec<(PointConfig, f64)> {
+        let p = self.params;
+        let mut results: HashMap<usize, (PointConfig, f64)> = HashMap::new();
+        for _chain in 0..p.n_sa {
+            let mut cur = self.space.random_point(&mut self.rng);
+            let mut cur_score = self.predict(&cur);
+            for step in 0..p.step_sa {
+                let frac = step as f64 / p.step_sa.max(1) as f64;
+                let temp = p.temp.0 + (p.temp.1 - p.temp.0) * frac;
+                let neighbours = self.space.neighbours(&cur);
+                if neighbours.is_empty() {
+                    break;
+                }
+                let next = neighbours[self.rng.gen_range(neighbours.len())].clone();
+                let next_score = self.predict(&next);
+                let accept = next_score > cur_score
+                    || (temp > 0.0
+                        && self.rng.gen_bool(((next_score - cur_score) / temp).exp().min(1.0)));
+                if accept {
+                    cur = next;
+                    cur_score = next_score;
+                }
+                let key = self.space.flat_index(&cur);
+                if !self.seen.contains(&key) {
+                    let entry = results.entry(key).or_insert_with(|| (cur.clone(), cur_score));
+                    entry.1 = cur_score;
+                }
+            }
+        }
+        let mut v: Vec<(PointConfig, f64)> = results.into_values().collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+        v
+    }
+
+    fn predict(&self, p: &PointConfig) -> f64 {
+        if self.model.is_trained() {
+            self.model.predict(&featurize(&self.space, p))
+        } else {
+            0.0
+        }
+    }
+
+    fn random_unseen(&mut self, n: usize) -> Vec<PointConfig> {
+        let mut out = Vec::new();
+        let mut attempts = 0;
+        while out.len() < n && attempts < n * 100 {
+            let p = self.space.random_point(&mut self.rng);
+            if self.seen.insert(self.space.flat_index(&p)) {
+                out.push(p);
+            }
+            attempts += 1;
+        }
+        out
+    }
+}
+
+impl Strategy for AutoTvm {
+    fn name(&self) -> &'static str {
+        "autotvm"
+    }
+
+    fn plan(&mut self, batch: usize) -> Vec<PointConfig> {
+        if !self.model.is_trained() {
+            // Cold start: uniform sampling (AutoTVM's first batch).
+            return self.random_unseen(batch);
+        }
+        let n_random = ((batch as f64) * self.params.eps_random).ceil() as usize;
+        let n_model = batch.saturating_sub(n_random);
+
+        let candidates = self.simulated_annealing();
+        let mut out: Vec<PointConfig> = Vec::with_capacity(batch);
+        // Greedy-diverse top-k: take best-scored candidates but skip ones
+        // identical in feature space to an already-picked candidate.
+        let mut picked_feats: Vec<Vec<f64>> = Vec::new();
+        for (p, _score) in candidates {
+            if out.len() >= n_model {
+                break;
+            }
+            let f = featurize(&self.space, &p);
+            if picked_feats.iter().any(|g| kmeans::sq_dist(g, &f) < 1e-12) {
+                continue;
+            }
+            self.seen.insert(self.space.flat_index(&p));
+            picked_feats.push(f);
+            out.push(p);
+        }
+        out.extend(self.random_unseen(batch - out.len().min(batch)));
+        out.truncate(batch);
+        out
+    }
+
+    fn observe(&mut self, results: &[(PointConfig, MeasureResult)]) {
+        for (p, r) in results {
+            self.seen.insert(self.space.flat_index(p));
+            self.xs.push(featurize(&self.space, p));
+            // Regress on fitness (1/sec); invalid = 0, exactly the signal
+            // AutoTVM feeds xgboost.
+            self.ys.push(r.fitness());
+        }
+        self.model.fit(&self.xs, &self.ys);
+    }
+
+    fn diag(&self) -> String {
+        format!("gbt_trees={} data={}", self.model.num_trees(), self.ys.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::measure_point;
+    use crate::tuner::{tune_task, TuneBudget};
+    use crate::workload::Conv2dTask;
+
+    fn space() -> ConfigSpace {
+        ConfigSpace::for_task(&Conv2dTask::new(1, 64, 28, 28, 64, 3, 3, 1, 1), false)
+    }
+
+    #[test]
+    fn cold_start_plans_random() {
+        let s = space();
+        let mut a = AutoTvm::new(s.clone(), AutoTvmParams::quick(), 1);
+        let plan = a.plan(16);
+        assert_eq!(plan.len(), 16);
+        let keys: HashSet<usize> = plan.iter().map(|p| s.flat_index(p)).collect();
+        assert_eq!(keys.len(), 16);
+    }
+
+    #[test]
+    fn model_trains_after_observe() {
+        let s = space();
+        let mut a = AutoTvm::new(s.clone(), AutoTvmParams::quick(), 2);
+        let plan = a.plan(32);
+        let results: Vec<(PointConfig, MeasureResult)> =
+            plan.into_iter().map(|p| { let m = measure_point(&s, &p); (p, m) }).collect();
+        a.observe(&results);
+        assert!(a.model.is_trained());
+        assert!(a.diag().contains("data=32"));
+    }
+
+    #[test]
+    fn never_replans_measured_configs() {
+        let s = space();
+        let mut a = AutoTvm::new(s.clone(), AutoTvmParams::quick(), 3);
+        let mut all_keys = HashSet::new();
+        for _ in 0..4 {
+            let plan = a.plan(24);
+            for p in &plan {
+                assert!(all_keys.insert(s.flat_index(p)), "config planned twice");
+            }
+            let results: Vec<_> =
+                plan.into_iter().map(|p| { let m = measure_point(&s, &p); (p, m) }).collect();
+            a.observe(&results);
+        }
+    }
+
+    #[test]
+    fn beats_random_search_on_budget() {
+        // The cost model should focus measurements: with the same budget,
+        // AutoTVM's best config should be at least as good as random's.
+        let s = space();
+        let budget = TuneBudget { total_measurements: 192, batch: 32, workers: 2, ..Default::default() };
+        let mut atvm = AutoTvm::new(s.clone(), AutoTvmParams::quick(), 7);
+        let r_atvm = tune_task(&s, &mut atvm, budget);
+        let mut rnd = crate::baselines::RandomSearch::new(s.clone(), 7);
+        let r_rnd = tune_task(&s, &mut rnd, budget);
+        assert!(
+            r_atvm.best.gflops >= r_rnd.best.gflops * 0.95,
+            "autotvm {} vs random {}",
+            r_atvm.best.gflops,
+            r_rnd.best.gflops
+        );
+    }
+}

@@ -1,0 +1,411 @@
+//! CHAMELEON baseline (Ahn et al., ICLR'20): Adaptive Exploration +
+//! Adaptive Sampling.
+//!
+//! - **Adaptive Exploration**: a single-agent PPO policy walks the
+//!   (software) knob space against the GBT cost model's predicted fitness,
+//!   replacing AutoTVM's simulated annealing. One action = step one knob
+//!   up/down (or stay), so the action space is `2*num_knobs + 1`.
+//! - **Adaptive Sampling**: the explored candidates are clustered with
+//!   k-means in feature space and one exemplar per cluster is measured,
+//!   cutting costly hardware measurements.
+//!
+//! Runs entirely on the native ML substrate (its networks are CHAMELEON's,
+//! not the paper's MAPPO graphs, so they are not part of the AOT bundle).
+
+use super::kmeans::{exemplars, kmeans};
+use crate::marl::env::memory_overflow_ratio;
+use crate::codegen::MeasureResult;
+use crate::costmodel::{featurize, CostModel, Gbt, GbtParams};
+use crate::ml::{clip_grad_norm, ppo, Adam, AdamParams, Mat, Mlp};
+use crate::space::{ConfigSpace, PointConfig};
+use crate::tuner::Strategy;
+use crate::util::rng::Pcg32;
+use std::collections::{HashMap, HashSet};
+
+/// CHAMELEON hyper-parameters (Table 4's RL column: episodes/steps mirror
+/// the ARCO round budget; defaults scaled as in `ExploreParams`).
+#[derive(Debug, Clone, Copy)]
+pub struct ChameleonParams {
+    pub episodes: usize,
+    pub steps: usize,
+    pub population: usize,
+    pub ppo_epochs: usize,
+    pub gamma: f32,
+    pub lam: f32,
+    pub clip_eps: f32,
+    pub entropy_coef: f32,
+    pub lr: f32,
+    pub gbt: GbtParams,
+}
+
+impl Default for ChameleonParams {
+    fn default() -> Self {
+        ChameleonParams {
+            episodes: 8,
+            steps: 24,
+            population: 32,
+            ppo_epochs: 2,
+            gamma: 0.99,
+            lam: 0.95,
+            clip_eps: 0.2,
+            entropy_coef: 0.01,
+            lr: 5e-3,
+            gbt: GbtParams::default(),
+        }
+    }
+}
+
+impl ChameleonParams {
+    pub fn quick() -> ChameleonParams {
+        ChameleonParams { episodes: 3, steps: 10, population: 16, ..Default::default() }
+    }
+}
+
+const OBS: usize = 12;
+
+/// The CHAMELEON strategy.
+pub struct Chameleon {
+    space: ConfigSpace,
+    params: ChameleonParams,
+    rng: Pcg32,
+    policy: Mlp,
+    policy_opt: Adam,
+    value: Mlp,
+    value_opt: Adam,
+    model: Gbt,
+    xs: Vec<Vec<f64>>,
+    ys: Vec<f64>,
+    seen: HashSet<usize>,
+    n_actions: usize,
+    mask: Vec<f32>,
+    best_fitness: f64,
+}
+
+impl Chameleon {
+    pub fn new(space: ConfigSpace, params: ChameleonParams, seed: u64) -> Chameleon {
+        let mut rng = Pcg32::seeded(seed);
+        let n_actions = 2 * space.num_knobs() + 1;
+        let policy = Mlp::policy(OBS, n_actions, &mut rng);
+        let value = Mlp::new(
+            &[OBS, 20, 1],
+            &[crate::ml::Act::Tanh, crate::ml::Act::Linear],
+            &mut rng,
+        );
+        let policy_opt = Adam::new(policy.num_params(), AdamParams { lr: params.lr, ..Default::default() });
+        let value_opt = Adam::new(value.num_params(), AdamParams { lr: params.lr, ..Default::default() });
+        Chameleon {
+            space,
+            params,
+            rng,
+            policy,
+            policy_opt,
+            value,
+            value_opt,
+            model: Gbt::new(params.gbt),
+            xs: Vec::new(),
+            ys: Vec::new(),
+            seen: HashSet::new(),
+            n_actions,
+            mask: vec![1.0; n_actions],
+            best_fitness: 0.0,
+        }
+    }
+
+    fn observe_point(&self, p: &PointConfig, last_reward: f32, step_frac: f32) -> Vec<f32> {
+        let mut o: Vec<f32> =
+            self.space.normalized(p).into_iter().map(|x| x as f32).collect();
+        o.push(last_reward.clamp(-4.0, 4.0));
+        o.push(step_frac);
+        o.resize(OBS, 0.0);
+        o
+    }
+
+    /// Action k=0: stay; k=1..: knob (k-1)/2 stepped (-1 if odd, +1 if even).
+    fn apply(&self, p: &PointConfig, action: usize) -> PointConfig {
+        if action == 0 {
+            return p.clone();
+        }
+        let knob = (action - 1) / 2;
+        let delta: i64 = if action % 2 == 1 { -1 } else { 1 };
+        let mut q = p.clone();
+        if !self.space.hardware_tunable
+            && self.space.knobs[knob].owner == crate::space::KnobOwner::Hardware
+        {
+            return q;
+        }
+        let arity = self.space.knobs[knob].len() as i64;
+        q.0[knob] = ((q.0[knob] as i64 + delta).clamp(0, arity - 1)) as usize;
+        q
+    }
+
+    fn predict(&self, p: &PointConfig) -> f64 {
+        if self.model.is_trained() {
+            self.model.predict(&featurize(&self.space, p))
+        } else {
+            0.0
+        }
+    }
+
+    /// Adaptive Exploration: PPO rollouts over the surrogate landscape.
+    /// Returns distinct visited candidates with predicted scores.
+    fn adaptive_exploration(&mut self) -> Vec<(PointConfig, f64)> {
+        let pr = self.params;
+        let mut visited: HashMap<usize, (PointConfig, f64)> = HashMap::new();
+        let norm = self.best_fitness.max(1e-12);
+
+        for _ep in 0..pr.episodes {
+            let mut pop: Vec<PointConfig> =
+                (0..pr.population).map(|_| self.space.random_point(&mut self.rng)).collect();
+            let mut last_r = vec![0.0f32; pr.population];
+            // Rollout buffers.
+            let mut obs_buf: Vec<Vec<f32>> = Vec::new();
+            let mut act_buf: Vec<usize> = Vec::new();
+            let mut logp_buf: Vec<f32> = Vec::new();
+            let mut rew_buf: Vec<Vec<f32>> = vec![Vec::new(); pr.population];
+            let mut val_buf: Vec<Vec<f32>> = vec![Vec::new(); pr.population];
+
+            for step in 0..pr.steps {
+                let frac = step as f32 / pr.steps.max(1) as f32;
+                let obs_rows: Vec<Vec<f32>> = pop
+                    .iter()
+                    .zip(&last_r)
+                    .map(|(p, &lr)| self.observe_point(p, lr, frac))
+                    .collect();
+                let obs_mat = Mat::from_vec(
+                    pr.population,
+                    OBS,
+                    obs_rows.iter().flatten().cloned().collect(),
+                );
+                let cache = self.policy.forward(&obs_mat);
+                let logp = ppo::masked_log_softmax(cache.output(), &self.mask);
+                let vals = self.value.forward(&obs_mat).output().data.clone();
+                for i in 0..pr.population {
+                    let probs: Vec<f64> = (0..self.n_actions)
+                        .map(|a| (logp.at(i, a) as f64).exp())
+                        .collect();
+                    let action = self.rng.gen_weighted(&probs);
+                    let next = self.apply(&pop[i], action);
+                    let score = self.predict(&next);
+                    let reward = (score / norm) as f32;
+                    obs_buf.push(obs_rows[i].clone());
+                    act_buf.push(action);
+                    logp_buf.push(logp.at(i, action));
+                    rew_buf[i].push(reward);
+                    val_buf[i].push(vals[i]);
+                    last_r[i] = reward;
+                    let key = self.space.flat_index(&next);
+                    if !self.seen.contains(&key) {
+                        visited.insert(key, (next.clone(), score));
+                    }
+                    pop[i] = next;
+                }
+            }
+
+            // GAE per trajectory, interleaved layout: index = step*pop + i.
+            let mut adv_buf = vec![0.0f32; obs_buf.len()];
+            let mut ret_buf = vec![0.0f32; obs_buf.len()];
+            for i in 0..pr.population {
+                let (adv, ret) =
+                    ppo::gae(&rew_buf[i], &val_buf[i], 0.0, pr.gamma, pr.lam);
+                for (s, (&a, &r)) in adv.iter().zip(&ret).enumerate() {
+                    adv_buf[s * pr.population + i] = a;
+                    ret_buf[s * pr.population + i] = r;
+                }
+            }
+            ppo::normalize_advantages(&mut adv_buf);
+
+            // PPO updates.
+            for _ in 0..pr.ppo_epochs {
+                let n = obs_buf.len();
+                let obs_mat =
+                    Mat::from_vec(n, OBS, obs_buf.iter().flatten().cloned().collect());
+                let cache = self.policy.forward(&obs_mat);
+                let (_, d_logits, _, _) = ppo::ppo_policy_loss_grad(
+                    cache.output(),
+                    &self.mask,
+                    &act_buf,
+                    &logp_buf,
+                    &adv_buf,
+                    pr.clip_eps,
+                    pr.entropy_coef,
+                );
+                let grads = self.policy.backward(&cache, &d_logits);
+                let mut flat = Mlp::flatten_grads(&grads);
+                clip_grad_norm(&mut flat, 10.0);
+                let mut theta = self.policy.flatten();
+                self.policy_opt.step(&mut theta, &flat);
+                self.policy.unflatten(&theta);
+
+                let vcache = self.value.forward(&obs_mat);
+                let (_, d_out) = ppo::value_loss_grad(vcache.output(), &ret_buf);
+                let vgrads = self.value.backward(&vcache, &d_out);
+                let mut vflat = Mlp::flatten_grads(&vgrads);
+                clip_grad_norm(&mut vflat, 10.0);
+                let mut vtheta = self.value.flatten();
+                self.value_opt.step(&mut vtheta, &vflat);
+                self.value.unflatten(&vtheta);
+            }
+        }
+        visited.into_values().collect()
+    }
+
+    /// Random unmeasured configurations, filtered by the scratchpad
+    /// constraint check — CHAMELEON's stated goal of "minimizing invalid
+    /// configurations and costly hardware measurements".
+    fn random_unseen(&mut self, n: usize) -> Vec<PointConfig> {
+        let mut out = Vec::new();
+        let mut attempts = 0;
+        while out.len() < n && attempts < n * 200 {
+            let p = self.space.random_point(&mut self.rng);
+            attempts += 1;
+            if memory_overflow_ratio(&self.space, &p) > 0.0 {
+                continue;
+            }
+            if self.seen.insert(self.space.flat_index(&p)) {
+                out.push(p);
+            }
+        }
+        let mut fallback = 0;
+        while out.is_empty() && fallback < n * 100 {
+            let p = self.space.random_point(&mut self.rng);
+            fallback += 1;
+            if self.seen.insert(self.space.flat_index(&p)) {
+                out.push(p);
+            }
+        }
+        out
+    }
+}
+
+impl Strategy for Chameleon {
+    fn name(&self) -> &'static str {
+        "chameleon"
+    }
+
+    fn plan(&mut self, batch: usize) -> Vec<PointConfig> {
+        if !self.model.is_trained() {
+            return self.random_unseen(batch);
+        }
+        let candidates = self.adaptive_exploration();
+        if candidates.is_empty() {
+            return self.random_unseen(batch);
+        }
+        // Adaptive Sampling: cluster candidates, measure exemplars.
+        let feats: Vec<Vec<f64>> =
+            candidates.iter().map(|(p, _)| featurize(&self.space, p)).collect();
+        let km = kmeans(&feats, batch, 12, &mut self.rng);
+        let ex = exemplars(&feats, &km);
+        let mut out = Vec::with_capacity(batch);
+        for i in ex {
+            let p = candidates[i].0.clone();
+            if memory_overflow_ratio(&self.space, &p) > 0.0 {
+                continue; // invalid-config filter (Adaptive Sampling)
+            }
+            if self.seen.insert(self.space.flat_index(&p)) {
+                out.push(p);
+            }
+        }
+        // No random backfill: Adaptive Sampling's point is to measure
+        // exemplars only, trading batch fill for fewer hardware runs.
+        if out.is_empty() {
+            return self.random_unseen(batch.min(8));
+        }
+        out.truncate(batch);
+        out
+    }
+
+    fn observe(&mut self, results: &[(PointConfig, MeasureResult)]) {
+        for (p, r) in results {
+            self.seen.insert(self.space.flat_index(p));
+            self.xs.push(featurize(&self.space, p));
+            self.ys.push(r.fitness());
+            if r.fitness() > self.best_fitness {
+                self.best_fitness = r.fitness();
+            }
+        }
+        self.model.fit(&self.xs, &self.ys);
+    }
+
+    fn diag(&self) -> String {
+        format!(
+            "gbt_trees={} data={} best_fit={:.3e}",
+            self.model.num_trees(),
+            self.ys.len(),
+            self.best_fitness
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::measure_point;
+    use crate::workload::Conv2dTask;
+
+    fn space() -> ConfigSpace {
+        ConfigSpace::for_task(&Conv2dTask::new(1, 64, 28, 28, 64, 3, 3, 1, 1), false)
+    }
+
+    #[test]
+    fn apply_action_semantics() {
+        let s = space();
+        let c = Chameleon::new(s.clone(), ChameleonParams::quick(), 1);
+        let p = s.default_point();
+        assert_eq!(c.apply(&p, 0), p); // stay
+        // Action 2 = knob 0 incremented, but knob 0 is a frozen hw knob.
+        assert_eq!(c.apply(&p, 2), p);
+        // A mapping knob (tile_h = knob 5): action 1 + 2*5 + 1 = 12 (inc).
+        let k = s.knob_index("tile_h").unwrap();
+        let inc_action = 2 + 2 * k;
+        let q = c.apply(&p, inc_action);
+        assert_eq!(q.0[k], p.0[k] + 1);
+    }
+
+    #[test]
+    fn full_tuning_round_trip() {
+        let s = space();
+        let mut c = Chameleon::new(s.clone(), ChameleonParams::quick(), 2);
+        // Cold batch.
+        let plan = c.plan(16);
+        assert_eq!(plan.len(), 16);
+        let results: Vec<_> =
+            plan.into_iter().map(|p| { let m = measure_point(&s, &p); (p, m) }).collect();
+        c.observe(&results);
+        assert!(c.model.is_trained());
+        // Warm batch uses RL + clustering.
+        let plan2 = c.plan(16);
+        assert!(!plan2.is_empty());
+        let keys: HashSet<usize> = plan2.iter().map(|p| s.flat_index(p)).collect();
+        assert_eq!(keys.len(), plan2.len());
+    }
+
+    #[test]
+    fn policy_trains_during_exploration() {
+        let s = space();
+        let mut c = Chameleon::new(s.clone(), ChameleonParams::quick(), 3);
+        // Seed the model so exploration runs.
+        let plan = c.plan(16);
+        let results: Vec<_> =
+            plan.into_iter().map(|p| { let m = measure_point(&s, &p); (p, m) }).collect();
+        c.observe(&results);
+        let before = c.policy.flatten();
+        let _ = c.adaptive_exploration();
+        assert_ne!(c.policy.flatten(), before, "PPO updates must move the policy");
+    }
+
+    #[test]
+    fn respects_frozen_hardware() {
+        let s = space();
+        let mut c = Chameleon::new(s.clone(), ChameleonParams::quick(), 4);
+        for _round in 0..2 {
+            let plan = c.plan(12);
+            for p in &plan {
+                let (hw, _) = s.decode(p);
+                assert_eq!((hw.batch, hw.block_in, hw.block_out), (1, 16, 16));
+            }
+            let results: Vec<_> =
+                plan.into_iter().map(|p| { let m = measure_point(&s, &p); (p, m) }).collect();
+            c.observe(&results);
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! Lloyd's k-means over feature vectors — the clustering engine behind
+//! CHAMELEON's Adaptive Sampling (cluster the candidate configurations,
+//! measure one exemplar per cluster).
+
+use crate::util::rng::Pcg32;
+
+/// Squared Euclidean distance.
+pub fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// k-means result: assignment per point and centroids.
+#[derive(Debug, Clone)]
+pub struct KMeans {
+    pub assignment: Vec<usize>,
+    pub centroids: Vec<Vec<f64>>,
+}
+
+/// Cluster `points` into `k` groups (k-means++ init, Lloyd iterations).
+pub fn kmeans(points: &[Vec<f64>], k: usize, iters: usize, rng: &mut Pcg32) -> KMeans {
+    assert!(!points.is_empty());
+    let k = k.min(points.len()).max(1);
+    let dim = points[0].len();
+
+    // k-means++ seeding.
+    let mut centroids: Vec<Vec<f64>> = Vec::with_capacity(k);
+    centroids.push(points[rng.gen_range(points.len())].clone());
+    while centroids.len() < k {
+        let d2: Vec<f64> = points
+            .iter()
+            .map(|p| {
+                centroids
+                    .iter()
+                    .map(|c| sq_dist(p, c))
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect();
+        let idx = rng.gen_weighted(&d2);
+        centroids.push(points[idx].clone());
+    }
+
+    let mut assignment = vec![0usize; points.len()];
+    for _ in 0..iters {
+        // Assign.
+        let mut changed = false;
+        for (i, p) in points.iter().enumerate() {
+            let mut best = 0usize;
+            let mut best_d = f64::INFINITY;
+            for (c, centroid) in centroids.iter().enumerate() {
+                let d = sq_dist(p, centroid);
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            if assignment[i] != best {
+                assignment[i] = best;
+                changed = true;
+            }
+        }
+        // Update.
+        let mut sums = vec![vec![0.0f64; dim]; k];
+        let mut counts = vec![0usize; k];
+        for (i, p) in points.iter().enumerate() {
+            let c = assignment[i];
+            counts[c] += 1;
+            for (s, x) in sums[c].iter_mut().zip(p) {
+                *s += x;
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for s in sums[c].iter_mut() {
+                    *s /= counts[c] as f64;
+                }
+                centroids[c] = sums[c].clone();
+            } else {
+                // Re-seed empty clusters at a random point.
+                centroids[c] = points[rng.gen_range(points.len())].clone();
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    KMeans { assignment, centroids }
+}
+
+/// Index of the point nearest each centroid (cluster exemplars).
+pub fn exemplars(points: &[Vec<f64>], km: &KMeans) -> Vec<usize> {
+    let k = km.centroids.len();
+    let mut best = vec![usize::MAX; k];
+    let mut best_d = vec![f64::INFINITY; k];
+    for (i, p) in points.iter().enumerate() {
+        let c = km.assignment[i];
+        let d = sq_dist(p, &km.centroids[c]);
+        if d < best_d[c] {
+            best_d[c] = d;
+            best[c] = i;
+        }
+    }
+    best.into_iter().filter(|&i| i != usize::MAX).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob(center: f64, n: usize, rng: &mut Pcg32) -> Vec<Vec<f64>> {
+        (0..n).map(|_| vec![center + 0.1 * rng.gen_f64(), center - 0.1 * rng.gen_f64()]).collect()
+    }
+
+    #[test]
+    fn separates_two_blobs() {
+        let mut rng = Pcg32::seeded(4);
+        let mut pts = blob(0.0, 30, &mut rng);
+        pts.extend(blob(10.0, 30, &mut rng));
+        let km = kmeans(&pts, 2, 20, &mut rng);
+        // All points in one blob share an assignment.
+        let a0 = km.assignment[0];
+        assert!(km.assignment[..30].iter().all(|&a| a == a0));
+        let a1 = km.assignment[30];
+        assert!(km.assignment[30..].iter().all(|&a| a == a1));
+        assert_ne!(a0, a1);
+    }
+
+    #[test]
+    fn exemplars_one_per_cluster() {
+        let mut rng = Pcg32::seeded(5);
+        let mut pts = blob(0.0, 20, &mut rng);
+        pts.extend(blob(5.0, 20, &mut rng));
+        pts.extend(blob(10.0, 20, &mut rng));
+        let km = kmeans(&pts, 3, 20, &mut rng);
+        let ex = exemplars(&pts, &km);
+        assert_eq!(ex.len(), 3);
+        let set: std::collections::HashSet<usize> = ex.iter().cloned().collect();
+        assert_eq!(set.len(), 3);
+    }
+
+    #[test]
+    fn k_larger_than_points_is_clamped() {
+        let mut rng = Pcg32::seeded(6);
+        let pts = blob(1.0, 3, &mut rng);
+        let km = kmeans(&pts, 10, 5, &mut rng);
+        assert_eq!(km.centroids.len(), 3);
+    }
+
+    #[test]
+    fn single_cluster_centroid_is_mean() {
+        let pts = vec![vec![0.0, 0.0], vec![2.0, 2.0]];
+        let mut rng = Pcg32::seeded(7);
+        let km = kmeans(&pts, 1, 10, &mut rng);
+        assert!((km.centroids[0][0] - 1.0).abs() < 1e-9);
+        assert!((km.centroids[0][1] - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,21 @@
+//! Baseline frameworks the paper compares against (§4):
+//!
+//! - [`random`] — uniform random search (sanity floor, not in the paper's
+//!   figures but used by the ablation benches);
+//! - [`autotvm`] — AutoTVM: XGBoost-style GBT cost model + parallel
+//!   simulated annealing planner + uniform candidate sampling (Table 5);
+//! - [`chameleon`] — CHAMELEON: single-agent RL adaptive exploration +
+//!   k-means adaptive sampling.
+//!
+//! Both baselines run with the hardware knobs frozen at the VTA++ default,
+//! exactly as §4.1 prescribes ("AutoTVM and CHAMELEON do not support
+//! hardware configuration exploration").
+
+pub mod autotvm;
+pub mod chameleon;
+pub mod kmeans;
+pub mod random;
+
+pub use autotvm::AutoTvm;
+pub use chameleon::Chameleon;
+pub use random::RandomSearch;

@@ -1,0 +1,440 @@
+//! Convolution lowering: tiling, virtual threading and dependence-token
+//! insertion.
+//!
+//! The schedule follows VTA's canonical conv2d template:
+//!
+//! ```text
+//! for each virtual thread (round-robin interleaved):
+//!   for each output tile (batch-block, co-chunk, tile_h, tile_w):
+//!     LOAD.UOP  micro-kernel           (compute unit)
+//!     for each ci-chunk:               # reduction over input channels
+//!       LOAD.INP  input tile           (load unit)    [pop c2l if reusing buffer]
+//!       LOAD.WGT  weight tile          (load unit)    pushes token to compute
+//!       GEMM      tile matmuls         (compute)      pops load token; reset on first chunk
+//!     GEMM of last chunk pushes buffer-free token back to load
+//!     ALU       shift/clip (+ relu)    (compute)      pushes token to store
+//!     STORE     output tile            (store unit)   pops compute token, pushes acc-free
+//!     first GEMM of the thread's next tile pops the acc-free token
+//! ```
+//!
+//! Two knobs (`h_threading`, `oc_threading`) split tiles across virtual
+//! threads whose instruction sequences interleave in the stream; because the
+//! scratchpads are partitioned per thread, thread B's loads overlap thread
+//! A's compute — the dependence tokens expose exactly the double-buffering
+//! the hardware supports (2 token-queue slots, so effective threads cap at 2).
+
+use crate::space::SwConfig;
+use crate::util::stats::ceil_div;
+use crate::vta::config::{ACC_BYTES, INP_BYTES, OUT_BYTES, WGT_BYTES};
+use crate::vta::{Buffer, Deps, Instr, Op, VtaConfig};
+use crate::workload::Conv2dTask;
+
+/// Why a configuration cannot be lowered (an *invalid* configuration in the
+/// paper's terms — these waste a hardware measurement when sampled).
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum CodegenError {
+    #[error("hardware config invalid: {0}")]
+    BadHardware(String),
+    #[error("spatial tile {tile_h}x{tile_w} exceeds output plane {oh}x{ow}")]
+    TileTooLarge { tile_h: usize, tile_w: usize, oh: usize, ow: usize },
+    #[error("input tile of {need} B exceeds INP buffer partition of {have} B")]
+    InpOverflow { need: usize, have: usize },
+    #[error("weight tile of {need} B exceeds WGT buffer partition of {have} B")]
+    WgtOverflow { need: usize, have: usize },
+    #[error("accumulator tile of {need} B exceeds ACC buffer partition of {have} B")]
+    AccOverflow { need: usize, have: usize },
+}
+
+/// A lowered kernel: the instruction stream plus bookkeeping the measurement
+/// layer reports.
+#[derive(Debug, Clone)]
+pub struct LoweredKernel {
+    pub stream: Vec<Instr>,
+    /// True MACs of the convolution (not padded work).
+    pub macs: u64,
+    /// Padded MAC slots actually occupied on the array (>= macs).
+    pub padded_macs: u64,
+    /// Number of output tiles.
+    pub tiles: usize,
+    /// Effective virtual threads used.
+    pub vthreads: usize,
+}
+
+impl LoweredKernel {
+    /// GEMM array occupancy: true work / padded slots. Low values flag
+    /// geometry mismatches (e.g. BLOCK_IN=64 on a 3-channel layer).
+    pub fn occupancy(&self) -> f64 {
+        if self.padded_macs == 0 {
+            0.0
+        } else {
+            self.macs as f64 / self.padded_macs as f64
+        }
+    }
+}
+
+/// Per-thread emission state.
+struct ThreadCtx {
+    stream: Vec<Instr>,
+    /// Tiles emitted so far (controls first-iteration token elision).
+    tiles_emitted: usize,
+}
+
+/// Lower a convolution under (hardware, software) configs.
+pub fn lower_conv(
+    task: &Conv2dTask,
+    hw: &VtaConfig,
+    sw: &SwConfig,
+) -> Result<LoweredKernel, CodegenError> {
+    hw.validate().map_err(CodegenError::BadHardware)?;
+    let oh = task.oh();
+    let ow = task.ow();
+    if sw.tile_h > oh || sw.tile_w > ow || sw.tile_h == 0 || sw.tile_w == 0 {
+        return Err(CodegenError::TileTooLarge { tile_h: sw.tile_h, tile_w: sw.tile_w, oh, ow });
+    }
+
+    // Effective virtual threads: hardware supports two token-queue slots.
+    let vthreads = (sw.h_threading * sw.oc_threading).min(2).max(1);
+
+    // Blocked dimensions.
+    let n_bblk = ceil_div(task.n, hw.batch); // batch blocks
+    let n_ciblk = ceil_div(task.ci, hw.block_in); // reduction blocks
+    let n_coblk = ceil_div(task.co, hw.block_out); // output-channel blocks
+
+    // --- Buffer partitioning -------------------------------------------------
+    // Each virtual thread owns 1/vthreads of every scratchpad; within a
+    // thread the load/compute handshake double-buffers, so a tile's working
+    // set must fit half the partition when threading is off, or the whole
+    // partition when the interleave provides the overlap. We use the
+    // conservative rule: working set <= partition.
+    let inp_part = hw.inp_buf_bytes() / vthreads;
+    let wgt_part = hw.wgt_buf_bytes() / vthreads;
+    let acc_part = hw.acc_buf_bytes() / vthreads;
+
+    // Accumulator working set: one output tile (all co-blocks of the chunk).
+    // Choose co_chunk (in blocks) as the largest power-of-two count that
+    // fits; at least 1 or the config is invalid.
+    let acc_tile_one_blk =
+        hw.batch * sw.tile_h * sw.tile_w * hw.block_out * ACC_BYTES;
+    if acc_tile_one_blk > acc_part {
+        return Err(CodegenError::AccOverflow { need: acc_tile_one_blk, have: acc_part });
+    }
+    let mut co_chunk_blks = 1usize;
+    while co_chunk_blks * 2 <= n_coblk && acc_tile_one_blk * co_chunk_blks * 2 <= acc_part {
+        co_chunk_blks *= 2;
+    }
+
+    // Input tile footprint for one ci-chunk (halo included).
+    let in_h = (sw.tile_h - 1) * task.stride + task.kh;
+    let in_w = (sw.tile_w - 1) * task.stride + task.kw;
+    let inp_tile_one_blk = hw.batch * in_h * in_w * hw.block_in * INP_BYTES;
+    if inp_tile_one_blk > inp_part {
+        return Err(CodegenError::InpOverflow { need: inp_tile_one_blk, have: inp_part });
+    }
+    // Weight tile for one ci-chunk x co-chunk.
+    let wgt_tile_one_blk =
+        co_chunk_blks * hw.block_out * hw.block_in * task.kh * task.kw * WGT_BYTES;
+    if wgt_tile_one_blk > wgt_part {
+        return Err(CodegenError::WgtOverflow { need: wgt_tile_one_blk, have: wgt_part });
+    }
+    // ci chunking: as many reduction blocks per DMA round as fit both
+    // input and weight partitions.
+    let mut ci_chunk_blks = 1usize;
+    while ci_chunk_blks * 2 <= n_ciblk
+        && inp_tile_one_blk * ci_chunk_blks * 2 <= inp_part
+        && wgt_tile_one_blk * ci_chunk_blks * 2 <= wgt_part
+    {
+        ci_chunk_blks *= 2;
+    }
+
+    // --- Tile enumeration ----------------------------------------------------
+    let tiles_h = ceil_div(oh, sw.tile_h);
+    let tiles_w = ceil_div(ow, sw.tile_w);
+    let co_chunks = ceil_div(n_coblk, co_chunk_blks);
+    let ci_chunks = ceil_div(n_ciblk, ci_chunk_blks);
+
+    let mut threads: Vec<ThreadCtx> =
+        (0..vthreads).map(|_| ThreadCtx { stream: Vec::new(), tiles_emitted: 0 }).collect();
+
+    let mut macs: u64 = 0;
+    let mut padded_macs: u64 = 0;
+    let mut tiles = 0usize;
+
+    for b in 0..n_bblk {
+        let cur_batch = (task.n - b * hw.batch).min(hw.batch);
+        for cc in 0..co_chunks {
+            let cur_co_blks = (n_coblk - cc * co_chunk_blks).min(co_chunk_blks);
+            let cur_co = (task.co - cc * co_chunk_blks * hw.block_out)
+                .min(cur_co_blks * hw.block_out);
+            for th in 0..tiles_h {
+                let cur_th = (oh - th * sw.tile_h).min(sw.tile_h);
+                for tw in 0..tiles_w {
+                    let cur_tw = (ow - tw * sw.tile_w).min(sw.tile_w);
+                    // Thread assignment: height stripes and co stripes.
+                    let tid = ((th % sw.h_threading.max(1))
+                        + sw.h_threading.max(1) * (cc % sw.oc_threading.max(1)))
+                        % vthreads;
+                    emit_tile(
+                        &mut threads[tid],
+                        task,
+                        hw,
+                        TileShape {
+                            th: cur_th,
+                            tw: cur_tw,
+                            co_blks: cur_co_blks,
+                            ci_chunks,
+                            ci_chunk_blks,
+                            n_ciblk,
+                        },
+                    );
+                    tiles += 1;
+                    // Work accounting.
+                    let tile_out = cur_th * cur_tw;
+                    macs += (cur_batch * cur_co * tile_out) as u64
+                        * (task.ci * task.kh * task.kw) as u64;
+                    padded_macs += (hw.batch * cur_co_blks * hw.block_out * tile_out) as u64
+                        * (n_ciblk * hw.block_in * task.kh * task.kw) as u64;
+                }
+            }
+        }
+    }
+
+    // Interleave per-thread streams round-robin at tile granularity so the
+    // simulator's in-order unit queues see alternating threads.
+    let stream = interleave(threads);
+
+    Ok(LoweredKernel { stream, macs, padded_macs, tiles, vthreads })
+}
+
+struct TileShape {
+    th: usize,
+    tw: usize,
+    co_blks: usize,
+    ci_chunks: usize,
+    ci_chunk_blks: usize,
+    n_ciblk: usize,
+}
+
+/// Emit one output tile's instruction sequence into a thread context.
+fn emit_tile(ctx: &mut ThreadCtx, task: &Conv2dTask, hw: &VtaConfig, t: TileShape) {
+    let first_tile = ctx.tiles_emitted == 0;
+    let s = &mut ctx.stream;
+
+    // Micro-kernel load: one uop per (output pixel x kernel position),
+    // 4 bytes each, capped by the uop cache.
+    let uop_bytes =
+        (t.th * t.tw * task.kh * task.kw * 4).min(hw.uop_buf_kib * 1024);
+    s.push(Instr::new(Op::Load { buffer: Buffer::Uop, bytes: uop_bytes }, Deps::NONE));
+
+    let in_h = (t.th - 1) * task.stride + task.kh;
+    let in_w = (t.tw - 1) * task.stride + task.kw;
+
+    for chunk in 0..t.ci_chunks {
+        let cur_ci_blks = (t.n_ciblk - chunk * t.ci_chunk_blks).min(t.ci_chunk_blks);
+        let inp_bytes = hw.batch * in_h * in_w * cur_ci_blks * hw.block_in * INP_BYTES;
+        let wgt_bytes =
+            t.co_blks * hw.block_out * cur_ci_blks * hw.block_in * task.kh * task.kw * WGT_BYTES;
+
+        // Loads: after the first round, re-using the buffer requires the
+        // compute unit to have signalled it is done with the previous
+        // contents (c2l token).
+        let reuse = !(first_tile && chunk == 0);
+        s.push(Instr::new(
+            Op::Load { buffer: Buffer::Inp, bytes: inp_bytes },
+            if reuse { Deps::NONE.pop_next() } else { Deps::NONE },
+        ));
+        // The last load of the round signals compute.
+        s.push(Instr::new(Op::Load { buffer: Buffer::Wgt, bytes: wgt_bytes }, Deps::NONE.push_next()));
+
+        // GEMM over the chunk: one uop per (batch-block x pixel x kernel pos
+        // x ci-blk x co-blk).
+        let uops = t.th * t.tw * task.kh * task.kw * cur_ci_blks * t.co_blks;
+        let mut deps = Deps::NONE.pop_prev().push_prev(); // consume loads, free buffer
+        if chunk == 0 && !first_tile {
+            // Re-using the acc partition: wait for the previous tile's store.
+            deps = deps.pop_next();
+        }
+        s.push(Instr::new(Op::Gemm { uops, reset: chunk == 0 }, deps));
+    }
+
+    // Post-GEMM ALU: shift/clip quantization over the tile's accumulators.
+    let elems = hw.batch * t.th * t.tw * t.co_blks * hw.block_out;
+    s.push(Instr::new(Op::Alu { elems }, Deps::NONE.push_next()));
+
+    // Store the quantized outputs; free the acc partition for the next tile.
+    let out_bytes = elems * OUT_BYTES;
+    s.push(Instr::new(Op::Store { bytes: out_bytes }, Deps::NONE.pop_prev().push_prev()));
+
+    ctx.tiles_emitted += 1;
+}
+
+/// Round-robin interleave per-thread streams at tile boundaries (a tile ends
+/// after its STORE instruction).
+fn interleave(threads: Vec<ThreadCtx>) -> Vec<Instr> {
+    if threads.len() == 1 {
+        return threads.into_iter().next().unwrap().stream;
+    }
+    // Split each thread stream into tile-sized chunks.
+    let mut chunked: Vec<std::vec::IntoIter<Vec<Instr>>> = threads
+        .into_iter()
+        .map(|t| {
+            let mut chunks = Vec::new();
+            let mut cur = Vec::new();
+            for i in t.stream {
+                let is_store = matches!(i.op, Op::Store { .. });
+                cur.push(i);
+                if is_store {
+                    chunks.push(std::mem::take(&mut cur));
+                }
+            }
+            if !cur.is_empty() {
+                chunks.push(cur);
+            }
+            chunks.into_iter()
+        })
+        .collect();
+
+    let mut out = Vec::new();
+    loop {
+        let mut any = false;
+        for it in &mut chunked {
+            if let Some(chunk) = it.next() {
+                out.extend(chunk);
+                any = true;
+            }
+        }
+        if !any {
+            break;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vta::simulate;
+
+    fn task() -> Conv2dTask {
+        Conv2dTask::new(1, 64, 56, 56, 64, 3, 3, 1, 1)
+    }
+
+    fn sw(tile_h: usize, tile_w: usize, ht: usize, ot: usize) -> SwConfig {
+        SwConfig { tile_h, tile_w, h_threading: ht, oc_threading: ot }
+    }
+
+    #[test]
+    fn lowering_runs_and_simulates() {
+        let hw = VtaConfig::default();
+        let k = lower_conv(&task(), &hw, &sw(8, 8, 1, 1)).unwrap();
+        assert!(!k.stream.is_empty());
+        let r = simulate(&k.stream, &hw).unwrap();
+        assert!(r.cycles > 0);
+        assert_eq!(k.macs, task().macs());
+    }
+
+    #[test]
+    fn padded_macs_at_least_true_macs() {
+        let hw = VtaConfig::default();
+        let k = lower_conv(&task(), &hw, &sw(8, 8, 1, 1)).unwrap();
+        assert!(k.padded_macs >= k.macs);
+        assert!(k.occupancy() <= 1.0 && k.occupancy() > 0.0);
+    }
+
+    #[test]
+    fn low_occupancy_on_mismatched_geometry() {
+        // 3 input channels on a BLOCK_IN=64 array: occupancy must crater.
+        let t = Conv2dTask::new(1, 3, 56, 56, 64, 3, 3, 1, 1);
+        let hw = VtaConfig::with_gemm(1, 64, 16);
+        let k = lower_conv(&t, &hw, &sw(8, 8, 1, 1)).unwrap();
+        assert!(k.occupancy() < 0.1, "occupancy {}", k.occupancy());
+    }
+
+    #[test]
+    fn threading_improves_makespan() {
+        let hw = VtaConfig::default();
+        let t = task();
+        let k1 = lower_conv(&t, &hw, &sw(8, 8, 1, 1)).unwrap();
+        let k2 = lower_conv(&t, &hw, &sw(8, 8, 2, 1)).unwrap();
+        let r1 = simulate(&k1.stream, &hw).unwrap();
+        let r2 = simulate(&k2.stream, &hw).unwrap();
+        assert!(
+            r2.cycles < r1.cycles,
+            "2 vthreads {} should beat 1 vthread {}",
+            r2.cycles,
+            r1.cycles
+        );
+    }
+
+    #[test]
+    fn oversize_tile_rejected() {
+        let hw = VtaConfig::default();
+        let err = lower_conv(&task(), &hw, &sw(128, 8, 1, 1)).unwrap_err();
+        assert!(matches!(err, CodegenError::TileTooLarge { .. }));
+    }
+
+    #[test]
+    fn giant_tile_overflows_buffers() {
+        // Full-plane tile on a big layer: input tile alone is
+        // 224x224x16 = 802816 B >> 32 KiB.
+        let t = Conv2dTask::new(1, 64, 224, 224, 64, 3, 3, 1, 1);
+        let hw = VtaConfig::default();
+        let err = lower_conv(&t, &hw, &sw(224, 224, 1, 1)).unwrap_err();
+        assert!(
+            matches!(err, CodegenError::InpOverflow { .. } | CodegenError::AccOverflow { .. }),
+            "{err:?}"
+        );
+    }
+
+    #[test]
+    fn bad_hardware_rejected() {
+        let hw = VtaConfig::with_gemm(3, 16, 16); // not a power of two
+        let err = lower_conv(&task(), &hw, &sw(8, 8, 1, 1)).unwrap_err();
+        assert!(matches!(err, CodegenError::BadHardware(_)));
+    }
+
+    #[test]
+    fn all_streams_simulate_without_deadlock() {
+        // Sweep a grid of configs; every successfully lowered stream must
+        // simulate cleanly (token discipline is consistent).
+        let t = task();
+        for &(b, ci, co) in &[(1usize, 16usize, 16usize), (2, 32, 16), (1, 8, 64)] {
+            let hw = VtaConfig::with_gemm(b, ci, co);
+            for &(thh, tww) in &[(1usize, 1usize), (4, 4), (8, 14), (56, 56)] {
+                for &(ht, ot) in &[(1usize, 1usize), (2, 1), (1, 2), (2, 2)] {
+                    if let Ok(k) = lower_conv(&t, &hw, &sw(thh, tww, ht, ot)) {
+                        let r = simulate(&k.stream, &hw);
+                        assert!(r.is_ok(), "deadlock at hw={hw:?} sw={thh}x{tww} t{ht}/{ot}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bigger_array_fewer_cycles_when_utilized() {
+        let t = Conv2dTask::new(1, 256, 14, 14, 256, 3, 3, 1, 1);
+        let small = VtaConfig::with_gemm(1, 16, 16);
+        let big = VtaConfig::with_gemm(1, 32, 32);
+        let ks = lower_conv(&t, &small, &sw(7, 7, 2, 1)).unwrap();
+        let kb = lower_conv(&t, &big, &sw(7, 7, 2, 1)).unwrap();
+        let rs = simulate(&ks.stream, &small).unwrap();
+        let rb = simulate(&kb.stream, &big).unwrap();
+        assert!(rb.cycles < rs.cycles, "32x32 {} vs 16x16 {}", rb.cycles, rs.cycles);
+    }
+
+    #[test]
+    fn vthreads_capped_at_two() {
+        let hw = VtaConfig::default();
+        let k = lower_conv(&task(), &hw, &sw(8, 8, 2, 2)).unwrap();
+        assert_eq!(k.vthreads, 2);
+    }
+
+    #[test]
+    fn edge_tiles_reduce_work() {
+        // 56 not divisible by 10: edge tiles are partial; true macs must
+        // still equal the task's exact MAC count.
+        let hw = VtaConfig::default();
+        let k = lower_conv(&task(), &hw, &sw(10, 10, 1, 1)).unwrap();
+        assert_eq!(k.macs, task().macs());
+    }
+}

@@ -1,0 +1,156 @@
+//! "Hardware measurement": decode a design-space point, lower it, simulate
+//! it, and report fitness. This is the `f[τ(Θ)]` of §2.3 — the expensive
+//! call every framework tries to minimize.
+
+use crate::space::{ConfigSpace, PointConfig};
+use crate::vta::area::total_area_mm2;
+use crate::vta::{simulate, VtaConfig};
+
+/// Outcome of measuring one configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MeasureResult {
+    /// Simulated execution time in seconds; `f64::INFINITY` if invalid.
+    pub seconds: f64,
+    /// Simulated cycles (0 if invalid).
+    pub cycles: u64,
+    /// Achieved GFLOPS on the task's true FLOPs (0 if invalid).
+    pub gflops: f64,
+    /// Accelerator area of the decoded hardware (mm^2).
+    pub area_mm2: f64,
+    /// GEMM array occupancy in [0,1].
+    pub occupancy: f64,
+    /// False when the config failed to lower (buffer overflow etc.).
+    pub valid: bool,
+}
+
+impl MeasureResult {
+    /// The paper's fitness: throughput, i.e. inverse execution time.
+    pub fn fitness(&self) -> f64 {
+        if self.valid && self.seconds > 0.0 {
+            1.0 / self.seconds
+        } else {
+            0.0
+        }
+    }
+
+    fn invalid(hw: &VtaConfig) -> MeasureResult {
+        MeasureResult {
+            seconds: f64::INFINITY,
+            cycles: 0,
+            gflops: 0.0,
+            area_mm2: total_area_mm2(hw),
+            occupancy: 0.0,
+            valid: false,
+        }
+    }
+}
+
+/// Measure one point of a task's configuration space on the VTA++ simulator.
+pub fn measure_point(space: &ConfigSpace, point: &PointConfig) -> MeasureResult {
+    let (hw, sw) = space.decode(point);
+    let kernel = match super::lower_conv(&space.task, &hw, &sw) {
+        Ok(k) => k,
+        Err(_) => return MeasureResult::invalid(&hw),
+    };
+    let report = match simulate(&kernel.stream, &hw) {
+        Ok(r) => r,
+        Err(_) => return MeasureResult::invalid(&hw),
+    };
+    let seconds = report.seconds(&hw);
+    MeasureResult {
+        seconds,
+        cycles: report.cycles,
+        gflops: space.task.flops() as f64 / seconds / 1e9,
+        area_mm2: total_area_mm2(&hw),
+        occupancy: kernel.occupancy(),
+        valid: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use crate::workload::Conv2dTask;
+
+    fn space() -> ConfigSpace {
+        ConfigSpace::for_task(&Conv2dTask::new(1, 64, 56, 56, 64, 3, 3, 1, 1), true)
+    }
+
+    #[test]
+    fn default_point_measures_valid() {
+        let s = space();
+        let m = measure_point(&s, &s.default_point());
+        assert!(m.valid);
+        assert!(m.seconds > 0.0 && m.seconds.is_finite());
+        assert!(m.gflops > 0.0);
+        assert!(m.fitness() > 0.0);
+    }
+
+    #[test]
+    fn invalid_points_get_zero_fitness() {
+        let s = space();
+        // Find an invalid point by brute force over random samples; the
+        // space contains buffer-overflow configs (big tiles, big blocks).
+        let mut rng = Pcg32::seeded(3);
+        let mut found = false;
+        for _ in 0..2000 {
+            let p = s.random_point(&mut rng);
+            let m = measure_point(&s, &p);
+            if !m.valid {
+                assert_eq!(m.fitness(), 0.0);
+                assert!(m.seconds.is_infinite());
+                found = true;
+                break;
+            }
+        }
+        assert!(found, "expected at least one invalid config in the space");
+    }
+
+    #[test]
+    fn measurement_is_deterministic() {
+        let s = space();
+        let mut rng = Pcg32::seeded(8);
+        for _ in 0..20 {
+            let p = s.random_point(&mut rng);
+            let a = measure_point(&s, &p);
+            let b = measure_point(&s, &p);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn landscape_varies_with_software_knobs() {
+        // The whole point of tuning: different points, different fitness.
+        let s = space();
+        let mut rng = Pcg32::seeded(5);
+        let mut values = std::collections::HashSet::new();
+        for _ in 0..100 {
+            let p = s.random_point(&mut rng);
+            let m = measure_point(&s, &p);
+            if m.valid {
+                values.insert(m.cycles);
+            }
+        }
+        assert!(values.len() > 10, "landscape too flat: {} distinct", values.len());
+    }
+
+    #[test]
+    fn gflops_below_peak() {
+        let s = space();
+        let mut rng = Pcg32::seeded(6);
+        for _ in 0..50 {
+            let p = s.random_point(&mut rng);
+            let m = measure_point(&s, &p);
+            if m.valid {
+                let (hw, _) = s.decode(&p);
+                assert!(
+                    m.gflops <= hw.peak_gops() + 1e-9,
+                    "gflops {} exceeds peak {}",
+                    m.gflops,
+                    hw.peak_gops()
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! The "MARL Code Generator" (Fig. 2): lower a convolution task plus a
+//! decoded configuration Θ into an executable VTA++ instruction stream
+//! τ(Θ), ready for the cycle simulator.
+
+pub mod lower;
+pub mod measure;
+
+pub use lower::{lower_conv, CodegenError, LoweredKernel};
+pub use measure::{measure_point, MeasureResult};

@@ -1,0 +1,154 @@
+//! Run configuration: JSON config files (Tables 4/5) + CLI overrides.
+//!
+//! `configs/arco.json`, `configs/autotvm.json` and `configs/chameleon.json`
+//! ship the paper's hyper-parameters; every field is optional and falls
+//! back to the compiled defaults, so a config file can pin just the knobs
+//! an experiment cares about.
+
+use crate::baselines::autotvm::AutoTvmParams;
+use crate::baselines::chameleon::ChameleonParams;
+use crate::costmodel::GbtParams;
+use crate::marl::exploration::ExploreParams;
+use crate::marl::strategy::ArcoParams;
+use crate::tuner::TuneBudget;
+use crate::util::json::{read_json_file, Json};
+use std::path::Path;
+
+/// Everything a tuning run needs.
+#[derive(Debug, Clone, Copy)]
+pub struct RunConfig {
+    pub budget: TuneBudget,
+    pub arco: ArcoParams,
+    pub autotvm: AutoTvmParams,
+    pub chameleon: ChameleonParams,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            budget: TuneBudget::default(),
+            arco: ArcoParams::default(),
+            autotvm: AutoTvmParams::default(),
+            chameleon: ChameleonParams::default(),
+            seed: 0xA2C0,
+        }
+    }
+}
+
+fn gbt_from_json(v: &Json, base: GbtParams) -> GbtParams {
+    GbtParams {
+        n_trees: v.get_usize("n_trees").unwrap_or(base.n_trees),
+        max_depth: v.get_usize("max_depth").unwrap_or(base.max_depth),
+        learning_rate: v.get_f64("learning_rate").unwrap_or(base.learning_rate),
+        min_leaf: v.get_usize("min_leaf").unwrap_or(base.min_leaf),
+        lambda: v.get_f64("lambda").unwrap_or(base.lambda),
+    }
+}
+
+fn explore_from_json(v: &Json, base: ExploreParams) -> ExploreParams {
+    ExploreParams {
+        episodes: v.get_usize("episode_rl").unwrap_or(base.episodes),
+        steps: v.get_usize("step_rl").unwrap_or(base.steps),
+        population: v.get_usize("population").unwrap_or(base.population),
+        ppo_epochs: v.get_usize("ppo_epochs").unwrap_or(base.ppo_epochs),
+    }
+}
+
+impl RunConfig {
+    /// Overlay one JSON config document onto `self`.
+    pub fn apply_json(&mut self, doc: &Json) {
+        if let Some(b) = doc.get("budget") {
+            self.budget.total_measurements = b
+                .get_usize("total_measurements")
+                .unwrap_or(self.budget.total_measurements);
+            self.budget.batch = b.get_usize("batch").unwrap_or(self.budget.batch);
+            self.budget.workers = b.get_usize("workers").unwrap_or(self.budget.workers);
+        }
+        if let Some(a) = doc.get("arco") {
+            self.arco.explore = explore_from_json(a, self.arco.explore);
+            if let Some(g) = a.get("gbt") {
+                self.arco.gbt = gbt_from_json(g, self.arco.gbt);
+            }
+            self.arco.gamma = a.get_f64("gamma").map(|x| x as f32).unwrap_or(self.arco.gamma);
+            self.arco.lam = a.get_f64("lambda_gae").map(|x| x as f32).unwrap_or(self.arco.lam);
+            self.arco.use_cs = a.get_bool("use_cs").unwrap_or(self.arco.use_cs);
+        }
+        if let Some(a) = doc.get("autotvm") {
+            self.autotvm.n_sa = a.get_usize("n_sa").unwrap_or(self.autotvm.n_sa);
+            self.autotvm.step_sa = a.get_usize("step_sa").unwrap_or(self.autotvm.step_sa);
+            self.autotvm.eps_random =
+                a.get_f64("eps_random").unwrap_or(self.autotvm.eps_random);
+            if let Some(g) = a.get("gbt") {
+                self.autotvm.gbt = gbt_from_json(g, self.autotvm.gbt);
+            }
+        }
+        if let Some(c) = doc.get("chameleon") {
+            self.chameleon.episodes = c.get_usize("episode_rl").unwrap_or(self.chameleon.episodes);
+            self.chameleon.steps = c.get_usize("step_rl").unwrap_or(self.chameleon.steps);
+            self.chameleon.population =
+                c.get_usize("population").unwrap_or(self.chameleon.population);
+            if let Some(g) = c.get("gbt") {
+                self.chameleon.gbt = gbt_from_json(g, self.chameleon.gbt);
+            }
+        }
+        if let Some(s) = doc.get("seed").and_then(Json::as_usize) {
+            self.seed = s as u64;
+        }
+    }
+
+    /// Load defaults then overlay a config file.
+    pub fn from_file(path: &Path) -> anyhow::Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        let doc = read_json_file(path)?;
+        cfg.apply_json(&doc);
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_tables_4_and_5() {
+        let c = RunConfig::default();
+        // Table 4/5: Σb = 1000 measurements, batch 64.
+        assert_eq!(c.budget.total_measurements, 1000);
+        assert_eq!(c.budget.batch, 64);
+        // Table 5: n_sa = 128 parallel chains, step_sa = 500.
+        assert_eq!(c.autotvm.n_sa, 128);
+        assert_eq!(c.autotvm.step_sa, 500);
+        // GBT batch-planning mode: xgb-reg equivalent with 64 trees.
+        assert_eq!(c.autotvm.gbt.n_trees, 64);
+    }
+
+    #[test]
+    fn json_overlay_partial() {
+        let mut c = RunConfig::default();
+        let doc = Json::parse(
+            r#"{"budget": {"total_measurements": 256},
+                "arco": {"episode_rl": 4, "use_cs": false},
+                "autotvm": {"n_sa": 16},
+                "seed": 7}"#,
+        )
+        .unwrap();
+        c.apply_json(&doc);
+        assert_eq!(c.budget.total_measurements, 256);
+        assert_eq!(c.budget.batch, 64); // untouched
+        assert_eq!(c.arco.explore.episodes, 4);
+        assert!(!c.arco.use_cs);
+        assert_eq!(c.autotvm.n_sa, 16);
+        assert_eq!(c.seed, 7);
+    }
+
+    #[test]
+    fn shipped_configs_parse() {
+        for name in ["arco", "autotvm", "chameleon", "quick"] {
+            let path = std::path::Path::new("configs").join(format!("{name}.json"));
+            if path.exists() {
+                RunConfig::from_file(&path).unwrap_or_else(|e| panic!("{name}: {e}"));
+            }
+        }
+    }
+}

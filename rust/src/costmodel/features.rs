@@ -1,0 +1,122 @@
+//! Feature extraction for the cost models.
+//!
+//! Mirrors AutoTVM's "knob" featurization plus a handful of cheap derived
+//! features that encode *why* a configuration is fast or slow on VTA++
+//! (array occupancy, buffer pressure, DMA-to-compute balance). All features
+//! are O(1) to compute — no lowering or simulation involved.
+
+use crate::space::{ConfigSpace, PointConfig};
+use crate::vta::config::{ACC_BYTES, INP_BYTES, WGT_BYTES};
+
+/// Number of features produced by [`featurize`].
+pub const NUM_FEATURES: usize = 18;
+
+/// Build the feature vector of one configuration point.
+pub fn featurize(space: &ConfigSpace, point: &PointConfig) -> Vec<f64> {
+    let (hw, sw) = space.decode(point);
+    let t = &space.task;
+    let oh = t.oh();
+    let ow = t.ow();
+
+    // Knob values, log2-scaled (they are powers of two / small ints).
+    let lg = |v: usize| (v.max(1) as f64).log2();
+
+    // Derived: array occupancy estimate along each blocked dimension.
+    let occ_b = t.n as f64 / (((t.n + hw.batch - 1) / hw.batch) * hw.batch) as f64;
+    let occ_ci = t.ci as f64 / (((t.ci + hw.block_in - 1) / hw.block_in) * hw.block_in) as f64;
+    let occ_co = t.co as f64 / (((t.co + hw.block_out - 1) / hw.block_out) * hw.block_out) as f64;
+
+    // Spatial tiling: tiles per plane and edge waste.
+    let tiles_h = (oh + sw.tile_h - 1) / sw.tile_h;
+    let tiles_w = (ow + sw.tile_w - 1) / sw.tile_w;
+    let spatial_waste =
+        1.0 - (oh * ow) as f64 / ((tiles_h * sw.tile_h) * (tiles_w * sw.tile_w)) as f64;
+
+    // Buffer pressure: tile working set / capacity (can exceed 1 = invalid).
+    let in_h = (sw.tile_h - 1) * t.stride + t.kh;
+    let in_w = (sw.tile_w - 1) * t.stride + t.kw;
+    let inp_tile = (hw.batch * in_h * in_w * hw.block_in * INP_BYTES) as f64;
+    let wgt_tile = (hw.block_out * hw.block_in * t.kh * t.kw * WGT_BYTES) as f64;
+    let acc_tile = (hw.batch * sw.tile_h * sw.tile_w * hw.block_out * ACC_BYTES) as f64;
+    let inp_pressure = inp_tile / hw.inp_buf_bytes() as f64;
+    let wgt_pressure = wgt_tile / hw.wgt_buf_bytes() as f64;
+    let acc_pressure = acc_tile / hw.acc_buf_bytes() as f64;
+
+    // Compute/DMA balance of one tile: uop cycles vs load beats.
+    let tile_uops = (sw.tile_h * sw.tile_w * t.kh * t.kw) as f64;
+    let tile_dma = (inp_tile + wgt_tile) / hw.dram_bytes_per_cycle as f64;
+    let balance = tile_uops / (tile_uops + tile_dma);
+
+    vec![
+        lg(hw.batch),
+        lg(hw.block_in),
+        lg(hw.block_out),
+        sw.h_threading as f64 - 1.0,
+        sw.oc_threading as f64 - 1.0,
+        lg(sw.tile_h),
+        lg(sw.tile_w),
+        occ_b,
+        occ_ci,
+        occ_co,
+        (tiles_h * tiles_w) as f64 / (oh * ow) as f64, // tile granularity
+        spatial_waste,
+        inp_pressure.min(4.0),
+        wgt_pressure.min(4.0),
+        acc_pressure.min(4.0),
+        balance,
+        lg(hw.macs_per_cycle()),
+        t.arithmetic_intensity().ln(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use crate::workload::Conv2dTask;
+
+    fn space() -> ConfigSpace {
+        ConfigSpace::for_task(&Conv2dTask::new(1, 64, 56, 56, 128, 3, 3, 1, 1), true)
+    }
+
+    #[test]
+    fn feature_count_is_stable() {
+        let s = space();
+        let f = featurize(&s, &s.default_point());
+        assert_eq!(f.len(), NUM_FEATURES);
+    }
+
+    #[test]
+    fn features_finite_for_whole_space_sample() {
+        let s = space();
+        let mut rng = Pcg32::seeded(17);
+        for _ in 0..500 {
+            let p = s.random_point(&mut rng);
+            for (i, f) in featurize(&s, &p).iter().enumerate() {
+                assert!(f.is_finite(), "feature {i} not finite for {p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn distinct_points_distinct_features() {
+        let s = space();
+        let a = s.default_point();
+        let mut b = a.clone();
+        b.0[1] = (b.0[1] + 1) % s.knobs[1].len();
+        assert_ne!(featurize(&s, &a), featurize(&s, &b));
+    }
+
+    #[test]
+    fn occupancy_features_in_unit_range() {
+        let s = space();
+        let mut rng = Pcg32::seeded(23);
+        for _ in 0..200 {
+            let p = s.random_point(&mut rng);
+            let f = featurize(&s, &p);
+            for idx in 7..10 {
+                assert!((0.0..=1.0).contains(&f[idx]), "occ feature {idx} = {}", f[idx]);
+            }
+        }
+    }
+}

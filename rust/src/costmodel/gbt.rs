@@ -1,0 +1,369 @@
+//! Gradient-boosted regression trees (the offline stand-in for XGBoost's
+//! `xgb-reg` mode).
+//!
+//! Squared-error boosting: each round fits a depth-limited CART tree to the
+//! current residuals by greedy exact split search, then shrinks its
+//! contribution by the learning rate. Matches what AutoTVM needs from its
+//! cost model: fast refits on ≤1000 rows, monotone ranking quality, and
+//! millisecond-scale batch prediction over thousands of candidates.
+
+use super::CostModel;
+
+/// Boosting hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct GbtParams {
+    /// Number of boosting rounds.
+    pub n_trees: usize,
+    /// Maximum tree depth.
+    pub max_depth: usize,
+    /// Shrinkage per round.
+    pub learning_rate: f64,
+    /// Minimum samples in a leaf.
+    pub min_leaf: usize,
+    /// L2 regularization on leaf values.
+    pub lambda: f64,
+}
+
+impl Default for GbtParams {
+    fn default() -> Self {
+        GbtParams { n_trees: 64, max_depth: 4, learning_rate: 0.3, min_leaf: 2, lambda: 1.0 }
+    }
+}
+
+/// Flat-array binary tree node.
+#[derive(Debug, Clone)]
+enum Node {
+    Leaf { value: f64 },
+    Split { feature: usize, threshold: f64, left: usize, right: usize },
+}
+
+/// One regression tree.
+#[derive(Debug, Clone)]
+struct Tree {
+    nodes: Vec<Node>,
+}
+
+impl Tree {
+    fn predict(&self, x: &[f64]) -> f64 {
+        let mut i = 0usize;
+        loop {
+            match &self.nodes[i] {
+                Node::Leaf { value } => return *value,
+                Node::Split { feature, threshold, left, right } => {
+                    i = if x[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+}
+
+/// The boosted ensemble.
+#[derive(Debug, Clone)]
+pub struct Gbt {
+    params: GbtParams,
+    base: f64,
+    trees: Vec<Tree>,
+}
+
+impl Gbt {
+    pub fn new(params: GbtParams) -> Self {
+        Gbt { params, base: 0.0, trees: Vec::new() }
+    }
+
+    pub fn num_trees(&self) -> usize {
+        self.trees.len()
+    }
+}
+
+impl Default for Gbt {
+    fn default() -> Self {
+        Gbt::new(GbtParams::default())
+    }
+}
+
+/// Pre-sorted feature columns, computed once per `fit` and reused by every
+/// tree and node: feature order never changes across boosting rounds, so
+/// split search walks the global order with a node-membership mask instead
+/// of re-sorting each node (EXPERIMENTS.md §Perf, L3 item 2 — ~5x on fit).
+struct SortedCols(Vec<Vec<u32>>);
+
+impl SortedCols {
+    fn build(x: &[Vec<f64>]) -> SortedCols {
+        let n_features = x[0].len();
+        let cols = (0..n_features)
+            .map(|f| {
+                let mut idx: Vec<u32> = (0..x.len() as u32).collect();
+                idx.sort_by(|&a, &b| {
+                    x[a as usize][f]
+                        .partial_cmp(&x[b as usize][f])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                });
+                idx
+            })
+            .collect();
+        SortedCols(cols)
+    }
+}
+
+/// Best split for one node: (feature, threshold, gain).
+fn best_split(
+    x: &[Vec<f64>],
+    residual: &[f64],
+    rows: &[usize],
+    in_node: &[bool],
+    sorted: &SortedCols,
+    lambda: f64,
+    min_leaf: usize,
+) -> Option<(usize, f64, f64)> {
+    if rows.len() < 2 * min_leaf {
+        return None;
+    }
+    let n_features = x[rows[0]].len();
+    let total_sum: f64 = rows.iter().map(|&r| residual[r]).sum();
+    let total_n = rows.len() as f64;
+    let parent_score = total_sum * total_sum / (total_n + lambda);
+
+    let mut best: Option<(usize, f64, f64)> = None;
+    for f in 0..n_features {
+        let mut left_sum = 0.0;
+        let mut left_n = 0usize;
+        let mut prev: Option<f64> = None;
+        for &ri in &sorted.0[f] {
+            let r = ri as usize;
+            if !in_node[r] {
+                continue;
+            }
+            let v = x[r][f];
+            // Evaluate the split *between* the previous member and this one.
+            if let Some(pv) = prev {
+                if pv != v
+                    && left_n >= min_leaf
+                    && rows.len() - left_n >= min_leaf
+                {
+                    let right_sum = total_sum - left_sum;
+                    let right_n = total_n - left_n as f64;
+                    let gain = left_sum * left_sum / (left_n as f64 + lambda)
+                        + right_sum * right_sum / (right_n + lambda)
+                        - parent_score;
+                    if best.map_or(true, |(_, _, g)| gain > g) && gain > 1e-12 {
+                        best = Some((f, 0.5 * (pv + v), gain));
+                    }
+                }
+            }
+            left_sum += residual[r];
+            left_n += 1;
+            prev = Some(v);
+        }
+    }
+    best
+}
+
+/// Recursively grow a tree on `rows`, returning the root node index.
+/// `in_node` is the membership mask of `rows` (kept in sync by the caller).
+#[allow(clippy::too_many_arguments)]
+fn grow(
+    nodes: &mut Vec<Node>,
+    x: &[Vec<f64>],
+    residual: &[f64],
+    rows: Vec<usize>,
+    in_node: &mut [bool],
+    sorted: &SortedCols,
+    depth: usize,
+    p: &GbtParams,
+) -> usize {
+    let sum: f64 = rows.iter().map(|&r| residual[r]).sum();
+    let leaf_value = sum / (rows.len() as f64 + p.lambda);
+    if depth >= p.max_depth {
+        nodes.push(Node::Leaf { value: leaf_value });
+        return nodes.len() - 1;
+    }
+    match best_split(x, residual, &rows, in_node, sorted, p.lambda, p.min_leaf) {
+        None => {
+            nodes.push(Node::Leaf { value: leaf_value });
+            nodes.len() - 1
+        }
+        Some((feature, threshold, _gain)) => {
+            let (lrows, rrows): (Vec<usize>, Vec<usize>) =
+                rows.into_iter().partition(|&r| x[r][feature] <= threshold);
+            let idx = nodes.len();
+            nodes.push(Node::Leaf { value: 0.0 }); // placeholder
+            // Recurse left with only left rows marked, then right.
+            for &r in &rrows {
+                in_node[r] = false;
+            }
+            let left = grow(nodes, x, residual, lrows.clone(), in_node, sorted, depth + 1, p);
+            for &r in &lrows {
+                in_node[r] = false;
+            }
+            for &r in &rrows {
+                in_node[r] = true;
+            }
+            let right = grow(nodes, x, residual, rrows.clone(), in_node, sorted, depth + 1, p);
+            // Restore the full node membership for the caller.
+            for &r in &lrows {
+                in_node[r] = true;
+            }
+            nodes[idx] = Node::Split { feature, threshold, left, right };
+            idx
+        }
+    }
+}
+
+impl CostModel for Gbt {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
+        assert_eq!(x.len(), y.len());
+        self.trees.clear();
+        if x.is_empty() {
+            self.base = 0.0;
+            return;
+        }
+        self.base = y.iter().sum::<f64>() / y.len() as f64;
+        let mut pred = vec![self.base; y.len()];
+        let all_rows: Vec<usize> = (0..x.len()).collect();
+        let sorted = SortedCols::build(x);
+        let mut in_node = vec![true; x.len()];
+        for _round in 0..self.params.n_trees {
+            let residual: Vec<f64> = y.iter().zip(&pred).map(|(t, p)| t - p).collect();
+            let mut nodes = Vec::new();
+            in_node.fill(true);
+            let root = grow(
+                &mut nodes,
+                x,
+                &residual,
+                all_rows.clone(),
+                &mut in_node,
+                &sorted,
+                0,
+                &self.params,
+            );
+            debug_assert_eq!(root, 0);
+            let tree = Tree { nodes };
+            // Early stop: a single pure leaf adds ~nothing.
+            let lr = self.params.learning_rate;
+            let mut improved = false;
+            for (i, xi) in x.iter().enumerate() {
+                let delta = lr * tree.predict(xi);
+                if delta.abs() > 1e-12 {
+                    improved = true;
+                }
+                pred[i] += delta;
+            }
+            self.trees.push(tree);
+            if !improved {
+                break;
+            }
+        }
+    }
+
+    fn predict(&self, x: &[f64]) -> f64 {
+        let mut p = self.base;
+        for t in &self.trees {
+            p += self.params.learning_rate * t.predict(x);
+        }
+        p
+    }
+
+    fn is_trained(&self) -> bool {
+        !self.trees.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use crate::util::stats::pearson;
+
+    fn make_data(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        // y = 3*x0 - 2*x1 + x2*x0 + noise — nonlinear enough to need trees.
+        let mut rng = Pcg32::seeded(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let row = vec![rng.gen_f64(), rng.gen_f64(), rng.gen_f64(), rng.gen_f64()];
+            let t = 3.0 * row[0] - 2.0 * row[1] + row[2] * row[0] + 0.01 * rng.gen_normal();
+            x.push(row);
+            y.push(t);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn fits_training_data_well() {
+        let (x, y) = make_data(300, 1);
+        let mut m = Gbt::default();
+        m.fit(&x, &y);
+        let preds = m.predict_batch(&x);
+        let corr = pearson(&preds, &y);
+        assert!(corr > 0.97, "train corr {corr}");
+    }
+
+    #[test]
+    fn generalizes_to_heldout() {
+        let (xtr, ytr) = make_data(400, 2);
+        let (xte, yte) = make_data(100, 3);
+        let mut m = Gbt::default();
+        m.fit(&xtr, &ytr);
+        let preds = m.predict_batch(&xte);
+        let corr = pearson(&preds, &yte);
+        assert!(corr > 0.9, "test corr {corr}");
+    }
+
+    #[test]
+    fn untrained_predicts_zero() {
+        let m = Gbt::default();
+        assert!(!m.is_trained());
+        assert_eq!(m.predict(&[1.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn constant_target_learns_constant() {
+        let x: Vec<Vec<f64>> = (0..50).map(|i| vec![i as f64]).collect();
+        let y = vec![7.0; 50];
+        let mut m = Gbt::default();
+        m.fit(&x, &y);
+        for xi in &x {
+            assert!((m.predict(xi) - 7.0).abs() < 0.2, "{}", m.predict(xi));
+        }
+    }
+
+    #[test]
+    fn single_sample_is_safe() {
+        let mut m = Gbt::default();
+        m.fit(&[vec![1.0, 2.0]], &[5.0]);
+        assert!((m.predict(&[1.0, 2.0]) - 5.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_fit_is_safe() {
+        let mut m = Gbt::default();
+        m.fit(&[], &[]);
+        assert_eq!(m.predict(&[0.0]), 0.0);
+    }
+
+    #[test]
+    fn step_function_recovered() {
+        // Pure axis-aligned structure: trees should nail it.
+        let x: Vec<Vec<f64>> = (0..100).map(|i| vec![i as f64 / 100.0]).collect();
+        let y: Vec<f64> = x.iter().map(|r| if r[0] < 0.5 { 1.0 } else { -1.0 }).collect();
+        let mut m = Gbt::default();
+        m.fit(&x, &y);
+        assert!(m.predict(&[0.2]) > 0.8);
+        assert!(m.predict(&[0.8]) < -0.8);
+    }
+
+    #[test]
+    fn ranking_quality_on_noisy_data() {
+        // The tuner only needs ranking: top-predicted should be top-true.
+        let (x, y) = make_data(500, 9);
+        let mut m = Gbt::default();
+        m.fit(&x, &y);
+        let preds = m.predict_batch(&x);
+        let mut idx: Vec<usize> = (0..x.len()).collect();
+        idx.sort_by(|&a, &b| preds[b].partial_cmp(&preds[a]).unwrap());
+        let top32: Vec<f64> = idx[..32].iter().map(|&i| y[i]).collect();
+        let mean_top = crate::util::stats::mean(&top32);
+        let mean_all = crate::util::stats::mean(&y);
+        assert!(mean_top > mean_all + 0.5, "top32 {mean_top} vs all {mean_all}");
+    }
+}

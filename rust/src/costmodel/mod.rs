@@ -1,0 +1,28 @@
+//! Surrogate cost models.
+//!
+//! AutoTVM's tuner trains an XGBoost regressor (`xgb-reg` mode, Table 5) on
+//! measured configurations and uses it to rank candidates instead of paying
+//! for a hardware measurement. XGBoost is not available offline, so
+//! [`gbt`] implements gradient-boosted regression trees from scratch with
+//! the same role: squared-error boosting over depth-limited regression
+//! trees with greedy exact splits.
+
+pub mod features;
+pub mod gbt;
+
+pub use features::featurize;
+pub use gbt::{Gbt, GbtParams};
+
+/// A trainable regression surrogate over feature vectors.
+pub trait CostModel {
+    /// Fit from scratch on (features, fitness) pairs.
+    fn fit(&mut self, x: &[Vec<f64>], y: &[f64]);
+    /// Predict fitness for one feature vector.
+    fn predict(&self, x: &[f64]) -> f64;
+    /// Predict a batch.
+    fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        xs.iter().map(|x| self.predict(x)).collect()
+    }
+    /// True once `fit` has seen data.
+    fn is_trained(&self) -> bool;
+}

@@ -1,0 +1,31 @@
+//! # ARCO — Adaptive MARL-based HW/SW co-optimization compiler (reproduction)
+//!
+//! A three-layer reproduction of "ARCO: Adaptive Multi-Agent Reinforcement
+//! Learning-Based Hardware/Software Co-Optimization Compiler for Improved
+//! Performance in DNN Accelerator Design" (Fayyazi, Kamal, Pedram).
+//!
+//! - **L3 (this crate)**: the co-optimizing compiler — VTA++ simulator,
+//!   design space, code generator, MAPPO MARL exploration with Confidence
+//!   Sampling, AutoTVM/CHAMELEON baselines, tuning orchestrator, reports.
+//! - **L2 (python/compile/model.py)**: MAPPO policy/critic graphs and train
+//!   steps in JAX, AOT-lowered once to `artifacts/*.hlo.txt`.
+//! - **L1 (python/compile/kernels/)**: fused Pallas MLP/GAE kernels inside
+//!   those graphs, validated against pure-jnp oracles.
+//!
+//! Python never runs on the tuning path: [`runtime::Engine`] loads the HLO
+//! text via PJRT (`xla` crate) and the MARL hot loop calls it directly.
+//! See DESIGN.md for the full system inventory and experiment index.
+
+pub mod util;
+pub mod workload;
+pub mod vta;
+pub mod space;
+pub mod codegen;
+pub mod costmodel;
+pub mod ml;
+pub mod runtime;
+pub mod marl;
+pub mod baselines;
+pub mod tuner;
+pub mod config;
+pub mod report;

@@ -1,0 +1,269 @@
+//! `arco` — the leader binary: tune, compare, and regenerate the paper's
+//! tables and figures from the command line.
+//!
+//! ```text
+//! arco tune     --model resnet18 --framework arco [--config configs/arco.json]
+//! arco compare  --models alexnet,resnet18 --frameworks autotvm,chameleon,arco
+//! arco fig4     --model resnet18            # CS ablation trace
+//! arco report-models                        # Table 3
+//! arco info                                 # backend / artifact status
+//! ```
+
+use arco::config::RunConfig;
+use arco::report;
+use arco::tuner::{compare_frameworks, tune_model, Framework};
+use arco::util::cli::Cli;
+use arco::util::json::write_json_file;
+use arco::util::log::{set_level, Level};
+use arco::workload::{model_by_name, model_names};
+use std::path::Path;
+
+fn main() {
+    arco::util::log::init_from_env();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    "arco <command> [options]\n\ncommands:\n  \
+     tune           tune one model with one framework\n  \
+     compare        compare frameworks across models (Figs 5-7, Table 6)\n  \
+     fig4           ARCO with/without Confidence Sampling trace (Fig 4)\n  \
+     report-models  print the model zoo (Table 3)\n  \
+     info           backend / artifact status\n\nrun `arco <command> --help` for options\n"
+        .into()
+}
+
+fn run(args: &[String]) -> anyhow::Result<()> {
+    let Some(cmd) = args.first() else {
+        print!("{}", usage());
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "tune" => cmd_tune(rest),
+        "compare" => cmd_compare(rest),
+        "fig4" => cmd_fig4(rest),
+        "report-models" => {
+            print!("{}", report::table3_models());
+            report::write_result("table3_models.md", &report::table3_models())?;
+            Ok(())
+        }
+        "info" => cmd_info(),
+        "--help" | "-h" | "help" => {
+            print!("{}", usage());
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}'\n\n{}", usage()),
+    }
+}
+
+fn common_cli(name: &str, about: &str) -> Cli {
+    Cli::new(name, about)
+        .opt("config", Some('c'), "JSON config file (configs/*.json)", None)
+        .opt("trials", Some('n'), "total hardware measurements per task", None)
+        .opt("batch", Some('b'), "measurements per planning iteration", None)
+        .opt("seed", Some('s'), "RNG seed", None)
+        .opt("workers", Some('w'), "simulator worker threads", None)
+        .flag("quick", Some('q'), "CI-scale RL budgets (same pipeline)")
+        .flag("verbose", Some('v'), "debug logging")
+        .flag("help", Some('h'), "show help")
+}
+
+fn load_config(a: &arco::util::cli::Args) -> anyhow::Result<(RunConfig, bool)> {
+    let mut cfg = match a.get("config") {
+        Some(path) => RunConfig::from_file(Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    if let Some(n) = a.get_usize("trials").map_err(anyhow::Error::msg)? {
+        cfg.budget.total_measurements = n;
+    }
+    if let Some(b) = a.get_usize("batch").map_err(anyhow::Error::msg)? {
+        cfg.budget.batch = b;
+    }
+    if let Some(w) = a.get_usize("workers").map_err(anyhow::Error::msg)? {
+        cfg.budget.workers = w;
+    }
+    if let Some(s) = a.get_u64("seed").map_err(anyhow::Error::msg)? {
+        cfg.seed = s;
+    }
+    if a.has_flag("verbose") {
+        set_level(Level::Debug);
+    }
+    Ok((cfg, a.has_flag("quick")))
+}
+
+fn parse_models(spec: &str) -> anyhow::Result<Vec<String>> {
+    let names: Vec<String> = if spec == "all" {
+        model_names().iter().map(|s| s.to_string()).collect()
+    } else {
+        spec.split(',').map(|s| s.trim().to_string()).collect()
+    };
+    for n in &names {
+        if model_by_name(n).is_none() {
+            anyhow::bail!("unknown model '{n}' (known: {})", model_names().join(", "));
+        }
+    }
+    Ok(names)
+}
+
+fn cmd_tune(args: &[String]) -> anyhow::Result<()> {
+    let cli = common_cli("arco tune", "tune one model with one framework")
+        .opt("model", Some('m'), "zoo model name", Some("resnet18"))
+        .opt("framework", Some('f'), "autotvm|chameleon|arco|random|arco-nocs|arco-swonly", Some("arco"));
+    let a = cli.parse(args).map_err(anyhow::Error::msg)?;
+    if a.has_flag("help") {
+        print!("{}", cli.usage());
+        return Ok(());
+    }
+    let (cfg, quick) = load_config(&a)?;
+    let model_name = a.get("model").unwrap();
+    let model = model_by_name(model_name).ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let framework = Framework::from_name(a.get("framework").unwrap())
+        .ok_or_else(|| anyhow::anyhow!("unknown framework"))?;
+
+    let out = tune_model(framework, &model, cfg.budget, quick, cfg.seed);
+    println!(
+        "{} on {}: mean inference {:.5}s ({:.3} inf/s), compile {:.1}s, {} measurements",
+        framework.name(),
+        model.name,
+        out.inference_secs,
+        out.throughput(),
+        out.compile_secs,
+        out.measurements
+    );
+    for t in &out.tasks {
+        println!(
+            "  {}  x{}  best {:.3e}s  ({:.1} GFLOPS, {} invalid)",
+            t.task_id, t.weight, t.result.best.seconds, t.result.best.gflops, t.result.invalid
+        );
+    }
+    // Phase profile (merged across tasks): where the search wall-clock went.
+    let mut merged = arco::util::timer::PhaseTimer::new();
+    for t in &out.tasks {
+        merged.merge(&t.result.timer);
+    }
+    println!("\nsearch phase profile:\n{}", merged.summary());
+    let json = report::compare_json(&[arco::tuner::CompareReport {
+        model: model.name.to_string(),
+        outcomes: vec![out],
+    }]);
+    let path = Path::new("results").join(format!("tune_{}_{}.json", framework.name(), model.name));
+    write_json_file(&path, &json)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+fn cmd_compare(args: &[String]) -> anyhow::Result<()> {
+    let cli = common_cli("arco compare", "compare frameworks (Figs 5-7, Table 6)")
+        .opt("models", Some('m'), "comma-separated zoo models, or 'all'", Some("all"))
+        .opt("frameworks", Some('f'), "comma-separated frameworks", Some("autotvm,chameleon,arco"));
+    let a = cli.parse(args).map_err(anyhow::Error::msg)?;
+    if a.has_flag("help") {
+        print!("{}", cli.usage());
+        return Ok(());
+    }
+    let (cfg, quick) = load_config(&a)?;
+    let models = parse_models(a.get("models").unwrap())?;
+    let frameworks: Vec<Framework> = a
+        .get("frameworks")
+        .unwrap()
+        .split(',')
+        .map(|s| {
+            Framework::from_name(s.trim())
+                .ok_or_else(|| anyhow::anyhow!("unknown framework '{s}'"))
+        })
+        .collect::<Result<_, _>>()?;
+
+    let mut reports = Vec::new();
+    for name in &models {
+        let model = model_by_name(name).unwrap();
+        arco::log_info!("main", "=== comparing on {name} ===");
+        reports.push(compare_frameworks(&frameworks, &model, cfg.budget, quick, cfg.seed));
+    }
+
+    let t6 = report::table6_inference(&reports);
+    println!("\nTable 6 — mean inference times (s) on VTA++:\n{t6}");
+    println!("{}", report::fig5_summary(&reports));
+    report::write_result("table6_inference.md", &t6)?;
+    report::write_result("fig5_throughput.csv", &report::fig5_throughput(&reports))?;
+    report::write_result("fig5_summary.txt", &report::fig5_summary(&reports))?;
+    report::write_result("fig6_compile_time.csv", &report::fig6_compile_time(&reports))?;
+    for r in &reports {
+        report::write_result(
+            &format!("fig7_convergence_{}.csv", r.model),
+            &report::fig7_convergence(r),
+        )?;
+    }
+    write_json_file(Path::new("results/compare.json"), &report::compare_json(&reports))?;
+    println!("wrote results/table6_inference.md, fig5_*.csv, fig6_compile_time.csv, fig7_convergence_*.csv, compare.json");
+    Ok(())
+}
+
+fn cmd_fig4(args: &[String]) -> anyhow::Result<()> {
+    let cli = common_cli("arco fig4", "ARCO with vs without Confidence Sampling")
+        .opt("model", Some('m'), "zoo model name", Some("resnet18"));
+    let a = cli.parse(args).map_err(anyhow::Error::msg)?;
+    if a.has_flag("help") {
+        print!("{}", cli.usage());
+        return Ok(());
+    }
+    let (cfg, quick) = load_config(&a)?;
+    let model = model_by_name(a.get("model").unwrap())
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+
+    let with_cs = tune_model(Framework::Arco, &model, cfg.budget, quick, cfg.seed);
+    let without_cs = tune_model(Framework::ArcoNoCs, &model, cfg.budget, quick, cfg.seed);
+
+    // Heaviest task's trace under each variant.
+    let pick = |o: &arco::tuner::ModelOutcome| {
+        o.tasks
+            .iter()
+            .max_by_key(|t| t.result.trace.len())
+            .map(|t| t.result.trace.clone())
+            .unwrap_or_default()
+    };
+    let csv = report::fig4_configs_over_time(
+        "after_cs",
+        &pick(&with_cs),
+        "before_cs",
+        &pick(&without_cs),
+    );
+    report::write_result(&format!("fig4_cs_{}.csv", model.name), &csv)?;
+    println!(
+        "fig4: with CS best {:.5}s ({} measurements), without CS best {:.5}s ({} measurements)",
+        with_cs.inference_secs, with_cs.measurements, without_cs.inference_secs, without_cs.measurements
+    );
+    println!("wrote results/fig4_cs_{}.csv", model.name);
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    println!("arco {} — three-layer build info", env!("CARGO_PKG_VERSION"));
+    let dir = arco::runtime::manifest::artifacts_dir();
+    match arco::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts: {} ({} entry points)", dir.display(), m.artifact_files.len());
+            for (name, file) in &m.artifact_files {
+                println!("  {name:<16} {file}");
+            }
+            match arco::runtime::Engine::load(&dir) {
+                Ok(e) => println!("backend: xla ({})", e.platform()),
+                Err(e) => println!("backend: native (engine failed: {e})"),
+            }
+        }
+        Err(e) => {
+            println!("artifacts: not available ({e})");
+            println!("backend: native (run `make artifacts`)");
+        }
+    }
+    println!("simulator: VTA++ cycle model, default {:?}", arco::vta::VtaConfig::default());
+    Ok(())
+}

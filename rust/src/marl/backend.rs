@@ -1,0 +1,389 @@
+//! Compute backend for the MARL networks: AOT/XLA (production path) or the
+//! native mirror (artifact-free tests, CHAMELEON's single-agent RL).
+//!
+//! Both implement the same five entry points over flat f32 parameter
+//! vectors; `rust/tests/runtime_parity.rs` pins them to each other.
+
+use crate::ml::{clip_grad_norm, ppo, Adam, AdamParams, Mat, Mlp};
+use crate::runtime::engine::{PolicyTrainOut, ValueTrainOut};
+use crate::runtime::{Engine, ModelDims};
+use std::cell::RefCell;
+use std::path::Path;
+use std::rc::Rc;
+
+thread_local! {
+    /// Per-thread engine cache: PJRT compilation of the five artifacts
+    /// takes ~0.7 s, and a model tune instantiates one strategy per task —
+    /// sharing the compiled engine across tasks removes that per-task
+    /// startup entirely (EXPERIMENTS.md §Perf, L3 item 1). Thread-local
+    /// (not global) because the PJRT client is not Sync.
+    static ENGINE_CACHE: RefCell<Option<Rc<Engine>>> = const { RefCell::new(None) };
+}
+
+/// Which execution path serves the MARL networks.
+pub enum Backend {
+    /// AOT-compiled HLO on PJRT (the paper-faithful production path).
+    /// Reference-counted so one compiled engine serves every task tuned on
+    /// this thread.
+    Xla(Rc<Engine>),
+    /// Native rust mirror of the same graphs.
+    Native(NativeBackend),
+}
+
+impl Backend {
+    /// Load the XLA backend if artifacts exist, else fall back to native.
+    pub fn auto(dims: ModelDims) -> Backend {
+        let dir = crate::runtime::manifest::artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            let cached = ENGINE_CACHE.with(|c| c.borrow().clone());
+            if let Some(e) = cached {
+                return Backend::Xla(e);
+            }
+            match Engine::load(&dir) {
+                Ok(e) => {
+                    let e = Rc::new(e);
+                    ENGINE_CACHE.with(|c| *c.borrow_mut() = Some(e.clone()));
+                    return Backend::Xla(e);
+                }
+                Err(err) => {
+                    crate::log_warn!("backend", "XLA engine failed ({err}); using native");
+                }
+            }
+        } else {
+            crate::log_warn!("backend", "no artifacts at {}; using native backend", dir.display());
+        }
+        Backend::Native(NativeBackend::new(dims))
+    }
+
+    /// Force the native backend.
+    pub fn native(dims: ModelDims) -> Backend {
+        Backend::Native(NativeBackend::new(dims))
+    }
+
+    /// Force the XLA backend from a directory.
+    pub fn xla(dir: &Path) -> anyhow::Result<Backend> {
+        Ok(Backend::Xla(Rc::new(Engine::load(dir)?)))
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Xla(_) => "xla",
+            Backend::Native(_) => "native",
+        }
+    }
+
+    pub fn dims(&self) -> ModelDims {
+        match self {
+            Backend::Xla(e) => e.manifest.dims,
+            Backend::Native(n) => n.dims,
+        }
+    }
+
+    /// Masked log-probs; obs is (b_pol, obs_dim) row-major (caller pads).
+    pub fn policy_forward(&self, params: &[f32], obs: &[f32], mask: &[f32]) -> Vec<f32> {
+        match self {
+            Backend::Xla(e) => e.policy_forward(params, obs, mask).expect("policy_forward"),
+            Backend::Native(n) => n.policy_forward(params, obs, mask),
+        }
+    }
+
+    /// Critic values; state is (b_pol, gstate_dim) row-major.
+    pub fn value_forward(&self, params: &[f32], state: &[f32]) -> Vec<f32> {
+        match self {
+            Backend::Xla(e) => e.value_forward(params, state).expect("value_forward"),
+            Backend::Native(n) => n.value_forward(params, state),
+        }
+    }
+
+    /// GAE over the fixed t_gae horizon.
+    pub fn gae(
+        &self,
+        rewards: &[f32],
+        values: &[f32],
+        bootstrap: f32,
+        gamma: f32,
+        lam: f32,
+    ) -> (Vec<f32>, Vec<f32>) {
+        match self {
+            Backend::Xla(e) => e.gae(rewards, values, bootstrap, gamma, lam).expect("gae"),
+            Backend::Native(_) => ppo::gae(rewards, values, bootstrap, gamma, lam),
+        }
+    }
+
+    /// One PPO-clip policy update (padded to b_train; weight=0 rows inert).
+    #[allow(clippy::too_many_arguments)]
+    pub fn policy_train(
+        &self,
+        params: &[f32],
+        m: &[f32],
+        v: &[f32],
+        t: f32,
+        obs: &[f32],
+        mask: &[f32],
+        actions: &[i32],
+        old_logp: &[f32],
+        adv: &[f32],
+        weight: &[f32],
+    ) -> PolicyTrainOut {
+        match self {
+            Backend::Xla(e) => e
+                .policy_train(params, m, v, t, obs, mask, actions, old_logp, adv, weight)
+                .expect("policy_train"),
+            Backend::Native(n) => {
+                n.policy_train(params, m, v, t, obs, mask, actions, old_logp, adv, weight)
+            }
+        }
+    }
+
+    /// One critic MSE update.
+    #[allow(clippy::too_many_arguments)]
+    pub fn value_train(
+        &self,
+        params: &[f32],
+        m: &[f32],
+        v: &[f32],
+        t: f32,
+        state: &[f32],
+        returns: &[f32],
+        weight: &[f32],
+    ) -> ValueTrainOut {
+        match self {
+            Backend::Xla(e) => {
+                e.value_train(params, m, v, t, state, returns, weight).expect("value_train")
+            }
+            Backend::Native(n) => n.value_train(params, m, v, t, state, returns, weight),
+        }
+    }
+}
+
+/// Native implementation mirroring python/compile/model.py exactly
+/// (same hyper-parameters, same weighted losses, same Adam).
+pub struct NativeBackend {
+    pub dims: ModelDims,
+}
+
+// Baked hyper-parameters — keep in sync with python/compile/model.py.
+const CLIP_EPS: f32 = 0.2;
+const ENTROPY_COEF: f32 = 0.01;
+const LR_POLICY: f32 = 5e-3;
+const LR_VALUE: f32 = 5e-3;
+const MAX_GRAD_NORM: f32 = 10.0;
+
+impl NativeBackend {
+    pub fn new(dims: ModelDims) -> NativeBackend {
+        NativeBackend { dims }
+    }
+
+    fn policy_mlp(&self, params: &[f32]) -> Mlp {
+        let mut rng = crate::util::rng::Pcg32::seeded(0);
+        let mut mlp = Mlp::policy(self.dims.obs_dim, self.dims.act_dim, &mut rng);
+        mlp.unflatten(params);
+        mlp
+    }
+
+    fn value_mlp(&self, params: &[f32]) -> Mlp {
+        let mut rng = crate::util::rng::Pcg32::seeded(0);
+        let mut mlp = Mlp::value(self.dims.gstate_dim, &mut rng);
+        mlp.unflatten(params);
+        mlp
+    }
+
+    pub fn policy_forward(&self, params: &[f32], obs: &[f32], mask: &[f32]) -> Vec<f32> {
+        let d = self.dims;
+        let mlp = self.policy_mlp(params);
+        let x = Mat::from_vec(d.b_pol, d.obs_dim, obs.to_vec());
+        let cache = mlp.forward(&x);
+        ppo::masked_log_softmax(cache.output(), mask).data
+    }
+
+    pub fn value_forward(&self, params: &[f32], state: &[f32]) -> Vec<f32> {
+        let d = self.dims;
+        let mlp = self.value_mlp(params);
+        let x = Mat::from_vec(d.b_pol, d.gstate_dim, state.to_vec());
+        mlp.forward(&x).output().data.clone()
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn policy_train(
+        &self,
+        params: &[f32],
+        m: &[f32],
+        v: &[f32],
+        t: f32,
+        obs: &[f32],
+        mask: &[f32],
+        actions: &[i32],
+        old_logp: &[f32],
+        adv: &[f32],
+        weight: &[f32],
+    ) -> PolicyTrainOut {
+        let d = self.dims;
+        let mlp = self.policy_mlp(params);
+        let x = Mat::from_vec(d.b_train, d.obs_dim, obs.to_vec());
+        let cache = mlp.forward(&x);
+
+        // Weighted PPO loss: drop zero-weight rows from the mean by scaling
+        // the per-row gradient; ml::ppo uses a plain mean over b rows, so we
+        // re-weight to sum(w) by scaling adv rows and correcting after.
+        let wsum: f32 = weight.iter().sum::<f32>().max(1.0);
+        let acts: Vec<usize> = actions.iter().map(|&a| a as usize).collect();
+        let (loss, mut d_logits, entropy, clip_frac) = ppo::ppo_policy_loss_grad(
+            cache.output(),
+            mask,
+            &acts,
+            old_logp,
+            adv,
+            CLIP_EPS,
+            ENTROPY_COEF,
+        );
+        // Re-weight gradient rows: multiply row r by weight[r] * b / wsum.
+        let scale_rows = d.b_train as f32 / wsum;
+        for r in 0..d.b_train {
+            let s = weight[r] * scale_rows;
+            for c in 0..d.act_dim {
+                *d_logits.at_mut(r, c) *= s;
+            }
+        }
+        let grads = mlp.backward(&cache, &d_logits);
+        let mut flat_grads = Mlp::flatten_grads(&grads);
+        clip_grad_norm(&mut flat_grads, MAX_GRAD_NORM);
+
+        let mut new_params = params.to_vec();
+        let mut adam = Adam::new(new_params.len(), AdamParams { lr: LR_POLICY, ..Default::default() });
+        restore_adam(&mut adam, m, v, t);
+        adam.step(&mut new_params, &flat_grads);
+        let (m_out, v_out, t_out) = extract_adam(&adam);
+        PolicyTrainOut {
+            params: new_params,
+            m: m_out,
+            v: v_out,
+            t: t_out,
+            loss,
+            entropy,
+            clip_frac,
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn value_train(
+        &self,
+        params: &[f32],
+        m: &[f32],
+        v: &[f32],
+        t: f32,
+        state: &[f32],
+        returns: &[f32],
+        weight: &[f32],
+    ) -> ValueTrainOut {
+        let d = self.dims;
+        let mlp = self.value_mlp(params);
+        let x = Mat::from_vec(d.b_train, d.gstate_dim, state.to_vec());
+        let cache = mlp.forward(&x);
+        let pred = cache.output();
+        let wsum: f32 = weight.iter().sum::<f32>().max(1.0);
+        let mut loss = 0.0f32;
+        let mut d_out = Mat::zeros(d.b_train, 1);
+        for r in 0..d.b_train {
+            let err = pred.at(r, 0) - returns[r];
+            loss += err * err * weight[r];
+            *d_out.at_mut(r, 0) = 2.0 * err * weight[r] / wsum;
+        }
+        loss /= wsum;
+        let grads = mlp.backward(&cache, &d_out);
+        let mut flat_grads = Mlp::flatten_grads(&grads);
+        clip_grad_norm(&mut flat_grads, MAX_GRAD_NORM);
+        let mut new_params = params.to_vec();
+        let mut adam = Adam::new(new_params.len(), AdamParams { lr: LR_VALUE, ..Default::default() });
+        restore_adam(&mut adam, m, v, t);
+        adam.step(&mut new_params, &flat_grads);
+        let (m_out, v_out, t_out) = extract_adam(&adam);
+        ValueTrainOut { params: new_params, m: m_out, v: v_out, t: t_out, loss }
+    }
+}
+
+// Adam state round-trips through flat (m, v, t) triples to match the HLO
+// interface. The Adam struct does not expose its internals publicly, so we
+// rebuild it here via a small shim.
+fn restore_adam(adam: &mut Adam, m: &[f32], v: &[f32], t: f32) {
+    adam.restore_state(m, v, t as u32);
+}
+
+fn extract_adam(adam: &Adam) -> (Vec<f32>, Vec<f32>, f32) {
+    let (m, v, t) = adam.state();
+    (m.to_vec(), v.to_vec(), t as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn dims() -> ModelDims {
+        ModelDims::default()
+    }
+
+    fn rand_vec(n: usize, rng: &mut Pcg32) -> Vec<f32> {
+        (0..n).map(|_| rng.gen_f32() * 0.2 - 0.1).collect()
+    }
+
+    #[test]
+    fn native_policy_forward_shapes() {
+        let d = dims();
+        let b = Backend::native(d);
+        let mut rng = Pcg32::seeded(2);
+        let params = rand_vec(d.p_policy, &mut rng);
+        let obs = rand_vec(d.b_pol * d.obs_dim, &mut rng);
+        let mask = vec![1.0f32; d.act_dim];
+        let lp = b.policy_forward(&params, &obs, &mask);
+        assert_eq!(lp.len(), d.b_pol * d.act_dim);
+        // Rows normalize.
+        for r in 0..d.b_pol {
+            let total: f32 =
+                lp[r * d.act_dim..(r + 1) * d.act_dim].iter().map(|x| x.exp()).sum();
+            assert!((total - 1.0).abs() < 1e-4, "row {r} sums to {total}");
+        }
+    }
+
+    #[test]
+    fn native_train_reduces_policy_loss() {
+        let d = dims();
+        let b = Backend::native(d);
+        let mut rng = Pcg32::seeded(3);
+        let mut params = rand_vec(d.p_policy, &mut rng);
+        let mut m = vec![0.0f32; d.p_policy];
+        let mut v = vec![0.0f32; d.p_policy];
+        let mut t = 0.0f32;
+        let obs = rand_vec(d.b_train * d.obs_dim, &mut rng);
+        let mask = vec![1.0f32; d.act_dim];
+        let actions: Vec<i32> = (0..d.b_train).map(|_| rng.gen_range(d.act_dim) as i32).collect();
+        // old_logp = uniform-ish log prob.
+        let old_logp = vec![-(d.act_dim as f32).ln(); d.b_train];
+        let adv: Vec<f32> = (0..d.b_train).map(|_| rng.gen_f32() * 2.0 - 1.0).collect();
+        let weight = vec![1.0f32; d.b_train];
+        let mut losses = Vec::new();
+        for _ in 0..6 {
+            let out =
+                b.policy_train(&params, &m, &v, t, &obs, &mask, &actions, &old_logp, &adv, &weight);
+            losses.push(out.loss);
+            params = out.params;
+            m = out.m;
+            v = out.v;
+            t = out.t;
+        }
+        assert!(losses.last().unwrap() < losses.first().unwrap(), "{losses:?}");
+        assert_eq!(t, 6.0);
+    }
+
+    #[test]
+    fn native_gae_matches_ppo_module() {
+        let d = dims();
+        let b = Backend::native(d);
+        let mut rng = Pcg32::seeded(4);
+        let rewards = rand_vec(d.t_gae, &mut rng);
+        let values = rand_vec(d.t_gae, &mut rng);
+        let (a1, r1) = b.gae(&rewards, &values, 0.1, 0.99, 0.95);
+        let (a2, r2) = ppo::gae(&rewards, &values, 0.1, 0.99, 0.95);
+        assert_eq!(a1, a2);
+        assert_eq!(r1, r2);
+    }
+}

@@ -1,0 +1,257 @@
+//! Confidence Sampling (§3.3, Algorithm 2).
+//!
+//! Replaces uniform (AutoTVM) / adaptive (CHAMELEON) sampling: the critic
+//! scores every explored configuration, a softmax over the scores drives
+//! probability-guided selection, a dynamic (median) threshold separates
+//! high-confidence picks, and low-confidence picks are *synthesized away* —
+//! replaced by combining each knob's most frequent setting among the
+//! sampled configurations.
+
+use crate::space::{ConfigSpace, PointConfig};
+use crate::util::rng::Pcg32;
+use crate::util::stats::{median, softmax};
+use std::collections::HashSet;
+
+/// Outcome of one Confidence Sampling pass.
+#[derive(Debug, Clone)]
+pub struct CsOutcome {
+    /// Final configurations to measure (≤ n_configs, distinct).
+    pub selected: Vec<PointConfig>,
+    /// How many of the selected came from synthesis (line 6-7).
+    pub synthesized: usize,
+    /// The dynamic threshold used (median of value predictions).
+    pub threshold: f64,
+}
+
+/// Algorithm 2: `ConfidenceSampling(S_Θ, value_network, N_configs)`.
+///
+/// `values[i]` is the critic's prediction for `candidates[i]`.
+pub fn confidence_sampling(
+    space: &ConfigSpace,
+    candidates: &[PointConfig],
+    values: &[f64],
+    n_configs: usize,
+    rng: &mut Pcg32,
+) -> CsOutcome {
+    assert_eq!(candidates.len(), values.len());
+    if candidates.is_empty() || n_configs == 0 {
+        return CsOutcome { selected: Vec::new(), synthesized: 0, threshold: 0.0 };
+    }
+
+    // Line 2-3: values -> probability distribution. Raw critic outputs
+    // have data-dependent scale (often a fraction of a unit across the
+    // whole candidate set), which would make the softmax near-uniform and
+    // neuter the probability-guided selection; standardize to unit
+    // variance and apply a fixed sharpness so "high-confidence regions"
+    // actually dominate the draw.
+    const SHARPNESS: f64 = 3.0;
+    let mean = crate::util::stats::mean(values);
+    let std = crate::util::stats::std_dev(values).max(1e-9);
+    let scaled: Vec<f64> = values.iter().map(|v| SHARPNESS * (v - mean) / std).collect();
+    let probs = softmax(&scaled);
+
+    // Line 4 (Algorithm 2 lines 9-10): sample N_configs indices from the
+    // distribution *with replacement*; duplicate draws collapse, so the
+    // more concentrated the critic's confidence, the fewer distinct
+    // configurations survive to be measured — this shrinkage is the
+    // measurement reduction Fig. 4 shows.
+    let n_draw = n_configs.min(candidates.len());
+    let mut selected_idx: Vec<usize> = Vec::with_capacity(n_draw);
+    let mut drawn: HashSet<usize> = HashSet::with_capacity(n_draw);
+    for _ in 0..n_draw {
+        let i = rng.gen_weighted(&probs);
+        if drawn.insert(i) {
+            selected_idx.push(i);
+        }
+    }
+
+    // Line 5: dynamic threshold = median of all value predictions.
+    let threshold = median(values);
+
+    // Line 6: split by confidence.
+    let (high, low): (Vec<usize>, Vec<usize>) =
+        selected_idx.iter().partition(|&&i| values[i] > threshold);
+
+    // Line 6-7: synthesize replacements for low-confidence picks by
+    // combining each knob's modal value across the *sampled* set. The
+    // synthesized configurations are variations of one modal point
+    // (single-knob ±1 steps), and duplicates simply collapse — so the
+    // final batch is typically *smaller* than N_configs. That shrinkage is
+    // the measurement reduction Fig. 4 shows: low-confidence picks are
+    // discarded, not replaced one-for-one.
+    let mut out: Vec<PointConfig> = high.iter().map(|&i| candidates[i].clone()).collect();
+    let mut seen: HashSet<usize> = out.iter().map(|p| space.flat_index(p)).collect();
+    let modal = modal_point(space, &selected_idx.iter().map(|&i| &candidates[i]).collect::<Vec<_>>());
+    let mut synthesized = 0usize;
+    let synth_cap = low.len().min((n_configs / 8).max(1));
+    let mut variants: Vec<PointConfig> = vec![modal.clone()];
+    for k in 0..space.num_knobs() {
+        for delta in [-1i64, 1] {
+            let arity = space.knobs[k].len() as i64;
+            let v = (modal.0[k] as i64 + delta).clamp(0, arity - 1) as usize;
+            if v != modal.0[k] {
+                let mut q = modal.clone();
+                q.0[k] = v;
+                variants.push(q);
+            }
+        }
+    }
+    rng.shuffle(&mut variants[1..]);
+    for candidate in variants {
+        if synthesized >= synth_cap {
+            break;
+        }
+        let key = space.flat_index(&candidate);
+        if seen.insert(key) {
+            out.push(candidate);
+            synthesized += 1;
+        }
+    }
+
+    CsOutcome { selected: out, synthesized, threshold }
+}
+
+/// Per-knob mode across a set of points.
+fn modal_point(space: &ConfigSpace, points: &[&PointConfig]) -> PointConfig {
+    assert!(!points.is_empty());
+    let mut out = Vec::with_capacity(space.num_knobs());
+    for k in 0..space.num_knobs() {
+        let arity = space.knobs[k].len();
+        let mut counts = vec![0usize; arity];
+        for p in points {
+            counts[p.0[k]] += 1;
+        }
+        let best = counts
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &c)| c)
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        out.push(best);
+    }
+    PointConfig(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Conv2dTask;
+
+    fn space() -> ConfigSpace {
+        ConfigSpace::for_task(&Conv2dTask::new(1, 64, 56, 56, 64, 3, 3, 1, 1), true)
+    }
+
+    fn random_candidates(s: &ConfigSpace, n: usize, seed: u64) -> Vec<PointConfig> {
+        let mut rng = Pcg32::seeded(seed);
+        let mut seen = HashSet::new();
+        let mut out = Vec::new();
+        while out.len() < n {
+            let p = s.random_point(&mut rng);
+            if seen.insert(s.flat_index(&p)) {
+                out.push(p);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn selects_at_most_n_distinct() {
+        let s = space();
+        let cands = random_candidates(&s, 200, 1);
+        let values: Vec<f64> = (0..200).map(|i| (i % 17) as f64 / 17.0).collect();
+        let mut rng = Pcg32::seeded(2);
+        let out = confidence_sampling(&s, &cands, &values, 64, &mut rng);
+        assert!(out.selected.len() <= 64);
+        let keys: HashSet<usize> = out.selected.iter().map(|p| s.flat_index(p)).collect();
+        assert_eq!(keys.len(), out.selected.len());
+    }
+
+    #[test]
+    fn prefers_high_value_candidates() {
+        let s = space();
+        let cands = random_candidates(&s, 300, 3);
+        // First 30 candidates have much higher value.
+        let values: Vec<f64> =
+            (0..300).map(|i| if i < 30 { 10.0 } else { 0.0 }).collect();
+        let high_keys: HashSet<usize> =
+            cands[..30].iter().map(|p| s.flat_index(p)).collect();
+        let mut rng = Pcg32::seeded(4);
+        let out = confidence_sampling(&s, &cands, &values, 30, &mut rng);
+        let hits = out
+            .selected
+            .iter()
+            .filter(|p| high_keys.contains(&s.flat_index(p)))
+            .count();
+        assert!(
+            hits >= 20,
+            "only {hits}/30 selections were high-value candidates"
+        );
+    }
+
+    #[test]
+    fn low_confidence_replaced_by_synthesis() {
+        // An uninformative critic (all values equal): nothing clears the
+        // median threshold, so the output comes purely from synthesis —
+        // bounded by the synthesis cap.
+        let s = space();
+        let cands = random_candidates(&s, 100, 5);
+        let values = vec![0.5f64; 100];
+        let mut rng = Pcg32::seeded(6);
+        let out = confidence_sampling(&s, &cands, &values, 50, &mut rng);
+        assert!(out.synthesized > 0, "expected synthesized configs");
+        assert_eq!(out.selected.len(), out.synthesized);
+        assert!(out.synthesized <= 50 / 8 + 1);
+        assert!((out.threshold - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn with_replacement_draws_collapse() {
+        // Concentrated values -> far fewer distinct selections than asked.
+        let s = space();
+        let cands = random_candidates(&s, 300, 11);
+        let values: Vec<f64> =
+            (0..300).map(|i| if i < 20 { 5.0 } else { 0.0 }).collect();
+        let mut rng = Pcg32::seeded(12);
+        let out = confidence_sampling(&s, &cands, &values, 64, &mut rng);
+        assert!(
+            out.selected.len() < 40,
+            "peaked confidence should collapse the batch, got {}",
+            out.selected.len()
+        );
+    }
+
+    #[test]
+    fn empty_inputs_safe() {
+        let s = space();
+        let mut rng = Pcg32::seeded(7);
+        let out = confidence_sampling(&s, &[], &[], 64, &mut rng);
+        assert!(out.selected.is_empty());
+    }
+
+    #[test]
+    fn modal_point_is_knobwise_mode() {
+        let s = space();
+        let mut a = s.default_point();
+        let b = s.default_point();
+        let mut c = s.default_point();
+        a.0[0] = 1;
+        c.0[1] = 2;
+        // knob0: [1, d, d] -> mode = default; knob1: [d, d, 2] -> default.
+        let m = modal_point(&s, &[&a, &b, &c]);
+        assert_eq!(m.0[0], s.default_point().0[0]);
+        assert_eq!(m.0[1], s.default_point().0[1]);
+    }
+
+    #[test]
+    fn reduces_measurements_vs_candidate_count() {
+        // The whole point of CS (Fig 4): far fewer configs measured than
+        // explored.
+        let s = space();
+        let cands = random_candidates(&s, 500, 8);
+        let values: Vec<f64> = (0..500).map(|i| ((i * 37) % 100) as f64).collect();
+        let mut rng = Pcg32::seeded(9);
+        let out = confidence_sampling(&s, &cands, &values, 64, &mut rng);
+        assert!(out.selected.len() <= 64);
+        assert!(out.selected.len() >= 16, "CS should still fill most of the batch");
+    }
+}

@@ -1,0 +1,403 @@
+//! The co-optimization environment the three agents act in: observation
+//! and global-state encodings, per-agent action spaces (knob steps), and
+//! the constrained reward (Eqs. 4–5).
+
+use crate::codegen::MeasureResult;
+use crate::costmodel::featurize;
+use crate::runtime::ModelDims;
+use crate::space::{ConfigSpace, KnobOwner, PointConfig};
+use crate::vta::area::{default_area_budget_mm2, total_area_mm2};
+use crate::vta::config::{ACC_BYTES, INP_BYTES, WGT_BYTES};
+
+/// Agent roles (Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Role {
+    Hardware,
+    Scheduling,
+    Mapping,
+}
+
+pub const ROLES: [Role; 3] = [Role::Hardware, Role::Scheduling, Role::Mapping];
+
+impl Role {
+    pub fn owner(self) -> KnobOwner {
+        match self {
+            Role::Hardware => KnobOwner::Hardware,
+            Role::Scheduling => KnobOwner::Scheduling,
+            Role::Mapping => KnobOwner::Mapping,
+        }
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            Role::Hardware => 0,
+            Role::Scheduling => 1,
+            Role::Mapping => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Role::Hardware => "hardware",
+            Role::Scheduling => "scheduling",
+            Role::Mapping => "mapping",
+        }
+    }
+
+    /// Number of knobs this agent owns.
+    pub fn num_knobs(self) -> usize {
+        match self {
+            Role::Hardware => 3,
+            Role::Scheduling | Role::Mapping => 2,
+        }
+    }
+
+    /// Joint action count: 3^knobs directions ({dec, stay, inc} per knob).
+    pub fn num_actions(self) -> usize {
+        3usize.pow(self.num_knobs() as u32)
+    }
+
+    /// Action mask over the padded ACT_DIM space.
+    pub fn action_mask(self, act_dim: usize) -> Vec<f32> {
+        let n = self.num_actions();
+        (0..act_dim).map(|a| if a < n { 1.0 } else { 0.0 }).collect()
+    }
+
+    /// Decode a joint action into per-knob deltas (-1, 0, +1), one per
+    /// owned knob, base-3 little-endian.
+    pub fn decode_action(self, action: usize) -> Vec<i32> {
+        let mut a = action;
+        (0..self.num_knobs())
+            .map(|_| {
+                let digit = (a % 3) as i32;
+                a /= 3;
+                digit - 1
+            })
+            .collect()
+    }
+}
+
+/// Environment dynamics-free helper: applies agent actions to points and
+/// encodes observations/states.
+pub struct CoOptEnv<'a> {
+    pub space: &'a ConfigSpace,
+    pub dims: ModelDims,
+    /// λ of Eq. 4.
+    pub penalty_lambda: f64,
+    /// area_max of Eq. 4 (mm²).
+    pub area_max_mm2: f64,
+}
+
+impl<'a> CoOptEnv<'a> {
+    pub fn new(space: &'a ConfigSpace, dims: ModelDims) -> CoOptEnv<'a> {
+        CoOptEnv {
+            space,
+            dims,
+            penalty_lambda: 1.0,
+            area_max_mm2: default_area_budget_mm2(),
+        }
+    }
+
+    /// Apply one agent's joint action to a point (clamped knob steps).
+    /// Frozen hardware knobs are never moved.
+    pub fn apply_action(&self, point: &PointConfig, role: Role, action: usize) -> PointConfig {
+        let deltas = role.decode_action(action);
+        let knob_idx = self.space.agent_knobs(role.owner());
+        let mut q = point.clone();
+        for (i, &k) in knob_idx.iter().enumerate() {
+            if !self.space.hardware_tunable && role == Role::Hardware {
+                continue;
+            }
+            let arity = self.space.knobs[k].len() as i64;
+            let cur = q.0[k] as i64;
+            let next = (cur + deltas[i] as i64).clamp(0, arity - 1);
+            q.0[k] = next as usize;
+        }
+        q
+    }
+
+    /// Per-agent observation (obs_dim floats): normalized knob vector,
+    /// agent one-hot, episode dynamics, cheap config descriptors.
+    pub fn observe(
+        &self,
+        point: &PointConfig,
+        role: Role,
+        last_reward: f32,
+        best_fitness_norm: f32,
+        step_frac: f32,
+    ) -> Vec<f32> {
+        let mut obs = Vec::with_capacity(self.dims.obs_dim);
+        for f in self.space.normalized(point) {
+            obs.push(f as f32); // 7 knobs
+        }
+        let mut one_hot = [0.0f32; 3];
+        one_hot[role.index()] = 1.0;
+        obs.extend_from_slice(&one_hot); // +3 = 10
+        obs.push(last_reward.clamp(-4.0, 4.0));
+        obs.push(best_fitness_norm.clamp(0.0, 4.0));
+        obs.push(step_frac);
+        let (hw, _) = self.space.decode(point);
+        obs.push((total_area_mm2(&hw) / self.area_max_mm2) as f32);
+        obs.push(self.memory_overflow_ratio(point) as f32);
+        obs.resize(self.dims.obs_dim, 0.0);
+        obs
+    }
+
+    /// Global state for the centralized critic: knobs + task descriptors +
+    /// episode dynamics (gstate_dim floats).
+    pub fn global_state(
+        &self,
+        point: &PointConfig,
+        last_reward: f32,
+        best_fitness_norm: f32,
+        step_frac: f32,
+    ) -> Vec<f32> {
+        let t = &self.space.task;
+        let mut s = Vec::with_capacity(self.dims.gstate_dim);
+        for f in self.space.normalized(point) {
+            s.push(f as f32); // 7
+        }
+        let lg = |v: usize| (v.max(1) as f32).log2() / 10.0;
+        s.push(lg(t.ci));
+        s.push(lg(t.co));
+        s.push(lg(t.oh()));
+        s.push(lg(t.ow()));
+        s.push(t.kh as f32 / 11.0);
+        s.push(t.stride as f32 / 4.0);
+        s.push((t.arithmetic_intensity().ln() / 8.0) as f32); // 14
+        let (hw, _) = self.space.decode(point);
+        s.push((total_area_mm2(&hw) / self.area_max_mm2) as f32);
+        s.push(self.memory_overflow_ratio(point) as f32);
+        s.push(last_reward.clamp(-4.0, 4.0));
+        s.push(best_fitness_norm.clamp(0.0, 4.0));
+        s.push(step_frac); // 19
+        s.resize(self.dims.gstate_dim, 0.0);
+        s
+    }
+
+    /// memory(Θ) overflow as a ratio: how far the tile working sets exceed
+    /// their scratchpad partitions (0 when everything fits).
+    pub fn memory_overflow_ratio(&self, point: &PointConfig) -> f64 {
+        memory_overflow_ratio(self.space, point)
+    }
+
+    /// Constraint penalty P(Θ) of Eq. 4 (area in units of the budget,
+    /// memory as overflow ratio).
+    pub fn penalty(&self, point: &PointConfig) -> f64 {
+        let (hw, _) = self.space.decode(point);
+        let area_ratio = total_area_mm2(&hw) / self.area_max_mm2;
+        let area_term = (area_ratio - 1.0).max(0.0);
+        let mem_term = self.memory_overflow_ratio(point);
+        self.penalty_lambda * (area_term + mem_term)
+    }
+
+    /// Constrained step reward (Eq. 5) from a surrogate fitness estimate,
+    /// normalized by the best measured fitness so far.
+    pub fn reward(&self, point: &PointConfig, surrogate_fitness: f64, best_fitness: f64) -> f32 {
+        let norm = if best_fitness > 0.0 { surrogate_fitness / best_fitness } else { 0.0 };
+        (norm - self.penalty(point)) as f32
+    }
+
+    /// Reward from an actual measurement (Eq. 5 with real runtime).
+    pub fn reward_measured(
+        &self,
+        point: &PointConfig,
+        m: &MeasureResult,
+        best_fitness: f64,
+    ) -> f32 {
+        self.reward(point, m.fitness(), best_fitness)
+    }
+
+    /// Cheap surrogate features for the GBT model.
+    pub fn features(&self, point: &PointConfig) -> Vec<f64> {
+        featurize(self.space, point)
+    }
+}
+
+/// memory(Θ) overflow ratio of a point: 0 when every tile working set fits
+/// its scratchpad partition. Free-standing so baselines can pre-filter
+/// obviously-invalid configurations without paying a measurement.
+pub fn memory_overflow_ratio(space: &ConfigSpace, point: &PointConfig) -> f64 {
+    let (hw, sw) = space.decode(point);
+    let t = &space.task;
+    let in_h = (sw.tile_h.saturating_sub(1)) * t.stride + t.kh;
+    let in_w = (sw.tile_w.saturating_sub(1)) * t.stride + t.kw;
+    let vt = (sw.h_threading * sw.oc_threading).clamp(1, 2);
+    let inp = (hw.batch * in_h * in_w * hw.block_in * INP_BYTES) as f64
+        / (hw.inp_buf_bytes() / vt) as f64;
+    let wgt = (hw.block_out * hw.block_in * t.kh * t.kw * WGT_BYTES) as f64
+        / (hw.wgt_buf_bytes() / vt) as f64;
+    let acc = (hw.batch * sw.tile_h * sw.tile_w * hw.block_out * ACC_BYTES) as f64
+        / (hw.acc_buf_bytes() / vt) as f64;
+    (inp - 1.0).max(0.0) + (wgt - 1.0).max(0.0) + (acc - 1.0).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use crate::workload::Conv2dTask;
+
+    fn space() -> ConfigSpace {
+        ConfigSpace::for_task(&Conv2dTask::new(1, 64, 56, 56, 64, 3, 3, 1, 1), true)
+    }
+
+    #[test]
+    fn roles_cover_all_knobs() {
+        let s = space();
+        let total: usize = ROLES.iter().map(|r| s.agent_knobs(r.owner()).len()).sum();
+        assert_eq!(total, s.num_knobs());
+        assert_eq!(Role::Hardware.num_actions(), 27);
+        assert_eq!(Role::Scheduling.num_actions(), 9);
+        assert_eq!(Role::Mapping.num_actions(), 9);
+    }
+
+    #[test]
+    fn action_decode_covers_all_deltas() {
+        let mut seen = std::collections::HashSet::new();
+        for a in 0..Role::Hardware.num_actions() {
+            let d = Role::Hardware.decode_action(a);
+            assert_eq!(d.len(), 3);
+            assert!(d.iter().all(|x| (-1..=1).contains(x)));
+            seen.insert(d);
+        }
+        assert_eq!(seen.len(), 27);
+    }
+
+    #[test]
+    fn stay_action_is_identity() {
+        let s = space();
+        let d = ModelDims::default();
+        let env = CoOptEnv::new(&s, d);
+        let p = s.default_point();
+        // Joint action with all digits = 1 (stay): index 1 + 3 + 9 = 13.
+        let q = env.apply_action(&p, Role::Hardware, 13);
+        assert_eq!(p, q);
+        let q = env.apply_action(&p, Role::Mapping, 4); // 1 + 3
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn actions_only_touch_owned_knobs() {
+        let s = space();
+        let env = CoOptEnv::new(&s, ModelDims::default());
+        let p = s.default_point();
+        for role in ROLES {
+            let owned = s.agent_knobs(role.owner());
+            for a in 0..role.num_actions() {
+                let q = env.apply_action(&p, role, a);
+                for k in 0..s.num_knobs() {
+                    if !owned.contains(&k) {
+                        assert_eq!(p.0[k], q.0[k], "{role:?} action {a} moved knob {k}");
+                    }
+                }
+                assert!(s.contains(&q));
+            }
+        }
+    }
+
+    #[test]
+    fn clamping_at_bounds() {
+        let s = space();
+        let env = CoOptEnv::new(&s, ModelDims::default());
+        let mut p = s.default_point();
+        for k in s.agent_knobs(KnobOwner::Mapping) {
+            p.0[k] = 0;
+        }
+        // All-decrement action (digits 0,0): index 0.
+        let q = env.apply_action(&p, Role::Mapping, 0);
+        for k in s.agent_knobs(KnobOwner::Mapping) {
+            assert_eq!(q.0[k], 0);
+        }
+    }
+
+    #[test]
+    fn frozen_hw_ignores_hw_agent() {
+        let t = Conv2dTask::new(1, 64, 56, 56, 64, 3, 3, 1, 1);
+        let s = ConfigSpace::for_task(&t, false);
+        let env = CoOptEnv::new(&s, ModelDims::default());
+        let p = s.default_point();
+        for a in 0..27 {
+            assert_eq!(env.apply_action(&p, Role::Hardware, a), p);
+        }
+    }
+
+    #[test]
+    fn obs_and_state_have_contract_dims() {
+        let s = space();
+        let d = ModelDims::default();
+        let env = CoOptEnv::new(&s, d);
+        let p = s.default_point();
+        for role in ROLES {
+            let obs = env.observe(&p, role, 0.5, 1.0, 0.3);
+            assert_eq!(obs.len(), d.obs_dim);
+            assert!(obs.iter().all(|x| x.is_finite()));
+        }
+        let gs = env.global_state(&p, 0.5, 1.0, 0.3);
+        assert_eq!(gs.len(), d.gstate_dim);
+        assert!(gs.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn observations_distinguish_roles() {
+        let s = space();
+        let env = CoOptEnv::new(&s, ModelDims::default());
+        let p = s.default_point();
+        let o1 = env.observe(&p, Role::Hardware, 0.0, 0.0, 0.0);
+        let o2 = env.observe(&p, Role::Mapping, 0.0, 0.0, 0.0);
+        assert_ne!(o1, o2);
+    }
+
+    #[test]
+    fn penalty_zero_for_default_positive_for_huge() {
+        let s = space();
+        let env = CoOptEnv::new(&s, ModelDims::default());
+        assert_eq!(env.penalty(&s.default_point()), 0.0);
+        // Max out every hardware knob and tile: should violate something.
+        let mut p = s.default_point();
+        for (i, k) in s.knobs.iter().enumerate() {
+            p.0[i] = k.len() - 1;
+        }
+        assert!(env.penalty(&p) > 0.0, "max config should be penalized");
+    }
+
+    #[test]
+    fn reward_decreases_with_penalty() {
+        let s = space();
+        let env = CoOptEnv::new(&s, ModelDims::default());
+        let good = s.default_point();
+        let mut bad = s.default_point();
+        for (i, k) in s.knobs.iter().enumerate() {
+            bad.0[i] = k.len() - 1;
+        }
+        let r_good = env.reward(&good, 1.0, 1.0);
+        let r_bad = env.reward(&bad, 1.0, 1.0);
+        assert!(r_good > r_bad);
+    }
+
+    #[test]
+    fn masks_match_action_counts() {
+        let d = ModelDims::default();
+        for role in ROLES {
+            let m = role.action_mask(d.act_dim);
+            assert_eq!(m.len(), d.act_dim);
+            let legal: usize = m.iter().filter(|&&x| x > 0.0).count();
+            assert_eq!(legal, role.num_actions());
+        }
+    }
+
+    #[test]
+    fn memory_overflow_detects_big_tiles() {
+        let s = space();
+        let env = CoOptEnv::new(&s, ModelDims::default());
+        let mut rng = Pcg32::seeded(10);
+        let mut any_overflow = false;
+        for _ in 0..200 {
+            let p = s.random_point(&mut rng);
+            if env.memory_overflow_ratio(&p) > 0.0 {
+                any_overflow = true;
+            }
+        }
+        assert!(any_overflow);
+    }
+}

@@ -1,0 +1,388 @@
+//! MAPPO state and updates (CTDE): three decentralized actors, one
+//! centralized critic, trained with PPO-clip (Eqs. 1–3) through the
+//! [`Backend`] (AOT/XLA or native).
+
+use super::backend::Backend;
+use super::env::{Role, ROLES};
+use crate::ml::Mlp;
+use crate::runtime::ModelDims;
+use crate::util::rng::Pcg32;
+
+/// One actor: policy parameters + Adam state + action mask.
+#[derive(Debug, Clone)]
+pub struct Actor {
+    pub role: Role,
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: f32,
+    pub mask: Vec<f32>,
+}
+
+/// Centralized critic: value parameters + Adam state.
+#[derive(Debug, Clone)]
+pub struct Critic {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: f32,
+}
+
+/// Full MAPPO learner state.
+pub struct Mappo {
+    pub dims: ModelDims,
+    pub actors: Vec<Actor>,
+    pub critic: Critic,
+    pub gamma: f32,
+    pub lam: f32,
+}
+
+/// One agent's view of one transition.
+#[derive(Debug, Clone)]
+pub struct AgentTransition {
+    pub obs: Vec<f32>,
+    pub action: usize,
+    pub logp: f32,
+}
+
+/// One environment transition: per-agent records + shared reward/value.
+#[derive(Debug, Clone)]
+pub struct Transition {
+    pub per_agent: Vec<AgentTransition>,
+    pub gstate: Vec<f32>,
+    pub reward: f32,
+    pub value: f32,
+}
+
+/// Training statistics of one update round.
+#[derive(Debug, Clone, Default)]
+pub struct UpdateStats {
+    pub policy_loss: f32,
+    pub value_loss: f32,
+    pub entropy: f32,
+    pub clip_frac: f32,
+    pub minibatches: usize,
+}
+
+impl Mappo {
+    /// Fresh learner with randomly initialized networks.
+    pub fn new(dims: ModelDims, gamma: f32, lam: f32, rng: &mut Pcg32) -> Mappo {
+        let actors = ROLES
+            .iter()
+            .map(|&role| {
+                let mlp = Mlp::policy(dims.obs_dim, dims.act_dim, rng);
+                Actor {
+                    role,
+                    params: mlp.flatten(),
+                    m: vec![0.0; dims.p_policy],
+                    v: vec![0.0; dims.p_policy],
+                    t: 0.0,
+                    mask: role.action_mask(dims.act_dim),
+                }
+            })
+            .collect();
+        let vmlp = Mlp::value(dims.gstate_dim, rng);
+        let critic = Critic {
+            params: vmlp.flatten(),
+            m: vec![0.0; dims.p_value],
+            v: vec![0.0; dims.p_value],
+            t: 0.0,
+        };
+        Mappo { dims, actors, critic, gamma, lam }
+    }
+
+    pub fn actor(&self, role: Role) -> &Actor {
+        &self.actors[role.index()]
+    }
+
+    /// Batched masked log-probs for up to `b_pol` observations of one agent.
+    /// `obs_rows` shorter than b_pol are zero-padded; only the first
+    /// `obs_rows.len()` output rows are returned.
+    pub fn policy_logp(
+        &self,
+        backend: &Backend,
+        role: Role,
+        obs_rows: &[Vec<f32>],
+    ) -> Vec<Vec<f32>> {
+        let d = self.dims;
+        assert!(obs_rows.len() <= d.b_pol, "population exceeds b_pol");
+        let mut flat = vec![0.0f32; d.b_pol * d.obs_dim];
+        for (r, row) in obs_rows.iter().enumerate() {
+            flat[r * d.obs_dim..(r + 1) * d.obs_dim].copy_from_slice(row);
+        }
+        let actor = self.actor(role);
+        let out = backend.policy_forward(&actor.params, &flat, &actor.mask);
+        obs_rows
+            .iter()
+            .enumerate()
+            .map(|(r, _)| out[r * d.act_dim..(r + 1) * d.act_dim].to_vec())
+            .collect()
+    }
+
+    /// Batched critic values for up to `b_pol` global states.
+    pub fn values(&self, backend: &Backend, states: &[Vec<f32>]) -> Vec<f32> {
+        let d = self.dims;
+        assert!(states.len() <= d.b_pol);
+        let mut flat = vec![0.0f32; d.b_pol * d.gstate_dim];
+        for (r, row) in states.iter().enumerate() {
+            flat[r * d.gstate_dim..(r + 1) * d.gstate_dim].copy_from_slice(row);
+        }
+        let out = backend.value_forward(&self.critic.params, &flat);
+        out[..states.len()].to_vec()
+    }
+
+    /// GAE over one trajectory (padded to the artifact horizon).
+    pub fn gae(
+        &self,
+        backend: &Backend,
+        rewards: &[f32],
+        values: &[f32],
+        bootstrap: f32,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let d = self.dims;
+        let n = rewards.len();
+        assert!(n <= d.t_gae, "trajectory longer than t_gae");
+        let mut r_pad = rewards.to_vec();
+        let mut v_pad = values.to_vec();
+        r_pad.resize(d.t_gae, 0.0);
+        v_pad.resize(d.t_gae, 0.0);
+        // Padding correctness: set v[n..] = 0 and r[n..] = 0 with bootstrap
+        // applied at the true horizon by folding it into r_pad[n-1].
+        if n > 0 && n < d.t_gae {
+            r_pad[n - 1] += self.gamma * bootstrap;
+        }
+        let boot = if n == d.t_gae { bootstrap } else { 0.0 };
+        let (adv, ret) = backend.gae(&r_pad, &v_pad, boot, self.gamma, self.lam);
+        (adv[..n].to_vec(), ret[..n].to_vec())
+    }
+
+    /// One PPO update over collected trajectories: shuffled minibatches of
+    /// b_train for each actor and the critic, `epochs` passes.
+    pub fn update(
+        &mut self,
+        backend: &Backend,
+        trajectories: &[Vec<Transition>],
+        epochs: usize,
+        rng: &mut Pcg32,
+    ) -> UpdateStats {
+        let d = self.dims;
+        // Flatten transitions and compute advantages per trajectory.
+        let mut obs: Vec<Vec<Vec<f32>>> = vec![Vec::new(); 3];
+        let mut acts: Vec<Vec<i32>> = vec![Vec::new(); 3];
+        let mut logps: Vec<Vec<f32>> = vec![Vec::new(); 3];
+        let mut advs: Vec<f32> = Vec::new();
+        let mut rets: Vec<f32> = Vec::new();
+        let mut gstates: Vec<Vec<f32>> = Vec::new();
+
+        for traj in trajectories {
+            if traj.is_empty() {
+                continue;
+            }
+            let rewards: Vec<f32> = traj.iter().map(|t| t.reward).collect();
+            let values: Vec<f32> = traj.iter().map(|t| t.value).collect();
+            let (adv, ret) = self.gae(backend, &rewards, &values, 0.0);
+            for (i, tr) in traj.iter().enumerate() {
+                for role in ROLES {
+                    let a = &tr.per_agent[role.index()];
+                    obs[role.index()].push(a.obs.clone());
+                    acts[role.index()].push(a.action as i32);
+                    logps[role.index()].push(a.logp);
+                }
+                advs.push(adv[i]);
+                rets.push(ret[i]);
+                gstates.push(tr.gstate.clone());
+            }
+        }
+        let n = advs.len();
+        if n == 0 {
+            return UpdateStats::default();
+        }
+        let mut advs_n = advs.clone();
+        crate::ml::ppo::normalize_advantages(&mut advs_n);
+
+        let mut stats = UpdateStats::default();
+        let mut order: Vec<usize> = (0..n).collect();
+        for _ in 0..epochs {
+            rng.shuffle(&mut order);
+            for chunk in order.chunks(d.b_train) {
+                // Policy updates per agent.
+                for role in ROLES {
+                    let ai = role.index();
+                    let mut obs_flat = vec![0.0f32; d.b_train * d.obs_dim];
+                    let mut a_pad = vec![0i32; d.b_train];
+                    let mut lp_pad = vec![0.0f32; d.b_train];
+                    let mut adv_pad = vec![0.0f32; d.b_train];
+                    let mut w = vec![0.0f32; d.b_train];
+                    for (r, &i) in chunk.iter().enumerate() {
+                        obs_flat[r * d.obs_dim..(r + 1) * d.obs_dim]
+                            .copy_from_slice(&obs[ai][i]);
+                        a_pad[r] = acts[ai][i];
+                        lp_pad[r] = logps[ai][i];
+                        adv_pad[r] = advs_n[i];
+                        w[r] = 1.0;
+                    }
+                    let actor = &mut self.actors[ai];
+                    let out = backend.policy_train(
+                        &actor.params,
+                        &actor.m,
+                        &actor.v,
+                        actor.t,
+                        &obs_flat,
+                        &actor.mask,
+                        &a_pad,
+                        &lp_pad,
+                        &adv_pad,
+                        &w,
+                    );
+                    actor.params = out.params;
+                    actor.m = out.m;
+                    actor.v = out.v;
+                    actor.t = out.t;
+                    stats.policy_loss += out.loss;
+                    stats.entropy += out.entropy;
+                    stats.clip_frac += out.clip_frac;
+                }
+                // Critic update.
+                let mut st_flat = vec![0.0f32; d.b_train * d.gstate_dim];
+                let mut ret_pad = vec![0.0f32; d.b_train];
+                let mut w = vec![0.0f32; d.b_train];
+                for (r, &i) in chunk.iter().enumerate() {
+                    st_flat[r * d.gstate_dim..(r + 1) * d.gstate_dim]
+                        .copy_from_slice(&gstates[i]);
+                    ret_pad[r] = rets[i];
+                    w[r] = 1.0;
+                }
+                let out = backend.value_train(
+                    &self.critic.params,
+                    &self.critic.m,
+                    &self.critic.v,
+                    self.critic.t,
+                    &st_flat,
+                    &ret_pad,
+                    &w,
+                );
+                self.critic.params = out.params;
+                self.critic.m = out.m;
+                self.critic.v = out.v;
+                self.critic.t = out.t;
+                stats.value_loss += out.loss;
+                stats.minibatches += 1;
+            }
+        }
+        let mb = stats.minibatches.max(1) as f32;
+        stats.policy_loss /= mb * 3.0;
+        stats.entropy /= mb * 3.0;
+        stats.clip_frac /= mb * 3.0;
+        stats.value_loss /= mb;
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims::default()
+    }
+
+    fn mappo_and_backend() -> (Mappo, Backend) {
+        let mut rng = Pcg32::seeded(5);
+        let d = dims();
+        (Mappo::new(d, 0.99, 0.95, &mut rng), Backend::native(d))
+    }
+
+    #[test]
+    fn three_actors_one_critic() {
+        let (m, _) = mappo_and_backend();
+        assert_eq!(m.actors.len(), 3);
+        assert_eq!(m.actors[0].params.len(), dims().p_policy);
+        assert_eq!(m.critic.params.len(), dims().p_value);
+        // Masks differ between hardware (27) and software (9) agents.
+        let hw_legal: usize = m.actor(Role::Hardware).mask.iter().filter(|&&x| x > 0.0).count();
+        let sw_legal: usize = m.actor(Role::Mapping).mask.iter().filter(|&&x| x > 0.0).count();
+        assert_eq!((hw_legal, sw_legal), (27, 9));
+    }
+
+    #[test]
+    fn policy_logp_respects_masks() {
+        let (m, b) = mappo_and_backend();
+        let obs = vec![vec![0.1f32; dims().obs_dim]; 5];
+        let rows = m.policy_logp(&b, Role::Scheduling, &obs);
+        assert_eq!(rows.len(), 5);
+        for row in rows {
+            assert_eq!(row.len(), dims().act_dim);
+            for (j, &lp) in row.iter().enumerate() {
+                if j >= 9 {
+                    assert!(lp < -1e20, "masked action {j} has logp {lp}");
+                }
+            }
+            let total: f32 = row.iter().take(9).map(|x| x.exp()).sum();
+            assert!((total - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gae_padding_preserves_short_trajectories() {
+        let (m, b) = mappo_and_backend();
+        let rewards = vec![1.0f32, 0.5, -0.2, 2.0];
+        let values = vec![0.1f32, 0.2, 0.3, 0.4];
+        let (adv, ret) = m.gae(&b, &rewards, &values, 0.7);
+        // Native reference on the unpadded trajectory.
+        let (adv_ref, ret_ref) = crate::ml::ppo::gae(&rewards, &values, 0.7, 0.99, 0.95);
+        assert_eq!(adv.len(), 4);
+        for i in 0..4 {
+            assert!(
+                (adv[i] - adv_ref[i]).abs() < 1e-4,
+                "adv[{i}] {} vs {}",
+                adv[i],
+                adv_ref[i]
+            );
+            assert!((ret[i] - ret_ref[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn update_runs_and_changes_params() {
+        let (mut m, b) = mappo_and_backend();
+        let mut rng = Pcg32::seeded(9);
+        let d = dims();
+        // Build a synthetic trajectory batch.
+        let mut trajs = Vec::new();
+        for _ in 0..4 {
+            let mut traj = Vec::new();
+            for s in 0..10 {
+                let per_agent = ROLES
+                    .iter()
+                    .map(|&role| AgentTransition {
+                        obs: (0..d.obs_dim).map(|_| rng.gen_f32()).collect(),
+                        action: rng.gen_range(role.num_actions()),
+                        logp: -1.5,
+                    })
+                    .collect();
+                traj.push(Transition {
+                    per_agent,
+                    gstate: (0..d.gstate_dim).map(|_| rng.gen_f32()).collect(),
+                    reward: if s == 9 { 1.0 } else { 0.0 },
+                    value: 0.0,
+                });
+            }
+            trajs.push(traj);
+        }
+        let before = m.actors[0].params.clone();
+        let critic_before = m.critic.params.clone();
+        let stats = m.update(&b, &trajs, 2, &mut rng);
+        assert!(stats.minibatches > 0);
+        assert_ne!(m.actors[0].params, before);
+        assert_ne!(m.critic.params, critic_before);
+        assert!(m.actors[0].t > 0.0);
+    }
+
+    #[test]
+    fn empty_update_is_noop() {
+        let (mut m, b) = mappo_and_backend();
+        let mut rng = Pcg32::seeded(2);
+        let stats = m.update(&b, &[], 2, &mut rng);
+        assert_eq!(stats.minibatches, 0);
+    }
+}

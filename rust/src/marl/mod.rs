@@ -1,0 +1,21 @@
+//! The paper's core contribution: MAPPO-based CTDE multi-agent exploration
+//! (Algorithm 1) over the hardware/software co-design space, plus the
+//! Confidence Sampling measurement filter (Algorithm 2).
+//!
+//! Three actors (hardware / scheduling / mapping, Table 1) share a
+//! centralized critic during training and act independently during
+//! execution. All network compute flows through [`backend::Backend`]:
+//! AOT-compiled HLO on PJRT in production, native mirror in tests.
+
+pub mod backend;
+pub mod confidence;
+pub mod env;
+pub mod exploration;
+pub mod mappo;
+
+pub use backend::Backend;
+pub use confidence::{confidence_sampling, CsOutcome};
+pub use env::{CoOptEnv, Role, ROLES};
+pub use exploration::{ExploreParams, MarlExplorer, Visited};
+pub use mappo::Mappo;
+pub mod strategy;

@@ -1,0 +1,343 @@
+//! ARCO as a [`Strategy`]: MARL exploration (Algorithm 1) + Confidence
+//! Sampling (Algorithm 2) + the GBT surrogate, wired into the shared
+//! tuning loop.
+
+use super::backend::Backend;
+use super::confidence::confidence_sampling;
+use super::env::CoOptEnv;
+use super::exploration::{ExploreParams, MarlExplorer, Visited};
+use super::mappo::Mappo;
+use crate::codegen::MeasureResult;
+use crate::costmodel::{featurize, CostModel, Gbt, GbtParams};
+use crate::space::{ConfigSpace, PointConfig};
+use crate::tuner::Strategy;
+use crate::util::rng::Pcg32;
+use std::collections::HashSet;
+
+/// ARCO hyper-parameters (Table 4).
+#[derive(Debug, Clone, Copy)]
+pub struct ArcoParams {
+    pub explore: ExploreParams,
+    pub gbt: GbtParams,
+    /// γ / λ of the GAE (Eq. 2).
+    pub gamma: f32,
+    pub lam: f32,
+    /// Disable Confidence Sampling (ablation; Fig. 4 "before").
+    pub use_cs: bool,
+}
+
+impl Default for ArcoParams {
+    fn default() -> Self {
+        ArcoParams {
+            explore: ExploreParams::default(),
+            gbt: GbtParams::default(),
+            gamma: 0.99,
+            lam: 0.95,
+            use_cs: true,
+        }
+    }
+}
+
+impl ArcoParams {
+    pub fn quick() -> ArcoParams {
+        ArcoParams {
+            explore: ExploreParams { episodes: 3, steps: 10, population: 16, ppo_epochs: 1 },
+            ..Default::default()
+        }
+    }
+}
+
+/// The full ARCO strategy.
+pub struct Arco {
+    space: ConfigSpace,
+    params: ArcoParams,
+    backend: Backend,
+    explorer: MarlExplorer,
+    model: Gbt,
+    rng: Pcg32,
+    xs: Vec<Vec<f64>>,
+    ys: Vec<f64>,
+    seen: HashSet<usize>,
+    /// Best measured points (seeds for the next exploration round).
+    elite: Vec<(PointConfig, f64)>,
+    last_cs_synth: usize,
+}
+
+impl Arco {
+    /// Build with an explicit backend (XLA in production, native in tests).
+    pub fn with_backend(
+        space: ConfigSpace,
+        params: ArcoParams,
+        backend: Backend,
+        seed: u64,
+    ) -> Arco {
+        let dims = backend.dims();
+        let mut rng = Pcg32::seeded(seed);
+        let mappo = Mappo::new(dims, params.gamma, params.lam, &mut rng);
+        let explorer = MarlExplorer::new(mappo, params.explore, seed ^ 0x5eed);
+        Arco {
+            space,
+            params,
+            backend,
+            explorer,
+            model: Gbt::new(params.gbt),
+            rng,
+            xs: Vec::new(),
+            ys: Vec::new(),
+            seen: HashSet::new(),
+            elite: Vec::new(),
+            last_cs_synth: 0,
+        }
+    }
+
+    /// Auto-select the backend (XLA when artifacts exist).
+    pub fn new(space: ConfigSpace, params: ArcoParams, seed: u64) -> Arco {
+        let backend = Backend::auto(crate::runtime::ModelDims::default());
+        Self::with_backend(space, params, backend, seed)
+    }
+
+    /// Random unmeasured configurations, *constraint-aware*: the penalty
+    /// term (Eq. 4) is free to evaluate, so ARCO never spends a hardware
+    /// measurement on a configuration it can already tell is infeasible
+    /// (area over budget or scratchpad overflow). This is the mechanism
+    /// that keeps its invalid-measurement count near zero (§3.3).
+    fn random_unseen(&mut self, n: usize) -> Vec<PointConfig> {
+        let env = CoOptEnv::new(&self.space, self.backend.dims());
+        let mut out = Vec::new();
+        let mut attempts = 0;
+        while out.len() < n && attempts < n * 200 {
+            let p = self.space.random_point(&mut self.rng);
+            attempts += 1;
+            if env.penalty(&p) > 0.0 {
+                continue;
+            }
+            if self.seen.insert(self.space.flat_index(&p)) {
+                out.push(p);
+            }
+        }
+        // Space nearly exhausted of feasible points: accept anything new.
+        let mut fallback_attempts = 0;
+        while out.is_empty() && fallback_attempts < n * 100 {
+            let p = self.space.random_point(&mut self.rng);
+            fallback_attempts += 1;
+            if self.seen.insert(self.space.flat_index(&p)) {
+                out.push(p);
+            }
+        }
+        out
+    }
+
+}
+
+impl Strategy for Arco {
+    fn name(&self) -> &'static str {
+        "arco"
+    }
+
+    fn plan(&mut self, batch: usize) -> Vec<PointConfig> {
+        if !self.model.is_trained() {
+            return self.random_unseen(batch);
+        }
+        let dims = self.backend.dims();
+        let env = CoOptEnv::new(&self.space, dims);
+        let seeds: Vec<PointConfig> =
+            self.elite.iter().map(|(p, _)| p.clone()).take(8).collect();
+
+        // Algorithm 1: MARL exploration over the surrogate (the GBT is a
+        // few KB of tree nodes, so cloning it into the closure is cheap).
+        let visited: Vec<Visited> = {
+            let space = self.space.clone();
+            let m = self.model.clone();
+            let surrogate = move |p: &PointConfig| -> f64 {
+                if m.is_trained() {
+                    m.predict(&featurize(&space, p)).max(0.0)
+                } else {
+                    0.0
+                }
+            };
+            self.explorer.explore(&env, &self.backend, &surrogate, &seeds)
+        };
+
+        let fresh: Vec<Visited> = visited
+            .into_iter()
+            .filter(|v| !self.seen.contains(&self.space.flat_index(&v.point)))
+            .collect();
+        if fresh.is_empty() {
+            return self.random_unseen(batch);
+        }
+        let points: Vec<PointConfig> = fresh.iter().map(|v| v.point.clone()).collect();
+
+        let mut selected = if self.params.use_cs {
+            // Algorithm 2: critic-scored Confidence Sampling.
+            let values = self.explorer.critic_scores(&env, &self.backend, &points);
+            let out = confidence_sampling(&self.space, &points, &values, batch, &mut self.rng);
+            self.last_cs_synth = out.synthesized;
+            out.selected
+        } else {
+            // Ablation ("before CS", Fig. 4a): surrogate top-k plus uniform
+            // fill to the full batch — the uniform-sampling behaviour CS
+            // replaces, which measures a full batch every iteration.
+            let mut scored = fresh;
+            scored.sort_by(|a, b| {
+                b.surrogate.partial_cmp(&a.surrogate).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            let mut v: Vec<PointConfig> =
+                scored.into_iter().take(batch).map(|v| v.point).collect();
+            v.retain(|p| !self.seen.contains(&self.space.flat_index(p)));
+            for p in &v {
+                self.seen.insert(self.space.flat_index(p));
+            }
+            let fill = batch.saturating_sub(v.len());
+            if fill > 0 {
+                v.extend(self.random_unseen(fill));
+            }
+            return v;
+        };
+
+        // De-dup against measured history and drop constraint violators
+        // (CS synthesis can combine knobs into an infeasible point; the
+        // penalty check is free). Deliberately NO random backfill:
+        // measuring fewer, higher-confidence configurations per iteration is
+        // the CS mechanism that cuts compilation time (Fig. 4 / Fig. 6).
+        selected.retain(|p| {
+            !self.seen.contains(&self.space.flat_index(p)) && env.penalty(p) <= 0.0
+        });
+        for p in &selected {
+            self.seen.insert(self.space.flat_index(p));
+        }
+        if selected.is_empty() {
+            // Degenerate round (everything already measured): keep moving.
+            return self.random_unseen(batch.min(8));
+        }
+        selected.truncate(batch);
+        selected
+    }
+
+    fn observe(&mut self, results: &[(PointConfig, MeasureResult)]) {
+        for (p, r) in results {
+            self.seen.insert(self.space.flat_index(p));
+            self.xs.push(featurize(&self.space, p));
+            self.ys.push(r.fitness());
+            self.explorer.note_measured_fitness(r.fitness());
+            if r.valid {
+                self.elite.push((p.clone(), r.fitness()));
+            }
+        }
+        self.elite.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+        self.elite.truncate(16);
+        self.model.fit(&self.xs, &self.ys);
+    }
+
+    fn diag(&self) -> String {
+        format!(
+            "backend={} gbt_trees={} data={} elite={} cs_synth={} best_fit={:.3e}",
+            self.backend.name(),
+            self.model.num_trees(),
+            self.ys.len(),
+            self.elite.len(),
+            self.last_cs_synth,
+            self.explorer.best_fitness
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::measure_point;
+    use crate::runtime::ModelDims;
+    use crate::tuner::{tune_task, TuneBudget};
+    use crate::workload::Conv2dTask;
+
+    fn space() -> ConfigSpace {
+        ConfigSpace::for_task(&Conv2dTask::new(1, 64, 28, 28, 64, 3, 3, 1, 1), true)
+    }
+
+    fn arco(s: &ConfigSpace) -> Arco {
+        Arco::with_backend(
+            s.clone(),
+            ArcoParams::quick(),
+            Backend::native(ModelDims::default()),
+            11,
+        )
+    }
+
+    #[test]
+    fn plans_distinct_unmeasured_configs() {
+        let s = space();
+        let mut a = arco(&s);
+        let mut all = HashSet::new();
+        for _ in 0..3 {
+            let plan = a.plan(16);
+            assert!(!plan.is_empty());
+            for p in &plan {
+                assert!(all.insert(s.flat_index(p)), "duplicate planned config");
+            }
+            let results: Vec<_> =
+                plan.into_iter().map(|p| { let m = measure_point(&s, &p); (p, m) }).collect();
+            a.observe(&results);
+        }
+    }
+
+    #[test]
+    fn explores_hardware_knobs() {
+        // ARCO's whole point: it must actually propose non-default hardware.
+        let s = space();
+        let mut a = arco(&s);
+        let mut saw_nondefault_hw = false;
+        for _ in 0..4 {
+            let plan = a.plan(16);
+            for p in &plan {
+                let (hw, _) = s.decode(p);
+                if (hw.batch, hw.block_in, hw.block_out) != (1, 16, 16) {
+                    saw_nondefault_hw = true;
+                }
+            }
+            let results: Vec<_> =
+                plan.into_iter().map(|p| { let m = measure_point(&s, &p); (p, m) }).collect();
+            a.observe(&results);
+        }
+        assert!(saw_nondefault_hw);
+    }
+
+    #[test]
+    fn full_tune_converges_to_decent_config() {
+        let s = space();
+        let mut a = arco(&s);
+        let budget = TuneBudget { total_measurements: 128, batch: 32, workers: 2, ..Default::default() };
+        let r = tune_task(&s, &mut a, budget);
+        assert!(r.best.valid);
+        assert!(r.best.gflops > 0.0);
+        // Must beat the worst decile of random configs comfortably: check
+        // it beats the default point.
+        let default = measure_point(&s, &s.default_point());
+        assert!(
+            r.best.seconds <= default.seconds,
+            "tuned {} should beat default {}",
+            r.best.seconds,
+            default.seconds
+        );
+    }
+
+    #[test]
+    fn cs_ablation_still_plans() {
+        let s = space();
+        let mut params = ArcoParams::quick();
+        params.use_cs = false;
+        let mut a =
+            Arco::with_backend(s.clone(), params, Backend::native(ModelDims::default()), 4);
+        let plan = a.plan(16);
+        let results: Vec<_> =
+            plan.into_iter().map(|p| { let m = measure_point(&s, &p); (p, m) }).collect();
+        a.observe(&results);
+        let plan2 = a.plan(16);
+        assert!(!plan2.is_empty());
+    }
+
+    #[test]
+    fn diag_reports_backend() {
+        let s = space();
+        let a = arco(&s);
+        assert!(a.diag().contains("backend=native"));
+    }
+}

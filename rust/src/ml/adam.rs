@@ -1,0 +1,124 @@
+//! Adam optimizer over flat parameter vectors.
+
+/// Adam hyper-parameters (MAPPO defaults from Yu et al., 2022).
+#[derive(Debug, Clone, Copy)]
+pub struct AdamParams {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl Default for AdamParams {
+    fn default() -> Self {
+        AdamParams { lr: 5e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+}
+
+/// Optimizer state for one parameter vector.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub params: AdamParams,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u32,
+}
+
+impl Adam {
+    pub fn new(n: usize, params: AdamParams) -> Adam {
+        Adam { params, m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+    }
+
+    /// In-place parameter update given gradients.
+    pub fn step(&mut self, theta: &mut [f32], grads: &[f32]) {
+        assert_eq!(theta.len(), self.m.len());
+        assert_eq!(grads.len(), self.m.len());
+        self.t += 1;
+        let p = self.params;
+        let bc1 = 1.0 - p.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - p.beta2.powi(self.t as i32);
+        for i in 0..theta.len() {
+            let g = grads[i];
+            self.m[i] = p.beta1 * self.m[i] + (1.0 - p.beta1) * g;
+            self.v[i] = p.beta2 * self.v[i] + (1.0 - p.beta2) * g * g;
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            theta[i] -= p.lr * mhat / (vhat.sqrt() + p.eps);
+        }
+    }
+
+    pub fn steps_taken(&self) -> u32 {
+        self.t
+    }
+
+    /// Restore optimizer state from flat (m, v, t) — used to round-trip
+    /// state through the AOT train-step interface.
+    pub fn restore_state(&mut self, m: &[f32], v: &[f32], t: u32) {
+        assert_eq!(m.len(), self.m.len());
+        assert_eq!(v.len(), self.v.len());
+        self.m.copy_from_slice(m);
+        self.v.copy_from_slice(v);
+        self.t = t;
+    }
+
+    /// Expose optimizer state as flat (m, v, t).
+    pub fn state(&self) -> (&[f32], &[f32], u32) {
+        (&self.m, &self.v, self.t)
+    }
+}
+
+/// Global-norm gradient clipping (MAPPO uses max_grad_norm=10).
+pub fn clip_grad_norm(grads: &mut [f32], max_norm: f32) -> f32 {
+    let norm = grads.iter().map(|g| (*g as f64) * (*g as f64)).sum::<f64>().sqrt() as f32;
+    if norm > max_norm && norm > 0.0 {
+        let scale = max_norm / norm;
+        for g in grads.iter_mut() {
+            *g *= scale;
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_minimizes_quadratic() {
+        // f(x) = (x-3)^2 in each coordinate.
+        let mut theta = vec![0.0f32; 4];
+        let mut opt = Adam::new(4, AdamParams { lr: 0.1, ..Default::default() });
+        for _ in 0..500 {
+            let grads: Vec<f32> = theta.iter().map(|&x| 2.0 * (x - 3.0)).collect();
+            opt.step(&mut theta, &grads);
+        }
+        for x in theta {
+            assert!((x - 3.0).abs() < 1e-2, "{x}");
+        }
+    }
+
+    #[test]
+    fn first_step_magnitude_is_lr() {
+        // Adam's debiased first step is ~lr in the gradient direction.
+        let mut theta = vec![0.0f32];
+        let mut opt = Adam::new(1, AdamParams { lr: 0.01, ..Default::default() });
+        opt.step(&mut theta, &[5.0]);
+        assert!((theta[0] + 0.01).abs() < 1e-4, "{}", theta[0]);
+    }
+
+    #[test]
+    fn clip_reduces_large_norms() {
+        let mut g = vec![3.0f32, 4.0];
+        let norm = clip_grad_norm(&mut g, 1.0);
+        assert!((norm - 5.0).abs() < 1e-6);
+        let new_norm = (g[0] * g[0] + g[1] * g[1]).sqrt();
+        assert!((new_norm - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn clip_leaves_small_norms() {
+        let mut g = vec![0.3f32, 0.4];
+        clip_grad_norm(&mut g, 1.0);
+        assert_eq!(g, vec![0.3, 0.4]);
+    }
+}

@@ -1,0 +1,15 @@
+//! Native neural-network substrate: f32 matrices, dense MLPs with manual
+//! backprop, Adam, and the PPO/MAPPO math.
+//!
+//! This mirrors the L2 JAX graphs exactly (same architectures, same
+//! parameter flattening order) so the MARL module can run on either the
+//! AOT/XLA backend or this native one, and parity tests can compare them.
+
+pub mod adam;
+pub mod mlp;
+pub mod ppo;
+pub mod tensor;
+
+pub use adam::{clip_grad_norm, Adam, AdamParams};
+pub use mlp::{Act, ForwardCache, Mlp, MlpGrads};
+pub use tensor::Mat;

@@ -1,0 +1,327 @@
+//! PPO / MAPPO math (§2.2, Eqs. 1–3): masked categorical policies, GAE, the
+//! clipped surrogate objective and its gradient w.r.t. logits.
+//!
+//! These functions are the *native mirror* of the L2 JAX train-step graph;
+//! the MARL exploration module can run on either backend and the parity
+//! tests hold them to the same numbers.
+
+use super::tensor::Mat;
+use crate::util::rng::Pcg32;
+
+/// Masked log-softmax over each row. `mask[j] = 1.0` keeps action j,
+/// `0.0` forbids it (logit treated as -inf).
+pub fn masked_log_softmax(logits: &Mat, mask: &[f32]) -> Mat {
+    assert_eq!(logits.cols, mask.len());
+    let mut out = Mat::zeros(logits.rows, logits.cols);
+    for r in 0..logits.rows {
+        let row = logits.row(r);
+        let mut maxv = f32::NEG_INFINITY;
+        for (j, &m) in mask.iter().enumerate() {
+            if m > 0.0 {
+                maxv = maxv.max(row[j]);
+            }
+        }
+        let mut sum = 0.0f32;
+        for (j, &m) in mask.iter().enumerate() {
+            if m > 0.0 {
+                sum += (row[j] - maxv).exp();
+            }
+        }
+        let log_z = maxv + sum.ln();
+        for j in 0..logits.cols {
+            *out.at_mut(r, j) = if mask[j] > 0.0 { row[j] - log_z } else { f32::NEG_INFINITY };
+        }
+    }
+    out
+}
+
+/// Masked softmax probabilities per row.
+pub fn masked_softmax(logits: &Mat, mask: &[f32]) -> Mat {
+    let lp = masked_log_softmax(logits, mask);
+    lp.map(|x| if x.is_finite() { x.exp() } else { 0.0 })
+}
+
+/// Sample one action per row from masked probabilities.
+pub fn sample_actions(probs: &Mat, rng: &mut Pcg32) -> Vec<usize> {
+    (0..probs.rows)
+        .map(|r| {
+            let row = probs.row(r);
+            let w: Vec<f64> = row.iter().map(|&p| p as f64).collect();
+            rng.gen_weighted(&w)
+        })
+        .collect()
+}
+
+/// Per-row entropy of masked probabilities.
+pub fn entropy(probs: &Mat) -> Vec<f32> {
+    (0..probs.rows)
+        .map(|r| {
+            probs
+                .row(r)
+                .iter()
+                .filter(|&&p| p > 0.0)
+                .map(|&p| -p * p.ln())
+                .sum()
+        })
+        .collect()
+}
+
+/// Generalized Advantage Estimation (Eq. 2).
+///
+/// `rewards[t]`, `values[t]` for t in 0..T, plus `bootstrap` = V(s_T).
+/// Returns (advantages, returns) where returns[t] = advantages[t] + values[t].
+pub fn gae(
+    rewards: &[f32],
+    values: &[f32],
+    bootstrap: f32,
+    gamma: f32,
+    lambda: f32,
+) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(rewards.len(), values.len());
+    let t_len = rewards.len();
+    let mut adv = vec![0.0f32; t_len];
+    let mut acc = 0.0f32;
+    for t in (0..t_len).rev() {
+        let next_v = if t + 1 < t_len { values[t + 1] } else { bootstrap };
+        let delta = rewards[t] + gamma * next_v - values[t];
+        acc = delta + gamma * lambda * acc;
+        adv[t] = acc;
+    }
+    let ret: Vec<f32> = adv.iter().zip(values).map(|(a, v)| a + v).collect();
+    (adv, ret)
+}
+
+/// Normalize advantages to zero mean / unit std (standard MAPPO trick).
+pub fn normalize_advantages(adv: &mut [f32]) {
+    if adv.len() < 2 {
+        return;
+    }
+    let n = adv.len() as f32;
+    let mean = adv.iter().sum::<f32>() / n;
+    let var = adv.iter().map(|a| (a - mean) * (a - mean)).sum::<f32>() / n;
+    let std = var.sqrt().max(1e-6);
+    for a in adv.iter_mut() {
+        *a = (*a - mean) / std;
+    }
+}
+
+/// PPO-clip surrogate loss (Eq. 3) and its gradient w.r.t. the logits.
+///
+/// Inputs per batch row: chosen `actions`, `old_logp`, `advantages`; plus
+/// the shared action `mask`, clip `epsilon` and entropy bonus coefficient.
+/// Returns (mean loss, dLoss/dlogits, mean entropy, clip fraction).
+pub fn ppo_policy_loss_grad(
+    logits: &Mat,
+    mask: &[f32],
+    actions: &[usize],
+    old_logp: &[f32],
+    advantages: &[f32],
+    epsilon: f32,
+    entropy_coef: f32,
+) -> (f32, Mat, f32, f32) {
+    let b = logits.rows;
+    assert_eq!(actions.len(), b);
+    assert_eq!(old_logp.len(), b);
+    assert_eq!(advantages.len(), b);
+    let logp = masked_log_softmax(logits, mask);
+    let probs = logp.map(|x| if x.is_finite() { x.exp() } else { 0.0 });
+    let ent = entropy(&probs);
+
+    let mut d_logits = Mat::zeros(b, logits.cols);
+    let mut loss_sum = 0.0f32;
+    let mut ent_sum = 0.0f32;
+    let mut clipped = 0usize;
+    let inv_b = 1.0 / b as f32;
+
+    for r in 0..b {
+        let a = actions[r];
+        debug_assert!(mask[a] > 0.0, "sampled a masked action");
+        let lp = logp.at(r, a);
+        let ratio = (lp - old_logp[r]).exp();
+        let adv = advantages[r];
+        let unclipped = ratio * adv;
+        let clipped_ratio = ratio.clamp(1.0 - epsilon, 1.0 + epsilon);
+        let clipped_obj = clipped_ratio * adv;
+        // Surrogate: min of the two.
+        let (obj, grad_active) = if unclipped <= clipped_obj {
+            (unclipped, true)
+        } else {
+            (clipped_obj, false)
+        };
+        if !grad_active {
+            clipped += 1;
+        }
+        loss_sum += -obj;
+        ent_sum += ent[r];
+
+        // d(-obj)/dlogits: only when the unclipped branch is active does the
+        // ratio carry gradient; d ratio/d logp_a = ratio, and
+        // d logp_a / d logits_j = (1[j==a] - p_j) for unmasked j.
+        let coeff = if grad_active { -ratio * adv * inv_b } else { 0.0 };
+        for j in 0..logits.cols {
+            if mask[j] <= 0.0 {
+                continue;
+            }
+            let p = probs.at(r, j);
+            let indicator = if j == a { 1.0 } else { 0.0 };
+            let mut g = coeff * (indicator - p);
+            // Entropy bonus: d(-c*H)/dlogits_j = c * p_j * (log p_j + H).
+            if entropy_coef != 0.0 && p > 0.0 {
+                g += entropy_coef * inv_b * p * (p.ln() + ent[r]);
+            }
+            *d_logits.at_mut(r, j) += g;
+        }
+    }
+    let mean_loss = loss_sum * inv_b - entropy_coef * ent_sum * inv_b;
+    (mean_loss, d_logits, ent_sum * inv_b, clipped as f32 * inv_b)
+}
+
+/// Critic MSE loss (Eq. 1) and gradient w.r.t. predictions.
+pub fn value_loss_grad(pred: &Mat, targets: &[f32]) -> (f32, Mat) {
+    assert_eq!(pred.cols, 1);
+    assert_eq!(pred.rows, targets.len());
+    let b = pred.rows as f32;
+    let mut d = Mat::zeros(pred.rows, 1);
+    let mut loss = 0.0f32;
+    for r in 0..pred.rows {
+        let err = pred.at(r, 0) - targets[r];
+        loss += err * err;
+        *d.at_mut(r, 0) = 2.0 * err / b;
+    }
+    (loss / b, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        Mat::from_vec(rows, cols, data)
+    }
+
+    #[test]
+    fn masked_softmax_ignores_masked() {
+        let logits = mat(1, 3, vec![5.0, 100.0, 5.0]);
+        let mask = vec![1.0, 0.0, 1.0];
+        let p = masked_softmax(&logits, &mask);
+        assert_eq!(p.at(0, 1), 0.0);
+        assert!((p.at(0, 0) - 0.5).abs() < 1e-6);
+        assert!((p.at(0, 2) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let logits = mat(2, 4, vec![1.0, 2.0, 3.0, 4.0, -1.0, 0.0, 1.0, 2.0]);
+        let mask = vec![1.0; 4];
+        let lp = masked_log_softmax(&logits, &mask);
+        for r in 0..2 {
+            let total: f32 = lp.row(r).iter().map(|x| x.exp()).sum();
+            assert!((total - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gae_known_values() {
+        // Single step: adv = r + gamma*V' - V.
+        let (adv, ret) = gae(&[1.0], &[0.5], 0.25, 0.9, 0.95);
+        assert!((adv[0] - (1.0 + 0.9 * 0.25 - 0.5)).abs() < 1e-6);
+        assert!((ret[0] - (adv[0] + 0.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gae_discounts_backwards() {
+        let rewards = vec![0.0, 0.0, 1.0];
+        let values = vec![0.0, 0.0, 0.0];
+        let (adv, _) = gae(&rewards, &values, 0.0, 0.9, 1.0);
+        // adv[2] = 1, adv[1] = 0.9, adv[0] = 0.81
+        assert!((adv[2] - 1.0).abs() < 1e-6);
+        assert!((adv[1] - 0.9).abs() < 1e-6);
+        assert!((adv[0] - 0.81).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normalize_makes_zero_mean_unit_std() {
+        let mut adv = vec![1.0, 2.0, 3.0, 4.0];
+        normalize_advantages(&mut adv);
+        let mean: f32 = adv.iter().sum::<f32>() / 4.0;
+        let var: f32 = adv.iter().map(|a| a * a).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn ppo_gradient_matches_finite_difference() {
+        let logits = mat(3, 4, vec![0.1, 0.4, -0.2, 0.3, 1.0, -1.0, 0.5, 0.0, -0.3, 0.2, 0.1, 0.9]);
+        let mask = vec![1.0, 1.0, 1.0, 0.0];
+        let actions = vec![0usize, 2, 1];
+        let advantages = vec![1.0f32, -0.5, 0.8];
+        // old_logp from the same logits (ratio = 1 at theta_old).
+        let lp = masked_log_softmax(&logits, &mask);
+        let old_logp: Vec<f32> = actions.iter().enumerate().map(|(r, &a)| lp.at(r, a)).collect();
+
+        let (_, d, _, _) =
+            ppo_policy_loss_grad(&logits, &mask, &actions, &old_logp, &advantages, 0.2, 0.01);
+
+        let eps = 1e-3f32;
+        for idx in 0..logits.data.len() {
+            if mask[idx % 4] == 0.0 {
+                continue;
+            }
+            let mut lplus = logits.clone();
+            lplus.data[idx] += eps;
+            let mut lminus = logits.clone();
+            lminus.data[idx] -= eps;
+            let (fp, _, _, _) =
+                ppo_policy_loss_grad(&lplus, &mask, &actions, &old_logp, &advantages, 0.2, 0.01);
+            let (fm, _, _, _) =
+                ppo_policy_loss_grad(&lminus, &mask, &actions, &old_logp, &advantages, 0.2, 0.01);
+            let num = (fp - fm) / (2.0 * eps);
+            let ana = d.data[idx];
+            assert!(
+                (num - ana).abs() < 5e-3,
+                "logit {idx}: numeric {num} vs analytic {ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn clip_fraction_detects_large_ratios() {
+        let logits = mat(1, 2, vec![5.0, -5.0]);
+        let mask = vec![1.0, 1.0];
+        // Old policy put low prob on action 0 -> huge ratio, positive adv
+        // -> clipped branch active.
+        let (_, d, _, clip_frac) =
+            ppo_policy_loss_grad(&logits, &mask, &[0], &[-3.0], &[1.0], 0.2, 0.0);
+        assert_eq!(clip_frac, 1.0);
+        // Clipped: no policy gradient.
+        assert!(d.data.iter().all(|&g| g.abs() < 1e-9));
+    }
+
+    #[test]
+    fn value_loss_gradient() {
+        let pred = mat(2, 1, vec![1.0, 3.0]);
+        let (loss, d) = value_loss_grad(&pred, &[0.0, 3.0]);
+        assert!((loss - 0.5).abs() < 1e-6); // (1 + 0)/2
+        assert!((d.at(0, 0) - 1.0).abs() < 1e-6); // 2*1/2
+        assert_eq!(d.at(1, 0), 0.0);
+    }
+
+    #[test]
+    fn sampling_respects_mask() {
+        let logits = mat(1, 3, vec![0.0, 0.0, 0.0]);
+        let mask = vec![1.0, 0.0, 1.0];
+        let p = masked_softmax(&logits, &mask);
+        let mut rng = Pcg32::seeded(5);
+        for _ in 0..200 {
+            let a = sample_actions(&p, &mut rng)[0];
+            assert_ne!(a, 1);
+        }
+    }
+
+    #[test]
+    fn entropy_max_for_uniform() {
+        let probs = mat(1, 4, vec![0.25; 4]);
+        let e = entropy(&probs)[0];
+        assert!((e - (4.0f32).ln()).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,207 @@
+//! Minimal row-major f32 matrix used by the native MLP mirror.
+//!
+//! This is deliberately small: the MARL networks are 20-neuron MLPs, so the
+//! native path needs correctness and predictable memory layout, not BLAS.
+//! (The XLA runtime path executes the same math from AOT-compiled HLO; see
+//! `runtime::` and the parity tests.)
+
+/// Row-major matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// He-style scaled uniform init (matches the python-side initializer).
+    pub fn rand_init(rows: usize, cols: usize, rng: &mut crate::util::rng::Pcg32) -> Mat {
+        let scale = (2.0 / rows as f64).sqrt() as f32;
+        let data =
+            (0..rows * cols).map(|_| (rng.gen_f32() * 2.0 - 1.0) * scale).collect();
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// `self @ other` — (m,k) x (k,n) -> (m,n).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.at(i, p);
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[p * n..(p + 1) * n];
+                let crow = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    crow[j] += a * orow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `self^T @ other` without materializing the transpose.
+    pub fn t_matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
+        let (k, m, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for p in 0..k {
+            for i in 0..m {
+                let a = self.at(p, i);
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[p * n..(p + 1) * n];
+                let crow = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    crow[j] += a * orow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `self @ other^T`.
+    pub fn matmul_t(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let arow = self.row(i);
+            for j in 0..n {
+                let brow = other.row(j);
+                let mut acc = 0.0f32;
+                for p in 0..k {
+                    acc += arow[p] * brow[p];
+                }
+                *out.at_mut(i, j) = acc;
+            }
+        }
+        out
+    }
+
+    /// Add a bias row-vector to every row.
+    pub fn add_bias(&mut self, bias: &[f32]) {
+        assert_eq!(bias.len(), self.cols);
+        for r in 0..self.rows {
+            let row = &mut self.data[r * self.cols..(r + 1) * self.cols];
+            for (x, b) in row.iter_mut().zip(bias) {
+                *x += b;
+            }
+        }
+    }
+
+    /// Column-wise sum (for bias gradients).
+    pub fn col_sum(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            for (o, x) in out.iter_mut().zip(self.row(r)) {
+                *o += x;
+            }
+        }
+        out
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Element-wise product.
+    pub fn hadamard(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect(),
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit_transpose() {
+        let a = Mat::from_vec(3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Mat::from_vec(3, 2, vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        let c = a.t_matmul(&b); // (2,3)x(3,2) = (2,2)
+        // a^T = [[1,3,5],[2,4,6]]; a^T b = [[1+0+5, 0+3+5],[2+0+6, 0+4+6]]
+        assert_eq!(c.data, vec![6.0, 8.0, 8.0, 10.0]);
+    }
+
+    #[test]
+    fn matmul_t_matches() {
+        let a = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Mat::from_vec(2, 3, vec![1.0, 1.0, 1.0, 0.0, 1.0, 0.0]);
+        let c = a.matmul_t(&b); // (2,3)x(3,2) = (2,2)
+        assert_eq!(c.data, vec![6.0, 2.0, 15.0, 5.0]);
+    }
+
+    #[test]
+    fn bias_and_colsum() {
+        let mut a = Mat::zeros(2, 3);
+        a.add_bias(&[1.0, 2.0, 3.0]);
+        assert_eq!(a.col_sum(), vec![2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn hadamard_and_map() {
+        let a = Mat::from_vec(1, 3, vec![1.0, -2.0, 3.0]);
+        let b = Mat::from_vec(1, 3, vec![2.0, 2.0, 2.0]);
+        assert_eq!(a.hadamard(&b).data, vec![2.0, -4.0, 6.0]);
+        assert_eq!(a.map(|x| x.max(0.0)).data, vec![1.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul shape mismatch")]
+    fn shape_mismatch_panics() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

@@ -1,0 +1,230 @@
+//! Report emitters: CSV + markdown renderings of every paper table/figure,
+//! written under `results/`.
+
+use crate::tuner::{CompareReport, Framework};
+use crate::util::json::Json;
+use crate::workload::{model_by_name, model_names};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Write a string to `results/<name>`, creating directories.
+pub fn write_result(name: &str, content: &str) -> anyhow::Result<std::path::PathBuf> {
+    let path = Path::new("results").join(name);
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(&path, content)?;
+    Ok(path)
+}
+
+/// Table 3: the model zoo.
+pub fn table3_models() -> String {
+    let mut s = String::from("| Network | Dataset | Number of Convolution Tasks | Conv GFLOPs |\n|---|---|---|---|\n");
+    for name in model_names() {
+        let m = model_by_name(name).unwrap();
+        let _ = writeln!(
+            s,
+            "| {} | ImageNet | {} | {:.2} |",
+            m.name,
+            m.num_conv_tasks(),
+            m.total_flops() as f64 / 1e9
+        );
+    }
+    s
+}
+
+/// Table 6: mean inference times (seconds) per framework and model.
+pub fn table6_inference(reports: &[CompareReport]) -> String {
+    let frameworks = [Framework::AutoTvm, Framework::Chameleon, Framework::Arco];
+    let mut s = String::from("| Model | AutoTVM | CHAMELEON | ARCO |\n|---|---|---|---|\n");
+    for r in reports {
+        let mut row = format!("| {} |", r.model);
+        for f in frameworks {
+            match r.outcome(f) {
+                Some(o) => {
+                    let _ = write!(row, " {:.5} |", o.inference_secs);
+                }
+                None => row.push_str(" - |"),
+            }
+        }
+        let _ = writeln!(s, "{row}");
+    }
+    s
+}
+
+/// Fig. 5: throughput normalized to AutoTVM.
+pub fn fig5_throughput(reports: &[CompareReport]) -> String {
+    let frameworks = [Framework::AutoTvm, Framework::Chameleon, Framework::Arco];
+    let mut s = String::from("model,framework,throughput_vs_autotvm\n");
+    for r in reports {
+        for f in frameworks {
+            if let Some(rel) = r.throughput_vs_autotvm(f) {
+                let _ = writeln!(s, "{},{},{:.4}", r.model, f.name(), rel);
+            }
+        }
+    }
+    s
+}
+
+/// Fig. 5 summary statistics (the abstract's headline numbers).
+pub fn fig5_summary(reports: &[CompareReport]) -> String {
+    let mut rels = Vec::new();
+    for r in reports {
+        if let Some(rel) = r.throughput_vs_autotvm(Framework::Arco) {
+            rels.push(rel);
+        }
+    }
+    let avg = crate::util::stats::mean(&rels);
+    let max = rels.iter().cloned().fold(0.0f64, f64::max);
+    format!(
+        "ARCO throughput vs AutoTVM: average {:.3}x (paper: 1.17x), max improvement {:.2}% (paper: up to 37.95%)\n",
+        avg,
+        (max - 1.0) * 100.0
+    )
+}
+
+/// Fig. 6: compilation (optimization) time per framework — modeled
+/// time-to-parity with AutoTVM's final quality — plus ARCO's speedup
+/// percentage, the number the paper reports as "up to 42.2%".
+pub fn fig6_compile_time(reports: &[CompareReport]) -> String {
+    let mut s =
+        String::from("model,framework,compile_secs_to_parity,full_compile_secs,arco_speedup_vs_autotvm_pct\n");
+    for r in reports {
+        let auto = r.compile_secs_to_parity(Framework::AutoTvm);
+        for o in &r.outcomes {
+            let ttp = r.compile_secs_to_parity(o.framework);
+            let speedup = match (auto, ttp) {
+                (Some(a), Some(c)) if o.framework == Framework::Arco && a > 0.0 => {
+                    format!("{:.1}", (1.0 - c / a) * 100.0)
+                }
+                _ => String::new(),
+            };
+            let _ = writeln!(
+                s,
+                "{},{},{:.3},{:.3},{}",
+                r.model,
+                o.framework.name(),
+                ttp.unwrap_or(o.compile_secs),
+                o.compile_secs,
+                speedup
+            );
+        }
+    }
+    s
+}
+
+/// Fig. 7: convergence trace (best GFLOPS vs measurement count) for one
+/// model's heaviest task under each framework.
+pub fn fig7_convergence(report: &CompareReport) -> String {
+    let mut s = String::from("framework,measurement,best_gflops\n");
+    for o in &report.outcomes {
+        // Heaviest task = most FLOPs-weighted: use the one with max
+        // measurements (ties broken by first).
+        if let Some(t) = o.tasks.iter().max_by_key(|t| t.result.trace.len()) {
+            for e in &t.result.trace {
+                let _ = writeln!(s, "{},{},{:.4}", o.framework.name(), e.ordinal, e.best_gflops);
+            }
+        }
+    }
+    s
+}
+
+/// Fig. 4: measured configurations over time (before/after CS).
+pub fn fig4_configs_over_time(
+    label_a: &str,
+    trace_a: &[crate::tuner::TraceEntry],
+    label_b: &str,
+    trace_b: &[crate::tuner::TraceEntry],
+) -> String {
+    let mut s = String::from("variant,measurement,at_secs,gflops,valid\n");
+    for (label, trace) in [(label_a, trace_a), (label_b, trace_b)] {
+        for e in trace {
+            let _ = writeln!(
+                s,
+                "{label},{},{:.4},{:.4},{}",
+                e.ordinal, e.at_secs, e.gflops, e.valid as u8
+            );
+        }
+    }
+    s
+}
+
+/// JSON dump of a comparison (machine-readable companion of the tables).
+pub fn compare_json(reports: &[CompareReport]) -> Json {
+    Json::Arr(
+        reports
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("model", Json::str(r.model.clone())),
+                    (
+                        "outcomes",
+                        Json::Arr(
+                            r.outcomes
+                                .iter()
+                                .map(|o| {
+                                    Json::obj(vec![
+                                        ("framework", Json::str(o.framework.name())),
+                                        ("inference_secs", Json::num(o.inference_secs)),
+                                        ("compile_secs", Json::num(o.compile_secs)),
+                                        ("measurements", Json::num(o.measurements as f64)),
+                                        ("throughput", Json::num(o.throughput())),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuner::{compare_frameworks, TuneBudget};
+    use crate::workload::model_by_name;
+
+    #[test]
+    fn table3_contains_all_models_and_counts() {
+        let t = table3_models();
+        assert!(t.contains("| resnet34 | ImageNet | 33 |"));
+        assert!(t.contains("| alexnet | ImageNet | 5 |"));
+        assert!(t.contains("| vgg19 | ImageNet | 16 |"));
+    }
+
+    #[test]
+    fn reports_render_from_real_run() {
+        let model = model_by_name("alexnet").unwrap();
+        let budget = TuneBudget { total_measurements: 32, batch: 16, workers: 2, ..Default::default() };
+        let report = compare_frameworks(
+            &[Framework::AutoTvm, Framework::Chameleon, Framework::Arco],
+            &model,
+            budget,
+            true,
+            1,
+        );
+        let reports = vec![report];
+
+        let t6 = table6_inference(&reports);
+        assert!(t6.contains("alexnet"));
+        assert!(t6.lines().count() >= 3);
+
+        let f5 = fig5_throughput(&reports);
+        assert!(f5.contains("arco"));
+        assert_eq!(f5.lines().count(), 1 + 3);
+
+        let f6 = fig6_compile_time(&reports);
+        assert!(f6.contains("compile_secs"));
+
+        let f7 = fig7_convergence(&reports[0]);
+        assert!(f7.lines().count() > 10);
+
+        let summary = fig5_summary(&reports);
+        assert!(summary.contains("ARCO throughput"));
+
+        let json = compare_json(&reports);
+        assert!(json.dump().contains("inference_secs"));
+    }
+}

@@ -1,0 +1,250 @@
+//! PJRT execution engine for the AOT artifacts.
+//!
+//! One `PjRtClient` (CPU), one compiled executable per entry point, all
+//! compiled once at startup (`Engine::load`). Hot-path calls marshal flat
+//! f32/i32 slices into `xla::Literal`s, execute, and unwrap the result
+//! tuple (aot.py lowers with `return_tuple=True`).
+
+use super::manifest::Manifest;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Engine errors.
+#[derive(Debug, thiserror::Error)]
+pub enum EngineError {
+    #[error("artifact '{0}' missing from manifest")]
+    MissingArtifact(String),
+    #[error("input '{what}' has {got} elements, expected {want}")]
+    BadShape { what: &'static str, got: usize, want: usize },
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for EngineError {
+    fn from(e: xla::Error) -> Self {
+        EngineError::Xla(e.to_string())
+    }
+}
+
+/// Outputs of one PPO policy update.
+#[derive(Debug, Clone)]
+pub struct PolicyTrainOut {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: f32,
+    pub loss: f32,
+    pub entropy: f32,
+    pub clip_frac: f32,
+}
+
+/// Outputs of one critic update.
+#[derive(Debug, Clone)]
+pub struct ValueTrainOut {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: f32,
+    pub loss: f32,
+}
+
+/// The loaded runtime: compiled executables for every entry point.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Compile all artifacts in `dir` on the PJRT CPU client.
+    pub fn load(dir: &Path) -> anyhow::Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut exes = HashMap::new();
+        for (name, file) in &manifest.artifact_files {
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            exes.insert(name.clone(), exe);
+        }
+        crate::log_info!(
+            "runtime",
+            "loaded {} artifacts on {} ({} devices)",
+            exes.len(),
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Engine { manifest, client, exes })
+    }
+
+    /// Platform name (for diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable, EngineError> {
+        self.exes.get(name).ok_or_else(|| EngineError::MissingArtifact(name.to_string()))
+    }
+
+    fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>, EngineError> {
+        let exe = self.exe(name)?;
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Masked log-probs for a batch of observations.
+    /// `obs` is row-major (b_pol, obs_dim); returns (b_pol, act_dim) flat.
+    pub fn policy_forward(
+        &self,
+        params: &[f32],
+        obs: &[f32],
+        mask: &[f32],
+    ) -> Result<Vec<f32>, EngineError> {
+        let d = self.manifest.dims;
+        check("params", params.len(), d.p_policy)?;
+        check("obs", obs.len(), d.b_pol * d.obs_dim)?;
+        check("mask", mask.len(), d.act_dim)?;
+        let inputs = [
+            lit1(params),
+            lit2(obs, d.b_pol, d.obs_dim)?,
+            lit1(mask),
+        ];
+        let out = self.run("policy_forward", &inputs)?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// Critic values for a batch of global states (b_pol rows).
+    pub fn value_forward(&self, params: &[f32], state: &[f32]) -> Result<Vec<f32>, EngineError> {
+        let d = self.manifest.dims;
+        check("params", params.len(), d.p_value)?;
+        check("state", state.len(), d.b_pol * d.gstate_dim)?;
+        let inputs = [lit1(params), lit2(state, d.b_pol, d.gstate_dim)?];
+        let out = self.run("value_forward", &inputs)?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// GAE over the fixed horizon. Returns (advantages, returns).
+    pub fn gae(
+        &self,
+        rewards: &[f32],
+        values: &[f32],
+        bootstrap: f32,
+        gamma: f32,
+        lam: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>), EngineError> {
+        let d = self.manifest.dims;
+        check("rewards", rewards.len(), d.t_gae)?;
+        check("values", values.len(), d.t_gae)?;
+        let inputs = [lit1(rewards), lit1(values), lit1(&[bootstrap]), lit1(&[gamma, lam])];
+        let out = self.run("gae", &inputs)?;
+        Ok((out[0].to_vec::<f32>()?, out[1].to_vec::<f32>()?))
+    }
+
+    /// One PPO-clip policy update (batch padded to b_train; `weight`=0 rows
+    /// are ignored by the baked loss).
+    #[allow(clippy::too_many_arguments)]
+    pub fn policy_train(
+        &self,
+        params: &[f32],
+        m: &[f32],
+        v: &[f32],
+        t: f32,
+        obs: &[f32],
+        mask: &[f32],
+        actions: &[i32],
+        old_logp: &[f32],
+        adv: &[f32],
+        weight: &[f32],
+    ) -> Result<PolicyTrainOut, EngineError> {
+        let d = self.manifest.dims;
+        check("params", params.len(), d.p_policy)?;
+        check("m", m.len(), d.p_policy)?;
+        check("v", v.len(), d.p_policy)?;
+        check("obs", obs.len(), d.b_train * d.obs_dim)?;
+        check("mask", mask.len(), d.act_dim)?;
+        check("actions", actions.len(), d.b_train)?;
+        check("old_logp", old_logp.len(), d.b_train)?;
+        check("adv", adv.len(), d.b_train)?;
+        check("weight", weight.len(), d.b_train)?;
+        let inputs = [
+            lit1(params),
+            lit1(m),
+            lit1(v),
+            lit1(&[t]),
+            lit2(obs, d.b_train, d.obs_dim)?,
+            lit1(mask),
+            lit1_i32(actions),
+            lit1(old_logp),
+            lit1(adv),
+            lit1(weight),
+        ];
+        let out = self.run("policy_train", &inputs)?;
+        Ok(PolicyTrainOut {
+            params: out[0].to_vec::<f32>()?,
+            m: out[1].to_vec::<f32>()?,
+            v: out[2].to_vec::<f32>()?,
+            t: out[3].to_vec::<f32>()?[0],
+            loss: out[4].to_vec::<f32>()?[0],
+            entropy: out[5].to_vec::<f32>()?[0],
+            clip_frac: out[6].to_vec::<f32>()?[0],
+        })
+    }
+
+    /// One critic MSE update.
+    pub fn value_train(
+        &self,
+        params: &[f32],
+        m: &[f32],
+        v: &[f32],
+        t: f32,
+        state: &[f32],
+        returns: &[f32],
+        weight: &[f32],
+    ) -> Result<ValueTrainOut, EngineError> {
+        let d = self.manifest.dims;
+        check("params", params.len(), d.p_value)?;
+        check("state", state.len(), d.b_train * d.gstate_dim)?;
+        check("returns", returns.len(), d.b_train)?;
+        check("weight", weight.len(), d.b_train)?;
+        let inputs = [
+            lit1(params),
+            lit1(m),
+            lit1(v),
+            lit1(&[t]),
+            lit2(state, d.b_train, d.gstate_dim)?,
+            lit1(returns),
+            lit1(weight),
+        ];
+        let out = self.run("value_train", &inputs)?;
+        Ok(ValueTrainOut {
+            params: out[0].to_vec::<f32>()?,
+            m: out[1].to_vec::<f32>()?,
+            v: out[2].to_vec::<f32>()?,
+            t: out[3].to_vec::<f32>()?[0],
+            loss: out[4].to_vec::<f32>()?[0],
+        })
+    }
+}
+
+fn check(what: &'static str, got: usize, want: usize) -> Result<(), EngineError> {
+    if got == want {
+        Ok(())
+    } else {
+        Err(EngineError::BadShape { what, got, want })
+    }
+}
+
+fn lit1(data: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+fn lit1_i32(data: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+fn lit2(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal, EngineError> {
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}

@@ -1,0 +1,199 @@
+//! `artifacts/manifest.json` — the L2 ↔ L3 shape/hyper-parameter contract.
+
+use crate::util::json::{read_json_file, Json};
+use std::path::{Path, PathBuf};
+
+/// Static dims the AOT artifacts were lowered with (python/compile/dims.py).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelDims {
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub gstate_dim: usize,
+    pub hidden: usize,
+    pub b_pol: usize,
+    pub b_train: usize,
+    pub t_gae: usize,
+    pub p_policy: usize,
+    pub p_value: usize,
+}
+
+impl Default for ModelDims {
+    /// Compile-time mirror of python/compile/dims.py; used when artifacts
+    /// are absent (native backend) and validated against the manifest when
+    /// they are present.
+    fn default() -> Self {
+        ModelDims {
+            obs_dim: 16,
+            act_dim: 27,
+            gstate_dim: 24,
+            hidden: 20,
+            b_pol: 64,
+            b_train: 256,
+            t_gae: 512,
+            p_policy: 907,
+            p_value: 1361,
+        }
+    }
+}
+
+/// Baked training hyper-parameters recorded by aot.py.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BakedHyper {
+    pub clip_eps: f64,
+    pub entropy_coef: f64,
+    pub lr_policy: f64,
+    pub lr_value: f64,
+    pub max_grad_norm: f64,
+}
+
+impl Default for BakedHyper {
+    fn default() -> Self {
+        BakedHyper {
+            clip_eps: 0.2,
+            entropy_coef: 0.01,
+            lr_policy: 5e-3,
+            lr_value: 5e-3,
+            max_grad_norm: 10.0,
+        }
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dims: ModelDims,
+    pub hyper: BakedHyper,
+    pub dir: PathBuf,
+    pub artifact_files: Vec<(String, String)>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let doc = read_json_file(&dir.join("manifest.json"))?;
+        let d = doc
+            .get("dims")
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'dims'"))?;
+        let need = |key: &str| -> anyhow::Result<usize> {
+            d.get_usize(key).ok_or_else(|| anyhow::anyhow!("manifest dims missing '{key}'"))
+        };
+        let dims = ModelDims {
+            obs_dim: need("obs_dim")?,
+            act_dim: need("act_dim")?,
+            gstate_dim: need("gstate_dim")?,
+            hidden: need("hidden")?,
+            b_pol: need("b_pol")?,
+            b_train: need("b_train")?,
+            t_gae: need("t_gae")?,
+            p_policy: need("p_policy")?,
+            p_value: need("p_value")?,
+        };
+        let h = doc.get("hyper");
+        let hd = BakedHyper::default();
+        let hyper = match h {
+            Some(h) => BakedHyper {
+                clip_eps: h.get_f64("clip_eps").unwrap_or(hd.clip_eps),
+                entropy_coef: h.get_f64("entropy_coef").unwrap_or(hd.entropy_coef),
+                lr_policy: h.get_f64("lr_policy").unwrap_or(hd.lr_policy),
+                lr_value: h.get_f64("lr_value").unwrap_or(hd.lr_value),
+                max_grad_norm: h.get_f64("max_grad_norm").unwrap_or(hd.max_grad_norm),
+            },
+            None => hd,
+        };
+        let mut artifact_files = Vec::new();
+        if let Some(Json::Obj(arts)) = doc.get("artifacts") {
+            for (name, meta) in arts {
+                if let Some(file) = meta.get_str("file") {
+                    artifact_files.push((name.clone(), file.to_string()));
+                }
+            }
+        }
+        let m = Manifest { dims, hyper, dir: dir.to_path_buf(), artifact_files };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Cross-check the manifest against the compiled-in expectations.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let expect = ModelDims::default();
+        if self.dims != expect {
+            anyhow::bail!(
+                "artifact dims {:?} do not match the rust build's expectations {:?}; \
+                 re-run `make artifacts`",
+                self.dims,
+                expect
+            );
+        }
+        // Param-count identity: P = (obs*h + h) + (h*act + act).
+        let d = self.dims;
+        let p_pol = d.obs_dim * d.hidden + d.hidden + d.hidden * d.act_dim + d.act_dim;
+        let p_val = d.gstate_dim * d.hidden + d.hidden
+            + 2 * (d.hidden * d.hidden + d.hidden)
+            + d.hidden
+            + 1;
+        if p_pol != d.p_policy || p_val != d.p_value {
+            anyhow::bail!("manifest param counts are inconsistent with its dims");
+        }
+        Ok(())
+    }
+
+    /// Path of an artifact by entry-point name.
+    pub fn artifact_path(&self, name: &str) -> Option<PathBuf> {
+        self.artifact_files
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, f)| self.dir.join(f))
+    }
+}
+
+/// Default artifacts directory, overridable with ARCO_ARTIFACTS.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("ARCO_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_dims_param_counts() {
+        let d = ModelDims::default();
+        assert_eq!(d.p_policy, d.obs_dim * d.hidden + d.hidden + d.hidden * d.act_dim + d.act_dim);
+        assert_eq!(
+            d.p_value,
+            d.gstate_dim * d.hidden + d.hidden + 2 * (d.hidden * d.hidden + d.hidden) + d.hidden + 1
+        );
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts built");
+            return;
+        }
+        let m = Manifest::load(&dir).expect("manifest should load");
+        assert_eq!(m.dims, ModelDims::default());
+        assert!(m.artifact_path("policy_forward").is_some());
+        assert!(m.artifact_path("nonexistent").is_none());
+        for (_, file) in &m.artifact_files {
+            assert!(dir.join(file).exists(), "{file} listed but missing");
+        }
+    }
+
+    #[test]
+    fn rejects_mismatched_dims() {
+        let tmp = std::env::temp_dir().join(format!("arco-manifest-test-{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(
+            tmp.join("manifest.json"),
+            r#"{"dims": {"obs_dim": 8, "act_dim": 27, "gstate_dim": 24, "hidden": 20,
+                "b_pol": 64, "b_train": 256, "t_gae": 512, "p_policy": 907, "p_value": 1361}}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&tmp).is_err());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

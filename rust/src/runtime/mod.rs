@@ -1,0 +1,14 @@
+//! L3 runtime: load AOT-compiled HLO artifacts and execute them via PJRT.
+//!
+//! Python runs once at build time (`make artifacts`); afterwards the rust
+//! binary is self-contained: `PjRtClient::cpu()` compiles the HLO text
+//! modules and the MARL hot path calls [`Engine`] with flat f32 buffers.
+//!
+//! The [`manifest`] module reads `artifacts/manifest.json` (shapes and baked
+//! hyper-parameters), so rust and python can never drift silently.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, EngineError};
+pub use manifest::{Manifest, ModelDims};

@@ -1,0 +1,393 @@
+//! Knob and configuration-space machinery.
+
+use crate::util::json::Json;
+use crate::util::stats::divisors;
+use crate::vta::VtaConfig;
+use crate::workload::Conv2dTask;
+
+/// Which agent owns a knob (Table 1/2 partition).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KnobOwner {
+    Hardware,
+    Scheduling,
+    Mapping,
+}
+
+/// One tunable dimension: a name and its discrete candidate values.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Knob {
+    pub name: &'static str,
+    pub owner: KnobOwner,
+    pub values: Vec<usize>,
+}
+
+impl Knob {
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+/// The software half of a decoded configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SwConfig {
+    /// Output rows per spatial tile.
+    pub tile_h: usize,
+    /// Output cols per spatial tile.
+    pub tile_w: usize,
+    /// Virtual threads across the height dimension (1 or 2).
+    pub h_threading: usize,
+    /// Virtual threads across output channels (1 or 2).
+    pub oc_threading: usize,
+}
+
+/// A point in the space: one value index per knob, in space order.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PointConfig(pub Vec<usize>);
+
+impl PointConfig {
+    pub fn as_slice(&self) -> &[usize] {
+        &self.0
+    }
+}
+
+/// The per-task configuration space.
+#[derive(Debug, Clone)]
+pub struct ConfigSpace {
+    pub task: Conv2dTask,
+    pub knobs: Vec<Knob>,
+    /// When false, hardware knobs are present but frozen to index of the
+    /// VTA++ default value (software-only frameworks).
+    pub hardware_tunable: bool,
+}
+
+/// Pick at most `max` values from a sorted candidate list, always keeping
+/// the first and last, spreading the rest evenly.
+fn thin(values: Vec<usize>, max: usize) -> Vec<usize> {
+    if values.len() <= max {
+        return values;
+    }
+    let n = values.len();
+    let mut out = Vec::with_capacity(max);
+    for i in 0..max {
+        let idx = i * (n - 1) / (max - 1);
+        if out.last() != Some(&values[idx]) {
+            out.push(values[idx]);
+        }
+    }
+    out
+}
+
+/// Spatial tile candidates for an output dimension: divisors, thinned to 8.
+fn tile_candidates(dim: usize) -> Vec<usize> {
+    thin(divisors(dim), 8)
+}
+
+impl ConfigSpace {
+    /// Build the Table-2 space for a task. `hardware_tunable=false` freezes
+    /// the GEMM geometry at the VTA++ default (AutoTVM/CHAMELEON mode).
+    pub fn for_task(task: &Conv2dTask, hardware_tunable: bool) -> ConfigSpace {
+        let knobs = vec![
+            Knob { name: "tile_b", owner: KnobOwner::Hardware, values: vec![1, 2, 4, 8] },
+            Knob { name: "tile_ci", owner: KnobOwner::Hardware, values: vec![8, 16, 32, 64] },
+            Knob { name: "tile_co", owner: KnobOwner::Hardware, values: vec![8, 16, 32, 64] },
+            Knob { name: "h_threading", owner: KnobOwner::Scheduling, values: vec![1, 2] },
+            Knob { name: "oc_threading", owner: KnobOwner::Scheduling, values: vec![1, 2] },
+            Knob { name: "tile_h", owner: KnobOwner::Mapping, values: tile_candidates(task.oh()) },
+            Knob { name: "tile_w", owner: KnobOwner::Mapping, values: tile_candidates(task.ow()) },
+        ];
+        ConfigSpace { task: *task, knobs, hardware_tunable }
+    }
+
+    /// Number of knobs (always 7).
+    pub fn num_knobs(&self) -> usize {
+        self.knobs.len()
+    }
+
+    /// Index of a knob by name.
+    pub fn knob_index(&self, name: &str) -> Option<usize> {
+        self.knobs.iter().position(|k| k.name == name)
+    }
+
+    /// Indices of the knobs a given agent owns.
+    pub fn agent_knobs(&self, owner: KnobOwner) -> Vec<usize> {
+        self.knobs
+            .iter()
+            .enumerate()
+            .filter(|(_, k)| k.owner == owner)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Total number of points (tunable dimensions only).
+    pub fn size(&self) -> usize {
+        self.knobs
+            .iter()
+            .filter(|k| self.hardware_tunable || k.owner != KnobOwner::Hardware)
+            .map(|k| k.len())
+            .product()
+    }
+
+    /// The index vector of the hardware-default / minimal-software point.
+    pub fn default_point(&self) -> PointConfig {
+        let hw = VtaConfig::default();
+        let idx = self
+            .knobs
+            .iter()
+            .map(|k| match k.name {
+                "tile_b" => position_of(&k.values, hw.batch),
+                "tile_ci" => position_of(&k.values, hw.block_in),
+                "tile_co" => position_of(&k.values, hw.block_out),
+                "h_threading" | "oc_threading" => 0,
+                // Mid-size spatial tiles as the neutral start.
+                _ => k.len() / 2,
+            })
+            .collect();
+        PointConfig(idx)
+    }
+
+    /// Uniform-random point (respects frozen hardware knobs).
+    pub fn random_point(&self, rng: &mut crate::util::rng::Pcg32) -> PointConfig {
+        let default = self.default_point();
+        let idx = self
+            .knobs
+            .iter()
+            .enumerate()
+            .map(|(i, k)| {
+                if !self.hardware_tunable && k.owner == KnobOwner::Hardware {
+                    default.0[i]
+                } else {
+                    rng.gen_range(k.len())
+                }
+            })
+            .collect();
+        PointConfig(idx)
+    }
+
+    /// Flat linear index of a point (row-major over knob value indices).
+    pub fn flat_index(&self, p: &PointConfig) -> usize {
+        let mut idx = 0usize;
+        for (k, &v) in self.knobs.iter().zip(&p.0) {
+            idx = idx * k.len() + v;
+        }
+        idx
+    }
+
+    /// Inverse of [`flat_index`].
+    pub fn from_flat_index(&self, mut idx: usize) -> PointConfig {
+        let mut out = vec![0usize; self.knobs.len()];
+        for (i, k) in self.knobs.iter().enumerate().rev() {
+            out[i] = idx % k.len();
+            idx /= k.len();
+        }
+        PointConfig(out)
+    }
+
+    /// Validate a point's index vector against knob arities.
+    pub fn contains(&self, p: &PointConfig) -> bool {
+        p.0.len() == self.knobs.len()
+            && p.0.iter().zip(&self.knobs).all(|(&v, k)| v < k.len())
+    }
+
+    /// Decode a point into concrete hardware + software configs.
+    pub fn decode(&self, p: &PointConfig) -> (VtaConfig, SwConfig) {
+        assert!(self.contains(p), "point {:?} outside space", p);
+        let v = |name: &str| -> usize {
+            let i = self.knob_index(name).unwrap();
+            self.knobs[i].values[p.0[i]]
+        };
+        let hw = VtaConfig::with_gemm(v("tile_b"), v("tile_ci"), v("tile_co"));
+        let sw = SwConfig {
+            tile_h: v("tile_h"),
+            tile_w: v("tile_w"),
+            h_threading: v("h_threading"),
+            oc_threading: v("oc_threading"),
+        };
+        (hw, sw)
+    }
+
+    /// Neighbours of a point: one knob stepped ±1 (the RL action space and
+    /// the simulated-annealing move set).
+    pub fn neighbours(&self, p: &PointConfig) -> Vec<PointConfig> {
+        let mut out = Vec::new();
+        for (i, k) in self.knobs.iter().enumerate() {
+            if !self.hardware_tunable && k.owner == KnobOwner::Hardware {
+                continue;
+            }
+            if p.0[i] > 0 {
+                let mut q = p.clone();
+                q.0[i] -= 1;
+                out.push(q);
+            }
+            if p.0[i] + 1 < k.len() {
+                let mut q = p.clone();
+                q.0[i] += 1;
+                out.push(q);
+            }
+        }
+        out
+    }
+
+    /// Normalized feature vector of a point in [0,1]^num_knobs (for cost
+    /// models and RL observations).
+    pub fn normalized(&self, p: &PointConfig) -> Vec<f64> {
+        self.knobs
+            .iter()
+            .zip(&p.0)
+            .map(|(k, &v)| if k.len() <= 1 { 0.0 } else { v as f64 / (k.len() - 1) as f64 })
+            .collect()
+    }
+
+    /// Human-readable rendering: `tile_b=1 tile_ci=16 ...`.
+    pub fn render(&self, p: &PointConfig) -> String {
+        self.knobs
+            .iter()
+            .zip(&p.0)
+            .map(|(k, &v)| format!("{}={}", k.name, k.values[v]))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn point_to_json(&self, p: &PointConfig) -> Json {
+        Json::Obj(
+            self.knobs
+                .iter()
+                .zip(&p.0)
+                .map(|(k, &v)| (k.name.to_string(), Json::num(k.values[v] as f64)))
+                .collect(),
+        )
+    }
+}
+
+fn position_of(values: &[usize], v: usize) -> usize {
+    values.iter().position(|&x| x == v).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+    use crate::util::rng::Pcg32;
+
+    fn task() -> Conv2dTask {
+        Conv2dTask::new(1, 64, 56, 56, 64, 3, 3, 1, 1)
+    }
+
+    #[test]
+    fn seven_knobs_partitioned_as_table2() {
+        let s = ConfigSpace::for_task(&task(), true);
+        assert_eq!(s.num_knobs(), 7);
+        assert_eq!(s.agent_knobs(KnobOwner::Hardware).len(), 3);
+        assert_eq!(s.agent_knobs(KnobOwner::Scheduling).len(), 2);
+        assert_eq!(s.agent_knobs(KnobOwner::Mapping).len(), 2);
+    }
+
+    #[test]
+    fn space_size_order_matches_paper() {
+        // Paper: O(2^12). Our space: 4*4*4*2*2*|th|*|tw|.
+        let s = ConfigSpace::for_task(&task(), true);
+        let size = s.size();
+        assert!(size >= 1 << 10 && size <= 1 << 15, "size {size}");
+    }
+
+    #[test]
+    fn frozen_hardware_shrinks_space() {
+        let full = ConfigSpace::for_task(&task(), true);
+        let sw = ConfigSpace::for_task(&task(), false);
+        assert_eq!(full.size(), sw.size() * 4 * 4 * 4);
+    }
+
+    #[test]
+    fn default_point_decodes_to_vta_default() {
+        let s = ConfigSpace::for_task(&task(), true);
+        let (hw, _) = s.decode(&s.default_point());
+        assert_eq!((hw.batch, hw.block_in, hw.block_out), (1, 16, 16));
+    }
+
+    #[test]
+    fn flat_index_roundtrip() {
+        let s = ConfigSpace::for_task(&task(), true);
+        let mut rng = Pcg32::seeded(4);
+        for _ in 0..200 {
+            let p = s.random_point(&mut rng);
+            let idx = s.flat_index(&p);
+            assert_eq!(s.from_flat_index(idx), p);
+        }
+    }
+
+    #[test]
+    fn frozen_random_points_keep_default_hw() {
+        let s = ConfigSpace::for_task(&task(), false);
+        let mut rng = Pcg32::seeded(9);
+        for _ in 0..50 {
+            let p = s.random_point(&mut rng);
+            let (hw, _) = s.decode(&p);
+            assert_eq!((hw.batch, hw.block_in, hw.block_out), (1, 16, 16));
+        }
+    }
+
+    #[test]
+    fn neighbours_step_one_knob() {
+        let s = ConfigSpace::for_task(&task(), true);
+        let p = s.default_point();
+        for q in s.neighbours(&p) {
+            let diff: usize = p
+                .0
+                .iter()
+                .zip(&q.0)
+                .map(|(&a, &b)| (a as i64 - b as i64).unsigned_abs() as usize)
+                .sum();
+            assert_eq!(diff, 1);
+            assert!(s.contains(&q));
+        }
+    }
+
+    #[test]
+    fn frozen_space_has_no_hw_neighbours() {
+        let s = ConfigSpace::for_task(&task(), false);
+        let p = s.default_point();
+        for q in s.neighbours(&p) {
+            let (hw, _) = s.decode(&q);
+            assert_eq!((hw.batch, hw.block_in, hw.block_out), (1, 16, 16));
+        }
+    }
+
+    #[test]
+    fn tile_candidates_cover_extremes() {
+        let c = tile_candidates(112);
+        assert_eq!(*c.first().unwrap(), 1);
+        assert_eq!(*c.last().unwrap(), 112);
+        assert!(c.len() <= 8);
+        assert!(c.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn normalized_in_unit_box() {
+        let s = ConfigSpace::for_task(&task(), true);
+        let s2 = s.clone();
+        check(
+            "normalized-unit-box",
+            0xA5,
+            100,
+            move |r| s2.random_point(r),
+            |p| {
+                for f in s.normalized(p) {
+                    prop_assert!((0.0..=1.0).contains(&f), "feature {f} out of [0,1]");
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn render_mentions_all_knobs() {
+        let s = ConfigSpace::for_task(&task(), true);
+        let txt = s.render(&s.default_point());
+        for k in &s.knobs {
+            assert!(txt.contains(k.name), "{txt}");
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! The co-optimization design space (Table 2).
+//!
+//! Seven knobs per convolution task, partitioned across the three MARL
+//! agents exactly as the paper assigns them:
+//!
+//! | Agent                  | Knobs                      |
+//! |------------------------|----------------------------|
+//! | Hardware agent         | `tile_b`, `tile_ci`, `tile_co` (the VTA++ GEMM geometry: BATCH, BLOCK_IN, BLOCK_OUT) |
+//! | Scheduling agent (sw)  | `h_threading`, `oc_threading` (virtual-thread parallelism) |
+//! | Mapping agent (sw)     | `tile_h`, `tile_w` (spatial data distribution) |
+//!
+//! The full space is O(2^12) configurations per task, matching the paper.
+//! Software-only baselines (AutoTVM, CHAMELEON) get the same space with the
+//! hardware knobs frozen at the VTA++ default (§4.1).
+
+pub mod knob;
+
+pub use knob::{ConfigSpace, Knob, KnobOwner, PointConfig, SwConfig};

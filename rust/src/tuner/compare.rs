@@ -1,0 +1,300 @@
+//! Framework comparison driver: tunes every unique task of a network with
+//! each framework and aggregates end-to-end inference time, compilation
+//! time and convergence traces — the data behind Fig. 5, Fig. 6, Fig. 7
+//! and Table 6.
+
+use super::strategy::Strategy;
+use super::task_tuner::{tune_task, TaskTuneResult, TuneBudget};
+use crate::baselines::{AutoTvm, Chameleon, RandomSearch};
+use crate::baselines::autotvm::AutoTvmParams;
+use crate::baselines::chameleon::ChameleonParams;
+use crate::marl::strategy::{Arco, ArcoParams};
+use crate::space::ConfigSpace;
+use crate::workload::ModelSpec;
+
+/// Frameworks under comparison.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Framework {
+    AutoTvm,
+    Chameleon,
+    Arco,
+    /// Ablations / sanity baselines.
+    Random,
+    /// ARCO with Confidence Sampling disabled (Fig. 4 "before").
+    ArcoNoCs,
+    /// ARCO with hardware knobs frozen (isolates the co-design gain).
+    ArcoSwOnly,
+}
+
+impl Framework {
+    pub fn name(self) -> &'static str {
+        match self {
+            Framework::AutoTvm => "autotvm",
+            Framework::Chameleon => "chameleon",
+            Framework::Arco => "arco",
+            Framework::Random => "random",
+            Framework::ArcoNoCs => "arco-nocs",
+            Framework::ArcoSwOnly => "arco-swonly",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Framework> {
+        Some(match s {
+            "autotvm" => Framework::AutoTvm,
+            "chameleon" => Framework::Chameleon,
+            "arco" => Framework::Arco,
+            "random" => Framework::Random,
+            "arco-nocs" => Framework::ArcoNoCs,
+            "arco-swonly" => Framework::ArcoSwOnly,
+            _ => return None,
+        })
+    }
+
+    /// The paper's three (Figs. 5-7, Table 6).
+    pub fn paper_set() -> Vec<Framework> {
+        vec![Framework::AutoTvm, Framework::Chameleon, Framework::Arco]
+    }
+
+    /// Does this framework explore hardware knobs?
+    pub fn tunes_hardware(self) -> bool {
+        matches!(self, Framework::Arco | Framework::ArcoNoCs)
+    }
+
+    /// Instantiate a strategy for one task space.
+    pub fn build(self, space: ConfigSpace, quick: bool, seed: u64) -> Box<dyn Strategy> {
+        match self {
+            Framework::AutoTvm => {
+                let p = if quick { AutoTvmParams::quick() } else { AutoTvmParams::default() };
+                Box::new(AutoTvm::new(space, p, seed))
+            }
+            Framework::Chameleon => {
+                let p = if quick { ChameleonParams::quick() } else { ChameleonParams::default() };
+                Box::new(Chameleon::new(space, p, seed))
+            }
+            Framework::Arco | Framework::ArcoSwOnly => {
+                let p = if quick { ArcoParams::quick() } else { ArcoParams::default() };
+                Box::new(Arco::new(space, p, seed))
+            }
+            Framework::ArcoNoCs => {
+                let mut p = if quick { ArcoParams::quick() } else { ArcoParams::default() };
+                p.use_cs = false;
+                Box::new(Arco::new(space, p, seed))
+            }
+            Framework::Random => Box::new(RandomSearch::new(space, seed)),
+        }
+    }
+}
+
+/// Per-task outcome inside a model run.
+#[derive(Debug, Clone)]
+pub struct TaskOutcome {
+    pub task_id: String,
+    pub weight: usize,
+    pub result: TaskTuneResult,
+}
+
+/// One (framework, model) outcome.
+#[derive(Debug, Clone)]
+pub struct ModelOutcome {
+    pub framework: Framework,
+    pub model: String,
+    pub tasks: Vec<TaskOutcome>,
+    /// End-to-end mean inference time (s): Σ weight × best task runtime.
+    pub inference_secs: f64,
+    /// Total compilation time across tasks (s): search wall-clock plus the
+    /// modeled hardware-measurement time (overhead + repeats x runtime per
+    /// config) — the quantity the paper's Fig. 6 compares.
+    pub compile_secs: f64,
+    /// Search-only wall-clock (planner/learner compute, excl. measurements).
+    pub search_secs: f64,
+    /// Total hardware measurements spent.
+    pub measurements: usize,
+}
+
+impl ModelOutcome {
+    /// Throughput in inferences/second.
+    pub fn throughput(&self) -> f64 {
+        if self.inference_secs > 0.0 {
+            1.0 / self.inference_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Full comparison report (all frameworks × one model).
+#[derive(Debug, Clone)]
+pub struct CompareReport {
+    pub model: String,
+    pub outcomes: Vec<ModelOutcome>,
+}
+
+impl CompareReport {
+    pub fn outcome(&self, f: Framework) -> Option<&ModelOutcome> {
+        self.outcomes.iter().find(|o| o.framework == f)
+    }
+
+    /// Fig. 6's optimization-time metric: modeled time for `f` to reach
+    /// AutoTVM's final per-task quality (time-to-parity), plus its own
+    /// search compute. The paper benchmarks at "the same AutoTVM
+    /// compilation duration"; time-to-parity is the inverse view of that
+    /// protocol and is robust to frameworks with different space sizes.
+    pub fn compile_secs_to_parity(&self, f: Framework) -> Option<f64> {
+        let base = self.outcome(Framework::AutoTvm)?;
+        let ours = self.outcome(f)?;
+        let mut total = ours.search_secs;
+        for t in &ours.tasks {
+            let target = base
+                .tasks
+                .iter()
+                .find(|b| b.task_id == t.task_id)
+                .map(|b| b.result.best.gflops)
+                .unwrap_or(0.0);
+            total += t.result.modeled_secs_to_quality(target);
+        }
+        Some(total)
+    }
+
+    /// Throughput of `f` normalized to AutoTVM (Fig. 5's y-axis).
+    pub fn throughput_vs_autotvm(&self, f: Framework) -> Option<f64> {
+        let base = self.outcome(Framework::AutoTvm)?.throughput();
+        let ours = self.outcome(f)?.throughput();
+        if base > 0.0 {
+            Some(ours / base)
+        } else {
+            None
+        }
+    }
+}
+
+/// Tune one model end-to-end with one framework.
+pub fn tune_model(
+    framework: Framework,
+    model: &ModelSpec,
+    budget: TuneBudget,
+    quick: bool,
+    seed: u64,
+) -> ModelOutcome {
+    let mut tasks = Vec::new();
+    let mut inference_secs = 0.0f64;
+    let mut compile_secs = 0.0f64;
+    let mut search_secs = 0.0f64;
+    let mut measurements = 0usize;
+    for (i, (task, weight)) in model.unique_tasks().iter().enumerate() {
+        let space = ConfigSpace::for_task(task, framework.tunes_hardware());
+        let mut strategy = framework.build(space.clone(), quick, seed ^ (i as u64) << 32);
+        let result = tune_task(&space, strategy.as_mut(), budget);
+        crate::log_info!(
+            "compare",
+            "{} {} task {}/{} {}: best {:.3e}s over {} measurements ({})",
+            framework.name(),
+            model.name,
+            i + 1,
+            model.unique_tasks().len(),
+            task.short_id(),
+            result.best.seconds,
+            result.measurements,
+            strategy.diag()
+        );
+        inference_secs += *weight as f64 * result.best.seconds;
+        compile_secs += result.wall_secs + result.modeled_hw_secs;
+        search_secs += result.wall_secs;
+        measurements += result.measurements;
+        tasks.push(TaskOutcome { task_id: task.short_id(), weight: *weight, result });
+    }
+    ModelOutcome {
+        framework,
+        model: model.name.to_string(),
+        tasks,
+        inference_secs,
+        compile_secs,
+        search_secs,
+        measurements,
+    }
+}
+
+/// Compare a set of frameworks on one model.
+pub fn compare_frameworks(
+    frameworks: &[Framework],
+    model: &ModelSpec,
+    budget: TuneBudget,
+    quick: bool,
+    seed: u64,
+) -> CompareReport {
+    let outcomes = frameworks
+        .iter()
+        .map(|&f| tune_model(f, model, budget, quick, seed))
+        .collect();
+    CompareReport { model: model.name.to_string(), outcomes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::model_by_name;
+
+    fn tiny_budget() -> TuneBudget {
+        TuneBudget { total_measurements: 48, batch: 16, workers: 2, ..Default::default() }
+    }
+
+    #[test]
+    fn framework_names_roundtrip() {
+        for f in [
+            Framework::AutoTvm,
+            Framework::Chameleon,
+            Framework::Arco,
+            Framework::Random,
+            Framework::ArcoNoCs,
+            Framework::ArcoSwOnly,
+        ] {
+            assert_eq!(Framework::from_name(f.name()), Some(f));
+        }
+        assert_eq!(Framework::from_name("nope"), None);
+    }
+
+    #[test]
+    fn hardware_tuning_partition() {
+        assert!(Framework::Arco.tunes_hardware());
+        assert!(!Framework::AutoTvm.tunes_hardware());
+        assert!(!Framework::Chameleon.tunes_hardware());
+        assert!(!Framework::ArcoSwOnly.tunes_hardware());
+    }
+
+    #[test]
+    fn tune_model_aggregates_weighted_inference_time() {
+        // AlexNet is the smallest zoo model (5 tasks, weight 1 each).
+        let model = model_by_name("alexnet").unwrap();
+        let out = tune_model(Framework::Random, &model, tiny_budget(), true, 3);
+        assert_eq!(out.tasks.len(), model.unique_tasks().len());
+        let manual: f64 = out
+            .tasks
+            .iter()
+            .map(|t| t.weight as f64 * t.result.best.seconds)
+            .sum();
+        assert!((out.inference_secs - manual).abs() < 1e-12);
+        assert!(out.inference_secs.is_finite() && out.inference_secs > 0.0);
+        // Budget is an upper bound: tiny layers (e.g. 13x13 planes with only
+        // two tile candidates per dim) have spaces smaller than the budget
+        // and exhaust early.
+        for t in &out.tasks {
+            assert!(t.result.measurements <= 48);
+            assert!(t.result.measurements > 0);
+        }
+        assert!(out.measurements <= 48 * model.unique_tasks().len());
+    }
+
+    #[test]
+    fn compare_report_normalizes_to_autotvm() {
+        let model = model_by_name("alexnet").unwrap();
+        let report = compare_frameworks(
+            &[Framework::AutoTvm, Framework::Random],
+            &model,
+            tiny_budget(),
+            true,
+            5,
+        );
+        let rel = report.throughput_vs_autotvm(Framework::AutoTvm).unwrap();
+        assert!((rel - 1.0).abs() < 1e-12);
+        assert!(report.throughput_vs_autotvm(Framework::Random).unwrap() > 0.0);
+    }
+}

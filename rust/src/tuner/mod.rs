@@ -1,0 +1,11 @@
+//! Tuning orchestration: the iterate → plan → measure → learn loop shared
+//! by every framework (Fig. 2's outer cycle), per-task and per-model
+//! drivers, and the comparison harness behind Figs. 5–7 / Table 6.
+
+pub mod compare;
+pub mod strategy;
+pub mod task_tuner;
+
+pub use compare::{compare_frameworks, tune_model, CompareReport, Framework, ModelOutcome};
+pub use strategy::Strategy;
+pub use task_tuner::{tune_task, TaskTuneResult, TraceEntry, TuneBudget};

@@ -1,0 +1,27 @@
+//! The strategy interface every framework implements.
+
+use crate::codegen::MeasureResult;
+use crate::space::PointConfig;
+
+/// A search strategy: plans measurement batches, learns from results.
+///
+/// The orchestrator ([`super::tune_task`]) owns the measurement budget and
+/// the simulator; strategies only decide *what* to measure next. This is the
+/// same division AutoTVM/CHAMELEON/ARCO share in the paper (§2.3's
+/// argmax over f[τ(Θ)] with different explorers/samplers plugged in).
+pub trait Strategy {
+    /// Framework name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Propose up to `batch` *distinct, unmeasured* configurations.
+    /// Returning fewer (or none) ends the tuning run early.
+    fn plan(&mut self, batch: usize) -> Vec<PointConfig>;
+
+    /// Digest a batch of hardware measurements.
+    fn observe(&mut self, results: &[(PointConfig, MeasureResult)]);
+
+    /// Optional: strategy-specific diagnostics line for logs.
+    fn diag(&self) -> String {
+        String::new()
+    }
+}

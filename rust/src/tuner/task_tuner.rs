@@ -1,0 +1,288 @@
+//! Per-task tuning loop: budgeted plan → parallel measure → observe.
+
+use super::strategy::Strategy;
+use crate::codegen::{measure_point, MeasureResult};
+use crate::space::{ConfigSpace, PointConfig};
+use crate::util::pool::parallel_map;
+use crate::util::timer::{PhaseTimer, Stopwatch};
+
+/// Measurement budget (Table 4/5: Σb = 1000, b = 64).
+#[derive(Debug, Clone, Copy)]
+pub struct TuneBudget {
+    /// Total hardware measurements allowed.
+    pub total_measurements: usize,
+    /// Measurements per iteration (planning batch).
+    pub batch: usize,
+    /// Worker threads for parallel simulation.
+    pub workers: usize,
+    /// Area feasibility ceiling (mm²) for the *final* configuration:
+    /// configurations above it are measured (they inform the cost model)
+    /// but can never be selected as best — an over-budget accelerator is
+    /// not implementable (Eq. 4's hard form).
+    pub area_budget_mm2: f64,
+    /// Planning iterations allowed (Table 4's iteration_opt=16). Strategies
+    /// that plan fewer configs per iteration (ARCO's Confidence Sampling)
+    /// therefore spend fewer total hardware measurements.
+    pub max_iterations: usize,
+    /// Modeled cost of one hardware measurement on a real testbed:
+    /// fixed setup/transfer overhead (s)...
+    pub measure_overhead_secs: f64,
+    /// ...plus `repeats` timed runs of the configuration...
+    pub measure_repeats: usize,
+    /// ...and a timeout charge for invalid configurations (a build/run
+    /// failure still wastes wall-clock on real hardware).
+    pub invalid_timeout_secs: f64,
+}
+
+impl Default for TuneBudget {
+    fn default() -> Self {
+        TuneBudget {
+            total_measurements: 1000,
+            batch: 64,
+            workers: crate::util::pool::default_workers(),
+            area_budget_mm2: crate::vta::area::default_area_budget_mm2(),
+            max_iterations: 16,
+            measure_overhead_secs: 0.05,
+            measure_repeats: 10,
+            invalid_timeout_secs: 1.0,
+        }
+    }
+}
+
+/// One measured configuration in the tuning trace (Fig. 4 / Fig. 7 data).
+#[derive(Debug, Clone)]
+pub struct TraceEntry {
+    /// Measurement ordinal (1-based).
+    pub ordinal: usize,
+    /// Iteration the measurement belonged to.
+    pub iteration: usize,
+    /// Wall-clock seconds since tuning started when this was measured.
+    pub at_secs: f64,
+    /// Achieved GFLOPS (0 for invalid configs).
+    pub gflops: f64,
+    /// Best GFLOPS so far (running max).
+    pub best_gflops: f64,
+    /// Whether the config was valid.
+    pub valid: bool,
+    /// Cumulative *modeled* hardware-measurement time (s) up to and
+    /// including this measurement (see `TuneBudget::measure_overhead_secs`).
+    pub modeled_cum_secs: f64,
+}
+
+/// Outcome of tuning one task.
+#[derive(Debug, Clone)]
+pub struct TaskTuneResult {
+    pub best_point: Option<PointConfig>,
+    pub best: MeasureResult,
+    pub measurements: usize,
+    pub invalid: usize,
+    pub wall_secs: f64,
+    /// Modeled wall-clock a real testbed would spend on the hardware
+    /// measurements (overhead + repeats x runtime; timeout for invalid) —
+    /// the dominant term of "compilation time" in the paper's Fig. 6.
+    pub modeled_hw_secs: f64,
+    pub trace: Vec<TraceEntry>,
+    pub timer: PhaseTimer,
+}
+
+impl TaskTuneResult {
+    /// Best measured task runtime in seconds (inf if nothing valid).
+    pub fn best_seconds(&self) -> f64 {
+        self.best.seconds
+    }
+
+    /// Modeled time (s) until the running best first reached
+    /// `target_gflops` — the time-to-quality metric behind Fig. 6.
+    /// Returns the full modeled time if the target was never reached.
+    pub fn modeled_secs_to_quality(&self, target_gflops: f64) -> f64 {
+        for e in &self.trace {
+            if e.best_gflops >= target_gflops {
+                return e.modeled_cum_secs;
+            }
+        }
+        self.modeled_hw_secs
+    }
+}
+
+/// Tune one task with a strategy under a budget.
+pub fn tune_task(
+    space: &ConfigSpace,
+    strategy: &mut dyn Strategy,
+    budget: TuneBudget,
+) -> TaskTuneResult {
+    let sw = Stopwatch::start();
+    let mut timer = PhaseTimer::new();
+    let mut best = MeasureResult {
+        seconds: f64::INFINITY,
+        cycles: 0,
+        gflops: 0.0,
+        area_mm2: 0.0,
+        occupancy: 0.0,
+        valid: false,
+    };
+    let mut best_point: Option<PointConfig> = None;
+    let mut trace = Vec::new();
+    let mut measured = 0usize;
+    let mut invalid = 0usize;
+    let mut iteration = 0usize;
+    let mut modeled_hw_secs = 0.0f64;
+
+    while measured < budget.total_measurements && iteration < budget.max_iterations {
+        let want = budget.batch.min(budget.total_measurements - measured);
+        let plan = timer.time("plan", || strategy.plan(want));
+        if plan.is_empty() {
+            crate::log_debug!("tuner", "{} stopped early at {measured}", strategy.name());
+            break;
+        }
+        let results: Vec<MeasureResult> = timer.time("measure", || {
+            parallel_map(&plan, budget.workers, |_, p| measure_point(space, p))
+        });
+        let pairs: Vec<(PointConfig, MeasureResult)> =
+            plan.into_iter().zip(results).collect();
+        for (p, r) in &pairs {
+            measured += 1;
+            if !r.valid {
+                invalid += 1;
+                modeled_hw_secs += budget.invalid_timeout_secs;
+            } else {
+                modeled_hw_secs +=
+                    budget.measure_overhead_secs + budget.measure_repeats as f64 * r.seconds;
+            }
+            if r.valid && r.area_mm2 <= budget.area_budget_mm2 && r.seconds < best.seconds {
+                best = *r;
+                best_point = Some(p.clone());
+            }
+            trace.push(TraceEntry {
+                ordinal: measured,
+                iteration,
+                at_secs: sw.elapsed_secs(),
+                gflops: r.gflops,
+                best_gflops: best.gflops,
+                valid: r.valid,
+                modeled_cum_secs: modeled_hw_secs,
+            });
+        }
+        timer.time("observe", || strategy.observe(&pairs));
+        iteration += 1;
+    }
+
+    TaskTuneResult {
+        best_point,
+        best,
+        measurements: measured,
+        invalid,
+        wall_secs: sw.elapsed_secs(),
+        modeled_hw_secs,
+        trace,
+        timer,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use crate::workload::Conv2dTask;
+    use std::collections::HashSet;
+
+    /// Trivially random strategy used to exercise the loop.
+    struct RandomProbe {
+        space: ConfigSpace,
+        rng: Pcg32,
+        seen: HashSet<usize>,
+        observed: usize,
+    }
+
+    impl Strategy for RandomProbe {
+        fn name(&self) -> &'static str {
+            "probe"
+        }
+        fn plan(&mut self, batch: usize) -> Vec<PointConfig> {
+            let mut out = Vec::new();
+            let mut attempts = 0;
+            while out.len() < batch && attempts < batch * 50 {
+                let p = self.space.random_point(&mut self.rng);
+                if self.seen.insert(self.space.flat_index(&p)) {
+                    out.push(p);
+                }
+                attempts += 1;
+            }
+            out
+        }
+        fn observe(&mut self, results: &[(PointConfig, MeasureResult)]) {
+            self.observed += results.len();
+        }
+    }
+
+    fn space() -> ConfigSpace {
+        ConfigSpace::for_task(&Conv2dTask::new(1, 32, 28, 28, 32, 3, 3, 1, 1), true)
+    }
+
+    #[test]
+    fn respects_budget_and_finds_something() {
+        let s = space();
+        let mut strat = RandomProbe {
+            space: s.clone(),
+            rng: Pcg32::seeded(1),
+            seen: HashSet::new(),
+            observed: 0,
+        };
+        let budget = TuneBudget { total_measurements: 100, batch: 32, workers: 2, ..Default::default() };
+        let r = tune_task(&s, &mut strat, budget);
+        assert_eq!(r.measurements, 100);
+        assert_eq!(strat.observed, 100);
+        assert!(r.best_point.is_some());
+        assert!(r.best.valid);
+        assert!(r.best_seconds().is_finite());
+        assert_eq!(r.trace.len(), 100);
+    }
+
+    #[test]
+    fn trace_best_is_monotone() {
+        let s = space();
+        let mut strat = RandomProbe {
+            space: s.clone(),
+            rng: Pcg32::seeded(2),
+            seen: HashSet::new(),
+            observed: 0,
+        };
+        let r = tune_task(&s, &mut strat, TuneBudget { total_measurements: 64, batch: 16, workers: 2, ..Default::default() });
+        for w in r.trace.windows(2) {
+            assert!(w[1].best_gflops >= w[0].best_gflops);
+            assert_eq!(w[1].ordinal, w[0].ordinal + 1);
+        }
+    }
+
+    #[test]
+    fn empty_plan_stops_early() {
+        struct Dead;
+        impl Strategy for Dead {
+            fn name(&self) -> &'static str {
+                "dead"
+            }
+            fn plan(&mut self, _batch: usize) -> Vec<PointConfig> {
+                Vec::new()
+            }
+            fn observe(&mut self, _results: &[(PointConfig, MeasureResult)]) {}
+        }
+        let s = space();
+        let r = tune_task(&s, &mut Dead, TuneBudget::default());
+        assert_eq!(r.measurements, 0);
+        assert!(r.best_point.is_none());
+    }
+
+    #[test]
+    fn timer_tracks_phases() {
+        let s = space();
+        let mut strat = RandomProbe {
+            space: s.clone(),
+            rng: Pcg32::seeded(3),
+            seen: HashSet::new(),
+            observed: 0,
+        };
+        let r = tune_task(&s, &mut strat, TuneBudget { total_measurements: 32, batch: 16, workers: 1, ..Default::default() });
+        assert!(r.timer.count("plan") >= 2);
+        assert!(r.timer.count("measure") >= 2);
+        assert!(r.timer.count("observe") >= 2);
+    }
+}

@@ -1,0 +1,234 @@
+//! Criterion-style micro/macro benchmark harness (criterion itself is not in
+//! the offline vendor set).
+//!
+//! Benches are plain binaries (`[[bench]] harness = false`) that construct a
+//! [`BenchRunner`] and register closures. Each benchmark is warmed up, then
+//! run for a target measuring time with per-iteration timing; the runner
+//! reports mean / median / p95 and writes a machine-readable JSON line per
+//! bench under `results/bench/`.
+
+use super::stats;
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+/// Re-export so bench code can `bench::black_box(..)`.
+pub fn black_box<T>(x: T) -> T {
+    bb(x)
+}
+
+/// One benchmark's collected timings.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    /// Optional throughput denominator (elements per iteration).
+    pub elements: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> Option<f64> {
+        self.elements.map(|e| e as f64 / (self.mean_ns * 1e-9))
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub max_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        // Modest defaults: full `cargo bench` regenerates every paper
+        // table/figure and must finish in CI-scale time.
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+/// Collects and reports benchmark results.
+pub struct BenchRunner {
+    suite: String,
+    config: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl BenchRunner {
+    pub fn new(suite: &str) -> Self {
+        // Honour quick mode for smoke runs: ARCO_BENCH_QUICK=1.
+        let mut config = BenchConfig::default();
+        if std::env::var("ARCO_BENCH_QUICK").is_ok_and(|v| v == "1") {
+            config.warmup = Duration::from_millis(20);
+            config.measure = Duration::from_millis(100);
+        }
+        println!("== bench suite: {suite} ==");
+        BenchRunner { suite: suite.to_string(), config, results: Vec::new() }
+    }
+
+    pub fn with_config(mut self, config: BenchConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Benchmark `f` (called once per iteration).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) {
+        self.bench_with_elements(name, None, move || {
+            bb(f());
+        });
+    }
+
+    /// Benchmark with a throughput denominator (e.g. simulated instructions
+    /// per call) so the report can print items/sec.
+    pub fn bench_with_elements(&mut self, name: &str, elements: Option<u64>, mut f: impl FnMut()) {
+        // Warmup.
+        let w = Instant::now();
+        let mut warm_iters = 0usize;
+        while w.elapsed() < self.config.warmup && warm_iters < self.config.max_iters {
+            f();
+            warm_iters += 1;
+        }
+        // Choose a batch size so one batch is ~1ms (keeps timer overhead low
+        // for nanosecond-scale bodies).
+        let per_iter = (w.elapsed().as_secs_f64() / warm_iters.max(1) as f64).max(1e-9);
+        let batch = ((1e-3 / per_iter).ceil() as usize).clamp(1, 65_536);
+
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let mut iters = 0usize;
+        let m = Instant::now();
+        while m.elapsed() < self.config.measure && iters < self.config.max_iters {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let ns = t.elapsed().as_nanos() as f64 / batch as f64;
+            samples_ns.push(ns);
+            iters += batch;
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: stats::mean(&samples_ns),
+            median_ns: stats::median(&samples_ns),
+            p95_ns: stats::percentile(&samples_ns, 95.0),
+            min_ns: samples_ns.iter().cloned().fold(f64::INFINITY, f64::min),
+            elements,
+        };
+        self.print_one(&result);
+        self.results.push(result);
+    }
+
+    fn print_one(&self, r: &BenchResult) {
+        let tput = r
+            .throughput_per_sec()
+            .map(|t| format!("  {:>12.3e} elem/s", t))
+            .unwrap_or_default();
+        println!(
+            "{:<44} mean {:>12}  median {:>12}  p95 {:>12}  ({} iters){tput}",
+            r.name,
+            fmt_ns(r.mean_ns),
+            fmt_ns(r.median_ns),
+            fmt_ns(r.p95_ns),
+            r.iters
+        );
+    }
+
+    /// Write results as JSON to `results/bench/<suite>.json` and return them.
+    pub fn finish(self) -> Vec<BenchResult> {
+        use super::json::Json;
+        let items: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::str(r.name.clone())),
+                    ("iters", Json::num(r.iters as f64)),
+                    ("mean_ns", Json::num(r.mean_ns)),
+                    ("median_ns", Json::num(r.median_ns)),
+                    ("p95_ns", Json::num(r.p95_ns)),
+                    ("min_ns", Json::num(r.min_ns)),
+                    (
+                        "elements",
+                        r.elements.map(|e| Json::num(e as f64)).unwrap_or(Json::Null),
+                    ),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("suite", Json::str(self.suite.clone())),
+            ("results", Json::Arr(items)),
+        ]);
+        let path = std::path::Path::new("results/bench").join(format!("{}.json", self.suite));
+        if let Err(e) = super::json::write_json_file(&path, &doc) {
+            eprintln!("warning: could not write {}: {e}", path.display());
+        }
+        self.results
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3}us", ns / 1e3)
+    } else {
+        format!("{ns:.1}ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut r = BenchRunner::new("unit-test").with_config(BenchConfig {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            max_iters: 100_000,
+        });
+        let mut acc = 0u64;
+        r.bench("add", || {
+            acc = acc.wrapping_add(1);
+            acc
+        });
+        let results = r.finish();
+        assert_eq!(results.len(), 1);
+        assert!(results[0].iters > 0);
+        assert!(results[0].mean_ns > 0.0);
+        assert!(results[0].median_ns <= results[0].p95_ns * 1.0001);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 10,
+            mean_ns: 1000.0,
+            median_ns: 1000.0,
+            p95_ns: 1000.0,
+            min_ns: 1000.0,
+            elements: Some(2000),
+        };
+        let t = r.throughput_per_sec().unwrap();
+        assert!((t - 2e9).abs() / 2e9 < 1e-9);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert_eq!(fmt_ns(5.0), "5.0ns");
+        assert_eq!(fmt_ns(5_000.0), "5.000us");
+        assert_eq!(fmt_ns(5e6), "5.000ms");
+        assert_eq!(fmt_ns(5e9), "5.000s");
+    }
+}

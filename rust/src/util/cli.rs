@@ -1,0 +1,256 @@
+//! Command-line argument parsing (clap is not in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, short `-k value`, and
+//! positional arguments, with typed accessors and a generated usage string.
+
+use std::collections::HashMap;
+
+/// Declarative option spec used for help text and validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub long: &'static str,
+    pub short: Option<char>,
+    pub takes_value: bool,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    values: HashMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// An argument parser for one (sub)command.
+#[derive(Debug, Clone)]
+pub struct Cli {
+    name: String,
+    about: String,
+    opts: Vec<OptSpec>,
+}
+
+impl Cli {
+    pub fn new(name: &str, about: &str) -> Self {
+        Cli { name: name.to_string(), about: about.to_string(), opts: Vec::new() }
+    }
+
+    /// Register a value-taking option.
+    pub fn opt(mut self, long: &'static str, short: Option<char>, help: &'static str, default: Option<&'static str>) -> Self {
+        self.opts.push(OptSpec { long, short, takes_value: true, help, default });
+        self
+    }
+
+    /// Register a boolean flag.
+    pub fn flag(mut self, long: &'static str, short: Option<char>, help: &'static str) -> Self {
+        self.opts.push(OptSpec { long, short, takes_value: false, help, default: None });
+        self
+    }
+
+    fn find_long(&self, long: &str) -> Option<&OptSpec> {
+        self.opts.iter().find(|o| o.long == long)
+    }
+
+    fn find_short(&self, short: char) -> Option<&OptSpec> {
+        self.opts.iter().find(|o| o.short == Some(short))
+    }
+
+    /// Usage/help text.
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let short = o.short.map(|c| format!("-{c}, ")).unwrap_or_else(|| "    ".into());
+            let val = if o.takes_value { " <value>" } else { "" };
+            let def = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  {short}--{}{val}\n        {}{def}\n", o.long, o.help));
+        }
+        s
+    }
+
+    /// Parse a raw token list (not including argv[0]).
+    pub fn parse(&self, tokens: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        for spec in &self.opts {
+            if let Some(d) = spec.default {
+                args.values.insert(spec.long.to_string(), d.to_string());
+            }
+        }
+        let mut it = tokens.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (key, inline) = match rest.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let spec = self
+                    .find_long(key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.takes_value {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| format!("option --{key} requires a value"))?,
+                    };
+                    args.values.insert(key.to_string(), val);
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("flag --{key} does not take a value"));
+                    }
+                    args.flags.push(key.to_string());
+                }
+            } else if let Some(rest) = tok.strip_prefix('-') {
+                if rest.is_empty() || rest.chars().next().unwrap().is_ascii_digit() {
+                    // A lone "-" or negative number: positional.
+                    args.positional.push(tok.clone());
+                    continue;
+                }
+                for (i, c) in rest.chars().enumerate() {
+                    let spec = self
+                        .find_short(c)
+                        .ok_or_else(|| format!("unknown option -{c}\n\n{}", self.usage()))?;
+                    if spec.takes_value {
+                        // Value must follow; either glued or next token.
+                        let glued: String = rest.chars().skip(i + 1).collect();
+                        let val = if !glued.is_empty() {
+                            glued
+                        } else {
+                            it.next()
+                                .cloned()
+                                .ok_or_else(|| format!("option -{c} requires a value"))?
+                        };
+                        args.values.insert(spec.long.to_string(), val);
+                        break;
+                    } else {
+                        args.flags.push(spec.long.to_string());
+                    }
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| format!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<u64>()
+                .map(Some)
+                .map_err(|_| format!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| format!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("tune", "tune a model")
+            .opt("model", Some('m'), "model name", Some("resnet18"))
+            .opt("trials", Some('n'), "measurement budget", None)
+            .flag("verbose", Some('v'), "chatty output")
+            .flag("no-cs", None, "disable confidence sampling")
+    }
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cli().parse(&toks(&[])).unwrap();
+        assert_eq!(a.get("model"), Some("resnet18"));
+        assert_eq!(a.get("trials"), None);
+    }
+
+    #[test]
+    fn long_forms() {
+        let a = cli().parse(&toks(&["--model", "vgg16", "--trials=500", "--verbose"])).unwrap();
+        assert_eq!(a.get("model"), Some("vgg16"));
+        assert_eq!(a.get_usize("trials").unwrap(), Some(500));
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("no-cs"));
+    }
+
+    #[test]
+    fn short_forms_and_glued() {
+        let a = cli().parse(&toks(&["-m", "alexnet", "-n128", "-v"])).unwrap();
+        assert_eq!(a.get("model"), Some("alexnet"));
+        assert_eq!(a.get_usize("trials").unwrap(), Some(128));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn positionals_pass_through() {
+        let a = cli().parse(&toks(&["run", "--verbose", "extra"])).unwrap();
+        assert_eq!(a.positional(), &["run".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn unknown_rejected() {
+        assert!(cli().parse(&toks(&["--bogus"])).is_err());
+        assert!(cli().parse(&toks(&["-z"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cli().parse(&toks(&["--trials"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(cli().parse(&toks(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn bad_int_reported() {
+        let a = cli().parse(&toks(&["--trials", "abc"])).unwrap();
+        assert!(a.get_usize("trials").is_err());
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = cli().usage();
+        assert!(u.contains("--model"));
+        assert!(u.contains("--no-cs"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Infrastructure substrates built from scratch for the offline environment:
+//! RNG, JSON, statistics, logging, timers, CLI parsing, a bench harness, a
+//! property-test driver and a scoped thread pool.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,114 @@
+//! A small scoped worker pool for batched hardware measurements.
+//!
+//! tokio is not in the offline vendor set, and the measurement workload
+//! (simulating a batch of candidate configs on the VTA++ model) is pure CPU
+//! fan-out, so `std::thread::scope` plus a shared atomic work index is the
+//! right tool: no async runtime, no allocation in the steady state, and
+//! deterministic output ordering (results land at their input index).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Map `f` over `items` using up to `workers` OS threads, preserving order.
+///
+/// `f` must be `Sync` (it is shared by reference across workers). Panics in
+/// workers propagate to the caller.
+pub fn parallel_map<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let next = AtomicUsize::new(0);
+    // SAFETY-free approach: split `out` into per-index cells via raw pointers
+    // is avoided; instead each worker collects (idx, result) pairs and we
+    // merge afterwards. Simplicity over the last few percent.
+    let chunks: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(i, &items[i])));
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    });
+    for chunk in chunks {
+        for (i, r) in chunk {
+            out[i] = Some(r);
+        }
+    }
+    out.into_iter().map(|r| r.expect("missing result")).collect()
+}
+
+/// Default worker count: physical parallelism minus one spare, at least 1.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).saturating_sub(1).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = parallel_map(&items, 8, |_, &x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_path() {
+        let items = vec![1, 2, 3];
+        let out = parallel_map(&items, 1, |i, &x| i + x);
+        assert_eq!(out, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let items: Vec<u32> = vec![];
+        let out: Vec<u32> = parallel_map(&items, 4, |_, &x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        let items = vec![10, 20];
+        let out = parallel_map(&items, 16, |_, &x| x + 1);
+        assert_eq!(out, vec![11, 21]);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker panicked")]
+    fn worker_panic_propagates() {
+        let items = vec![0usize, 1, 2, 3, 4, 5, 6, 7];
+        let _ = parallel_map(&items, 4, |_, &x| {
+            if x == 3 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn default_workers_positive() {
+        assert!(default_workers() >= 1);
+    }
+}

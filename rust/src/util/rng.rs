@@ -1,0 +1,285 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! crates.io is unavailable in this build environment, so instead of the
+//! `rand` crate we ship a small, well-tested PCG-XSH-RR 64/32 generator plus
+//! the handful of distributions the tuners need (uniform ints/floats,
+//! Gaussian via Box-Muller, categorical/weighted choice, shuffling).
+//! Everything in the framework that uses randomness threads one of these
+//! through explicitly, so whole tuning runs are reproducible from a seed.
+
+/// PCG-XSH-RR 64/32: 64-bit state, 32-bit output, period 2^64 per stream.
+///
+/// Reference: O'Neill, "PCG: A Family of Simple Fast Space-Efficient
+/// Statistically Good Algorithms for Random Number Generation" (2014).
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg32 {
+    /// Create a generator from a seed and stream id.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Create a generator from a seed with the default stream.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    /// Derive an independent child generator (used to give each worker
+    /// thread / agent its own stream while staying reproducible).
+    pub fn split(&mut self) -> Self {
+        let seed = ((self.next_u32() as u64) << 32) | self.next_u32() as u64;
+        let stream = ((self.next_u32() as u64) << 32) | self.next_u32() as u64;
+        Self::new(seed, stream)
+    }
+
+    /// Next raw 32 bits.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next raw 64 bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform integer in `[0, bound)` without modulo bias (Lemire's method).
+    #[inline]
+    pub fn gen_range(&mut self, bound: usize) -> usize {
+        assert!(bound > 0, "gen_range bound must be positive");
+        let bound = bound as u64;
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(bound as u128);
+            let l = m as u64;
+            if l >= bound || l >= l.wrapping_neg() % bound {
+                return (m >> 64) as usize;
+            }
+        }
+    }
+
+    /// Uniform integer in `[lo, hi)`.
+    #[inline]
+    pub fn gen_range_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo, "empty range");
+        lo + self.gen_range(hi - lo)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn gen_f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn gen_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    #[inline]
+    pub fn gen_f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.gen_f64()
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.gen_f64() < p
+    }
+
+    /// Standard normal via Box-Muller (one value per call; simple > fast
+    /// here, the tuners draw few Gaussians).
+    pub fn gen_normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.gen_f64();
+            if u1 > f64::EPSILON {
+                let u2 = self.gen_f64();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    /// Falls back to uniform if all weights are zero/non-finite.
+    pub fn gen_weighted(&mut self, weights: &[f64]) -> usize {
+        assert!(!weights.is_empty());
+        let total: f64 = weights.iter().filter(|w| w.is_finite() && **w > 0.0).sum();
+        if total <= 0.0 {
+            return self.gen_range(weights.len());
+        }
+        let mut target = self.gen_f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            if w.is_finite() && w > 0.0 {
+                target -= w;
+                if target <= 0.0 {
+                    return i;
+                }
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.gen_range(i + 1);
+            items.swap(i, j);
+        }
+    }
+
+    /// Choose `k` distinct indices from `[0, n)` (reservoir if k << n).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let k = k.min(n);
+        if k * 4 >= n {
+            let mut idx: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut idx);
+            idx.truncate(k);
+            idx
+        } else {
+            // Floyd's algorithm for sparse sampling.
+            let mut chosen = std::collections::HashSet::with_capacity(k);
+            let mut out = Vec::with_capacity(k);
+            for j in (n - k)..n {
+                let t = self.gen_range(j + 1);
+                let pick = if chosen.contains(&t) { j } else { t };
+                chosen.insert(pick);
+                out.push(pick);
+            }
+            out
+        }
+    }
+
+    /// Pick a uniform element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.gen_range(items.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg32::seeded(42);
+        let mut b = Pcg32::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg32::seeded(1);
+        let mut b = Pcg32::seeded(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn range_is_unbiased_enough() {
+        let mut rng = Pcg32::seeded(7);
+        let mut counts = [0usize; 10];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[rng.gen_range(10)] += 1;
+        }
+        for &c in &counts {
+            let expect = n / 10;
+            assert!((c as i64 - expect as i64).abs() < (expect as i64 / 10));
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Pcg32::seeded(3);
+        for _ in 0..10_000 {
+            let x = rng.gen_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_mean_and_var() {
+        let mut rng = Pcg32::seeded(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.gen_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn weighted_respects_weights() {
+        let mut rng = Pcg32::seeded(5);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[rng.gen_weighted(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn weighted_all_zero_falls_back_uniform() {
+        let mut rng = Pcg32::seeded(5);
+        let w = [0.0, 0.0];
+        let mut seen = [false; 2];
+        for _ in 0..100 {
+            seen[rng.gen_weighted(&w)] = true;
+        }
+        assert!(seen[0] && seen[1]);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg32::seeded(9);
+        let mut v: Vec<usize> = (0..50).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut rng = Pcg32::seeded(13);
+        for &(n, k) in &[(100usize, 5usize), (10, 10), (1000, 3), (8, 6)] {
+            let s = rng.sample_indices(n, k);
+            assert_eq!(s.len(), k.min(n));
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), s.len());
+            assert!(s.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut root = Pcg32::seeded(21);
+        let mut c1 = root.split();
+        let mut c2 = root.split();
+        let same = (0..64).filter(|_| c1.next_u32() == c2.next_u32()).count();
+        assert!(same < 4);
+    }
+}

@@ -1,0 +1,181 @@
+//! Wall-clock timing helpers and a hierarchical phase profiler used by the
+//! tuning orchestrator (compilation-time accounting for Fig 6) and the bench
+//! harness.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulates named phase durations; thread-unaware by design (each tuner
+/// owns one and the orchestrator merges them).
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    totals: HashMap<String, Duration>,
+    counts: HashMap<String, u64>,
+    order: Vec<String>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under a phase name.
+    pub fn time<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let sw = Stopwatch::start();
+        let out = f();
+        self.add(phase, sw.elapsed());
+        out
+    }
+
+    /// Add an externally measured duration.
+    pub fn add(&mut self, phase: &str, d: Duration) {
+        if !self.totals.contains_key(phase) {
+            self.order.push(phase.to_string());
+        }
+        *self.totals.entry(phase.to_string()).or_default() += d;
+        *self.counts.entry(phase.to_string()).or_default() += 1;
+    }
+
+    /// Merge another timer into this one (phase-wise sums).
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for phase in &other.order {
+            self.add(phase, other.totals[phase]);
+            // add() bumps count by one; fix up to the real count.
+            let c = self.counts.get_mut(phase).unwrap();
+            *c = *c - 1 + other.counts[phase];
+        }
+    }
+
+    pub fn total(&self, phase: &str) -> Duration {
+        self.totals.get(phase).copied().unwrap_or_default()
+    }
+
+    pub fn total_secs(&self, phase: &str) -> f64 {
+        self.total(phase).as_secs_f64()
+    }
+
+    pub fn count(&self, phase: &str) -> u64 {
+        self.counts.get(phase).copied().unwrap_or(0)
+    }
+
+    pub fn grand_total(&self) -> Duration {
+        self.totals.values().sum()
+    }
+
+    /// Phases in first-seen order with (total, count).
+    pub fn phases(&self) -> Vec<(&str, Duration, u64)> {
+        self.order
+            .iter()
+            .map(|p| (p.as_str(), self.totals[p], self.counts[p]))
+            .collect()
+    }
+
+    /// Human-readable summary table.
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        let grand = self.grand_total().as_secs_f64().max(1e-12);
+        for (phase, total, count) in self.phases() {
+            let secs = total.as_secs_f64();
+            s.push_str(&format!(
+                "{phase:<28} {secs:>10.3}s  {:>5.1}%  x{count}\n",
+                100.0 * secs / grand
+            ));
+        }
+        s
+    }
+}
+
+/// Format a duration compactly for reports ("1.23s", "45ms", "12.3us").
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.2}us", s * 1e6)
+    } else {
+        format!("{:.0}ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_advances() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(sw.elapsed_secs() > 0.0);
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut t = PhaseTimer::new();
+        t.add("measure", Duration::from_millis(10));
+        t.add("measure", Duration::from_millis(20));
+        t.add("plan", Duration::from_millis(5));
+        assert_eq!(t.count("measure"), 2);
+        assert_eq!(t.total("measure"), Duration::from_millis(30));
+        assert_eq!(t.grand_total(), Duration::from_millis(35));
+        let phases: Vec<&str> = t.phases().iter().map(|(p, _, _)| *p).collect();
+        assert_eq!(phases, vec!["measure", "plan"]);
+    }
+
+    #[test]
+    fn merge_sums_counts() {
+        let mut a = PhaseTimer::new();
+        a.add("x", Duration::from_millis(1));
+        let mut b = PhaseTimer::new();
+        b.add("x", Duration::from_millis(2));
+        b.add("x", Duration::from_millis(2));
+        b.add("y", Duration::from_millis(3));
+        a.merge(&b);
+        assert_eq!(a.count("x"), 3);
+        assert_eq!(a.total("x"), Duration::from_millis(5));
+        assert_eq!(a.total("y"), Duration::from_millis(3));
+    }
+
+    #[test]
+    fn time_returns_value() {
+        let mut t = PhaseTimer::new();
+        let v = t.time("f", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(t.count("f"), 1);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.00s");
+        assert_eq!(fmt_duration(Duration::from_millis(45)), "45.00ms");
+        assert_eq!(fmt_duration(Duration::from_micros(12)), "12.00us");
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500ns");
+    }
+}

@@ -1,0 +1,100 @@
+//! Silicon area model for VTA++ instances.
+//!
+//! The paper's constraint mechanism (Eq. 4) penalizes configurations whose
+//! `area(Θ)` exceeds `area_max`. We estimate area in a 16 nm-class process
+//! from public accelerator datapoints: an int8 MAC plus its share of the
+//! systolic interconnect ≈ 500 µm², SRAM ≈ 0.6 mm² per MiB for dense
+//! single-port arrays, plus a fixed controller/DMA overhead. Absolute
+//! numbers only need to be *consistent* — the penalty compares candidate
+//! configs against a budget expressed in the same units.
+
+use super::config::VtaConfig;
+
+/// Area of one int8 MAC unit including pipeline registers (mm^2).
+pub const MAC_AREA_MM2: f64 = 500.0e-6;
+/// SRAM macro density (mm^2 per KiB).
+pub const SRAM_AREA_MM2_PER_KIB: f64 = 0.6 / 1024.0;
+/// Fixed overhead: fetch/decode, DMA engines, token queues (mm^2).
+pub const CONTROL_AREA_MM2: f64 = 0.25;
+/// Accumulator register-file density (mm^2 per KiB) — flop-heavier than SRAM.
+pub const ACC_AREA_MM2_PER_KIB: f64 = 1.2 / 1024.0;
+
+/// Area breakdown of a hardware instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AreaBreakdown {
+    pub gemm_mm2: f64,
+    pub sram_mm2: f64,
+    pub acc_mm2: f64,
+    pub control_mm2: f64,
+}
+
+impl AreaBreakdown {
+    pub fn total_mm2(&self) -> f64 {
+        self.gemm_mm2 + self.sram_mm2 + self.acc_mm2 + self.control_mm2
+    }
+}
+
+/// Estimate the silicon area of a VTA++ instance.
+pub fn area(hw: &VtaConfig) -> AreaBreakdown {
+    let macs = hw.macs_per_cycle() as f64;
+    // ALU lanes cost roughly one MAC each.
+    let gemm_mm2 = (macs + hw.alu_lanes as f64) * MAC_AREA_MM2;
+    let sram_kib = (hw.inp_buf_kib + hw.wgt_buf_kib + hw.uop_buf_kib) as f64;
+    AreaBreakdown {
+        gemm_mm2,
+        sram_mm2: sram_kib * SRAM_AREA_MM2_PER_KIB,
+        acc_mm2: hw.acc_buf_kib as f64 * ACC_AREA_MM2_PER_KIB,
+        control_mm2: CONTROL_AREA_MM2,
+    }
+}
+
+/// Total area in mm^2 (the `area(Θ)` of Eq. 4).
+pub fn total_area_mm2(hw: &VtaConfig) -> f64 {
+    area(hw).total_mm2()
+}
+
+/// Default area budget used by ARCO's constraint term: 1.25x the default
+/// VTA++ instance. Tight enough that hardware exploration is a *shaping*
+/// exercise (re-balancing BATCH/BLOCK_IN/BLOCK_OUT within roughly the same
+/// silicon, like retargeting an FPGA overlay), not free compute scaling —
+/// this keeps the co-design gains in the paper's 1.1-1.4x regime rather
+/// than letting the agents buy arbitrarily large arrays.
+pub fn default_area_budget_mm2() -> f64 {
+    1.25 * total_area_mm2(&VtaConfig::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_area_is_plausible() {
+        let a = total_area_mm2(&VtaConfig::default());
+        // A 256-MAC int8 accelerator with ~450KiB SRAM: O(1) mm^2.
+        assert!(a > 0.3 && a < 5.0, "{a}");
+    }
+
+    #[test]
+    fn area_monotone_in_macs() {
+        let small = total_area_mm2(&VtaConfig::with_gemm(1, 16, 16));
+        let big = total_area_mm2(&VtaConfig::with_gemm(4, 32, 32));
+        assert!(big > small);
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let hw = VtaConfig::with_gemm(2, 32, 16);
+        let b = area(&hw);
+        assert!((b.total_mm2() - (b.gemm_mm2 + b.sram_mm2 + b.acc_mm2 + b.control_mm2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn budget_excludes_maximal_config() {
+        // The largest VTA++-legal geometry must blow the default budget,
+        // otherwise the constraint term never binds.
+        let max = VtaConfig::with_gemm(16, 128, 128);
+        assert!(total_area_mm2(&max) > default_area_budget_mm2());
+        // ...but the default config fits comfortably.
+        assert!(total_area_mm2(&VtaConfig::default()) < default_area_budget_mm2());
+    }
+}

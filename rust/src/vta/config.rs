@@ -1,0 +1,211 @@
+//! VTA++ hardware configuration.
+//!
+//! VTA++ (Banerjee et al., 2021) keeps VTA's architecture — a GEMM core fed
+//! by on-chip INP/WGT/ACC scratchpads over a decoupled
+//! load/compute/store pipeline — but exposes its geometry as build
+//! parameters. The three the paper's hardware agent tunes ("hardware
+//! knobs", §2.1) are the GEMM tile shape: `BATCH`, `BLOCK_IN`, `BLOCK_OUT`.
+//! The rest (buffer sizes, clock, DRAM interface) stay at VTA++ defaults
+//! but are modelled explicitly so constraint handling (Eq. 4) has real
+//! area/memory numbers to penalize.
+
+use crate::util::json::Json;
+
+/// Data type widths used by VTA: int8 inputs/weights, int32 accumulators,
+/// int8 outputs.
+pub const INP_BYTES: usize = 1;
+pub const WGT_BYTES: usize = 1;
+pub const ACC_BYTES: usize = 4;
+pub const OUT_BYTES: usize = 1;
+
+/// Complete description of one VTA++ hardware instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct VtaConfig {
+    /// GEMM tile rows = data samples processed in parallel (BATCH).
+    pub batch: usize,
+    /// GEMM tile reduction width (BLOCK_IN).
+    pub block_in: usize,
+    /// GEMM tile output width (BLOCK_OUT).
+    pub block_out: usize,
+    /// Input scratchpad capacity in KiB.
+    pub inp_buf_kib: usize,
+    /// Weight scratchpad capacity in KiB.
+    pub wgt_buf_kib: usize,
+    /// Accumulator scratchpad capacity in KiB.
+    pub acc_buf_kib: usize,
+    /// Micro-op cache capacity in KiB.
+    pub uop_buf_kib: usize,
+    /// Core clock in MHz.
+    pub freq_mhz: usize,
+    /// DRAM bytes transferred per core cycle once a DMA burst is streaming.
+    pub dram_bytes_per_cycle: usize,
+    /// Fixed DMA setup latency in cycles (request to first beat).
+    pub dma_latency: usize,
+    /// ALU vector lanes (elements per cycle for post-GEMM ops).
+    pub alu_lanes: usize,
+}
+
+impl Default for VtaConfig {
+    /// VTA++ default specification — the hardware AutoTVM/CHAMELEON use
+    /// (they cannot explore hardware, §4.1): 1x16x16 GEMM, 32 KiB INP,
+    /// 256 KiB WGT, 128 KiB ACC, 32 KiB UOP.
+    fn default() -> Self {
+        VtaConfig {
+            batch: 1,
+            block_in: 16,
+            block_out: 16,
+            inp_buf_kib: 32,
+            wgt_buf_kib: 256,
+            acc_buf_kib: 128,
+            uop_buf_kib: 32,
+            freq_mhz: 100,
+            dram_bytes_per_cycle: 8, // 64-bit AXI @ core clock
+            dma_latency: 32,
+            alu_lanes: 16,
+        }
+    }
+}
+
+impl VtaConfig {
+    /// Hardware instance with a given GEMM geometry, VTA++ defaults
+    /// elsewhere. This is the constructor the hardware agent drives.
+    pub fn with_gemm(batch: usize, block_in: usize, block_out: usize) -> Self {
+        VtaConfig { batch, block_in, block_out, ..Default::default() }
+    }
+
+    /// Multiply-accumulate units in the GEMM array.
+    pub fn macs_per_cycle(&self) -> usize {
+        self.batch * self.block_in * self.block_out
+    }
+
+    /// Peak GOPS (2 ops per MAC) at the configured clock.
+    pub fn peak_gops(&self) -> f64 {
+        2.0 * self.macs_per_cycle() as f64 * self.freq_mhz as f64 * 1e6 / 1e9
+    }
+
+    /// Input scratchpad capacity in bytes.
+    pub fn inp_buf_bytes(&self) -> usize {
+        self.inp_buf_kib * 1024
+    }
+
+    pub fn wgt_buf_bytes(&self) -> usize {
+        self.wgt_buf_kib * 1024
+    }
+
+    pub fn acc_buf_bytes(&self) -> usize {
+        self.acc_buf_kib * 1024
+    }
+
+    /// Sanity-check structural invariants (powers of two, non-zero).
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, v) in [
+            ("batch", self.batch),
+            ("block_in", self.block_in),
+            ("block_out", self.block_out),
+        ] {
+            if v == 0 || !v.is_power_of_two() {
+                return Err(format!("{name} must be a non-zero power of two, got {v}"));
+            }
+        }
+        if self.batch > 16 {
+            return Err(format!("batch {} exceeds VTA++ max of 16", self.batch));
+        }
+        if self.block_in > 128 || self.block_out > 128 {
+            return Err(format!(
+                "block_in/block_out {}x{} exceed VTA++ max of 128",
+                self.block_in, self.block_out
+            ));
+        }
+        if self.freq_mhz == 0 || self.dram_bytes_per_cycle == 0 || self.alu_lanes == 0 {
+            return Err("freq/dram/alu parameters must be non-zero".into());
+        }
+        Ok(())
+    }
+
+    /// Seconds per cycle.
+    pub fn cycle_time(&self) -> f64 {
+        1.0 / (self.freq_mhz as f64 * 1e6)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("batch", Json::num(self.batch as f64)),
+            ("block_in", Json::num(self.block_in as f64)),
+            ("block_out", Json::num(self.block_out as f64)),
+            ("inp_buf_kib", Json::num(self.inp_buf_kib as f64)),
+            ("wgt_buf_kib", Json::num(self.wgt_buf_kib as f64)),
+            ("acc_buf_kib", Json::num(self.acc_buf_kib as f64)),
+            ("uop_buf_kib", Json::num(self.uop_buf_kib as f64)),
+            ("freq_mhz", Json::num(self.freq_mhz as f64)),
+            ("dram_bytes_per_cycle", Json::num(self.dram_bytes_per_cycle as f64)),
+            ("dma_latency", Json::num(self.dma_latency as f64)),
+            ("alu_lanes", Json::num(self.alu_lanes as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<Self> {
+        let d = VtaConfig::default();
+        Some(VtaConfig {
+            batch: v.get_usize("batch")?,
+            block_in: v.get_usize("block_in")?,
+            block_out: v.get_usize("block_out")?,
+            inp_buf_kib: v.get_usize("inp_buf_kib").unwrap_or(d.inp_buf_kib),
+            wgt_buf_kib: v.get_usize("wgt_buf_kib").unwrap_or(d.wgt_buf_kib),
+            acc_buf_kib: v.get_usize("acc_buf_kib").unwrap_or(d.acc_buf_kib),
+            uop_buf_kib: v.get_usize("uop_buf_kib").unwrap_or(d.uop_buf_kib),
+            freq_mhz: v.get_usize("freq_mhz").unwrap_or(d.freq_mhz),
+            dram_bytes_per_cycle: v
+                .get_usize("dram_bytes_per_cycle")
+                .unwrap_or(d.dram_bytes_per_cycle),
+            dma_latency: v.get_usize("dma_latency").unwrap_or(d.dma_latency),
+            alu_lanes: v.get_usize("alu_lanes").unwrap_or(d.alu_lanes),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_vta_spec() {
+        let c = VtaConfig::default();
+        assert_eq!((c.batch, c.block_in, c.block_out), (1, 16, 16));
+        assert_eq!(c.macs_per_cycle(), 256);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn peak_gops_default() {
+        let c = VtaConfig::default();
+        // 256 MACs * 2 * 100 MHz = 51.2 GOPS.
+        assert!((c.peak_gops() - 51.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validate_rejects_non_pow2() {
+        let c = VtaConfig::with_gemm(1, 24, 16);
+        assert!(c.validate().is_err());
+        let c = VtaConfig::with_gemm(0, 16, 16);
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_oversize() {
+        assert!(VtaConfig::with_gemm(32, 16, 16).validate().is_err());
+        assert!(VtaConfig::with_gemm(1, 256, 16).validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = VtaConfig::with_gemm(2, 32, 64);
+        let back = VtaConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn cycle_time_inverse_of_freq() {
+        let c = VtaConfig::default();
+        assert!((c.cycle_time() - 1e-8).abs() < 1e-20);
+    }
+}

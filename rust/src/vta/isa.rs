@@ -1,0 +1,175 @@
+//! The simulator's instruction set: a faithful abstraction of VTA's
+//! task-level ISA.
+//!
+//! VTA decouples memory and compute with three concurrent units — LOAD,
+//! COMPUTE, STORE — synchronized only through dependence token queues
+//! (load→compute, compute→load, compute→store, store→compute). An
+//! instruction may *pop* a token (wait) from a neighbour before starting and
+//! *push* one (signal) after finishing. This is exactly the mechanism that
+//! makes double-buffering / virtual threading work, so the cycle model keeps
+//! it explicit rather than approximating overlap analytically.
+
+/// Which on-chip scratchpad a LOAD targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Buffer {
+    /// Input activations (int8).
+    Inp,
+    /// Weights (int8).
+    Wgt,
+    /// Accumulator (int32) — used to pre-load partial sums / biases.
+    Acc,
+    /// Micro-op kernel cache.
+    Uop,
+}
+
+/// Functional unit that executes an instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Unit {
+    Load,
+    Compute,
+    Store,
+}
+
+/// Dependence-token flags carried by every instruction (VTA's
+/// pop_prev/pop_next/push_prev/push_next semantics, oriented per unit).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Deps {
+    /// Wait for a token from the previous pipeline stage before starting.
+    pub pop_prev: bool,
+    /// Wait for a token from the next pipeline stage before starting.
+    pub pop_next: bool,
+    /// Signal the previous stage on completion.
+    pub push_prev: bool,
+    /// Signal the next stage on completion.
+    pub push_next: bool,
+}
+
+impl Deps {
+    pub const NONE: Deps = Deps { pop_prev: false, pop_next: false, push_prev: false, push_next: false };
+
+    pub fn pop_prev(mut self) -> Self {
+        self.pop_prev = true;
+        self
+    }
+    pub fn pop_next(mut self) -> Self {
+        self.pop_next = true;
+        self
+    }
+    pub fn push_prev(mut self) -> Self {
+        self.push_prev = true;
+        self
+    }
+    pub fn push_next(mut self) -> Self {
+        self.push_next = true;
+        self
+    }
+}
+
+/// One task-level instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// DMA `bytes` from DRAM into `buffer`.
+    Load { buffer: Buffer, bytes: usize },
+    /// Run `uops` GEMM micro-ops (each = one batch x block_in x block_out
+    /// tile MAC, one per cycle when pipelined). `reset` marks accumulator
+    /// initialization passes (same cost, kept for stream readability).
+    Gemm { uops: usize, reset: bool },
+    /// Vector ALU pass over `elems` accumulator elements (shift/min/max/add).
+    Alu { elems: usize },
+    /// DMA `bytes` of outputs back to DRAM.
+    Store { bytes: usize },
+    /// Pure synchronization (FINISH / NOP-with-deps).
+    Sync,
+}
+
+/// Instruction = operation + dependence flags.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Instr {
+    pub op: Op,
+    pub deps: Deps,
+}
+
+impl Instr {
+    pub fn new(op: Op, deps: Deps) -> Self {
+        Instr { op, deps }
+    }
+
+    /// The unit this instruction executes on. Mirrors VTA: LOAD handles
+    /// INP/WGT DMAs; UOP/ACC loads, GEMM and ALU run on COMPUTE; STORE
+    /// handles output DMAs.
+    pub fn unit(&self) -> Unit {
+        match self.op {
+            Op::Load { buffer: Buffer::Inp | Buffer::Wgt, .. } => Unit::Load,
+            Op::Load { buffer: Buffer::Acc | Buffer::Uop, .. } => Unit::Compute,
+            Op::Gemm { .. } | Op::Alu { .. } | Op::Sync => Unit::Compute,
+            Op::Store { .. } => Unit::Store,
+        }
+    }
+}
+
+/// Aggregate statistics of an instruction stream (pre-simulation).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StreamStats {
+    pub instrs: usize,
+    pub gemm_uops: usize,
+    pub load_bytes: usize,
+    pub store_bytes: usize,
+    pub alu_elems: usize,
+}
+
+/// Summarize a stream.
+pub fn stream_stats(stream: &[Instr]) -> StreamStats {
+    let mut s = StreamStats { instrs: stream.len(), ..Default::default() };
+    for i in stream {
+        match i.op {
+            Op::Load { bytes, .. } => s.load_bytes += bytes,
+            Op::Gemm { uops, .. } => s.gemm_uops += uops,
+            Op::Alu { elems } => s.alu_elems += elems,
+            Op::Store { bytes } => s.store_bytes += bytes,
+            Op::Sync => {}
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_routing_matches_vta() {
+        let i = Instr::new(Op::Load { buffer: Buffer::Inp, bytes: 8 }, Deps::NONE);
+        assert_eq!(i.unit(), Unit::Load);
+        let w = Instr::new(Op::Load { buffer: Buffer::Wgt, bytes: 8 }, Deps::NONE);
+        assert_eq!(w.unit(), Unit::Load);
+        let a = Instr::new(Op::Load { buffer: Buffer::Acc, bytes: 8 }, Deps::NONE);
+        assert_eq!(a.unit(), Unit::Compute);
+        let g = Instr::new(Op::Gemm { uops: 4, reset: false }, Deps::NONE);
+        assert_eq!(g.unit(), Unit::Compute);
+        let s = Instr::new(Op::Store { bytes: 8 }, Deps::NONE);
+        assert_eq!(s.unit(), Unit::Store);
+    }
+
+    #[test]
+    fn deps_builder() {
+        let d = Deps::NONE.pop_prev().push_next();
+        assert!(d.pop_prev && d.push_next && !d.pop_next && !d.push_prev);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let stream = vec![
+            Instr::new(Op::Load { buffer: Buffer::Inp, bytes: 100 }, Deps::NONE),
+            Instr::new(Op::Load { buffer: Buffer::Wgt, bytes: 50 }, Deps::NONE),
+            Instr::new(Op::Gemm { uops: 32, reset: false }, Deps::NONE),
+            Instr::new(Op::Alu { elems: 64 }, Deps::NONE),
+            Instr::new(Op::Store { bytes: 16 }, Deps::NONE),
+        ];
+        let s = stream_stats(&stream);
+        assert_eq!(s.instrs, 5);
+        assert_eq!(s.load_bytes, 150);
+        assert_eq!(s.gemm_uops, 32);
+        assert_eq!(s.alu_elems, 64);
+        assert_eq!(s.store_bytes, 16);
+    }
+}

@@ -1,0 +1,15 @@
+//! VTA++ accelerator substrate: configuration, task-level ISA, cycle-level
+//! pipeline simulator and area model.
+//!
+//! This is the "target hardware" of the reproduction. The paper evaluates on
+//! the VTA++ *simulator*; this module is that simulator, rebuilt in rust
+//! (see DESIGN.md §Substitutions).
+
+pub mod area;
+pub mod config;
+pub mod isa;
+pub mod sim;
+
+pub use config::VtaConfig;
+pub use isa::{Buffer, Deps, Instr, Op, Unit};
+pub use sim::{simulate, SimError, SimReport};

@@ -1,0 +1,178 @@
+//! 2-D convolution task descriptions.
+//!
+//! A task is one tunable unit of work, matching TVM's notion of a
+//! convolution "task" extracted from a network: a unique
+//! (N, CI, H, W, CO, KH, KW, stride, pad) shape. The tuners optimize each
+//! task independently and the end-to-end inference time of a network is the
+//! weighted sum of its tasks' runtimes (weight = how many layers share that
+//! shape).
+
+use crate::util::json::Json;
+
+/// One convolution workload shape (NCHW).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Conv2dTask {
+    /// Batch size.
+    pub n: usize,
+    /// Input channels.
+    pub ci: usize,
+    /// Input spatial height.
+    pub h: usize,
+    /// Input spatial width.
+    pub w: usize,
+    /// Output channels.
+    pub co: usize,
+    /// Kernel height.
+    pub kh: usize,
+    /// Kernel width.
+    pub kw: usize,
+    /// Stride (same in both dims, as in all zoo networks).
+    pub stride: usize,
+    /// Zero padding (same on all sides).
+    pub pad: usize,
+}
+
+impl Conv2dTask {
+    pub const fn new(
+        n: usize,
+        ci: usize,
+        h: usize,
+        w: usize,
+        co: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Self {
+        Conv2dTask { n, ci, h, w, co, kh, kw, stride, pad }
+    }
+
+    /// Output spatial height.
+    pub fn oh(&self) -> usize {
+        (self.h + 2 * self.pad - self.kh) / self.stride + 1
+    }
+
+    /// Output spatial width.
+    pub fn ow(&self) -> usize {
+        (self.w + 2 * self.pad - self.kw) / self.stride + 1
+    }
+
+    /// Multiply-accumulate count of the direct convolution.
+    pub fn macs(&self) -> u64 {
+        (self.n * self.co * self.oh() * self.ow()) as u64 * (self.ci * self.kh * self.kw) as u64
+    }
+
+    /// FLOPs (2 per MAC), the numerator of the GFLOPS metric in Fig 7.
+    pub fn flops(&self) -> u64 {
+        2 * self.macs()
+    }
+
+    /// Input tensor element count (padded input not included).
+    pub fn input_elems(&self) -> u64 {
+        (self.n * self.ci * self.h * self.w) as u64
+    }
+
+    /// Weight tensor element count.
+    pub fn weight_elems(&self) -> u64 {
+        (self.co * self.ci * self.kh * self.kw) as u64
+    }
+
+    /// Output tensor element count.
+    pub fn output_elems(&self) -> u64 {
+        (self.n * self.co * self.oh() * self.ow()) as u64
+    }
+
+    /// Arithmetic intensity in MACs per byte moved (int8 inputs/weights,
+    /// int32 accumulators), a rough roofline coordinate for the simulator.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        let bytes = self.input_elems() + self.weight_elems() + 4 * self.output_elems();
+        self.macs() as f64 / bytes as f64
+    }
+
+    /// Short display id like `c 3x224x224 -> 64 k7s2p3`.
+    pub fn short_id(&self) -> String {
+        format!(
+            "c{}x{}x{}-{}k{}s{}p{}",
+            self.ci, self.h, self.w, self.co, self.kh, self.stride, self.pad
+        )
+    }
+
+    /// JSON encoding used by reports and golden tests.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::num(self.n as f64)),
+            ("ci", Json::num(self.ci as f64)),
+            ("h", Json::num(self.h as f64)),
+            ("w", Json::num(self.w as f64)),
+            ("co", Json::num(self.co as f64)),
+            ("kh", Json::num(self.kh as f64)),
+            ("kw", Json::num(self.kw as f64)),
+            ("stride", Json::num(self.stride as f64)),
+            ("pad", Json::num(self.pad as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<Self> {
+        Some(Conv2dTask {
+            n: v.get_usize("n")?,
+            ci: v.get_usize("ci")?,
+            h: v.get_usize("h")?,
+            w: v.get_usize("w")?,
+            co: v.get_usize("co")?,
+            kh: v.get_usize("kh")?,
+            kw: v.get_usize("kw")?,
+            stride: v.get_usize("stride")?,
+            pad: v.get_usize("pad")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ResNet-18 conv1: 3x224x224 -> 64, k7 s2 p3.
+    const RESNET_C1: Conv2dTask = Conv2dTask::new(1, 3, 224, 224, 64, 7, 7, 2, 3);
+
+    #[test]
+    fn output_dims() {
+        assert_eq!(RESNET_C1.oh(), 112);
+        assert_eq!(RESNET_C1.ow(), 112);
+        // 3x3 same conv preserves dims.
+        let t = Conv2dTask::new(1, 64, 56, 56, 64, 3, 3, 1, 1);
+        assert_eq!(t.oh(), 56);
+        assert_eq!(t.ow(), 56);
+    }
+
+    #[test]
+    fn macs_known_value() {
+        // 1*64*112*112 * 3*7*7 = 802816 * 147 = 118013952
+        assert_eq!(RESNET_C1.macs(), 118_013_952);
+        assert_eq!(RESNET_C1.flops(), 236_027_904);
+    }
+
+    #[test]
+    fn tensor_sizes() {
+        assert_eq!(RESNET_C1.input_elems(), 3 * 224 * 224);
+        assert_eq!(RESNET_C1.weight_elems(), 64 * 3 * 7 * 7);
+        assert_eq!(RESNET_C1.output_elems(), 64 * 112 * 112);
+    }
+
+    #[test]
+    fn intensity_positive_and_sane() {
+        let ai = RESNET_C1.arithmetic_intensity();
+        assert!(ai > 1.0 && ai < 1000.0, "{ai}");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let v = RESNET_C1.to_json();
+        let back = Conv2dTask::from_json(&v).unwrap();
+        assert_eq!(back, RESNET_C1);
+    }
+
+    #[test]
+    fn short_id_stable() {
+        assert_eq!(RESNET_C1.short_id(), "c3x224x224-64k7s2p3");
+    }
+}

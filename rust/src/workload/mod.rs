@@ -1,0 +1,8 @@
+//! DNN workloads: convolution task definitions and the model zoo used by the
+//! paper's evaluation (Table 3).
+
+pub mod conv;
+pub mod models;
+
+pub use conv::Conv2dTask;
+pub use models::{model_by_name, model_names, ModelSpec};

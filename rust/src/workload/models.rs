@@ -1,0 +1,209 @@
+//! The model zoo of the paper's evaluation (Table 3): AlexNet, VGG-11/13/16/19
+//! and ResNet-18/34, as extracted from MXNet's ImageNet model definitions.
+//!
+//! The paper counts one "convolution task" per convolution layer:
+//! AlexNet 5, VGG-11 8, VGG-13 10, VGG-16 13, VGG-19 16, ResNet-18 17,
+//! ResNet-34 33 (ResNet downsample 1x1 projections are folded into their
+//! blocks by TVM's task extraction and are not counted — we follow that).
+//! Tuners work on *unique* shapes ([`ModelSpec::unique_tasks`]); end-to-end
+//! inference time is the weight-of-shape-multiplied sum.
+
+use super::conv::Conv2dTask;
+
+/// A network: ordered convolution layers (one entry per layer).
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub layers: Vec<Conv2dTask>,
+}
+
+impl ModelSpec {
+    /// Unique tunable tasks with their layer multiplicities, in first
+    /// appearance order.
+    pub fn unique_tasks(&self) -> Vec<(Conv2dTask, usize)> {
+        let mut out: Vec<(Conv2dTask, usize)> = Vec::new();
+        for layer in &self.layers {
+            if let Some(slot) = out.iter_mut().find(|(t, _)| t == layer) {
+                slot.1 += 1;
+            } else {
+                out.push((*layer, 1));
+            }
+        }
+        out
+    }
+
+    /// Total conv FLOPs of one inference.
+    pub fn total_flops(&self) -> u64 {
+        self.layers.iter().map(|l| l.flops()).sum()
+    }
+
+    /// Number of convolution tasks (= layers), the Table 3 column.
+    pub fn num_conv_tasks(&self) -> usize {
+        self.layers.len()
+    }
+}
+
+fn conv(ci: usize, hw: usize, co: usize, k: usize, s: usize, p: usize) -> Conv2dTask {
+    Conv2dTask::new(1, ci, hw, hw, co, k, k, s, p)
+}
+
+fn alexnet() -> ModelSpec {
+    ModelSpec {
+        name: "alexnet",
+        layers: vec![
+            conv(3, 224, 64, 11, 4, 2),
+            conv(64, 27, 192, 5, 1, 2),
+            conv(192, 13, 384, 3, 1, 1),
+            conv(384, 13, 256, 3, 1, 1),
+            conv(256, 13, 256, 3, 1, 1),
+        ],
+    }
+}
+
+/// VGG stage plan: (convs per stage) over channels [64,128,256,512,512]
+/// at spatial sizes [224,112,56,28,14]; every conv is 3x3 s1 p1.
+fn vgg(name: &'static str, per_stage: [usize; 5]) -> ModelSpec {
+    let chans = [64usize, 128, 256, 512, 512];
+    let sizes = [224usize, 112, 56, 28, 14];
+    let mut layers = Vec::new();
+    let mut in_c = 3usize;
+    for stage in 0..5 {
+        let out_c = chans[stage];
+        for _ in 0..per_stage[stage] {
+            layers.push(conv(in_c, sizes[stage], out_c, 3, 1, 1));
+            in_c = out_c;
+        }
+    }
+    ModelSpec { name, layers }
+}
+
+/// ResNet basic-block stage plan (blocks per stage), channels
+/// [64,128,256,512] at sizes [56,28,14,7]; stride-2 entry conv from stage 2.
+fn resnet(name: &'static str, blocks: [usize; 4]) -> ModelSpec {
+    let chans = [64usize, 128, 256, 512];
+    let sizes = [56usize, 28, 14, 7];
+    let mut layers = vec![conv(3, 224, 64, 7, 2, 3)];
+    let mut in_c = 64usize;
+    for stage in 0..4 {
+        let out_c = chans[stage];
+        for block in 0..blocks[stage] {
+            if stage > 0 && block == 0 {
+                // Downsampling entry conv: operates on the previous stage's
+                // spatial size with stride 2.
+                layers.push(conv(in_c, sizes[stage - 1], out_c, 3, 2, 1));
+            } else {
+                layers.push(conv(in_c, sizes[stage], out_c, 3, 1, 1));
+            }
+            layers.push(conv(out_c, sizes[stage], out_c, 3, 1, 1));
+            in_c = out_c;
+        }
+    }
+    ModelSpec { name, layers }
+}
+
+/// All zoo model names in the paper's presentation order.
+pub fn model_names() -> Vec<&'static str> {
+    vec!["alexnet", "vgg11", "vgg13", "vgg16", "vgg19", "resnet18", "resnet34"]
+}
+
+/// Look up a zoo model by name.
+pub fn model_by_name(name: &str) -> Option<ModelSpec> {
+    match name {
+        "alexnet" => Some(alexnet()),
+        "vgg11" => Some(vgg("vgg11", [1, 1, 2, 2, 2])),
+        "vgg13" => Some(vgg("vgg13", [2, 2, 2, 2, 2])),
+        "vgg16" => Some(vgg("vgg16", [2, 2, 3, 3, 3])),
+        "vgg19" => Some(vgg("vgg19", [2, 2, 4, 4, 4])),
+        "resnet18" => Some(resnet("resnet18", [2, 2, 2, 2])),
+        "resnet34" => Some(resnet("resnet34", [3, 4, 6, 3])),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_task_counts() {
+        // The Table 3 column this zoo must reproduce exactly.
+        let expect = [
+            ("alexnet", 5),
+            ("vgg11", 8),
+            ("vgg13", 10),
+            ("vgg16", 13),
+            ("vgg19", 16),
+            ("resnet18", 17),
+            ("resnet34", 33),
+        ];
+        for (name, count) in expect {
+            let m = model_by_name(name).unwrap();
+            assert_eq!(m.num_conv_tasks(), count, "{name}");
+        }
+    }
+
+    #[test]
+    fn vgg16_flops_match_literature() {
+        // VGG-16 convs are ~15.3 GFLOPs (30.7G with 2 FLOPs/MAC convention).
+        let m = model_by_name("vgg16").unwrap();
+        let gflops = m.total_flops() as f64 / 1e9;
+        assert!((gflops - 30.7).abs() < 1.0, "vgg16 conv GFLOPs {gflops}");
+    }
+
+    #[test]
+    fn resnet18_flops_match_literature() {
+        // ResNet-18 is ~1.8 GFLOPs; convs dominate (~3.6G at 2 FLOPs/MAC).
+        let m = model_by_name("resnet18").unwrap();
+        let gflops = m.total_flops() as f64 / 1e9;
+        assert!((2.5..4.5).contains(&gflops), "resnet18 conv GFLOPs {gflops}");
+    }
+
+    #[test]
+    fn unique_tasks_weights_sum_to_layers() {
+        for name in model_names() {
+            let m = model_by_name(name).unwrap();
+            let uniq = m.unique_tasks();
+            let total: usize = uniq.iter().map(|(_, w)| w).sum();
+            assert_eq!(total, m.layers.len(), "{name}");
+            // Dedup actually reduces VGG/ResNet task lists.
+            if name.starts_with("vgg") || name.starts_with("resnet") {
+                assert!(uniq.len() < m.layers.len(), "{name} should have repeated shapes");
+            }
+        }
+    }
+
+    #[test]
+    fn all_layer_shapes_valid() {
+        for name in model_names() {
+            let m = model_by_name(name).unwrap();
+            for l in &m.layers {
+                assert!(l.oh() > 0 && l.ow() > 0, "{name} {l:?}");
+                assert!(l.kh <= l.h + 2 * l.pad, "{name} {l:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn resnet_spatial_chain_consistent() {
+        // Each layer's output spatial size must equal the next layer's input
+        // size (basic-block main path). conv1 is followed by a 2x2-stride
+        // maxpool (112 -> 56), so the chain check starts after it.
+        let m = model_by_name("resnet34").unwrap();
+        for pair in m.layers[1..].windows(2) {
+            assert_eq!(pair[0].oh(), pair[1].h, "{:?} -> {:?}", pair[0], pair[1]);
+        }
+    }
+
+    #[test]
+    fn vgg_spatial_chain_halves_per_stage() {
+        let m = model_by_name("vgg19").unwrap();
+        let sizes: Vec<usize> = m.layers.iter().map(|l| l.h).collect();
+        assert_eq!(sizes[0], 224);
+        assert_eq!(*sizes.last().unwrap(), 14);
+    }
+
+    #[test]
+    fn unknown_model_is_none() {
+        assert!(model_by_name("mobilenet").is_none());
+    }
+}

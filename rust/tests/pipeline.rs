@@ -1,0 +1,165 @@
+//! End-to-end pipeline integration tests (native backend — no artifacts
+//! needed, so these always run).
+
+use arco::baselines::{AutoTvm, Chameleon};
+use arco::baselines::autotvm::AutoTvmParams;
+use arco::baselines::chameleon::ChameleonParams;
+use arco::marl::strategy::{Arco, ArcoParams};
+use arco::marl::Backend;
+use arco::runtime::ModelDims;
+use arco::space::ConfigSpace;
+use arco::tuner::{tune_model, tune_task, Framework, TuneBudget};
+use arco::workload::{model_by_name, Conv2dTask};
+
+fn budget(trials: usize, batch: usize) -> TuneBudget {
+    TuneBudget { total_measurements: trials, batch, workers: 2, ..Default::default() }
+}
+
+fn task() -> Conv2dTask {
+    Conv2dTask::new(1, 64, 28, 28, 64, 3, 3, 1, 1)
+}
+
+#[test]
+fn all_frameworks_complete_a_model() {
+    let model = model_by_name("alexnet").unwrap();
+    for f in [
+        Framework::AutoTvm,
+        Framework::Chameleon,
+        Framework::Arco,
+        Framework::Random,
+    ] {
+        let out = tune_model(f, &model, budget(48, 16), true, 5);
+        assert!(out.inference_secs.is_finite(), "{f:?}");
+        assert!(out.inference_secs > 0.0, "{f:?}");
+        assert_eq!(out.tasks.len(), model.unique_tasks().len(), "{f:?}");
+        assert!(out.compile_secs > 0.0, "{f:?}");
+    }
+}
+
+#[test]
+fn tuning_is_deterministic_per_seed() {
+    let model = model_by_name("alexnet").unwrap();
+    let a = tune_model(Framework::AutoTvm, &model, budget(64, 16), true, 9);
+    let b = tune_model(Framework::AutoTvm, &model, budget(64, 16), true, 9);
+    assert_eq!(a.inference_secs, b.inference_secs);
+    assert_eq!(a.measurements, b.measurements);
+}
+
+#[test]
+fn arco_beats_software_only_arco_on_codesign_space() {
+    // The headline co-design claim at small scale.
+    let model = model_by_name("alexnet").unwrap();
+    let full = tune_model(Framework::Arco, &model, budget(160, 32), true, 13);
+    let sw = tune_model(Framework::ArcoSwOnly, &model, budget(160, 32), true, 13);
+    assert!(
+        full.inference_secs <= sw.inference_secs * 1.001,
+        "co-design {} vs sw-only {}",
+        full.inference_secs,
+        sw.inference_secs
+    );
+}
+
+#[test]
+fn arco_constraint_awareness_cuts_invalid_measurements() {
+    // ARCO pre-filters by the free penalty check; AutoTVM cannot (the
+    // paper's invalid-configuration critique). Compare invalid counts on
+    // the same hardware-tunable space.
+    let t = task();
+    let space_hw = ConfigSpace::for_task(&t, true);
+    let b = budget(128, 32);
+
+    let mut arco = Arco::with_backend(
+        space_hw.clone(),
+        ArcoParams::quick(),
+        Backend::native(ModelDims::default()),
+        3,
+    );
+    let r_arco = tune_task(&space_hw, &mut arco, b);
+
+    struct RawRandom {
+        space: ConfigSpace,
+        rng: arco::util::rng::Pcg32,
+        seen: std::collections::HashSet<usize>,
+    }
+    impl arco::tuner::Strategy for RawRandom {
+        fn name(&self) -> &'static str {
+            "raw-random"
+        }
+        fn plan(&mut self, batch: usize) -> Vec<arco::space::PointConfig> {
+            let mut out = Vec::new();
+            let mut tries = 0;
+            while out.len() < batch && tries < batch * 100 {
+                let p = self.space.random_point(&mut self.rng);
+                if self.seen.insert(self.space.flat_index(&p)) {
+                    out.push(p);
+                }
+                tries += 1;
+            }
+            out
+        }
+        fn observe(&mut self, _r: &[(arco::space::PointConfig, arco::codegen::MeasureResult)]) {}
+    }
+    let mut raw = RawRandom {
+        space: space_hw.clone(),
+        rng: arco::util::rng::Pcg32::seeded(3),
+        seen: Default::default(),
+    };
+    let r_raw = tune_task(&space_hw, &mut raw, b);
+
+    assert!(
+        r_arco.invalid * 2 <= r_raw.invalid.max(2),
+        "arco invalid {} should be well below unfiltered random {}",
+        r_arco.invalid,
+        r_raw.invalid
+    );
+}
+
+#[test]
+fn cost_models_learn_the_landscape() {
+    // After a couple of iterations the GBT-driven planners should produce
+    // better-than-random batches: compare mean fitness of the last batch
+    // against the first. Uses the hardware-tunable space so the budget is a
+    // small fraction of the space (a near-exhausted space forces planners
+    // to mop up bad leftovers, which would invert the comparison).
+    let t = task();
+    let space = ConfigSpace::for_task(&t, true);
+    let b = budget(160, 32);
+    for which in ["autotvm", "chameleon"] {
+        let mut strat: Box<dyn arco::tuner::Strategy> = match which {
+            "autotvm" => Box::new(AutoTvm::new(space.clone(), AutoTvmParams::quick(), 21)),
+            _ => Box::new(Chameleon::new(space.clone(), ChameleonParams::quick(), 21)),
+        };
+        let r = tune_task(&space, strat.as_mut(), b);
+        let n = r.trace.len();
+        assert!(n >= 64, "{which}: got {n} measurements");
+        let first: Vec<f64> = r.trace[..32].iter().map(|e| e.gflops).collect();
+        let last: Vec<f64> = r.trace[n - 32..].iter().map(|e| e.gflops).collect();
+        let (mf, ml) = (arco::util::stats::mean(&first), arco::util::stats::mean(&last));
+        assert!(
+            ml >= mf * 0.9,
+            "{which}: planner got worse over time ({mf:.1} -> {ml:.1} GFLOPS)"
+        );
+    }
+}
+
+#[test]
+fn trace_cumulative_time_is_monotone() {
+    let model = model_by_name("alexnet").unwrap();
+    let out = tune_model(Framework::Arco, &model, budget(96, 32), true, 2);
+    for t in &out.tasks {
+        for w in t.result.trace.windows(2) {
+            assert!(w[1].modeled_cum_secs >= w[0].modeled_cum_secs);
+        }
+        // Final cumulative equals the task total.
+        if let Some(last) = t.result.trace.last() {
+            assert!((last.modeled_cum_secs - t.result.modeled_hw_secs).abs() < 1e-9);
+        }
+    }
+}
+
+#[test]
+fn search_secs_below_compile_secs() {
+    let model = model_by_name("alexnet").unwrap();
+    let out = tune_model(Framework::AutoTvm, &model, budget(64, 32), true, 4);
+    assert!(out.search_secs <= out.compile_secs);
+}

@@ -1,0 +1,173 @@
+//! Integration: the AOT/XLA backend must agree with the native mirror.
+//!
+//! These tests require `make artifacts` to have run; they self-skip (with a
+//! loud message) when artifacts are absent so `cargo test` stays green in a
+//! fresh checkout.
+
+use arco::ml::{ppo, Mat, Mlp};
+use arco::runtime::manifest::artifacts_dir;
+use arco::runtime::{Engine, ModelDims};
+use arco::util::prop::assert_allclose_f32;
+use arco::util::rng::Pcg32;
+
+fn engine_or_skip() -> Option<Engine> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::load(&dir).expect("engine must load when artifacts exist"))
+}
+
+fn dims() -> ModelDims {
+    ModelDims::default()
+}
+
+#[test]
+fn policy_forward_parity_native_vs_xla() {
+    let Some(engine) = engine_or_skip() else { return };
+    let d = dims();
+    let mut rng = Pcg32::seeded(1234);
+    let mlp = Mlp::policy(d.obs_dim, d.act_dim, &mut rng);
+    let params = mlp.flatten();
+
+    let obs_mat = Mat::rand_init(d.b_pol, d.obs_dim, &mut rng);
+    let mut mask = vec![1.0f32; d.act_dim];
+    for m in mask.iter_mut().skip(9) {
+        *m = 0.0; // software-agent mask
+    }
+
+    // Native: logits -> masked log softmax.
+    let cache = mlp.forward(&obs_mat);
+    let native_lp = ppo::masked_log_softmax(cache.output(), &mask);
+
+    // XLA path.
+    let xla_lp = engine.policy_forward(&params, &obs_mat.data, &mask).unwrap();
+
+    // Compare only unmasked entries (masked are -inf vs -1e30 sentinels).
+    for r in 0..d.b_pol {
+        for c in 0..d.act_dim {
+            if mask[c] > 0.0 {
+                let a = native_lp.at(r, c);
+                let b = xla_lp[r * d.act_dim + c];
+                assert!(
+                    (a - b).abs() < 1e-4,
+                    "logp[{r},{c}]: native {a} vs xla {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn value_forward_parity_native_vs_xla() {
+    let Some(engine) = engine_or_skip() else { return };
+    let d = dims();
+    let mut rng = Pcg32::seeded(77);
+    let mlp = Mlp::value(d.gstate_dim, &mut rng);
+    let params = mlp.flatten();
+    let state = Mat::rand_init(d.b_pol, d.gstate_dim, &mut rng);
+
+    let native: Vec<f32> = {
+        let cache = mlp.forward(&state);
+        cache.output().data.clone()
+    };
+    let xla = engine.value_forward(&params, &state.data).unwrap();
+    assert_allclose_f32(&native, &xla, 1e-4, 1e-5, "value forward parity");
+}
+
+#[test]
+fn gae_parity_native_vs_xla() {
+    let Some(engine) = engine_or_skip() else { return };
+    let d = dims();
+    let mut rng = Pcg32::seeded(5);
+    let rewards: Vec<f32> = (0..d.t_gae).map(|_| rng.gen_f32() * 2.0 - 1.0).collect();
+    let values: Vec<f32> = (0..d.t_gae).map(|_| rng.gen_f32()).collect();
+    let (gamma, lam) = (0.99f32, 0.95f32);
+    let (native_adv, native_ret) = ppo::gae(&rewards, &values, 0.3, gamma, lam);
+    let (xla_adv, xla_ret) = engine.gae(&rewards, &values, 0.3, gamma, lam).unwrap();
+    assert_allclose_f32(&native_adv, &xla_adv, 2e-3, 2e-3, "gae adv parity");
+    assert_allclose_f32(&native_ret, &xla_ret, 2e-3, 2e-3, "gae ret parity");
+}
+
+#[test]
+fn policy_train_step_reduces_loss_and_matches_native_direction() {
+    let Some(engine) = engine_or_skip() else { return };
+    let d = dims();
+    let mut rng = Pcg32::seeded(99);
+    let mlp = Mlp::policy(d.obs_dim, d.act_dim, &mut rng);
+    let mut params = mlp.flatten();
+    let mut m = vec![0.0f32; d.p_policy];
+    let mut v = vec![0.0f32; d.p_policy];
+    let mut t = 0.0f32;
+
+    let obs = Mat::rand_init(d.b_train, d.obs_dim, &mut rng);
+    let mask = vec![1.0f32; d.act_dim];
+    // Old log-probs from the initial policy; fixed advantages.
+    let cache = mlp.forward(&obs);
+    let lp = ppo::masked_log_softmax(cache.output(), &mask);
+    let probs = lp.map(|x| if x.is_finite() { x.exp() } else { 0.0 });
+    let actions = ppo::sample_actions(&probs, &mut rng);
+    let old_logp: Vec<f32> = actions.iter().enumerate().map(|(r, &a)| lp.at(r, a)).collect();
+    let adv: Vec<f32> = (0..d.b_train).map(|_| rng.gen_f32() * 2.0 - 1.0).collect();
+    let weight = vec![1.0f32; d.b_train];
+    let actions_i32: Vec<i32> = actions.iter().map(|&a| a as i32).collect();
+
+    let mut losses = Vec::new();
+    for _ in 0..8 {
+        let out = engine
+            .policy_train(
+                &params, &m, &v, t, &obs.data, &mask, &actions_i32, &old_logp, &adv, &weight,
+            )
+            .unwrap();
+        losses.push(out.loss);
+        params = out.params;
+        m = out.m;
+        v = out.v;
+        t = out.t;
+    }
+    assert_eq!(t, 8.0);
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "losses should fall: {losses:?}"
+    );
+}
+
+#[test]
+fn value_train_step_regresses() {
+    let Some(engine) = engine_or_skip() else { return };
+    let d = dims();
+    let mut rng = Pcg32::seeded(31);
+    let mlp = Mlp::value(d.gstate_dim, &mut rng);
+    let mut params = mlp.flatten();
+    let mut m = vec![0.0f32; d.p_value];
+    let mut v = vec![0.0f32; d.p_value];
+    let mut t = 0.0f32;
+    let state = Mat::rand_init(d.b_train, d.gstate_dim, &mut rng);
+    let returns: Vec<f32> = (0..d.b_train).map(|r| state.at(r, 0).tanh()).collect();
+    let weight = vec![1.0f32; d.b_train];
+
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..60 {
+        let out = engine.value_train(&params, &m, &v, t, &state.data, &returns, &weight).unwrap();
+        params = out.params;
+        m = out.m;
+        v = out.v;
+        t = out.t;
+        last = out.loss;
+        first.get_or_insert(out.loss);
+    }
+    let first = first.unwrap();
+    assert!(last < first * 0.5, "value loss {first} -> {last}");
+}
+
+#[test]
+fn bad_shapes_rejected() {
+    let Some(engine) = engine_or_skip() else { return };
+    let d = dims();
+    let params = vec![0.0f32; d.p_policy - 1];
+    let obs = vec![0.0f32; d.b_pol * d.obs_dim];
+    let mask = vec![1.0f32; d.act_dim];
+    assert!(engine.policy_forward(&params, &obs, &mask).is_err());
+}
