@@ -6,9 +6,10 @@ mod common;
 
 use arco::codegen::{lower_conv, measure_point};
 use arco::costmodel::{featurize, CostModel, Gbt};
+use arco::eval::{BackendKind, Engine, EngineConfig};
 use arco::marl::Backend;
 use arco::runtime::ModelDims;
-use arco::space::{ConfigSpace, SwConfig};
+use arco::space::{ConfigSpace, PointConfig, SwConfig};
 use arco::util::bench::BenchRunner;
 use arco::util::rng::Pcg32;
 use arco::vta::{simulate, VtaConfig};
@@ -35,6 +36,44 @@ fn main() {
     let space = ConfigSpace::for_task(&task, true);
     let point = space.default_point();
     runner.bench("measure/measure_point", || measure_point(&space, &point));
+
+    // The eval::Engine on top of the same oracle. Two views:
+    //  - worker scaling on a 64-unique-point batch (the per-iteration shape
+    //    of a baseline tuning loop, serial vs parallel);
+    //  - cached vs uncached throughput on a repeated-point workload (the
+    //    shape of `arco compare`, where frameworks revisit configurations).
+    // Cache-off engines hold no cross-call state, so one engine per
+    // (workers, cache) setting is shared across benches.
+    let mut erng = Pcg32::seeded(41);
+    let uniq64: Vec<PointConfig> = (0..64).map(|_| space.random_point(&mut erng)).collect();
+    let repeated: Vec<PointConfig> =
+        (0..64).map(|i| uniq64[i % 8].clone()).collect();
+    let eng_w1 = Engine::new(EngineConfig { workers: 1, cache: false, ..Default::default() });
+    let eng_w4 = Engine::new(EngineConfig { workers: 4, cache: false, ..Default::default() });
+    let eng_cached = Engine::new(EngineConfig { workers: 4, cache: true, ..Default::default() });
+    let n64 = Some(64u64);
+    runner.bench_with_elements("eval/batch64_unique_serial_w1", n64, || {
+        arco::util::bench::black_box(eng_w1.measure_batch(&space, &uniq64));
+    });
+    runner.bench_with_elements("eval/batch64_unique_parallel_w4", n64, || {
+        arco::util::bench::black_box(eng_w4.measure_batch(&space, &uniq64));
+    });
+    runner.bench_with_elements("eval/batch64_repeated_uncached", n64, || {
+        arco::util::bench::black_box(eng_w4.measure_batch(&space, &repeated));
+    });
+    runner.bench_with_elements("eval/batch64_repeated_cached", n64, || {
+        arco::util::bench::black_box(eng_cached.measure_batch(&space, &repeated));
+    });
+    // The analytical proxy backend on the same repeated workload.
+    let eng_analytical = Engine::new(EngineConfig {
+        backend: BackendKind::Analytical,
+        workers: 4,
+        cache: false,
+        ..Default::default()
+    });
+    runner.bench_with_elements("eval/batch64_repeated_analytical", n64, || {
+        arco::util::bench::black_box(eng_analytical.measure_batch(&space, &repeated));
+    });
 
     // Featurization + GBT.
     let mut rng = Pcg32::seeded(1);

@@ -13,7 +13,7 @@
 //! channel-heavy layer, which is exactly the signal ARCO's hardware agent
 //! learns.
 
-use arco::codegen::measure_point;
+use arco::eval::Engine;
 use arco::space::ConfigSpace;
 use arco::util::rng::Pcg32;
 use arco::vta::area::{default_area_budget_mm2, total_area_mm2};
@@ -21,7 +21,11 @@ use arco::vta::VtaConfig;
 use arco::workload::Conv2dTask;
 
 /// Best software configuration for a fixed hardware geometry, by sampling.
+/// The whole sample set goes to the engine as ONE batch: it deduplicates
+/// collisions, serves revisited configs from the cache and simulates the
+/// rest in parallel.
 fn best_sw_for_hw(
+    engine: &Engine,
     task: &Conv2dTask,
     batch: usize,
     block_in: usize,
@@ -36,13 +40,17 @@ fn best_sw_for_hw(
     };
     let (ib, ici, ico) = (pos("tile_b", batch)?, pos("tile_ci", block_in)?, pos("tile_co", block_out)?);
 
+    let plan: Vec<_> = (0..samples)
+        .map(|_| {
+            let mut p = space.random_point(rng);
+            p.0[bi("tile_b")] = ib;
+            p.0[bi("tile_ci")] = ici;
+            p.0[bi("tile_co")] = ico;
+            p
+        })
+        .collect();
     let mut best: Option<(f64, String)> = None;
-    for _ in 0..samples {
-        let mut p = space.random_point(rng);
-        p.0[bi("tile_b")] = ib;
-        p.0[bi("tile_ci")] = ici;
-        p.0[bi("tile_co")] = ico;
-        let m = measure_point(&space, &p);
+    for (p, m) in engine.measure_paired(&space, plan) {
         if m.valid && best.as_ref().map_or(true, |(s, _)| m.seconds < *s) {
             best = Some((m.seconds, space.render(&p)));
         }
@@ -50,7 +58,7 @@ fn best_sw_for_hw(
     best
 }
 
-fn sweep_layer(name: &str, task: &Conv2dTask) {
+fn sweep_layer(engine: &Engine, name: &str, task: &Conv2dTask) {
     println!("\n== {} {} ({:.2} GFLOPs) ==", name, task.short_id(), task.flops() as f64 / 1e9);
     let budget = default_area_budget_mm2();
     let mut rng = Pcg32::seeded(99);
@@ -64,7 +72,7 @@ fn sweep_layer(name: &str, task: &Conv2dTask) {
                 if area > budget {
                     continue; // infeasible under Eq. 4's budget
                 }
-                if let Some((secs, cfg)) = best_sw_for_hw(task, b, ci, co, 40, &mut rng) {
+                if let Some((secs, cfg)) = best_sw_for_hw(engine, task, b, ci, co, 40, &mut rng) {
                     rows.push((area, secs, format!("{b}x{ci}x{co}"), cfg));
                 }
             }
@@ -101,8 +109,10 @@ fn main() {
         "area budget: {:.3} mm^2 (1.25x default VTA++ instance)",
         default_area_budget_mm2()
     );
+    let engine = Engine::vta_sim(arco::util::pool::default_workers());
     // An early wide layer vs a late channel-heavy layer: the co-design
     // optimum moves.
-    sweep_layer("early layer (ResNet-18 conv2_x)", &Conv2dTask::new(1, 64, 56, 56, 64, 3, 3, 1, 1));
-    sweep_layer("late layer (ResNet-18 conv5_x)", &Conv2dTask::new(1, 512, 7, 7, 512, 3, 3, 1, 1));
+    sweep_layer(&engine, "early layer (ResNet-18 conv2_x)", &Conv2dTask::new(1, 64, 56, 56, 64, 3, 3, 1, 1));
+    sweep_layer(&engine, "late layer (ResNet-18 conv5_x)", &Conv2dTask::new(1, 512, 7, 7, 512, 3, 3, 1, 1));
+    println!("\neval engine: {}", engine.summary());
 }

@@ -9,9 +9,15 @@
 //! worker running the full per-task tuning pipeline; the leader aggregates
 //! results and prints a job report. This is the deployment shape a team
 //! would actually run ARCO in — one tuning service, many networks.
+//!
+//! All jobs measure through ONE shared `eval::Engine` (it is `Sync`), so a
+//! configuration tuned for job 0 is a cache hit for every later job on the
+//! same task — and with a journal, for every later *process* too.
 
-use arco::tuner::{tune_model, Framework, TuneBudget};
+use arco::eval::{Engine, EngineConfig};
+use arco::tuner::{tune_model_with, Framework, TuneBudget};
 use arco::workload::model_by_name;
+use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -43,10 +49,20 @@ fn main() {
     let sim_workers = 2usize; // simulator threads per job
     println!("compile service: {service_workers} job workers x {sim_workers} sim threads");
 
+    // One engine for the whole service: shared cache across jobs, plus a
+    // persistent journal so a restarted service reuses everything measured
+    // by previous incarnations.
+    let engine = Engine::new(EngineConfig {
+        workers: sim_workers,
+        journal: Some(PathBuf::from("results/service_journal.json")),
+        ..Default::default()
+    });
+
     std::thread::scope(|scope| {
         for wid in 0..service_workers {
             let queue = Arc::clone(&queue);
             let tx = tx.clone();
+            let engine = &engine;
             scope.spawn(move || loop {
                 let job = { queue.lock().unwrap().pop() };
                 let Some(job) = job else { break };
@@ -58,7 +74,8 @@ fn main() {
                     ..Default::default()
                 };
                 let started = Instant::now();
-                let out = tune_model(job.framework, &model, budget, true, 7 + job.id as u64);
+                let out =
+                    tune_model_with(engine, job.framework, &model, budget, true, 7 + job.id as u64);
                 tx.send((wid, job, out, started.elapsed())).unwrap();
             });
         }
@@ -83,4 +100,5 @@ fn main() {
         println!("service drained: {done} jobs");
         assert_eq!(done, 5);
     });
+    println!("shared eval engine: {}", engine.summary());
 }

@@ -8,10 +8,10 @@
 //! measurements, then compares the discovered (hardware, software)
 //! configuration against the default VTA++ operating point.
 
-use arco::codegen::measure_point;
+use arco::eval::Engine;
 use arco::marl::strategy::{Arco, ArcoParams};
 use arco::space::ConfigSpace;
-use arco::tuner::{tune_task, Strategy, TuneBudget};
+use arco::tuner::{tune_task_with, Strategy, TuneBudget};
 use arco::workload::Conv2dTask;
 
 fn main() {
@@ -25,9 +25,12 @@ fn main() {
     let space = ConfigSpace::for_task(&task, true);
     println!("design space: {} knobs, {} configurations", space.num_knobs(), space.size());
 
+    // All measurements flow through one batched, cached engine.
+    let engine = Engine::vta_sim(arco::util::pool::default_workers());
+
     // Baseline: the default VTA++ point.
     let default_point = space.default_point();
-    let default = measure_point(&space, &default_point);
+    let default = engine.measure_one(&space, &default_point);
     println!(
         "default config: {}\n  -> {:.3} ms, {:.1} GFLOPS, {:.2} mm^2",
         space.render(&default_point),
@@ -39,7 +42,7 @@ fn main() {
     // ARCO: three MAPPO agents + confidence sampling.
     let mut strategy = Arco::new(space.clone(), ArcoParams::quick(), 42);
     let budget = TuneBudget { total_measurements: 200, batch: 32, ..Default::default() };
-    let result = tune_task(&space, &mut strategy, budget);
+    let result = tune_task_with(&engine, &space, &mut strategy, budget);
 
     let best_point = result.best_point.expect("tuning found a config");
     println!(
@@ -58,5 +61,6 @@ fn main() {
         "\nspeedup over default VTA++: {:.2}x",
         default.seconds / result.best.seconds
     );
+    println!("eval engine: {}", engine.summary());
     assert!(result.best.seconds <= default.seconds, "tuned config must not regress");
 }

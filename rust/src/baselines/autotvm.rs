@@ -8,7 +8,7 @@
 //! measurement batch. Before the model has data, planning is uniform.
 
 use super::kmeans; // only for the greedy-diversity helper reuse
-use crate::codegen::MeasureResult;
+use crate::eval::MeasureResult;
 use crate::costmodel::{featurize, CostModel, Gbt, GbtParams};
 use crate::space::{ConfigSpace, PointConfig};
 use crate::tuner::Strategy;
@@ -189,7 +189,7 @@ impl Strategy for AutoTvm {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::codegen::measure_point;
+    use crate::eval::Engine;
     use crate::tuner::{tune_task, TuneBudget};
     use crate::workload::Conv2dTask;
 
@@ -210,10 +210,10 @@ mod tests {
     #[test]
     fn model_trains_after_observe() {
         let s = space();
+        let engine = Engine::vta_sim(2);
         let mut a = AutoTvm::new(s.clone(), AutoTvmParams::quick(), 2);
         let plan = a.plan(32);
-        let results: Vec<(PointConfig, MeasureResult)> =
-            plan.into_iter().map(|p| { let m = measure_point(&s, &p); (p, m) }).collect();
+        let results: Vec<(PointConfig, MeasureResult)> = engine.measure_paired(&s, plan);
         a.observe(&results);
         assert!(a.model.is_trained());
         assert!(a.diag().contains("data=32"));
@@ -222,6 +222,7 @@ mod tests {
     #[test]
     fn never_replans_measured_configs() {
         let s = space();
+        let engine = Engine::vta_sim(2);
         let mut a = AutoTvm::new(s.clone(), AutoTvmParams::quick(), 3);
         let mut all_keys = HashSet::new();
         for _ in 0..4 {
@@ -229,10 +230,10 @@ mod tests {
             for p in &plan {
                 assert!(all_keys.insert(s.flat_index(p)), "config planned twice");
             }
-            let results: Vec<_> =
-                plan.into_iter().map(|p| { let m = measure_point(&s, &p); (p, m) }).collect();
-            a.observe(&results);
+            a.observe(&engine.measure_paired(&s, plan));
         }
+        // Nothing was planned twice, so the engine paid for every point.
+        assert_eq!(engine.stats().simulations, all_keys.len());
     }
 
     #[test]

@@ -14,7 +14,7 @@
 
 use super::kmeans::{exemplars, kmeans};
 use crate::marl::env::memory_overflow_ratio;
-use crate::codegen::MeasureResult;
+use crate::eval::MeasureResult;
 use crate::costmodel::{featurize, CostModel, Gbt, GbtParams};
 use crate::ml::{clip_grad_norm, ppo, Adam, AdamParams, Mat, Mlp};
 use crate::space::{ConfigSpace, PointConfig};
@@ -339,7 +339,7 @@ impl Strategy for Chameleon {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::codegen::measure_point;
+    use crate::eval::Engine;
     use crate::workload::Conv2dTask;
 
     fn space() -> ConfigSpace {
@@ -364,13 +364,12 @@ mod tests {
     #[test]
     fn full_tuning_round_trip() {
         let s = space();
+        let engine = Engine::vta_sim(2);
         let mut c = Chameleon::new(s.clone(), ChameleonParams::quick(), 2);
         // Cold batch.
         let plan = c.plan(16);
         assert_eq!(plan.len(), 16);
-        let results: Vec<_> =
-            plan.into_iter().map(|p| { let m = measure_point(&s, &p); (p, m) }).collect();
-        c.observe(&results);
+        c.observe(&engine.measure_paired(&s, plan));
         assert!(c.model.is_trained());
         // Warm batch uses RL + clustering.
         let plan2 = c.plan(16);
@@ -382,12 +381,11 @@ mod tests {
     #[test]
     fn policy_trains_during_exploration() {
         let s = space();
+        let engine = Engine::vta_sim(2);
         let mut c = Chameleon::new(s.clone(), ChameleonParams::quick(), 3);
         // Seed the model so exploration runs.
         let plan = c.plan(16);
-        let results: Vec<_> =
-            plan.into_iter().map(|p| { let m = measure_point(&s, &p); (p, m) }).collect();
-        c.observe(&results);
+        c.observe(&engine.measure_paired(&s, plan));
         let before = c.policy.flatten();
         let _ = c.adaptive_exploration();
         assert_ne!(c.policy.flatten(), before, "PPO updates must move the policy");
@@ -396,6 +394,7 @@ mod tests {
     #[test]
     fn respects_frozen_hardware() {
         let s = space();
+        let engine = Engine::vta_sim(2);
         let mut c = Chameleon::new(s.clone(), ChameleonParams::quick(), 4);
         for _round in 0..2 {
             let plan = c.plan(12);
@@ -403,9 +402,7 @@ mod tests {
                 let (hw, _) = s.decode(p);
                 assert_eq!((hw.batch, hw.block_in, hw.block_out), (1, 16, 16));
             }
-            let results: Vec<_> =
-                plan.into_iter().map(|p| { let m = measure_point(&s, &p); (p, m) }).collect();
-            c.observe(&results);
+            c.observe(&engine.measure_paired(&s, plan));
         }
     }
 }

@@ -1,6 +1,6 @@
 //! Uniform random search — the sanity-floor baseline.
 
-use crate::codegen::MeasureResult;
+use crate::eval::MeasureResult;
 use crate::space::{ConfigSpace, PointConfig};
 use crate::tuner::Strategy;
 use crate::util::rng::Pcg32;

@@ -31,19 +31,36 @@ use crate::workload::Conv2dTask;
 
 /// Why a configuration cannot be lowered (an *invalid* configuration in the
 /// paper's terms — these waste a hardware measurement when sampled).
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum CodegenError {
-    #[error("hardware config invalid: {0}")]
     BadHardware(String),
-    #[error("spatial tile {tile_h}x{tile_w} exceeds output plane {oh}x{ow}")]
     TileTooLarge { tile_h: usize, tile_w: usize, oh: usize, ow: usize },
-    #[error("input tile of {need} B exceeds INP buffer partition of {have} B")]
     InpOverflow { need: usize, have: usize },
-    #[error("weight tile of {need} B exceeds WGT buffer partition of {have} B")]
     WgtOverflow { need: usize, have: usize },
-    #[error("accumulator tile of {need} B exceeds ACC buffer partition of {have} B")]
     AccOverflow { need: usize, have: usize },
 }
+
+impl std::fmt::Display for CodegenError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodegenError::BadHardware(why) => write!(f, "hardware config invalid: {why}"),
+            CodegenError::TileTooLarge { tile_h, tile_w, oh, ow } => {
+                write!(f, "spatial tile {tile_h}x{tile_w} exceeds output plane {oh}x{ow}")
+            }
+            CodegenError::InpOverflow { need, have } => {
+                write!(f, "input tile of {need} B exceeds INP buffer partition of {have} B")
+            }
+            CodegenError::WgtOverflow { need, have } => {
+                write!(f, "weight tile of {need} B exceeds WGT buffer partition of {have} B")
+            }
+            CodegenError::AccOverflow { need, have } => {
+                write!(f, "accumulator tile of {need} B exceeds ACC buffer partition of {have} B")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CodegenError {}
 
 /// A lowered kernel: the instruction stream plus bookkeeping the measurement
 /// layer reports.

@@ -1,6 +1,14 @@
 //! "Hardware measurement": decode a design-space point, lower it, simulate
 //! it, and report fitness. This is the `f[τ(Θ)]` of §2.3 — the expensive
 //! call every framework tries to minimize.
+//!
+//! [`measure_point`] is the *raw primitive*: one point, one simulation, no
+//! caching, no parallelism. On the tuning path it is only ever invoked by
+//! [`crate::eval::VtaSimBackend`]; everything else goes through
+//! [`crate::eval::Engine`], which batches, deduplicates, caches and
+//! parallelizes these calls (and can swap in other backends entirely).
+//! Call it directly only from backend implementations, micro-benchmarks and
+//! parity tests.
 
 use crate::space::{ConfigSpace, PointConfig};
 use crate::vta::area::total_area_mm2;

@@ -1,26 +1,60 @@
 //! Run configuration: JSON config files (Tables 4/5) + CLI overrides.
 //!
-//! `configs/arco.json`, `configs/autotvm.json` and `configs/chameleon.json`
-//! ship the paper's hyper-parameters; every field is optional and falls
-//! back to the compiled defaults, so a config file can pin just the knobs
-//! an experiment cares about.
+//! The compiled defaults are the paper's hyper-parameters; every JSON field
+//! is optional, so a config file pins just the knobs an experiment cares
+//! about. `configs/quick.json` (CI-scale budgets, cached simulator) and
+//! `configs/smoke.json` (analytical backend) ship in-tree; an `"eval"`
+//! section selects the measurement backend, cache and journal
+//! (see [`EvalSettings`]).
 
 use crate::baselines::autotvm::AutoTvmParams;
 use crate::baselines::chameleon::ChameleonParams;
 use crate::costmodel::GbtParams;
+use crate::eval::{BackendKind, EngineConfig};
 use crate::marl::exploration::ExploreParams;
 use crate::marl::strategy::ArcoParams;
 use crate::tuner::TuneBudget;
 use crate::util::json::{read_json_file, Json};
-use std::path::Path;
+use std::path::{Path, PathBuf};
+
+/// Measurement-engine settings (the file/CLI mirror of
+/// [`crate::eval::EngineConfig`]; worker count lives in the budget).
+#[derive(Debug, Clone)]
+pub struct EvalSettings {
+    /// Which [`crate::eval::MeasureBackend`] serves measurements.
+    pub backend: BackendKind,
+    /// Serve repeated configurations from the in-memory cache.
+    pub cache: bool,
+    /// Optional persistent measurement journal (JSON), reused across runs.
+    pub journal: Option<PathBuf>,
+}
+
+impl Default for EvalSettings {
+    fn default() -> Self {
+        EvalSettings { backend: BackendKind::VtaSim, cache: true, journal: None }
+    }
+}
+
+impl EvalSettings {
+    /// Concrete engine configuration with the run's worker count.
+    pub fn engine_config(&self, workers: usize) -> EngineConfig {
+        EngineConfig {
+            backend: self.backend,
+            workers,
+            cache: self.cache,
+            journal: self.journal.clone(),
+        }
+    }
+}
 
 /// Everything a tuning run needs.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct RunConfig {
     pub budget: TuneBudget,
     pub arco: ArcoParams,
     pub autotvm: AutoTvmParams,
     pub chameleon: ChameleonParams,
+    pub eval: EvalSettings,
     pub seed: u64,
 }
 
@@ -31,6 +65,7 @@ impl Default for RunConfig {
             arco: ArcoParams::default(),
             autotvm: AutoTvmParams::default(),
             chameleon: ChameleonParams::default(),
+            eval: EvalSettings::default(),
             seed: 0xA2C0,
         }
     }
@@ -92,6 +127,24 @@ impl RunConfig {
                 self.chameleon.gbt = gbt_from_json(g, self.chameleon.gbt);
             }
         }
+        if let Some(e) = doc.get("eval") {
+            if let Some(name) = e.get_str("backend") {
+                if let Some(kind) = BackendKind::from_name(name) {
+                    self.eval.backend = kind;
+                } else {
+                    crate::log_warn!(
+                        "config",
+                        "unknown eval backend '{name}' (known: {}); keeping {}",
+                        BackendKind::known_names().join(", "),
+                        self.eval.backend.name()
+                    );
+                }
+            }
+            self.eval.cache = e.get_bool("cache").unwrap_or(self.eval.cache);
+            if let Some(path) = e.get_str("journal") {
+                self.eval.journal = Some(PathBuf::from(path));
+            }
+        }
         if let Some(s) = doc.get("seed").and_then(Json::as_usize) {
             self.seed = s as u64;
         }
@@ -130,6 +183,7 @@ mod tests {
             r#"{"budget": {"total_measurements": 256},
                 "arco": {"episode_rl": 4, "use_cs": false},
                 "autotvm": {"n_sa": 16},
+                "eval": {"backend": "analytical", "cache": false, "journal": "results/journal.json"},
                 "seed": 7}"#,
         )
         .unwrap();
@@ -139,12 +193,30 @@ mod tests {
         assert_eq!(c.arco.explore.episodes, 4);
         assert!(!c.arco.use_cs);
         assert_eq!(c.autotvm.n_sa, 16);
+        assert_eq!(c.eval.backend, BackendKind::Analytical);
+        assert!(!c.eval.cache);
+        assert_eq!(c.eval.journal.as_deref(), Some(Path::new("results/journal.json")));
         assert_eq!(c.seed, 7);
     }
 
     #[test]
+    fn eval_defaults_are_cached_simulator() {
+        let c = RunConfig::default();
+        assert_eq!(c.eval.backend, BackendKind::VtaSim);
+        assert!(c.eval.cache);
+        assert!(c.eval.journal.is_none());
+        let ec = c.eval.engine_config(3);
+        assert_eq!(ec.workers, 3);
+        assert!(ec.cache);
+        // Unknown backend names are ignored, not fatal.
+        let mut c2 = RunConfig::default();
+        c2.apply_json(&Json::parse(r#"{"eval": {"backend": "quantum"}}"#).unwrap());
+        assert_eq!(c2.eval.backend, BackendKind::VtaSim);
+    }
+
+    #[test]
     fn shipped_configs_parse() {
-        for name in ["arco", "autotvm", "chameleon", "quick"] {
+        for name in ["arco", "autotvm", "chameleon", "quick", "smoke"] {
             let path = std::path::Path::new("configs").join(format!("{name}.json"));
             if path.exists() {
                 RunConfig::from_file(&path).unwrap_or_else(|e| panic!("{name}: {e}"));

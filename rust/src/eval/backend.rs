@@ -1,0 +1,225 @@
+//! Measurement backends: *how* one configuration gets a number.
+
+use crate::codegen::{measure_point, MeasureResult};
+use crate::marl::env::memory_overflow_ratio;
+use crate::space::{ConfigSpace, PointConfig};
+use crate::util::stats::ceil_div;
+use crate::vta::area::total_area_mm2;
+use crate::vta::config::{INP_BYTES, OUT_BYTES, WGT_BYTES};
+
+/// One way of measuring a configuration. Implementations must be pure
+/// functions of `(space, point)` — the engine relies on determinism for
+/// caching and for order-independent parallel fan-out — and `Send + Sync`
+/// so the engine can share them across worker threads.
+pub trait MeasureBackend: Send + Sync {
+    /// Stable backend id (used for journal entries and diagnostics).
+    fn name(&self) -> &'static str;
+
+    /// Measure one point. Invalid configurations return
+    /// `MeasureResult { valid: false, .. }` rather than erroring.
+    fn measure(&self, space: &ConfigSpace, point: &PointConfig) -> MeasureResult;
+}
+
+/// Which built-in backend to use (config / CLI selectable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Full decode → lower → VTA++ cycle simulation (the production oracle).
+    VtaSim,
+    /// Cheap roofline proxy (smoke tests, CI scenarios, huge sweeps).
+    Analytical,
+}
+
+impl BackendKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::VtaSim => "vta-sim",
+            BackendKind::Analytical => "analytical",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<BackendKind> {
+        match s {
+            "vta-sim" | "vtasim" | "sim" => Some(BackendKind::VtaSim),
+            "analytical" | "roofline" => Some(BackendKind::Analytical),
+            _ => None,
+        }
+    }
+
+    /// All selectable names, for CLI error messages.
+    pub fn known_names() -> &'static [&'static str] {
+        &["vta-sim", "analytical"]
+    }
+
+    pub fn build(self) -> Box<dyn MeasureBackend> {
+        match self {
+            BackendKind::VtaSim => Box::new(VtaSimBackend),
+            BackendKind::Analytical => Box::new(AnalyticalBackend),
+        }
+    }
+}
+
+/// The cycle-accurate oracle: wraps [`crate::codegen::measure_point`]
+/// (decode the point, lower the convolution, simulate the instruction
+/// stream on the VTA++ pipeline model).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VtaSimBackend;
+
+impl MeasureBackend for VtaSimBackend {
+    fn name(&self) -> &'static str {
+        "vta-sim"
+    }
+
+    fn measure(&self, space: &ConfigSpace, point: &PointConfig) -> MeasureResult {
+        measure_point(space, point)
+    }
+}
+
+/// A roofline-style analytical proxy: a few hundred nanoseconds per point
+/// instead of a full instruction-stream simulation.
+///
+/// The model charges `max(compute, DRAM)` cycles plus a fraction of the
+/// smaller term that virtual threading fails to overlap. It preserves the
+/// qualitative structure the tuners care about — GEMM padding waste from
+/// mismatched geometry, weight re-streaming per spatial tile, scratchpad
+/// overflow invalidity, GFLOPS bounded by the configured peak — without
+/// claiming cycle accuracy. Use it for smoke runs and scenario sweeps; the
+/// paper's numbers come from [`VtaSimBackend`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AnalyticalBackend;
+
+impl MeasureBackend for AnalyticalBackend {
+    fn name(&self) -> &'static str {
+        "analytical"
+    }
+
+    fn measure(&self, space: &ConfigSpace, point: &PointConfig) -> MeasureResult {
+        let (hw, sw) = space.decode(point);
+        let area_mm2 = total_area_mm2(&hw);
+        let invalid = MeasureResult {
+            seconds: f64::INFINITY,
+            cycles: 0,
+            gflops: 0.0,
+            area_mm2,
+            occupancy: 0.0,
+            valid: false,
+        };
+        // Same validity surface as the lowering path: structurally bad
+        // hardware or tile working sets that overflow a scratchpad
+        // partition cannot be built.
+        if hw.validate().is_err() || memory_overflow_ratio(space, point) > 0.0 {
+            return invalid;
+        }
+
+        let t = &space.task;
+        // Padded problem dims on the GEMM array.
+        let pad_n = ceil_div(t.n, hw.batch) * hw.batch;
+        let pad_ci = ceil_div(t.ci, hw.block_in) * hw.block_in;
+        let pad_co = ceil_div(t.co, hw.block_out) * hw.block_out;
+        let true_macs = t.macs() as f64;
+        let padded_macs =
+            (pad_n * pad_co * t.oh() * t.ow()) as f64 * (pad_ci * t.kh * t.kw) as f64;
+        let occupancy = true_macs / padded_macs;
+        let compute_cycles = padded_macs / hw.macs_per_cycle() as f64;
+
+        // DRAM traffic: inputs and outputs stream once; weights re-stream
+        // once per spatial tile (the scratchpad holds one tile's working
+        // set); every tile pays three DMA setup latencies.
+        let tiles = ceil_div(t.oh(), sw.tile_h.max(1)) * ceil_div(t.ow(), sw.tile_w.max(1));
+        let tiles = tiles.max(1);
+        let inp_bytes = (pad_n * pad_ci * t.h * t.w * INP_BYTES) as f64;
+        let wgt_bytes = (pad_co * pad_ci * t.kh * t.kw * WGT_BYTES) as f64 * tiles as f64;
+        let out_bytes = (pad_n * pad_co * t.oh() * t.ow() * OUT_BYTES) as f64;
+        let dram_cycles = (inp_bytes + wgt_bytes + out_bytes) / hw.dram_bytes_per_cycle as f64
+            + (3 * tiles * hw.dma_latency) as f64;
+
+        // Virtual threads overlap load/compute; a single thread exposes
+        // more of the smaller term.
+        let vthreads = (sw.h_threading * sw.oc_threading).clamp(1, 2);
+        let overlap = if vthreads >= 2 { 0.85 } else { 0.60 };
+        let cycles =
+            compute_cycles.max(dram_cycles) + (1.0 - overlap) * compute_cycles.min(dram_cycles);
+        let seconds = cycles * hw.cycle_time();
+        MeasureResult {
+            seconds,
+            cycles: cycles as u64,
+            gflops: t.flops() as f64 / seconds / 1e9,
+            area_mm2,
+            occupancy,
+            valid: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use crate::workload::Conv2dTask;
+
+    fn space() -> ConfigSpace {
+        ConfigSpace::for_task(&Conv2dTask::new(1, 64, 28, 28, 64, 3, 3, 1, 1), true)
+    }
+
+    #[test]
+    fn kind_roundtrips_names() {
+        for k in [BackendKind::VtaSim, BackendKind::Analytical] {
+            assert_eq!(BackendKind::from_name(k.name()), Some(k));
+            assert_eq!(k.build().name(), k.name());
+        }
+        assert_eq!(BackendKind::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn vta_sim_backend_is_measure_point() {
+        let s = space();
+        let b = VtaSimBackend;
+        let mut rng = Pcg32::seeded(3);
+        for _ in 0..10 {
+            let p = s.random_point(&mut rng);
+            assert_eq!(b.measure(&s, &p), measure_point(&s, &p));
+        }
+    }
+
+    #[test]
+    fn analytical_default_point_is_sane() {
+        let s = space();
+        let b = AnalyticalBackend;
+        let m = b.measure(&s, &s.default_point());
+        assert!(m.valid);
+        assert!(m.seconds.is_finite() && m.seconds > 0.0);
+        assert!(m.occupancy > 0.0 && m.occupancy <= 1.0);
+        let (hw, _) = s.decode(&s.default_point());
+        assert!(m.gflops > 0.0 && m.gflops <= hw.peak_gops() + 1e-9);
+    }
+
+    #[test]
+    fn analytical_is_deterministic_and_varied() {
+        let s = space();
+        let b = AnalyticalBackend;
+        let mut rng = Pcg32::seeded(5);
+        let mut distinct = std::collections::HashSet::new();
+        for _ in 0..100 {
+            let p = s.random_point(&mut rng);
+            let a = b.measure(&s, &p);
+            assert_eq!(a, b.measure(&s, &p));
+            if a.valid {
+                distinct.insert(a.cycles);
+            }
+        }
+        assert!(distinct.len() > 10, "landscape too flat: {}", distinct.len());
+    }
+
+    #[test]
+    fn analytical_flags_overflowing_configs_invalid() {
+        let s = space();
+        let b = AnalyticalBackend;
+        let mut p = s.default_point();
+        // Max out every knob: guaranteed scratchpad overflow in this space.
+        for (i, k) in s.knobs.iter().enumerate() {
+            p.0[i] = k.len() - 1;
+        }
+        let m = b.measure(&s, &p);
+        assert!(!m.valid);
+        assert_eq!(m.fitness(), 0.0);
+    }
+}

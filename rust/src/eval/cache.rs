@@ -1,0 +1,178 @@
+//! Concurrent, point-keyed memoization of measurement results.
+
+use crate::codegen::MeasureResult;
+use crate::space::{ConfigSpace, PointConfig};
+use crate::workload::Conv2dTask;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Canonical identity of one measurable configuration: the task shape plus
+/// the *decoded knob values* (not value indices). Keying on values means the
+/// same physical (hardware, software) configuration hits the same entry
+/// whether it was planned in the full co-design space or a hardware-frozen
+/// software-only space — which is what lets one `arco compare` run share
+/// measurements across frameworks.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PointKey {
+    pub task: Conv2dTask,
+    /// One decoded value per knob, in space knob order.
+    pub values: Vec<usize>,
+}
+
+impl PointKey {
+    /// Key for `point` within `space`.
+    pub fn of(space: &ConfigSpace, point: &PointConfig) -> PointKey {
+        let values = space
+            .knobs
+            .iter()
+            .zip(point.as_slice())
+            .map(|(k, &i)| k.values[i])
+            .collect();
+        PointKey { task: space.task, values }
+    }
+}
+
+/// Cache counters (monotonic over the cache's lifetime).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups answered from the cache.
+    pub hits: usize,
+    /// Lookups that found nothing.
+    pub misses: usize,
+    /// Entries currently stored.
+    pub entries: usize,
+}
+
+/// A thread-safe point-keyed result cache.
+///
+/// A plain `Mutex<HashMap>` is deliberate: one lookup or insert is tens of
+/// nanoseconds while one simulation is tens of microseconds to milliseconds,
+/// so lock contention is irrelevant and the simplicity pays for itself.
+pub struct MeasureCache {
+    map: Mutex<HashMap<PointKey, MeasureResult>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl MeasureCache {
+    pub fn new() -> MeasureCache {
+        MeasureCache {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+        }
+    }
+
+    /// Look up a key, counting the hit or miss.
+    pub fn get(&self, key: &PointKey) -> Option<MeasureResult> {
+        let found = self.map.lock().unwrap().get(key).copied();
+        match found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    /// Store a result. Only [`get`](Self::get) touches the hit/miss
+    /// counters; inserts are not counted.
+    pub fn insert(&self, key: PointKey, result: MeasureResult) {
+        self.map.lock().unwrap().insert(key, result);
+    }
+
+    /// Intent-named alias of [`insert`](Self::insert) for seeding entries
+    /// from the journal at engine construction.
+    pub fn preload(&self, key: PointKey, result: MeasureResult) {
+        self.insert(key, result);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.len(),
+        }
+    }
+}
+
+impl Default for MeasureCache {
+    fn default() -> Self {
+        MeasureCache::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn space(hardware_tunable: bool) -> ConfigSpace {
+        ConfigSpace::for_task(&Conv2dTask::new(1, 32, 28, 28, 32, 3, 3, 1, 1), hardware_tunable)
+    }
+
+    fn dummy_result(seconds: f64) -> MeasureResult {
+        MeasureResult {
+            seconds,
+            cycles: (seconds * 1e8) as u64,
+            gflops: 1.0,
+            area_mm2: 2.0,
+            occupancy: 0.5,
+            valid: true,
+        }
+    }
+
+    #[test]
+    fn key_identifies_decoded_values_across_spaces() {
+        // The default point of the frozen space and the full space decode to
+        // the same physical configuration, so their keys must collide.
+        let full = space(true);
+        let frozen = space(false);
+        let k_full = PointKey::of(&full, &full.default_point());
+        let k_frozen = PointKey::of(&frozen, &frozen.default_point());
+        assert_eq!(k_full, k_frozen);
+    }
+
+    #[test]
+    fn distinct_points_get_distinct_keys() {
+        let s = space(true);
+        let mut rng = Pcg32::seeded(1);
+        let mut keys = std::collections::HashSet::new();
+        let mut flats = std::collections::HashSet::new();
+        for _ in 0..100 {
+            let p = s.random_point(&mut rng);
+            keys.insert(PointKey::of(&s, &p));
+            flats.insert(s.flat_index(&p));
+        }
+        // Values are a bijection of indices within one space.
+        assert_eq!(keys.len(), flats.len());
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let s = space(true);
+        let c = MeasureCache::new();
+        let k = PointKey::of(&s, &s.default_point());
+        assert!(c.get(&k).is_none());
+        c.insert(k.clone(), dummy_result(0.5));
+        assert_eq!(c.get(&k).unwrap().seconds, 0.5);
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses, st.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn preload_does_not_count() {
+        let s = space(true);
+        let c = MeasureCache::new();
+        c.preload(PointKey::of(&s, &s.default_point()), dummy_result(1.0));
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses, st.entries), (0, 0, 1));
+    }
+}

@@ -1,0 +1,362 @@
+//! The batched, cached, backend-abstracted measurement engine.
+
+use super::backend::{BackendKind, MeasureBackend};
+use super::cache::{CacheStats, MeasureCache, PointKey};
+use super::journal::Journal;
+use crate::codegen::MeasureResult;
+use crate::space::{ConfigSpace, PointConfig};
+use crate::util::pool::parallel_map;
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Engine construction settings (see [`crate::config::EvalSettings`] for
+/// the file/CLI-facing mirror).
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub backend: BackendKind,
+    /// Worker threads for the measurement fan-out.
+    pub workers: usize,
+    /// Serve repeated points from a shared in-memory cache.
+    pub cache: bool,
+    /// Optional persistent journal; existing entries for the selected
+    /// backend pre-seed the cache, new measurements are appended.
+    pub journal: Option<PathBuf>,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            backend: BackendKind::VtaSim,
+            workers: crate::util::pool::default_workers(),
+            cache: true,
+            journal: None,
+        }
+    }
+}
+
+/// Aggregate engine counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineStats {
+    /// Batches served.
+    pub batches: usize,
+    /// Backend invocations actually paid for (unique, uncached points).
+    pub simulations: usize,
+    /// Points answered by intra-batch deduplication.
+    pub batch_dedup: usize,
+    /// Cache lookups answered from memory.
+    pub cache_hits: usize,
+    /// Cache lookups that missed.
+    pub cache_misses: usize,
+    /// Entries currently cached.
+    pub cache_entries: usize,
+    /// Cache entries pre-seeded from the journal at construction.
+    pub journal_seeded: usize,
+}
+
+/// The shared measurement service: every tuning-path `f[τ(Θ)]` evaluation
+/// goes through [`Engine::measure_batch`].
+///
+/// The engine is `Sync`; one instance can serve many concurrent tuning
+/// jobs (see `examples/compile_service.rs`) and results are deterministic
+/// for a deterministic backend regardless of `workers`.
+///
+/// At-most-once guarantee: sequential batches never re-simulate a cached
+/// point, and repeats *within* a batch are always coalesced. Two batches
+/// racing on different threads can still each pay for the same brand-new
+/// point (there is no in-flight miss coalescing yet — ROADMAP open item);
+/// results remain correct, only the saving degrades.
+pub struct Engine {
+    backend: Box<dyn MeasureBackend>,
+    workers: usize,
+    cache: Option<MeasureCache>,
+    journal: Option<Mutex<Journal>>,
+    journal_seeded: usize,
+    batches: AtomicUsize,
+    simulations: AtomicUsize,
+    batch_dedup: AtomicUsize,
+}
+
+impl Engine {
+    pub fn new(config: EngineConfig) -> Engine {
+        Engine::from_parts(config.backend.build(), config.workers, config.cache, config.journal)
+    }
+
+    /// Engine over a caller-provided backend (tests, custom oracles).
+    pub fn with_backend(backend: Box<dyn MeasureBackend>, workers: usize, cache: bool) -> Engine {
+        Engine::from_parts(backend, workers, cache, None)
+    }
+
+    /// The common case: cycle-accurate simulator backend, cache on, no
+    /// journal.
+    pub fn vta_sim(workers: usize) -> Engine {
+        Engine::new(EngineConfig { workers, ..Default::default() })
+    }
+
+    fn from_parts(
+        backend: Box<dyn MeasureBackend>,
+        workers: usize,
+        cache: bool,
+        journal: Option<PathBuf>,
+    ) -> Engine {
+        let cache = cache.then(MeasureCache::new);
+        if cache.is_none() && journal.is_some() {
+            crate::log_warn!(
+                "eval",
+                "journal configured with the cache disabled: measurements are recorded \
+                 (once per unique point) but nothing is reused; drop --no-cache to get \
+                 journal reuse"
+            );
+        }
+        let mut journal_seeded = 0usize;
+        let journal = journal.map(|path| {
+            let j = Journal::open(&path);
+            if let Some(c) = &cache {
+                for e in j.entries() {
+                    if e.backend == backend.name() {
+                        c.preload(e.key.clone(), e.result);
+                        journal_seeded += 1;
+                    }
+                }
+            }
+            if journal_seeded > 0 {
+                crate::log_info!(
+                    "eval",
+                    "journal {}: seeded {journal_seeded} cached measurements",
+                    path.display()
+                );
+            }
+            Mutex::new(j)
+        });
+        Engine {
+            backend,
+            workers: workers.max(1),
+            cache,
+            journal,
+            journal_seeded,
+            batches: AtomicUsize::new(0),
+            simulations: AtomicUsize::new(0),
+            batch_dedup: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Measure a batch of points, returning results in input order.
+    ///
+    /// Repeats within the batch are measured once; points seen in earlier
+    /// batches (or seeded from the journal) come from the cache; the
+    /// remaining unique misses fan out over the worker pool.
+    pub fn measure_batch(
+        &self,
+        space: &ConfigSpace,
+        points: &[PointConfig],
+    ) -> Vec<MeasureResult> {
+        let n = points.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        let keys: Vec<PointKey> = points.iter().map(|p| PointKey::of(space, p)).collect();
+        let mut out: Vec<Option<MeasureResult>> = vec![None; n];
+
+        // 1. Serve whatever the cache already knows.
+        if let Some(cache) = &self.cache {
+            for i in 0..n {
+                out[i] = cache.get(&keys[i]);
+            }
+        }
+
+        // 2. Deduplicate the misses within this batch.
+        let mut first_slot: HashMap<&PointKey, usize> = HashMap::new();
+        let mut uniq: Vec<usize> = Vec::new(); // input index of each unique miss
+        let mut alias: Vec<(usize, usize)> = Vec::new(); // (input index, uniq slot)
+        for i in 0..n {
+            if out[i].is_some() {
+                continue;
+            }
+            match first_slot.entry(&keys[i]) {
+                Entry::Occupied(e) => alias.push((i, *e.get())),
+                Entry::Vacant(v) => {
+                    v.insert(uniq.len());
+                    uniq.push(i);
+                }
+            }
+        }
+        drop(first_slot);
+
+        // 3. Fan the unique misses out over the worker pool.
+        let miss_points: Vec<PointConfig> = uniq.iter().map(|&i| points[i].clone()).collect();
+        let results: Vec<MeasureResult> =
+            parallel_map(&miss_points, self.workers, |_, p| self.backend.measure(space, p));
+        self.simulations.fetch_add(results.len(), Ordering::Relaxed);
+        self.batch_dedup.fetch_add(alias.len(), Ordering::Relaxed);
+
+        // 4. Record and assemble in input order.
+        for (slot, &i) in uniq.iter().enumerate() {
+            let r = results[slot];
+            if let Some(cache) = &self.cache {
+                cache.insert(keys[i].clone(), r);
+            }
+            if let Some(journal) = &self.journal {
+                journal.lock().unwrap().record(self.backend.name(), &keys[i], &r);
+            }
+            out[i] = Some(r);
+        }
+        for (i, slot) in alias {
+            out[i] = Some(results[slot]);
+        }
+        if !uniq.is_empty() {
+            self.flush_journal();
+        }
+        out.into_iter().map(|r| r.expect("every point measured")).collect()
+    }
+
+    /// Measure a single point (one-off probes; batches are cheaper).
+    pub fn measure_one(&self, space: &ConfigSpace, point: &PointConfig) -> MeasureResult {
+        self.measure_batch(space, std::slice::from_ref(point))[0]
+    }
+
+    /// Measure a planned batch and pair results back with their points —
+    /// the exact shape [`crate::tuner::Strategy::observe`] consumes.
+    pub fn measure_paired(
+        &self,
+        space: &ConfigSpace,
+        points: Vec<PointConfig>,
+    ) -> Vec<(PointConfig, MeasureResult)> {
+        let results = self.measure_batch(space, &points);
+        points.into_iter().zip(results).collect()
+    }
+
+    /// Persist any journal entries recorded since the last flush. Failures
+    /// are logged, not fatal: a read-only results dir should not kill a
+    /// tuning run.
+    pub fn flush_journal(&self) {
+        if let Some(journal) = &self.journal {
+            if let Err(e) = journal.lock().unwrap().flush() {
+                crate::log_warn!("eval", "journal flush failed: {e}");
+            }
+        }
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.as_ref().map(|c| c.stats()).unwrap_or_default()
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        let cs = self.cache_stats();
+        EngineStats {
+            batches: self.batches.load(Ordering::Relaxed),
+            simulations: self.simulations.load(Ordering::Relaxed),
+            batch_dedup: self.batch_dedup.load(Ordering::Relaxed),
+            cache_hits: cs.hits,
+            cache_misses: cs.misses,
+            cache_entries: cs.entries,
+            journal_seeded: self.journal_seeded,
+        }
+    }
+
+    /// One-line diagnostic summary for logs and CLI output.
+    pub fn summary(&self) -> String {
+        let s = self.stats();
+        format!(
+            "backend={} workers={} batches={} simulations={} cache_hits={} batch_dedup={} journal_seeded={}",
+            self.backend_name(),
+            self.workers,
+            s.batches,
+            s.simulations,
+            s.cache_hits,
+            s.batch_dedup,
+            s.journal_seeded
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use crate::workload::Conv2dTask;
+
+    fn space() -> ConfigSpace {
+        ConfigSpace::for_task(&Conv2dTask::new(1, 32, 28, 28, 32, 3, 3, 1, 1), true)
+    }
+
+    #[test]
+    fn batch_dedup_measures_each_point_once() {
+        let s = space();
+        let e = Engine::vta_sim(2);
+        let p = s.default_point();
+        let batch = vec![p.clone(), p.clone(), p.clone()];
+        let rs = e.measure_batch(&s, &batch);
+        assert_eq!(rs[0], rs[1]);
+        assert_eq!(rs[1], rs[2]);
+        let st = e.stats();
+        assert_eq!(st.simulations, 1);
+        assert_eq!(st.batch_dedup, 2);
+    }
+
+    #[test]
+    fn cache_serves_repeats_across_batches() {
+        let s = space();
+        let e = Engine::vta_sim(1);
+        let p = s.default_point();
+        let first = e.measure_one(&s, &p);
+        let second = e.measure_one(&s, &p);
+        assert_eq!(first, second);
+        let st = e.stats();
+        assert_eq!(st.simulations, 1);
+        assert_eq!(st.cache_hits, 1);
+    }
+
+    #[test]
+    fn results_in_input_order_and_worker_independent() {
+        let s = space();
+        let mut rng = Pcg32::seeded(9);
+        let mut points = Vec::new();
+        for _ in 0..15 {
+            points.push(s.random_point(&mut rng));
+        }
+        // Sprinkle duplicates.
+        points.push(points[0].clone());
+        points.push(points[7].clone());
+        let serial = Engine::with_backend(Box::new(super::super::VtaSimBackend), 1, false);
+        let parallel = Engine::with_backend(Box::new(super::super::VtaSimBackend), 4, false);
+        let a = serial.measure_batch(&s, &points);
+        let b = parallel.measure_batch(&s, &points);
+        assert_eq!(a, b);
+        for (p, r) in points.iter().zip(&a) {
+            assert_eq!(*r, crate::codegen::measure_point(&s, p));
+        }
+    }
+
+    #[test]
+    fn disabled_cache_still_dedups_within_batch() {
+        let s = space();
+        let e = Engine::with_backend(Box::new(super::super::VtaSimBackend), 2, false);
+        let p = s.default_point();
+        e.measure_batch(&s, &[p.clone(), p.clone()]);
+        e.measure_batch(&s, &[p.clone()]);
+        let st = e.stats();
+        // Within a batch the duplicate is free; across batches it is not.
+        assert_eq!(st.batch_dedup, 1);
+        assert_eq!(st.simulations, 2);
+        assert_eq!(st.cache_hits, 0);
+    }
+
+    #[test]
+    fn empty_batch_is_free() {
+        let s = space();
+        let e = Engine::vta_sim(2);
+        assert!(e.measure_batch(&s, &[]).is_empty());
+        assert_eq!(e.stats().batches, 0);
+    }
+}

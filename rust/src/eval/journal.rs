@@ -1,0 +1,303 @@
+//! Persistent measurement journal: JSON on disk, reused across processes.
+//!
+//! Format (version 1):
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "entries": [
+//!     {
+//!       "backend": "vta-sim",
+//!       "task": {"n":1,"ci":64,"h":56,"w":56,"co":64,"kh":3,"kw":3,"stride":1,"pad":1},
+//!       "values": [1, 16, 16, 1, 1, 8, 8],
+//!       "valid": true,
+//!       "seconds": 0.00123,
+//!       "cycles": 123456,
+//!       "gflops": 41.2,
+//!       "area_mm2": 2.31,
+//!       "occupancy": 0.92
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! `values` are decoded knob values in space knob order (the same identity
+//! as [`PointKey`]); invalid configurations carry `"seconds": null` and are
+//! restored with infinite runtime. Entries from a different backend than
+//! the engine's are kept on disk but not preloaded into its cache, so one
+//! journal file can serve both the simulator and the analytical proxy.
+//!
+//! Durability model: one writing engine per journal file. A `(backend,
+//! key)` pair is recorded at most once, flushes rewrite the file atomically
+//! (temp file + rename), and a torn or corrupt file degrades to an empty
+//! journal rather than aborting. Concurrent *writer* processes are not
+//! coordinated — the last flusher wins (see ROADMAP open items).
+//!
+//! Staleness caveat: entries are keyed on `(backend, task, knob values)`
+//! only — they carry no fingerprint of the simulator itself. If the cycle
+//! model or the non-tunable `VtaConfig` defaults change, delete the
+//! journal file; reusing it would silently mix old-model and new-model
+//! numbers. This is why no shipped config enables a journal by default.
+
+use super::cache::PointKey;
+use crate::codegen::MeasureResult;
+use crate::util::json::{read_json_file, write_json_file, Json};
+use crate::workload::Conv2dTask;
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+
+/// One persisted measurement.
+#[derive(Debug, Clone)]
+pub struct JournalEntry {
+    pub backend: String,
+    pub key: PointKey,
+    pub result: MeasureResult,
+}
+
+/// An append-only measurement log bound to one file.
+pub struct Journal {
+    path: PathBuf,
+    entries: Vec<JournalEntry>,
+    /// `(backend, key)` identities already present, so repeated `record`
+    /// calls (e.g. cache-less engines re-measuring) never grow the file.
+    seen: HashSet<(String, PointKey)>,
+    dirty: bool,
+}
+
+impl Journal {
+    pub const VERSION: usize = 1;
+
+    /// Open (or create-on-first-flush) the journal at `path`. A missing
+    /// file is an empty journal; an unreadable one is logged and treated
+    /// as empty rather than aborting the run.
+    pub fn open(path: &Path) -> Journal {
+        let mut entries = Vec::new();
+        if path.exists() {
+            match read_json_file(path) {
+                Ok(doc) => entries = parse_entries(&doc),
+                Err(e) => {
+                    crate::log_warn!("eval", "ignoring unreadable journal {}: {e}", path.display());
+                }
+            }
+        }
+        let seen = entries
+            .iter()
+            .map(|e: &JournalEntry| (e.backend.clone(), e.key.clone()))
+            .collect();
+        Journal { path: path.to_path_buf(), entries, seen, dirty: false }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn entries(&self) -> &[JournalEntry] {
+        &self.entries
+    }
+
+    /// Append one measurement (persisted at the next [`flush`](Self::flush)).
+    /// A `(backend, key)` pair already journaled is ignored.
+    pub fn record(&mut self, backend: &str, key: &PointKey, result: &MeasureResult) {
+        if !self.seen.insert((backend.to_string(), key.clone())) {
+            return;
+        }
+        self.entries.push(JournalEntry {
+            backend: backend.to_string(),
+            key: key.clone(),
+            result: *result,
+        });
+        self.dirty = true;
+    }
+
+    /// Write the journal out if anything was recorded since the last flush.
+    /// The rewrite is atomic (temp file + rename), so an interrupted flush
+    /// leaves the previous journal intact instead of a torn file.
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        if !self.dirty {
+            return Ok(());
+        }
+        let tmp = self.path.with_extension("json.tmp");
+        write_json_file(&tmp, &self.to_json())?;
+        std::fs::rename(&tmp, &self.path)?;
+        self.dirty = false;
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::num(Self::VERSION as f64)),
+            ("entries", Json::Arr(self.entries.iter().map(entry_to_json).collect())),
+        ])
+    }
+}
+
+fn entry_to_json(e: &JournalEntry) -> Json {
+    let r = &e.result;
+    Json::obj(vec![
+        ("backend", Json::str(e.backend.clone())),
+        ("task", e.key.task.to_json()),
+        (
+            "values",
+            Json::Arr(e.key.values.iter().map(|&v| Json::num(v as f64)).collect()),
+        ),
+        ("valid", Json::Bool(r.valid)),
+        // Infinite runtimes (invalid configs) serialize as null.
+        ("seconds", Json::num(r.seconds)),
+        ("cycles", Json::num(r.cycles as f64)),
+        ("gflops", Json::num(r.gflops)),
+        ("area_mm2", Json::num(r.area_mm2)),
+        ("occupancy", Json::num(r.occupancy)),
+    ])
+}
+
+fn entry_from_json(v: &Json) -> Option<JournalEntry> {
+    let backend = v.get_str("backend")?.to_string();
+    let task = Conv2dTask::from_json(v.get("task")?)?;
+    let values: Vec<usize> =
+        v.get("values")?.as_arr()?.iter().map(|x| x.as_usize()).collect::<Option<_>>()?;
+    let valid = v.get_bool("valid")?;
+    let seconds = if valid { v.get_f64("seconds")? } else { f64::INFINITY };
+    let result = MeasureResult {
+        seconds,
+        cycles: v.get_f64("cycles").unwrap_or(0.0) as u64,
+        gflops: v.get_f64("gflops").unwrap_or(0.0),
+        area_mm2: v.get_f64("area_mm2").unwrap_or(0.0),
+        occupancy: v.get_f64("occupancy").unwrap_or(0.0),
+        valid,
+    };
+    Some(JournalEntry { backend, key: PointKey { task, values }, result })
+}
+
+fn parse_entries(doc: &Json) -> Vec<JournalEntry> {
+    let mut out = Vec::new();
+    let Some(items) = doc.get("entries").and_then(Json::as_arr) else {
+        return out;
+    };
+    let mut skipped = 0usize;
+    for item in items {
+        match entry_from_json(item) {
+            Some(e) => out.push(e),
+            None => skipped += 1,
+        }
+    }
+    if skipped > 0 {
+        crate::log_warn!("eval", "journal: skipped {skipped} malformed entries");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::measure_point;
+    use crate::space::ConfigSpace;
+    use crate::util::rng::Pcg32;
+
+    fn space() -> ConfigSpace {
+        ConfigSpace::for_task(&Conv2dTask::new(1, 32, 28, 28, 32, 3, 3, 1, 1), true)
+    }
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        // Keep test artifacts inside the build tree.
+        PathBuf::from("target/tmp").join(format!("journal_{tag}_{}.json", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrips_through_util_json() {
+        let s = space();
+        let mut rng = Pcg32::seeded(2);
+        let path = tmp_path("roundtrip");
+        let _ = std::fs::remove_file(&path);
+
+        let mut j = Journal::open(&path);
+        assert!(j.is_empty());
+        let mut keys: Vec<(PointKey, crate::codegen::MeasureResult)> = Vec::new();
+        for _ in 0..8 {
+            let p = s.random_point(&mut rng);
+            let key = PointKey::of(&s, &p);
+            let m = measure_point(&s, &p);
+            j.record("vta-sim", &key, &m);
+            if !keys.iter().any(|(k, _)| *k == key) {
+                keys.push((key, m));
+            }
+        }
+        j.flush().unwrap();
+
+        let j2 = Journal::open(&path);
+        assert_eq!(j2.len(), keys.len());
+        for (e, (key, m)) in j2.entries().iter().zip(&keys) {
+            assert_eq!(e.backend, "vta-sim");
+            assert_eq!(&e.key, key);
+            if m.valid {
+                assert_eq!(&e.result, m);
+            } else {
+                assert!(!e.result.valid);
+                assert!(e.result.seconds.is_infinite());
+            }
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn flush_is_idempotent_and_lazy() {
+        let path = tmp_path("lazy");
+        let _ = std::fs::remove_file(&path);
+        let mut j = Journal::open(&path);
+        // Nothing recorded: flush must not create the file.
+        j.flush().unwrap();
+        assert!(!path.exists());
+        let s = space();
+        let p = s.default_point();
+        j.record("vta-sim", &PointKey::of(&s, &p), &measure_point(&s, &p));
+        j.flush().unwrap();
+        assert!(path.exists());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn duplicate_records_are_ignored_across_sessions() {
+        let s = space();
+        let path = tmp_path("dedup");
+        let _ = std::fs::remove_file(&path);
+        let p = s.default_point();
+        let key = PointKey::of(&s, &p);
+        let m = measure_point(&s, &p);
+
+        let mut j = Journal::open(&path);
+        j.record("vta-sim", &key, &m);
+        j.record("vta-sim", &key, &m); // same session duplicate
+        j.record("analytical", &key, &m); // different backend: distinct
+        assert_eq!(j.len(), 2);
+        j.flush().unwrap();
+
+        // A second session re-recording the same identity must not grow
+        // the file or mark it dirty.
+        let mut j2 = Journal::open(&path);
+        assert_eq!(j2.len(), 2);
+        j2.record("vta-sim", &key, &m);
+        assert_eq!(j2.len(), 2);
+        j2.flush().unwrap();
+        assert_eq!(Journal::open(&path).len(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn unreadable_journal_degrades_to_empty() {
+        let path = tmp_path("garbage");
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).unwrap();
+        }
+        std::fs::write(&path, "not json {").unwrap();
+        let j = Journal::open(&path);
+        assert!(j.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+}

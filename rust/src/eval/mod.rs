@@ -1,0 +1,40 @@
+//! The hardware-measurement layer: every `f[τ(Θ)]` evaluation in the
+//! system flows through one [`Engine`].
+//!
+//! The paper's frameworks are all bottlenecked on the expensive hardware
+//! measurement call (§2.3). This module makes that call a first-class,
+//! shared service instead of scattered `measure_point` invocations:
+//!
+//! - [`MeasureBackend`] abstracts *how* a configuration is measured:
+//!   [`VtaSimBackend`] runs the full decode → lower → cycle-simulate path
+//!   (the production oracle), [`AnalyticalBackend`] is a cheap roofline
+//!   proxy for smoke tests and CI-scale scenario sweeps.
+//! - [`MeasureCache`] memoizes results under a [`PointKey`] — the task
+//!   shape plus *decoded knob values* — so the same physical configuration
+//!   is recognized across frameworks, spaces (full vs. hardware-frozen) and
+//!   batches.
+//! - [`Journal`] persists measurements as JSON (via [`crate::util::json`]),
+//!   letting `arco compare` re-runs and long-lived services reuse prior
+//!   work across processes.
+//! - [`Engine`] fronts all of it: it takes a *batch* of points,
+//!   deduplicates within the batch, serves repeats from the cache, fans the
+//!   misses out over the scoped worker pool ([`crate::util::pool`]), and
+//!   records new results in the journal. Results come back in input order
+//!   and are deterministic for a deterministic backend, independent of the
+//!   worker count.
+//!
+//! Call-site contract: nothing outside this module (and the backend impls
+//! it owns) invokes [`crate::codegen::measure_point`] or the simulator on
+//! the tuning path. Strategies plan points; the engine pays for them —
+//! each unique configuration at most once.
+
+pub mod backend;
+pub mod cache;
+pub mod engine;
+pub mod journal;
+
+pub use crate::codegen::MeasureResult;
+pub use backend::{AnalyticalBackend, BackendKind, MeasureBackend, VtaSimBackend};
+pub use cache::{CacheStats, MeasureCache, PointKey};
+pub use engine::{Engine, EngineConfig, EngineStats};
+pub use journal::{Journal, JournalEntry};

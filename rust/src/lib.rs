@@ -15,12 +15,28 @@
 //! Python never runs on the tuning path: [`runtime::Engine`] loads the HLO
 //! text via PJRT (`xla` crate) and the MARL hot loop calls it directly.
 //! See DESIGN.md for the full system inventory and experiment index.
+//!
+//! ## The measurement layer
+//!
+//! Every framework's bottleneck is the hardware-measurement call `f[τ(Θ)]`
+//! (§2.3). All of those calls flow through one seam: [`eval::Engine`].
+//! The engine takes *batches* of [`space::PointConfig`]s, deduplicates
+//! within each batch, serves repeats from a concurrent point-keyed cache
+//! (keyed on decoded knob values, so frameworks and spaces share entries),
+//! fans unique misses out over the [`util::pool`] worker threads, and can
+//! persist every measurement to a JSON journal for cross-process reuse.
+//! Backends are pluggable via [`eval::MeasureBackend`]:
+//! [`eval::VtaSimBackend`] is the cycle-accurate decode → lower → simulate
+//! oracle, [`eval::AnalyticalBackend`] a roofline proxy for smoke runs
+//! (`arco ... --backend analytical`). This is also the seam future remote
+//! or sharded measurement services plug into.
 
 pub mod util;
 pub mod workload;
 pub mod vta;
 pub mod space;
 pub mod codegen;
+pub mod eval;
 pub mod costmodel;
 pub mod ml;
 pub mod runtime;

@@ -8,15 +8,21 @@
 //! arco report-models                        # Table 3
 //! arco info                                 # backend / artifact status
 //! ```
+//!
+//! Measurement-engine options (all commands): `--backend vta-sim|analytical`
+//! selects the measurement oracle, `--workers N` sizes its thread pool,
+//! `--journal results/journal.json` persists measurements for reuse across
+//! runs, `--no-cache` disables in-memory memoization.
 
 use arco::config::RunConfig;
+use arco::eval::{self, BackendKind};
 use arco::report;
-use arco::tuner::{compare_frameworks, tune_model, Framework};
+use arco::tuner::{compare_frameworks_with, tune_model_with, Framework};
 use arco::util::cli::Cli;
 use arco::util::json::write_json_file;
 use arco::util::log::{set_level, Level};
 use arco::workload::{model_by_name, model_names};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 fn main() {
     arco::util::log::init_from_env();
@@ -71,7 +77,10 @@ fn common_cli(name: &str, about: &str) -> Cli {
         .opt("trials", Some('n'), "total hardware measurements per task", None)
         .opt("batch", Some('b'), "measurements per planning iteration", None)
         .opt("seed", Some('s'), "RNG seed", None)
-        .opt("workers", Some('w'), "simulator worker threads", None)
+        .opt("workers", Some('w'), "measurement engine worker threads", None)
+        .opt("backend", None, "measurement backend: vta-sim | analytical", None)
+        .opt("journal", Some('j'), "persistent measurement journal (JSON path)", None)
+        .flag("no-cache", None, "disable the measurement cache (every point re-simulated)")
         .flag("quick", Some('q'), "CI-scale RL budgets (same pipeline)")
         .flag("verbose", Some('v'), "debug logging")
         .flag("help", Some('h'), "show help")
@@ -94,10 +103,30 @@ fn load_config(a: &arco::util::cli::Args) -> anyhow::Result<(RunConfig, bool)> {
     if let Some(s) = a.get_u64("seed").map_err(anyhow::Error::msg)? {
         cfg.seed = s;
     }
+    if let Some(name) = a.get("backend") {
+        cfg.eval.backend = BackendKind::from_name(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown backend '{name}' (known: {})",
+                BackendKind::known_names().join(", ")
+            )
+        })?;
+    }
+    if a.has_flag("no-cache") {
+        cfg.eval.cache = false;
+    }
+    if let Some(path) = a.get("journal") {
+        cfg.eval.journal = Some(PathBuf::from(path));
+    }
     if a.has_flag("verbose") {
         set_level(Level::Debug);
     }
     Ok((cfg, a.has_flag("quick")))
+}
+
+/// One measurement engine per run: shared cache and journal across every
+/// framework, model and task the command touches.
+fn build_engine(cfg: &RunConfig) -> eval::Engine {
+    eval::Engine::new(cfg.eval.engine_config(cfg.budget.workers))
 }
 
 fn parse_models(spec: &str) -> anyhow::Result<Vec<String>> {
@@ -129,7 +158,8 @@ fn cmd_tune(args: &[String]) -> anyhow::Result<()> {
     let framework = Framework::from_name(a.get("framework").unwrap())
         .ok_or_else(|| anyhow::anyhow!("unknown framework"))?;
 
-    let out = tune_model(framework, &model, cfg.budget, quick, cfg.seed);
+    let engine = build_engine(&cfg);
+    let out = tune_model_with(&engine, framework, &model, cfg.budget, quick, cfg.seed);
     println!(
         "{} on {}: mean inference {:.5}s ({:.3} inf/s), compile {:.1}s, {} measurements",
         framework.name(),
@@ -151,6 +181,7 @@ fn cmd_tune(args: &[String]) -> anyhow::Result<()> {
         merged.merge(&t.result.timer);
     }
     println!("\nsearch phase profile:\n{}", merged.summary());
+    println!("eval engine: {}", engine.summary());
     let json = report::compare_json(&[arco::tuner::CompareReport {
         model: model.name.to_string(),
         outcomes: vec![out],
@@ -182,12 +213,16 @@ fn cmd_compare(args: &[String]) -> anyhow::Result<()> {
         })
         .collect::<Result<_, _>>()?;
 
+    let engine = build_engine(&cfg);
     let mut reports = Vec::new();
     for name in &models {
         let model = model_by_name(name).unwrap();
         arco::log_info!("main", "=== comparing on {name} ===");
-        reports.push(compare_frameworks(&frameworks, &model, cfg.budget, quick, cfg.seed));
+        reports.push(compare_frameworks_with(
+            &engine, &frameworks, &model, cfg.budget, quick, cfg.seed,
+        ));
     }
+    println!("eval engine: {}", engine.summary());
 
     let t6 = report::table6_inference(&reports);
     println!("\nTable 6 — mean inference times (s) on VTA++:\n{t6}");
@@ -219,8 +254,12 @@ fn cmd_fig4(args: &[String]) -> anyhow::Result<()> {
     let model = model_by_name(a.get("model").unwrap())
         .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
 
-    let with_cs = tune_model(Framework::Arco, &model, cfg.budget, quick, cfg.seed);
-    let without_cs = tune_model(Framework::ArcoNoCs, &model, cfg.budget, quick, cfg.seed);
+    // Both variants share one engine: configurations the two runs have in
+    // common are simulated once.
+    let engine = build_engine(&cfg);
+    let with_cs = tune_model_with(&engine, Framework::Arco, &model, cfg.budget, quick, cfg.seed);
+    let without_cs =
+        tune_model_with(&engine, Framework::ArcoNoCs, &model, cfg.budget, quick, cfg.seed);
 
     // Heaviest task's trace under each variant.
     let pick = |o: &arco::tuner::ModelOutcome| {
@@ -241,6 +280,7 @@ fn cmd_fig4(args: &[String]) -> anyhow::Result<()> {
         "fig4: with CS best {:.5}s ({} measurements), without CS best {:.5}s ({} measurements)",
         with_cs.inference_secs, with_cs.measurements, without_cs.inference_secs, without_cs.measurements
     );
+    println!("eval engine: {}", engine.summary());
     println!("wrote results/fig4_cs_{}.csv", model.name);
     Ok(())
 }
@@ -265,5 +305,9 @@ fn cmd_info() -> anyhow::Result<()> {
         }
     }
     println!("simulator: VTA++ cycle model, default {:?}", arco::vta::VtaConfig::default());
+    println!(
+        "measurement backends: {} (select with --backend; --journal persists measurements)",
+        BackendKind::known_names().join(", ")
+    );
     Ok(())
 }

@@ -2,8 +2,8 @@
 //! and global-state encodings, per-agent action spaces (knob steps), and
 //! the constrained reward (Eqs. 4–5).
 
-use crate::codegen::MeasureResult;
 use crate::costmodel::featurize;
+use crate::eval::MeasureResult;
 use crate::runtime::ModelDims;
 use crate::space::{ConfigSpace, KnobOwner, PointConfig};
 use crate::vta::area::{default_area_budget_mm2, total_area_mm2};

@@ -7,8 +7,8 @@ use super::confidence::confidence_sampling;
 use super::env::CoOptEnv;
 use super::exploration::{ExploreParams, MarlExplorer, Visited};
 use super::mappo::Mappo;
-use crate::codegen::MeasureResult;
 use crate::costmodel::{featurize, CostModel, Gbt, GbtParams};
+use crate::eval::MeasureResult;
 use crate::space::{ConfigSpace, PointConfig};
 use crate::tuner::Strategy;
 use crate::util::rng::Pcg32;
@@ -244,7 +244,7 @@ impl Strategy for Arco {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::codegen::measure_point;
+    use crate::eval::Engine;
     use crate::runtime::ModelDims;
     use crate::tuner::{tune_task, TuneBudget};
     use crate::workload::Conv2dTask;
@@ -265,6 +265,7 @@ mod tests {
     #[test]
     fn plans_distinct_unmeasured_configs() {
         let s = space();
+        let engine = Engine::vta_sim(2);
         let mut a = arco(&s);
         let mut all = HashSet::new();
         for _ in 0..3 {
@@ -273,9 +274,7 @@ mod tests {
             for p in &plan {
                 assert!(all.insert(s.flat_index(p)), "duplicate planned config");
             }
-            let results: Vec<_> =
-                plan.into_iter().map(|p| { let m = measure_point(&s, &p); (p, m) }).collect();
-            a.observe(&results);
+            a.observe(&engine.measure_paired(&s, plan));
         }
     }
 
@@ -284,6 +283,7 @@ mod tests {
         // ARCO's whole point: it must actually propose non-default hardware.
         let s = space();
         let mut a = arco(&s);
+        let engine = Engine::vta_sim(2);
         let mut saw_nondefault_hw = false;
         for _ in 0..4 {
             let plan = a.plan(16);
@@ -293,9 +293,7 @@ mod tests {
                     saw_nondefault_hw = true;
                 }
             }
-            let results: Vec<_> =
-                plan.into_iter().map(|p| { let m = measure_point(&s, &p); (p, m) }).collect();
-            a.observe(&results);
+            a.observe(&engine.measure_paired(&s, plan));
         }
         assert!(saw_nondefault_hw);
     }
@@ -310,7 +308,7 @@ mod tests {
         assert!(r.best.gflops > 0.0);
         // Must beat the worst decile of random configs comfortably: check
         // it beats the default point.
-        let default = measure_point(&s, &s.default_point());
+        let default = Engine::vta_sim(1).measure_one(&s, &s.default_point());
         assert!(
             r.best.seconds <= default.seconds,
             "tuned {} should beat default {}",
@@ -326,10 +324,9 @@ mod tests {
         params.use_cs = false;
         let mut a =
             Arco::with_backend(s.clone(), params, Backend::native(ModelDims::default()), 4);
+        let engine = Engine::vta_sim(2);
         let plan = a.plan(16);
-        let results: Vec<_> =
-            plan.into_iter().map(|p| { let m = measure_point(&s, &p); (p, m) }).collect();
-        a.observe(&results);
+        a.observe(&engine.measure_paired(&s, plan));
         let plan2 = a.plan(16);
         assert!(!plan2.is_empty());
     }

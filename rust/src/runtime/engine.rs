@@ -10,15 +10,28 @@ use std::collections::HashMap;
 use std::path::Path;
 
 /// Engine errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum EngineError {
-    #[error("artifact '{0}' missing from manifest")]
     MissingArtifact(String),
-    #[error("input '{what}' has {got} elements, expected {want}")]
     BadShape { what: &'static str, got: usize, want: usize },
-    #[error("xla error: {0}")]
     Xla(String),
 }
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::MissingArtifact(name) => {
+                write!(f, "artifact '{name}' missing from manifest")
+            }
+            EngineError::BadShape { what, got, want } => {
+                write!(f, "input '{what}' has {got} elements, expected {want}")
+            }
+            EngineError::Xla(msg) => write!(f, "xla error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
 
 impl From<xla::Error> for EngineError {
     fn from(e: xla::Error) -> Self {

@@ -4,10 +4,11 @@
 //! and Table 6.
 
 use super::strategy::Strategy;
-use super::task_tuner::{tune_task, TaskTuneResult, TuneBudget};
+use super::task_tuner::{tune_task_with, TaskTuneResult, TuneBudget};
 use crate::baselines::{AutoTvm, Chameleon, RandomSearch};
 use crate::baselines::autotvm::AutoTvmParams;
 use crate::baselines::chameleon::ChameleonParams;
+use crate::eval;
 use crate::marl::strategy::{Arco, ArcoParams};
 use crate::space::ConfigSpace;
 use crate::workload::ModelSpec;
@@ -167,8 +168,24 @@ impl CompareReport {
     }
 }
 
-/// Tune one model end-to-end with one framework.
+/// Tune one model end-to-end with one framework, using a private default
+/// measurement engine. Prefer [`tune_model_with`] with a shared engine when
+/// running several frameworks or models: tasks repeated across frameworks
+/// are then simulated once and served from the cache afterwards.
 pub fn tune_model(
+    framework: Framework,
+    model: &ModelSpec,
+    budget: TuneBudget,
+    quick: bool,
+    seed: u64,
+) -> ModelOutcome {
+    let engine = eval::Engine::vta_sim(budget.workers);
+    tune_model_with(&engine, framework, model, budget, quick, seed)
+}
+
+/// Tune one model end-to-end with one framework through a shared engine.
+pub fn tune_model_with(
+    engine: &eval::Engine,
     framework: Framework,
     model: &ModelSpec,
     budget: TuneBudget,
@@ -183,7 +200,7 @@ pub fn tune_model(
     for (i, (task, weight)) in model.unique_tasks().iter().enumerate() {
         let space = ConfigSpace::for_task(task, framework.tunes_hardware());
         let mut strategy = framework.build(space.clone(), quick, seed ^ (i as u64) << 32);
-        let result = tune_task(&space, strategy.as_mut(), budget);
+        let result = tune_task_with(engine, &space, strategy.as_mut(), budget);
         crate::log_info!(
             "compare",
             "{} {} task {}/{} {}: best {:.3e}s over {} measurements ({})",
@@ -213,8 +230,24 @@ pub fn tune_model(
     }
 }
 
-/// Compare a set of frameworks on one model.
+/// Compare a set of frameworks on one model. All frameworks share one
+/// measurement engine, so a configuration measured by one framework is a
+/// cache hit for every later framework that plans it.
 pub fn compare_frameworks(
+    frameworks: &[Framework],
+    model: &ModelSpec,
+    budget: TuneBudget,
+    quick: bool,
+    seed: u64,
+) -> CompareReport {
+    let engine = eval::Engine::vta_sim(budget.workers);
+    compare_frameworks_with(&engine, frameworks, model, budget, quick, seed)
+}
+
+/// [`compare_frameworks`] over a caller-provided engine (shared cache /
+/// journal across models and processes).
+pub fn compare_frameworks_with(
+    engine: &eval::Engine,
     frameworks: &[Framework],
     model: &ModelSpec,
     budget: TuneBudget,
@@ -223,8 +256,9 @@ pub fn compare_frameworks(
 ) -> CompareReport {
     let outcomes = frameworks
         .iter()
-        .map(|&f| tune_model(f, model, budget, quick, seed))
+        .map(|&f| tune_model_with(engine, f, model, budget, quick, seed))
         .collect();
+    crate::log_info!("compare", "{}: eval {}", model.name, engine.summary());
     CompareReport { model: model.name.to_string(), outcomes }
 }
 

@@ -6,6 +6,9 @@ pub mod compare;
 pub mod strategy;
 pub mod task_tuner;
 
-pub use compare::{compare_frameworks, tune_model, CompareReport, Framework, ModelOutcome};
+pub use compare::{
+    compare_frameworks, compare_frameworks_with, tune_model, tune_model_with, CompareReport,
+    Framework, ModelOutcome,
+};
 pub use strategy::Strategy;
-pub use task_tuner::{tune_task, TaskTuneResult, TraceEntry, TuneBudget};
+pub use task_tuner::{tune_task, tune_task_with, TaskTuneResult, TraceEntry, TuneBudget};

@@ -1,14 +1,16 @@
 //! The strategy interface every framework implements.
 
-use crate::codegen::MeasureResult;
+use crate::eval::MeasureResult;
 use crate::space::PointConfig;
 
 /// A search strategy: plans measurement batches, learns from results.
 ///
 /// The orchestrator ([`super::tune_task`]) owns the measurement budget and
-/// the simulator; strategies only decide *what* to measure next. This is the
-/// same division AutoTVM/CHAMELEON/ARCO share in the paper (§2.3's
-/// argmax over f[τ(Θ)] with different explorers/samplers plugged in).
+/// the [`crate::eval::Engine`] that batches, caches and parallelizes the
+/// hardware measurements; strategies only decide *what* to measure next.
+/// This is the same division AutoTVM/CHAMELEON/ARCO share in the paper
+/// (§2.3's argmax over f[τ(Θ)] with different explorers/samplers plugged
+/// in).
 pub trait Strategy {
     /// Framework name for reports.
     fn name(&self) -> &'static str;

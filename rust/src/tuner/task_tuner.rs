@@ -1,9 +1,8 @@
-//! Per-task tuning loop: budgeted plan → parallel measure → observe.
+//! Per-task tuning loop: budgeted plan → batched engine measure → observe.
 
 use super::strategy::Strategy;
-use crate::codegen::{measure_point, MeasureResult};
+use crate::eval::{self, MeasureResult};
 use crate::space::{ConfigSpace, PointConfig};
-use crate::util::pool::parallel_map;
 use crate::util::timer::{PhaseTimer, Stopwatch};
 
 /// Measurement budget (Table 4/5: Σb = 1000, b = 64).
@@ -13,7 +12,9 @@ pub struct TuneBudget {
     pub total_measurements: usize,
     /// Measurements per iteration (planning batch).
     pub batch: usize,
-    /// Worker threads for parallel simulation.
+    /// Worker threads for parallel simulation. Only consulted when
+    /// [`tune_task`] builds its own default engine; an engine passed to
+    /// [`tune_task_with`] brings its own worker pool.
     pub workers: usize,
     /// Area feasibility ceiling (mm²) for the *final* configuration:
     /// configurations above it are measured (they inform the cost model)
@@ -104,8 +105,24 @@ impl TaskTuneResult {
     }
 }
 
-/// Tune one task with a strategy under a budget.
+/// Tune one task with a strategy under a budget, using a private default
+/// measurement engine (cycle simulator backend, in-memory cache,
+/// `budget.workers` threads). Prefer [`tune_task_with`] and a shared
+/// [`eval::Engine`] when tuning several tasks or frameworks: a shared
+/// engine pays for each unique configuration at most once across all of
+/// them.
 pub fn tune_task(
+    space: &ConfigSpace,
+    strategy: &mut dyn Strategy,
+    budget: TuneBudget,
+) -> TaskTuneResult {
+    let engine = eval::Engine::vta_sim(budget.workers);
+    tune_task_with(&engine, space, strategy, budget)
+}
+
+/// Tune one task, measuring through the caller's engine.
+pub fn tune_task_with(
+    engine: &eval::Engine,
     space: &ConfigSpace,
     strategy: &mut dyn Strategy,
     budget: TuneBudget,
@@ -134,11 +151,8 @@ pub fn tune_task(
             crate::log_debug!("tuner", "{} stopped early at {measured}", strategy.name());
             break;
         }
-        let results: Vec<MeasureResult> = timer.time("measure", || {
-            parallel_map(&plan, budget.workers, |_, p| measure_point(space, p))
-        });
         let pairs: Vec<(PointConfig, MeasureResult)> =
-            plan.into_iter().zip(results).collect();
+            timer.time("measure", || engine.measure_paired(space, plan));
         for (p, r) in &pairs {
             measured += 1;
             if !r.valid {
@@ -269,6 +283,31 @@ mod tests {
         let r = tune_task(&s, &mut Dead, TuneBudget::default());
         assert_eq!(r.measurements, 0);
         assert!(r.best_point.is_none());
+    }
+
+    #[test]
+    fn shared_engine_dedups_across_runs() {
+        let s = space();
+        let engine = crate::eval::Engine::vta_sim(2);
+        let budget =
+            TuneBudget { total_measurements: 48, batch: 16, workers: 2, ..Default::default() };
+        let run = |engine: &crate::eval::Engine| {
+            let mut strat = RandomProbe {
+                space: s.clone(),
+                rng: Pcg32::seeded(4),
+                seen: HashSet::new(),
+                observed: 0,
+            };
+            tune_task_with(engine, &s, &mut strat, budget)
+        };
+        let a = run(&engine);
+        let sims_after_first = engine.stats().simulations;
+        assert_eq!(sims_after_first, 48);
+        let b = run(&engine);
+        assert_eq!(a.best.seconds, b.best.seconds);
+        // Same seed → same plan → the second run is fully cache-served.
+        assert_eq!(engine.stats().simulations, sims_after_first);
+        assert!(engine.stats().cache_hits >= 48);
     }
 
     #[test]

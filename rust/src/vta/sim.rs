@@ -68,11 +68,23 @@ impl SimReport {
 }
 
 /// Simulation error (malformed stream).
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum SimError {
-    #[error("dependence deadlock: {remaining} instructions unscheduled (unit heads: {heads})")]
     Deadlock { remaining: usize, heads: String },
 }
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::Deadlock { remaining, heads } => write!(
+                f,
+                "dependence deadlock: {remaining} instructions unscheduled (unit heads: {heads})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
 
 /// Latency of one instruction in cycles (excluding queueing/dependences).
 fn latency(op: &Op, hw: &VtaConfig) -> u64 {

@@ -1,0 +1,184 @@
+//! Integration tests for the eval::Engine measurement layer: cache/dedup
+//! semantics, backend parity with the raw oracle, journal persistence, and
+//! the cross-framework measurement-sharing guarantee behind `arco compare`.
+
+use arco::baselines::RandomSearch;
+use arco::codegen::measure_point;
+use arco::eval::{BackendKind, Engine, EngineConfig, Journal, PointKey};
+use arco::space::{ConfigSpace, PointConfig};
+use arco::tuner::{compare_frameworks_with, tune_task_with, Framework, TuneBudget};
+use arco::util::rng::Pcg32;
+use arco::workload::{model_by_name, Conv2dTask};
+use std::path::PathBuf;
+
+fn space() -> ConfigSpace {
+    ConfigSpace::for_task(&Conv2dTask::new(1, 32, 28, 28, 32, 3, 3, 1, 1), true)
+}
+
+fn tmp_journal(tag: &str) -> PathBuf {
+    PathBuf::from("target/tmp").join(format!("eval_engine_{tag}_{}.json", std::process::id()))
+}
+
+#[test]
+fn same_point_simulated_exactly_once() {
+    let s = space();
+    let engine = Engine::vta_sim(2);
+    let p = s.default_point();
+    // Three duplicates in one batch + two more batches of the same point.
+    let first = engine.measure_batch(&s, &[p.clone(), p.clone(), p.clone()]);
+    let again = engine.measure_one(&s, &p);
+    let again2 = engine.measure_one(&s, &p);
+    assert_eq!(first[0], first[1]);
+    assert_eq!(first[1], first[2]);
+    assert_eq!(first[0], again);
+    assert_eq!(again, again2);
+    let st = engine.stats();
+    assert_eq!(st.simulations, 1, "one unique config must cost one simulation");
+    assert_eq!(st.batch_dedup, 2);
+    assert_eq!(st.cache_hits, 2);
+}
+
+#[test]
+fn engine_matches_raw_measure_point_on_random_sample() {
+    // Backend parity: VtaSimBackend through the engine == legacy
+    // measure_point, for valid and invalid points alike, at any worker
+    // count, in input order.
+    let s = space();
+    let mut rng = Pcg32::seeded(17);
+    let mut points: Vec<PointConfig> = (0..40).map(|_| s.random_point(&mut rng)).collect();
+    points.push(points[3].clone()); // duplicate on purpose
+    for workers in [1, 4] {
+        let engine = Engine::new(EngineConfig { workers, ..Default::default() });
+        let batch = engine.measure_batch(&s, &points);
+        assert_eq!(batch.len(), points.len());
+        for (p, r) in points.iter().zip(&batch) {
+            assert_eq!(*r, measure_point(&s, p), "divergence at {}", s.render(p));
+        }
+    }
+}
+
+#[test]
+fn analytical_backend_serves_the_same_interface() {
+    let s = space();
+    let engine = Engine::new(EngineConfig {
+        backend: BackendKind::Analytical,
+        workers: 2,
+        ..Default::default()
+    });
+    assert_eq!(engine.backend_name(), "analytical");
+    let mut rng = Pcg32::seeded(23);
+    let points: Vec<PointConfig> = (0..30).map(|_| s.random_point(&mut rng)).collect();
+    let results = engine.measure_batch(&s, &points);
+    let valid = results.iter().filter(|r| r.valid).count();
+    assert!(valid > 0, "analytical backend should accept some configs");
+    for (p, r) in points.iter().zip(&results) {
+        if r.valid {
+            let (hw, _) = s.decode(p);
+            assert!(r.seconds.is_finite() && r.seconds > 0.0);
+            assert!(r.gflops <= hw.peak_gops() + 1e-9);
+        } else {
+            assert_eq!(r.fitness(), 0.0);
+        }
+    }
+}
+
+#[test]
+fn journal_reuses_measurements_across_engines() {
+    let s = space();
+    let path = tmp_journal("reuse");
+    let _ = std::fs::remove_file(&path);
+    let mut rng = Pcg32::seeded(31);
+    let points: Vec<PointConfig> = (0..12).map(|_| s.random_point(&mut rng)).collect();
+
+    // First process: measures and journals everything.
+    let first = Engine::new(EngineConfig {
+        workers: 2,
+        journal: Some(path.clone()),
+        ..Default::default()
+    });
+    let results = first.measure_batch(&s, &points);
+    let uniques = first.stats().simulations;
+    assert!(uniques > 0);
+    drop(first);
+
+    // The journal on disk round-trips through util::json.
+    let journal = Journal::open(&path);
+    assert_eq!(journal.len(), uniques);
+    for e in journal.entries() {
+        assert_eq!(e.backend, "vta-sim");
+        assert_eq!(e.key.values.len(), s.num_knobs());
+    }
+
+    // Second process: seeds its cache from the journal and re-simulates
+    // nothing for the same workload.
+    let second = Engine::new(EngineConfig {
+        workers: 2,
+        journal: Some(path.clone()),
+        ..Default::default()
+    });
+    assert_eq!(second.stats().journal_seeded, uniques);
+    let replay = second.measure_batch(&s, &points);
+    assert_eq!(replay, results);
+    assert_eq!(second.stats().simulations, 0, "journal must make the rerun free");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn point_keys_unify_frozen_and_full_spaces() {
+    // A software-only framework (frozen hardware knobs) planning the
+    // default hardware must share cache entries with the full co-design
+    // space.
+    let t = Conv2dTask::new(1, 32, 28, 28, 32, 3, 3, 1, 1);
+    let full = ConfigSpace::for_task(&t, true);
+    let frozen = ConfigSpace::for_task(&t, false);
+    let engine = Engine::vta_sim(1);
+    let a = engine.measure_one(&full, &full.default_point());
+    let b = engine.measure_one(&frozen, &frozen.default_point());
+    assert_eq!(a, b);
+    assert_eq!(engine.stats().simulations, 1);
+    assert_eq!(
+        PointKey::of(&full, &full.default_point()),
+        PointKey::of(&frozen, &frozen.default_point())
+    );
+}
+
+#[test]
+fn repeated_tuning_run_is_fully_cache_served() {
+    // The acceptance property: within one engine's lifetime (one `arco
+    // compare` invocation), re-measuring the same point never re-simulates.
+    let s = space();
+    let engine = Engine::vta_sim(2);
+    let budget = TuneBudget { total_measurements: 64, batch: 16, workers: 2, ..Default::default() };
+    let mut r1 = RandomSearch::new(s.clone(), 77);
+    let out1 = tune_task_with(&engine, &s, &mut r1, budget);
+    let sims = engine.stats().simulations;
+    assert_eq!(sims, out1.measurements);
+
+    let mut r2 = RandomSearch::new(s.clone(), 77); // same seed → same plan
+    let out2 = tune_task_with(&engine, &s, &mut r2, budget);
+    assert_eq!(out1.best.seconds, out2.best.seconds);
+    assert_eq!(engine.stats().simulations, sims, "second identical run must be free");
+    assert!(engine.stats().cache_hits >= out2.measurements);
+}
+
+#[test]
+fn compare_shares_measurements_across_frameworks() {
+    // Random planned twice under two Framework entries: the second pass
+    // must be answered from the shared cache, not new simulations.
+    let model = model_by_name("alexnet").unwrap();
+    let budget = TuneBudget { total_measurements: 32, batch: 16, workers: 2, ..Default::default() };
+    let engine = Engine::vta_sim(2);
+    let report = compare_frameworks_with(
+        &engine,
+        &[Framework::Random, Framework::Random],
+        &model,
+        budget,
+        true,
+        11,
+    );
+    assert_eq!(report.outcomes.len(), 2);
+    let st = engine.stats();
+    let total: usize = report.outcomes.iter().map(|o| o.measurements).sum();
+    assert_eq!(st.simulations, total / 2, "identical second framework must be cache-served");
+    assert!(st.cache_hits >= total / 2);
+}

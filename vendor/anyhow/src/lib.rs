@@ -1,0 +1,165 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no registry access, so this vendored crate
+//! provides the (small) subset of `anyhow` the workspace actually uses:
+//! [`Error`], [`Result`], [`Error::msg`], and the [`anyhow!`] / [`bail!`]
+//! macros, with the same blanket `From<E: std::error::Error>` conversion
+//! that makes `?` work on arbitrary error types. Swapping this path
+//! dependency for the real crates.io `anyhow` requires no source changes.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A type-erased error, convertible from any `std::error::Error`.
+///
+/// Like the real `anyhow::Error`, this deliberately does **not** implement
+/// `std::error::Error` itself — that is what keeps the blanket `From`
+/// conversion coherent with the reflexive `From<T> for T` impl.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl Error {
+    /// Wrap a concrete error value.
+    pub fn new<E>(error: E) -> Error
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        Error { inner: Box::new(error) }
+    }
+
+    /// Build an error from a displayable message (`map_err(Error::msg)`).
+    pub fn msg<M>(message: M) -> Error
+    where
+        M: fmt::Display + fmt::Debug + Send + Sync + 'static,
+    {
+        Error { inner: Box::new(MessageError(message)) }
+    }
+
+    /// Borrow the underlying error.
+    pub fn as_ref(&self) -> &(dyn StdError + Send + Sync + 'static) {
+        &*self.inner
+    }
+
+    /// The lowest-level source of this error.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        let mut cause: &(dyn StdError + 'static) = &*self.inner;
+        while let Some(next) = cause.source() {
+            cause = next;
+        }
+        cause
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Match anyhow's alternate-free rendering: the message, then the
+        // source chain.
+        write!(f, "{}", self.inner)?;
+        let mut source = self.inner.source();
+        if source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(cause) = source {
+            write!(f, "\n    {cause}")?;
+            source = cause.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with a type-erased error default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A plain-message error (what `anyhow!`/`Error::msg` produce).
+struct MessageError<M>(M);
+
+impl<M: fmt::Display> fmt::Display for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Debug> fmt::Debug for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Display + fmt::Debug> StdError for MessageError<M> {}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(format!($($arg)+))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            let r: std::result::Result<(), std::io::Error> = Err(io_err());
+            r?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("missing"));
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e: Error = anyhow!("bad {} ({})", "thing", 7);
+        assert_eq!(e.to_string(), "bad thing (7)");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn inner(x: usize) -> Result<usize> {
+            if x == 0 {
+                bail!("zero not allowed");
+            }
+            Ok(x)
+        }
+        assert!(inner(1).is_ok());
+        assert_eq!(inner(0).unwrap_err().to_string(), "zero not allowed");
+    }
+
+    #[test]
+    fn msg_accepts_string() {
+        let e = Error::msg("plain".to_string());
+        assert_eq!(format!("{e}"), "plain");
+        assert_eq!(format!("{e:?}"), "plain");
+    }
+}
