@@ -48,9 +48,12 @@ fn main() {
     let uniq64: Vec<PointConfig> = (0..64).map(|_| space.random_point(&mut erng)).collect();
     let repeated: Vec<PointConfig> =
         (0..64).map(|i| uniq64[i % 8].clone()).collect();
-    let eng_w1 = Engine::new(EngineConfig { workers: 1, cache: false, ..Default::default() });
-    let eng_w4 = Engine::new(EngineConfig { workers: 4, cache: false, ..Default::default() });
-    let eng_cached = Engine::new(EngineConfig { workers: 4, cache: true, ..Default::default() });
+    let eng_w1 = Engine::new(EngineConfig { workers: 1, cache: false, ..Default::default() })
+        .expect("local engine");
+    let eng_w4 = Engine::new(EngineConfig { workers: 4, cache: false, ..Default::default() })
+        .expect("local engine");
+    let eng_cached = Engine::new(EngineConfig { workers: 4, cache: true, ..Default::default() })
+        .expect("local engine");
     let n64 = Some(64u64);
     runner.bench_with_elements("eval/batch64_unique_serial_w1", n64, || {
         arco::util::bench::black_box(eng_w1.measure_batch(&space, &uniq64));
@@ -64,13 +67,27 @@ fn main() {
     runner.bench_with_elements("eval/batch64_repeated_cached", n64, || {
         arco::util::bench::black_box(eng_cached.measure_batch(&space, &repeated));
     });
+    // A capacity-bounded cache on the same repeated workload (8 unique
+    // points, capacity 8): every hit pays the LRU recency update — the
+    // steady-state overhead a long-lived fleet shard adds per lookup.
+    let eng_lru = Engine::new(EngineConfig {
+        workers: 4,
+        cache: true,
+        cache_capacity: Some(8),
+        ..Default::default()
+    })
+    .expect("local engine");
+    runner.bench_with_elements("eval/batch64_repeated_lru_cap8", n64, || {
+        arco::util::bench::black_box(eng_lru.measure_batch(&space, &repeated));
+    });
     // The analytical proxy backend on the same repeated workload.
     let eng_analytical = Engine::new(EngineConfig {
-        backend: BackendKind::Analytical,
+        backend: BackendKind::Analytical.into(),
         workers: 4,
         cache: false,
         ..Default::default()
-    });
+    })
+    .expect("local engine");
     runner.bench_with_elements("eval/batch64_repeated_analytical", n64, || {
         arco::util::bench::black_box(eng_analytical.measure_batch(&space, &repeated));
     });

@@ -54,9 +54,10 @@ fn main() {
     // by previous incarnations.
     let engine = Engine::new(EngineConfig {
         workers: sim_workers,
-        journal: Some(PathBuf::from("results/service_journal.json")),
+        journal: Some(PathBuf::from("results/service_journal.jsonl")),
         ..Default::default()
-    });
+    })
+    .expect("service engine (is another service holding the journal lock?)");
 
     std::thread::scope(|scope| {
         for wid in 0..service_workers {

@@ -108,9 +108,18 @@ impl AutoTvm {
                 }
             }
         }
-        let mut v: Vec<(PointConfig, f64)> = results.into_values().collect();
-        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
-        v
+        // Deterministic order: score descending, flat index breaking ties.
+        // HashMap iteration order varies per process, and the remote
+        // measurement smoke (`scripts/ci_smoke_remote.sh`) asserts that two
+        // processes plan identically from identical observations.
+        let mut v: Vec<(usize, (PointConfig, f64))> = results.into_iter().collect();
+        v.sort_by(|a, b| {
+            b.1 .1
+                .partial_cmp(&a.1 .1)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| a.0.cmp(&b.0))
+        });
+        v.into_iter().map(|(_, pv)| pv).collect()
     }
 
     fn predict(&self, p: &PointConfig) -> f64 {

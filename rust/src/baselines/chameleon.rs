@@ -246,7 +246,12 @@ impl Chameleon {
                 self.value.unflatten(&vtheta);
             }
         }
-        visited.into_values().collect()
+        // Deterministic order (flat index): HashMap iteration varies per
+        // process, and the clustering downstream is order-sensitive — two
+        // processes must plan identically from identical observations.
+        let mut v: Vec<(usize, (PointConfig, f64))> = visited.into_iter().collect();
+        v.sort_by_key(|&(k, _)| k);
+        v.into_iter().map(|(_, pv)| pv).collect()
     }
 
     /// Random unmeasured configurations, filtered by the scratchpad

@@ -10,7 +10,7 @@
 use crate::baselines::autotvm::AutoTvmParams;
 use crate::baselines::chameleon::ChameleonParams;
 use crate::costmodel::GbtParams;
-use crate::eval::{BackendKind, EngineConfig};
+use crate::eval::{BackendKind, BackendSpec, EngineConfig};
 use crate::marl::exploration::ExploreParams;
 use crate::marl::strategy::ArcoParams;
 use crate::tuner::TuneBudget;
@@ -21,17 +21,26 @@ use std::path::{Path, PathBuf};
 /// [`crate::eval::EngineConfig`]; worker count lives in the budget).
 #[derive(Debug, Clone)]
 pub struct EvalSettings {
-    /// Which [`crate::eval::MeasureBackend`] serves measurements.
-    pub backend: BackendKind,
+    /// Which [`crate::eval::MeasureBackend`] serves measurements: a
+    /// built-in kind, or `remote:host:port[,...]` for a measurement fleet.
+    pub backend: BackendSpec,
     /// Serve repeated configurations from the in-memory cache.
     pub cache: bool,
-    /// Optional persistent measurement journal (JSON), reused across runs.
+    /// Bound the cache to at most this many entries (LRU eviction);
+    /// `None` keeps everything.
+    pub cache_capacity: Option<usize>,
+    /// Optional persistent measurement journal (JSONL), reused across runs.
     pub journal: Option<PathBuf>,
 }
 
 impl Default for EvalSettings {
     fn default() -> Self {
-        EvalSettings { backend: BackendKind::VtaSim, cache: true, journal: None }
+        EvalSettings {
+            backend: BackendSpec::Builtin(BackendKind::VtaSim),
+            cache: true,
+            cache_capacity: None,
+            journal: None,
+        }
     }
 }
 
@@ -39,9 +48,10 @@ impl EvalSettings {
     /// Concrete engine configuration with the run's worker count.
     pub fn engine_config(&self, workers: usize) -> EngineConfig {
         EngineConfig {
-            backend: self.backend,
+            backend: self.backend.clone(),
             workers,
             cache: self.cache,
+            cache_capacity: self.cache_capacity,
             journal: self.journal.clone(),
         }
     }
@@ -129,18 +139,22 @@ impl RunConfig {
         }
         if let Some(e) = doc.get("eval") {
             if let Some(name) = e.get_str("backend") {
-                if let Some(kind) = BackendKind::from_name(name) {
-                    self.eval.backend = kind;
+                if let Some(spec) = BackendSpec::parse(name) {
+                    self.eval.backend = spec;
                 } else {
                     crate::log_warn!(
                         "config",
-                        "unknown eval backend '{name}' (known: {}); keeping {}",
+                        "unknown eval backend '{name}' (known: {}, or remote:host:port[,...]); \
+                         keeping {}",
                         BackendKind::known_names().join(", "),
-                        self.eval.backend.name()
+                        self.eval.backend.describe()
                     );
                 }
             }
             self.eval.cache = e.get_bool("cache").unwrap_or(self.eval.cache);
+            if let Some(cap) = e.get_usize("cache_capacity") {
+                self.eval.cache_capacity = Some(cap);
+            }
             if let Some(path) = e.get_str("journal") {
                 self.eval.journal = Some(PathBuf::from(path));
             }
@@ -193,17 +207,37 @@ mod tests {
         assert_eq!(c.arco.explore.episodes, 4);
         assert!(!c.arco.use_cs);
         assert_eq!(c.autotvm.n_sa, 16);
-        assert_eq!(c.eval.backend, BackendKind::Analytical);
+        assert_eq!(c.eval.backend, BackendSpec::Builtin(BackendKind::Analytical));
         assert!(!c.eval.cache);
         assert_eq!(c.eval.journal.as_deref(), Some(Path::new("results/journal.json")));
         assert_eq!(c.seed, 7);
     }
 
     #[test]
+    fn remote_backend_and_cache_capacity_parse() {
+        let mut c = RunConfig::default();
+        c.apply_json(
+            &Json::parse(
+                r#"{"eval": {"backend": "remote:10.0.0.1:4917,10.0.0.2:4917",
+                             "cache_capacity": 4096}}"#,
+            )
+            .unwrap(),
+        );
+        assert_eq!(
+            c.eval.backend,
+            BackendSpec::Remote(vec!["10.0.0.1:4917".into(), "10.0.0.2:4917".into()])
+        );
+        assert_eq!(c.eval.cache_capacity, Some(4096));
+        let ec = c.eval.engine_config(2);
+        assert_eq!(ec.cache_capacity, Some(4096));
+    }
+
+    #[test]
     fn eval_defaults_are_cached_simulator() {
         let c = RunConfig::default();
-        assert_eq!(c.eval.backend, BackendKind::VtaSim);
+        assert_eq!(c.eval.backend, BackendSpec::Builtin(BackendKind::VtaSim));
         assert!(c.eval.cache);
+        assert!(c.eval.cache_capacity.is_none());
         assert!(c.eval.journal.is_none());
         let ec = c.eval.engine_config(3);
         assert_eq!(ec.workers, 3);
@@ -211,7 +245,7 @@ mod tests {
         // Unknown backend names are ignored, not fatal.
         let mut c2 = RunConfig::default();
         c2.apply_json(&Json::parse(r#"{"eval": {"backend": "quantum"}}"#).unwrap());
-        assert_eq!(c2.eval.backend, BackendKind::VtaSim);
+        assert_eq!(c2.eval.backend, BackendSpec::Builtin(BackendKind::VtaSim));
     }
 
     #[test]

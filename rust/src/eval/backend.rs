@@ -3,6 +3,7 @@
 use crate::codegen::{measure_point, MeasureResult};
 use crate::marl::env::memory_overflow_ratio;
 use crate::space::{ConfigSpace, PointConfig};
+use crate::util::pool::parallel_map;
 use crate::util::stats::ceil_div;
 use crate::vta::area::total_area_mm2;
 use crate::vta::config::{INP_BYTES, OUT_BYTES, WGT_BYTES};
@@ -18,6 +19,19 @@ pub trait MeasureBackend: Send + Sync {
     /// Measure one point. Invalid configurations return
     /// `MeasureResult { valid: false, .. }` rather than erroring.
     fn measure(&self, space: &ConfigSpace, point: &PointConfig) -> MeasureResult;
+
+    /// Measure a batch of unique points, results in input order. The
+    /// default fans [`measure`](Self::measure) out over up to `workers`
+    /// local threads; backends that own their parallelism (a remote fleet
+    /// sharding the batch across hosts) override this instead.
+    fn measure_many(
+        &self,
+        space: &ConfigSpace,
+        points: &[PointConfig],
+        workers: usize,
+    ) -> Vec<MeasureResult> {
+        parallel_map(points, workers, |_, p| self.measure(space, p))
+    }
 }
 
 /// Which built-in backend to use (config / CLI selectable).
@@ -58,6 +72,60 @@ impl BackendKind {
     }
 }
 
+/// Full backend selection: a built-in local backend, or a fleet of remote
+/// `arco serve-measure` shards (`remote:host:port[,host:port...]`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BackendSpec {
+    /// An in-process backend.
+    Builtin(BackendKind),
+    /// Shard addresses of a remote measurement fleet.
+    Remote(Vec<String>),
+}
+
+impl BackendSpec {
+    /// Parse a CLI/config backend string: a [`BackendKind`] name, or
+    /// `remote:` followed by comma-separated `host:port` shard addresses.
+    pub fn parse(s: &str) -> Option<BackendSpec> {
+        if let Some(rest) = s.strip_prefix("remote:") {
+            let addrs: Vec<String> = rest
+                .split(',')
+                .map(|a| a.trim().to_string())
+                .filter(|a| !a.is_empty())
+                .collect();
+            if addrs.is_empty() || addrs.iter().any(|a| !a.contains(':')) {
+                return None;
+            }
+            return Some(BackendSpec::Remote(addrs));
+        }
+        BackendKind::from_name(s).map(BackendSpec::Builtin)
+    }
+
+    /// Human-readable selection (CLI diagnostics).
+    pub fn describe(&self) -> String {
+        match self {
+            BackendSpec::Builtin(k) => k.name().to_string(),
+            BackendSpec::Remote(addrs) => format!("remote:{}", addrs.join(",")),
+        }
+    }
+
+    /// Build the backend. Remote fleets handshake with every shard here,
+    /// so a bad address, protocol skew or fingerprint mismatch fails fast.
+    pub fn build(&self) -> anyhow::Result<Box<dyn MeasureBackend>> {
+        match self {
+            BackendSpec::Builtin(k) => Ok(k.build()),
+            BackendSpec::Remote(addrs) => {
+                Ok(Box::new(super::remote::RemoteBackend::connect(addrs)?))
+            }
+        }
+    }
+}
+
+impl From<BackendKind> for BackendSpec {
+    fn from(kind: BackendKind) -> BackendSpec {
+        BackendSpec::Builtin(kind)
+    }
+}
+
 /// The cycle-accurate oracle: wraps [`crate::codegen::measure_point`]
 /// (decode the point, lower the convolution, simulate the instruction
 /// stream on the VTA++ pipeline model).
@@ -73,6 +141,13 @@ impl MeasureBackend for VtaSimBackend {
         measure_point(space, point)
     }
 }
+
+/// Version of the analytical roofline formulas. Bump on any change that
+/// can alter [`AnalyticalBackend`] numbers (e.g. recalibrating the overlap
+/// coefficients): it is part of the measurement [`super::proto::Fingerprint`],
+/// so stale analytical journals and skewed analytical shards are refused
+/// the same way cycle-model drift is.
+pub const ANALYTICAL_MODEL_VERSION: u32 = 1;
 
 /// A roofline-style analytical proxy: a few hundred nanoseconds per point
 /// instead of a full instruction-stream simulation.
@@ -167,6 +242,38 @@ mod tests {
             assert_eq!(k.build().name(), k.name());
         }
         assert_eq!(BackendKind::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn spec_parses_builtin_and_remote() {
+        assert_eq!(
+            BackendSpec::parse("vta-sim"),
+            Some(BackendSpec::Builtin(BackendKind::VtaSim))
+        );
+        assert_eq!(
+            BackendSpec::parse("remote:127.0.0.1:4917"),
+            Some(BackendSpec::Remote(vec!["127.0.0.1:4917".into()]))
+        );
+        let multi = BackendSpec::parse("remote:a:1, b:2").unwrap();
+        assert_eq!(multi, BackendSpec::Remote(vec!["a:1".into(), "b:2".into()]));
+        assert_eq!(multi.describe(), "remote:a:1,b:2");
+        assert_eq!(BackendSpec::parse("remote:"), None);
+        assert_eq!(BackendSpec::parse("remote:no-port"), None);
+        assert_eq!(BackendSpec::parse("bogus"), None);
+    }
+
+    #[test]
+    fn measure_many_default_matches_pointwise() {
+        let s = space();
+        let b = VtaSimBackend;
+        let mut rng = Pcg32::seeded(7);
+        let points: Vec<_> = (0..12).map(|_| s.random_point(&mut rng)).collect();
+        for workers in [1, 4] {
+            let batch = b.measure_many(&s, &points, workers);
+            for (p, r) in points.iter().zip(&batch) {
+                assert_eq!(*r, b.measure(&s, p));
+            }
+        }
     }
 
     #[test]

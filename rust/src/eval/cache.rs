@@ -1,4 +1,5 @@
-//! Concurrent, point-keyed memoization of measurement results.
+//! Concurrent, point-keyed memoization of measurement results, with an
+//! optional LRU bound for long-lived services.
 
 use crate::codegen::MeasureResult;
 use crate::space::{ConfigSpace, PointConfig};
@@ -12,7 +13,8 @@ use std::sync::Mutex;
 /// same physical (hardware, software) configuration hits the same entry
 /// whether it was planned in the full co-design space or a hardware-frozen
 /// software-only space — which is what lets one `arco compare` run share
-/// measurements across frameworks.
+/// measurements across frameworks, and what makes the key portable across
+/// processes (the journal and the `serve-measure` wire use this identity).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct PointKey {
     pub task: Conv2dTask,
@@ -33,7 +35,7 @@ impl PointKey {
     }
 }
 
-/// Cache counters (monotonic over the cache's lifetime).
+/// Cache counters (monotonic over the cache's lifetime, except `entries`).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
     /// Lookups answered from the cache.
@@ -42,31 +44,159 @@ pub struct CacheStats {
     pub misses: usize,
     /// Entries currently stored.
     pub entries: usize,
+    /// Entries evicted to stay within the capacity bound.
+    pub evictions: usize,
+    /// Configured bound (`None` = unbounded).
+    pub capacity: Option<usize>,
 }
 
-/// A thread-safe point-keyed result cache.
+/// Sentinel index for "no node" in the intrusive LRU list.
+const NIL: usize = usize::MAX;
+
+struct Node {
+    key: PointKey,
+    result: MeasureResult,
+    /// Towards the most-recently-used end.
+    prev: usize,
+    /// Towards the least-recently-used end.
+    next: usize,
+}
+
+/// The state behind the lock: a hash index over an intrusive doubly-linked
+/// recency list stored in a slab (`nodes` + `free`), giving O(1) get /
+/// insert / evict without per-entry allocation churn.
+struct LruInner {
+    map: HashMap<PointKey, usize>,
+    nodes: Vec<Node>,
+    free: Vec<usize>,
+    /// Most recently used, `NIL` when empty.
+    head: usize,
+    /// Least recently used, `NIL` when empty.
+    tail: usize,
+    evictions: usize,
+}
+
+impl LruInner {
+    fn new() -> LruInner {
+        LruInner {
+            map: HashMap::new(),
+            nodes: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            evictions: 0,
+        }
+    }
+
+    fn unlink(&mut self, idx: usize) {
+        let (p, n) = (self.nodes[idx].prev, self.nodes[idx].next);
+        if p == NIL {
+            self.head = n;
+        } else {
+            self.nodes[p].next = n;
+        }
+        if n == NIL {
+            self.tail = p;
+        } else {
+            self.nodes[n].prev = p;
+        }
+    }
+
+    fn push_front(&mut self, idx: usize) {
+        self.nodes[idx].prev = NIL;
+        self.nodes[idx].next = self.head;
+        if self.head != NIL {
+            self.nodes[self.head].prev = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+
+    fn touch(&mut self, idx: usize) {
+        if self.head != idx {
+            self.unlink(idx);
+            self.push_front(idx);
+        }
+    }
+
+    fn get(&mut self, key: &PointKey) -> Option<MeasureResult> {
+        let idx = *self.map.get(key)?;
+        self.touch(idx);
+        Some(self.nodes[idx].result)
+    }
+
+    fn insert(&mut self, key: PointKey, result: MeasureResult, capacity: Option<usize>) {
+        if let Some(&idx) = self.map.get(&key) {
+            self.nodes[idx].result = result;
+            self.touch(idx);
+            return;
+        }
+        if let Some(cap) = capacity {
+            // Evict from the cold end until there is room for the new entry.
+            while self.map.len() >= cap && self.tail != NIL {
+                let victim = self.tail;
+                self.unlink(victim);
+                self.map.remove(&self.nodes[victim].key);
+                self.free.push(victim);
+                self.evictions += 1;
+            }
+        }
+        let idx = match self.free.pop() {
+            Some(slot) => {
+                self.nodes[slot] = Node { key: key.clone(), result, prev: NIL, next: NIL };
+                slot
+            }
+            None => {
+                self.nodes.push(Node { key: key.clone(), result, prev: NIL, next: NIL });
+                self.nodes.len() - 1
+            }
+        };
+        self.push_front(idx);
+        self.map.insert(key, idx);
+    }
+}
+
+/// A thread-safe point-keyed result cache with optional LRU eviction.
 ///
-/// A plain `Mutex<HashMap>` is deliberate: one lookup or insert is tens of
-/// nanoseconds while one simulation is tens of microseconds to milliseconds,
-/// so lock contention is irrelevant and the simplicity pays for itself.
+/// A plain `Mutex` around the whole structure is deliberate: one lookup or
+/// insert is tens of nanoseconds while one simulation is tens of
+/// microseconds to milliseconds, so lock contention is irrelevant and the
+/// simplicity pays for itself. `capacity: None` keeps every entry (the
+/// right default for one tuning run, 10^3–10^5 entries); a bound makes the
+/// cache safe inside a long-lived `serve-measure` fleet shard.
 pub struct MeasureCache {
-    map: Mutex<HashMap<PointKey, MeasureResult>>,
+    inner: Mutex<LruInner>,
+    capacity: Option<usize>,
     hits: AtomicUsize,
     misses: AtomicUsize,
 }
 
 impl MeasureCache {
+    /// Unbounded cache.
     pub fn new() -> MeasureCache {
+        MeasureCache::with_capacity(None)
+    }
+
+    /// Cache bounded to at most `capacity` entries, evicting the least
+    /// recently used. `None` = unbounded; a bound of 0 is clamped to 1.
+    pub fn with_capacity(capacity: Option<usize>) -> MeasureCache {
         MeasureCache {
-            map: Mutex::new(HashMap::new()),
+            inner: Mutex::new(LruInner::new()),
+            capacity: capacity.map(|c| c.max(1)),
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
         }
     }
 
-    /// Look up a key, counting the hit or miss.
+    pub fn capacity(&self) -> Option<usize> {
+        self.capacity
+    }
+
+    /// Look up a key, counting the hit or miss and refreshing recency.
     pub fn get(&self, key: &PointKey) -> Option<MeasureResult> {
-        let found = self.map.lock().unwrap().get(key).copied();
+        let found = self.inner.lock().unwrap().get(key);
         match found {
             Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
             None => self.misses.fetch_add(1, Ordering::Relaxed),
@@ -74,10 +204,21 @@ impl MeasureCache {
         found
     }
 
+    /// Like [`get`](Self::get), but a failed lookup is not counted as a
+    /// miss — for the engine's under-lock re-check of keys whose miss was
+    /// already counted by the first pass.
+    pub fn get_hit_only(&self, key: &PointKey) -> Option<MeasureResult> {
+        let found = self.inner.lock().unwrap().get(key);
+        if found.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        found
+    }
+
     /// Store a result. Only [`get`](Self::get) touches the hit/miss
     /// counters; inserts are not counted.
     pub fn insert(&self, key: PointKey, result: MeasureResult) {
-        self.map.lock().unwrap().insert(key, result);
+        self.inner.lock().unwrap().insert(key, result, self.capacity);
     }
 
     /// Intent-named alias of [`insert`](Self::insert) for seeding entries
@@ -87,7 +228,7 @@ impl MeasureCache {
     }
 
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        self.inner.lock().unwrap().map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -95,10 +236,13 @@ impl MeasureCache {
     }
 
     pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
-            entries: self.len(),
+            entries: inner.map.len(),
+            evictions: inner.evictions,
+            capacity: self.capacity,
         }
     }
 }
@@ -127,6 +271,11 @@ mod tests {
             occupancy: 0.5,
             valid: true,
         }
+    }
+
+    /// Distinct keys for testing: vary the batch dimension of the task.
+    fn key_n(n: usize) -> PointKey {
+        PointKey { task: Conv2dTask::new(n.max(1), 32, 28, 28, 32, 3, 3, 1, 1), values: vec![n] }
     }
 
     #[test]
@@ -165,6 +314,8 @@ mod tests {
         assert_eq!(c.get(&k).unwrap().seconds, 0.5);
         let st = c.stats();
         assert_eq!((st.hits, st.misses, st.entries), (1, 1, 1));
+        assert_eq!(st.evictions, 0);
+        assert_eq!(st.capacity, None);
     }
 
     #[test]
@@ -174,5 +325,80 @@ mod tests {
         c.preload(PointKey::of(&s, &s.default_point()), dummy_result(1.0));
         let st = c.stats();
         assert_eq!((st.hits, st.misses, st.entries), (0, 0, 1));
+    }
+
+    #[test]
+    fn get_hit_only_counts_no_miss() {
+        let c = MeasureCache::new();
+        assert!(c.get_hit_only(&key_n(0)).is_none());
+        c.insert(key_n(0), dummy_result(1.0));
+        assert!(c.get_hit_only(&key_n(0)).is_some());
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses), (1, 0));
+    }
+
+    #[test]
+    fn bounded_cache_never_exceeds_capacity() {
+        let c = MeasureCache::with_capacity(Some(4));
+        for i in 0..32 {
+            c.insert(key_n(i), dummy_result(i as f64));
+            assert!(c.len() <= 4, "cache grew past capacity at insert {i}");
+        }
+        let st = c.stats();
+        assert_eq!(st.entries, 4);
+        assert_eq!(st.evictions, 28);
+        assert_eq!(st.capacity, Some(4));
+        // The newest 4 survive.
+        for i in 28..32 {
+            assert!(c.get(&key_n(i)).is_some(), "entry {i} should have survived");
+        }
+        assert!(c.get(&key_n(0)).is_none());
+    }
+
+    #[test]
+    fn eviction_order_is_least_recently_used() {
+        let c = MeasureCache::with_capacity(Some(3));
+        for i in 0..3 {
+            c.insert(key_n(i), dummy_result(i as f64));
+        }
+        // Touch 0 so it is the most recent; 1 becomes the coldest.
+        assert!(c.get(&key_n(0)).is_some());
+        c.insert(key_n(3), dummy_result(3.0));
+        assert!(c.get(&key_n(1)).is_none(), "1 was coldest and must be evicted");
+        assert!(c.get(&key_n(0)).is_some());
+        assert!(c.get(&key_n(2)).is_some());
+        assert!(c.get(&key_n(3)).is_some());
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn reinsert_updates_without_growth() {
+        let c = MeasureCache::with_capacity(Some(2));
+        c.insert(key_n(0), dummy_result(1.0));
+        c.insert(key_n(0), dummy_result(2.0));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(&key_n(0)).unwrap().seconds, 2.0);
+        assert_eq!(c.stats().evictions, 0);
+    }
+
+    #[test]
+    fn slab_slots_are_reused_after_eviction() {
+        let c = MeasureCache::with_capacity(Some(2));
+        for i in 0..100 {
+            c.insert(key_n(i), dummy_result(i as f64));
+        }
+        // 100 inserts through a capacity-2 cache must not grow the slab
+        // beyond capacity + the one-slot high-water mark.
+        let inner = c.inner.lock().unwrap();
+        assert!(inner.nodes.len() <= 3, "slab leaked: {} nodes", inner.nodes.len());
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let c = MeasureCache::with_capacity(Some(0));
+        c.insert(key_n(0), dummy_result(1.0));
+        c.insert(key_n(1), dummy_result(2.0));
+        assert_eq!(c.len(), 1);
+        assert!(c.get(&key_n(1)).is_some());
     }
 }

@@ -1,26 +1,30 @@
-//! The batched, cached, backend-abstracted measurement engine.
+//! The batched, cached, coalescing, backend-abstracted measurement engine.
 
-use super::backend::{BackendKind, MeasureBackend};
+use super::backend::{BackendKind, BackendSpec, MeasureBackend};
 use super::cache::{CacheStats, MeasureCache, PointKey};
 use super::journal::Journal;
 use crate::codegen::MeasureResult;
 use crate::space::{ConfigSpace, PointConfig};
-use crate::util::pool::parallel_map;
+use crate::util::json::Json;
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Engine construction settings (see [`crate::config::EvalSettings`] for
 /// the file/CLI-facing mirror).
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
-    pub backend: BackendKind,
+    pub backend: BackendSpec,
     /// Worker threads for the measurement fan-out.
     pub workers: usize,
     /// Serve repeated points from a shared in-memory cache.
     pub cache: bool,
+    /// Bound the cache to at most this many entries (LRU eviction).
+    /// `None` keeps everything — right for one run, wrong for a fleet
+    /// shard that lives for weeks.
+    pub cache_capacity: Option<usize>,
     /// Optional persistent journal; existing entries for the selected
     /// backend pre-seed the cache, new measurements are appended.
     pub journal: Option<PathBuf>,
@@ -29,9 +33,10 @@ pub struct EngineConfig {
 impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig {
-            backend: BackendKind::VtaSim,
+            backend: BackendSpec::Builtin(BackendKind::VtaSim),
             workers: crate::util::pool::default_workers(),
             cache: true,
+            cache_capacity: None,
             journal: None,
         }
     }
@@ -46,62 +51,182 @@ pub struct EngineStats {
     pub simulations: usize,
     /// Points answered by intra-batch deduplication.
     pub batch_dedup: usize,
+    /// Points answered by waiting on another batch's in-flight
+    /// measurement instead of re-measuring.
+    pub coalesced: usize,
     /// Cache lookups answered from memory.
     pub cache_hits: usize,
     /// Cache lookups that missed.
     pub cache_misses: usize,
     /// Entries currently cached.
     pub cache_entries: usize,
+    /// Entries evicted to stay within the cache capacity bound.
+    pub cache_evictions: usize,
     /// Cache entries pre-seeded from the journal at construction.
     pub journal_seeded: usize,
+}
+
+impl EngineStats {
+    /// JSON rendering (the `serve-measure` `stats` op).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("batches", Json::num(self.batches as f64)),
+            ("simulations", Json::num(self.simulations as f64)),
+            ("batch_dedup", Json::num(self.batch_dedup as f64)),
+            ("coalesced", Json::num(self.coalesced as f64)),
+            ("cache_hits", Json::num(self.cache_hits as f64)),
+            ("cache_misses", Json::num(self.cache_misses as f64)),
+            ("cache_entries", Json::num(self.cache_entries as f64)),
+            ("cache_evictions", Json::num(self.cache_evictions as f64)),
+            ("journal_seeded", Json::num(self.journal_seeded as f64)),
+        ])
+    }
+}
+
+/// State of one in-flight measurement cell.
+#[derive(Debug, Clone, Copy)]
+enum CellState {
+    /// The owner is still measuring.
+    Pending,
+    /// The owner published its result.
+    Done(MeasureResult),
+    /// The owner unwound (backend panic, fleet lost) before publishing;
+    /// followers must measure for themselves.
+    Abandoned,
+}
+
+/// Rendezvous for one in-flight measurement: the owning batch fills it,
+/// coalesced batches wait on it.
+struct InflightCell {
+    slot: Mutex<CellState>,
+    ready: Condvar,
+}
+
+impl InflightCell {
+    fn new() -> InflightCell {
+        InflightCell { slot: Mutex::new(CellState::Pending), ready: Condvar::new() }
+    }
+
+    fn fill(&self, r: MeasureResult) {
+        *self.slot.lock().unwrap() = CellState::Done(r);
+        self.ready.notify_all();
+    }
+
+    fn abandon(&self) {
+        *self.slot.lock().unwrap() = CellState::Abandoned;
+        self.ready.notify_all();
+    }
+
+    /// Block until the owner publishes; `None` when it abandoned instead.
+    fn wait(&self) -> Option<MeasureResult> {
+        let mut guard = self.slot.lock().unwrap();
+        loop {
+            match *guard {
+                CellState::Done(r) => return Some(r),
+                CellState::Abandoned => return None,
+                CellState::Pending => guard = self.ready.wait(guard).unwrap(),
+            }
+        }
+    }
+}
+
+/// Unwind guard for claimed in-flight keys: if the owning batch panics
+/// between claiming and publishing (a backend panic, a lost remote fleet),
+/// the claims are withdrawn and waiting followers are woken with
+/// [`CellState::Abandoned`] instead of hanging forever.
+struct ClaimGuard<'a> {
+    inflight: &'a Mutex<HashMap<PointKey, Arc<InflightCell>>>,
+    keys: Vec<PointKey>,
+    armed: bool,
+}
+
+impl ClaimGuard<'_> {
+    fn disarm(mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for ClaimGuard<'_> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        if let Ok(mut map) = self.inflight.lock() {
+            for k in &self.keys {
+                if let Some(cell) = map.remove(k) {
+                    cell.abandon();
+                }
+            }
+        }
+    }
 }
 
 /// The shared measurement service: every tuning-path `f[τ(Θ)]` evaluation
 /// goes through [`Engine::measure_batch`].
 ///
 /// The engine is `Sync`; one instance can serve many concurrent tuning
-/// jobs (see `examples/compile_service.rs`) and results are deterministic
-/// for a deterministic backend regardless of `workers`.
+/// jobs (see `examples/compile_service.rs` and `arco serve-measure`) and
+/// results are deterministic for a deterministic backend regardless of
+/// `workers`.
 ///
-/// At-most-once guarantee: sequential batches never re-simulate a cached
-/// point, and repeats *within* a batch are always coalesced. Two batches
-/// racing on different threads can still each pay for the same brand-new
-/// point (there is no in-flight miss coalescing yet — ROADMAP open item);
-/// results remain correct, only the saving degrades.
+/// At-most-once guarantee: repeats *within* a batch are always coalesced;
+/// with the cache enabled, sequential batches never re-simulate a cached
+/// point and concurrent batches racing on the same brand-new point claim
+/// it atomically — exactly one measures, the others wait on the in-flight
+/// cell. With the cache disabled only intra-batch and concurrent-in-flight
+/// repeats are coalesced; sequential batches re-measure.
 pub struct Engine {
     backend: Box<dyn MeasureBackend>,
     workers: usize,
     cache: Option<MeasureCache>,
+    inflight: Mutex<HashMap<PointKey, Arc<InflightCell>>>,
     journal: Option<Mutex<Journal>>,
     journal_seeded: usize,
     batches: AtomicUsize,
     simulations: AtomicUsize,
     batch_dedup: AtomicUsize,
+    coalesced: AtomicUsize,
 }
 
 impl Engine {
-    pub fn new(config: EngineConfig) -> Engine {
-        Engine::from_parts(config.backend.build(), config.workers, config.cache, config.journal)
+    /// Build an engine from a full configuration. Fails fast when the
+    /// journal cannot be opened safely (another writer holds its lock, or
+    /// it was measured under a different simulator fingerprint) or when a
+    /// remote fleet refuses the handshake.
+    pub fn new(config: EngineConfig) -> anyhow::Result<Engine> {
+        let backend = config.backend.build()?;
+        let journal = match &config.journal {
+            Some(path) => Some(Journal::open(path)?),
+            None => None,
+        };
+        Ok(Engine::from_parts(
+            backend,
+            config.workers,
+            config.cache,
+            config.cache_capacity,
+            journal,
+        ))
     }
 
     /// Engine over a caller-provided backend (tests, custom oracles).
     pub fn with_backend(backend: Box<dyn MeasureBackend>, workers: usize, cache: bool) -> Engine {
-        Engine::from_parts(backend, workers, cache, None)
+        Engine::from_parts(backend, workers, cache, None, None)
     }
 
     /// The common case: cycle-accurate simulator backend, cache on, no
     /// journal.
     pub fn vta_sim(workers: usize) -> Engine {
-        Engine::new(EngineConfig { workers, ..Default::default() })
+        Engine::from_parts(BackendKind::VtaSim.build(), workers, true, None, None)
     }
 
     fn from_parts(
         backend: Box<dyn MeasureBackend>,
         workers: usize,
         cache: bool,
-        journal: Option<PathBuf>,
+        cache_capacity: Option<usize>,
+        journal: Option<Journal>,
     ) -> Engine {
-        let cache = cache.then(MeasureCache::new);
+        let cache = cache.then(|| MeasureCache::with_capacity(cache_capacity));
         if cache.is_none() && journal.is_some() {
             crate::log_warn!(
                 "eval",
@@ -111,34 +236,32 @@ impl Engine {
             );
         }
         let mut journal_seeded = 0usize;
-        let journal = journal.map(|path| {
-            let j = Journal::open(&path);
-            if let Some(c) = &cache {
-                for e in j.entries() {
-                    if e.backend == backend.name() {
-                        c.preload(e.key.clone(), e.result);
-                        journal_seeded += 1;
-                    }
+        if let (Some(c), Some(j)) = (&cache, &journal) {
+            for e in j.entries() {
+                if e.backend == backend.name() {
+                    c.preload(e.key.clone(), e.result);
+                    journal_seeded += 1;
                 }
             }
             if journal_seeded > 0 {
                 crate::log_info!(
                     "eval",
                     "journal {}: seeded {journal_seeded} cached measurements",
-                    path.display()
+                    j.path().display()
                 );
             }
-            Mutex::new(j)
-        });
+        }
         Engine {
             backend,
             workers: workers.max(1),
             cache,
-            journal,
+            inflight: Mutex::new(HashMap::new()),
+            journal: journal.map(Mutex::new),
             journal_seeded,
             batches: AtomicUsize::new(0),
             simulations: AtomicUsize::new(0),
             batch_dedup: AtomicUsize::new(0),
+            coalesced: AtomicUsize::new(0),
         }
     }
 
@@ -153,8 +276,10 @@ impl Engine {
     /// Measure a batch of points, returning results in input order.
     ///
     /// Repeats within the batch are measured once; points seen in earlier
-    /// batches (or seeded from the journal) come from the cache; the
-    /// remaining unique misses fan out over the worker pool.
+    /// batches (or seeded from the journal) come from the cache; points
+    /// currently being measured by a concurrent batch are waited on rather
+    /// than re-measured; the remaining unique misses go to the backend
+    /// (local worker fan-out, or a remote fleet).
     pub fn measure_batch(
         &self,
         space: &ConfigSpace,
@@ -170,54 +295,118 @@ impl Engine {
 
         // 1. Serve whatever the cache already knows.
         if let Some(cache) = &self.cache {
-            for i in 0..n {
-                out[i] = cache.get(&keys[i]);
+            for (slot, key) in out.iter_mut().zip(&keys) {
+                *slot = cache.get(key);
             }
         }
 
-        // 2. Deduplicate the misses within this batch.
+        // 2. Classify the misses under the in-flight registry lock:
+        //    first occurrence of a brand-new key claims ownership (we will
+        //    measure it), repeats alias the owner's slot, and keys some
+        //    concurrent batch is already measuring become followers.
+        //    A key absent from the registry may still have been published
+        //    between our step-1 lookup and taking this lock (owners insert
+        //    into the cache *before* clearing their in-flight entry), so a
+        //    cache re-check under the lock closes the double-measure race.
         let mut first_slot: HashMap<&PointKey, usize> = HashMap::new();
-        let mut uniq: Vec<usize> = Vec::new(); // input index of each unique miss
+        let mut uniq: Vec<usize> = Vec::new(); // input index of each owned miss
         let mut alias: Vec<(usize, usize)> = Vec::new(); // (input index, uniq slot)
-        for i in 0..n {
-            if out[i].is_some() {
-                continue;
-            }
-            match first_slot.entry(&keys[i]) {
-                Entry::Occupied(e) => alias.push((i, *e.get())),
-                Entry::Vacant(v) => {
-                    v.insert(uniq.len());
-                    uniq.push(i);
+        let mut follows: Vec<(usize, Arc<InflightCell>)> = Vec::new();
+        {
+            let mut inflight = self.inflight.lock().unwrap();
+            for i in 0..n {
+                if out[i].is_some() {
+                    continue;
+                }
+                match first_slot.entry(&keys[i]) {
+                    Entry::Occupied(e) => alias.push((i, *e.get())),
+                    Entry::Vacant(v) => {
+                        if let Some(cell) = inflight.get(&keys[i]) {
+                            follows.push((i, Arc::clone(cell)));
+                            continue;
+                        }
+                        if let Some(cache) = &self.cache {
+                            // Hit-only: the miss was already counted above.
+                            if let Some(r) = cache.get_hit_only(&keys[i]) {
+                                out[i] = Some(r);
+                                continue;
+                            }
+                        }
+                        v.insert(uniq.len());
+                        inflight.insert(keys[i].clone(), Arc::new(InflightCell::new()));
+                        uniq.push(i);
+                    }
                 }
             }
         }
-        drop(first_slot);
 
-        // 3. Fan the unique misses out over the worker pool.
+        // 3. Measure the owned misses (backend decides local vs remote
+        //    parallelism). The guard withdraws our claims and wakes any
+        //    followers if the backend unwinds before we publish.
+        let guard = ClaimGuard {
+            inflight: &self.inflight,
+            keys: uniq.iter().map(|&i| keys[i].clone()).collect(),
+            armed: true,
+        };
         let miss_points: Vec<PointConfig> = uniq.iter().map(|&i| points[i].clone()).collect();
         let results: Vec<MeasureResult> =
-            parallel_map(&miss_points, self.workers, |_, p| self.backend.measure(space, p));
+            self.backend.measure_many(space, &miss_points, self.workers);
         self.simulations.fetch_add(results.len(), Ordering::Relaxed);
         self.batch_dedup.fetch_add(alias.len(), Ordering::Relaxed);
 
-        // 4. Record and assemble in input order.
+        // 4. Publish: cache and journal first (so late arrivals hit the
+        //    cache), then resolve the in-flight cells for any followers.
         for (slot, &i) in uniq.iter().enumerate() {
             let r = results[slot];
-            if let Some(cache) = &self.cache {
-                cache.insert(keys[i].clone(), r);
+            self.publish_one(&keys[i], r);
+            out[i] = Some(r);
+        }
+        {
+            let mut inflight = self.inflight.lock().unwrap();
+            for (slot, &i) in uniq.iter().enumerate() {
+                if let Some(cell) = inflight.remove(&keys[i]) {
+                    cell.fill(results[slot]);
+                }
             }
-            if let Some(journal) = &self.journal {
-                journal.lock().unwrap().record(self.backend.name(), &keys[i], &r);
-            }
+        }
+        guard.disarm();
+
+        // 5. Collect coalesced results from the batches that own them.
+        //    Fills happen before any batch starts waiting, so two batches
+        //    following each other's points cannot deadlock. An abandoned
+        //    cell (its owner panicked before publishing) is measured here
+        //    instead of hanging.
+        self.coalesced.fetch_add(follows.len(), Ordering::Relaxed);
+        let mut recovered = false;
+        for (i, cell) in follows {
+            let r = cell.wait().unwrap_or_else(|| {
+                recovered = true;
+                self.simulations.fetch_add(1, Ordering::Relaxed);
+                let r = self.backend.measure(space, &points[i]);
+                self.publish_one(&keys[i], r);
+                r
+            });
             out[i] = Some(r);
         }
         for (i, slot) in alias {
             out[i] = Some(results[slot]);
         }
-        if !uniq.is_empty() {
+        if !uniq.is_empty() || recovered {
             self.flush_journal();
         }
         out.into_iter().map(|r| r.expect("every point measured")).collect()
+    }
+
+    /// Make one fresh measurement visible to every future lookup: the
+    /// shared cache and the journal (both optional). The single publish
+    /// seam for the owned-miss and abandoned-cell recovery paths.
+    fn publish_one(&self, key: &PointKey, r: MeasureResult) {
+        if let Some(cache) = &self.cache {
+            cache.insert(key.clone(), r);
+        }
+        if let Some(journal) = &self.journal {
+            journal.lock().unwrap().record(self.backend.name(), key, &r);
+        }
     }
 
     /// Measure a single point (one-off probes; batches are cheaper).
@@ -257,9 +446,11 @@ impl Engine {
             batches: self.batches.load(Ordering::Relaxed),
             simulations: self.simulations.load(Ordering::Relaxed),
             batch_dedup: self.batch_dedup.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
             cache_hits: cs.hits,
             cache_misses: cs.misses,
             cache_entries: cs.entries,
+            cache_evictions: cs.evictions,
             journal_seeded: self.journal_seeded,
         }
     }
@@ -268,13 +459,16 @@ impl Engine {
     pub fn summary(&self) -> String {
         let s = self.stats();
         format!(
-            "backend={} workers={} batches={} simulations={} cache_hits={} batch_dedup={} journal_seeded={}",
+            "backend={} workers={} batches={} simulations={} cache_hits={} batch_dedup={} \
+             coalesced={} evictions={} journal_seeded={}",
             self.backend_name(),
             self.workers,
             s.batches,
             s.simulations,
             s.cache_hits,
             s.batch_dedup,
+            s.coalesced,
+            s.cache_evictions,
             s.journal_seeded
         )
     }
@@ -302,6 +496,7 @@ mod tests {
         let st = e.stats();
         assert_eq!(st.simulations, 1);
         assert_eq!(st.batch_dedup, 2);
+        assert_eq!(st.coalesced, 0);
     }
 
     #[test]
@@ -358,5 +553,44 @@ mod tests {
         let e = Engine::vta_sim(2);
         assert!(e.measure_batch(&s, &[]).is_empty());
         assert_eq!(e.stats().batches, 0);
+    }
+
+    #[test]
+    fn no_inflight_entries_leak_after_batches() {
+        let s = space();
+        let e = Engine::vta_sim(2);
+        let mut rng = Pcg32::seeded(13);
+        for _ in 0..3 {
+            let batch: Vec<_> = (0..8).map(|_| s.random_point(&mut rng)).collect();
+            e.measure_batch(&s, &batch);
+        }
+        assert!(e.inflight.lock().unwrap().is_empty(), "in-flight registry must drain");
+    }
+
+    #[test]
+    fn bounded_cache_config_caps_entries_and_counts_evictions() {
+        let s = space();
+        let e = Engine::new(EngineConfig {
+            backend: BackendKind::Analytical.into(),
+            workers: 2,
+            cache: true,
+            cache_capacity: Some(8),
+            journal: None,
+        })
+        .unwrap();
+        let mut rng = Pcg32::seeded(21);
+        let mut seen = std::collections::HashSet::new();
+        let mut batch = Vec::new();
+        while seen.len() < 24 {
+            let p = s.random_point(&mut rng);
+            if seen.insert(PointKey::of(&s, &p)) {
+                batch.push(p);
+            }
+        }
+        e.measure_batch(&s, &batch);
+        let st = e.stats();
+        assert!(st.cache_entries <= 8, "cache held {} entries", st.cache_entries);
+        assert_eq!(st.cache_evictions, 24 - 8);
+        assert_eq!(st.simulations, 24);
     }
 }

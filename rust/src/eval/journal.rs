@@ -1,49 +1,48 @@
-//! Persistent measurement journal: JSON on disk, reused across processes.
+//! Persistent measurement journal: fingerprinted, append-only JSON lines.
 //!
-//! Format (version 1):
+//! Format (version 2) — one JSON document per line. The first line is a
+//! header stamping the simulator [`Fingerprint`] (cycle-model version +
+//! non-tunable `VtaConfig` defaults); every following line is one
+//! measurement record in the shared schema of [`super::proto`]:
 //!
-//! ```json
-//! {
-//!   "version": 1,
-//!   "entries": [
-//!     {
-//!       "backend": "vta-sim",
-//!       "task": {"n":1,"ci":64,"h":56,"w":56,"co":64,"kh":3,"kw":3,"stride":1,"pad":1},
-//!       "values": [1, 16, 16, 1, 1, 8, 8],
-//!       "valid": true,
-//!       "seconds": 0.00123,
-//!       "cycles": 123456,
-//!       "gflops": 41.2,
-//!       "area_mm2": 2.31,
-//!       "occupancy": 0.92
-//!     }
-//!   ]
-//! }
+//! ```text
+//! {"format":"arco-journal","version":2,"fingerprint":{"cycle_model":1,...}}
+//! {"backend":"vta-sim","task":{"n":1,...},"values":[1,16,16,1,1,8,8],"valid":true,"seconds":0.00123,...}
+//! {"backend":"analytical","task":{...},"values":[...],...}
 //! ```
 //!
 //! `values` are decoded knob values in space knob order (the same identity
-//! as [`PointKey`]); invalid configurations carry `"seconds": null` and are
-//! restored with infinite runtime. Entries from a different backend than
-//! the engine's are kept on disk but not preloaded into its cache, so one
-//! journal file can serve both the simulator and the analytical proxy.
+//! as [`PointKey`] and the `serve-measure` wire); invalid configurations
+//! carry `"seconds": null` and are restored with infinite runtime. Entries
+//! from a different backend than the engine's are kept on disk but not
+//! preloaded into its cache, so one journal file can serve both the
+//! simulator and the analytical proxy.
 //!
-//! Durability model: one writing engine per journal file. A `(backend,
-//! key)` pair is recorded at most once, flushes rewrite the file atomically
-//! (temp file + rename), and a torn or corrupt file degrades to an empty
-//! journal rather than aborting. Concurrent *writer* processes are not
-//! coordinated — the last flusher wins (see ROADMAP open items).
+//! Safety model:
 //!
-//! Staleness caveat: entries are keyed on `(backend, task, knob values)`
-//! only — they carry no fingerprint of the simulator itself. If the cycle
-//! model or the non-tunable `VtaConfig` defaults change, delete the
-//! journal file; reusing it would silently mix old-model and new-model
-//! numbers. This is why no shipped config enables a journal by default.
+//! - **Fingerprint.** Opening a journal whose header fingerprint differs
+//!   from this binary's refuses with an error: reusing it would silently
+//!   mix numbers from different cycle models. Delete (or archive) the file
+//!   after a simulator change and let runs re-measure.
+//! - **Single writer.** A writer takes a `<path>.lock` sentinel on open
+//!   (freed on drop); a second writing process fails fast with a clear
+//!   error instead of silently last-wins on flush. Read-only opens
+//!   ([`Journal::open_read_only`]) take no lock.
+//! - **Append-only flush.** A flush appends only the records since the
+//!   previous flush, so flush cost is O(new entries), not O(file). A torn
+//!   final line (crash mid-append) is dropped on the next load and the
+//!   file is compacted on the next flush.
+//! - **v1 migration.** Version-1 whole-file JSON journals (`{"version":1,
+//!   "entries":[...]}`) carry no fingerprint, so their numbers cannot be
+//!   trusted across binaries: opening one refuses with a migration error.
+//!   Delete or archive the old file; re-runs repopulate it in v2 form.
 
 use super::cache::PointKey;
+use super::proto::{record_from_json, record_to_json, Fingerprint};
 use crate::codegen::MeasureResult;
-use crate::util::json::{read_json_file, write_json_file, Json};
-use crate::workload::Conv2dTask;
+use crate::util::json::Json;
 use std::collections::HashSet;
+use std::io::Write;
 use std::path::{Path, PathBuf};
 
 /// One persisted measurement.
@@ -54,43 +53,264 @@ pub struct JournalEntry {
     pub result: MeasureResult,
 }
 
+/// `path` with `suffix` appended to the file name (keeps any extension).
+fn sibling(path: &Path, suffix: &str) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(suffix);
+    PathBuf::from(os)
+}
+
+/// Can we *prove* the lock-holding pid is gone? Only where a process table
+/// is inspectable (Linux `/proc`); anywhere else — or for an unparsable
+/// sentinel — assume it is alive and fail fast.
+fn holder_is_dead(holder: &str) -> bool {
+    if holder.is_empty() || holder.parse::<u32>().is_err() {
+        return false;
+    }
+    let proc_root = Path::new("/proc");
+    proc_root.is_dir() && !proc_root.join(holder).exists()
+}
+
 /// An append-only measurement log bound to one file.
 pub struct Journal {
     path: PathBuf,
+    fingerprint: Fingerprint,
     entries: Vec<JournalEntry>,
     /// `(backend, key)` identities already present, so repeated `record`
     /// calls (e.g. cache-less engines re-measuring) never grow the file.
     seen: HashSet<(String, PointKey)>,
-    dirty: bool,
+    /// How many of `entries` are already on disk.
+    flushed: usize,
+    /// The on-disk bytes are not a clean v2 prefix (garbage, torn tail):
+    /// the next flush rewrites the whole file instead of appending.
+    rewrite: bool,
+    /// Writer mode: holds the lock sentinel, may flush.
+    writer: bool,
 }
 
 impl Journal {
-    pub const VERSION: usize = 1;
+    pub const VERSION: usize = 2;
 
-    /// Open (or create-on-first-flush) the journal at `path`. A missing
-    /// file is an empty journal; an unreadable one is logged and treated
-    /// as empty rather than aborting the run.
-    pub fn open(path: &Path) -> Journal {
-        let mut entries = Vec::new();
-        if path.exists() {
-            match read_json_file(path) {
-                Ok(doc) => entries = parse_entries(&doc),
-                Err(e) => {
-                    crate::log_warn!("eval", "ignoring unreadable journal {}: {e}", path.display());
+    /// Open the journal at `path` for writing: takes the `<path>.lock`
+    /// sentinel (failing fast if another writer holds it), verifies the
+    /// header fingerprint against this binary, and loads existing entries.
+    /// A missing file is an empty journal; a file that is not a journal at
+    /// all is logged and treated as empty (it is replaced on first flush).
+    ///
+    /// Error policy: *data-safety* problems are fatal (another live
+    /// writer, a foreign fingerprint, a v1 file) — silently proceeding
+    /// would lose or mix measurements. Plain *filesystem* trouble (a
+    /// read-only results dir) degrades to a read-only journal with a
+    /// warning: existing entries still seed the cache, new ones are
+    /// simply not persisted, and the run continues.
+    pub fn open(path: &Path) -> anyhow::Result<Journal> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                if let Err(e) = std::fs::create_dir_all(parent) {
+                    crate::log_warn!(
+                        "eval",
+                        "cannot create journal dir {} ({e}); journal opens read-only, \
+                         measurements will not be persisted",
+                        parent.display()
+                    );
+                    return Journal::load(path, false);
                 }
             }
         }
-        let seen = entries
-            .iter()
-            .map(|e: &JournalEntry| (e.backend.clone(), e.key.clone()))
-            .collect();
-        Journal { path: path.to_path_buf(), entries, seen, dirty: false }
+        let lock = sibling(path, ".lock");
+        let mut attempts = 0;
+        loop {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&lock) {
+                Ok(mut f) => {
+                    let _ = writeln!(f, "{}", std::process::id());
+                    break;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let holder = std::fs::read_to_string(&lock)
+                        .map(|s| s.trim().to_string())
+                        .unwrap_or_default();
+                    // A killed process (SIGTERM skips Drop) leaves its
+                    // sentinel behind; reclaim it when the recorded pid is
+                    // verifiably dead (Linux /proc). Otherwise fail fast.
+                    // The reclaim must not race another reclaimer into two
+                    // writers: the sentinel is renamed aside (atomic; one
+                    // winner) and its content re-checked — if the rename
+                    // grabbed a *fresh* lock instead (a racer already
+                    // reclaimed and re-locked), it is put back and the
+                    // retry collides with that live lock and fails fast.
+                    if attempts == 0 && holder_is_dead(&holder) {
+                        attempts += 1;
+                        let aside =
+                            sibling(path, &format!(".lock.stale.{}", std::process::id()));
+                        if std::fs::rename(&lock, &aside).is_ok() {
+                            let renamed = std::fs::read_to_string(&aside)
+                                .map(|s| s.trim().to_string())
+                                .unwrap_or_default();
+                            if renamed == holder {
+                                crate::log_warn!(
+                                    "eval",
+                                    "journal {}: reclaimed stale lock from dead pid {holder}",
+                                    path.display()
+                                );
+                                let _ = std::fs::remove_file(&aside);
+                            } else {
+                                let _ = std::fs::rename(&aside, &lock);
+                            }
+                        }
+                        continue;
+                    }
+                    anyhow::bail!(
+                        "journal {} is locked by another writer (pid {}): one writing engine \
+                         per journal; if that process is dead, delete {}",
+                        path.display(),
+                        if holder.is_empty() { "unknown".to_string() } else { holder },
+                        lock.display()
+                    );
+                }
+                Err(e) => {
+                    crate::log_warn!(
+                        "eval",
+                        "cannot lock journal {} ({e}); journal opens read-only, \
+                         measurements will not be persisted",
+                        path.display()
+                    );
+                    return Journal::load(path, false);
+                }
+            }
+        }
+        match Journal::load(path, true) {
+            Ok(j) => Ok(j),
+            Err(e) => {
+                // Do not leave the sentinel behind on a refused open.
+                let _ = std::fs::remove_file(&lock);
+                Err(e)
+            }
+        }
+    }
+
+    /// Open without taking the writer lock. The journal can be inspected
+    /// but [`flush`](Self::flush) is a no-op.
+    pub fn open_read_only(path: &Path) -> anyhow::Result<Journal> {
+        Journal::load(path, false)
+    }
+
+    fn load(path: &Path, writer: bool) -> anyhow::Result<Journal> {
+        let mut journal = Journal {
+            path: path.to_path_buf(),
+            fingerprint: Fingerprint::current(),
+            entries: Vec::new(),
+            seen: HashSet::new(),
+            flushed: 0,
+            rewrite: false,
+            writer,
+        };
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(journal),
+            Err(e) => {
+                crate::log_warn!("eval", "ignoring unreadable journal {}: {e}", path.display());
+                journal.rewrite = true;
+                return Ok(journal);
+            }
+        };
+        if text.trim().is_empty() {
+            journal.rewrite = true;
+            return Ok(journal);
+        }
+        let mut lines = text.lines();
+        let first = lines.next().unwrap_or("");
+        let header = match Json::parse(first) {
+            Ok(h) if h.get_str("format") == Some("arco-journal") => h,
+            _ => {
+                // Not a v2 header. A v1 journal is a single pretty-printed
+                // JSON document; anything else is garbage.
+                if let Ok(doc) = Json::parse(&text) {
+                    if doc.get("entries").is_some() || doc.get_usize("version").is_some() {
+                        anyhow::bail!(
+                            "journal {} is in the v1 whole-file JSON format, which carries no \
+                             simulator fingerprint; its numbers cannot be safely reused. Delete \
+                             or archive the file and re-run to repopulate it in v2 form",
+                            path.display()
+                        );
+                    }
+                }
+                crate::log_warn!(
+                    "eval",
+                    "file {} is not a measurement journal; treating as empty",
+                    path.display()
+                );
+                journal.rewrite = true;
+                return Ok(journal);
+            }
+        };
+        let version = header.get_usize("version").unwrap_or(0);
+        if version != Self::VERSION {
+            anyhow::bail!(
+                "journal {}: unsupported version {version} (this binary writes v{})",
+                path.display(),
+                Self::VERSION
+            );
+        }
+        let stamped = header
+            .get("fingerprint")
+            .and_then(Fingerprint::from_json)
+            .ok_or_else(|| {
+                anyhow::anyhow!("journal {}: header carries no fingerprint", path.display())
+            })?;
+        let current = Fingerprint::current();
+        if stamped != current {
+            anyhow::bail!(
+                "journal {} was measured under a different simulator — refusing to mix numbers.\n  \
+                 journal: {}\n  binary:  {}\nDelete or archive the file and re-run to re-measure",
+                path.display(),
+                stamped.describe(),
+                current.describe()
+            );
+        }
+        let mut skipped = 0usize;
+        for line in lines {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let parsed = Json::parse(line).ok().as_ref().and_then(record_from_json);
+            match parsed {
+                Some((backend, key, result)) => {
+                    if journal.seen.insert((backend.clone(), key.clone())) {
+                        journal.entries.push(JournalEntry { backend, key, result });
+                    }
+                }
+                None => skipped += 1,
+            }
+        }
+        if skipped > 0 {
+            crate::log_warn!(
+                "eval",
+                "journal {}: dropped {skipped} malformed lines (torn flush?); \
+                 file will be compacted on next flush",
+                path.display()
+            );
+            journal.rewrite = true;
+        }
+        if !text.ends_with('\n') {
+            // A torn final line without its newline would corrupt the next
+            // appended record; rewrite instead.
+            journal.rewrite = true;
+        }
+        journal.flushed = journal.entries.len();
+        Ok(journal)
     }
 
     pub fn path(&self) -> &Path {
         &self.path
     }
 
+    /// The simulator fingerprint this journal is stamped with.
+    pub fn fingerprint(&self) -> &Fingerprint {
+        &self.fingerprint
+    }
+
+    /// Records currently held in memory: everything on a fresh open, only
+    /// the unflushed tail after a flush (see [`entries`](Self::entries)).
     pub fn len(&self) -> usize {
         self.entries.len()
     }
@@ -99,13 +319,23 @@ impl Journal {
         self.entries.is_empty()
     }
 
+    /// The in-memory records. A freshly opened journal holds everything
+    /// loaded from disk (this is when the engine seeds its cache); after a
+    /// flush the persisted prefix is dropped so a long-lived shard's
+    /// journal memory stays bounded by its unflushed tail — re-open the
+    /// file to read the full history.
     pub fn entries(&self) -> &[JournalEntry] {
         &self.entries
     }
 
     /// Append one measurement (persisted at the next [`flush`](Self::flush)).
-    /// A `(backend, key)` pair already journaled is ignored.
+    /// A `(backend, key)` pair already journaled is ignored, as is every
+    /// record on a read-only journal — nothing would ever flush it, and a
+    /// long-lived degraded shard must not accumulate records forever.
     pub fn record(&mut self, backend: &str, key: &PointKey, result: &MeasureResult) {
+        if !self.writer {
+            return;
+        }
         if !self.seen.insert((backend.to_string(), key.clone())) {
             return;
         }
@@ -114,84 +344,66 @@ impl Journal {
             key: key.clone(),
             result: *result,
         });
-        self.dirty = true;
     }
 
-    /// Write the journal out if anything was recorded since the last flush.
-    /// The rewrite is atomic (temp file + rename), so an interrupted flush
-    /// leaves the previous journal intact instead of a torn file.
-    pub fn flush(&mut self) -> anyhow::Result<()> {
-        if !self.dirty {
-            return Ok(());
-        }
-        let tmp = self.path.with_extension("json.tmp");
-        write_json_file(&tmp, &self.to_json())?;
-        std::fs::rename(&tmp, &self.path)?;
-        self.dirty = false;
-        Ok(())
-    }
-
-    pub fn to_json(&self) -> Json {
+    fn header_json(&self) -> Json {
         Json::obj(vec![
+            ("format", Json::str("arco-journal")),
             ("version", Json::num(Self::VERSION as f64)),
-            ("entries", Json::Arr(self.entries.iter().map(entry_to_json).collect())),
+            ("fingerprint", self.fingerprint.to_json()),
         ])
     }
+
+    fn entry_line(e: &JournalEntry) -> String {
+        let mut line = record_to_json(&e.backend, &e.key, &e.result).dump();
+        line.push('\n');
+        line
+    }
+
+    /// Persist any records added since the last flush. Appends only the new
+    /// lines (O(new entries)); the whole file is rewritten atomically (temp
+    /// file + rename) only on first creation or after torn/garbage content.
+    /// No-op for read-only journals and when nothing is pending.
+    ///
+    /// After a successful flush the persisted records are dropped from
+    /// memory (the `seen` identity set is kept for dedup), so a shard that
+    /// journals for weeks holds only its unflushed tail, not the whole
+    /// history.
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        if !self.writer || self.flushed == self.entries.len() {
+            return Ok(());
+        }
+        if self.rewrite || !self.path.exists() {
+            let mut text = self.header_json().dump();
+            text.push('\n');
+            for e in &self.entries {
+                text.push_str(&Self::entry_line(e));
+            }
+            let tmp = sibling(&self.path, ".tmp");
+            std::fs::write(&tmp, text)?;
+            std::fs::rename(&tmp, &self.path)?;
+            self.rewrite = false;
+        } else {
+            let mut file = std::fs::OpenOptions::new().append(true).open(&self.path)?;
+            let mut text = String::new();
+            for e in &self.entries[self.flushed..] {
+                text.push_str(&Self::entry_line(e));
+            }
+            file.write_all(text.as_bytes())?;
+            file.flush()?;
+        }
+        self.entries.clear();
+        self.flushed = 0;
+        Ok(())
+    }
 }
 
-fn entry_to_json(e: &JournalEntry) -> Json {
-    let r = &e.result;
-    Json::obj(vec![
-        ("backend", Json::str(e.backend.clone())),
-        ("task", e.key.task.to_json()),
-        (
-            "values",
-            Json::Arr(e.key.values.iter().map(|&v| Json::num(v as f64)).collect()),
-        ),
-        ("valid", Json::Bool(r.valid)),
-        // Infinite runtimes (invalid configs) serialize as null.
-        ("seconds", Json::num(r.seconds)),
-        ("cycles", Json::num(r.cycles as f64)),
-        ("gflops", Json::num(r.gflops)),
-        ("area_mm2", Json::num(r.area_mm2)),
-        ("occupancy", Json::num(r.occupancy)),
-    ])
-}
-
-fn entry_from_json(v: &Json) -> Option<JournalEntry> {
-    let backend = v.get_str("backend")?.to_string();
-    let task = Conv2dTask::from_json(v.get("task")?)?;
-    let values: Vec<usize> =
-        v.get("values")?.as_arr()?.iter().map(|x| x.as_usize()).collect::<Option<_>>()?;
-    let valid = v.get_bool("valid")?;
-    let seconds = if valid { v.get_f64("seconds")? } else { f64::INFINITY };
-    let result = MeasureResult {
-        seconds,
-        cycles: v.get_f64("cycles").unwrap_or(0.0) as u64,
-        gflops: v.get_f64("gflops").unwrap_or(0.0),
-        area_mm2: v.get_f64("area_mm2").unwrap_or(0.0),
-        occupancy: v.get_f64("occupancy").unwrap_or(0.0),
-        valid,
-    };
-    Some(JournalEntry { backend, key: PointKey { task, values }, result })
-}
-
-fn parse_entries(doc: &Json) -> Vec<JournalEntry> {
-    let mut out = Vec::new();
-    let Some(items) = doc.get("entries").and_then(Json::as_arr) else {
-        return out;
-    };
-    let mut skipped = 0usize;
-    for item in items {
-        match entry_from_json(item) {
-            Some(e) => out.push(e),
-            None => skipped += 1,
+impl Drop for Journal {
+    fn drop(&mut self) {
+        if self.writer {
+            let _ = std::fs::remove_file(sibling(&self.path, ".lock"));
         }
     }
-    if skipped > 0 {
-        crate::log_warn!("eval", "journal: skipped {skipped} malformed entries");
-    }
-    out
 }
 
 #[cfg(test)]
@@ -200,6 +412,7 @@ mod tests {
     use crate::codegen::measure_point;
     use crate::space::ConfigSpace;
     use crate::util::rng::Pcg32;
+    use crate::workload::Conv2dTask;
 
     fn space() -> ConfigSpace {
         ConfigSpace::for_task(&Conv2dTask::new(1, 32, 28, 28, 32, 3, 3, 1, 1), true)
@@ -207,17 +420,22 @@ mod tests {
 
     fn tmp_path(tag: &str) -> PathBuf {
         // Keep test artifacts inside the build tree.
-        PathBuf::from("target/tmp").join(format!("journal_{tag}_{}.json", std::process::id()))
+        PathBuf::from("target/tmp").join(format!("journal_{tag}_{}.jsonl", std::process::id()))
+    }
+
+    fn cleanup(path: &Path) {
+        let _ = std::fs::remove_file(path);
+        let _ = std::fs::remove_file(sibling(path, ".lock"));
     }
 
     #[test]
-    fn roundtrips_through_util_json() {
+    fn roundtrips_through_jsonl() {
         let s = space();
         let mut rng = Pcg32::seeded(2);
         let path = tmp_path("roundtrip");
-        let _ = std::fs::remove_file(&path);
+        cleanup(&path);
 
-        let mut j = Journal::open(&path);
+        let mut j = Journal::open(&path).unwrap();
         assert!(j.is_empty());
         let mut keys: Vec<(PointKey, crate::codegen::MeasureResult)> = Vec::new();
         for _ in 0..8 {
@@ -230,8 +448,9 @@ mod tests {
             }
         }
         j.flush().unwrap();
+        drop(j);
 
-        let j2 = Journal::open(&path);
+        let j2 = Journal::open_read_only(&path).unwrap();
         assert_eq!(j2.len(), keys.len());
         for (e, (key, m)) in j2.entries().iter().zip(&keys) {
             assert_eq!(e.backend, "vta-sim");
@@ -243,14 +462,14 @@ mod tests {
                 assert!(e.result.seconds.is_infinite());
             }
         }
-        let _ = std::fs::remove_file(&path);
+        cleanup(&path);
     }
 
     #[test]
     fn flush_is_idempotent_and_lazy() {
         let path = tmp_path("lazy");
-        let _ = std::fs::remove_file(&path);
-        let mut j = Journal::open(&path);
+        cleanup(&path);
+        let mut j = Journal::open(&path).unwrap();
         // Nothing recorded: flush must not create the file.
         j.flush().unwrap();
         assert!(!path.exists());
@@ -259,45 +478,175 @@ mod tests {
         j.record("vta-sim", &PointKey::of(&s, &p), &measure_point(&s, &p));
         j.flush().unwrap();
         assert!(path.exists());
-        let _ = std::fs::remove_file(&path);
+        cleanup(&path);
+    }
+
+    #[test]
+    fn flush_appends_instead_of_rewriting() {
+        let s = space();
+        let path = tmp_path("append");
+        cleanup(&path);
+        let mut rng = Pcg32::seeded(12);
+
+        let mut j = Journal::open(&path).unwrap();
+        let p1 = s.random_point(&mut rng);
+        j.record("vta-sim", &PointKey::of(&s, &p1), &measure_point(&s, &p1));
+        j.flush().unwrap();
+        let after_first = std::fs::read_to_string(&path).unwrap();
+
+        let mut p2 = s.random_point(&mut rng);
+        while PointKey::of(&s, &p2) == PointKey::of(&s, &p1) {
+            p2 = s.random_point(&mut rng);
+        }
+        j.record("vta-sim", &PointKey::of(&s, &p2), &measure_point(&s, &p2));
+        j.flush().unwrap();
+        let after_second = std::fs::read_to_string(&path).unwrap();
+
+        // The second flush appended: the first flush's bytes are a prefix.
+        assert!(after_second.starts_with(&after_first));
+        assert_eq!(after_second.lines().count(), 3); // header + 2 records
+        drop(j);
+        assert_eq!(Journal::open_read_only(&path).unwrap().len(), 2);
+        cleanup(&path);
     }
 
     #[test]
     fn duplicate_records_are_ignored_across_sessions() {
         let s = space();
         let path = tmp_path("dedup");
-        let _ = std::fs::remove_file(&path);
+        cleanup(&path);
         let p = s.default_point();
         let key = PointKey::of(&s, &p);
         let m = measure_point(&s, &p);
 
-        let mut j = Journal::open(&path);
+        let mut j = Journal::open(&path).unwrap();
         j.record("vta-sim", &key, &m);
         j.record("vta-sim", &key, &m); // same session duplicate
         j.record("analytical", &key, &m); // different backend: distinct
         assert_eq!(j.len(), 2);
         j.flush().unwrap();
+        drop(j);
 
         // A second session re-recording the same identity must not grow
-        // the file or mark it dirty.
-        let mut j2 = Journal::open(&path);
+        // the file.
+        let mut j2 = Journal::open(&path).unwrap();
         assert_eq!(j2.len(), 2);
         j2.record("vta-sim", &key, &m);
         assert_eq!(j2.len(), 2);
         j2.flush().unwrap();
-        assert_eq!(Journal::open(&path).len(), 2);
-        let _ = std::fs::remove_file(&path);
+        drop(j2);
+        assert_eq!(Journal::open_read_only(&path).unwrap().len(), 2);
+        cleanup(&path);
     }
 
     #[test]
     fn unreadable_journal_degrades_to_empty() {
         let path = tmp_path("garbage");
+        cleanup(&path);
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent).unwrap();
         }
         std::fs::write(&path, "not json {").unwrap();
-        let j = Journal::open(&path);
+        let j = Journal::open(&path).unwrap();
         assert!(j.is_empty());
-        let _ = std::fs::remove_file(&path);
+        cleanup(&path);
+    }
+
+    #[test]
+    fn second_writer_fails_fast() {
+        let path = tmp_path("lock");
+        cleanup(&path);
+        let first = Journal::open(&path).unwrap();
+        let err = Journal::open(&path).unwrap_err().to_string();
+        assert!(err.contains("locked"), "unexpected error: {err}");
+        // Read-only opens are not writers and need no lock.
+        assert!(Journal::open_read_only(&path).is_ok());
+        drop(first);
+        // Lock released on drop: a new writer may open.
+        let again = Journal::open(&path).unwrap();
+        drop(again);
+        cleanup(&path);
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn stale_lock_from_dead_pid_is_reclaimed() {
+        let path = tmp_path("stale_lock");
+        cleanup(&path);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).unwrap();
+        }
+        // A pid far above any default pid_max: verifiably not running.
+        std::fs::write(sibling(&path, ".lock"), "4294967294\n").unwrap();
+        let j = Journal::open(&path).unwrap();
+        drop(j);
+        // An unparsable sentinel is never reclaimed.
+        std::fs::write(sibling(&path, ".lock"), "not-a-pid\n").unwrap();
+        assert!(Journal::open(&path).is_err());
+        cleanup(&path);
+    }
+
+    #[test]
+    fn fingerprint_mismatch_is_refused() {
+        let path = tmp_path("fingerprint");
+        cleanup(&path);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).unwrap();
+        }
+        let mut fp = Fingerprint::current();
+        fp.cycle_model += 1;
+        let header = Json::obj(vec![
+            ("format", Json::str("arco-journal")),
+            ("version", Json::num(Journal::VERSION as f64)),
+            ("fingerprint", fp.to_json()),
+        ]);
+        std::fs::write(&path, header.dump() + "\n").unwrap();
+        let err = Journal::open(&path).unwrap_err().to_string();
+        assert!(err.contains("different simulator"), "unexpected error: {err}");
+        // The refused open must not leak its lock sentinel.
+        assert!(!sibling(&path, ".lock").exists());
+        cleanup(&path);
+    }
+
+    #[test]
+    fn v1_journal_is_refused_with_migration_hint() {
+        let path = tmp_path("v1");
+        cleanup(&path);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).unwrap();
+        }
+        std::fs::write(&path, "{\n  \"version\": 1,\n  \"entries\": []\n}\n").unwrap();
+        let err = Journal::open(&path).unwrap_err().to_string();
+        assert!(err.contains("v1"), "unexpected error: {err}");
+        cleanup(&path);
+    }
+
+    #[test]
+    fn torn_tail_line_is_dropped_and_compacted() {
+        let s = space();
+        let path = tmp_path("torn");
+        cleanup(&path);
+        let p = s.default_point();
+        let key = PointKey::of(&s, &p);
+        let m = measure_point(&s, &p);
+        let mut j = Journal::open(&path).unwrap();
+        j.record("vta-sim", &key, &m);
+        j.flush().unwrap();
+        drop(j);
+
+        // Simulate a crash mid-append: half a record, no newline.
+        {
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"{\"backend\":\"vta-sim\",\"task\":{\"n\":").unwrap();
+        }
+        let mut j2 = Journal::open(&path).unwrap();
+        assert_eq!(j2.len(), 1, "torn line must be dropped");
+        j2.record("analytical", &key, &m);
+        j2.flush().unwrap();
+        drop(j2);
+
+        let j3 = Journal::open_read_only(&path).unwrap();
+        assert_eq!(j3.len(), 2, "compacted journal must carry both records");
+        cleanup(&path);
     }
 }

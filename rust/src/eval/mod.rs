@@ -1,5 +1,5 @@
 //! The hardware-measurement layer: every `f[τ(Θ)]` evaluation in the
-//! system flows through one [`Engine`].
+//! system flows through one [`Engine`] — in-process or across a fleet.
 //!
 //! The paper's frameworks are all bottlenecked on the expensive hardware
 //! measurement call (§2.3). This module makes that call a first-class,
@@ -8,20 +8,28 @@
 //! - [`MeasureBackend`] abstracts *how* a configuration is measured:
 //!   [`VtaSimBackend`] runs the full decode → lower → cycle-simulate path
 //!   (the production oracle), [`AnalyticalBackend`] is a cheap roofline
-//!   proxy for smoke tests and CI-scale scenario sweeps.
+//!   proxy for smoke tests, and [`RemoteBackend`] farms batches out to a
+//!   fleet of `arco serve-measure` shards ([`BackendSpec`] selects:
+//!   `vta-sim | analytical | remote:host:port[,...]`).
 //! - [`MeasureCache`] memoizes results under a [`PointKey`] — the task
 //!   shape plus *decoded knob values* — so the same physical configuration
-//!   is recognized across frameworks, spaces (full vs. hardware-frozen) and
-//!   batches.
-//! - [`Journal`] persists measurements as JSON (via [`crate::util::json`]),
-//!   letting `arco compare` re-runs and long-lived services reuse prior
-//!   work across processes.
+//!   is recognized across frameworks, spaces (full vs. hardware-frozen),
+//!   batches and processes. An optional LRU bound keeps long-lived service
+//!   shards at a fixed memory footprint.
+//! - [`Journal`] persists measurements as fingerprinted, append-only JSON
+//!   lines ([`proto`] owns the record schema, [`Fingerprint`] the
+//!   simulator identity), letting `arco compare` re-runs and long-lived
+//!   services reuse prior work across processes — and refusing to mix
+//!   numbers from different cycle models.
 //! - [`Engine`] fronts all of it: it takes a *batch* of points,
-//!   deduplicates within the batch, serves repeats from the cache, fans the
-//!   misses out over the scoped worker pool ([`crate::util::pool`]), and
-//!   records new results in the journal. Results come back in input order
-//!   and are deterministic for a deterministic backend, independent of the
-//!   worker count.
+//!   deduplicates within the batch, serves repeats from the cache,
+//!   coalesces points that a concurrent batch is already measuring, sends
+//!   the remaining misses to the backend (worker-pool fan-out locally,
+//!   shard fan-out remotely), and records new results in the journal.
+//!   Results come back in input order and are deterministic for a
+//!   deterministic backend, independent of the worker count.
+//! - [`server`] is the other side of the wire: `arco serve-measure`
+//!   exposes any local backend as a network shard.
 //!
 //! Call-site contract: nothing outside this module (and the backend impls
 //! it owns) invokes [`crate::codegen::measure_point`] or the simulator on
@@ -32,9 +40,15 @@ pub mod backend;
 pub mod cache;
 pub mod engine;
 pub mod journal;
+pub mod proto;
+pub mod remote;
+pub mod server;
 
 pub use crate::codegen::MeasureResult;
-pub use backend::{AnalyticalBackend, BackendKind, MeasureBackend, VtaSimBackend};
+pub use backend::{AnalyticalBackend, BackendKind, BackendSpec, MeasureBackend, VtaSimBackend};
 pub use cache::{CacheStats, MeasureCache, PointKey};
 pub use engine::{Engine, EngineConfig, EngineStats};
 pub use journal::{Journal, JournalEntry};
+pub use proto::{Fingerprint, PROTO_VERSION};
+pub use remote::RemoteBackend;
+pub use server::{spawn as serve_measure, spawn_local as serve_measure_local, ServerHandle};

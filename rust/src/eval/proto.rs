@@ -1,0 +1,456 @@
+//! The measurement record schema, shared by the journal and the wire.
+//!
+//! One measurement's identity is `(backend, task, decoded knob values)` —
+//! the same identity as [`PointKey`] — and its payload is a
+//! [`MeasureResult`]. This module owns the JSON encoding of that record
+//! plus everything layered on top of it:
+//!
+//! - [`Fingerprint`]: the simulator identity (cycle-model version +
+//!   non-tunable [`VtaConfig`] defaults). Journal files stamp it in their
+//!   header and `serve-measure` reports it in the handshake, so cached or
+//!   remote numbers can never silently mix across different models.
+//! - [`Request`] / [`Response`]: the `serve-measure` protocol. Messages are
+//!   single-line JSON documents delimited by `\n` (a JSONL stream — compact
+//!   `Json::dump` output never contains a raw newline), framed by
+//!   [`read_frame`] / [`write_frame`].
+//!
+//! Protocol (version [`PROTO_VERSION`]), one request → one response per
+//! line, any number of requests per connection:
+//!
+//! ```json
+//! {"op":"ping"}
+//!   → {"ok":true,"backend":"vta-sim","proto":1,"fingerprint":{...}}
+//! {"op":"measure","task":{...},"points":[[1,16,16,1,1,7,7], ...]}
+//!   → {"ok":true,"results":[{"valid":true,"seconds":1.2e-3, ...}, ...]}
+//! {"op":"stats"}
+//!   → {"ok":true,"stats":{"batches":4, ...}}
+//! anything else
+//!   → {"ok":false,"error":"..."}
+//! ```
+//!
+//! `points` carry *decoded knob values* in space knob order, not value
+//! indices: both sides rebuild the identical [`ConfigSpace`] from the task
+//! shape, so decoded values are the only portable point identity.
+
+use super::cache::PointKey;
+use crate::codegen::MeasureResult;
+use crate::space::{ConfigSpace, PointConfig};
+use crate::util::json::Json;
+use crate::vta::{VtaConfig, CYCLE_MODEL_VERSION};
+use crate::workload::Conv2dTask;
+use std::io::{BufRead, Write};
+
+/// Version of the request/response schema below. Bumped on any
+/// incompatible change; the client refuses servers speaking another one.
+pub const PROTO_VERSION: u64 = 1;
+
+/// Identity of the measurement model a process embeds: the cycle-model
+/// version plus the non-tunable [`VtaConfig`] defaults (buffer sizes,
+/// clock, DRAM interface — everything the design space does *not* expose
+/// as a knob). Two processes with equal fingerprints produce identical
+/// numbers for identical points; anything else must not share them.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Fingerprint {
+    /// [`crate::vta::CYCLE_MODEL_VERSION`] of the producing binary.
+    pub cycle_model: u32,
+    /// [`super::backend::ANALYTICAL_MODEL_VERSION`] of the producing
+    /// binary (the roofline proxy drifts independently of the simulator).
+    pub analytical_model: u32,
+    /// Input scratchpad KiB.
+    pub inp_buf_kib: usize,
+    /// Weight scratchpad KiB.
+    pub wgt_buf_kib: usize,
+    /// Accumulator scratchpad KiB.
+    pub acc_buf_kib: usize,
+    /// Micro-op cache KiB.
+    pub uop_buf_kib: usize,
+    /// Core clock MHz.
+    pub freq_mhz: usize,
+    /// DRAM bytes per cycle.
+    pub dram_bytes_per_cycle: usize,
+    /// DMA setup latency in cycles.
+    pub dma_latency: usize,
+    /// ALU vector lanes.
+    pub alu_lanes: usize,
+}
+
+impl Fingerprint {
+    /// The fingerprint of *this* binary.
+    pub fn current() -> Fingerprint {
+        let d = VtaConfig::default();
+        Fingerprint {
+            cycle_model: CYCLE_MODEL_VERSION,
+            analytical_model: super::backend::ANALYTICAL_MODEL_VERSION,
+            inp_buf_kib: d.inp_buf_kib,
+            wgt_buf_kib: d.wgt_buf_kib,
+            acc_buf_kib: d.acc_buf_kib,
+            uop_buf_kib: d.uop_buf_kib,
+            freq_mhz: d.freq_mhz,
+            dram_bytes_per_cycle: d.dram_bytes_per_cycle,
+            dma_latency: d.dma_latency,
+            alu_lanes: d.alu_lanes,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cycle_model", Json::num(self.cycle_model as f64)),
+            ("analytical_model", Json::num(self.analytical_model as f64)),
+            ("inp_buf_kib", Json::num(self.inp_buf_kib as f64)),
+            ("wgt_buf_kib", Json::num(self.wgt_buf_kib as f64)),
+            ("acc_buf_kib", Json::num(self.acc_buf_kib as f64)),
+            ("uop_buf_kib", Json::num(self.uop_buf_kib as f64)),
+            ("freq_mhz", Json::num(self.freq_mhz as f64)),
+            ("dram_bytes_per_cycle", Json::num(self.dram_bytes_per_cycle as f64)),
+            ("dma_latency", Json::num(self.dma_latency as f64)),
+            ("alu_lanes", Json::num(self.alu_lanes as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<Fingerprint> {
+        Some(Fingerprint {
+            cycle_model: v.get_usize("cycle_model")? as u32,
+            analytical_model: v.get_usize("analytical_model")? as u32,
+            inp_buf_kib: v.get_usize("inp_buf_kib")?,
+            wgt_buf_kib: v.get_usize("wgt_buf_kib")?,
+            acc_buf_kib: v.get_usize("acc_buf_kib")?,
+            uop_buf_kib: v.get_usize("uop_buf_kib")?,
+            freq_mhz: v.get_usize("freq_mhz")?,
+            dram_bytes_per_cycle: v.get_usize("dram_bytes_per_cycle")?,
+            dma_latency: v.get_usize("dma_latency")?,
+            alu_lanes: v.get_usize("alu_lanes")?,
+        })
+    }
+
+    /// One-line rendering for mismatch diagnostics.
+    pub fn describe(&self) -> String {
+        format!(
+            "cycle-model v{} analytical v{} bufs {}/{}/{}/{} KiB {} MHz dram {} B/cyc dma {} alu {}",
+            self.cycle_model,
+            self.analytical_model,
+            self.inp_buf_kib,
+            self.wgt_buf_kib,
+            self.acc_buf_kib,
+            self.uop_buf_kib,
+            self.freq_mhz,
+            self.dram_bytes_per_cycle,
+            self.dma_latency,
+            self.alu_lanes
+        )
+    }
+}
+
+/// Encode a result's payload fields onto an existing record object.
+fn push_result_fields(fields: &mut Vec<(&'static str, Json)>, r: &MeasureResult) {
+    fields.push(("valid", Json::Bool(r.valid)));
+    // Infinite runtimes (invalid configs) serialize as null.
+    fields.push(("seconds", Json::num(r.seconds)));
+    fields.push(("cycles", Json::num(r.cycles as f64)));
+    fields.push(("gflops", Json::num(r.gflops)));
+    fields.push(("area_mm2", Json::num(r.area_mm2)));
+    fields.push(("occupancy", Json::num(r.occupancy)));
+}
+
+/// JSON object carrying just a [`MeasureResult`] (wire responses).
+pub fn result_to_json(r: &MeasureResult) -> Json {
+    let mut fields = Vec::with_capacity(6);
+    push_result_fields(&mut fields, r);
+    Json::obj(fields)
+}
+
+/// Inverse of [`result_to_json`]; invalid results are restored with
+/// infinite runtime whatever `seconds` holds.
+pub fn result_from_json(v: &Json) -> Option<MeasureResult> {
+    let valid = v.get_bool("valid")?;
+    let seconds = if valid { v.get_f64("seconds")? } else { f64::INFINITY };
+    Some(MeasureResult {
+        seconds,
+        cycles: v.get_f64("cycles").unwrap_or(0.0) as u64,
+        gflops: v.get_f64("gflops").unwrap_or(0.0),
+        area_mm2: v.get_f64("area_mm2").unwrap_or(0.0),
+        occupancy: v.get_f64("occupancy").unwrap_or(0.0),
+        valid,
+    })
+}
+
+/// Full journal record: identity + payload on one object.
+pub fn record_to_json(backend: &str, key: &PointKey, r: &MeasureResult) -> Json {
+    let mut fields: Vec<(&'static str, Json)> = Vec::with_capacity(9);
+    fields.push(("backend", Json::str(backend.to_string())));
+    fields.push(("task", key.task.to_json()));
+    fields.push(("values", values_to_json(&key.values)));
+    push_result_fields(&mut fields, r);
+    Json::obj(fields)
+}
+
+/// Inverse of [`record_to_json`].
+pub fn record_from_json(v: &Json) -> Option<(String, PointKey, MeasureResult)> {
+    let backend = v.get_str("backend")?.to_string();
+    let task = Conv2dTask::from_json(v.get("task")?)?;
+    let values = values_from_json(v.get("values")?)?;
+    let result = result_from_json(v)?;
+    Some((backend, PointKey { task, values }, result))
+}
+
+pub fn values_to_json(values: &[usize]) -> Json {
+    Json::Arr(values.iter().map(|&v| Json::num(v as f64)).collect())
+}
+
+pub fn values_from_json(v: &Json) -> Option<Vec<usize>> {
+    v.as_arr()?.iter().map(Json::as_usize).collect()
+}
+
+/// Map decoded knob values back to a point of `space`. `None` when the
+/// arity is wrong or a value is not one of the knob's candidates (a
+/// version-skewed peer, not a measurable configuration).
+pub fn point_from_values(space: &ConfigSpace, values: &[usize]) -> Option<PointConfig> {
+    if values.len() != space.num_knobs() {
+        return None;
+    }
+    let idx = space
+        .knobs
+        .iter()
+        .zip(values)
+        .map(|(k, v)| k.values.iter().position(|x| x == v))
+        .collect::<Option<Vec<usize>>>()?;
+    Some(PointConfig(idx))
+}
+
+/// One client → server message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Handshake: who are you, what model do you embed?
+    Ping,
+    /// Measure a batch of points of one task (decoded knob values).
+    Measure { task: Conv2dTask, points: Vec<Vec<usize>> },
+    /// Engine counters (diagnostics).
+    Stats,
+}
+
+impl Request {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Ping => Json::obj(vec![("op", Json::str("ping"))]),
+            Request::Measure { task, points } => Json::obj(vec![
+                ("op", Json::str("measure")),
+                ("task", task.to_json()),
+                ("points", Json::Arr(points.iter().map(|v| values_to_json(v)).collect())),
+            ]),
+            Request::Stats => Json::obj(vec![("op", Json::str("stats"))]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Option<Request> {
+        match v.get_str("op")? {
+            "ping" => Some(Request::Ping),
+            "stats" => Some(Request::Stats),
+            "measure" => {
+                let task = Conv2dTask::from_json(v.get("task")?)?;
+                let points = v
+                    .get("points")?
+                    .as_arr()?
+                    .iter()
+                    .map(values_from_json)
+                    .collect::<Option<Vec<_>>>()?;
+                Some(Request::Measure { task, points })
+            }
+            _ => None,
+        }
+    }
+}
+
+/// One server → client message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// Handshake reply.
+    Pong { backend: String, proto: u64, fingerprint: Fingerprint },
+    /// Batch results, in request point order.
+    Results(Vec<MeasureResult>),
+    /// Engine counters as a free-form object.
+    Stats(Json),
+    /// The request could not be served (malformed, unknown op, skew).
+    Error(String),
+}
+
+impl Response {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Pong { backend, proto, fingerprint } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("backend", Json::str(backend.clone())),
+                ("proto", Json::num(*proto as f64)),
+                ("fingerprint", fingerprint.to_json()),
+            ]),
+            Response::Results(results) => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("results", Json::Arr(results.iter().map(result_to_json).collect())),
+            ]),
+            Response::Stats(stats) => {
+                Json::obj(vec![("ok", Json::Bool(true)), ("stats", stats.clone())])
+            }
+            Response::Error(msg) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(msg.clone())),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Option<Response> {
+        if !v.get_bool("ok")? {
+            return Some(Response::Error(v.get_str("error").unwrap_or("unspecified").to_string()));
+        }
+        if let Some(results) = v.get("results") {
+            let rs = results
+                .as_arr()?
+                .iter()
+                .map(result_from_json)
+                .collect::<Option<Vec<_>>>()?;
+            return Some(Response::Results(rs));
+        }
+        if let Some(stats) = v.get("stats") {
+            return Some(Response::Stats(stats.clone()));
+        }
+        if let Some(backend) = v.get_str("backend") {
+            return Some(Response::Pong {
+                backend: backend.to_string(),
+                proto: v.get_usize("proto")? as u64,
+                fingerprint: Fingerprint::from_json(v.get("fingerprint")?)?,
+            });
+        }
+        None
+    }
+}
+
+/// Write one message as a compact single-line JSON document.
+pub fn write_frame(w: &mut impl Write, v: &Json) -> std::io::Result<()> {
+    let mut line = v.dump();
+    line.push('\n');
+    w.write_all(line.as_bytes())?;
+    w.flush()
+}
+
+/// Read one message; `Ok(None)` on a clean EOF before any bytes.
+pub fn read_frame(r: &mut impl BufRead) -> anyhow::Result<Option<Json>> {
+    let mut line = String::new();
+    let n = r.read_line(&mut line)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    let text = line.trim_end_matches(['\n', '\r']);
+    if text.is_empty() {
+        return Ok(Some(Json::Null));
+    }
+    let v = Json::parse(text).map_err(|e| anyhow::anyhow!("malformed frame: {e}"))?;
+    Ok(Some(v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn space() -> ConfigSpace {
+        ConfigSpace::for_task(&Conv2dTask::new(1, 32, 28, 28, 32, 3, 3, 1, 1), true)
+    }
+
+    #[test]
+    fn fingerprint_roundtrips_and_detects_drift() {
+        let fp = Fingerprint::current();
+        assert_eq!(Fingerprint::from_json(&fp.to_json()), Some(fp.clone()));
+        let mut other = fp.clone();
+        other.cycle_model += 1;
+        assert_ne!(fp, other);
+        let mut other = fp.clone();
+        other.analytical_model += 1;
+        assert_ne!(fp, other);
+        let mut other = fp.clone();
+        other.wgt_buf_kib *= 2;
+        assert_ne!(fp, other);
+    }
+
+    #[test]
+    fn record_roundtrips_valid_and_invalid() {
+        let s = space();
+        let mut rng = Pcg32::seeded(6);
+        for _ in 0..20 {
+            let p = s.random_point(&mut rng);
+            let key = PointKey::of(&s, &p);
+            let r = crate::codegen::measure_point(&s, &p);
+            let (backend, key2, r2) =
+                record_from_json(&record_to_json("vta-sim", &key, &r)).unwrap();
+            assert_eq!(backend, "vta-sim");
+            assert_eq!(key2, key);
+            if r.valid {
+                assert_eq!(r2, r);
+            } else {
+                assert!(!r2.valid);
+                assert!(r2.seconds.is_infinite());
+            }
+        }
+    }
+
+    #[test]
+    fn point_values_roundtrip_through_wire_identity() {
+        let s = space();
+        let mut rng = Pcg32::seeded(8);
+        for _ in 0..50 {
+            let p = s.random_point(&mut rng);
+            let key = PointKey::of(&s, &p);
+            assert_eq!(point_from_values(&s, &key.values), Some(p));
+        }
+        // Wrong arity and non-candidate values are rejected.
+        assert!(point_from_values(&s, &[1, 2]).is_none());
+        let mut vals = PointKey::of(&s, &s.default_point()).values;
+        vals[0] = 999;
+        assert!(point_from_values(&s, &vals).is_none());
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        let s = space();
+        let key = PointKey::of(&s, &s.default_point());
+        for req in [
+            Request::Ping,
+            Request::Stats,
+            Request::Measure { task: s.task, points: vec![key.values.clone(), key.values] },
+        ] {
+            assert_eq!(Request::from_json(&req.to_json()), Some(req));
+        }
+        assert_eq!(Request::from_json(&Json::obj(vec![("op", Json::str("nope"))])), None);
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        let s = space();
+        let r = crate::codegen::measure_point(&s, &s.default_point());
+        for resp in [
+            Response::Pong {
+                backend: "vta-sim".into(),
+                proto: PROTO_VERSION,
+                fingerprint: Fingerprint::current(),
+            },
+            Response::Results(vec![r, r]),
+            Response::Stats(Json::obj(vec![("batches", Json::num(3.0))])),
+            Response::Error("boom".into()),
+        ] {
+            assert_eq!(Response::from_json(&resp.to_json()), Some(resp));
+        }
+    }
+
+    #[test]
+    fn frames_roundtrip_over_a_buffer() {
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, &Request::Ping.to_json()).unwrap();
+        write_frame(&mut buf, &Request::Stats.to_json()).unwrap();
+        let mut r = std::io::BufReader::new(&buf[..]);
+        assert_eq!(
+            Request::from_json(&read_frame(&mut r).unwrap().unwrap()),
+            Some(Request::Ping)
+        );
+        assert_eq!(
+            Request::from_json(&read_frame(&mut r).unwrap().unwrap()),
+            Some(Request::Stats)
+        );
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+}

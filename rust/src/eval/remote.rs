@@ -1,0 +1,322 @@
+//! A [`MeasureBackend`] that farms measurement out to a fleet of
+//! `arco serve-measure` shards.
+//!
+//! Construction ([`RemoteBackend::connect`]) handshakes with every shard:
+//! protocol version, backend identity and simulator [`Fingerprint`] must
+//! all match this binary, so a skewed or differently-configured shard is
+//! rejected before it can contribute a single number.
+//!
+//! Each batch is split into contiguous chunks across the currently-alive
+//! shards and dispatched concurrently (one connection per shard per batch).
+//! A shard that fails mid-batch — connection refused, reset, short reply —
+//! is marked dead and its chunk is re-dispatched to the survivors on the
+//! next round; dead shards are re-pinged at the start of later batches and
+//! revived when they come back. Only when *no* shard can serve a chunk
+//! after repeated rounds does the backend panic (the [`MeasureBackend`]
+//! contract has no error channel: measurement infrastructure loss is fatal
+//! to a tuning run, invalid *configurations* are not errors).
+
+use super::backend::{BackendKind, MeasureBackend};
+use super::cache::PointKey;
+use super::proto::{read_frame, write_frame, Fingerprint, Request, Response, PROTO_VERSION};
+use crate::codegen::MeasureResult;
+use crate::space::{ConfigSpace, PointConfig};
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Establishing a TCP connection to a shard.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(3);
+/// Waiting for a handshake reply.
+const PING_TIMEOUT: Duration = Duration::from_secs(5);
+/// Waiting for a batch of measurements (a vta-sim batch can be slow).
+const MEASURE_TIMEOUT: Duration = Duration::from_secs(600);
+/// Minimum spacing between routine probes of dead shards: each probe can
+/// burn a connect timeout per dead shard, so it must not run per batch.
+const REVIVE_INTERVAL: Duration = Duration::from_secs(30);
+
+struct Shard {
+    addr: String,
+    alive: AtomicBool,
+}
+
+/// Remote measurement fleet client (`--backend remote:host:port[,...]`).
+pub struct RemoteBackend {
+    shards: Vec<Shard>,
+    /// The backend id every shard serves (journal/cache identity).
+    name: &'static str,
+    /// When dead shards were last probed for revival.
+    last_probe: Mutex<Option<Instant>>,
+}
+
+fn connect(addr: &str) -> anyhow::Result<TcpStream> {
+    let resolved = addr
+        .to_socket_addrs()
+        .map_err(|e| anyhow::anyhow!("resolving {addr}: {e}"))?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("address {addr} resolved to nothing"))?;
+    let stream = TcpStream::connect_timeout(&resolved, CONNECT_TIMEOUT)
+        .map_err(|e| anyhow::anyhow!("connecting {addr}: {e}"))?;
+    stream.set_nodelay(true).ok();
+    Ok(stream)
+}
+
+/// One request → one response over a fresh connection.
+fn call(addr: &str, req: &Request, read_timeout: Duration) -> anyhow::Result<Response> {
+    let stream = connect(addr)?;
+    stream.set_read_timeout(Some(read_timeout)).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    write_frame(&mut writer, &req.to_json())?;
+    let Some(frame) = read_frame(&mut reader)? else {
+        anyhow::bail!("{addr} closed the connection before replying");
+    };
+    Response::from_json(&frame)
+        .ok_or_else(|| anyhow::anyhow!("{addr} sent an unintelligible reply"))
+}
+
+/// Handshake with one shard, returning its advertised backend id.
+fn handshake(addr: &str) -> anyhow::Result<String> {
+    match call(addr, &Request::Ping, PING_TIMEOUT)? {
+        Response::Pong { backend, proto, fingerprint } => {
+            if proto != PROTO_VERSION {
+                anyhow::bail!(
+                    "shard {addr} speaks measure-protocol v{proto}, this binary v{PROTO_VERSION}"
+                );
+            }
+            let local = Fingerprint::current();
+            if fingerprint != local {
+                anyhow::bail!(
+                    "shard {addr} embeds a different simulator — refusing to mix numbers.\n  \
+                     shard:  {}\n  binary: {}",
+                    fingerprint.describe(),
+                    local.describe()
+                );
+            }
+            Ok(backend)
+        }
+        Response::Error(e) => anyhow::bail!("shard {addr} refused the handshake: {e}"),
+        _ => anyhow::bail!("shard {addr} sent a non-handshake reply to ping"),
+    }
+}
+
+impl RemoteBackend {
+    /// Handshake with every shard address; any failure is fatal (a fleet
+    /// with a bad member should be fixed, not silently thinned, before a
+    /// run starts depending on it).
+    pub fn connect(addrs: &[String]) -> anyhow::Result<RemoteBackend> {
+        if addrs.is_empty() {
+            anyhow::bail!("remote backend needs at least one shard address");
+        }
+        let mut served: Option<String> = None;
+        for addr in addrs {
+            let backend = handshake(addr)?;
+            match &served {
+                None => served = Some(backend),
+                Some(first) if *first != backend => {
+                    anyhow::bail!(
+                        "shards disagree on the backend they serve: {} vs {backend} ({addr}); \
+                         point a fleet at one backend kind",
+                        first
+                    );
+                }
+                Some(_) => {}
+            }
+        }
+        let served = served.expect("at least one shard");
+        let name = match BackendKind::from_name(&served) {
+            Some(kind) => kind.name(),
+            None => "remote",
+        };
+        crate::log_info!(
+            "eval",
+            "remote backend: {} shard(s) serving {name}, fingerprints verified",
+            addrs.len()
+        );
+        Ok(RemoteBackend {
+            shards: addrs
+                .iter()
+                .map(|a| Shard { addr: a.clone(), alive: AtomicBool::new(true) })
+                .collect(),
+            name,
+            last_probe: Mutex::new(None),
+        })
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.shards.iter().filter(|s| s.alive.load(Ordering::Relaxed)).count()
+    }
+
+    fn alive_ids(&self) -> Vec<usize> {
+        self.shards
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.alive.load(Ordering::Relaxed))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Re-ping dead shards and revive the ones that answer correctly.
+    /// Each probe of an unreachable shard costs up to the connect timeout.
+    fn revive_dead(&self) {
+        for s in &self.shards {
+            if !s.alive.load(Ordering::Relaxed) && handshake(&s.addr).is_ok() {
+                crate::log_info!("eval", "shard {} is back, rejoining the fleet", s.addr);
+                s.alive.store(true, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Routine revival: only when something is dead, and at most once per
+    /// [`REVIVE_INTERVAL`] — probing serially on every batch would stall
+    /// all measurement for the whole time a shard stays down.
+    fn maybe_revive(&self) {
+        if self.alive_count() == self.shards.len() {
+            return;
+        }
+        {
+            let mut last = self.last_probe.lock().unwrap();
+            let now = Instant::now();
+            if last.is_some_and(|t| now.duration_since(t) < REVIVE_INTERVAL) {
+                return;
+            }
+            *last = Some(now);
+        }
+        self.revive_dead();
+    }
+
+    /// Send one chunk to one shard, validating the reply shape.
+    fn measure_on(
+        &self,
+        shard: usize,
+        task: crate::workload::Conv2dTask,
+        values: Vec<Vec<usize>>,
+    ) -> Result<Vec<MeasureResult>, String> {
+        let expect = values.len();
+        let addr = &self.shards[shard].addr;
+        // Every failure marks the shard dead — including a structured
+        // refusal: a server that answers `Error` to a well-formed batch
+        // (version skew) will refuse every retry, and leaving it in the
+        // rotation would burn the bounded re-dispatch rounds on a shard
+        // that can never serve, starving points that the healthy rest of
+        // the fleet could have absorbed.
+        let err = match call(addr, &Request::Measure { task, points: values }, MEASURE_TIMEOUT) {
+            Ok(Response::Results(rs)) if rs.len() == expect => return Ok(rs),
+            Ok(Response::Results(rs)) => {
+                format!("shard {addr}: short reply ({} of {expect} results)", rs.len())
+            }
+            Ok(Response::Error(e)) => format!("shard {addr} refused the batch: {e}"),
+            Ok(_) => format!("shard {addr}: unexpected reply kind"),
+            Err(e) => format!("shard {addr}: {e}"),
+        };
+        self.shards[shard].alive.store(false, Ordering::Relaxed);
+        Err(err)
+    }
+}
+
+impl MeasureBackend for RemoteBackend {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn measure(&self, space: &ConfigSpace, point: &PointConfig) -> MeasureResult {
+        self.measure_many(space, std::slice::from_ref(point), 1)[0]
+    }
+
+    /// Shard the batch across the alive fleet; chunks of a shard that dies
+    /// mid-batch are re-dispatched to the survivors.
+    ///
+    /// Panics when no shard can serve a chunk after repeated rounds (the
+    /// whole fleet is unreachable): there is nothing measurable left.
+    fn measure_many(
+        &self,
+        space: &ConfigSpace,
+        points: &[PointConfig],
+        _workers: usize,
+    ) -> Vec<MeasureResult> {
+        let n = points.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        self.maybe_revive();
+        let values: Vec<Vec<usize>> =
+            points.iter().map(|p| PointKey::of(space, p).values).collect();
+        let values = &values;
+        let task = space.task;
+        let mut out: Vec<Option<MeasureResult>> = vec![None; n];
+        let mut pending: Vec<usize> = (0..n).collect();
+        let mut last_error = String::new();
+        let max_rounds = 2 * self.shards.len() + 2;
+        for round in 0..max_rounds {
+            let mut alive = self.alive_ids();
+            if alive.is_empty() {
+                self.revive_dead();
+                alive = self.alive_ids();
+            }
+            if alive.is_empty() {
+                break;
+            }
+            // Contiguous chunks, one per alive shard (at most one point of
+            // imbalance; chunk i may be empty when points < shards).
+            let per = pending.len().div_ceil(alive.len());
+            let outcomes: Vec<(Vec<usize>, Result<Vec<MeasureResult>, String>)> =
+                std::thread::scope(|scope| {
+                    let handles: Vec<_> = alive
+                        .iter()
+                        .zip(pending.chunks(per.max(1)))
+                        .map(|(&shard, chunk)| {
+                            let idxs: Vec<usize> = chunk.to_vec();
+                            scope.spawn(move || {
+                                let vals: Vec<Vec<usize>> =
+                                    idxs.iter().map(|&i| values[i].clone()).collect();
+                                let res = self.measure_on(shard, task, vals);
+                                (idxs, res)
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("remote dispatch thread panicked"))
+                        .collect()
+                });
+            let mut next = Vec::new();
+            for (idxs, res) in outcomes {
+                match res {
+                    Ok(rs) => {
+                        for (&slot, r) in idxs.iter().zip(rs) {
+                            out[slot] = Some(r);
+                        }
+                    }
+                    Err(e) => {
+                        crate::log_warn!(
+                            "eval",
+                            "re-dispatching {} point(s) (round {}): {e}",
+                            idxs.len(),
+                            round + 1
+                        );
+                        last_error = e;
+                        next.extend(idxs);
+                    }
+                }
+            }
+            pending = next;
+            if pending.is_empty() {
+                break;
+            }
+        }
+        assert!(
+            pending.is_empty(),
+            "remote measurement fleet lost: {} point(s) undeliverable after {} rounds \
+             (last error: {last_error})",
+            pending.len(),
+            max_rounds
+        );
+        out.into_iter().map(|r| r.expect("every point measured")).collect()
+    }
+}

@@ -1,0 +1,151 @@
+//! `arco serve-measure`: expose a local [`Engine`] to the network.
+//!
+//! A thin threaded TCP front-end over one shared measurement engine: the
+//! accept loop hands each connection to its own thread, and every thread
+//! funnels measure requests into the same [`Engine`] — so the shard-wide
+//! cache, in-flight coalescing and journal all apply across clients. The
+//! wire format is the JSONL protocol of [`super::proto`].
+//!
+//! Lifecycle: [`spawn`] binds and returns a [`ServerHandle`] (port 0 picks
+//! a free port — the bound address is on the handle). `shutdown()` stops
+//! the accept loop and joins it; in-flight connections finish their current
+//! request and then drop. The CLI runs `spawn(...)` + `wait()`.
+
+use super::engine::Engine;
+use super::proto::{
+    point_from_values, read_frame, write_frame, Fingerprint, Request, Response, PROTO_VERSION,
+};
+use crate::space::ConfigSpace;
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// A running measurement server.
+pub struct ServerHandle {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    engine: Arc<Engine>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The actually-bound address (resolves `:0` to the chosen port).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// The engine serving this shard (stats, journal flush).
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    /// Block until the accept loop exits (the CLI's serve-forever mode).
+    pub fn wait(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting, join the accept loop, flush the journal.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Nudge the blocking accept() with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        self.engine.flush_journal();
+    }
+}
+
+/// Bind `addr` and serve `engine` until the handle is shut down.
+pub fn spawn(addr: &str, engine: Arc<Engine>) -> anyhow::Result<ServerHandle> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| anyhow::anyhow!("binding measure server to {addr}: {e}"))?;
+    let bound = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let accept = {
+        let stop = Arc::clone(&stop);
+        let engine = Arc::clone(&engine);
+        std::thread::spawn(move || accept_loop(listener, engine, stop))
+    };
+    Ok(ServerHandle { addr: bound, stop, engine, accept: Some(accept) })
+}
+
+fn accept_loop(listener: TcpListener, engine: Arc<Engine>, stop: Arc<AtomicBool>) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match conn {
+            Ok(stream) => {
+                let engine = Arc::clone(&engine);
+                std::thread::spawn(move || {
+                    let peer = stream
+                        .peer_addr()
+                        .map(|a| a.to_string())
+                        .unwrap_or_else(|_| "?".to_string());
+                    if let Err(e) = serve_connection(stream, &engine) {
+                        crate::log_debug!("eval", "connection {peer} ended: {e}");
+                    }
+                });
+            }
+            Err(e) => crate::log_warn!("eval", "accept failed: {e}"),
+        }
+    }
+}
+
+/// One request → one response per line until the client hangs up.
+fn serve_connection(stream: TcpStream, engine: &Engine) -> anyhow::Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let Some(frame) = read_frame(&mut reader)? else {
+            return Ok(());
+        };
+        let response = match Request::from_json(&frame) {
+            Some(req) => handle(engine, req),
+            None => Response::Error("unintelligible request".to_string()),
+        };
+        write_frame(&mut writer, &response.to_json())?;
+    }
+}
+
+fn handle(engine: &Engine, req: Request) -> Response {
+    match req {
+        Request::Ping => Response::Pong {
+            backend: engine.backend_name().to_string(),
+            proto: PROTO_VERSION,
+            fingerprint: Fingerprint::current(),
+        },
+        Request::Stats => Response::Stats(engine.stats().to_json()),
+        Request::Measure { task, points } => {
+            // Both sides rebuild the identical space from the task shape;
+            // decoded values are the portable point identity.
+            let space = ConfigSpace::for_task(&task, true);
+            let mut decoded = Vec::with_capacity(points.len());
+            for (i, values) in points.iter().enumerate() {
+                match point_from_values(&space, values) {
+                    Some(p) => decoded.push(p),
+                    None => {
+                        return Response::Error(format!(
+                            "point {i}: values {values:?} are not candidates of the space for \
+                             task {} (client/server version skew?)",
+                            task.short_id()
+                        ));
+                    }
+                }
+            }
+            Response::Results(engine.measure_batch(&space, &decoded))
+        }
+    }
+}
+
+/// Convenience for tests and embedding: serve a fresh engine on a loopback
+/// port picked by the OS.
+pub fn spawn_local(engine: Arc<Engine>) -> anyhow::Result<ServerHandle> {
+    spawn("127.0.0.1:0", engine)
+}

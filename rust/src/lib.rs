@@ -22,14 +22,18 @@
 //! (§2.3). All of those calls flow through one seam: [`eval::Engine`].
 //! The engine takes *batches* of [`space::PointConfig`]s, deduplicates
 //! within each batch, serves repeats from a concurrent point-keyed cache
-//! (keyed on decoded knob values, so frameworks and spaces share entries),
-//! fans unique misses out over the [`util::pool`] worker threads, and can
-//! persist every measurement to a JSON journal for cross-process reuse.
+//! (keyed on decoded knob values, so frameworks and spaces share entries;
+//! optionally LRU-bounded for long-lived services), coalesces points a
+//! concurrent batch is already measuring, fans unique misses out over the
+//! [`util::pool`] worker threads, and can persist every measurement to a
+//! fingerprinted append-only JSONL journal for cross-process reuse.
 //! Backends are pluggable via [`eval::MeasureBackend`]:
 //! [`eval::VtaSimBackend`] is the cycle-accurate decode → lower → simulate
 //! oracle, [`eval::AnalyticalBackend`] a roofline proxy for smoke runs
-//! (`arco ... --backend analytical`). This is also the seam future remote
-//! or sharded measurement services plug into.
+//! (`arco ... --backend analytical`), and [`eval::RemoteBackend`] shards
+//! batches across a fleet of `arco serve-measure` processes
+//! (`--backend remote:host:port[,...]`), with retry and re-dispatch when
+//! a shard dies mid-batch.
 
 pub mod util;
 pub mod workload;

@@ -2,20 +2,23 @@
 //! tables and figures from the command line.
 //!
 //! ```text
-//! arco tune     --model resnet18 --framework arco [--config configs/arco.json]
-//! arco compare  --models alexnet,resnet18 --frameworks autotvm,chameleon,arco
-//! arco fig4     --model resnet18            # CS ablation trace
-//! arco report-models                        # Table 3
-//! arco info                                 # backend / artifact status
+//! arco tune          --model resnet18 --framework arco [--config configs/arco.json]
+//! arco compare       --models alexnet,resnet18 --frameworks autotvm,chameleon,arco
+//! arco fig4          --model resnet18            # CS ablation trace
+//! arco serve-measure --addr 127.0.0.1:4917       # measurement fleet shard
+//! arco report-models                             # Table 3
+//! arco info                                      # backend / artifact status
 //! ```
 //!
-//! Measurement-engine options (all commands): `--backend vta-sim|analytical`
-//! selects the measurement oracle, `--workers N` sizes its thread pool,
-//! `--journal results/journal.json` persists measurements for reuse across
-//! runs, `--no-cache` disables in-memory memoization.
+//! Measurement-engine options (all commands): `--backend
+//! vta-sim|analytical|remote:host:port[,...]` selects the measurement
+//! oracle (or a fleet of `serve-measure` shards), `--workers N` sizes its
+//! thread pool, `--journal results/journal.jsonl` persists measurements
+//! for reuse across runs, `--no-cache` disables in-memory memoization,
+//! `--cache-cap N` bounds the cache to N entries (LRU).
 
 use arco::config::RunConfig;
-use arco::eval::{self, BackendKind};
+use arco::eval::{self, BackendKind, BackendSpec};
 use arco::report;
 use arco::tuner::{compare_frameworks_with, tune_model_with, Framework};
 use arco::util::cli::Cli;
@@ -23,6 +26,7 @@ use arco::util::json::write_json_file;
 use arco::util::log::{set_level, Level};
 use arco::workload::{model_by_name, model_names};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 fn main() {
     arco::util::log::init_from_env();
@@ -42,6 +46,7 @@ fn usage() -> String {
      tune           tune one model with one framework\n  \
      compare        compare frameworks across models (Figs 5-7, Table 6)\n  \
      fig4           ARCO with/without Confidence Sampling trace (Fig 4)\n  \
+     serve-measure  expose a measurement backend to remote tuners (fleet shard)\n  \
      report-models  print the model zoo (Table 3)\n  \
      info           backend / artifact status\n\nrun `arco <command> --help` for options\n"
         .into()
@@ -57,6 +62,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "tune" => cmd_tune(rest),
         "compare" => cmd_compare(rest),
         "fig4" => cmd_fig4(rest),
+        "serve-measure" => cmd_serve_measure(rest),
         "report-models" => {
             print!("{}", report::table3_models());
             report::write_result("table3_models.md", &report::table3_models())?;
@@ -78,8 +84,14 @@ fn common_cli(name: &str, about: &str) -> Cli {
         .opt("batch", Some('b'), "measurements per planning iteration", None)
         .opt("seed", Some('s'), "RNG seed", None)
         .opt("workers", Some('w'), "measurement engine worker threads", None)
-        .opt("backend", None, "measurement backend: vta-sim | analytical", None)
-        .opt("journal", Some('j'), "persistent measurement journal (JSON path)", None)
+        .opt(
+            "backend",
+            None,
+            "measurement backend: vta-sim | analytical | remote:host:port[,host:port...]",
+            None,
+        )
+        .opt("journal", Some('j'), "persistent measurement journal (JSONL path)", None)
+        .opt("cache-cap", None, "bound the measurement cache to N entries (LRU)", None)
         .flag("no-cache", None, "disable the measurement cache (every point re-simulated)")
         .flag("quick", Some('q'), "CI-scale RL budgets (same pipeline)")
         .flag("verbose", Some('v'), "debug logging")
@@ -104,15 +116,18 @@ fn load_config(a: &arco::util::cli::Args) -> anyhow::Result<(RunConfig, bool)> {
         cfg.seed = s;
     }
     if let Some(name) = a.get("backend") {
-        cfg.eval.backend = BackendKind::from_name(name).ok_or_else(|| {
+        cfg.eval.backend = BackendSpec::parse(name).ok_or_else(|| {
             anyhow::anyhow!(
-                "unknown backend '{name}' (known: {})",
+                "unknown backend '{name}' (known: {}, or remote:host:port[,host:port...])",
                 BackendKind::known_names().join(", ")
             )
         })?;
     }
     if a.has_flag("no-cache") {
         cfg.eval.cache = false;
+    }
+    if let Some(cap) = a.get_usize("cache-cap").map_err(anyhow::Error::msg)? {
+        cfg.eval.cache_capacity = Some(cap);
     }
     if let Some(path) = a.get("journal") {
         cfg.eval.journal = Some(PathBuf::from(path));
@@ -124,8 +139,10 @@ fn load_config(a: &arco::util::cli::Args) -> anyhow::Result<(RunConfig, bool)> {
 }
 
 /// One measurement engine per run: shared cache and journal across every
-/// framework, model and task the command touches.
-fn build_engine(cfg: &RunConfig) -> eval::Engine {
+/// framework, model and task the command touches. Fails fast on an unsafe
+/// journal (locked by another writer, foreign fingerprint) or an
+/// unreachable remote fleet.
+fn build_engine(cfg: &RunConfig) -> anyhow::Result<eval::Engine> {
     eval::Engine::new(cfg.eval.engine_config(cfg.budget.workers))
 }
 
@@ -158,7 +175,7 @@ fn cmd_tune(args: &[String]) -> anyhow::Result<()> {
     let framework = Framework::from_name(a.get("framework").unwrap())
         .ok_or_else(|| anyhow::anyhow!("unknown framework"))?;
 
-    let engine = build_engine(&cfg);
+    let engine = build_engine(&cfg)?;
     let out = tune_model_with(&engine, framework, &model, cfg.budget, quick, cfg.seed);
     println!(
         "{} on {}: mean inference {:.5}s ({:.3} inf/s), compile {:.1}s, {} measurements",
@@ -213,7 +230,7 @@ fn cmd_compare(args: &[String]) -> anyhow::Result<()> {
         })
         .collect::<Result<_, _>>()?;
 
-    let engine = build_engine(&cfg);
+    let engine = build_engine(&cfg)?;
     let mut reports = Vec::new();
     for name in &models {
         let model = model_by_name(name).unwrap();
@@ -256,7 +273,7 @@ fn cmd_fig4(args: &[String]) -> anyhow::Result<()> {
 
     // Both variants share one engine: configurations the two runs have in
     // common are simulated once.
-    let engine = build_engine(&cfg);
+    let engine = build_engine(&cfg)?;
     let with_cs = tune_model_with(&engine, Framework::Arco, &model, cfg.budget, quick, cfg.seed);
     let without_cs =
         tune_model_with(&engine, Framework::ArcoNoCs, &model, cfg.budget, quick, cfg.seed);
@@ -285,6 +302,60 @@ fn cmd_fig4(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_serve_measure(args: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("arco serve-measure", "expose a measurement backend to remote tuners")
+        .opt("addr", Some('a'), "listen address (port 0 picks a free port)", Some("127.0.0.1:4917"))
+        .opt("backend", None, "local backend to serve: vta-sim | analytical", Some("vta-sim"))
+        .opt("workers", Some('w'), "measurement worker threads", None)
+        .opt("journal", Some('j'), "persistent measurement journal (JSONL path)", None)
+        .opt("cache-cap", None, "bound the measurement cache to N entries (LRU)", None)
+        .flag("no-cache", None, "disable the measurement cache")
+        .flag("verbose", Some('v'), "debug logging")
+        .flag("help", Some('h'), "show help");
+    let a = cli.parse(args).map_err(anyhow::Error::msg)?;
+    if a.has_flag("help") {
+        print!("{}", cli.usage());
+        return Ok(());
+    }
+    if a.has_flag("verbose") {
+        set_level(Level::Debug);
+    }
+    let name = a.get("backend").unwrap();
+    let backend = match BackendSpec::parse(name) {
+        Some(BackendSpec::Builtin(kind)) => kind,
+        Some(BackendSpec::Remote(_)) => {
+            anyhow::bail!("serve-measure serves a local backend; chaining remote shards is not supported")
+        }
+        None => anyhow::bail!(
+            "unknown backend '{name}' (known: {})",
+            BackendKind::known_names().join(", ")
+        ),
+    };
+    let config = eval::EngineConfig {
+        backend: backend.into(),
+        workers: a
+            .get_usize("workers")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or_else(arco::util::pool::default_workers),
+        cache: !a.has_flag("no-cache"),
+        cache_capacity: a.get_usize("cache-cap").map_err(anyhow::Error::msg)?,
+        journal: a.get("journal").map(PathBuf::from),
+    };
+    let engine = Arc::new(eval::Engine::new(config)?);
+    let handle = eval::serve_measure(a.get("addr").unwrap(), Arc::clone(&engine))?;
+    // The address line is machine-read by fleet launch scripts (CI smoke):
+    // keep its format stable.
+    println!("serve-measure: listening on {}", handle.addr());
+    println!(
+        "serve-measure: backend={} workers={} fingerprint [{}]",
+        engine.backend_name(),
+        engine.workers(),
+        eval::Fingerprint::current().describe()
+    );
+    handle.wait();
+    Ok(())
+}
+
 fn cmd_info() -> anyhow::Result<()> {
     println!("arco {} — three-layer build info", env!("CARGO_PKG_VERSION"));
     let dir = arco::runtime::manifest::artifacts_dir();
@@ -305,8 +376,10 @@ fn cmd_info() -> anyhow::Result<()> {
         }
     }
     println!("simulator: VTA++ cycle model, default {:?}", arco::vta::VtaConfig::default());
+    println!("measurement fingerprint: {}", eval::Fingerprint::current().describe());
     println!(
-        "measurement backends: {} (select with --backend; --journal persists measurements)",
+        "measurement backends: {}, remote:host:port[,...] (select with --backend; \
+         --journal persists measurements; `arco serve-measure` exposes a shard)",
         BackendKind::known_names().join(", ")
     );
     Ok(())

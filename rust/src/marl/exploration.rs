@@ -170,7 +170,12 @@ impl MarlExplorer {
             self.last_stats = self.mappo.update(backend, &trajs, p.ppo_epochs, &mut self.rng);
         }
 
-        visited.into_values().collect()
+        // Deterministic order (flat index): HashMap iteration varies per
+        // process, and Confidence Sampling downstream is order-sensitive —
+        // two processes must plan identically from identical observations.
+        let mut v: Vec<(usize, Visited)> = visited.into_iter().collect();
+        v.sort_by_key(|&(k, _)| k);
+        v.into_iter().map(|(_, vis)| vis).collect()
     }
 
     /// Critic scores for a candidate set (used by Confidence Sampling).

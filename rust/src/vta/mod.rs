@@ -12,4 +12,4 @@ pub mod sim;
 
 pub use config::VtaConfig;
 pub use isa::{Buffer, Deps, Instr, Op, Unit};
-pub use sim::{simulate, SimError, SimReport};
+pub use sim::{simulate, SimError, SimReport, CYCLE_MODEL_VERSION};

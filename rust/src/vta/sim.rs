@@ -19,6 +19,13 @@ use super::config::VtaConfig;
 use super::isa::{stream_stats, Instr, Op, Unit};
 use std::collections::VecDeque;
 
+/// Version of the cycle model's latency equations. Bump this whenever a
+/// change to the simulator (or to the lowering it measures) can alter
+/// reported cycle counts: measurement journals and remote-measurement
+/// handshakes embed it in their fingerprint so numbers from different
+/// models are never silently mixed.
+pub const CYCLE_MODEL_VERSION: u32 = 1;
+
 /// Fixed pipeline-fill overhead of a GEMM instruction (array depth).
 pub const GEMM_PIPELINE_FILL: u64 = 16;
 /// Fixed start overhead of an ALU instruction.

@@ -16,7 +16,7 @@ fn space() -> ConfigSpace {
 }
 
 fn tmp_journal(tag: &str) -> PathBuf {
-    PathBuf::from("target/tmp").join(format!("eval_engine_{tag}_{}.json", std::process::id()))
+    PathBuf::from("target/tmp").join(format!("eval_engine_{tag}_{}.jsonl", std::process::id()))
 }
 
 #[test]
@@ -48,7 +48,7 @@ fn engine_matches_raw_measure_point_on_random_sample() {
     let mut points: Vec<PointConfig> = (0..40).map(|_| s.random_point(&mut rng)).collect();
     points.push(points[3].clone()); // duplicate on purpose
     for workers in [1, 4] {
-        let engine = Engine::new(EngineConfig { workers, ..Default::default() });
+        let engine = Engine::new(EngineConfig { workers, ..Default::default() }).unwrap();
         let batch = engine.measure_batch(&s, &points);
         assert_eq!(batch.len(), points.len());
         for (p, r) in points.iter().zip(&batch) {
@@ -61,10 +61,11 @@ fn engine_matches_raw_measure_point_on_random_sample() {
 fn analytical_backend_serves_the_same_interface() {
     let s = space();
     let engine = Engine::new(EngineConfig {
-        backend: BackendKind::Analytical,
+        backend: BackendKind::Analytical.into(),
         workers: 2,
         ..Default::default()
-    });
+    })
+    .unwrap();
     assert_eq!(engine.backend_name(), "analytical");
     let mut rng = Pcg32::seeded(23);
     let points: Vec<PointConfig> = (0..30).map(|_| s.random_point(&mut rng)).collect();
@@ -95,14 +96,15 @@ fn journal_reuses_measurements_across_engines() {
         workers: 2,
         journal: Some(path.clone()),
         ..Default::default()
-    });
+    })
+    .unwrap();
     let results = first.measure_batch(&s, &points);
     let uniques = first.stats().simulations;
     assert!(uniques > 0);
     drop(first);
 
-    // The journal on disk round-trips through util::json.
-    let journal = Journal::open(&path);
+    // The JSONL journal on disk round-trips (read-only: no writer lock).
+    let journal = Journal::open_read_only(&path).unwrap();
     assert_eq!(journal.len(), uniques);
     for e in journal.entries() {
         assert_eq!(e.backend, "vta-sim");
@@ -115,11 +117,13 @@ fn journal_reuses_measurements_across_engines() {
         workers: 2,
         journal: Some(path.clone()),
         ..Default::default()
-    });
+    })
+    .unwrap();
     assert_eq!(second.stats().journal_seeded, uniques);
     let replay = second.measure_batch(&s, &points);
     assert_eq!(replay, results);
     assert_eq!(second.stats().simulations, 0, "journal must make the rerun free");
+    drop(second);
     let _ = std::fs::remove_file(&path);
 }
 

@@ -1,0 +1,259 @@
+//! Integration tests for the sharded measurement service: the
+//! `serve-measure` server + `remote` backend loop, in-flight coalescing
+//! under concurrent batches, fingerprint safety on the wire, and recovery
+//! when a shard dies mid-batch.
+
+use arco::baselines::RandomSearch;
+use arco::eval::proto::{read_frame, write_frame, Request, Response, PROTO_VERSION};
+use arco::eval::{
+    serve_measure_local, AnalyticalBackend, BackendKind, BackendSpec, Engine, EngineConfig,
+    Fingerprint, MeasureBackend, RemoteBackend,
+};
+use arco::space::ConfigSpace;
+use arco::tuner::{tune_task_with, TuneBudget};
+use arco::util::rng::Pcg32;
+use arco::workload::Conv2dTask;
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+fn space() -> ConfigSpace {
+    ConfigSpace::for_task(&Conv2dTask::new(1, 32, 28, 28, 32, 3, 3, 1, 1), true)
+}
+
+fn local_engine(kind: BackendKind, workers: usize) -> Arc<Engine> {
+    Arc::new(
+        Engine::new(EngineConfig { backend: kind.into(), workers, ..Default::default() })
+            .unwrap(),
+    )
+}
+
+/// A fleet member that answers the handshake with `fp` but drops every
+/// connection at the first non-ping request — a shard that dies mid-batch.
+fn flaky_shard(fp: Fingerprint) -> std::net::SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            let Ok(stream) = conn else { continue };
+            let fp = fp.clone();
+            std::thread::spawn(move || {
+                let Ok(clone) = stream.try_clone() else { return };
+                let mut reader = BufReader::new(clone);
+                let mut writer = BufWriter::new(stream);
+                while let Ok(Some(frame)) = read_frame(&mut reader) {
+                    match Request::from_json(&frame) {
+                        Some(Request::Ping) => {
+                            let pong = Response::Pong {
+                                backend: "vta-sim".to_string(),
+                                proto: PROTO_VERSION,
+                                fingerprint: fp.clone(),
+                            };
+                            if write_frame(&mut writer, &pong.to_json()).is_err() {
+                                return;
+                            }
+                        }
+                        _ => return, // connection dropped without a reply
+                    }
+                }
+            });
+        }
+    });
+    addr
+}
+
+#[test]
+fn remote_backend_matches_local_engine() {
+    let server = serve_measure_local(local_engine(BackendKind::VtaSim, 2)).unwrap();
+    let addr = server.addr().to_string();
+
+    let s = space();
+    let mut rng = Pcg32::seeded(33);
+    let mut points: Vec<_> = (0..20).map(|_| s.random_point(&mut rng)).collect();
+    points.push(points[2].clone()); // duplicate crosses the wire once
+
+    let remote = Engine::new(EngineConfig {
+        backend: BackendSpec::Remote(vec![addr]),
+        workers: 2,
+        ..Default::default()
+    })
+    .unwrap();
+    assert_eq!(remote.backend_name(), "vta-sim");
+    let got = remote.measure_batch(&s, &points);
+    for (p, r) in points.iter().zip(&got) {
+        assert_eq!(*r, arco::codegen::measure_point(&s, p), "remote diverged from oracle");
+    }
+    // The duplicate was deduplicated client-side...
+    assert_eq!(remote.stats().simulations, 20);
+    // ...and the server engine simulated exactly the unique points.
+    assert_eq!(server.engine().stats().simulations, 20);
+    server.shutdown();
+}
+
+#[test]
+fn remote_tuning_run_matches_in_process() {
+    // The acceptance property behind the CI smoke job: the same seeded
+    // search through a remote fleet produces the same best point as the
+    // in-process backend.
+    let server = serve_measure_local(local_engine(BackendKind::VtaSim, 2)).unwrap();
+    let addr = server.addr().to_string();
+    let s = space();
+    let budget = TuneBudget { total_measurements: 32, batch: 8, workers: 2, ..Default::default() };
+
+    let local = Engine::vta_sim(2);
+    let mut planner = RandomSearch::new(s.clone(), 99);
+    let local_out = tune_task_with(&local, &s, &mut planner, budget);
+
+    let remote = Engine::new(EngineConfig {
+        backend: BackendSpec::Remote(vec![addr]),
+        workers: 2,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut planner = RandomSearch::new(s.clone(), 99);
+    let remote_out = tune_task_with(&remote, &s, &mut planner, budget);
+
+    assert_eq!(local_out.best.seconds, remote_out.best.seconds);
+    assert_eq!(local_out.best.cycles, remote_out.best.cycles);
+    assert_eq!(local_out.measurements, remote_out.measurements);
+    server.shutdown();
+}
+
+#[test]
+fn shard_death_mid_batch_redispatches_to_survivors() {
+    let server = serve_measure_local(local_engine(BackendKind::VtaSim, 2)).unwrap();
+    let real = server.addr().to_string();
+    let flaky = flaky_shard(Fingerprint::current()).to_string();
+
+    // Both shards pass the handshake; the flaky one dies on its first
+    // measure chunk and its points must land on the survivor.
+    let backend = RemoteBackend::connect(&[flaky, real]).unwrap();
+    assert_eq!(backend.alive_count(), 2);
+
+    let s = space();
+    let mut rng = Pcg32::seeded(55);
+    let points: Vec<_> = (0..10).map(|_| s.random_point(&mut rng)).collect();
+    let got = backend.measure_many(&s, &points, 2);
+    for (p, r) in points.iter().zip(&got) {
+        assert_eq!(*r, arco::codegen::measure_point(&s, p), "re-dispatch corrupted results");
+    }
+    assert_eq!(backend.alive_count(), 1, "the dead shard must be marked");
+    server.shutdown();
+}
+
+#[test]
+fn fingerprint_mismatch_is_refused_on_the_wire() {
+    let mut fp = Fingerprint::current();
+    fp.cycle_model += 1;
+    let addr = flaky_shard(fp).to_string();
+    let err = RemoteBackend::connect(&[addr]).unwrap_err().to_string();
+    assert!(err.contains("different simulator"), "unexpected error: {err}");
+}
+
+#[test]
+fn protocol_error_paths_answer_instead_of_hanging() {
+    let server = serve_measure_local(local_engine(BackendKind::Analytical, 1)).unwrap();
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = BufWriter::new(stream);
+
+    // Handshake.
+    write_frame(&mut writer, &Request::Ping.to_json()).unwrap();
+    let pong = Response::from_json(&read_frame(&mut reader).unwrap().unwrap()).unwrap();
+    match pong {
+        Response::Pong { backend, proto, fingerprint } => {
+            assert_eq!(backend, "analytical");
+            assert_eq!(proto, PROTO_VERSION);
+            assert_eq!(fingerprint, Fingerprint::current());
+        }
+        other => panic!("expected pong, got {other:?}"),
+    }
+
+    // Unknown op → structured error, connection stays usable.
+    write_frame(&mut writer, &arco::util::json::Json::parse(r#"{"op":"selfdestruct"}"#).unwrap())
+        .unwrap();
+    match Response::from_json(&read_frame(&mut reader).unwrap().unwrap()).unwrap() {
+        Response::Error(_) => {}
+        other => panic!("expected error, got {other:?}"),
+    }
+
+    // A measure request with out-of-space values → structured error.
+    let s = space();
+    let bogus = Request::Measure { task: s.task, points: vec![vec![999; s.num_knobs()]] };
+    write_frame(&mut writer, &bogus.to_json()).unwrap();
+    match Response::from_json(&read_frame(&mut reader).unwrap().unwrap()).unwrap() {
+        Response::Error(e) => assert!(e.contains("skew"), "unexpected message: {e}"),
+        other => panic!("expected error, got {other:?}"),
+    }
+
+    // Stats op still answers on the same connection.
+    write_frame(&mut writer, &Request::Stats.to_json()).unwrap();
+    match Response::from_json(&read_frame(&mut reader).unwrap().unwrap()).unwrap() {
+        Response::Stats(stats) => assert!(stats.get("batches").is_some()),
+        other => panic!("expected stats, got {other:?}"),
+    }
+    server.shutdown();
+}
+
+/// An oracle that counts real measurements (and is slow enough for two
+/// batches to overlap).
+struct CountingBackend {
+    calls: Arc<AtomicUsize>,
+}
+
+impl MeasureBackend for CountingBackend {
+    fn name(&self) -> &'static str {
+        "counting"
+    }
+    fn measure(
+        &self,
+        space: &ConfigSpace,
+        point: &arco::space::PointConfig,
+    ) -> arco::eval::MeasureResult {
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        std::thread::sleep(Duration::from_millis(3));
+        AnalyticalBackend.measure(space, point)
+    }
+}
+
+#[test]
+fn concurrent_batches_coalesce_instead_of_double_measuring() {
+    let s = space();
+    let mut rng = Pcg32::seeded(77);
+    let mut points = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    while points.len() < 12 {
+        let p = s.random_point(&mut rng);
+        if seen.insert(arco::eval::PointKey::of(&s, &p)) {
+            points.push(p);
+        }
+    }
+
+    let calls = Arc::new(AtomicUsize::new(0));
+    let engine =
+        Engine::with_backend(Box::new(CountingBackend { calls: Arc::clone(&calls) }), 4, true);
+    let barrier = Barrier::new(2);
+    let (a, b) = std::thread::scope(|scope| {
+        let ha = scope.spawn(|| {
+            barrier.wait();
+            engine.measure_batch(&s, &points)
+        });
+        let hb = scope.spawn(|| {
+            barrier.wait();
+            engine.measure_batch(&s, &points)
+        });
+        (ha.join().unwrap(), hb.join().unwrap())
+    });
+    assert_eq!(a, b);
+    // The at-most-once guarantee under concurrency: 24 requested points,
+    // 12 unique — the backend must have been paid exactly 12 times, with
+    // the second batch served by coalescing and/or the cache.
+    assert_eq!(calls.load(Ordering::SeqCst), 12, "a point was double-measured");
+    let st = engine.stats();
+    assert_eq!(st.simulations, 12);
+    assert_eq!(st.coalesced + st.cache_hits, 12);
+    assert_eq!(st.batch_dedup, 0);
+}

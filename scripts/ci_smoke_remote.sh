@@ -1,0 +1,66 @@
+#!/usr/bin/env bash
+# End-to-end measurement-fleet smoke: the same seeded compare run must
+# produce identical inference numbers through the in-process backend and
+# through a loopback `serve-measure` shard — for both the analytical proxy
+# and the vta-sim cycle oracle. Wall-clock outputs (compile time)
+# legitimately differ between runs, so the diff targets
+# results/table6_inference.md, which is a pure function of the
+# measurements.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=${ARCO_BIN:-target/release/arco}
+SERVE_LOG=$(mktemp)
+SERVER_PID=0
+cleanup() {
+    # Never `kill 0` (the whole process group) when no server is running.
+    if [ "$SERVER_PID" -ne 0 ]; then
+        kill "$SERVER_PID" 2>/dev/null || true
+    fi
+    rm -f "$SERVE_LOG"
+}
+trap cleanup EXIT
+
+run_compare() {
+    "$BIN" compare --models alexnet --frameworks autotvm \
+        --config configs/smoke.json --quick --seed 7 --workers 2 "$@"
+}
+
+smoke_backend() {
+    local backend=$1
+
+    echo "== [$backend] pass 1: in-process =="
+    run_compare --backend "$backend"
+    cp results/table6_inference.md "/tmp/arco_t6_local_$backend.md"
+
+    echo "== [$backend] starting serve-measure shard on loopback =="
+    : >"$SERVE_LOG"
+    "$BIN" serve-measure --addr 127.0.0.1:0 --backend "$backend" --workers 2 \
+        >"$SERVE_LOG" 2>&1 &
+    SERVER_PID=$!
+
+    local addr=""
+    for _ in $(seq 1 100); do
+        addr=$(sed -n 's/^serve-measure: listening on //p' "$SERVE_LOG" | head -n1)
+        [ -n "$addr" ] && break
+        kill -0 "$SERVER_PID" 2>/dev/null || { cat "$SERVE_LOG"; echo "server died"; exit 1; }
+        sleep 0.1
+    done
+    [ -n "$addr" ] || { cat "$SERVE_LOG"; echo "server never reported its address"; exit 1; }
+    echo "[$backend] shard at $addr"
+
+    echo "== [$backend] pass 2: same run through --backend remote:$addr =="
+    run_compare --backend "remote:$addr"
+    cp results/table6_inference.md "/tmp/arco_t6_remote_$backend.md"
+
+    kill "$SERVER_PID" 2>/dev/null || true
+    wait "$SERVER_PID" 2>/dev/null || true
+    SERVER_PID=0
+
+    diff -u "/tmp/arco_t6_local_$backend.md" "/tmp/arco_t6_remote_$backend.md"
+    echo "[$backend] ok: remote fleet measurements identical to in-process"
+}
+
+smoke_backend analytical
+smoke_backend vta-sim
+echo "smoke ok: remote == in-process for both backends"
