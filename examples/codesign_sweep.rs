@@ -50,7 +50,7 @@ fn best_sw_for_hw(
         })
         .collect();
     let mut best: Option<(f64, String)> = None;
-    for (p, m) in engine.measure_paired(&space, plan) {
+    for (p, m) in engine.measure_paired(&space, plan).pairs {
         if m.valid && best.as_ref().map_or(true, |(s, _)| m.seconds < *s) {
             best = Some((m.seconds, space.render(&p)));
         }

@@ -222,7 +222,7 @@ mod tests {
         let engine = Engine::vta_sim(2);
         let mut a = AutoTvm::new(s.clone(), AutoTvmParams::quick(), 2);
         let plan = a.plan(32);
-        let results: Vec<(PointConfig, MeasureResult)> = engine.measure_paired(&s, plan);
+        let results: Vec<(PointConfig, MeasureResult)> = engine.measure_paired(&s, plan).pairs;
         a.observe(&results);
         assert!(a.model.is_trained());
         assert!(a.diag().contains("data=32"));
@@ -239,7 +239,7 @@ mod tests {
             for p in &plan {
                 assert!(all_keys.insert(s.flat_index(p)), "config planned twice");
             }
-            a.observe(&engine.measure_paired(&s, plan));
+            a.observe(&engine.measure_paired(&s, plan).pairs);
         }
         // Nothing was planned twice, so the engine paid for every point.
         assert_eq!(engine.stats().simulations, all_keys.len());

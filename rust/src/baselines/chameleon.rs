@@ -128,9 +128,7 @@ impl Chameleon {
         let knob = (action - 1) / 2;
         let delta: i64 = if action % 2 == 1 { -1 } else { 1 };
         let mut q = p.clone();
-        if !self.space.hardware_tunable
-            && self.space.knobs[knob].owner == crate::space::KnobOwner::Hardware
-        {
+        if self.space.knob_frozen(knob) {
             return q;
         }
         let arity = self.space.knobs[knob].len() as i64;
@@ -374,7 +372,7 @@ mod tests {
         // Cold batch.
         let plan = c.plan(16);
         assert_eq!(plan.len(), 16);
-        c.observe(&engine.measure_paired(&s, plan));
+        c.observe(&engine.measure_paired(&s, plan).pairs);
         assert!(c.model.is_trained());
         // Warm batch uses RL + clustering.
         let plan2 = c.plan(16);
@@ -390,7 +388,7 @@ mod tests {
         let mut c = Chameleon::new(s.clone(), ChameleonParams::quick(), 3);
         // Seed the model so exploration runs.
         let plan = c.plan(16);
-        c.observe(&engine.measure_paired(&s, plan));
+        c.observe(&engine.measure_paired(&s, plan).pairs);
         let before = c.policy.flatten();
         let _ = c.adaptive_exploration();
         assert_ne!(c.policy.flatten(), before, "PPO updates must move the policy");
@@ -407,7 +405,7 @@ mod tests {
                 let (hw, _) = s.decode(p);
                 assert_eq!((hw.batch, hw.block_in, hw.block_out), (1, 16, 16));
             }
-            c.observe(&engine.measure_paired(&s, plan));
+            c.observe(&engine.measure_paired(&s, plan).pairs);
         }
     }
 }

@@ -13,7 +13,7 @@ use crate::costmodel::GbtParams;
 use crate::eval::{BackendKind, BackendSpec, EngineConfig};
 use crate::marl::exploration::ExploreParams;
 use crate::marl::strategy::ArcoParams;
-use crate::tuner::TuneBudget;
+use crate::tuner::{DriverOptions, TuneBudget};
 use crate::util::json::{read_json_file, Json};
 use std::path::{Path, PathBuf};
 
@@ -65,6 +65,9 @@ pub struct RunConfig {
     pub autotvm: AutoTvmParams,
     pub chameleon: ChameleonParams,
     pub eval: EvalSettings,
+    /// Comparison-driver scheduling (serial vs concurrent multi-tenant,
+    /// shared equal-budget ledger). CLI `--shared-budget` turns both on.
+    pub driver: DriverOptions,
     pub seed: u64,
 }
 
@@ -76,6 +79,7 @@ impl Default for RunConfig {
             autotvm: AutoTvmParams::default(),
             chameleon: ChameleonParams::default(),
             eval: EvalSettings::default(),
+            driver: DriverOptions::default(),
             seed: 0xA2C0,
         }
     }
@@ -159,6 +163,11 @@ impl RunConfig {
                 self.eval.journal = Some(PathBuf::from(path));
             }
         }
+        if let Some(d) = doc.get("driver") {
+            self.driver.concurrent = d.get_bool("concurrent").unwrap_or(self.driver.concurrent);
+            self.driver.shared_budget =
+                d.get_bool("shared_budget").unwrap_or(self.driver.shared_budget);
+        }
         if let Some(s) = doc.get("seed").and_then(Json::as_usize) {
             self.seed = s as u64;
         }
@@ -211,6 +220,22 @@ mod tests {
         assert!(!c.eval.cache);
         assert_eq!(c.eval.journal.as_deref(), Some(Path::new("results/journal.json")));
         assert_eq!(c.seed, 7);
+    }
+
+    #[test]
+    fn driver_options_overlay() {
+        let mut c = RunConfig::default();
+        assert!(!c.driver.concurrent);
+        assert!(!c.driver.shared_budget);
+        c.apply_json(
+            &Json::parse(r#"{"driver": {"concurrent": true, "shared_budget": true}}"#).unwrap(),
+        );
+        assert!(c.driver.concurrent);
+        assert!(c.driver.shared_budget);
+        // Partial overlay leaves the other knob alone.
+        c.apply_json(&Json::parse(r#"{"driver": {"concurrent": false}}"#).unwrap());
+        assert!(!c.driver.concurrent);
+        assert!(c.driver.shared_budget);
     }
 
     #[test]

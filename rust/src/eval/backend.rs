@@ -3,6 +3,7 @@
 use crate::codegen::{measure_point, MeasureResult};
 use crate::marl::env::memory_overflow_ratio;
 use crate::space::{ConfigSpace, PointConfig};
+use crate::util::json::Json;
 use crate::util::pool::parallel_map;
 use crate::util::stats::ceil_div;
 use crate::vta::area::total_area_mm2;
@@ -31,6 +32,36 @@ pub trait MeasureBackend: Send + Sync {
         workers: usize,
     ) -> Vec<MeasureResult> {
         parallel_map(points, workers, |_, p| self.measure(space, p))
+    }
+
+    /// Like [`measure_many`](Self::measure_many), but also reports per
+    /// point whether this backend *freshly* computed the number (`true`)
+    /// or answered it from shared state someone else already paid for —
+    /// e.g. a fleet shard's cache (`false`). Local backends hold no shared
+    /// state, so the default reports everything fresh.
+    fn measure_many_traced(
+        &self,
+        space: &ConfigSpace,
+        points: &[PointConfig],
+        workers: usize,
+    ) -> (Vec<MeasureResult>, Vec<bool>) {
+        let results = self.measure_many(space, points, workers);
+        let fresh = vec![true; results.len()];
+        (results, fresh)
+    }
+
+    /// How many measurement batches this backend can usefully serve
+    /// concurrently. A local backend already saturates its worker pool
+    /// with one batch; a remote fleet can serve one batch per alive shard.
+    /// The multi-tenant dispatcher sizes its admission slots from this.
+    fn concurrent_batch_capacity(&self) -> usize {
+        1
+    }
+
+    /// Remote fleets: one `stats` snapshot per alive shard (address,
+    /// free-form counters object). Local backends have no fleet.
+    fn fleet_stats(&self) -> Vec<(String, Json)> {
+        Vec::new()
     }
 }
 

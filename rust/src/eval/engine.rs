@@ -3,6 +3,7 @@
 use super::backend::{BackendKind, BackendSpec, MeasureBackend};
 use super::cache::{CacheStats, MeasureCache, PointKey};
 use super::journal::Journal;
+use super::proto::Origin;
 use crate::codegen::MeasureResult;
 use crate::space::{ConfigSpace, PointConfig};
 use crate::util::json::Json;
@@ -47,13 +48,22 @@ impl Default for EngineConfig {
 pub struct EngineStats {
     /// Batches served.
     pub batches: usize,
-    /// Backend invocations actually paid for (unique, uncached points).
+    /// Simulations actually paid for: unique uncached points the backend
+    /// freshly ran (a remote shard answering from its own cache counts
+    /// under [`shard_cached`](Self::shard_cached) instead).
     pub simulations: usize,
     /// Points answered by intra-batch deduplication.
     pub batch_dedup: usize,
     /// Points answered by waiting on another batch's in-flight
     /// measurement instead of re-measuring.
     pub coalesced: usize,
+    /// Points a remote fleet answered from shard-side shared state
+    /// (another tenant or an earlier run paid for the simulation).
+    pub shard_cached: usize,
+    /// Batches currently being measured (a queue-depth gauge: the
+    /// `serve-measure` `stats` op exposes it so fleet clients can see how
+    /// loaded each shard is).
+    pub active_batches: usize,
     /// Cache lookups answered from memory.
     pub cache_hits: usize,
     /// Cache lookups that missed.
@@ -74,6 +84,8 @@ impl EngineStats {
             ("simulations", Json::num(self.simulations as f64)),
             ("batch_dedup", Json::num(self.batch_dedup as f64)),
             ("coalesced", Json::num(self.coalesced as f64)),
+            ("shard_cached", Json::num(self.shard_cached as f64)),
+            ("active_batches", Json::num(self.active_batches as f64)),
             ("cache_hits", Json::num(self.cache_hits as f64)),
             ("cache_misses", Json::num(self.cache_misses as f64)),
             ("cache_entries", Json::num(self.cache_entries as f64)),
@@ -127,6 +139,18 @@ impl InflightCell {
                 CellState::Pending => guard = self.ready.wait(guard).unwrap(),
             }
         }
+    }
+}
+
+/// Decrements a gauge on drop, so the `active_batches` count survives a
+/// panicking batch (the engine explicitly anticipates backend panics and
+/// recovers via [`ClaimGuard`]; a long-lived shard must not report a
+/// phantom busy batch forever after).
+struct GaugeGuard<'a>(&'a AtomicUsize);
+
+impl Drop for GaugeGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
@@ -186,6 +210,42 @@ pub struct Engine {
     simulations: AtomicUsize,
     batch_dedup: AtomicUsize,
     coalesced: AtomicUsize,
+    shard_cached: AtomicUsize,
+    active: AtomicUsize,
+}
+
+/// Results of one batch plus per-point [`Origin`] provenance.
+#[derive(Debug, Clone)]
+pub struct TracedBatch {
+    /// Measurement results in input order.
+    pub results: Vec<MeasureResult>,
+    /// Where each result came from, parallel to `results`.
+    pub origins: Vec<Origin>,
+}
+
+/// A measured plan: the `(point, result)` pairs that
+/// [`crate::tuner::Strategy::observe`] consumes, plus per-point provenance
+/// for budget accounting.
+#[derive(Debug, Clone)]
+pub struct PairedBatch {
+    /// `(planned point, its result)` in plan order.
+    pub pairs: Vec<(PointConfig, MeasureResult)>,
+    /// Where each result came from, parallel to `pairs`.
+    pub origins: Vec<Origin>,
+}
+
+impl PairedBatch {
+    /// Points whose simulation actually ran for this batch.
+    pub fn fresh(&self) -> usize {
+        self.origins.iter().filter(|o| o.is_fresh()).count()
+    }
+
+    /// Points served from shared state (cache, in-batch dedup, coalescing,
+    /// fleet shard caches) — debited like fresh ones under the
+    /// equal-budget protocol, but free of simulator wall-clock.
+    pub fn cache_served(&self) -> usize {
+        self.origins.len() - self.fresh()
+    }
 }
 
 impl Engine {
@@ -262,6 +322,8 @@ impl Engine {
             simulations: AtomicUsize::new(0),
             batch_dedup: AtomicUsize::new(0),
             coalesced: AtomicUsize::new(0),
+            shard_cached: AtomicUsize::new(0),
+            active: AtomicUsize::new(0),
         }
     }
 
@@ -285,18 +347,35 @@ impl Engine {
         space: &ConfigSpace,
         points: &[PointConfig],
     ) -> Vec<MeasureResult> {
+        self.measure_batch_traced(space, points).results
+    }
+
+    /// [`measure_batch`](Self::measure_batch), plus per-point [`Origin`]
+    /// provenance — the hit/miss evidence budget ledgers need to tell
+    /// freshly-simulated points from cache-served ones.
+    pub fn measure_batch_traced(
+        &self,
+        space: &ConfigSpace,
+        points: &[PointConfig],
+    ) -> TracedBatch {
         let n = points.len();
         if n == 0 {
-            return Vec::new();
+            return TracedBatch { results: Vec::new(), origins: Vec::new() };
         }
         self.batches.fetch_add(1, Ordering::Relaxed);
+        self.active.fetch_add(1, Ordering::Relaxed);
+        let _active = GaugeGuard(&self.active);
         let keys: Vec<PointKey> = points.iter().map(|p| PointKey::of(space, p)).collect();
         let mut out: Vec<Option<MeasureResult>> = vec![None; n];
+        let mut origins: Vec<Origin> = vec![Origin::Fresh; n];
 
         // 1. Serve whatever the cache already knows.
         if let Some(cache) = &self.cache {
-            for (slot, key) in out.iter_mut().zip(&keys) {
+            for ((slot, origin), key) in out.iter_mut().zip(origins.iter_mut()).zip(&keys) {
                 *slot = cache.get(key);
+                if slot.is_some() {
+                    *origin = Origin::Cached;
+                }
             }
         }
 
@@ -329,6 +408,7 @@ impl Engine {
                             // Hit-only: the miss was already counted above.
                             if let Some(r) = cache.get_hit_only(&keys[i]) {
                                 out[i] = Some(r);
+                                origins[i] = Origin::Cached;
                                 continue;
                             }
                         }
@@ -349,9 +429,15 @@ impl Engine {
             armed: true,
         };
         let miss_points: Vec<PointConfig> = uniq.iter().map(|&i| points[i].clone()).collect();
-        let results: Vec<MeasureResult> =
-            self.backend.measure_many(space, &miss_points, self.workers);
-        self.simulations.fetch_add(results.len(), Ordering::Relaxed);
+        let (results, fresh_flags): (Vec<MeasureResult>, Vec<bool>) =
+            self.backend.measure_many_traced(space, &miss_points, self.workers);
+        // Only freshly-run points count as simulations; a warm fleet shard
+        // answering from its own cache did not re-simulate (those are
+        // tallied under `shard_cached` instead of being double-counted).
+        self.simulations
+            .fetch_add(fresh_flags.iter().filter(|&&f| f).count(), Ordering::Relaxed);
+        self.shard_cached
+            .fetch_add(fresh_flags.iter().filter(|&&f| !f).count(), Ordering::Relaxed);
         self.batch_dedup.fetch_add(alias.len(), Ordering::Relaxed);
 
         // 4. Publish: cache and journal first (so late arrivals hit the
@@ -360,6 +446,9 @@ impl Engine {
             let r = results[slot];
             self.publish_one(&keys[i], r);
             out[i] = Some(r);
+            if !fresh_flags[slot] {
+                origins[i] = Origin::ShardCached;
+            }
         }
         {
             let mut inflight = self.inflight.lock().unwrap();
@@ -379,22 +468,32 @@ impl Engine {
         self.coalesced.fetch_add(follows.len(), Ordering::Relaxed);
         let mut recovered = false;
         for (i, cell) in follows {
-            let r = cell.wait().unwrap_or_else(|| {
-                recovered = true;
-                self.simulations.fetch_add(1, Ordering::Relaxed);
-                let r = self.backend.measure(space, &points[i]);
-                self.publish_one(&keys[i], r);
-                r
-            });
-            out[i] = Some(r);
+            match cell.wait() {
+                Some(r) => {
+                    out[i] = Some(r);
+                    origins[i] = Origin::Coalesced;
+                }
+                None => {
+                    recovered = true;
+                    self.simulations.fetch_add(1, Ordering::Relaxed);
+                    let r = self.backend.measure(space, &points[i]);
+                    self.publish_one(&keys[i], r);
+                    out[i] = Some(r);
+                    origins[i] = Origin::Fresh;
+                }
+            }
         }
         for (i, slot) in alias {
             out[i] = Some(results[slot]);
+            origins[i] = Origin::Dedup;
         }
         if !uniq.is_empty() || recovered {
             self.flush_journal();
         }
-        out.into_iter().map(|r| r.expect("every point measured")).collect()
+        TracedBatch {
+            results: out.into_iter().map(|r| r.expect("every point measured")).collect(),
+            origins,
+        }
     }
 
     /// Make one fresh measurement visible to every future lookup: the
@@ -414,15 +513,32 @@ impl Engine {
         self.measure_batch(space, std::slice::from_ref(point))[0]
     }
 
-    /// Measure a planned batch and pair results back with their points —
-    /// the exact shape [`crate::tuner::Strategy::observe`] consumes.
-    pub fn measure_paired(
-        &self,
-        space: &ConfigSpace,
-        points: Vec<PointConfig>,
-    ) -> Vec<(PointConfig, MeasureResult)> {
-        let results = self.measure_batch(space, &points);
-        points.into_iter().zip(results).collect()
+    /// Measure a planned batch and pair results back with their points.
+    /// The returned [`PairedBatch`] carries the `(point, result)` pairs
+    /// [`crate::tuner::Strategy::observe`] consumes plus per-point
+    /// [`Origin`] provenance, so budget ledgers can distinguish fresh
+    /// simulations from cache-served answers.
+    pub fn measure_paired(&self, space: &ConfigSpace, points: Vec<PointConfig>) -> PairedBatch {
+        let traced = self.measure_batch_traced(space, &points);
+        PairedBatch {
+            pairs: points.into_iter().zip(traced.results).collect(),
+            origins: traced.origins,
+        }
+    }
+
+    /// How many batches the backend can usefully serve at once (local:
+    /// one; remote fleet: one per alive shard). The multi-tenant
+    /// dispatcher re-reads this between batches, so shard death and
+    /// revival shrink or grow admission on the fly.
+    pub fn concurrent_batch_capacity(&self) -> usize {
+        self.backend.concurrent_batch_capacity().max(1)
+    }
+
+    /// Per-shard `stats` snapshots when the backend is a remote fleet
+    /// (empty for local backends) — the queue depths behind the
+    /// dispatcher's scheduling diagnostics.
+    pub fn fleet_stats(&self) -> Vec<(String, Json)> {
+        self.backend.fleet_stats()
     }
 
     /// Persist any journal entries recorded since the last flush. Failures
@@ -447,6 +563,8 @@ impl Engine {
             simulations: self.simulations.load(Ordering::Relaxed),
             batch_dedup: self.batch_dedup.load(Ordering::Relaxed),
             coalesced: self.coalesced.load(Ordering::Relaxed),
+            shard_cached: self.shard_cached.load(Ordering::Relaxed),
+            active_batches: self.active.load(Ordering::Relaxed),
             cache_hits: cs.hits,
             cache_misses: cs.misses,
             cache_entries: cs.entries,
@@ -459,12 +577,13 @@ impl Engine {
     pub fn summary(&self) -> String {
         let s = self.stats();
         format!(
-            "backend={} workers={} batches={} simulations={} cache_hits={} batch_dedup={} \
-             coalesced={} evictions={} journal_seeded={}",
+            "backend={} workers={} batches={} simulations={} shard_cached={} cache_hits={} \
+             batch_dedup={} coalesced={} evictions={} journal_seeded={}",
             self.backend_name(),
             self.workers,
             s.batches,
             s.simulations,
+            s.shard_cached,
             s.cache_hits,
             s.batch_dedup,
             s.coalesced,
@@ -565,6 +684,42 @@ mod tests {
             e.measure_batch(&s, &batch);
         }
         assert!(e.inflight.lock().unwrap().is_empty(), "in-flight registry must drain");
+    }
+
+    #[test]
+    fn traced_origins_classify_fresh_dedup_and_cached() {
+        let s = space();
+        let e = Engine::vta_sim(2);
+        let p = s.default_point();
+        let mut rng = Pcg32::seeded(5);
+        let q = loop {
+            let q = s.random_point(&mut rng);
+            if PointKey::of(&s, &q) != PointKey::of(&s, &p) {
+                break q;
+            }
+        };
+        let first = e.measure_batch_traced(&s, &[p.clone(), p.clone()]);
+        assert_eq!(first.origins, vec![Origin::Fresh, Origin::Dedup]);
+        let second = e.measure_batch_traced(&s, &[p.clone(), q.clone()]);
+        assert_eq!(second.origins, vec![Origin::Cached, Origin::Fresh]);
+        assert_eq!(e.stats().shard_cached, 0);
+        assert_eq!(e.stats().active_batches, 0, "gauge must drain");
+    }
+
+    #[test]
+    fn paired_batch_reports_provenance_counts() {
+        let s = space();
+        let e = Engine::vta_sim(2);
+        let p = s.default_point();
+        let a = e.measure_paired(&s, vec![p.clone(), p.clone()]);
+        assert_eq!(a.pairs.len(), 2);
+        assert_eq!(a.origins.len(), 2);
+        assert_eq!((a.fresh(), a.cache_served()), (1, 1));
+        let b = e.measure_paired(&s, vec![p.clone()]);
+        assert_eq!((b.fresh(), b.cache_served()), (0, 1));
+        for ((point, result), _origin) in b.pairs.iter().zip(&b.origins) {
+            assert_eq!(*result, crate::codegen::measure_point(&s, point));
+        }
     }
 
     #[test]

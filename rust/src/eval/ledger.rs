@@ -1,0 +1,460 @@
+//! Shared measurement-budget accounting for the paper's equal-budget
+//! protocol, plus the queue-aware dispatcher that keeps concurrent tuning
+//! jobs from monopolizing a measurement fleet.
+//!
+//! The paper's comparisons (Figs. 5–7, Table 6) are only meaningful when
+//! every framework spends the *same* per-task measurement budget. The
+//! [`BudgetLedger`] sits between the tuning loop and the
+//! [`Engine`](super::Engine) and makes that protocol enforceable:
+//!
+//! - Before a job measures a batch it must [`charge`](BudgetLedger::charge)
+//!   its (framework, task) account; the ledger admits at most the remaining
+//!   allowance, so an over-planning strategy can never breach the budget.
+//! - After the batch returns, [`settle`](BudgetLedger::settle) records the
+//!   per-point [`Origin`] provenance: *fresh* points paid simulator time
+//!   somewhere, *cache-served* points were answered from shared state a
+//!   competing tenant (or an earlier batch) already paid for. Both are
+//!   debited identically — "measure once, charge everyone" — so budgets
+//!   stay comparable across frameworks while the run's wall-clock cost
+//!   collapses to the unique-point frontier. The modeled hardware cost of
+//!   a point is a pure function of its (deterministic) measurement result,
+//!   so every tenant that plans the same point is debited the same modeled
+//!   seconds regardless of who measured it first.
+//!
+//! The [`Dispatcher`] is the scheduling half: it admits at most
+//! `slots` measurement batches to the engine at once and serves waiting
+//! tenants strictly first-come-first-served. A tenant that just measured
+//! re-queues behind every waiting competitor, so concurrent (framework,
+//! task) jobs interleave batch-by-batch instead of one framework
+//! monopolizing the shards. The slot count tracks
+//! [`Engine::concurrent_batch_capacity`](super::Engine::concurrent_batch_capacity)
+//! — for a remote fleet, the number of alive `serve-measure` shards — so
+//! shard death shrinks admission and revival grows it again.
+
+use super::proto::Origin;
+use crate::util::json::Json;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+
+/// One (framework, task) account inside a [`BudgetLedger`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Account {
+    /// Measurement points debited (admitted by [`BudgetLedger::charge`]).
+    pub charged: usize,
+    /// Settled points whose simulation actually ran for this tenant.
+    pub fresh: usize,
+    /// Settled points answered from shared state (engine cache, in-batch
+    /// dedup, coalescing, fleet shard caches).
+    pub cache_served: usize,
+    /// Modeled hardware-measurement seconds debited. Identical for every
+    /// tenant that plans the same point, fresh or cache-served.
+    pub modeled_hw_secs: f64,
+}
+
+impl Account {
+    /// Points settled so far (equals `charged` once every admitted batch
+    /// has been measured and settled).
+    pub fn settled(&self) -> usize {
+        self.fresh + self.cache_served
+    }
+}
+
+/// Per-tenant debit snapshot inside [`LedgerStats`].
+#[derive(Debug, Clone)]
+pub struct TenantStats {
+    pub framework: String,
+    pub task: String,
+    pub account: Account,
+}
+
+/// Snapshot of every account, in deterministic (framework, task) order.
+#[derive(Debug, Clone)]
+pub struct LedgerStats {
+    /// The per-(framework, task) allowance the ledger enforces.
+    pub per_task_points: usize,
+    pub tenants: Vec<TenantStats>,
+}
+
+impl LedgerStats {
+    pub fn total_charged(&self) -> usize {
+        self.tenants.iter().map(|t| t.account.charged).sum()
+    }
+
+    pub fn total_fresh(&self) -> usize {
+        self.tenants.iter().map(|t| t.account.fresh).sum()
+    }
+
+    pub fn total_cache_served(&self) -> usize {
+        self.tenants.iter().map(|t| t.account.cache_served).sum()
+    }
+
+    /// One-line rendering for logs and CLI output.
+    pub fn summary(&self) -> String {
+        format!(
+            "budget={}/task tenants={} charged={} fresh={} cache_served={}",
+            self.per_task_points,
+            self.tenants.len(),
+            self.total_charged(),
+            self.total_fresh(),
+            self.total_cache_served()
+        )
+    }
+
+    /// Machine-readable rendering (reports, `compare.json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("per_task_points", Json::num(self.per_task_points as f64)),
+            (
+                "tenants",
+                Json::Arr(
+                    self.tenants
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("framework", Json::str(t.framework.clone())),
+                                ("task", Json::str(t.task.clone())),
+                                ("charged", Json::num(t.account.charged as f64)),
+                                ("fresh", Json::num(t.account.fresh as f64)),
+                                ("cache_served", Json::num(t.account.cache_served as f64)),
+                                ("modeled_hw_secs", Json::num(t.account.modeled_hw_secs)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Thread-safe shared budget: every (framework, task) tenant holds an
+/// account capped at `per_task_points` admitted measurements.
+pub struct BudgetLedger {
+    per_task_points: usize,
+    accounts: Mutex<BTreeMap<(String, String), Account>>,
+}
+
+impl BudgetLedger {
+    /// A ledger allowing each (framework, task) tenant `per_task_points`
+    /// measurements — the paper's Σb (Table 4/5).
+    pub fn new(per_task_points: usize) -> BudgetLedger {
+        BudgetLedger { per_task_points, accounts: Mutex::new(BTreeMap::new()) }
+    }
+
+    pub fn per_task_points(&self) -> usize {
+        self.per_task_points
+    }
+
+    /// Admit up to `points` measurements against (framework, task),
+    /// debiting the account. Returns how many were admitted: fewer than
+    /// requested when the allowance is nearly spent, zero once exhausted.
+    pub fn charge(&self, framework: &str, task: &str, points: usize) -> usize {
+        let mut accounts = self.accounts.lock().unwrap();
+        let account = accounts
+            .entry((framework.to_string(), task.to_string()))
+            .or_default();
+        let admitted = points.min(self.per_task_points.saturating_sub(account.charged));
+        account.charged += admitted;
+        admitted
+    }
+
+    /// Measurements (framework, task) may still admit.
+    pub fn remaining(&self, framework: &str, task: &str) -> usize {
+        self.per_task_points.saturating_sub(self.account(framework, task).charged)
+    }
+
+    /// Record the provenance and modeled hardware cost of one measured
+    /// batch. `origins` must cover exactly the points admitted by the
+    /// matching [`charge`](Self::charge) call; `modeled_hw_secs` is the
+    /// batch's modeled testbed time — a pure function of the results, so
+    /// every tenant planning the same points is debited identically.
+    pub fn settle(&self, framework: &str, task: &str, origins: &[Origin], modeled_hw_secs: f64) {
+        let fresh = origins.iter().filter(|o| o.is_fresh()).count();
+        let mut accounts = self.accounts.lock().unwrap();
+        let account = accounts
+            .entry((framework.to_string(), task.to_string()))
+            .or_default();
+        account.fresh += fresh;
+        account.cache_served += origins.len() - fresh;
+        account.modeled_hw_secs += modeled_hw_secs;
+    }
+
+    /// Snapshot of one tenant's account (zeroed when it never charged).
+    pub fn account(&self, framework: &str, task: &str) -> Account {
+        self.accounts
+            .lock()
+            .unwrap()
+            .get(&(framework.to_string(), task.to_string()))
+            .copied()
+            .unwrap_or_default()
+    }
+
+    /// Snapshot of every account, in deterministic (framework, task) order.
+    pub fn stats(&self) -> LedgerStats {
+        let accounts = self.accounts.lock().unwrap();
+        LedgerStats {
+            per_task_points: self.per_task_points,
+            tenants: accounts
+                .iter()
+                .map(|((framework, task), account)| TenantStats {
+                    framework: framework.clone(),
+                    task: task.clone(),
+                    account: *account,
+                })
+                .collect(),
+        }
+    }
+}
+
+/// State behind the dispatcher's lock.
+#[derive(Debug, Default)]
+struct DispatchState {
+    slots: usize,
+    in_flight: usize,
+    /// Tickets waiting for admission, front = next to be served.
+    queue: VecDeque<u64>,
+    next_ticket: u64,
+    dispatched: usize,
+    waited: usize,
+    peak_queue: usize,
+}
+
+/// Dispatcher counters (see [`Dispatcher::stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DispatchStats {
+    /// Current admission slots (tracks fleet capacity).
+    pub slots: usize,
+    /// Batches being measured right now.
+    pub in_flight: usize,
+    /// Permits granted over the dispatcher's lifetime.
+    pub dispatched: usize,
+    /// Checkouts that had to queue behind a competitor or a full fleet.
+    pub waited: usize,
+    /// Deepest the waiting queue ever got.
+    pub peak_queue: usize,
+}
+
+/// FIFO admission of measurement batches: at most `slots` in flight, the
+/// longest-waiting tenant always goes next. See the module docs for how
+/// this interleaves competing tuning jobs over a shared fleet.
+pub struct Dispatcher {
+    state: Mutex<DispatchState>,
+    ready: Condvar,
+}
+
+impl Dispatcher {
+    /// A dispatcher admitting `slots` concurrent batches (clamped to ≥ 1).
+    pub fn new(slots: usize) -> Dispatcher {
+        Dispatcher {
+            state: Mutex::new(DispatchState { slots: slots.max(1), ..Default::default() }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Track capacity changes between batches (shard death/revival). Safe
+    /// to call from any tenant at any time; shrinking never cancels
+    /// permits already in flight, it only gates new admissions.
+    pub fn set_slots(&self, slots: usize) {
+        let mut state = self.state.lock().unwrap();
+        let slots = slots.max(1);
+        if state.slots != slots {
+            state.slots = slots;
+            self.ready.notify_all();
+        }
+    }
+
+    /// Acquire an admission permit, blocking until it is this caller's
+    /// turn (strict FIFO) *and* a slot is free. Dropping the permit
+    /// releases the slot and wakes the next tenant in line.
+    pub fn checkout(&self) -> DispatchPermit<'_> {
+        let mut state = self.state.lock().unwrap();
+        let ticket = state.next_ticket;
+        state.next_ticket += 1;
+        state.queue.push_back(ticket);
+        state.peak_queue = state.peak_queue.max(state.queue.len());
+        let mut counted_wait = false;
+        loop {
+            if state.queue.front() == Some(&ticket) && state.in_flight < state.slots {
+                state.queue.pop_front();
+                state.in_flight += 1;
+                state.dispatched += 1;
+                if state.in_flight < state.slots {
+                    // Capacity remains: wake the next tenant in line.
+                    self.ready.notify_all();
+                }
+                return DispatchPermit { dispatcher: self };
+            }
+            if !counted_wait {
+                state.waited += 1;
+                counted_wait = true;
+            }
+            state = self.ready.wait(state).unwrap();
+        }
+    }
+
+    fn release(&self) {
+        let mut state = self.state.lock().unwrap();
+        state.in_flight -= 1;
+        drop(state);
+        self.ready.notify_all();
+    }
+
+    pub fn stats(&self) -> DispatchStats {
+        let state = self.state.lock().unwrap();
+        DispatchStats {
+            slots: state.slots,
+            in_flight: state.in_flight,
+            dispatched: state.dispatched,
+            waited: state.waited,
+            peak_queue: state.peak_queue,
+        }
+    }
+}
+
+/// An admission permit for one measurement batch; releases on drop.
+pub struct DispatchPermit<'a> {
+    dispatcher: &'a Dispatcher,
+}
+
+impl Drop for DispatchPermit<'_> {
+    fn drop(&mut self) {
+        self.dispatcher.release();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Barrier;
+
+    #[test]
+    fn charge_caps_at_the_per_task_budget() {
+        let ledger = BudgetLedger::new(10);
+        assert_eq!(ledger.charge("arco", "t0", 6), 6);
+        assert_eq!(ledger.remaining("arco", "t0"), 4);
+        // Exhaustion mid-batch: a 6-point plan gets only the 4 remaining.
+        assert_eq!(ledger.charge("arco", "t0", 6), 4);
+        assert_eq!(ledger.charge("arco", "t0", 1), 0);
+        assert_eq!(ledger.account("arco", "t0").charged, 10);
+        // Other tenants are unaffected.
+        assert_eq!(ledger.charge("arco", "t1", 6), 6);
+        assert_eq!(ledger.charge("autotvm", "t0", 6), 6);
+    }
+
+    #[test]
+    fn settle_splits_fresh_from_cache_served() {
+        let ledger = BudgetLedger::new(100);
+        // First framework measures three points fresh...
+        assert_eq!(ledger.charge("a", "t", 3), 3);
+        ledger.settle("a", "t", &[Origin::Fresh, Origin::Fresh, Origin::Fresh], 3.0);
+        // ...the second plans the same points and is served from the cache,
+        // but is debited the identical count and modeled cost.
+        assert_eq!(ledger.charge("b", "t", 3), 3);
+        ledger.settle("b", "t", &[Origin::Cached, Origin::Cached, Origin::ShardCached], 3.0);
+        let a = ledger.account("a", "t");
+        let b = ledger.account("b", "t");
+        assert_eq!(a.charged, b.charged);
+        assert_eq!(a.modeled_hw_secs, b.modeled_hw_secs);
+        assert_eq!((a.fresh, a.cache_served), (3, 0));
+        assert_eq!((b.fresh, b.cache_served), (0, 3));
+        assert_eq!(a.settled(), 3);
+        assert_eq!(b.settled(), 3);
+        let stats = ledger.stats();
+        assert_eq!(stats.total_charged(), 6);
+        assert_eq!(stats.total_fresh(), 3);
+        assert_eq!(stats.total_cache_served(), 3);
+        assert!(stats.summary().contains("charged=6"));
+        assert!(stats.to_json().dump().contains("cache_served"));
+    }
+
+    #[test]
+    fn concurrent_charging_never_over_admits() {
+        let ledger = BudgetLedger::new(64);
+        let admitted = AtomicUsize::new(0);
+        let barrier = Barrier::new(8);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    barrier.wait();
+                    // 8 threads × 4 batches × 3 points = 96 requested > 64.
+                    for _ in 0..4 {
+                        admitted.fetch_add(ledger.charge("f", "t", 3), Ordering::SeqCst);
+                    }
+                });
+            }
+        });
+        assert_eq!(admitted.load(Ordering::SeqCst), 64, "budget must be admitted exactly once");
+        assert_eq!(ledger.account("f", "t").charged, 64);
+        assert_eq!(ledger.remaining("f", "t"), 0);
+    }
+
+    #[test]
+    fn stats_order_is_deterministic() {
+        let ledger = BudgetLedger::new(8);
+        ledger.charge("z", "t1", 1);
+        ledger.charge("a", "t2", 1);
+        ledger.charge("a", "t1", 1);
+        let names: Vec<(String, String)> = ledger
+            .stats()
+            .tenants
+            .iter()
+            .map(|t| (t.framework.clone(), t.task.clone()))
+            .collect();
+        assert_eq!(
+            names,
+            vec![
+                ("a".to_string(), "t1".to_string()),
+                ("a".to_string(), "t2".to_string()),
+                ("z".to_string(), "t1".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn dispatcher_bounds_in_flight_batches() {
+        let dispatcher = Dispatcher::new(2);
+        let active = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..6 {
+                scope.spawn(|| {
+                    for _ in 0..5 {
+                        let _permit = dispatcher.checkout();
+                        let now = active.fetch_add(1, Ordering::SeqCst) + 1;
+                        peak.fetch_max(now, Ordering::SeqCst);
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                        active.fetch_sub(1, Ordering::SeqCst);
+                    }
+                });
+            }
+        });
+        assert!(peak.load(Ordering::SeqCst) <= 2, "admission exceeded the slot bound");
+        let stats = dispatcher.stats();
+        assert_eq!(stats.dispatched, 30);
+        assert_eq!(stats.in_flight, 0, "every permit must be released");
+        assert!(stats.waited > 0, "6 tenants on 2 slots must have queued");
+        assert!(stats.peak_queue >= 1);
+    }
+
+    #[test]
+    fn growing_slots_unblocks_waiters() {
+        let dispatcher = Dispatcher::new(1);
+        let first = dispatcher.checkout();
+        let entered = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            let handle = scope.spawn(|| {
+                let _permit = dispatcher.checkout();
+                entered.fetch_add(1, Ordering::SeqCst);
+            });
+            // The second tenant is stuck behind the single slot...
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            assert_eq!(entered.load(Ordering::SeqCst), 0);
+            // ...until a shard revival grows the fleet.
+            dispatcher.set_slots(2);
+            handle.join().unwrap();
+            assert_eq!(entered.load(Ordering::SeqCst), 1);
+        });
+        drop(first);
+        assert_eq!(dispatcher.stats().in_flight, 0);
+    }
+}

@@ -30,6 +30,12 @@
 //!   deterministic backend, independent of the worker count.
 //! - [`server`] is the other side of the wire: `arco serve-measure`
 //!   exposes any local backend as a network shard.
+//! - [`BudgetLedger`] + [`Dispatcher`] ([`ledger`]) implement the paper's
+//!   equal-budget protocol on top of all of it: per-(framework, task)
+//!   measurement allowances charged before every batch, per-point
+//!   fresh/cache-served provenance ([`Origin`]) settled after, and FIFO
+//!   admission of concurrent tuning jobs so no framework monopolizes the
+//!   fleet ("measure once, charge everyone").
 //!
 //! Call-site contract: nothing outside this module (and the backend impls
 //! it owns) invokes [`crate::codegen::measure_point`] or the simulator on
@@ -40,6 +46,7 @@ pub mod backend;
 pub mod cache;
 pub mod engine;
 pub mod journal;
+pub mod ledger;
 pub mod proto;
 pub mod remote;
 pub mod server;
@@ -47,8 +54,9 @@ pub mod server;
 pub use crate::codegen::MeasureResult;
 pub use backend::{AnalyticalBackend, BackendKind, BackendSpec, MeasureBackend, VtaSimBackend};
 pub use cache::{CacheStats, MeasureCache, PointKey};
-pub use engine::{Engine, EngineConfig, EngineStats};
+pub use engine::{Engine, EngineConfig, EngineStats, PairedBatch, TracedBatch};
 pub use journal::{Journal, JournalEntry};
-pub use proto::{Fingerprint, PROTO_VERSION};
+pub use ledger::{Account, BudgetLedger, DispatchStats, Dispatcher, LedgerStats, TenantStats};
+pub use proto::{Fingerprint, Origin, PROTO_VERSION};
 pub use remote::RemoteBackend;
 pub use server::{spawn as serve_measure, spawn_local as serve_measure_local, ServerHandle};

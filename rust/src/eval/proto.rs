@@ -21,7 +21,8 @@
 //! {"op":"ping"}
 //!   → {"ok":true,"backend":"vta-sim","proto":1,"fingerprint":{...}}
 //! {"op":"measure","task":{...},"points":[[1,16,16,1,1,7,7], ...]}
-//!   → {"ok":true,"results":[{"valid":true,"seconds":1.2e-3, ...}, ...]}
+//!   → {"ok":true,"results":[{"valid":true,"seconds":1.2e-3, ...}, ...],
+//!      "fresh":[true,false, ...]}
 //! {"op":"stats"}
 //!   → {"ok":true,"stats":{"batches":4, ...}}
 //! anything else
@@ -42,7 +43,39 @@ use std::io::{BufRead, Write};
 
 /// Version of the request/response schema below. Bumped on any
 /// incompatible change; the client refuses servers speaking another one.
+/// (The per-point `fresh` array on measure responses is an *additive*
+/// field — absent means all-fresh — so it did not bump the version.)
 pub const PROTO_VERSION: u64 = 1;
+
+/// Where a measured point's number came from, from the perspective of the
+/// engine that served the batch. Only [`Origin::Fresh`] cost simulator (or,
+/// on a real testbed, hardware) time *for this batch*; every other origin
+/// was paid for earlier or by someone else — which is exactly the
+/// distinction the equal-budget protocol's [`super::ledger::BudgetLedger`]
+/// needs to charge every framework identically while only the first
+/// requester pays the wall-clock ("measure once, charge everyone").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Origin {
+    /// The backend actually ran for this point in this batch.
+    Fresh,
+    /// Served from the engine's in-memory cache (an earlier batch, or a
+    /// journal seed, already paid for it).
+    Cached,
+    /// Repeat of an earlier point within the same batch.
+    Dedup,
+    /// Waited on a concurrent batch's in-flight measurement of the point.
+    Coalesced,
+    /// A fleet shard answered from its own shared state (another tenant or
+    /// an earlier run already paid); the fleet did not re-simulate.
+    ShardCached,
+}
+
+impl Origin {
+    /// Did this measurement cost fresh simulator/hardware time anywhere?
+    pub fn is_fresh(self) -> bool {
+        matches!(self, Origin::Fresh)
+    }
+}
 
 /// Identity of the measurement model a process embeds: the cycle-model
 /// version plus the non-tunable [`VtaConfig`] defaults (buffer sizes,
@@ -264,8 +297,12 @@ impl Request {
 pub enum Response {
     /// Handshake reply.
     Pong { backend: String, proto: u64, fingerprint: Fingerprint },
-    /// Batch results, in request point order.
-    Results(Vec<MeasureResult>),
+    /// Batch results, in request point order. `fresh[i]` reports whether
+    /// the shard actually simulated point `i` for this request (`true`) or
+    /// answered it from shared state — its cache, in-batch dedup, or a
+    /// coalesced concurrent batch (`false`). Budget ledgers on the client
+    /// side use this to tell fleet-fresh from fleet-cached work.
+    Results { results: Vec<MeasureResult>, fresh: Vec<bool> },
     /// Engine counters as a free-form object.
     Stats(Json),
     /// The request could not be served (malformed, unknown op, skew).
@@ -281,9 +318,10 @@ impl Response {
                 ("proto", Json::num(*proto as f64)),
                 ("fingerprint", fingerprint.to_json()),
             ]),
-            Response::Results(results) => Json::obj(vec![
+            Response::Results { results, fresh } => Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("results", Json::Arr(results.iter().map(result_to_json).collect())),
+                ("fresh", Json::Arr(fresh.iter().map(|&f| Json::Bool(f)).collect())),
             ]),
             Response::Stats(stats) => {
                 Json::obj(vec![("ok", Json::Bool(true)), ("stats", stats.clone())])
@@ -305,7 +343,15 @@ impl Response {
                 .iter()
                 .map(result_from_json)
                 .collect::<Option<Vec<_>>>()?;
-            return Some(Response::Results(rs));
+            // Additive field: a peer that omits it (or sends a malformed
+            // length) is treated as all-fresh, the conservative charge.
+            let mut fresh: Vec<bool> = v
+                .get("fresh")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().map(|b| b.as_bool().unwrap_or(true)).collect())
+                .unwrap_or_default();
+            fresh.resize(rs.len(), true);
+            return Some(Response::Results { results: rs, fresh });
         }
         if let Some(stats) = v.get("stats") {
             return Some(Response::Stats(stats.clone()));
@@ -429,11 +475,35 @@ mod tests {
                 proto: PROTO_VERSION,
                 fingerprint: Fingerprint::current(),
             },
-            Response::Results(vec![r, r]),
+            Response::Results { results: vec![r, r], fresh: vec![true, false] },
             Response::Stats(Json::obj(vec![("batches", Json::num(3.0))])),
             Response::Error("boom".into()),
         ] {
             assert_eq!(Response::from_json(&resp.to_json()), Some(resp));
+        }
+    }
+
+    #[test]
+    fn results_without_fresh_field_default_to_all_fresh() {
+        // Compatibility: a peer that omits the additive `fresh` array is
+        // charged conservatively (everything fresh).
+        let s = space();
+        let r = crate::codegen::measure_point(&s, &s.default_point());
+        let mut json =
+            Response::Results { results: vec![r, r], fresh: vec![false, false] }.to_json();
+        if let Json::Obj(fields) = &mut json {
+            fields.retain(|(k, _)| k != "fresh");
+        }
+        match Response::from_json(&json).unwrap() {
+            Response::Results { results, fresh } => {
+                assert_eq!(results.len(), 2);
+                assert_eq!(fresh, vec![true, true]);
+            }
+            other => panic!("expected results, got {other:?}"),
+        }
+        assert!(Origin::Fresh.is_fresh());
+        for o in [Origin::Cached, Origin::Dedup, Origin::Coalesced, Origin::ShardCached] {
+            assert!(!o.is_fresh());
         }
     }
 

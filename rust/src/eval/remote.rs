@@ -21,6 +21,7 @@ use super::cache::PointKey;
 use super::proto::{read_frame, write_frame, Fingerprint, Request, Response, PROTO_VERSION};
 use crate::codegen::MeasureResult;
 use crate::space::{ConfigSpace, PointConfig};
+use crate::util::json::Json;
 use std::io::{BufReader, BufWriter};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -191,13 +192,16 @@ impl RemoteBackend {
         self.revive_dead();
     }
 
-    /// Send one chunk to one shard, validating the reply shape.
+    /// Send one chunk to one shard, validating the reply shape. Returns
+    /// results paired with the shard's per-point freshness report (`false`
+    /// when the shard answered from its own cache/coalescing instead of
+    /// simulating).
     fn measure_on(
         &self,
         shard: usize,
         task: crate::workload::Conv2dTask,
         values: Vec<Vec<usize>>,
-    ) -> Result<Vec<MeasureResult>, String> {
+    ) -> Result<(Vec<MeasureResult>, Vec<bool>), String> {
         let expect = values.len();
         let addr = &self.shards[shard].addr;
         // Every failure marks the shard dead — including a structured
@@ -207,9 +211,11 @@ impl RemoteBackend {
         // that can never serve, starving points that the healthy rest of
         // the fleet could have absorbed.
         let err = match call(addr, &Request::Measure { task, points: values }, MEASURE_TIMEOUT) {
-            Ok(Response::Results(rs)) if rs.len() == expect => return Ok(rs),
-            Ok(Response::Results(rs)) => {
-                format!("shard {addr}: short reply ({} of {expect} results)", rs.len())
+            Ok(Response::Results { results, fresh }) if results.len() == expect => {
+                return Ok((results, fresh));
+            }
+            Ok(Response::Results { results, .. }) => {
+                format!("shard {addr}: short reply ({} of {expect} results)", results.len())
             }
             Ok(Response::Error(e)) => format!("shard {addr} refused the batch: {e}"),
             Ok(_) => format!("shard {addr}: unexpected reply kind"),
@@ -217,6 +223,20 @@ impl RemoteBackend {
         };
         self.shards[shard].alive.store(false, Ordering::Relaxed);
         Err(err)
+    }
+
+    /// One `stats` snapshot per alive shard (used for fleet-load
+    /// diagnostics; a shard that fails the call is skipped, not killed —
+    /// stats are advisory, measurement traffic decides liveness).
+    pub fn shard_stats(&self) -> Vec<(String, Json)> {
+        self.shards
+            .iter()
+            .filter(|s| s.alive.load(Ordering::Relaxed))
+            .filter_map(|s| match call(&s.addr, &Request::Stats, PING_TIMEOUT) {
+                Ok(Response::Stats(stats)) => Some((s.addr.clone(), stats)),
+                _ => None,
+            })
+            .collect()
     }
 }
 
@@ -229,27 +249,49 @@ impl MeasureBackend for RemoteBackend {
         self.measure_many(space, std::slice::from_ref(point), 1)[0]
     }
 
-    /// Shard the batch across the alive fleet; chunks of a shard that dies
-    /// mid-batch are re-dispatched to the survivors.
-    ///
-    /// Panics when no shard can serve a chunk after repeated rounds (the
-    /// whole fleet is unreachable): there is nothing measurable left.
     fn measure_many(
         &self,
         space: &ConfigSpace,
         points: &[PointConfig],
-        _workers: usize,
+        workers: usize,
     ) -> Vec<MeasureResult> {
+        self.measure_many_traced(space, points, workers).0
+    }
+
+    /// One batch slot per alive shard: the fleet genuinely serves that
+    /// many batches at once, which is what the multi-tenant dispatcher
+    /// sizes admission from.
+    fn concurrent_batch_capacity(&self) -> usize {
+        self.alive_count().max(1)
+    }
+
+    fn fleet_stats(&self) -> Vec<(String, Json)> {
+        self.shard_stats()
+    }
+
+    /// Shard the batch across the alive fleet; chunks of a shard that dies
+    /// mid-batch are re-dispatched to the survivors. The freshness vector
+    /// relays each shard's own report, so a point another tenant already
+    /// paid for on a shard comes back `false`.
+    ///
+    /// Panics when no shard can serve a chunk after repeated rounds (the
+    /// whole fleet is unreachable): there is nothing measurable left.
+    fn measure_many_traced(
+        &self,
+        space: &ConfigSpace,
+        points: &[PointConfig],
+        _workers: usize,
+    ) -> (Vec<MeasureResult>, Vec<bool>) {
         let n = points.len();
         if n == 0 {
-            return Vec::new();
+            return (Vec::new(), Vec::new());
         }
         self.maybe_revive();
         let values: Vec<Vec<usize>> =
             points.iter().map(|p| PointKey::of(space, p).values).collect();
         let values = &values;
         let task = space.task;
-        let mut out: Vec<Option<MeasureResult>> = vec![None; n];
+        let mut out: Vec<Option<(MeasureResult, bool)>> = vec![None; n];
         let mut pending: Vec<usize> = (0..n).collect();
         let mut last_error = String::new();
         let max_rounds = 2 * self.shards.len() + 2;
@@ -265,32 +307,32 @@ impl MeasureBackend for RemoteBackend {
             // Contiguous chunks, one per alive shard (at most one point of
             // imbalance; chunk i may be empty when points < shards).
             let per = pending.len().div_ceil(alive.len());
-            let outcomes: Vec<(Vec<usize>, Result<Vec<MeasureResult>, String>)> =
-                std::thread::scope(|scope| {
-                    let handles: Vec<_> = alive
-                        .iter()
-                        .zip(pending.chunks(per.max(1)))
-                        .map(|(&shard, chunk)| {
-                            let idxs: Vec<usize> = chunk.to_vec();
-                            scope.spawn(move || {
-                                let vals: Vec<Vec<usize>> =
-                                    idxs.iter().map(|&i| values[i].clone()).collect();
-                                let res = self.measure_on(shard, task, vals);
-                                (idxs, res)
-                            })
+            type ChunkOutcome = (Vec<usize>, Result<(Vec<MeasureResult>, Vec<bool>), String>);
+            let outcomes: Vec<ChunkOutcome> = std::thread::scope(|scope| {
+                let handles: Vec<_> = alive
+                    .iter()
+                    .zip(pending.chunks(per.max(1)))
+                    .map(|(&shard, chunk)| {
+                        let idxs: Vec<usize> = chunk.to_vec();
+                        scope.spawn(move || {
+                            let vals: Vec<Vec<usize>> =
+                                idxs.iter().map(|&i| values[i].clone()).collect();
+                            let res = self.measure_on(shard, task, vals);
+                            (idxs, res)
                         })
-                        .collect();
-                    handles
-                        .into_iter()
-                        .map(|h| h.join().expect("remote dispatch thread panicked"))
-                        .collect()
-                });
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("remote dispatch thread panicked"))
+                    .collect()
+            });
             let mut next = Vec::new();
             for (idxs, res) in outcomes {
                 match res {
-                    Ok(rs) => {
-                        for (&slot, r) in idxs.iter().zip(rs) {
-                            out[slot] = Some(r);
+                    Ok((rs, fr)) => {
+                        for ((&slot, r), f) in idxs.iter().zip(rs).zip(fr) {
+                            out[slot] = Some((r, f));
                         }
                     }
                     Err(e) => {
@@ -317,6 +359,13 @@ impl MeasureBackend for RemoteBackend {
             pending.len(),
             max_rounds
         );
-        out.into_iter().map(|r| r.expect("every point measured")).collect()
+        let mut results = Vec::with_capacity(n);
+        let mut fresh = Vec::with_capacity(n);
+        for cell in out {
+            let (r, f) = cell.expect("every point measured");
+            results.push(r);
+            fresh.push(f);
+        }
+        (results, fresh)
     }
 }

@@ -16,9 +16,10 @@ use super::proto::{
     point_from_values, read_frame, write_frame, Fingerprint, Request, Response, PROTO_VERSION,
 };
 use crate::space::ConfigSpace;
+use crate::util::json::Json;
 use std::io::{BufReader, BufWriter};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
@@ -27,6 +28,7 @@ pub struct ServerHandle {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     engine: Arc<Engine>,
+    clients: Arc<AtomicUsize>,
     accept: Option<JoinHandle<()>>,
 }
 
@@ -39,6 +41,12 @@ impl ServerHandle {
     /// The engine serving this shard (stats, journal flush).
     pub fn engine(&self) -> &Arc<Engine> {
         &self.engine
+    }
+
+    /// Connections currently being served (the `stats` op reports this to
+    /// fleet clients as `active_connections`).
+    pub fn active_connections(&self) -> usize {
+        self.clients.load(Ordering::Relaxed)
     }
 
     /// Block until the accept loop exits (the CLI's serve-forever mode).
@@ -66,15 +74,22 @@ pub fn spawn(addr: &str, engine: Arc<Engine>) -> anyhow::Result<ServerHandle> {
         .map_err(|e| anyhow::anyhow!("binding measure server to {addr}: {e}"))?;
     let bound = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
+    let clients = Arc::new(AtomicUsize::new(0));
     let accept = {
         let stop = Arc::clone(&stop);
         let engine = Arc::clone(&engine);
-        std::thread::spawn(move || accept_loop(listener, engine, stop))
+        let clients = Arc::clone(&clients);
+        std::thread::spawn(move || accept_loop(listener, engine, clients, stop))
     };
-    Ok(ServerHandle { addr: bound, stop, engine, accept: Some(accept) })
+    Ok(ServerHandle { addr: bound, stop, engine, clients, accept: Some(accept) })
 }
 
-fn accept_loop(listener: TcpListener, engine: Arc<Engine>, stop: Arc<AtomicBool>) {
+fn accept_loop(
+    listener: TcpListener,
+    engine: Arc<Engine>,
+    clients: Arc<AtomicUsize>,
+    stop: Arc<AtomicBool>,
+) {
     for conn in listener.incoming() {
         if stop.load(Ordering::SeqCst) {
             break;
@@ -82,12 +97,16 @@ fn accept_loop(listener: TcpListener, engine: Arc<Engine>, stop: Arc<AtomicBool>
         match conn {
             Ok(stream) => {
                 let engine = Arc::clone(&engine);
+                let clients = Arc::clone(&clients);
                 std::thread::spawn(move || {
                     let peer = stream
                         .peer_addr()
                         .map(|a| a.to_string())
                         .unwrap_or_else(|_| "?".to_string());
-                    if let Err(e) = serve_connection(stream, &engine) {
+                    clients.fetch_add(1, Ordering::Relaxed);
+                    let served = serve_connection(stream, &engine, &clients);
+                    clients.fetch_sub(1, Ordering::Relaxed);
+                    if let Err(e) = served {
                         crate::log_debug!("eval", "connection {peer} ended: {e}");
                     }
                 });
@@ -98,7 +117,11 @@ fn accept_loop(listener: TcpListener, engine: Arc<Engine>, stop: Arc<AtomicBool>
 }
 
 /// One request → one response per line until the client hangs up.
-fn serve_connection(stream: TcpStream, engine: &Engine) -> anyhow::Result<()> {
+fn serve_connection(
+    stream: TcpStream,
+    engine: &Engine,
+    clients: &AtomicUsize,
+) -> anyhow::Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
@@ -107,21 +130,32 @@ fn serve_connection(stream: TcpStream, engine: &Engine) -> anyhow::Result<()> {
             return Ok(());
         };
         let response = match Request::from_json(&frame) {
-            Some(req) => handle(engine, req),
+            Some(req) => handle(engine, clients, req),
             None => Response::Error("unintelligible request".to_string()),
         };
         write_frame(&mut writer, &response.to_json())?;
     }
 }
 
-fn handle(engine: &Engine, req: Request) -> Response {
+fn handle(engine: &Engine, clients: &AtomicUsize, req: Request) -> Response {
     match req {
         Request::Ping => Response::Pong {
             backend: engine.backend_name().to_string(),
             proto: PROTO_VERSION,
             fingerprint: Fingerprint::current(),
         },
-        Request::Stats => Response::Stats(engine.stats().to_json()),
+        Request::Stats => {
+            // Engine counters plus the shard's own connection gauge: how
+            // many tuning clients it is serving right now.
+            let mut stats = engine.stats().to_json();
+            if let Json::Obj(fields) = &mut stats {
+                fields.push((
+                    "active_connections".to_string(),
+                    Json::num(clients.load(Ordering::Relaxed) as f64),
+                ));
+            }
+            Response::Stats(stats)
+        }
         Request::Measure { task, points } => {
             // Both sides rebuild the identical space from the task shape;
             // decoded values are the portable point identity.
@@ -139,7 +173,13 @@ fn handle(engine: &Engine, req: Request) -> Response {
                     }
                 }
             }
-            Response::Results(engine.measure_batch(&space, &decoded))
+            // The shard's own provenance rides back to the client: a point
+            // this shard served from its cache (another tenant already
+            // paid) is reported non-fresh so client-side ledgers can keep
+            // fleet-wide "measure once, charge everyone" accounting honest.
+            let traced = engine.measure_batch_traced(&space, &decoded);
+            let fresh = traced.origins.iter().map(|o| o.is_fresh()).collect();
+            Response::Results { results: traced.results, fresh }
         }
     }
 }

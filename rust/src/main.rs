@@ -20,7 +20,7 @@
 use arco::config::RunConfig;
 use arco::eval::{self, BackendKind, BackendSpec};
 use arco::report;
-use arco::tuner::{compare_frameworks_with, tune_model_with, Framework};
+use arco::tuner::{compare_frameworks_opts, tune_model_with, DriverOptions, Framework};
 use arco::util::cli::Cli;
 use arco::util::json::write_json_file;
 use arco::util::log::{set_level, Level};
@@ -202,6 +202,7 @@ fn cmd_tune(args: &[String]) -> anyhow::Result<()> {
     let json = report::compare_json(&[arco::tuner::CompareReport {
         model: model.name.to_string(),
         outcomes: vec![out],
+        ledger: None,
     }]);
     let path = Path::new("results").join(format!("tune_{}_{}.json", framework.name(), model.name));
     write_json_file(&path, &json)?;
@@ -212,7 +213,13 @@ fn cmd_tune(args: &[String]) -> anyhow::Result<()> {
 fn cmd_compare(args: &[String]) -> anyhow::Result<()> {
     let cli = common_cli("arco compare", "compare frameworks (Figs 5-7, Table 6)")
         .opt("models", Some('m'), "comma-separated zoo models, or 'all'", Some("all"))
-        .opt("frameworks", Some('f'), "comma-separated frameworks", Some("autotvm,chameleon,arco"));
+        .opt("frameworks", Some('f'), "comma-separated frameworks", Some("autotvm,chameleon,arco"))
+        .flag(
+            "shared-budget",
+            None,
+            "equal-budget protocol: run every (framework, task) job concurrently over a \
+             shared per-task measurement ledger (measure once, charge everyone)",
+        );
     let a = cli.parse(args).map_err(anyhow::Error::msg)?;
     if a.has_flag("help") {
         print!("{}", cli.usage());
@@ -229,17 +236,33 @@ fn cmd_compare(args: &[String]) -> anyhow::Result<()> {
                 .ok_or_else(|| anyhow::anyhow!("unknown framework '{s}'"))
         })
         .collect::<Result<_, _>>()?;
+    let mut driver = cfg.driver;
+    if a.has_flag("shared-budget") {
+        driver = DriverOptions { concurrent: true, shared_budget: true };
+    }
 
     let engine = build_engine(&cfg)?;
     let mut reports = Vec::new();
     for name in &models {
         let model = model_by_name(name).unwrap();
         arco::log_info!("main", "=== comparing on {name} ===");
-        reports.push(compare_frameworks_with(
-            &engine, &frameworks, &model, cfg.budget, quick, cfg.seed,
+        reports.push(compare_frameworks_opts(
+            &engine, &frameworks, &model, cfg.budget, quick, cfg.seed, driver,
         ));
     }
     println!("eval engine: {}", engine.summary());
+    for (addr, stats) in engine.fleet_stats() {
+        println!("  shard {addr}: {}", stats.dump());
+    }
+    for r in &reports {
+        if let Some(ledger) = &r.ledger {
+            println!("ledger[{}]: {}", r.model, ledger.summary());
+            report::write_result(
+                &format!("ledger_{}.md", r.model),
+                &report::ledger_stats_md(ledger),
+            )?;
+        }
+    }
 
     let t6 = report::table6_inference(&reports);
     println!("\nTable 6 — mean inference times (s) on VTA++:\n{t6}");

@@ -86,6 +86,13 @@ pub fn confidence_sampling(
     let synth_cap = low.len().min((n_configs / 8).max(1));
     let mut variants: Vec<PointConfig> = vec![modal.clone()];
     for k in 0..space.num_knobs() {
+        // Frozen hardware knobs must stay at their (modal = default)
+        // setting: synthesis is the one path that hand-rolls knob steps
+        // instead of going through `space.neighbours`, and a software-only
+        // framework must never be handed a varied hardware knob.
+        if space.knob_frozen(k) {
+            continue;
+        }
         for delta in [-1i64, 1] {
             let arity = space.knobs[k].len() as i64;
             let v = (modal.0[k] as i64 + delta).clamp(0, arity - 1) as usize;
@@ -164,6 +171,28 @@ mod tests {
         assert!(out.selected.len() <= 64);
         let keys: HashSet<usize> = out.selected.iter().map(|p| s.flat_index(p)).collect();
         assert_eq!(keys.len(), out.selected.len());
+    }
+
+    #[test]
+    fn synthesis_respects_frozen_hardware_knobs() {
+        // All-low confidence forces the synthesis path; in a frozen space
+        // the synthesized variants must never step a hardware knob.
+        let t = Conv2dTask::new(1, 64, 56, 56, 64, 3, 3, 1, 1);
+        let s = ConfigSpace::for_task(&t, false);
+        let cands = random_candidates(&s, 100, 9);
+        let values = vec![0.0f64; cands.len()];
+        for seed in 0..20u64 {
+            let mut rng = Pcg32::seeded(seed);
+            let out = confidence_sampling(&s, &cands, &values, 32, &mut rng);
+            for p in &out.selected {
+                let (hw, _) = s.decode(p);
+                assert_eq!(
+                    (hw.batch, hw.block_in, hw.block_out),
+                    (1, 16, 16),
+                    "synthesis varied a frozen hardware knob"
+                );
+            }
+        }
     }
 
     #[test]

@@ -105,7 +105,7 @@ impl<'a> CoOptEnv<'a> {
         let knob_idx = self.space.agent_knobs(role.owner());
         let mut q = point.clone();
         for (i, &k) in knob_idx.iter().enumerate() {
-            if !self.space.hardware_tunable && role == Role::Hardware {
+            if self.space.knob_frozen(k) {
                 continue;
             }
             let arity = self.space.knobs[k].len() as i64;

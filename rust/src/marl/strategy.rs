@@ -274,7 +274,7 @@ mod tests {
             for p in &plan {
                 assert!(all.insert(s.flat_index(p)), "duplicate planned config");
             }
-            a.observe(&engine.measure_paired(&s, plan));
+            a.observe(&engine.measure_paired(&s, plan).pairs);
         }
     }
 
@@ -293,7 +293,7 @@ mod tests {
                     saw_nondefault_hw = true;
                 }
             }
-            a.observe(&engine.measure_paired(&s, plan));
+            a.observe(&engine.measure_paired(&s, plan).pairs);
         }
         assert!(saw_nondefault_hw);
     }
@@ -326,7 +326,7 @@ mod tests {
             Arco::with_backend(s.clone(), params, Backend::native(ModelDims::default()), 4);
         let engine = Engine::vta_sim(2);
         let plan = a.plan(16);
-        a.observe(&engine.measure_paired(&s, plan));
+        a.observe(&engine.measure_paired(&s, plan).pairs);
         let plan2 = a.plan(16);
         assert!(!plan2.is_empty());
     }

@@ -1,6 +1,7 @@
 //! Report emitters: CSV + markdown renderings of every paper table/figure,
 //! written under `results/`.
 
+use crate::eval::LedgerStats;
 use crate::tuner::{CompareReport, Framework};
 use crate::util::json::Json;
 use crate::workload::{model_by_name, model_names};
@@ -149,13 +150,45 @@ pub fn fig4_configs_over_time(
     s
 }
 
+/// Ledger accounting table for a shared-budget run: what every
+/// (framework, task) tenant was debited, split into freshly-simulated and
+/// cache-served points ("measure once, charge everyone").
+pub fn ledger_stats_md(stats: &LedgerStats) -> String {
+    let mut s = format!(
+        "Shared measurement budget: {} points per (framework, task)\n\n\
+         | Framework | Task | Charged | Fresh | Cache-served | Modeled HW (s) |\n\
+         |---|---|---|---|---|---|\n",
+        stats.per_task_points
+    );
+    for t in &stats.tenants {
+        let _ = writeln!(
+            s,
+            "| {} | {} | {} | {} | {} | {:.3} |",
+            t.framework,
+            t.task,
+            t.account.charged,
+            t.account.fresh,
+            t.account.cache_served,
+            t.account.modeled_hw_secs
+        );
+    }
+    let _ = writeln!(
+        s,
+        "| **total** | | {} | {} | {} | |",
+        stats.total_charged(),
+        stats.total_fresh(),
+        stats.total_cache_served()
+    );
+    s
+}
+
 /// JSON dump of a comparison (machine-readable companion of the tables).
 pub fn compare_json(reports: &[CompareReport]) -> Json {
     Json::Arr(
         reports
             .iter()
             .map(|r| {
-                Json::obj(vec![
+                let mut fields = vec![
                     ("model", Json::str(r.model.clone())),
                     (
                         "outcomes",
@@ -168,13 +201,19 @@ pub fn compare_json(reports: &[CompareReport]) -> Json {
                                         ("inference_secs", Json::num(o.inference_secs)),
                                         ("compile_secs", Json::num(o.compile_secs)),
                                         ("measurements", Json::num(o.measurements as f64)),
+                                        ("fresh", Json::num(o.fresh as f64)),
+                                        ("cache_served", Json::num(o.cache_served as f64)),
                                         ("throughput", Json::num(o.throughput())),
                                     ])
                                 })
                                 .collect(),
                         ),
                     ),
-                ])
+                ];
+                if let Some(ledger) = &r.ledger {
+                    fields.push(("ledger", ledger.to_json()));
+                }
+                Json::obj(fields)
             })
             .collect(),
     )
@@ -192,6 +231,21 @@ mod tests {
         assert!(t.contains("| resnet34 | ImageNet | 33 |"));
         assert!(t.contains("| alexnet | ImageNet | 5 |"));
         assert!(t.contains("| vgg19 | ImageNet | 16 |"));
+    }
+
+    #[test]
+    fn ledger_stats_render() {
+        use crate::eval::{BudgetLedger, Origin};
+        let ledger = BudgetLedger::new(4);
+        ledger.charge("autotvm", "t0", 4);
+        ledger.settle("autotvm", "t0", &[Origin::Fresh; 4], 1.25);
+        ledger.charge("arco", "t0", 4);
+        ledger.settle("arco", "t0", &[Origin::Cached; 4], 1.25);
+        let md = ledger_stats_md(&ledger.stats());
+        assert!(md.contains("4 points per (framework, task)"));
+        assert!(md.contains("| autotvm | t0 | 4 | 4 | 0 |"));
+        assert!(md.contains("| arco | t0 | 4 | 0 | 4 |"));
+        assert!(md.contains("| **total** | | 8 | 4 | 4 | |"));
     }
 
     #[test]

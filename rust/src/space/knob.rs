@@ -121,12 +121,21 @@ impl ConfigSpace {
             .collect()
     }
 
+    /// Is knob `i` frozen in this space — present, but pinned to the
+    /// default value? True exactly for hardware knobs of a software-only
+    /// (hardware-frozen) space. The single predicate every sampler,
+    /// neighbourhood and synthesis path must consult before moving a knob.
+    pub fn knob_frozen(&self, i: usize) -> bool {
+        !self.hardware_tunable && self.knobs[i].owner == KnobOwner::Hardware
+    }
+
     /// Total number of points (tunable dimensions only).
     pub fn size(&self) -> usize {
         self.knobs
             .iter()
-            .filter(|k| self.hardware_tunable || k.owner != KnobOwner::Hardware)
-            .map(|k| k.len())
+            .enumerate()
+            .filter(|(i, _)| !self.knob_frozen(*i))
+            .map(|(_, k)| k.len())
             .product()
     }
 
@@ -156,7 +165,7 @@ impl ConfigSpace {
             .iter()
             .enumerate()
             .map(|(i, k)| {
-                if !self.hardware_tunable && k.owner == KnobOwner::Hardware {
+                if self.knob_frozen(i) {
                     default.0[i]
                 } else {
                     rng.gen_range(k.len())
@@ -213,7 +222,7 @@ impl ConfigSpace {
     pub fn neighbours(&self, p: &PointConfig) -> Vec<PointConfig> {
         let mut out = Vec::new();
         for (i, k) in self.knobs.iter().enumerate() {
-            if !self.hardware_tunable && k.owner == KnobOwner::Hardware {
+            if self.knob_frozen(i) {
                 continue;
             }
             if p.0[i] > 0 {
@@ -291,6 +300,20 @@ mod tests {
         let s = ConfigSpace::for_task(&task(), true);
         let size = s.size();
         assert!(size >= 1 << 10 && size <= 1 << 15, "size {size}");
+    }
+
+    #[test]
+    fn knob_frozen_marks_exactly_the_hardware_knobs_of_a_frozen_space() {
+        let full = ConfigSpace::for_task(&task(), true);
+        let frozen = ConfigSpace::for_task(&task(), false);
+        for i in 0..full.num_knobs() {
+            assert!(!full.knob_frozen(i), "nothing is frozen in a co-design space");
+            assert_eq!(
+                frozen.knob_frozen(i),
+                frozen.knobs[i].owner == KnobOwner::Hardware,
+                "knob {i}"
+            );
+        }
     }
 
     #[test]

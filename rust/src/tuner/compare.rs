@@ -2,16 +2,32 @@
 //! each framework and aggregates end-to-end inference time, compilation
 //! time and convergence traces — the data behind Fig. 5, Fig. 6, Fig. 7
 //! and Table 6.
+//!
+//! Two driver shapes share the same per-job code:
+//!
+//! - the classic serial driver (frameworks outer, tasks inner), and
+//! - a concurrent multi-tenant driver ([`DriverOptions::concurrent`]):
+//!   every (framework, task) job runs on its own `util::pool` thread, all
+//!   jobs measure through ONE shared engine/fleet, a FIFO
+//!   [`Dispatcher`] interleaves their batches so no framework monopolizes
+//!   the shards, and (with [`DriverOptions::shared_budget`]) a
+//!   [`BudgetLedger`] enforces the paper's equal-budget protocol —
+//!   "measure once, charge everyone". Deterministic backends make the
+//!   concurrent outcome identical to the serial one for the same seed.
 
 use super::strategy::Strategy;
-use super::task_tuner::{tune_task_with, TaskTuneResult, TuneBudget};
-use crate::baselines::{AutoTvm, Chameleon, RandomSearch};
+use super::task_tuner::{
+    tune_task_tenant, tune_task_with, TaskTuneResult, TenantContext, TuneBudget,
+};
 use crate::baselines::autotvm::AutoTvmParams;
 use crate::baselines::chameleon::ChameleonParams;
+use crate::baselines::{AutoTvm, Chameleon, RandomSearch};
 use crate::eval;
+use crate::eval::{BudgetLedger, Dispatcher, LedgerStats};
 use crate::marl::strategy::{Arco, ArcoParams};
 use crate::space::ConfigSpace;
-use crate::workload::ModelSpec;
+use crate::util::pool::parallel_map;
+use crate::workload::{Conv2dTask, ModelSpec};
 
 /// Frameworks under comparison.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -62,7 +78,15 @@ impl Framework {
     }
 
     /// Instantiate a strategy for one task space.
-    pub fn build(self, space: ConfigSpace, quick: bool, seed: u64) -> Box<dyn Strategy> {
+    ///
+    /// A software-only framework must never see tunable hardware knobs,
+    /// whatever space the caller hands it: the hardware-frozen constraint
+    /// is enforced here instead of trusting every call site to consult
+    /// [`tunes_hardware`](Self::tunes_hardware) first. (Knob *indices* are
+    /// identical between the frozen and full variants of a space, so
+    /// points planned in the frozen clone remain valid for the caller's.)
+    pub fn build(self, mut space: ConfigSpace, quick: bool, seed: u64) -> Box<dyn Strategy> {
+        space.hardware_tunable = space.hardware_tunable && self.tunes_hardware();
         match self {
             Framework::AutoTvm => {
                 let p = if quick { AutoTvmParams::quick() } else { AutoTvmParams::default() };
@@ -108,8 +132,13 @@ pub struct ModelOutcome {
     pub compile_secs: f64,
     /// Search-only wall-clock (planner/learner compute, excl. measurements).
     pub search_secs: f64,
-    /// Total hardware measurements spent.
+    /// Total hardware measurements spent (debited).
     pub measurements: usize,
+    /// Of `measurements`, points freshly simulated for this framework.
+    pub fresh: usize,
+    /// Of `measurements`, points served from shared state another tenant
+    /// (or an earlier batch) already paid for.
+    pub cache_served: usize,
 }
 
 impl ModelOutcome {
@@ -128,6 +157,9 @@ impl ModelOutcome {
 pub struct CompareReport {
     pub model: String,
     pub outcomes: Vec<ModelOutcome>,
+    /// Equal-budget accounting, present when the run used a shared
+    /// [`BudgetLedger`] ([`DriverOptions::shared_budget`]).
+    pub ledger: Option<LedgerStats>,
 }
 
 impl CompareReport {
@@ -140,6 +172,9 @@ impl CompareReport {
     /// search compute. The paper benchmarks at "the same AutoTVM
     /// compilation duration"; time-to-parity is the inverse view of that
     /// protocol and is robust to frameworks with different space sizes.
+    /// A missing or nothing-valid baseline task yields a non-positive
+    /// target, which `modeled_secs_to_quality` treats as never reached
+    /// (full modeled time) rather than "parity at the first trace entry".
     pub fn compile_secs_to_parity(&self, f: Framework) -> Option<f64> {
         let base = self.outcome(Framework::AutoTvm)?;
         let ours = self.outcome(f)?;
@@ -168,6 +203,138 @@ impl CompareReport {
     }
 }
 
+/// How the comparison driver schedules its (framework, task) jobs.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DriverOptions {
+    /// Run every job concurrently over the shared engine, interleaved by a
+    /// FIFO dispatcher sized to the fleet's batch capacity. Off: the
+    /// classic serial framework-major order.
+    pub concurrent: bool,
+    /// Enforce the equal-budget protocol with a shared [`BudgetLedger`]:
+    /// every (framework, task) tenant is debited per planned point —
+    /// cache-served or fresh — against the same per-task allowance, and
+    /// the report carries the ledger stats.
+    pub shared_budget: bool,
+}
+
+impl DriverOptions {
+    fn multi_tenant(self) -> bool {
+        self.concurrent || self.shared_budget
+    }
+}
+
+/// Shared multi-tenant infrastructure for one comparison run: every
+/// (framework, task) job charges the same ledger and queues on the same
+/// dispatcher.
+pub struct SharedRun {
+    ledger: Option<BudgetLedger>,
+    dispatcher: Dispatcher,
+}
+
+impl SharedRun {
+    /// Infrastructure for one run: a ledger granting each (framework,
+    /// task) tenant `budget.total_measurements` points (when
+    /// `shared_budget`), and a dispatcher sized to the engine's current
+    /// concurrent batch capacity (re-read as the run progresses).
+    pub fn new(engine: &eval::Engine, budget: &TuneBudget, shared_budget: bool) -> SharedRun {
+        SharedRun {
+            ledger: shared_budget.then(|| BudgetLedger::new(budget.total_measurements)),
+            dispatcher: Dispatcher::new(engine.concurrent_batch_capacity()),
+        }
+    }
+
+    pub fn ledger(&self) -> Option<&BudgetLedger> {
+        self.ledger.as_ref()
+    }
+
+    pub fn ledger_stats(&self) -> Option<LedgerStats> {
+        self.ledger.as_ref().map(|l| l.stats())
+    }
+
+    pub fn dispatcher(&self) -> &Dispatcher {
+        &self.dispatcher
+    }
+}
+
+/// One (framework, task) tuning job — the unit both drivers schedule.
+/// `tenant_label` is the ledger identity (the framework name, uniquified
+/// by the caller when a framework appears twice in one comparison).
+#[allow(clippy::too_many_arguments)]
+fn run_job(
+    engine: &eval::Engine,
+    framework: Framework,
+    tenant_label: &str,
+    model_name: &str,
+    task: &Conv2dTask,
+    weight: usize,
+    task_index: usize,
+    task_count: usize,
+    budget: TuneBudget,
+    quick: bool,
+    seed: u64,
+    shared: Option<&SharedRun>,
+) -> TaskOutcome {
+    let space = ConfigSpace::for_task(task, framework.tunes_hardware());
+    let mut strategy = framework.build(space.clone(), quick, seed ^ (task_index as u64) << 32);
+    let task_id = task.short_id();
+    let result = match shared {
+        Some(s) => {
+            let tenant = TenantContext {
+                ledger: s.ledger.as_ref(),
+                dispatcher: &s.dispatcher,
+                framework: tenant_label,
+                task_id: &task_id,
+            };
+            tune_task_tenant(engine, &space, strategy.as_mut(), budget, Some(&tenant))
+        }
+        None => tune_task_with(engine, &space, strategy.as_mut(), budget),
+    };
+    crate::log_info!(
+        "compare",
+        "{} {} task {}/{} {}: best {:.3e}s over {} measurements ({} fresh, {} shared) ({})",
+        framework.name(),
+        model_name,
+        task_index + 1,
+        task_count,
+        task_id,
+        result.best.seconds,
+        result.measurements,
+        result.fresh,
+        result.cache_served,
+        strategy.diag()
+    );
+    TaskOutcome { task_id, weight, result }
+}
+
+/// Roll task outcomes up into one (framework, model) aggregate.
+fn aggregate(framework: Framework, model: &ModelSpec, tasks: Vec<TaskOutcome>) -> ModelOutcome {
+    let mut inference_secs = 0.0f64;
+    let mut compile_secs = 0.0f64;
+    let mut search_secs = 0.0f64;
+    let mut measurements = 0usize;
+    let mut fresh = 0usize;
+    let mut cache_served = 0usize;
+    for t in &tasks {
+        inference_secs += t.weight as f64 * t.result.best.seconds;
+        compile_secs += t.result.wall_secs + t.result.modeled_hw_secs;
+        search_secs += t.result.wall_secs;
+        measurements += t.result.measurements;
+        fresh += t.result.fresh;
+        cache_served += t.result.cache_served;
+    }
+    ModelOutcome {
+        framework,
+        model: model.name.to_string(),
+        tasks,
+        inference_secs,
+        compile_secs,
+        search_secs,
+        measurements,
+        fresh,
+        cache_served,
+    }
+}
+
 /// Tune one model end-to-end with one framework, using a private default
 /// measurement engine. Prefer [`tune_model_with`] with a shared engine when
 /// running several frameworks or models: tasks repeated across frameworks
@@ -183,7 +350,8 @@ pub fn tune_model(
     tune_model_with(&engine, framework, model, budget, quick, seed)
 }
 
-/// Tune one model end-to-end with one framework through a shared engine.
+/// Tune one model end-to-end with one framework through a shared engine,
+/// tasks in series.
 pub fn tune_model_with(
     engine: &eval::Engine,
     framework: Framework,
@@ -192,42 +360,66 @@ pub fn tune_model_with(
     quick: bool,
     seed: u64,
 ) -> ModelOutcome {
-    let mut tasks = Vec::new();
-    let mut inference_secs = 0.0f64;
-    let mut compile_secs = 0.0f64;
-    let mut search_secs = 0.0f64;
-    let mut measurements = 0usize;
-    for (i, (task, weight)) in model.unique_tasks().iter().enumerate() {
-        let space = ConfigSpace::for_task(task, framework.tunes_hardware());
-        let mut strategy = framework.build(space.clone(), quick, seed ^ (i as u64) << 32);
-        let result = tune_task_with(engine, &space, strategy.as_mut(), budget);
-        crate::log_info!(
-            "compare",
-            "{} {} task {}/{} {}: best {:.3e}s over {} measurements ({})",
+    let uniq = model.unique_tasks();
+    let tasks: Vec<TaskOutcome> = uniq
+        .iter()
+        .enumerate()
+        .map(|(i, (task, weight))| {
+            run_job(
+                engine,
+                framework,
+                framework.name(),
+                model.name,
+                task,
+                *weight,
+                i,
+                uniq.len(),
+                budget,
+                quick,
+                seed,
+                None,
+            )
+        })
+        .collect();
+    aggregate(framework, model, tasks)
+}
+
+/// [`tune_model_with`] with every task tuned as a concurrent tenant of
+/// `shared`: each (framework, task) job runs on a `util::pool` thread, the
+/// shared dispatcher interleaves their measurement batches, and (when the
+/// run carries a ledger) each tenant is debited per planned point. The
+/// measurement backends are deterministic, so the outcome — best points,
+/// measurement counts, traces — is identical to the serial driver's for
+/// the same seed; only wall-clock scheduling differs.
+pub fn tune_model_concurrent(
+    engine: &eval::Engine,
+    framework: Framework,
+    model: &ModelSpec,
+    budget: TuneBudget,
+    quick: bool,
+    seed: u64,
+    shared: &SharedRun,
+) -> ModelOutcome {
+    let uniq = model.unique_tasks();
+    let indices: Vec<usize> = (0..uniq.len()).collect();
+    let tasks: Vec<TaskOutcome> = parallel_map(&indices, indices.len().max(1), |_, &i| {
+        let (task, weight) = &uniq[i];
+        run_job(
+            engine,
+            framework,
             framework.name(),
             model.name,
-            i + 1,
-            model.unique_tasks().len(),
-            task.short_id(),
-            result.best.seconds,
-            result.measurements,
-            strategy.diag()
-        );
-        inference_secs += *weight as f64 * result.best.seconds;
-        compile_secs += result.wall_secs + result.modeled_hw_secs;
-        search_secs += result.wall_secs;
-        measurements += result.measurements;
-        tasks.push(TaskOutcome { task_id: task.short_id(), weight: *weight, result });
-    }
-    ModelOutcome {
-        framework,
-        model: model.name.to_string(),
-        tasks,
-        inference_secs,
-        compile_secs,
-        search_secs,
-        measurements,
-    }
+            task,
+            *weight,
+            i,
+            uniq.len(),
+            budget,
+            quick,
+            seed,
+            Some(shared),
+        )
+    });
+    aggregate(framework, model, tasks)
 }
 
 /// Compare a set of frameworks on one model. All frameworks share one
@@ -245,7 +437,7 @@ pub fn compare_frameworks(
 }
 
 /// [`compare_frameworks`] over a caller-provided engine (shared cache /
-/// journal across models and processes).
+/// journal across models and processes), serial driver.
 pub fn compare_frameworks_with(
     engine: &eval::Engine,
     frameworks: &[Framework],
@@ -254,17 +446,104 @@ pub fn compare_frameworks_with(
     quick: bool,
     seed: u64,
 ) -> CompareReport {
-    let outcomes = frameworks
+    let opts = DriverOptions::default();
+    compare_frameworks_opts(engine, frameworks, model, budget, quick, seed, opts)
+}
+
+/// The full driver. With [`DriverOptions::concurrent`], every (framework,
+/// task) job becomes a tenant competing for the shared engine/fleet —
+/// jobs spawn on `util::pool`, the dispatcher interleaves their batches
+/// FIFO, and the task seeds match the serial driver's so a deterministic
+/// backend reproduces its results exactly. With
+/// [`DriverOptions::shared_budget`], a [`BudgetLedger`] additionally
+/// enforces the equal-budget protocol and its stats land on the report.
+pub fn compare_frameworks_opts(
+    engine: &eval::Engine,
+    frameworks: &[Framework],
+    model: &ModelSpec,
+    budget: TuneBudget,
+    quick: bool,
+    seed: u64,
+    opts: DriverOptions,
+) -> CompareReport {
+    let uniq = model.unique_tasks();
+    let shared = SharedRun::new(engine, &budget, opts.shared_budget);
+    let shared_ref = opts.multi_tenant().then_some(&shared);
+
+    // Ledger identities: the framework name, uniquified when the same
+    // framework is listed twice (two "random" entries must not drain one
+    // shared allowance).
+    let labels: Vec<String> = frameworks
         .iter()
-        .map(|&f| tune_model_with(engine, f, model, budget, quick, seed))
+        .enumerate()
+        .map(|(i, f)| {
+            let dups_before = frameworks[..i].iter().filter(|g| **g == *f).count();
+            if dups_before == 0 {
+                f.name().to_string()
+            } else {
+                format!("{}#{}", f.name(), dups_before + 1)
+            }
+        })
         .collect();
+
+    // Flat (framework, task) job list, framework-major so the serial path
+    // reproduces the original driver's order exactly.
+    let jobs: Vec<(usize, usize)> = (0..frameworks.len())
+        .flat_map(|f| (0..uniq.len()).map(move |t| (f, t)))
+        .collect();
+    let pool_workers = if opts.concurrent { jobs.len().max(1) } else { 1 };
+    let flat: Vec<TaskOutcome> = parallel_map(&jobs, pool_workers, |_, &(f, t)| {
+        let (task, weight) = &uniq[t];
+        run_job(
+            engine,
+            frameworks[f],
+            &labels[f],
+            model.name,
+            task,
+            *weight,
+            t,
+            uniq.len(),
+            budget,
+            quick,
+            seed,
+            shared_ref,
+        )
+    });
+
+    // Regroup framework-major (parallel_map preserves input order).
+    let mut outcomes = Vec::with_capacity(frameworks.len());
+    let mut flat = flat.into_iter();
+    for &f in frameworks {
+        let tasks: Vec<TaskOutcome> = flat.by_ref().take(uniq.len()).collect();
+        outcomes.push(aggregate(f, model, tasks));
+    }
     crate::log_info!("compare", "{}: eval {}", model.name, engine.summary());
-    CompareReport { model: model.name.to_string(), outcomes }
+    if opts.concurrent {
+        let d = shared.dispatcher.stats();
+        crate::log_info!(
+            "compare",
+            "{}: dispatcher slots={} dispatched={} waited={} peak_queue={}",
+            model.name,
+            d.slots,
+            d.dispatched,
+            d.waited,
+            d.peak_queue
+        );
+    }
+    if let Some(stats) = shared.ledger_stats() {
+        crate::log_info!("compare", "{}: ledger {}", model.name, stats.summary());
+    }
+    CompareReport {
+        model: model.name.to_string(),
+        outcomes,
+        ledger: shared.ledger_stats(),
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::eval::{AnalyticalBackend, Engine};
     use crate::workload::model_by_name;
 
     fn tiny_budget() -> TuneBudget {
@@ -295,6 +574,31 @@ mod tests {
     }
 
     #[test]
+    fn arco_swonly_never_varies_a_hardware_knob() {
+        // Regression: build() must enforce the frozen-hardware constraint
+        // even when handed a fully-tunable space, and no planning path —
+        // exploration, CS selection, CS *synthesis*, random fallback —
+        // may emit a point with non-default hardware.
+        let task = crate::workload::Conv2dTask::new(1, 64, 28, 28, 64, 3, 3, 1, 1);
+        let tunable = ConfigSpace::for_task(&task, true);
+        let engine = Engine::with_backend(Box::new(AnalyticalBackend), 2, true);
+        let mut strategy = Framework::ArcoSwOnly.build(tunable.clone(), true, 23);
+        for _round in 0..4 {
+            let plan = strategy.plan(16);
+            for p in &plan {
+                let (hw, _) = tunable.decode(p);
+                assert_eq!(
+                    (hw.batch, hw.block_in, hw.block_out),
+                    (1, 16, 16),
+                    "arco-swonly planned non-default hardware: {}",
+                    tunable.render(p)
+                );
+            }
+            strategy.observe(&engine.measure_paired(&tunable, plan).pairs);
+        }
+    }
+
+    #[test]
     fn tune_model_aggregates_weighted_inference_time() {
         // AlexNet is the smallest zoo model (5 tasks, weight 1 each).
         let model = model_by_name("alexnet").unwrap();
@@ -313,8 +617,10 @@ mod tests {
         for t in &out.tasks {
             assert!(t.result.measurements <= 48);
             assert!(t.result.measurements > 0);
+            assert_eq!(t.result.fresh + t.result.cache_served, t.result.measurements);
         }
         assert!(out.measurements <= 48 * model.unique_tasks().len());
+        assert_eq!(out.fresh + out.cache_served, out.measurements);
     }
 
     #[test]
@@ -330,5 +636,80 @@ mod tests {
         let rel = report.throughput_vs_autotvm(Framework::AutoTvm).unwrap();
         assert!((rel - 1.0).abs() < 1e-12);
         assert!(report.throughput_vs_autotvm(Framework::Random).unwrap() > 0.0);
+        // The serial driver carries no ledger.
+        assert!(report.ledger.is_none());
+    }
+
+    #[test]
+    fn shared_budget_driver_debits_and_reports() {
+        let model = model_by_name("alexnet").unwrap();
+        let budget =
+            TuneBudget { total_measurements: 8, batch: 4, workers: 2, ..Default::default() };
+        let engine = Engine::with_backend(Box::new(AnalyticalBackend), 2, true);
+        let report = compare_frameworks_opts(
+            &engine,
+            &[Framework::Random, Framework::AutoTvm],
+            &model,
+            budget,
+            true,
+            5,
+            DriverOptions { concurrent: true, shared_budget: true },
+        );
+        let ledger = report.ledger.as_ref().expect("shared-budget run must carry ledger stats");
+        assert_eq!(ledger.per_task_points, 8);
+        // Every tenant's settled points match its debits, and nothing
+        // breached the per-task allowance.
+        assert!(!ledger.tenants.is_empty());
+        for t in &ledger.tenants {
+            assert!(t.account.charged <= 8, "{}/{} over budget", t.framework, t.task);
+            assert_eq!(t.account.settled(), t.account.charged);
+        }
+        // Outcome-side accounting agrees with the ledger.
+        for o in &report.outcomes {
+            let charged: usize = ledger
+                .tenants
+                .iter()
+                .filter(|t| t.framework == o.framework.name())
+                .map(|t| t.account.charged)
+                .sum();
+            assert_eq!(charged, o.measurements);
+        }
+    }
+
+    #[test]
+    fn duplicate_frameworks_get_separate_ledger_accounts() {
+        let model = model_by_name("alexnet").unwrap();
+        let budget =
+            TuneBudget { total_measurements: 6, batch: 3, workers: 2, ..Default::default() };
+        let engine = Engine::with_backend(Box::new(AnalyticalBackend), 2, true);
+        let report = compare_frameworks_opts(
+            &engine,
+            &[Framework::Random, Framework::Random],
+            &model,
+            budget,
+            true,
+            7,
+            DriverOptions { concurrent: false, shared_budget: true },
+        );
+        // Both entries must spend their own allowance, not drain one.
+        assert_eq!(report.outcomes[0].measurements, report.outcomes[1].measurements);
+        let ledger = report.ledger.unwrap();
+        assert!(ledger.tenants.iter().any(|t| t.framework == "random"));
+        assert!(ledger.tenants.iter().any(|t| t.framework == "random#2"));
+        // The second pass replans the identical points: all cache-served.
+        let second: usize = ledger
+            .tenants
+            .iter()
+            .filter(|t| t.framework == "random#2")
+            .map(|t| t.account.cache_served)
+            .sum();
+        let second_charged: usize = ledger
+            .tenants
+            .iter()
+            .filter(|t| t.framework == "random#2")
+            .map(|t| t.account.charged)
+            .sum();
+        assert_eq!(second, second_charged, "identical replans must be fully cache-served");
+        assert!(second > 0);
     }
 }

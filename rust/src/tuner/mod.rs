@@ -7,8 +7,12 @@ pub mod strategy;
 pub mod task_tuner;
 
 pub use compare::{
-    compare_frameworks, compare_frameworks_with, tune_model, tune_model_with, CompareReport,
-    Framework, ModelOutcome,
+    compare_frameworks, compare_frameworks_opts, compare_frameworks_with, tune_model,
+    tune_model_concurrent, tune_model_with, CompareReport, DriverOptions, Framework,
+    ModelOutcome, SharedRun, TaskOutcome,
 };
 pub use strategy::Strategy;
-pub use task_tuner::{tune_task, tune_task_with, TaskTuneResult, TraceEntry, TuneBudget};
+pub use task_tuner::{
+    tune_task, tune_task_tenant, tune_task_with, TaskTuneResult, TenantContext, TraceEntry,
+    TuneBudget,
+};

@@ -1,7 +1,7 @@
 //! Per-task tuning loop: budgeted plan → batched engine measure → observe.
 
 use super::strategy::Strategy;
-use crate::eval::{self, MeasureResult};
+use crate::eval::{self, BudgetLedger, Dispatcher, MeasureResult};
 use crate::space::{ConfigSpace, PointConfig};
 use crate::util::timer::{PhaseTimer, Stopwatch};
 
@@ -76,7 +76,17 @@ pub struct TaskTuneResult {
     pub best_point: Option<PointConfig>,
     pub best: MeasureResult,
     pub measurements: usize,
+    /// Of `measurements`, points whose simulation actually ran for this
+    /// job (see [`crate::eval::Origin`]).
+    pub fresh: usize,
+    /// Of `measurements`, points served from shared state (cache, dedup,
+    /// coalescing, fleet shard caches) — same debit, no simulator time.
+    pub cache_served: usize,
     pub invalid: usize,
+    /// Wall-clock of this job excluding time spent queued behind competing
+    /// tenants at the dispatcher (scheduling wait is not search compute;
+    /// without the exclusion a concurrent run would report inflated,
+    /// arrival-order-dependent search/compile seconds).
     pub wall_secs: f64,
     /// Modeled wall-clock a real testbed would spend on the hardware
     /// measurements (overhead + repeats x runtime; timeout for invalid) —
@@ -95,7 +105,16 @@ impl TaskTuneResult {
     /// Modeled time (s) until the running best first reached
     /// `target_gflops` — the time-to-quality metric behind Fig. 6.
     /// Returns the full modeled time if the target was never reached.
+    ///
+    /// A non-positive (or NaN) target is degenerate — it usually means the
+    /// baseline found nothing valid — and is treated as *never reached*:
+    /// otherwise the very first trace entry, even an invalid config with
+    /// `best_gflops == 0`, would "reach parity" instantly and make the
+    /// time-to-parity comparison meaningless.
     pub fn modeled_secs_to_quality(&self, target_gflops: f64) -> f64 {
+        if target_gflops <= 0.0 || target_gflops.is_nan() {
+            return self.modeled_hw_secs;
+        }
         for e in &self.trace {
             if e.best_gflops >= target_gflops {
                 return e.modeled_cum_secs;
@@ -120,12 +139,44 @@ pub fn tune_task(
     tune_task_with(&engine, space, strategy, budget)
 }
 
+/// Multi-tenant identity of one tuning job: who it is (for ledger
+/// accounting) and which shared scheduling infrastructure its measurement
+/// batches go through. Built by the concurrent comparison driver
+/// ([`crate::tuner::compare`]); standalone runs pass `None` and keep the
+/// classic single-tenant behaviour.
+pub struct TenantContext<'a> {
+    /// Equal-budget ledger charged before every batch (None: the
+    /// dispatcher still interleaves, but only the local budget applies).
+    pub ledger: Option<&'a BudgetLedger>,
+    /// FIFO admission of measurement batches across competing jobs.
+    pub dispatcher: &'a Dispatcher,
+    /// Ledger identity, first key.
+    pub framework: &'a str,
+    /// Ledger identity, second key.
+    pub task_id: &'a str,
+}
+
 /// Tune one task, measuring through the caller's engine.
 pub fn tune_task_with(
     engine: &eval::Engine,
     space: &ConfigSpace,
     strategy: &mut dyn Strategy,
     budget: TuneBudget,
+) -> TaskTuneResult {
+    tune_task_tenant(engine, space, strategy, budget, None)
+}
+
+/// [`tune_task_with`] as one tenant of a shared multi-tenant run: batches
+/// queue on the tenant's dispatcher (so competing jobs interleave instead
+/// of monopolizing the fleet) and, when a ledger is present, every batch
+/// is charged against the (framework, task) allowance before measuring —
+/// the plan is truncated to what the ledger admits.
+pub fn tune_task_tenant(
+    engine: &eval::Engine,
+    space: &ConfigSpace,
+    strategy: &mut dyn Strategy,
+    budget: TuneBudget,
+    tenant: Option<&TenantContext>,
 ) -> TaskTuneResult {
     let sw = Stopwatch::start();
     let mut timer = PhaseTimer::new();
@@ -140,21 +191,58 @@ pub fn tune_task_with(
     let mut best_point: Option<PointConfig> = None;
     let mut trace = Vec::new();
     let mut measured = 0usize;
+    let mut fresh = 0usize;
+    let mut cache_served = 0usize;
     let mut invalid = 0usize;
     let mut iteration = 0usize;
     let mut modeled_hw_secs = 0.0f64;
 
     while measured < budget.total_measurements && iteration < budget.max_iterations {
         let want = budget.batch.min(budget.total_measurements - measured);
-        let plan = timer.time("plan", || strategy.plan(want));
+        let mut plan = timer.time("plan", || strategy.plan(want));
+        if plan.len() > want {
+            // Strategies are asked for *up to* `want` points; one that
+            // over-plans must not breach `total_measurements`.
+            crate::log_debug!(
+                "tuner",
+                "{} planned {} configs for a budget slot of {want}; truncating",
+                strategy.name(),
+                plan.len()
+            );
+            plan.truncate(want);
+        }
+        if let Some(t) = tenant {
+            if let Some(ledger) = t.ledger {
+                let admitted = ledger.charge(t.framework, t.task_id, plan.len());
+                plan.truncate(admitted);
+            }
+        }
         if plan.is_empty() {
             crate::log_debug!("tuner", "{} stopped early at {measured}", strategy.name());
             break;
         }
-        let pairs: Vec<(PointConfig, MeasureResult)> =
-            timer.time("measure", || engine.measure_paired(space, plan));
-        for (p, r) in &pairs {
+        // Queueing behind competing tenants is scheduling, not search
+        // compute: time it as its own phase and keep it out of this job's
+        // wall clock, so the concurrent driver reports the same
+        // search/compile seconds the serial driver would.
+        let permit = timer.time("queue", || {
+            tenant.map(|t| {
+                // Fleet capacity moves (shard death/revival): re-read it so
+                // admission tracks how many batches can really run at once.
+                t.dispatcher.set_slots(engine.concurrent_batch_capacity());
+                t.dispatcher.checkout()
+            })
+        });
+        let batch = timer.time("measure", || engine.measure_paired(space, plan));
+        drop(permit);
+        let modeled_before = modeled_hw_secs;
+        for ((p, r), origin) in batch.pairs.iter().zip(&batch.origins) {
             measured += 1;
+            if origin.is_fresh() {
+                fresh += 1;
+            } else {
+                cache_served += 1;
+            }
             if !r.valid {
                 invalid += 1;
                 modeled_hw_secs += budget.invalid_timeout_secs;
@@ -176,7 +264,19 @@ pub fn tune_task_with(
                 modeled_cum_secs: modeled_hw_secs,
             });
         }
-        timer.time("observe", || strategy.observe(&pairs));
+        if let Some(t) = tenant {
+            if let Some(ledger) = t.ledger {
+                // Same debit whoever measured first: the modeled cost is a
+                // pure function of the (deterministic) results.
+                ledger.settle(
+                    t.framework,
+                    t.task_id,
+                    &batch.origins,
+                    modeled_hw_secs - modeled_before,
+                );
+            }
+        }
+        timer.time("observe", || strategy.observe(&batch.pairs));
         iteration += 1;
     }
 
@@ -184,8 +284,10 @@ pub fn tune_task_with(
         best_point,
         best,
         measurements: measured,
+        fresh,
+        cache_served,
         invalid,
-        wall_secs: sw.elapsed_secs(),
+        wall_secs: (sw.elapsed_secs() - timer.total_secs("queue")).max(0.0),
         modeled_hw_secs,
         trace,
         timer,
@@ -308,6 +410,96 @@ mod tests {
         // Same seed → same plan → the second run is fully cache-served.
         assert_eq!(engine.stats().simulations, sims_after_first);
         assert!(engine.stats().cache_hits >= 48);
+    }
+
+    /// A strategy that ignores the requested batch size and plans three
+    /// times as many points — the over-planning bug's trigger.
+    struct OverPlanner {
+        inner: RandomProbe,
+    }
+
+    impl Strategy for OverPlanner {
+        fn name(&self) -> &'static str {
+            "overplanner"
+        }
+        fn plan(&mut self, batch: usize) -> Vec<PointConfig> {
+            self.inner.plan(batch * 3)
+        }
+        fn observe(&mut self, results: &[(PointConfig, MeasureResult)]) {
+            self.inner.observe(results);
+        }
+    }
+
+    #[test]
+    fn over_planning_strategy_cannot_breach_the_budget() {
+        let s = space();
+        let mut strat = OverPlanner {
+            inner: RandomProbe {
+                space: s.clone(),
+                rng: Pcg32::seeded(6),
+                seen: HashSet::new(),
+                observed: 0,
+            },
+        };
+        let budget =
+            TuneBudget { total_measurements: 40, batch: 16, workers: 2, ..Default::default() };
+        let r = tune_task(&s, &mut strat, budget);
+        assert_eq!(r.measurements, 40, "plan truncation must land exactly on the budget");
+        assert_eq!(r.trace.len(), 40);
+        assert_eq!(r.trace.last().unwrap().ordinal, 40);
+        // The strategy only observes what was actually measured.
+        assert_eq!(strat.inner.observed, 40);
+    }
+
+    #[test]
+    fn degenerate_parity_target_is_never_reached() {
+        let s = space();
+        let mut strat = RandomProbe {
+            space: s.clone(),
+            rng: Pcg32::seeded(8),
+            seen: HashSet::new(),
+            observed: 0,
+        };
+        let budget =
+            TuneBudget { total_measurements: 16, batch: 8, workers: 2, ..Default::default() };
+        let r = tune_task(&s, &mut strat, budget);
+        assert!(r.modeled_hw_secs > 0.0);
+        // A zero/negative/NaN target (missing or empty baseline) charges
+        // the full modeled time instead of "parity at the first entry".
+        assert_eq!(r.modeled_secs_to_quality(0.0), r.modeled_hw_secs);
+        assert_eq!(r.modeled_secs_to_quality(-1.0), r.modeled_hw_secs);
+        assert_eq!(r.modeled_secs_to_quality(f64::NAN), r.modeled_hw_secs);
+        // A real (positive) target is still reachable mid-trace.
+        let reached = r.trace.last().unwrap().best_gflops;
+        if reached > 0.0 {
+            assert!(r.modeled_secs_to_quality(reached * 0.5) <= r.modeled_hw_secs);
+        }
+    }
+
+    #[test]
+    fn provenance_counts_cover_every_measurement() {
+        let s = space();
+        let engine = crate::eval::Engine::vta_sim(2);
+        let budget =
+            TuneBudget { total_measurements: 32, batch: 16, workers: 2, ..Default::default() };
+        let run = |engine: &crate::eval::Engine, seed: u64| {
+            let mut strat = RandomProbe {
+                space: s.clone(),
+                rng: Pcg32::seeded(seed),
+                seen: HashSet::new(),
+                observed: 0,
+            };
+            tune_task_with(engine, &s, &mut strat, budget)
+        };
+        let a = run(&engine, 12);
+        assert_eq!(a.fresh + a.cache_served, a.measurements);
+        assert_eq!(a.fresh, a.measurements, "first run on a cold cache is all fresh");
+        // The identical run replays from the cache: same debit, no
+        // simulator time — the "measure once, charge everyone" split.
+        let b = run(&engine, 12);
+        assert_eq!(b.measurements, a.measurements);
+        assert_eq!(b.fresh, 0);
+        assert_eq!(b.cache_served, b.measurements);
     }
 
     #[test]

@@ -1,0 +1,210 @@
+//! Equal-budget protocol end-to-end: the concurrent multi-tenant driver
+//! must reproduce the serial driver's results exactly (deterministic
+//! backends), the shared ledger must debit every admitted point and never
+//! breach the per-task allowance, and both properties must hold when the
+//! measurements flow through a loopback two-shard `serve-measure` fleet.
+
+use arco::eval::{
+    serve_measure_local, BackendKind, BackendSpec, Engine, EngineConfig, ServerHandle,
+};
+use arco::tuner::{
+    compare_frameworks_opts, compare_frameworks_with, tune_model_concurrent, tune_model_with,
+    CompareReport, DriverOptions, Framework, SharedRun, TuneBudget,
+};
+use arco::workload::model_by_name;
+use std::sync::Arc;
+
+/// The analytical backend keeps these end-to-end runs CI-fast while still
+/// exercising the full plan → charge → dispatch → measure → settle path.
+fn analytical_engine() -> Engine {
+    Engine::new(EngineConfig {
+        backend: BackendKind::Analytical.into(),
+        workers: 2,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn budget() -> TuneBudget {
+    TuneBudget { total_measurements: 12, batch: 4, workers: 2, ..Default::default() }
+}
+
+/// Spawn a loopback analytical shard.
+fn shard() -> ServerHandle {
+    serve_measure_local(Arc::new(analytical_engine())).unwrap()
+}
+
+fn assert_same_outcomes(serial: &CompareReport, other: &CompareReport, context: &str) {
+    assert_eq!(serial.outcomes.len(), other.outcomes.len());
+    for (s, o) in serial.outcomes.iter().zip(&other.outcomes) {
+        assert_eq!(s.framework, o.framework);
+        assert_eq!(s.tasks.len(), o.tasks.len());
+        for (st, ot) in s.tasks.iter().zip(&o.tasks) {
+            assert_eq!(st.task_id, ot.task_id);
+            assert_eq!(
+                st.result.best_point, ot.result.best_point,
+                "[{context}] {} {}: best point diverged",
+                s.framework.name(),
+                st.task_id
+            );
+            assert_eq!(st.result.best.seconds, ot.result.best.seconds);
+            assert_eq!(st.result.best.cycles, ot.result.best.cycles);
+            assert_eq!(
+                st.result.measurements, ot.result.measurements,
+                "[{context}] {} {}: measurement count diverged",
+                s.framework.name(),
+                st.task_id
+            );
+        }
+        assert_eq!(s.inference_secs, o.inference_secs);
+    }
+}
+
+#[test]
+fn concurrent_tune_model_matches_serial_best_points() {
+    let model = model_by_name("alexnet").unwrap();
+
+    let serial_engine = analytical_engine();
+    let serial = tune_model_with(&serial_engine, Framework::AutoTvm, &model, budget(), true, 9);
+
+    let concurrent_engine = analytical_engine();
+    let shared = SharedRun::new(&concurrent_engine, &budget(), true);
+    let concurrent = tune_model_concurrent(
+        &concurrent_engine,
+        Framework::AutoTvm,
+        &model,
+        budget(),
+        true,
+        9,
+        &shared,
+    );
+
+    assert_eq!(serial.tasks.len(), concurrent.tasks.len());
+    for (s, c) in serial.tasks.iter().zip(&concurrent.tasks) {
+        assert_eq!(s.task_id, c.task_id);
+        assert_eq!(s.result.best_point, c.result.best_point, "task {}", s.task_id);
+        assert_eq!(s.result.best.seconds, c.result.best.seconds);
+        assert_eq!(s.result.measurements, c.result.measurements);
+    }
+    assert_eq!(serial.inference_secs, concurrent.inference_secs);
+    // Every task job was debited on the shared ledger, exactly what it
+    // measured.
+    let ledger = shared.ledger().expect("shared-budget run has a ledger");
+    for t in &concurrent.tasks {
+        let account = ledger.account("autotvm", &t.task_id);
+        assert_eq!(account.charged, t.result.measurements);
+        assert_eq!(account.settled(), account.charged);
+        assert!(account.charged <= budget().total_measurements);
+    }
+}
+
+#[test]
+fn shared_budget_paper_set_over_two_shard_fleet() {
+    let model = model_by_name("alexnet").unwrap();
+    let frameworks = Framework::paper_set();
+
+    // Reference: the serial in-process driver on a fresh engine.
+    let serial = compare_frameworks_with(
+        &analytical_engine(),
+        &frameworks,
+        &model,
+        budget(),
+        true,
+        5,
+    );
+
+    // The same comparison, concurrent with a shared ledger, measuring
+    // through a loopback two-shard fleet.
+    let shard_a = shard();
+    let shard_b = shard();
+    let fleet = Engine::new(EngineConfig {
+        backend: BackendSpec::Remote(vec![
+            shard_a.addr().to_string(),
+            shard_b.addr().to_string(),
+        ]),
+        workers: 2,
+        ..Default::default()
+    })
+    .unwrap();
+    assert_eq!(fleet.concurrent_batch_capacity(), 2, "two alive shards = two batch slots");
+    let report = compare_frameworks_opts(
+        &fleet,
+        &frameworks,
+        &model,
+        budget(),
+        true,
+        5,
+        DriverOptions { concurrent: true, shared_budget: true },
+    );
+
+    // Trustworthy numbers: the fleet-concurrent run reproduces the serial
+    // in-process run point for point — per (framework, task), the same
+    // best configuration and the same measurement count (i.e. every
+    // framework is debited identically across the two drivers).
+    assert_same_outcomes(&serial, &report, "fleet-concurrent vs serial");
+
+    // Ledger invariants: present, within the allowance, fully settled,
+    // and in agreement with the per-framework outcome counts.
+    let ledger = report.ledger.as_ref().expect("shared-budget run must carry ledger stats");
+    assert_eq!(ledger.per_task_points, budget().total_measurements);
+    for t in &ledger.tenants {
+        assert!(
+            t.account.charged <= ledger.per_task_points,
+            "{}/{} breached the budget",
+            t.framework,
+            t.task
+        );
+        assert_eq!(t.account.settled(), t.account.charged);
+    }
+    for o in &report.outcomes {
+        let charged: usize = ledger
+            .tenants
+            .iter()
+            .filter(|t| t.framework == o.framework.name())
+            .map(|t| t.account.charged)
+            .sum();
+        assert_eq!(charged, o.measurements, "{} ledger/outcome mismatch", o.framework.name());
+        assert_eq!(o.fresh + o.cache_served, o.measurements);
+    }
+    // The fleet served the run: shard engines saw real simulations, and
+    // the shard-side `stats` op answers over the same wire.
+    let sims_a = shard_a.engine().stats().simulations;
+    let sims_b = shard_b.engine().stats().simulations;
+    assert!(sims_a + sims_b > 0, "no shard simulated anything");
+    let fleet_stats = fleet.fleet_stats();
+    assert_eq!(fleet_stats.len(), 2);
+    for (_addr, stats) in &fleet_stats {
+        assert!(stats.get("simulations").is_some());
+        assert!(stats.get("active_connections").is_some());
+    }
+    shard_a.shutdown();
+    shard_b.shutdown();
+}
+
+#[test]
+fn ledger_exhaustion_stops_a_job_mid_batch() {
+    // A ledger smaller than the local budget is the binding constraint:
+    // with 10 points and batches of 4 the last batch is truncated to 2.
+    use arco::eval::{BudgetLedger, Dispatcher};
+    use arco::space::ConfigSpace;
+    use arco::tuner::{tune_task_tenant, TenantContext};
+    use arco::workload::Conv2dTask;
+
+    let space = ConfigSpace::for_task(&Conv2dTask::new(1, 32, 28, 28, 32, 3, 3, 1, 1), true);
+    let engine = analytical_engine();
+    let ledger = BudgetLedger::new(10);
+    let dispatcher = Dispatcher::new(1);
+    let tenant = TenantContext {
+        ledger: Some(&ledger),
+        dispatcher: &dispatcher,
+        framework: "random",
+        task_id: "t0",
+    };
+    let mut strategy = arco::baselines::RandomSearch::new(space.clone(), 3);
+    let big = TuneBudget { total_measurements: 100, batch: 4, workers: 2, ..Default::default() };
+    let result = tune_task_tenant(&engine, &space, &mut strategy, big, Some(&tenant));
+    assert_eq!(result.measurements, 10, "the shared ledger must cap the job");
+    assert_eq!(ledger.account("random", "t0").charged, 10);
+    assert_eq!(ledger.remaining("random", "t0"), 0);
+    assert_eq!(result.trace.len(), 10);
+}

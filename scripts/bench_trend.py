@@ -1,0 +1,118 @@
+#!/usr/bin/env python3
+"""Bench trend report: compare this commit's BENCH_*.json timings against
+the previous commit's artifact and fail on a large engine regression.
+
+The `bench-quick` CI job uploads `results/bench/*.json` (renamed
+`BENCH_<suite>_<sha>.json`) per commit. This script pairs benches by
+(suite, bench name) between a baseline directory and a current directory,
+prints the trend table, and exits non-zero when any bench regresses by
+more than the threshold (default 25% on mean_ns).
+
+Quick-mode timings on shared CI runners are noisy; the default threshold
+is deliberately loose so only step-change regressions (an accidental
+O(n^2), a lost cache) trip it. Benches present on only one side are
+reported but never fatal (suites come and go).
+
+Usage:
+  scripts/bench_trend.py --prev DIR --curr DIR [--threshold 25]
+
+Exit codes: 0 ok / nothing comparable, 1 regression, 2 usage error.
+"""
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def load_dir(path):
+    """Map (suite, bench name) -> mean_ns over every bench JSON in path."""
+    out = {}
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        try:
+            with open(f) as fh:
+                doc = json.load(fh)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"warning: skipping unreadable {f}: {e}", file=sys.stderr)
+            continue
+        suite = doc.get("suite")
+        results = doc.get("results")
+        if not isinstance(suite, str) or not isinstance(results, list):
+            print(f"warning: {f} is not a bench summary, skipping", file=sys.stderr)
+            continue
+        for r in results:
+            name, mean = r.get("name"), r.get("mean_ns")
+            if isinstance(name, str) and isinstance(mean, (int, float)) and mean > 0:
+                out[(suite, name)] = float(mean)
+    return out
+
+
+def fmt_ns(ns):
+    if ns >= 1e9:
+        return f"{ns / 1e9:.3f}s"
+    if ns >= 1e6:
+        return f"{ns / 1e6:.3f}ms"
+    if ns >= 1e3:
+        return f"{ns / 1e3:.3f}us"
+    return f"{ns:.1f}ns"
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--prev", required=True, help="baseline bench dir (previous commit)")
+    ap.add_argument("--curr", required=True, help="current bench dir")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=25.0,
+        help="max allowed mean_ns regression, percent (default 25)",
+    )
+    args = ap.parse_args()
+    if not os.path.isdir(args.curr):
+        print(f"error: current dir {args.curr} does not exist", file=sys.stderr)
+        return 2
+
+    prev = load_dir(args.prev) if os.path.isdir(args.prev) else {}
+    curr = load_dir(args.curr)
+    if not prev:
+        print("bench-trend: no baseline artifact (first run or cache miss) — nothing to compare")
+        return 0
+    if not curr:
+        print("bench-trend: error: no current bench results", file=sys.stderr)
+        return 2
+
+    shared = sorted(set(prev) & set(curr))
+    regressions = []
+    print(f"bench-trend: {len(shared)} comparable bench(es), threshold +{args.threshold:.0f}%")
+    print(f"{'suite/bench':<52} {'prev':>10} {'curr':>10} {'delta':>8}")
+    for key in shared:
+        suite, name = key
+        delta = 100.0 * (curr[key] - prev[key]) / prev[key]
+        marker = ""
+        if delta > args.threshold:
+            marker = "  << REGRESSION"
+            regressions.append((key, delta))
+        print(
+            f"{suite + '/' + name:<52} {fmt_ns(prev[key]):>10} {fmt_ns(curr[key]):>10} "
+            f"{delta:>+7.1f}%{marker}"
+        )
+    for key in sorted(set(curr) - set(prev)):
+        print(f"{key[0] + '/' + key[1]:<52} {'-':>10} {fmt_ns(curr[key]):>10}     new")
+    for key in sorted(set(prev) - set(curr)):
+        print(f"{key[0] + '/' + key[1]:<52} {fmt_ns(prev[key]):>10} {'-':>10} dropped")
+
+    if regressions:
+        worst = max(regressions, key=lambda kv: kv[1])
+        print(
+            f"bench-trend: FAIL — {len(regressions)} bench(es) regressed past "
+            f"+{args.threshold:.0f}% (worst: {worst[0][0]}/{worst[0][1]} {worst[1]:+.1f}%)",
+            file=sys.stderr,
+        )
+        return 1
+    print("bench-trend: ok — no regression past the threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
