@@ -15,11 +15,11 @@ fn main() {
     let budget = common::budget();
     let seed = common::seed();
 
-    let full = tune_model(Framework::Arco, &model, budget, true, seed);
-    let sw_only = tune_model(Framework::ArcoSwOnly, &model, budget, true, seed);
-    let no_cs = tune_model(Framework::ArcoNoCs, &model, budget, true, seed);
-    let chameleon = tune_model(Framework::Chameleon, &model, budget, true, seed);
-    let random = tune_model(Framework::Random, &model, budget, true, seed);
+    let full = tune_model(Framework::Arco, &model, budget, true, seed).unwrap();
+    let sw_only = tune_model(Framework::ArcoSwOnly, &model, budget, true, seed).unwrap();
+    let no_cs = tune_model(Framework::ArcoNoCs, &model, budget, true, seed).unwrap();
+    let chameleon = tune_model(Framework::Chameleon, &model, budget, true, seed).unwrap();
+    let random = tune_model(Framework::Random, &model, budget, true, seed).unwrap();
 
     println!("\nablation results on resnet18 (mean inference secs; lower is better):");
     let rows = [

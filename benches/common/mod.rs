@@ -44,13 +44,10 @@ pub fn run_paper_comparison() -> Vec<CompareReport> {
             model.unique_tasks().len(),
             trials()
         );
-        reports.push(compare_frameworks(
-            &Framework::paper_set(),
-            &model,
-            budget,
-            true,
-            seed(),
-        ));
+        reports.push(
+            compare_frameworks(&Framework::paper_set(), &model, budget, true, seed())
+                .expect("measurement backend lost"),
+        );
     }
     reports
 }

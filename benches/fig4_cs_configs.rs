@@ -45,8 +45,8 @@ fn main() {
     let model = model_by_name("resnet18").unwrap();
     let budget = common::budget();
 
-    let with_cs = tune_model(Framework::Arco, &model, budget, true, common::seed());
-    let without_cs = tune_model(Framework::ArcoNoCs, &model, budget, true, common::seed());
+    let with_cs = tune_model(Framework::Arco, &model, budget, true, common::seed()).unwrap();
+    let without_cs = tune_model(Framework::ArcoNoCs, &model, budget, true, common::seed()).unwrap();
 
     let pick = |o: &ModelOutcome| {
         o.tasks

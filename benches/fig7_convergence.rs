@@ -16,7 +16,8 @@ fn main() {
         common::budget(),
         true,
         common::seed(),
-    );
+    )
+    .unwrap();
     let csv = report::fig7_convergence(&report_);
     report::write_result("fig7_convergence_resnet18.csv", &csv).unwrap();
     println!("{}", csv.lines().take(12).collect::<Vec<_>>().join("\n"));

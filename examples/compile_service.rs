@@ -76,7 +76,8 @@ fn main() {
                 };
                 let started = Instant::now();
                 let out =
-                    tune_model_with(engine, job.framework, &model, budget, true, 7 + job.id as u64);
+                    tune_model_with(engine, job.framework, &model, budget, true, 7 + job.id as u64)
+                        .expect("local backends never lose their fleet");
                 tx.send((wid, job, out, started.elapsed())).unwrap();
             });
         }

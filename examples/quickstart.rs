@@ -42,7 +42,7 @@ fn main() {
     // ARCO: three MAPPO agents + confidence sampling.
     let mut strategy = Arco::new(space.clone(), ArcoParams::quick(), 42);
     let budget = TuneBudget { total_measurements: 200, batch: 32, ..Default::default() };
-    let result = tune_task_with(&engine, &space, &mut strategy, budget);
+    let result = tune_task_with(&engine, &space, &mut strategy, budget).expect("local backends never lose their fleet");
 
     let best_point = result.best_point.expect("tuning found a config");
     println!(

@@ -42,7 +42,8 @@ fn main() {
 
     let budget = TuneBudget { total_measurements: trials, batch: 64, ..Default::default() };
     let frameworks = Framework::paper_set();
-    let report = compare_frameworks(&frameworks, &model, budget, true, 20260710);
+    let report = compare_frameworks(&frameworks, &model, budget, true, 20260710)
+        .expect("local backends never lose their fleet");
 
     println!("\n=== Table 6 row (mean inference time on VTA++, seconds) ===");
     for o in &report.outcomes {

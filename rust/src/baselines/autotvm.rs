@@ -252,9 +252,9 @@ mod tests {
         let s = space();
         let budget = TuneBudget { total_measurements: 192, batch: 32, workers: 2, ..Default::default() };
         let mut atvm = AutoTvm::new(s.clone(), AutoTvmParams::quick(), 7);
-        let r_atvm = tune_task(&s, &mut atvm, budget);
+        let r_atvm = tune_task(&s, &mut atvm, budget).unwrap();
         let mut rnd = crate::baselines::RandomSearch::new(s.clone(), 7);
-        let r_rnd = tune_task(&s, &mut rnd, budget);
+        let r_rnd = tune_task(&s, &mut rnd, budget).unwrap();
         assert!(
             r_atvm.best.gflops >= r_rnd.best.gflops * 0.95,
             "autotvm {} vs random {}",

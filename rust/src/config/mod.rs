@@ -10,7 +10,7 @@
 use crate::baselines::autotvm::AutoTvmParams;
 use crate::baselines::chameleon::ChameleonParams;
 use crate::costmodel::GbtParams;
-use crate::eval::{BackendKind, BackendSpec, EngineConfig};
+use crate::eval::{BackendKind, BackendSpec, EngineConfig, Placement};
 use crate::marl::exploration::ExploreParams;
 use crate::marl::strategy::ArcoParams;
 use crate::tuner::{DriverOptions, TuneBudget};
@@ -31,6 +31,11 @@ pub struct EvalSettings {
     pub cache_capacity: Option<usize>,
     /// Optional persistent measurement journal (JSONL), reused across runs.
     pub journal: Option<PathBuf>,
+    /// How a remote measurement fleet splits batches across shards:
+    /// `uniform` (reproducible default) or `weighted`
+    /// (throughput-proportional, for heterogeneous fleets). Ignored by
+    /// built-in local backends.
+    pub placement: Placement,
 }
 
 impl Default for EvalSettings {
@@ -40,6 +45,7 @@ impl Default for EvalSettings {
             cache: true,
             cache_capacity: None,
             journal: None,
+            placement: Placement::default(),
         }
     }
 }
@@ -53,6 +59,8 @@ impl EvalSettings {
             cache: self.cache,
             cache_capacity: self.cache_capacity,
             journal: self.journal.clone(),
+            warm_start: None,
+            placement: self.placement,
         }
     }
 }
@@ -162,6 +170,18 @@ impl RunConfig {
             if let Some(path) = e.get_str("journal") {
                 self.eval.journal = Some(PathBuf::from(path));
             }
+            if let Some(name) = e.get_str("placement") {
+                if let Some(p) = Placement::from_name(name) {
+                    self.eval.placement = p;
+                } else {
+                    crate::log_warn!(
+                        "config",
+                        "unknown eval placement '{name}' (known: {}); keeping {}",
+                        Placement::known_names().join(", "),
+                        self.eval.placement.name()
+                    );
+                }
+            }
         }
         if let Some(d) = doc.get("driver") {
             self.driver.concurrent = d.get_bool("concurrent").unwrap_or(self.driver.concurrent);
@@ -244,7 +264,7 @@ mod tests {
         c.apply_json(
             &Json::parse(
                 r#"{"eval": {"backend": "remote:10.0.0.1:4917,10.0.0.2:4917",
-                             "cache_capacity": 4096}}"#,
+                             "cache_capacity": 4096, "placement": "weighted"}}"#,
             )
             .unwrap(),
         );
@@ -253,8 +273,17 @@ mod tests {
             BackendSpec::Remote(vec!["10.0.0.1:4917".into(), "10.0.0.2:4917".into()])
         );
         assert_eq!(c.eval.cache_capacity, Some(4096));
+        assert_eq!(c.eval.placement, Placement::Weighted);
         let ec = c.eval.engine_config(2);
         assert_eq!(ec.cache_capacity, Some(4096));
+        assert_eq!(ec.placement, Placement::Weighted);
+        assert!(ec.warm_start.is_none());
+        // Unknown placement names are ignored, not fatal; uniform stays
+        // the reproducibility default.
+        let mut c2 = RunConfig::default();
+        assert_eq!(c2.eval.placement, Placement::Uniform);
+        c2.apply_json(&Json::parse(r#"{"eval": {"placement": "psychic"}}"#).unwrap());
+        assert_eq!(c2.eval.placement, Placement::Uniform);
     }
 
     #[test]

@@ -9,6 +9,85 @@ use crate::util::stats::ceil_div;
 use crate::vta::area::total_area_mm2;
 use crate::vta::config::{INP_BYTES, OUT_BYTES, WGT_BYTES};
 
+/// How a remote fleet splits each measurement batch across its alive
+/// shards. Local backends ignore it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Placement {
+    /// Equal-size contiguous chunks, one per alive shard — the
+    /// reproducible default: placement never depends on observed timings,
+    /// so two runs of the same fleet chunk identically.
+    #[default]
+    Uniform,
+    /// Chunk sizes proportional to estimated shard throughput: a per-point
+    /// service-time EWMA per shard, discounted by the queue depth the
+    /// shard's `stats` op reports. Heterogeneous fleets finish batches
+    /// sooner; measured *numbers* are identical either way (placement only
+    /// decides which deterministic shard runs which point).
+    Weighted,
+}
+
+impl Placement {
+    pub fn name(self) -> &'static str {
+        match self {
+            Placement::Uniform => "uniform",
+            Placement::Weighted => "weighted",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Placement> {
+        match s {
+            "uniform" => Some(Placement::Uniform),
+            "weighted" => Some(Placement::Weighted),
+            _ => None,
+        }
+    }
+
+    /// All selectable names, for CLI error messages.
+    pub fn known_names() -> &'static [&'static str] {
+        &["uniform", "weighted"]
+    }
+}
+
+/// Per-shard placement counters a remote fleet reports (empty for local
+/// backends): where the points went and the evidence behind the choice.
+#[derive(Debug, Clone)]
+pub struct ShardPlacement {
+    pub addr: String,
+    pub alive: bool,
+    /// Batch chunks this shard served.
+    pub batches: usize,
+    /// Points this shard served.
+    pub points: usize,
+    /// EWMA of observed service seconds per point (`None` before the
+    /// shard's first successfully served chunk).
+    pub ewma_secs_per_point: Option<f64>,
+    /// Queue depth (`active_batches`) the shard last reported.
+    pub queue_depth: usize,
+    /// Cache entries the shard reported preloaded at handshake (journal +
+    /// warm start) — the fleet history it inherited.
+    pub preloaded: usize,
+}
+
+impl ShardPlacement {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("addr", Json::str(self.addr.clone())),
+            ("alive", Json::Bool(self.alive)),
+            ("batches", Json::num(self.batches as f64)),
+            ("points", Json::num(self.points as f64)),
+            (
+                "ewma_secs_per_point",
+                match self.ewma_secs_per_point {
+                    Some(s) => Json::num(s),
+                    None => Json::Null,
+                },
+            ),
+            ("queue_depth", Json::num(self.queue_depth as f64)),
+            ("preloaded", Json::num(self.preloaded as f64)),
+        ])
+    }
+}
+
 /// One way of measuring a configuration. Implementations must be pure
 /// functions of `(space, point)` — the engine relies on determinism for
 /// caching and for order-independent parallel fan-out — and `Send + Sync`
@@ -50,6 +129,21 @@ pub trait MeasureBackend: Send + Sync {
         (results, fresh)
     }
 
+    /// Fallible [`measure_many_traced`](Self::measure_many_traced): the
+    /// variant the engine actually calls. Local backends cannot lose their
+    /// measurement substrate, so the default is infallible; a remote fleet
+    /// returns a typed [`super::remote::FleetLostError`] when no shard can
+    /// serve — the whole-fleet-outage case — instead of panicking, so a
+    /// tuning run can fail cleanly.
+    fn try_measure_many_traced(
+        &self,
+        space: &ConfigSpace,
+        points: &[PointConfig],
+        workers: usize,
+    ) -> anyhow::Result<(Vec<MeasureResult>, Vec<bool>)> {
+        Ok(self.measure_many_traced(space, points, workers))
+    }
+
     /// How many measurement batches this backend can usefully serve
     /// concurrently. A local backend already saturates its worker pool
     /// with one batch; a remote fleet can serve one batch per alive shard.
@@ -62,6 +156,65 @@ pub trait MeasureBackend: Send + Sync {
     /// free-form counters object). Local backends have no fleet.
     fn fleet_stats(&self) -> Vec<(String, Json)> {
         Vec::new()
+    }
+
+    /// Remote fleets: per-shard placement counters (points/batches served,
+    /// service-time EWMA, queue depth, warm-start coverage). Local
+    /// backends have no shards.
+    fn placement_stats(&self) -> Vec<ShardPlacement> {
+        Vec::new()
+    }
+}
+
+/// Shared handles to a backend are backends: lets a caller keep a handle
+/// to a fleet client (to probe revival, read placement counters) while an
+/// [`super::Engine`] owns another.
+impl<B: MeasureBackend + ?Sized> MeasureBackend for std::sync::Arc<B> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn measure(&self, space: &ConfigSpace, point: &PointConfig) -> MeasureResult {
+        (**self).measure(space, point)
+    }
+
+    fn measure_many(
+        &self,
+        space: &ConfigSpace,
+        points: &[PointConfig],
+        workers: usize,
+    ) -> Vec<MeasureResult> {
+        (**self).measure_many(space, points, workers)
+    }
+
+    fn measure_many_traced(
+        &self,
+        space: &ConfigSpace,
+        points: &[PointConfig],
+        workers: usize,
+    ) -> (Vec<MeasureResult>, Vec<bool>) {
+        (**self).measure_many_traced(space, points, workers)
+    }
+
+    fn try_measure_many_traced(
+        &self,
+        space: &ConfigSpace,
+        points: &[PointConfig],
+        workers: usize,
+    ) -> anyhow::Result<(Vec<MeasureResult>, Vec<bool>)> {
+        (**self).try_measure_many_traced(space, points, workers)
+    }
+
+    fn concurrent_batch_capacity(&self) -> usize {
+        (**self).concurrent_batch_capacity()
+    }
+
+    fn fleet_stats(&self) -> Vec<(String, Json)> {
+        (**self).fleet_stats()
+    }
+
+    fn placement_stats(&self) -> Vec<ShardPlacement> {
+        (**self).placement_stats()
     }
 }
 
@@ -142,10 +295,16 @@ impl BackendSpec {
     /// Build the backend. Remote fleets handshake with every shard here,
     /// so a bad address, protocol skew or fingerprint mismatch fails fast.
     pub fn build(&self) -> anyhow::Result<Box<dyn MeasureBackend>> {
+        self.build_with(Placement::default())
+    }
+
+    /// [`build`](Self::build) with an explicit fleet [`Placement`] policy
+    /// (ignored by built-in local backends).
+    pub fn build_with(&self, placement: Placement) -> anyhow::Result<Box<dyn MeasureBackend>> {
         match self {
             BackendSpec::Builtin(k) => Ok(k.build()),
             BackendSpec::Remote(addrs) => {
-                Ok(Box::new(super::remote::RemoteBackend::connect(addrs)?))
+                Ok(Box::new(super::remote::RemoteBackend::connect_with(addrs, placement)?))
             }
         }
     }
@@ -273,6 +432,31 @@ mod tests {
             assert_eq!(k.build().name(), k.name());
         }
         assert_eq!(BackendKind::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn placement_roundtrips_names_and_defaults_uniform() {
+        for p in [Placement::Uniform, Placement::Weighted] {
+            assert_eq!(Placement::from_name(p.name()), Some(p));
+        }
+        assert_eq!(Placement::from_name("bogus"), None);
+        assert_eq!(Placement::default(), Placement::Uniform);
+        // The reproducibility default must never drift silently.
+        assert_eq!(Placement::default().name(), "uniform");
+    }
+
+    #[test]
+    fn arc_wrapped_backend_delegates() {
+        let s = space();
+        let b = std::sync::Arc::new(VtaSimBackend);
+        assert_eq!(MeasureBackend::name(&b), "vta-sim");
+        let p = s.default_point();
+        assert_eq!(MeasureBackend::measure(&b, &s, &p), measure_point(&s, &p));
+        assert_eq!(b.concurrent_batch_capacity(), 1);
+        assert!(b.placement_stats().is_empty());
+        let (rs, fresh) = b.try_measure_many_traced(&s, std::slice::from_ref(&p), 1).unwrap();
+        assert_eq!(rs[0], measure_point(&s, &p));
+        assert_eq!(fresh, vec![true]);
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! The batched, cached, coalescing, backend-abstracted measurement engine.
 
-use super::backend::{BackendKind, BackendSpec, MeasureBackend};
+use super::backend::{BackendKind, BackendSpec, MeasureBackend, Placement, ShardPlacement};
 use super::cache::{CacheStats, MeasureCache, PointKey};
 use super::journal::Journal;
 use super::proto::Origin;
@@ -29,6 +29,16 @@ pub struct EngineConfig {
     /// Optional persistent journal; existing entries for the selected
     /// backend pre-seed the cache, new measurements are appended.
     pub journal: Option<PathBuf>,
+    /// Optional warm-start journal, opened read-only: its entries for the
+    /// selected backend pre-seed the cache like `journal`'s do, but the
+    /// file is never written. The fleet workflow: `arco journal merge`
+    /// unions every shard's journal, and a new/revived shard points
+    /// `serve-measure --warm-start` at the union to inherit the fleet's
+    /// history before its first batch.
+    pub warm_start: Option<PathBuf>,
+    /// How a remote fleet backend splits batches across shards (ignored by
+    /// built-in local backends).
+    pub placement: Placement,
 }
 
 impl Default for EngineConfig {
@@ -39,12 +49,14 @@ impl Default for EngineConfig {
             cache: true,
             cache_capacity: None,
             journal: None,
+            warm_start: None,
+            placement: Placement::default(),
         }
     }
 }
 
 /// Aggregate engine counters.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct EngineStats {
     /// Batches served.
     pub batches: usize,
@@ -74,12 +86,20 @@ pub struct EngineStats {
     pub cache_evictions: usize,
     /// Cache entries pre-seeded from the journal at construction.
     pub journal_seeded: usize,
+    /// Cache entries pre-seeded from the warm-start journal at
+    /// construction (inherited fleet history).
+    pub warm_seeded: usize,
+    /// Per-shard placement counters when the backend is a remote fleet
+    /// (empty for local backends): points/batches served per shard, the
+    /// service-time EWMA and queue depth behind weighted placement, and
+    /// each shard's warm-start coverage.
+    pub placement: Vec<ShardPlacement>,
 }
 
 impl EngineStats {
     /// JSON rendering (the `serve-measure` `stats` op).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("batches", Json::num(self.batches as f64)),
             ("simulations", Json::num(self.simulations as f64)),
             ("batch_dedup", Json::num(self.batch_dedup as f64)),
@@ -91,7 +111,15 @@ impl EngineStats {
             ("cache_entries", Json::num(self.cache_entries as f64)),
             ("cache_evictions", Json::num(self.cache_evictions as f64)),
             ("journal_seeded", Json::num(self.journal_seeded as f64)),
-        ])
+            ("warm_seeded", Json::num(self.warm_seeded as f64)),
+        ];
+        if !self.placement.is_empty() {
+            fields.push((
+                "placement",
+                Json::Arr(self.placement.iter().map(ShardPlacement::to_json).collect()),
+            ));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -206,6 +234,7 @@ pub struct Engine {
     inflight: Mutex<HashMap<PointKey, Arc<InflightCell>>>,
     journal: Option<Mutex<Journal>>,
     journal_seeded: usize,
+    warm_seeded: usize,
     batches: AtomicUsize,
     simulations: AtomicUsize,
     batch_dedup: AtomicUsize,
@@ -250,13 +279,27 @@ impl PairedBatch {
 
 impl Engine {
     /// Build an engine from a full configuration. Fails fast when the
-    /// journal cannot be opened safely (another writer holds its lock, or
-    /// it was measured under a different simulator fingerprint) or when a
+    /// journal or warm-start file cannot be opened safely (another writer
+    /// holds the journal's lock, either was measured under a different
+    /// simulator fingerprint, the warm-start file is missing) or when a
     /// remote fleet refuses the handshake.
     pub fn new(config: EngineConfig) -> anyhow::Result<Engine> {
-        let backend = config.backend.build()?;
+        let backend = config.backend.build_with(config.placement)?;
         let journal = match &config.journal {
             Some(path) => Some(Journal::open(path)?),
+            None => None,
+        };
+        let warm = match &config.warm_start {
+            Some(path) => {
+                if !path.exists() {
+                    anyhow::bail!(
+                        "warm-start journal {} does not exist (it should be the output of \
+                         `arco journal merge`)",
+                        path.display()
+                    );
+                }
+                Some(Journal::open_read_only(path)?)
+            }
             None => None,
         };
         Ok(Engine::from_parts(
@@ -265,18 +308,19 @@ impl Engine {
             config.cache,
             config.cache_capacity,
             journal,
+            warm,
         ))
     }
 
     /// Engine over a caller-provided backend (tests, custom oracles).
     pub fn with_backend(backend: Box<dyn MeasureBackend>, workers: usize, cache: bool) -> Engine {
-        Engine::from_parts(backend, workers, cache, None, None)
+        Engine::from_parts(backend, workers, cache, None, None, None)
     }
 
     /// The common case: cycle-accurate simulator backend, cache on, no
     /// journal.
     pub fn vta_sim(workers: usize) -> Engine {
-        Engine::from_parts(BackendKind::VtaSim.build(), workers, true, None, None)
+        Engine::from_parts(BackendKind::VtaSim.build(), workers, true, None, None, None)
     }
 
     fn from_parts(
@@ -285,6 +329,7 @@ impl Engine {
         cache: bool,
         cache_capacity: Option<usize>,
         journal: Option<Journal>,
+        warm: Option<Journal>,
     ) -> Engine {
         let cache = cache.then(|| MeasureCache::with_capacity(cache_capacity));
         if cache.is_none() && journal.is_some() {
@@ -295,11 +340,24 @@ impl Engine {
                  journal reuse"
             );
         }
+        if cache.is_none() && warm.is_some() {
+            crate::log_warn!(
+                "eval",
+                "warm start configured with the cache disabled: the inherited history has \
+                 nowhere to live and is ignored; drop --no-cache to get warm starts"
+            );
+        }
         let mut journal_seeded = 0usize;
+        // Only needed to dedup warm-start coverage against the journal;
+        // skip the per-entry clone+hash on the common no-warm-start path.
+        let mut seeded_keys: std::collections::HashSet<PointKey> = std::collections::HashSet::new();
         if let (Some(c), Some(j)) = (&cache, &journal) {
             for e in j.entries() {
                 if e.backend == backend.name() {
                     c.preload(e.key.clone(), e.result);
+                    if warm.is_some() {
+                        seeded_keys.insert(e.key.clone());
+                    }
                     journal_seeded += 1;
                 }
             }
@@ -311,6 +369,27 @@ impl Engine {
                 );
             }
         }
+        // Warm start: same seeding as the journal, read-only source.
+        // Entries the journal already seeded are not re-counted, so
+        // `preloaded_entries` reports *distinct* inherited coverage even
+        // when the merged fleet history contains this shard's own records
+        // (the documented restart workflow). Overlap itself is harmless —
+        // a shared fingerprint guarantees identical identities carry
+        // identical results.
+        let mut warm_seeded = 0usize;
+        if let (Some(c), Some(w)) = (&cache, &warm) {
+            for e in w.entries() {
+                if e.backend == backend.name() && seeded_keys.insert(e.key.clone()) {
+                    c.preload(e.key.clone(), e.result);
+                    warm_seeded += 1;
+                }
+            }
+            crate::log_info!(
+                "eval",
+                "warm start {}: inherited {warm_seeded} cached measurements",
+                w.path().display()
+            );
+        }
         Engine {
             backend,
             workers: workers.max(1),
@@ -318,6 +397,7 @@ impl Engine {
             inflight: Mutex::new(HashMap::new()),
             journal: journal.map(Mutex::new),
             journal_seeded,
+            warm_seeded,
             batches: AtomicUsize::new(0),
             simulations: AtomicUsize::new(0),
             batch_dedup: AtomicUsize::new(0),
@@ -325,6 +405,13 @@ impl Engine {
             shard_cached: AtomicUsize::new(0),
             active: AtomicUsize::new(0),
         }
+    }
+
+    /// Cache entries seeded from persistent history at construction
+    /// (journal + warm start) — what the `serve-measure` handshake reports
+    /// to fleet clients as inherited coverage.
+    pub fn preloaded_entries(&self) -> usize {
+        self.journal_seeded + self.warm_seeded
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -352,15 +439,38 @@ impl Engine {
 
     /// [`measure_batch`](Self::measure_batch), plus per-point [`Origin`]
     /// provenance — the hit/miss evidence budget ledgers need to tell
-    /// freshly-simulated points from cache-served ones.
+    /// freshly-simulated points from cache-served ones. Panics when the
+    /// backend loses its measurement substrate (a whole remote fleet
+    /// down); the tuning loop uses
+    /// [`try_measure_batch_traced`](Self::try_measure_batch_traced) and
+    /// fails cleanly instead.
     pub fn measure_batch_traced(
         &self,
         space: &ConfigSpace,
         points: &[PointConfig],
     ) -> TracedBatch {
+        match self.try_measure_batch_traced(space, points) {
+            Ok(batch) => batch,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// The fallible batch path: identical semantics to
+    /// [`measure_batch_traced`](Self::measure_batch_traced), but a backend
+    /// that loses its measurement substrate mid-batch (a remote fleet with
+    /// no reachable shard: [`super::remote::FleetLostError`]) surfaces as
+    /// `Err` instead of a panic, so a whole-fleet outage can fail a tuning
+    /// run cleanly. In-flight claims held by this batch are withdrawn on
+    /// the error path and waiting followers are woken to measure for
+    /// themselves.
+    pub fn try_measure_batch_traced(
+        &self,
+        space: &ConfigSpace,
+        points: &[PointConfig],
+    ) -> anyhow::Result<TracedBatch> {
         let n = points.len();
         if n == 0 {
-            return TracedBatch { results: Vec::new(), origins: Vec::new() };
+            return Ok(TracedBatch { results: Vec::new(), origins: Vec::new() });
         }
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.active.fetch_add(1, Ordering::Relaxed);
@@ -429,8 +539,19 @@ impl Engine {
             armed: true,
         };
         let miss_points: Vec<PointConfig> = uniq.iter().map(|&i| points[i].clone()).collect();
+        // On a lost backend the armed guard withdraws this batch's claims
+        // and wakes followers with `Abandoned` on the way out; the journal
+        // is flushed first so measurements other batches already paid for
+        // are not stranded in memory when the run exits on this error
+        // (Journal's Drop releases the lock but never flushes).
         let (results, fresh_flags): (Vec<MeasureResult>, Vec<bool>) =
-            self.backend.measure_many_traced(space, &miss_points, self.workers);
+            match self.backend.try_measure_many_traced(space, &miss_points, self.workers) {
+                Ok(out) => out,
+                Err(e) => {
+                    self.flush_journal();
+                    return Err(e);
+                }
+            };
         // Only freshly-run points count as simulations; a warm fleet shard
         // answering from its own cache did not re-simulate (those are
         // tallied under `shard_cached` instead of being double-counted).
@@ -475,11 +596,30 @@ impl Engine {
                 }
                 None => {
                     recovered = true;
-                    self.simulations.fetch_add(1, Ordering::Relaxed);
-                    let r = self.backend.measure(space, &points[i]);
+                    let attempt = self.backend.try_measure_many_traced(
+                        space,
+                        std::slice::from_ref(&points[i]),
+                        self.workers,
+                    );
+                    let (rs, fr) = match attempt {
+                        Ok(out) => out,
+                        Err(e) => {
+                            // Points this batch already published must
+                            // reach the journal before the run dies.
+                            self.flush_journal();
+                            return Err(e);
+                        }
+                    };
+                    let r = rs[0];
+                    if fr.first().copied().unwrap_or(true) {
+                        self.simulations.fetch_add(1, Ordering::Relaxed);
+                        origins[i] = Origin::Fresh;
+                    } else {
+                        self.shard_cached.fetch_add(1, Ordering::Relaxed);
+                        origins[i] = Origin::ShardCached;
+                    }
                     self.publish_one(&keys[i], r);
                     out[i] = Some(r);
-                    origins[i] = Origin::Fresh;
                 }
             }
         }
@@ -490,10 +630,10 @@ impl Engine {
         if !uniq.is_empty() || recovered {
             self.flush_journal();
         }
-        TracedBatch {
+        Ok(TracedBatch {
             results: out.into_iter().map(|r| r.expect("every point measured")).collect(),
             origins,
-        }
+        })
     }
 
     /// Make one fresh measurement visible to every future lookup: the
@@ -524,6 +664,22 @@ impl Engine {
             pairs: points.into_iter().zip(traced.results).collect(),
             origins: traced.origins,
         }
+    }
+
+    /// Fallible [`measure_paired`](Self::measure_paired) — what the tuning
+    /// loop calls, so a whole-fleet outage
+    /// ([`super::remote::FleetLostError`]) fails the run cleanly instead
+    /// of panicking.
+    pub fn try_measure_paired(
+        &self,
+        space: &ConfigSpace,
+        points: Vec<PointConfig>,
+    ) -> anyhow::Result<PairedBatch> {
+        let traced = self.try_measure_batch_traced(space, &points)?;
+        Ok(PairedBatch {
+            pairs: points.into_iter().zip(traced.results).collect(),
+            origins: traced.origins,
+        })
     }
 
     /// How many batches the backend can usefully serve at once (local:
@@ -570,6 +726,8 @@ impl Engine {
             cache_entries: cs.entries,
             cache_evictions: cs.evictions,
             journal_seeded: self.journal_seeded,
+            warm_seeded: self.warm_seeded,
+            placement: self.backend.placement_stats(),
         }
     }
 
@@ -578,7 +736,7 @@ impl Engine {
         let s = self.stats();
         format!(
             "backend={} workers={} batches={} simulations={} shard_cached={} cache_hits={} \
-             batch_dedup={} coalesced={} evictions={} journal_seeded={}",
+             batch_dedup={} coalesced={} evictions={} journal_seeded={} warm_seeded={}",
             self.backend_name(),
             self.workers,
             s.batches,
@@ -588,7 +746,8 @@ impl Engine {
             s.batch_dedup,
             s.coalesced,
             s.cache_evictions,
-            s.journal_seeded
+            s.journal_seeded,
+            s.warm_seeded
         )
     }
 }
@@ -723,6 +882,132 @@ mod tests {
     }
 
     #[test]
+    fn warm_start_inherits_history_without_writing_it() {
+        let s = space();
+        let dir = std::path::PathBuf::from("target/tmp");
+        std::fs::create_dir_all(&dir).unwrap();
+        let warm_path = dir.join(format!("engine_warm_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&warm_path);
+
+        // Build the history with a journaling engine.
+        let mut rng = Pcg32::seeded(31);
+        let points: Vec<_> = (0..6).map(|_| s.random_point(&mut rng)).collect();
+        {
+            let first = Engine::new(EngineConfig {
+                backend: BackendKind::Analytical.into(),
+                workers: 2,
+                journal: Some(warm_path.clone()),
+                ..Default::default()
+            })
+            .unwrap();
+            first.measure_batch(&s, &points);
+            first.flush_journal();
+        }
+
+        // A fresh engine warm-started from that journal answers the same
+        // points without a single simulation, and reports the coverage.
+        let warmed = Engine::new(EngineConfig {
+            backend: BackendKind::Analytical.into(),
+            workers: 2,
+            warm_start: Some(warm_path.clone()),
+            ..Default::default()
+        })
+        .unwrap();
+        let traced = warmed.measure_batch_traced(&s, &points);
+        assert!(traced.origins.iter().all(|o| *o == Origin::Cached));
+        let st = warmed.stats();
+        assert_eq!(st.simulations, 0);
+        assert!(st.warm_seeded > 0);
+        assert_eq!(st.journal_seeded, 0);
+        assert_eq!(warmed.preloaded_entries(), st.warm_seeded);
+        // The warm-start file was never locked or rewritten.
+        assert!(!std::path::Path::new(&format!("{}.lock", warm_path.display())).exists());
+
+        // Journal + warm start over the same history (a revived shard fed
+        // the merged union containing its own records): coverage counts
+        // stay distinct, not doubled.
+        {
+            let both = Engine::new(EngineConfig {
+                backend: BackendKind::Analytical.into(),
+                workers: 2,
+                journal: Some(warm_path.clone()),
+                warm_start: Some(warm_path.clone()),
+                ..Default::default()
+            })
+            .unwrap();
+            let st = both.stats();
+            assert!(st.journal_seeded > 0);
+            assert_eq!(st.warm_seeded, 0, "overlapping warm entries must not double-count");
+            assert_eq!(both.preloaded_entries(), st.journal_seeded);
+        }
+
+        // A missing warm-start file is an explicit construction error.
+        let _ = std::fs::remove_file(&warm_path);
+        let err = Engine::new(EngineConfig {
+            backend: BackendKind::Analytical.into(),
+            workers: 2,
+            warm_start: Some(warm_path.clone()),
+            ..Default::default()
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("does not exist"), "unexpected error: {err}");
+    }
+
+    /// A backend whose substrate is permanently lost: the engine must
+    /// propagate the typed error instead of panicking.
+    struct LostBackend;
+
+    impl MeasureBackend for LostBackend {
+        fn name(&self) -> &'static str {
+            "lost"
+        }
+        fn measure(&self, _space: &ConfigSpace, _point: &PointConfig) -> MeasureResult {
+            unreachable!("engine must use the fallible path")
+        }
+        fn measure_many(
+            &self,
+            _space: &ConfigSpace,
+            points: &[PointConfig],
+            _workers: usize,
+        ) -> Vec<MeasureResult> {
+            panic!("infallible path must not be reached for {} points", points.len())
+        }
+        fn try_measure_many_traced(
+            &self,
+            _space: &ConfigSpace,
+            _points: &[PointConfig],
+            _workers: usize,
+        ) -> anyhow::Result<(Vec<MeasureResult>, Vec<bool>)> {
+            Err(anyhow::Error::new(crate::eval::FleetLostError {
+                undeliverable: 3,
+                rounds: 4,
+                last_error: "synthetic outage".into(),
+            }))
+        }
+    }
+
+    #[test]
+    fn lost_backend_surfaces_typed_error_and_releases_claims() {
+        let s = space();
+        let e = Engine::with_backend(Box::new(LostBackend), 2, true);
+        let p = s.default_point();
+        let err = e.try_measure_batch_traced(&s, &[p.clone()]).unwrap_err();
+        assert!(
+            err.as_ref().downcast_ref::<crate::eval::FleetLostError>().is_some(),
+            "expected FleetLostError, got: {err}"
+        );
+        assert!(err.to_string().contains("synthetic outage"));
+        // The failed batch must withdraw its in-flight claims and drain
+        // the active gauge, or the shard would wedge forever.
+        assert!(e.inflight.lock().unwrap().is_empty(), "claims must be withdrawn");
+        assert_eq!(e.stats().active_batches, 0, "gauge must drain");
+        assert_eq!(e.stats().simulations, 0);
+        // try_measure_paired carries the same error.
+        assert!(e.try_measure_paired(&s, vec![p]).is_err());
+    }
+
+    #[test]
     fn bounded_cache_config_caps_entries_and_counts_evictions() {
         let s = space();
         let e = Engine::new(EngineConfig {
@@ -730,7 +1015,7 @@ mod tests {
             workers: 2,
             cache: true,
             cache_capacity: Some(8),
-            journal: None,
+            ..Default::default()
         })
         .unwrap();
         let mut rng = Pcg32::seeded(21);

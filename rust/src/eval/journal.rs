@@ -332,18 +332,28 @@ impl Journal {
     /// A `(backend, key)` pair already journaled is ignored, as is every
     /// record on a read-only journal — nothing would ever flush it, and a
     /// long-lived degraded shard must not accumulate records forever.
-    pub fn record(&mut self, backend: &str, key: &PointKey, result: &MeasureResult) {
+    /// Returns whether the record was newly added (`false`: duplicate
+    /// identity or read-only journal).
+    pub fn record(&mut self, backend: &str, key: &PointKey, result: &MeasureResult) -> bool {
         if !self.writer {
-            return;
+            return false;
         }
         if !self.seen.insert((backend.to_string(), key.clone())) {
-            return;
+            return false;
         }
         self.entries.push(JournalEntry {
             backend: backend.to_string(),
             key: key.clone(),
             result: *result,
         });
+        true
+    }
+
+    /// Distinct `(backend, key)` identities this journal knows about —
+    /// loaded from disk plus recorded this session (flushes keep the
+    /// identity set even after dropping persisted entries from memory).
+    pub fn identities(&self) -> usize {
+        self.seen.len()
     }
 
     fn header_json(&self) -> Json {
@@ -404,6 +414,67 @@ impl Drop for Journal {
             let _ = std::fs::remove_file(sibling(&self.path, ".lock"));
         }
     }
+}
+
+/// Outcome of a [`merge_journals`] run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MergeStats {
+    /// Input files read.
+    pub inputs: usize,
+    /// Records read across all inputs (after each input's own dedup).
+    pub read: usize,
+    /// Records newly added to the output.
+    pub added: usize,
+    /// Records skipped as duplicates of the output or an earlier input.
+    pub duplicates: usize,
+    /// Distinct identities in the output after the merge.
+    pub total: usize,
+}
+
+/// Union fingerprint-identical measurement journals into `out` — the warm
+/// start for `serve-measure` fleets: merge every shard's local journal,
+/// hand the union to a new shard via `--warm-start`, and it inherits the
+/// fleet's entire measurement history before its first batch.
+///
+/// Records are deduplicated on the shared identity `(backend, task,
+/// decoded knob values)`; re-merging the same inputs is idempotent (the
+/// output's existing identities are loaded first). Every input must exist,
+/// be a v2 journal, and carry this binary's [`Fingerprint`] — a v1 file or
+/// a journal measured under a different simulator is refused, exactly as
+/// [`Journal::open`] refuses it. Torn tails in inputs are tolerated (the
+/// torn line is dropped, as on any load). The output is opened as a writer
+/// (lock sentinel taken), so merging into a journal another process is
+/// writing fails fast.
+pub fn merge_journals(out: &Path, inputs: &[PathBuf]) -> anyhow::Result<MergeStats> {
+    if inputs.is_empty() {
+        anyhow::bail!("journal merge: need at least one input journal");
+    }
+    let mut dst = Journal::open(out)?;
+    let mut stats = MergeStats { inputs: inputs.len(), ..Default::default() };
+    for path in inputs {
+        if !path.exists() {
+            anyhow::bail!("journal merge: input {} does not exist", path.display());
+        }
+        let src = Journal::open_read_only(path)?;
+        for e in src.entries() {
+            stats.read += 1;
+            if dst.record(&e.backend, &e.key, &e.result) {
+                stats.added += 1;
+            } else {
+                stats.duplicates += 1;
+            }
+        }
+    }
+    dst.flush()?;
+    if !out.exists() {
+        // Every input was empty: still materialize a valid (header-only)
+        // journal so a `--warm-start` pointed at the output finds one.
+        let mut text = dst.header_json().dump();
+        text.push('\n');
+        std::fs::write(out, text)?;
+    }
+    stats.total = dst.identities();
+    Ok(stats)
 }
 
 #[cfg(test)]
@@ -619,6 +690,142 @@ mod tests {
         let err = Journal::open(&path).unwrap_err().to_string();
         assert!(err.contains("v1"), "unexpected error: {err}");
         cleanup(&path);
+    }
+
+    /// Write a v2 journal at `path` holding `n` distinct points measured
+    /// under `backend`, returning the identities written.
+    fn write_journal(path: &Path, backend: &str, seed: u64, n: usize) -> Vec<PointKey> {
+        cleanup(path);
+        let s = space();
+        let mut rng = Pcg32::seeded(seed);
+        let mut j = Journal::open(path).unwrap();
+        let mut keys = Vec::new();
+        while keys.len() < n {
+            let p = s.random_point(&mut rng);
+            let key = PointKey::of(&s, &p);
+            if j.record(backend, &key, &measure_point(&s, &p)) {
+                keys.push(key);
+            }
+        }
+        j.flush().unwrap();
+        keys
+    }
+
+    #[test]
+    fn merge_unions_and_dedups_overlapping_inputs() {
+        let a = tmp_path("merge_a");
+        let b = tmp_path("merge_b");
+        let out = tmp_path("merge_out");
+        cleanup(&out);
+        let keys_a = write_journal(&a, "vta-sim", 101, 5);
+        let keys_b = write_journal(&b, "vta-sim", 101, 8); // same seed: first 5 overlap a
+        assert_eq!(&keys_b[..5], &keys_a[..]);
+
+        let stats = merge_journals(&out, &[a.clone(), b.clone()]).unwrap();
+        assert_eq!(stats.inputs, 2);
+        assert_eq!(stats.read, 13);
+        assert_eq!(stats.added, 8, "union of overlapping inputs");
+        assert_eq!(stats.duplicates, 5);
+        assert_eq!(stats.total, 8);
+        let merged = Journal::open_read_only(&out).unwrap();
+        assert_eq!(merged.len(), 8);
+
+        // Idempotent re-merge: nothing new, file byte-identical.
+        let before = std::fs::read_to_string(&out).unwrap();
+        let again = merge_journals(&out, &[a.clone(), b.clone()]).unwrap();
+        assert_eq!(again.added, 0);
+        assert_eq!(again.duplicates, 13);
+        assert_eq!(again.total, 8);
+        assert_eq!(std::fs::read_to_string(&out).unwrap(), before);
+        cleanup(&a);
+        cleanup(&b);
+        cleanup(&out);
+    }
+
+    #[test]
+    fn merge_rejects_empty_input_list_and_missing_inputs() {
+        let out = tmp_path("merge_empty");
+        cleanup(&out);
+        let err = merge_journals(&out, &[]).unwrap_err().to_string();
+        assert!(err.contains("at least one input"), "unexpected error: {err}");
+        assert!(!out.exists(), "a refused merge must not create the output");
+
+        let missing = tmp_path("merge_missing_input");
+        cleanup(&missing);
+        let err = merge_journals(&out, &[missing.clone()]).unwrap_err().to_string();
+        assert!(err.contains("does not exist"), "unexpected error: {err}");
+        cleanup(&out);
+    }
+
+    #[test]
+    fn merge_refuses_fingerprint_mismatched_and_v1_inputs() {
+        let out = tmp_path("merge_fp_out");
+        let foreign = tmp_path("merge_fp_in");
+        cleanup(&out);
+        cleanup(&foreign);
+        if let Some(parent) = foreign.parent() {
+            std::fs::create_dir_all(parent).unwrap();
+        }
+        let mut fp = Fingerprint::current();
+        fp.cycle_model += 1;
+        let header = Json::obj(vec![
+            ("format", Json::str("arco-journal")),
+            ("version", Json::num(Journal::VERSION as f64)),
+            ("fingerprint", fp.to_json()),
+        ]);
+        std::fs::write(&foreign, header.dump() + "\n").unwrap();
+        let err = merge_journals(&out, &[foreign.clone()]).unwrap_err().to_string();
+        assert!(err.contains("different simulator"), "unexpected error: {err}");
+        // The refused merge must not leave a writer lock on the output.
+        assert!(!sibling(&out, ".lock").exists());
+
+        std::fs::write(&foreign, "{\n  \"version\": 1,\n  \"entries\": []\n}\n").unwrap();
+        let err = merge_journals(&out, &[foreign.clone()]).unwrap_err().to_string();
+        assert!(err.contains("v1"), "unexpected error: {err}");
+        cleanup(&out);
+        cleanup(&foreign);
+    }
+
+    #[test]
+    fn merge_tolerates_torn_tail_inputs() {
+        let input = tmp_path("merge_torn_in");
+        let out = tmp_path("merge_torn_out");
+        cleanup(&out);
+        write_journal(&input, "vta-sim", 77, 3);
+        {
+            let mut f = std::fs::OpenOptions::new().append(true).open(&input).unwrap();
+            f.write_all(b"{\"backend\":\"vta-sim\",\"task\":{\"n\":").unwrap();
+        }
+        let stats = merge_journals(&out, &[input.clone()]).unwrap();
+        assert_eq!(stats.read, 3, "the torn line must be dropped, not merged");
+        assert_eq!(stats.added, 3);
+        assert_eq!(Journal::open_read_only(&out).unwrap().len(), 3);
+        cleanup(&input);
+        cleanup(&out);
+    }
+
+    #[test]
+    fn merge_of_empty_inputs_materializes_a_valid_header_only_journal() {
+        let out = tmp_path("merge_hdr_out");
+        cleanup(&out);
+        // An existing-but-record-less input: a bare v2 header.
+        let header_only = tmp_path("merge_hdr_empty");
+        cleanup(&header_only);
+        if let Some(parent) = header_only.parent() {
+            std::fs::create_dir_all(parent).unwrap();
+        }
+        let header = Json::obj(vec![
+            ("format", Json::str("arco-journal")),
+            ("version", Json::num(Journal::VERSION as f64)),
+            ("fingerprint", Fingerprint::current().to_json()),
+        ]);
+        std::fs::write(&header_only, header.dump() + "\n").unwrap();
+        let stats = merge_journals(&out, &[header_only.clone()]).unwrap();
+        assert_eq!(stats.added, 0);
+        assert!(out.exists(), "even an all-empty merge must materialize the output");
+        assert!(Journal::open_read_only(&out).unwrap().is_empty());
+        cleanup(&header_only);
+        cleanup(&out);
     }
 
     #[test]

@@ -29,7 +29,12 @@
 //!   Results come back in input order and are deterministic for a
 //!   deterministic backend, independent of the worker count.
 //! - [`server`] is the other side of the wire: `arco serve-measure`
-//!   exposes any local backend as a network shard.
+//!   exposes any local backend as a network shard. A shard can be
+//!   *warm-started* from a merged journal ([`merge_journals`] /
+//!   `arco journal merge`) so it inherits the fleet's measurement history
+//!   before its first batch, and [`RemoteBackend`] can place chunks
+//!   [`Placement::Weighted`] by observed shard throughput so heterogeneous
+//!   fleets stop waiting on their slowest member.
 //! - [`BudgetLedger`] + [`Dispatcher`] ([`ledger`]) implement the paper's
 //!   equal-budget protocol on top of all of it: per-(framework, task)
 //!   measurement allowances charged before every batch, per-point
@@ -52,11 +57,18 @@ pub mod remote;
 pub mod server;
 
 pub use crate::codegen::MeasureResult;
-pub use backend::{AnalyticalBackend, BackendKind, BackendSpec, MeasureBackend, VtaSimBackend};
+pub use backend::{
+    AnalyticalBackend, BackendKind, BackendSpec, MeasureBackend, Placement, ShardPlacement,
+    VtaSimBackend,
+};
 pub use cache::{CacheStats, MeasureCache, PointKey};
 pub use engine::{Engine, EngineConfig, EngineStats, PairedBatch, TracedBatch};
-pub use journal::{Journal, JournalEntry};
+pub use journal::{merge_journals, Journal, JournalEntry, MergeStats};
 pub use ledger::{Account, BudgetLedger, DispatchStats, Dispatcher, LedgerStats, TenantStats};
 pub use proto::{Fingerprint, Origin, PROTO_VERSION};
-pub use remote::RemoteBackend;
-pub use server::{spawn as serve_measure, spawn_local as serve_measure_local, ServerHandle};
+pub use remote::{FleetLostError, RemoteBackend};
+pub use server::{
+    spawn as serve_measure, spawn_local as serve_measure_local,
+    spawn_local_with as serve_measure_local_with, spawn_with as serve_measure_with, ServeOptions,
+    ServerHandle,
+};

@@ -295,8 +295,12 @@ impl Request {
 /// One server → client message.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
-    /// Handshake reply.
-    Pong { backend: String, proto: u64, fingerprint: Fingerprint },
+    /// Handshake reply. `preloaded` is the number of cache entries the
+    /// shard's engine seeded from persistent history (its journal plus any
+    /// `--warm-start` file) before accepting batches — inherited fleet
+    /// coverage a client can log. Additive field: a peer that omits it is
+    /// read as 0.
+    Pong { backend: String, proto: u64, fingerprint: Fingerprint, preloaded: usize },
     /// Batch results, in request point order. `fresh[i]` reports whether
     /// the shard actually simulated point `i` for this request (`true`) or
     /// answered it from shared state — its cache, in-batch dedup, or a
@@ -312,11 +316,12 @@ pub enum Response {
 impl Response {
     pub fn to_json(&self) -> Json {
         match self {
-            Response::Pong { backend, proto, fingerprint } => Json::obj(vec![
+            Response::Pong { backend, proto, fingerprint, preloaded } => Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("backend", Json::str(backend.clone())),
                 ("proto", Json::num(*proto as f64)),
                 ("fingerprint", fingerprint.to_json()),
+                ("preloaded", Json::num(*preloaded as f64)),
             ]),
             Response::Results { results, fresh } => Json::obj(vec![
                 ("ok", Json::Bool(true)),
@@ -361,6 +366,9 @@ impl Response {
                 backend: backend.to_string(),
                 proto: v.get_usize("proto")? as u64,
                 fingerprint: Fingerprint::from_json(v.get("fingerprint")?)?,
+                // Additive field: absent (an older peer) means nothing
+                // preloaded.
+                preloaded: v.get_usize("preloaded").unwrap_or(0),
             });
         }
         None
@@ -474,12 +482,33 @@ mod tests {
                 backend: "vta-sim".into(),
                 proto: PROTO_VERSION,
                 fingerprint: Fingerprint::current(),
+                preloaded: 123,
             },
             Response::Results { results: vec![r, r], fresh: vec![true, false] },
             Response::Stats(Json::obj(vec![("batches", Json::num(3.0))])),
             Response::Error("boom".into()),
         ] {
             assert_eq!(Response::from_json(&resp.to_json()), Some(resp));
+        }
+    }
+
+    #[test]
+    fn pong_without_preloaded_field_defaults_to_zero() {
+        // Compatibility: `preloaded` is additive; an older peer that omits
+        // it handshakes as cold.
+        let pong = Response::Pong {
+            backend: "vta-sim".into(),
+            proto: PROTO_VERSION,
+            fingerprint: Fingerprint::current(),
+            preloaded: 99,
+        };
+        let mut json = pong.to_json();
+        if let Json::Obj(fields) = &mut json {
+            fields.retain(|(k, _)| k != "preloaded");
+        }
+        match Response::from_json(&json).unwrap() {
+            Response::Pong { preloaded, .. } => assert_eq!(preloaded, 0),
+            other => panic!("expected pong, got {other:?}"),
         }
     }
 

@@ -4,19 +4,37 @@
 //! Construction ([`RemoteBackend::connect`]) handshakes with every shard:
 //! protocol version, backend identity and simulator [`Fingerprint`] must
 //! all match this binary, so a skewed or differently-configured shard is
-//! rejected before it can contribute a single number.
+//! rejected before it can contribute a single number. The handshake also
+//! carries each shard's preloaded-cache count (journal seeding plus
+//! `--warm-start`), so a tuning client can log how much fleet history a
+//! shard inherited before its first batch.
 //!
 //! Each batch is split into contiguous chunks across the currently-alive
 //! shards and dispatched concurrently (one connection per shard per batch).
+//! How big each chunk is depends on the [`Placement`] policy:
+//!
+//! - [`Placement::Uniform`] (default): equal chunks, at most one point of
+//!   imbalance — placement is independent of observed timings, so runs are
+//!   bit-for-bit reproducible in *where* points were measured too.
+//! - [`Placement::Weighted`]: chunks proportional to estimated shard
+//!   throughput. The estimate is an EWMA of each shard's observed
+//!   per-point service time, discounted by the queue depth
+//!   (`active_batches`) the shard's `stats` op reports at the start of the
+//!   batch — so a 10×-slower or heavily-loaded shard receives
+//!   proportionally fewer points. Measured *numbers* are identical under
+//!   both policies (shards embed the same deterministic simulator);
+//!   placement only moves wall-clock.
+//!
 //! A shard that fails mid-batch — connection refused, reset, short reply —
 //! is marked dead and its chunk is re-dispatched to the survivors on the
 //! next round; dead shards are re-pinged at the start of later batches and
 //! revived when they come back. Only when *no* shard can serve a chunk
-//! after repeated rounds does the backend panic (the [`MeasureBackend`]
-//! contract has no error channel: measurement infrastructure loss is fatal
-//! to a tuning run, invalid *configurations* are not errors).
+//! after repeated rounds does the backend give up, returning a typed
+//! [`FleetLostError`] through [`MeasureBackend::try_measure_many_traced`]
+//! so the whole run can fail cleanly (invalid *configurations* are still
+//! not errors — only the loss of the measurement infrastructure is).
 
-use super::backend::{BackendKind, MeasureBackend};
+use super::backend::{BackendKind, MeasureBackend, Placement, ShardPlacement};
 use super::cache::PointKey;
 use super::proto::{read_frame, write_frame, Fingerprint, Request, Response, PROTO_VERSION};
 use crate::codegen::MeasureResult;
@@ -24,7 +42,7 @@ use crate::space::{ConfigSpace, PointConfig};
 use crate::util::json::Json;
 use std::io::{BufReader, BufWriter};
 use std::net::{TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -37,10 +55,90 @@ const MEASURE_TIMEOUT: Duration = Duration::from_secs(600);
 /// Minimum spacing between routine probes of dead shards: each probe can
 /// burn a connect timeout per dead shard, so it must not run per batch.
 const REVIVE_INTERVAL: Duration = Duration::from_secs(30);
+/// EWMA smoothing for observed per-point service time: high enough that a
+/// heterogeneous fleet is learned within a couple of batches, low enough
+/// that one noisy batch does not whipsaw the placement.
+const EWMA_ALPHA: f64 = 0.4;
+
+/// The whole measurement fleet became unreachable: after bounded
+/// re-dispatch rounds (with revival probes in between) some points still
+/// had no shard able to serve them. Measurement infrastructure loss is
+/// fatal to a tuning run — this error propagates through
+/// [`super::Engine`] and the tuning loop so the run exits cleanly instead
+/// of panicking.
+#[derive(Debug, Clone)]
+pub struct FleetLostError {
+    /// Points that could not be delivered to any shard.
+    pub undeliverable: usize,
+    /// Dispatch rounds attempted before giving up.
+    pub rounds: usize,
+    /// The last shard failure observed (the proximate cause).
+    pub last_error: String,
+}
+
+impl std::fmt::Display for FleetLostError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "remote measurement fleet lost: {} point(s) undeliverable after {} dispatch \
+             round(s) (last error: {})",
+            self.undeliverable, self.rounds, self.last_error
+        )
+    }
+}
+
+impl std::error::Error for FleetLostError {}
 
 struct Shard {
     addr: String,
     alive: AtomicBool,
+    /// EWMA of observed service seconds per point, stored as `f64` bits
+    /// (0 = no successfully served chunk yet).
+    ewma_bits: AtomicU64,
+    /// Batch chunks this shard served (placement counter).
+    batches: AtomicUsize,
+    /// Points this shard served (placement counter).
+    points: AtomicUsize,
+    /// Queue depth (`active_batches`) last reported by the shard's
+    /// `stats` op — weighted placement's load signal.
+    queue_depth: AtomicUsize,
+    /// Preloaded cache entries the shard reported at handshake (journal
+    /// seeding + warm start): inherited fleet coverage.
+    preloaded: AtomicUsize,
+}
+
+impl Shard {
+    fn new(addr: String) -> Shard {
+        Shard {
+            addr,
+            alive: AtomicBool::new(true),
+            ewma_bits: AtomicU64::new(0),
+            batches: AtomicUsize::new(0),
+            points: AtomicUsize::new(0),
+            queue_depth: AtomicUsize::new(0),
+            preloaded: AtomicUsize::new(0),
+        }
+    }
+
+    fn ewma(&self) -> Option<f64> {
+        let bits = self.ewma_bits.load(Ordering::Relaxed);
+        if bits == 0 {
+            None
+        } else {
+            Some(f64::from_bits(bits))
+        }
+    }
+
+    fn observe_service(&self, secs_per_point: f64) {
+        if !secs_per_point.is_finite() || secs_per_point <= 0.0 {
+            return;
+        }
+        let next = match self.ewma() {
+            Some(prev) => EWMA_ALPHA * secs_per_point + (1.0 - EWMA_ALPHA) * prev,
+            None => secs_per_point,
+        };
+        self.ewma_bits.store(next.to_bits(), Ordering::Relaxed);
+    }
 }
 
 /// Remote measurement fleet client (`--backend remote:host:port[,...]`).
@@ -48,6 +146,8 @@ pub struct RemoteBackend {
     shards: Vec<Shard>,
     /// The backend id every shard serves (journal/cache identity).
     name: &'static str,
+    /// How batches are split across the alive shards.
+    placement: Placement,
     /// When dead shards were last probed for revival.
     last_probe: Mutex<Option<Instant>>,
 }
@@ -78,10 +178,11 @@ fn call(addr: &str, req: &Request, read_timeout: Duration) -> anyhow::Result<Res
         .ok_or_else(|| anyhow::anyhow!("{addr} sent an unintelligible reply"))
 }
 
-/// Handshake with one shard, returning its advertised backend id.
-fn handshake(addr: &str) -> anyhow::Result<String> {
+/// Handshake with one shard, returning its advertised backend id and
+/// preloaded-cache entry count (inherited coverage).
+fn handshake(addr: &str) -> anyhow::Result<(String, usize)> {
     match call(addr, &Request::Ping, PING_TIMEOUT)? {
-        Response::Pong { backend, proto, fingerprint } => {
+        Response::Pong { backend, proto, fingerprint, preloaded } => {
             if proto != PROTO_VERSION {
                 anyhow::bail!(
                     "shard {addr} speaks measure-protocol v{proto}, this binary v{PROTO_VERSION}"
@@ -96,24 +197,108 @@ fn handshake(addr: &str) -> anyhow::Result<String> {
                     local.describe()
                 );
             }
-            Ok(backend)
+            Ok((backend, preloaded))
         }
         Response::Error(e) => anyhow::bail!("shard {addr} refused the handshake: {e}"),
         _ => anyhow::bail!("shard {addr} sent a non-handshake reply to ping"),
     }
 }
 
+/// Split `pending` points into per-shard counts proportional to `weights`
+/// (largest-remainder rounding; deterministic, exact sum). Degenerate
+/// weights (all zero / non-finite) fall back to equal shares.
+fn apportion(pending: usize, weights: &[f64]) -> Vec<usize> {
+    let n = weights.len();
+    if n == 0 || pending == 0 {
+        return vec![0; n];
+    }
+    let sane: Vec<f64> =
+        weights.iter().map(|w| if w.is_finite() && *w > 0.0 { *w } else { 0.0 }).collect();
+    let total: f64 = sane.iter().sum();
+    if total <= 0.0 {
+        return apportion(pending, &vec![1.0; n]);
+    }
+    let quotas: Vec<f64> = sane.iter().map(|w| pending as f64 * w / total).collect();
+    let mut counts: Vec<usize> = quotas.iter().map(|q| q.floor() as usize).collect();
+    let assigned: usize = counts.iter().sum();
+    // Distribute the remainder to the largest fractional parts
+    // (deterministic tie-break by shard index).
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        let fa = quotas[a] - quotas[a].floor();
+        let fb = quotas[b] - quotas[b].floor();
+        fb.partial_cmp(&fa).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    for i in 0..pending.saturating_sub(assigned) {
+        counts[order[i % n]] += 1;
+    }
+    counts
+}
+
+/// Raise every zero count to one by taking from the largest counts, so
+/// each alive shard serves at least one point per batch and keeps its
+/// service-time EWMA fresh. No-op when there are fewer points than shards
+/// (someone must get zero then).
+fn ensure_probe_floor(counts: &mut [usize], pending: usize) {
+    if pending < counts.len() {
+        return;
+    }
+    while let Some(zero) = counts.iter().position(|&c| c == 0) {
+        let Some(donor) = (0..counts.len()).max_by_key(|&i| counts[i]) else {
+            return;
+        };
+        if counts[donor] <= 1 {
+            return;
+        }
+        counts[donor] -= 1;
+        counts[zero] += 1;
+    }
+}
+
+/// The legacy equal-chunk sizes: `ceil(pending / shards)` points per shard
+/// until exhausted (trailing shards may receive zero).
+fn uniform_counts(pending: usize, shards: usize) -> Vec<usize> {
+    let mut counts = vec![0; shards];
+    if shards == 0 || pending == 0 {
+        return counts;
+    }
+    let per = pending.div_ceil(shards).max(1);
+    let mut left = pending;
+    for c in counts.iter_mut() {
+        let take = per.min(left);
+        *c = take;
+        left -= take;
+        if left == 0 {
+            break;
+        }
+    }
+    counts
+}
+
 impl RemoteBackend {
     /// Handshake with every shard address; any failure is fatal (a fleet
     /// with a bad member should be fixed, not silently thinned, before a
-    /// run starts depending on it).
+    /// run starts depending on it). Uniform placement.
     pub fn connect(addrs: &[String]) -> anyhow::Result<RemoteBackend> {
+        RemoteBackend::connect_with(addrs, Placement::default())
+    }
+
+    /// [`connect`](Self::connect) with an explicit [`Placement`] policy.
+    pub fn connect_with(addrs: &[String], placement: Placement) -> anyhow::Result<RemoteBackend> {
         if addrs.is_empty() {
             anyhow::bail!("remote backend needs at least one shard address");
         }
         let mut served: Option<String> = None;
+        let mut preloaded_counts = Vec::with_capacity(addrs.len());
         for addr in addrs {
-            let backend = handshake(addr)?;
+            let (backend, preloaded) = handshake(addr)?;
+            preloaded_counts.push(preloaded);
+            if preloaded > 0 {
+                crate::log_info!(
+                    "eval",
+                    "shard {addr}: inherited {preloaded} preloaded measurement(s) (warm start)"
+                );
+            }
             match &served {
                 None => served = Some(backend),
                 Some(first) if *first != backend => {
@@ -133,17 +318,15 @@ impl RemoteBackend {
         };
         crate::log_info!(
             "eval",
-            "remote backend: {} shard(s) serving {name}, fingerprints verified",
-            addrs.len()
+            "remote backend: {} shard(s) serving {name}, fingerprints verified, {} placement",
+            addrs.len(),
+            placement.name()
         );
-        Ok(RemoteBackend {
-            shards: addrs
-                .iter()
-                .map(|a| Shard { addr: a.clone(), alive: AtomicBool::new(true) })
-                .collect(),
-            name,
-            last_probe: Mutex::new(None),
-        })
+        let shards: Vec<Shard> = addrs.iter().map(|a| Shard::new(a.clone())).collect();
+        for (shard, count) in shards.iter().zip(&preloaded_counts) {
+            shard.preloaded.store(*count, Ordering::Relaxed);
+        }
+        Ok(RemoteBackend { shards, name, placement, last_probe: Mutex::new(None) })
     }
 
     pub fn shard_count(&self) -> usize {
@@ -152,6 +335,10 @@ impl RemoteBackend {
 
     pub fn alive_count(&self) -> usize {
         self.shards.iter().filter(|s| s.alive.load(Ordering::Relaxed)).count()
+    }
+
+    pub fn placement(&self) -> Placement {
+        self.placement
     }
 
     fn alive_ids(&self) -> Vec<usize> {
@@ -167,11 +354,26 @@ impl RemoteBackend {
     /// Each probe of an unreachable shard costs up to the connect timeout.
     fn revive_dead(&self) {
         for s in &self.shards {
-            if !s.alive.load(Ordering::Relaxed) && handshake(&s.addr).is_ok() {
-                crate::log_info!("eval", "shard {} is back, rejoining the fleet", s.addr);
-                s.alive.store(true, Ordering::Relaxed);
+            if !s.alive.load(Ordering::Relaxed) {
+                if let Ok((_, preloaded)) = handshake(&s.addr) {
+                    crate::log_info!("eval", "shard {} is back, rejoining the fleet", s.addr);
+                    s.preloaded.store(preloaded, Ordering::Relaxed);
+                    // A revived shard may be a different process on the
+                    // same address: forget the dead one's service profile.
+                    s.ewma_bits.store(0, Ordering::Relaxed);
+                    s.queue_depth.store(0, Ordering::Relaxed);
+                    s.alive.store(true, Ordering::Relaxed);
+                }
             }
         }
+    }
+
+    /// Probe dead shards for revival *now*, bypassing the routine
+    /// [`REVIVE_INTERVAL`] spacing. Costs up to a connect timeout per dead
+    /// shard; meant for operators (and tests) that just restarted one.
+    pub fn revive_now(&self) {
+        *self.last_probe.lock().unwrap() = Some(Instant::now());
+        self.revive_dead();
     }
 
     /// Routine revival: only when something is dead, and at most once per
@@ -195,7 +397,8 @@ impl RemoteBackend {
     /// Send one chunk to one shard, validating the reply shape. Returns
     /// results paired with the shard's per-point freshness report (`false`
     /// when the shard answered from its own cache/coalescing instead of
-    /// simulating).
+    /// simulating). A served chunk updates the shard's service-time EWMA
+    /// and placement counters.
     fn measure_on(
         &self,
         shard: usize,
@@ -204,6 +407,7 @@ impl RemoteBackend {
     ) -> Result<(Vec<MeasureResult>, Vec<bool>), String> {
         let expect = values.len();
         let addr = &self.shards[shard].addr;
+        let started = Instant::now();
         // Every failure marks the shard dead — including a structured
         // refusal: a server that answers `Error` to a well-formed batch
         // (version skew) will refuse every retry, and leaving it in the
@@ -212,6 +416,10 @@ impl RemoteBackend {
         // the fleet could have absorbed.
         let err = match call(addr, &Request::Measure { task, points: values }, MEASURE_TIMEOUT) {
             Ok(Response::Results { results, fresh }) if results.len() == expect => {
+                let s = &self.shards[shard];
+                s.observe_service(started.elapsed().as_secs_f64() / expect.max(1) as f64);
+                s.batches.fetch_add(1, Ordering::Relaxed);
+                s.points.fetch_add(expect, Ordering::Relaxed);
                 return Ok((results, fresh));
             }
             Ok(Response::Results { results, .. }) => {
@@ -238,53 +446,89 @@ impl RemoteBackend {
             })
             .collect()
     }
-}
 
-impl MeasureBackend for RemoteBackend {
-    fn name(&self) -> &'static str {
-        self.name
+    /// Refresh each alive shard's queue-depth gauge from its `stats` op
+    /// (weighted placement's load signal). Advisory: a failed poll keeps
+    /// the previous value and does not mark the shard dead. Polls run
+    /// concurrently — one per shard — so the pre-batch cost is a single
+    /// round trip (bounded by the slowest shard), not N serial ones.
+    fn poll_queue_depths(&self, alive: &[usize]) {
+        std::thread::scope(|scope| {
+            for &i in alive {
+                let shard = &self.shards[i];
+                scope.spawn(move || {
+                    if let Ok(Response::Stats(stats)) =
+                        call(&shard.addr, &Request::Stats, PING_TIMEOUT)
+                    {
+                        if let Some(depth) = stats.get_usize("active_batches") {
+                            shard.queue_depth.store(depth, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
     }
 
-    fn measure(&self, space: &ConfigSpace, point: &PointConfig) -> MeasureResult {
-        self.measure_many(space, std::slice::from_ref(point), 1)[0]
+    /// Estimated relative throughput per alive shard: inverse service-time
+    /// EWMA, discounted by the last-reported queue depth. Shards with no
+    /// observation yet borrow the fastest known rate (optimistic: they are
+    /// profiled by their first chunk anyway).
+    fn shard_weights(&self, alive: &[usize]) -> Vec<f64> {
+        let ewmas: Vec<Option<f64>> = alive.iter().map(|&i| self.shards[i].ewma()).collect();
+        let fastest = ewmas
+            .iter()
+            .flatten()
+            .copied()
+            .fold(f64::INFINITY, f64::min);
+        alive
+            .iter()
+            .zip(&ewmas)
+            .map(|(&i, e)| {
+                let secs = match e {
+                    Some(s) => *s,
+                    None if fastest.is_finite() => fastest,
+                    None => 1.0,
+                };
+                let speed = 1.0 / secs.max(1e-9);
+                speed / (1.0 + self.shards[i].queue_depth.load(Ordering::Relaxed) as f64)
+            })
+            .collect()
     }
 
-    fn measure_many(
+    /// Per-shard chunk sizes for this round, by the placement policy.
+    fn plan_counts(&self, pending: usize, alive: &[usize], first_round: bool) -> Vec<usize> {
+        match self.placement {
+            Placement::Uniform => uniform_counts(pending, alive.len()),
+            Placement::Weighted => {
+                if first_round {
+                    self.poll_queue_depths(alive);
+                }
+                let mut counts = apportion(pending, &self.shard_weights(alive));
+                // Probe floor: an alive shard that receives zero points
+                // would never refresh its EWMA (only a served chunk
+                // updates it), so one bad observation could starve it
+                // permanently even after it recovers. Give every alive
+                // shard at least one point per batch (when the batch is
+                // big enough) — the probe that lets a slandered shard
+                // earn its weight back.
+                ensure_probe_floor(&mut counts, pending);
+                counts
+            }
+        }
+    }
+
+    /// The fallible batch path: shard the batch across the alive fleet,
+    /// re-dispatching chunks of shards that die mid-batch; see the module
+    /// docs. `Err` carries a [`FleetLostError`] when the whole fleet is
+    /// unreachable.
+    fn try_measure(
         &self,
         space: &ConfigSpace,
         points: &[PointConfig],
-        workers: usize,
-    ) -> Vec<MeasureResult> {
-        self.measure_many_traced(space, points, workers).0
-    }
-
-    /// One batch slot per alive shard: the fleet genuinely serves that
-    /// many batches at once, which is what the multi-tenant dispatcher
-    /// sizes admission from.
-    fn concurrent_batch_capacity(&self) -> usize {
-        self.alive_count().max(1)
-    }
-
-    fn fleet_stats(&self) -> Vec<(String, Json)> {
-        self.shard_stats()
-    }
-
-    /// Shard the batch across the alive fleet; chunks of a shard that dies
-    /// mid-batch are re-dispatched to the survivors. The freshness vector
-    /// relays each shard's own report, so a point another tenant already
-    /// paid for on a shard comes back `false`.
-    ///
-    /// Panics when no shard can serve a chunk after repeated rounds (the
-    /// whole fleet is unreachable): there is nothing measurable left.
-    fn measure_many_traced(
-        &self,
-        space: &ConfigSpace,
-        points: &[PointConfig],
-        _workers: usize,
-    ) -> (Vec<MeasureResult>, Vec<bool>) {
+    ) -> anyhow::Result<(Vec<MeasureResult>, Vec<bool>)> {
         let n = points.len();
         if n == 0 {
-            return (Vec::new(), Vec::new());
+            return Ok((Vec::new(), Vec::new()));
         }
         self.maybe_revive();
         let values: Vec<Vec<usize>> =
@@ -293,8 +537,9 @@ impl MeasureBackend for RemoteBackend {
         let task = space.task;
         let mut out: Vec<Option<(MeasureResult, bool)>> = vec![None; n];
         let mut pending: Vec<usize> = (0..n).collect();
-        let mut last_error = String::new();
+        let mut last_error = String::from("no shard reachable");
         let max_rounds = 2 * self.shards.len() + 2;
+        let mut rounds_attempted = 0usize;
         for round in 0..max_rounds {
             let mut alive = self.alive_ids();
             if alive.is_empty() {
@@ -304,16 +549,25 @@ impl MeasureBackend for RemoteBackend {
             if alive.is_empty() {
                 break;
             }
-            // Contiguous chunks, one per alive shard (at most one point of
-            // imbalance; chunk i may be empty when points < shards).
-            let per = pending.len().div_ceil(alive.len());
+            rounds_attempted = round + 1;
+            // Contiguous chunks, one per alive shard; sizes decided by the
+            // placement policy (a zero-size chunk skips its shard).
+            let counts = self.plan_counts(pending.len(), &alive, round == 0);
+            let mut chunks: Vec<(usize, Vec<usize>)> = Vec::with_capacity(alive.len());
+            let mut cursor = 0usize;
+            for (&shard, &count) in alive.iter().zip(&counts) {
+                if count == 0 {
+                    continue;
+                }
+                chunks.push((shard, pending[cursor..cursor + count].to_vec()));
+                cursor += count;
+            }
+            debug_assert_eq!(cursor, pending.len(), "placement must cover every point");
             type ChunkOutcome = (Vec<usize>, Result<(Vec<MeasureResult>, Vec<bool>), String>);
             let outcomes: Vec<ChunkOutcome> = std::thread::scope(|scope| {
-                let handles: Vec<_> = alive
-                    .iter()
-                    .zip(pending.chunks(per.max(1)))
-                    .map(|(&shard, chunk)| {
-                        let idxs: Vec<usize> = chunk.to_vec();
+                let handles: Vec<_> = chunks
+                    .into_iter()
+                    .map(|(shard, idxs)| {
                         scope.spawn(move || {
                             let vals: Vec<Vec<usize>> =
                                 idxs.iter().map(|&i| values[i].clone()).collect();
@@ -352,13 +606,13 @@ impl MeasureBackend for RemoteBackend {
                 break;
             }
         }
-        assert!(
-            pending.is_empty(),
-            "remote measurement fleet lost: {} point(s) undeliverable after {} rounds \
-             (last error: {last_error})",
-            pending.len(),
-            max_rounds
-        );
+        if !pending.is_empty() {
+            return Err(anyhow::Error::new(FleetLostError {
+                undeliverable: pending.len(),
+                rounds: rounds_attempted,
+                last_error,
+            }));
+        }
         let mut results = Vec::with_capacity(n);
         let mut fresh = Vec::with_capacity(n);
         for cell in out {
@@ -366,6 +620,174 @@ impl MeasureBackend for RemoteBackend {
             results.push(r);
             fresh.push(f);
         }
-        (results, fresh)
+        Ok((results, fresh))
+    }
+}
+
+impl MeasureBackend for RemoteBackend {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn measure(&self, space: &ConfigSpace, point: &PointConfig) -> MeasureResult {
+        self.measure_many(space, std::slice::from_ref(point), 1)[0]
+    }
+
+    fn measure_many(
+        &self,
+        space: &ConfigSpace,
+        points: &[PointConfig],
+        workers: usize,
+    ) -> Vec<MeasureResult> {
+        self.measure_many_traced(space, points, workers).0
+    }
+
+    /// One batch slot per alive shard: the fleet genuinely serves that
+    /// many batches at once, which is what the multi-tenant dispatcher
+    /// sizes admission from.
+    fn concurrent_batch_capacity(&self) -> usize {
+        self.alive_count().max(1)
+    }
+
+    fn fleet_stats(&self) -> Vec<(String, Json)> {
+        self.shard_stats()
+    }
+
+    fn placement_stats(&self) -> Vec<ShardPlacement> {
+        self.shards
+            .iter()
+            .map(|s| ShardPlacement {
+                addr: s.addr.clone(),
+                alive: s.alive.load(Ordering::Relaxed),
+                batches: s.batches.load(Ordering::Relaxed),
+                points: s.points.load(Ordering::Relaxed),
+                ewma_secs_per_point: s.ewma(),
+                queue_depth: s.queue_depth.load(Ordering::Relaxed),
+                preloaded: s.preloaded.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+
+    /// Infallible facade over [`try_measure_many_traced`]
+    /// (the [`MeasureBackend`] contract for direct callers). The engine
+    /// and the tuning loop use the fallible variant; this one panics on a
+    /// whole-fleet outage.
+    fn measure_many_traced(
+        &self,
+        space: &ConfigSpace,
+        points: &[PointConfig],
+        workers: usize,
+    ) -> (Vec<MeasureResult>, Vec<bool>) {
+        match self.try_measure_many_traced(space, points, workers) {
+            Ok(out) => out,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    fn try_measure_many_traced(
+        &self,
+        space: &ConfigSpace,
+        points: &[PointConfig],
+        _workers: usize,
+    ) -> anyhow::Result<(Vec<MeasureResult>, Vec<bool>)> {
+        self.try_measure(space, points)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_counts_match_legacy_chunking() {
+        // ceil(n/k)-sized chunks until exhausted, trailing shards empty —
+        // exactly what `pending.chunks(per)` used to produce.
+        assert_eq!(uniform_counts(10, 3), vec![4, 4, 2]);
+        assert_eq!(uniform_counts(2, 3), vec![1, 1, 0]);
+        assert_eq!(uniform_counts(9, 3), vec![3, 3, 3]);
+        assert_eq!(uniform_counts(0, 3), vec![0, 0, 0]);
+        assert_eq!(uniform_counts(5, 1), vec![5]);
+        assert_eq!(uniform_counts(3, 0), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn apportion_is_exact_and_proportional() {
+        // A 10x-faster shard gets ~10x the points.
+        let counts = apportion(110, &[10.0, 1.0]);
+        assert_eq!(counts.iter().sum::<usize>(), 110);
+        assert_eq!(counts, vec![100, 10]);
+        // Remainders are distributed deterministically, sum always exact.
+        for pending in [1usize, 7, 48, 99] {
+            let counts = apportion(pending, &[3.0, 2.0, 1.0]);
+            assert_eq!(counts.iter().sum::<usize>(), pending, "pending={pending}");
+        }
+        // Degenerate weights fall back to equal shares.
+        let counts = apportion(9, &[0.0, f64::NAN, -1.0]);
+        assert_eq!(counts.iter().sum::<usize>(), 9);
+        assert!(counts.iter().all(|&c| c == 3));
+        // Empty fleet / empty batch.
+        assert_eq!(apportion(5, &[]), Vec::<usize>::new());
+        assert_eq!(apportion(0, &[1.0, 1.0]), vec![0, 0]);
+    }
+
+    #[test]
+    fn apportion_starves_a_much_slower_shard_but_never_loses_points() {
+        // Weighted placement with a 10x-slower shard: the slow shard gets
+        // roughly 1/11th of the batch.
+        let counts = apportion(48, &[1.0, 0.1]);
+        assert_eq!(counts.iter().sum::<usize>(), 48);
+        assert!(counts[1] <= 5, "slow shard got {} of 48 points", counts[1]);
+        assert!(counts[0] >= 43);
+    }
+
+    #[test]
+    fn probe_floor_keeps_every_shard_warm_without_losing_points() {
+        // A starved shard gets its probe point back from the largest chunk.
+        let mut counts = vec![4, 0];
+        ensure_probe_floor(&mut counts, 4);
+        assert_eq!(counts, vec![3, 1]);
+        // Several zeros, all fixed, sum preserved.
+        let mut counts = vec![6, 0, 0];
+        ensure_probe_floor(&mut counts, 6);
+        assert_eq!(counts.iter().sum::<usize>(), 6);
+        assert!(counts.iter().all(|&c| c >= 1), "no shard may be starved: {counts:?}");
+        // Fewer points than shards: someone must get zero; untouched.
+        let mut counts = vec![1, 1, 0];
+        ensure_probe_floor(&mut counts, 2);
+        assert_eq!(counts, vec![1, 1, 0]);
+        // Exactly one point per shard.
+        let mut counts = vec![3, 0, 0];
+        ensure_probe_floor(&mut counts, 3);
+        assert_eq!(counts, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn ewma_learns_and_forgets_nothing_it_never_saw() {
+        let s = Shard::new("x:1".into());
+        assert_eq!(s.ewma(), None);
+        s.observe_service(1.0);
+        assert_eq!(s.ewma(), Some(1.0));
+        s.observe_service(2.0);
+        let e = s.ewma().unwrap();
+        assert!(e > 1.0 && e < 2.0, "ewma must smooth: {e}");
+        // Bogus observations are ignored.
+        s.observe_service(f64::NAN);
+        s.observe_service(-3.0);
+        assert_eq!(s.ewma(), Some(e));
+    }
+
+    #[test]
+    fn fleet_lost_error_renders_cause() {
+        let e = FleetLostError {
+            undeliverable: 7,
+            rounds: 4,
+            last_error: "shard x:1: connecting x:1: refused".into(),
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("7 point(s)"));
+        assert!(msg.contains("4 dispatch round(s)"));
+        assert!(msg.contains("refused"));
+        let any: anyhow::Error = anyhow::Error::new(e);
+        assert!(any.as_ref().downcast_ref::<FleetLostError>().is_some());
     }
 }

@@ -22,6 +22,19 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Shard behaviour knobs beyond the engine's own configuration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeOptions {
+    /// Artificial service latency added *per point* of every measure
+    /// request (`--throttle-ms`). Zero in production; non-zero turns a
+    /// shard into a deterministic slowpoke for heterogeneous-fleet
+    /// scenario tests and placement benchmarks — the latency is charged
+    /// before the engine runs, so cached answers are throttled too, just
+    /// like a genuinely slow host.
+    pub measure_delay: Duration,
+}
 
 /// A running measurement server.
 pub struct ServerHandle {
@@ -70,6 +83,15 @@ impl ServerHandle {
 
 /// Bind `addr` and serve `engine` until the handle is shut down.
 pub fn spawn(addr: &str, engine: Arc<Engine>) -> anyhow::Result<ServerHandle> {
+    spawn_with(addr, engine, ServeOptions::default())
+}
+
+/// [`spawn`] with explicit [`ServeOptions`].
+pub fn spawn_with(
+    addr: &str,
+    engine: Arc<Engine>,
+    opts: ServeOptions,
+) -> anyhow::Result<ServerHandle> {
     let listener = TcpListener::bind(addr)
         .map_err(|e| anyhow::anyhow!("binding measure server to {addr}: {e}"))?;
     let bound = listener.local_addr()?;
@@ -79,7 +101,7 @@ pub fn spawn(addr: &str, engine: Arc<Engine>) -> anyhow::Result<ServerHandle> {
         let stop = Arc::clone(&stop);
         let engine = Arc::clone(&engine);
         let clients = Arc::clone(&clients);
-        std::thread::spawn(move || accept_loop(listener, engine, clients, stop))
+        std::thread::spawn(move || accept_loop(listener, engine, clients, stop, opts))
     };
     Ok(ServerHandle { addr: bound, stop, engine, clients, accept: Some(accept) })
 }
@@ -89,6 +111,7 @@ fn accept_loop(
     engine: Arc<Engine>,
     clients: Arc<AtomicUsize>,
     stop: Arc<AtomicBool>,
+    opts: ServeOptions,
 ) {
     for conn in listener.incoming() {
         if stop.load(Ordering::SeqCst) {
@@ -104,7 +127,7 @@ fn accept_loop(
                         .map(|a| a.to_string())
                         .unwrap_or_else(|_| "?".to_string());
                     clients.fetch_add(1, Ordering::Relaxed);
-                    let served = serve_connection(stream, &engine, &clients);
+                    let served = serve_connection(stream, &engine, &clients, opts);
                     clients.fetch_sub(1, Ordering::Relaxed);
                     if let Err(e) = served {
                         crate::log_debug!("eval", "connection {peer} ended: {e}");
@@ -121,6 +144,7 @@ fn serve_connection(
     stream: TcpStream,
     engine: &Engine,
     clients: &AtomicUsize,
+    opts: ServeOptions,
 ) -> anyhow::Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
@@ -130,19 +154,23 @@ fn serve_connection(
             return Ok(());
         };
         let response = match Request::from_json(&frame) {
-            Some(req) => handle(engine, clients, req),
+            Some(req) => handle(engine, clients, req, opts),
             None => Response::Error("unintelligible request".to_string()),
         };
         write_frame(&mut writer, &response.to_json())?;
     }
 }
 
-fn handle(engine: &Engine, clients: &AtomicUsize, req: Request) -> Response {
+fn handle(engine: &Engine, clients: &AtomicUsize, req: Request, opts: ServeOptions) -> Response {
     match req {
         Request::Ping => Response::Pong {
             backend: engine.backend_name().to_string(),
             proto: PROTO_VERSION,
             fingerprint: Fingerprint::current(),
+            // Inherited coverage: how much persistent history (journal +
+            // warm start) seeded this shard's cache before it accepted a
+            // single batch.
+            preloaded: engine.preloaded_entries(),
         },
         Request::Stats => {
             // Engine counters plus the shard's own connection gauge: how
@@ -157,6 +185,12 @@ fn handle(engine: &Engine, clients: &AtomicUsize, req: Request) -> Response {
             Response::Stats(stats)
         }
         Request::Measure { task, points } => {
+            // Artificial slowness (scenario tests, placement benchmarks):
+            // charged per point, before the engine — a throttled shard is
+            // slow even when it answers from its cache, like a slow host.
+            if !opts.measure_delay.is_zero() && !points.is_empty() {
+                std::thread::sleep(opts.measure_delay * points.len() as u32);
+            }
             // Both sides rebuild the identical space from the task shape;
             // decoded values are the portable point identity.
             let space = ConfigSpace::for_task(&task, true);
@@ -188,4 +222,10 @@ fn handle(engine: &Engine, clients: &AtomicUsize, req: Request) -> Response {
 /// port picked by the OS.
 pub fn spawn_local(engine: Arc<Engine>) -> anyhow::Result<ServerHandle> {
     spawn("127.0.0.1:0", engine)
+}
+
+/// [`spawn_local`] with explicit [`ServeOptions`] (scenario tests:
+/// loopback shards with injected per-point latency).
+pub fn spawn_local_with(engine: Arc<Engine>, opts: ServeOptions) -> anyhow::Result<ServerHandle> {
+    spawn_with("127.0.0.1:0", engine, opts)
 }

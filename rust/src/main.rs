@@ -6,6 +6,7 @@
 //! arco compare       --models alexnet,resnet18 --frameworks autotvm,chameleon,arco
 //! arco fig4          --model resnet18            # CS ablation trace
 //! arco serve-measure --addr 127.0.0.1:4917       # measurement fleet shard
+//! arco journal merge out.jsonl a.jsonl b.jsonl   # union shard journals
 //! arco report-models                             # Table 3
 //! arco info                                      # backend / artifact status
 //! ```
@@ -15,10 +16,11 @@
 //! oracle (or a fleet of `serve-measure` shards), `--workers N` sizes its
 //! thread pool, `--journal results/journal.jsonl` persists measurements
 //! for reuse across runs, `--no-cache` disables in-memory memoization,
-//! `--cache-cap N` bounds the cache to N entries (LRU).
+//! `--cache-cap N` bounds the cache to N entries (LRU), `--placement
+//! uniform|weighted` picks how a fleet splits batches across shards.
 
 use arco::config::RunConfig;
-use arco::eval::{self, BackendKind, BackendSpec};
+use arco::eval::{self, BackendKind, BackendSpec, Placement};
 use arco::report;
 use arco::tuner::{compare_frameworks_opts, tune_model_with, DriverOptions, Framework};
 use arco::util::cli::Cli;
@@ -27,6 +29,7 @@ use arco::util::log::{set_level, Level};
 use arco::workload::{model_by_name, model_names};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::Duration;
 
 fn main() {
     arco::util::log::init_from_env();
@@ -47,6 +50,7 @@ fn usage() -> String {
      compare        compare frameworks across models (Figs 5-7, Table 6)\n  \
      fig4           ARCO with/without Confidence Sampling trace (Fig 4)\n  \
      serve-measure  expose a measurement backend to remote tuners (fleet shard)\n  \
+     journal        measurement-journal tooling (merge)\n  \
      report-models  print the model zoo (Table 3)\n  \
      info           backend / artifact status\n\nrun `arco <command> --help` for options\n"
         .into()
@@ -63,6 +67,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "compare" => cmd_compare(rest),
         "fig4" => cmd_fig4(rest),
         "serve-measure" => cmd_serve_measure(rest),
+        "journal" => cmd_journal(rest),
         "report-models" => {
             print!("{}", report::table3_models());
             report::write_result("table3_models.md", &report::table3_models())?;
@@ -92,6 +97,13 @@ fn common_cli(name: &str, about: &str) -> Cli {
         )
         .opt("journal", Some('j'), "persistent measurement journal (JSONL path)", None)
         .opt("cache-cap", None, "bound the measurement cache to N entries (LRU)", None)
+        .opt(
+            "placement",
+            None,
+            "fleet batch placement: uniform (reproducible default) | weighted \
+             (throughput-proportional chunks for heterogeneous fleets)",
+            None,
+        )
         .flag("no-cache", None, "disable the measurement cache (every point re-simulated)")
         .flag("quick", Some('q'), "CI-scale RL budgets (same pipeline)")
         .flag("verbose", Some('v'), "debug logging")
@@ -131,6 +143,14 @@ fn load_config(a: &arco::util::cli::Args) -> anyhow::Result<(RunConfig, bool)> {
     }
     if let Some(path) = a.get("journal") {
         cfg.eval.journal = Some(PathBuf::from(path));
+    }
+    if let Some(name) = a.get("placement") {
+        cfg.eval.placement = Placement::from_name(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown placement '{name}' (known: {})",
+                Placement::known_names().join(", ")
+            )
+        })?;
     }
     if a.has_flag("verbose") {
         set_level(Level::Debug);
@@ -176,7 +196,7 @@ fn cmd_tune(args: &[String]) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unknown framework"))?;
 
     let engine = build_engine(&cfg)?;
-    let out = tune_model_with(&engine, framework, &model, cfg.budget, quick, cfg.seed);
+    let out = tune_model_with(&engine, framework, &model, cfg.budget, quick, cfg.seed)?;
     println!(
         "{} on {}: mean inference {:.5}s ({:.3} inf/s), compile {:.1}s, {} measurements",
         framework.name(),
@@ -248,11 +268,19 @@ fn cmd_compare(args: &[String]) -> anyhow::Result<()> {
         arco::log_info!("main", "=== comparing on {name} ===");
         reports.push(compare_frameworks_opts(
             &engine, &frameworks, &model, cfg.budget, quick, cfg.seed, driver,
-        ));
+        )?);
     }
     println!("eval engine: {}", engine.summary());
     for (addr, stats) in engine.fleet_stats() {
         println!("  shard {addr}: {}", stats.dump());
+    }
+    // Fleet placement: where the points went, per shard (written to the
+    // report dir so heterogeneous-fleet runs leave an audit trail).
+    let engine_stats = engine.stats();
+    if !engine_stats.placement.is_empty() {
+        let md = report::placement_md(cfg.eval.placement.name(), &engine_stats);
+        print!("{md}");
+        report::write_result("fleet_placement.md", &md)?;
     }
     for r in &reports {
         if let Some(ledger) = &r.ledger {
@@ -297,9 +325,9 @@ fn cmd_fig4(args: &[String]) -> anyhow::Result<()> {
     // Both variants share one engine: configurations the two runs have in
     // common are simulated once.
     let engine = build_engine(&cfg)?;
-    let with_cs = tune_model_with(&engine, Framework::Arco, &model, cfg.budget, quick, cfg.seed);
+    let with_cs = tune_model_with(&engine, Framework::Arco, &model, cfg.budget, quick, cfg.seed)?;
     let without_cs =
-        tune_model_with(&engine, Framework::ArcoNoCs, &model, cfg.budget, quick, cfg.seed);
+        tune_model_with(&engine, Framework::ArcoNoCs, &model, cfg.budget, quick, cfg.seed)?;
 
     // Heaviest task's trace under each variant.
     let pick = |o: &arco::tuner::ModelOutcome| {
@@ -331,7 +359,21 @@ fn cmd_serve_measure(args: &[String]) -> anyhow::Result<()> {
         .opt("backend", None, "local backend to serve: vta-sim | analytical", Some("vta-sim"))
         .opt("workers", Some('w'), "measurement worker threads", None)
         .opt("journal", Some('j'), "persistent measurement journal (JSONL path)", None)
+        .opt(
+            "warm-start",
+            None,
+            "read-only journal (e.g. `arco journal merge` output) preloaded into the cache \
+             before accepting batches",
+            None,
+        )
         .opt("cache-cap", None, "bound the measurement cache to N entries (LRU)", None)
+        .opt(
+            "throttle-ms",
+            None,
+            "artificial per-point service latency in ms (scenario tests and placement \
+             benchmarks; 0 = off)",
+            None,
+        )
         .flag("no-cache", None, "disable the measurement cache")
         .flag("verbose", Some('v'), "debug logging")
         .flag("help", Some('h'), "show help");
@@ -363,20 +405,79 @@ fn cmd_serve_measure(args: &[String]) -> anyhow::Result<()> {
         cache: !a.has_flag("no-cache"),
         cache_capacity: a.get_usize("cache-cap").map_err(anyhow::Error::msg)?,
         journal: a.get("journal").map(PathBuf::from),
+        warm_start: a.get("warm-start").map(PathBuf::from),
+        placement: Placement::default(),
     };
     let engine = Arc::new(eval::Engine::new(config)?);
-    let handle = eval::serve_measure(a.get("addr").unwrap(), Arc::clone(&engine))?;
+    let throttle_ms = a.get_usize("throttle-ms").map_err(anyhow::Error::msg)?.unwrap_or(0);
+    let opts = eval::ServeOptions { measure_delay: Duration::from_millis(throttle_ms as u64) };
+    let handle = eval::serve_measure_with(a.get("addr").unwrap(), Arc::clone(&engine), opts)?;
     // The address line is machine-read by fleet launch scripts (CI smoke):
     // keep its format stable.
     println!("serve-measure: listening on {}", handle.addr());
     println!(
-        "serve-measure: backend={} workers={} fingerprint [{}]",
+        "serve-measure: backend={} workers={} preloaded={} fingerprint [{}]",
         engine.backend_name(),
         engine.workers(),
+        engine.preloaded_entries(),
         eval::Fingerprint::current().describe()
     );
+    if throttle_ms > 0 {
+        println!("serve-measure: throttled {throttle_ms} ms/point (testing mode)");
+    }
     handle.wait();
     Ok(())
+}
+
+fn cmd_journal(args: &[String]) -> anyhow::Result<()> {
+    let sub_usage = "arco journal <subcommand>\n\nsubcommands:\n  \
+         merge <out.jsonl> <in.jsonl...>  union fingerprint-identical journals \
+         (dedup on backend+task+knobs)\n";
+    match args.first().map(String::as_str) {
+        Some("merge") => {
+            let cli = Cli::new(
+                "arco journal merge",
+                "union fingerprint-identical measurement journals into one warm-start file",
+            )
+            .flag("verbose", Some('v'), "debug logging")
+            .flag("help", Some('h'), "show help");
+            let a = cli.parse(&args[1..]).map_err(anyhow::Error::msg)?;
+            if a.has_flag("help") {
+                print!("{}", cli.usage());
+                println!("\nusage: arco journal merge <out.jsonl> <in.jsonl...>");
+                return Ok(());
+            }
+            if a.has_flag("verbose") {
+                set_level(Level::Debug);
+            }
+            let paths = a.positional();
+            if paths.len() < 2 {
+                anyhow::bail!(
+                    "journal merge needs an output and at least one input: \
+                     arco journal merge <out.jsonl> <in.jsonl...>"
+                );
+            }
+            let out = PathBuf::from(&paths[0]);
+            let inputs: Vec<PathBuf> = paths[1..].iter().map(PathBuf::from).collect();
+            let stats = eval::merge_journals(&out, &inputs)?;
+            println!(
+                "journal merge: {} <- {} input(s): read {} record(s), added {}, \
+                 {} duplicate(s); output holds {} identities",
+                out.display(),
+                stats.inputs,
+                stats.read,
+                stats.added,
+                stats.duplicates,
+                stats.total
+            );
+            Ok(())
+        }
+        Some("--help") | Some("-h") | Some("help") | None => {
+            print!("{sub_usage}");
+            Ok(())
+        }
+        Some(other) => anyhow::bail!("unknown journal subcommand '{other}'\n\n{sub_usage}"),
+    }
 }
 
 fn cmd_info() -> anyhow::Result<()> {

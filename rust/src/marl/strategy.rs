@@ -303,7 +303,7 @@ mod tests {
         let s = space();
         let mut a = arco(&s);
         let budget = TuneBudget { total_measurements: 128, batch: 32, workers: 2, ..Default::default() };
-        let r = tune_task(&s, &mut a, budget);
+        let r = tune_task(&s, &mut a, budget).unwrap();
         assert!(r.best.valid);
         assert!(r.best.gflops > 0.0);
         // Must beat the worst decile of random configs comfortably: check

@@ -1,7 +1,7 @@
 //! Report emitters: CSV + markdown renderings of every paper table/figure,
 //! written under `results/`.
 
-use crate::eval::LedgerStats;
+use crate::eval::{EngineStats, LedgerStats};
 use crate::tuner::{CompareReport, Framework};
 use crate::util::json::Json;
 use crate::workload::{model_by_name, model_names};
@@ -182,6 +182,39 @@ pub fn ledger_stats_md(stats: &LedgerStats) -> String {
     s
 }
 
+/// Fleet placement table for a remote-backend run: which shard served how
+/// many points and batches, the service-time evidence behind weighted
+/// placement, and each shard's warm-start coverage. Empty placement stats
+/// (local backends) render nothing.
+pub fn placement_md(mode: &str, stats: &EngineStats) -> String {
+    if stats.placement.is_empty() {
+        return String::new();
+    }
+    let mut s = format!(
+        "Fleet placement ({mode}):\n\n\
+         | Shard | Alive | Batches | Points | EWMA ms/point | Queue | Preloaded |\n\
+         |---|---|---|---|---|---|---|\n"
+    );
+    for p in &stats.placement {
+        let ewma = match p.ewma_secs_per_point {
+            Some(secs) => format!("{:.3}", secs * 1e3),
+            None => "-".to_string(),
+        };
+        let _ = writeln!(
+            s,
+            "| {} | {} | {} | {} | {} | {} | {} |",
+            p.addr,
+            if p.alive { "yes" } else { "no" },
+            p.batches,
+            p.points,
+            ewma,
+            p.queue_depth,
+            p.preloaded
+        );
+    }
+    s
+}
+
 /// JSON dump of a comparison (machine-readable companion of the tables).
 pub fn compare_json(reports: &[CompareReport]) -> Json {
     Json::Arr(
@@ -234,6 +267,37 @@ mod tests {
     }
 
     #[test]
+    fn placement_md_renders_shards_or_nothing() {
+        use crate::eval::ShardPlacement;
+        let mut stats = EngineStats::default();
+        assert!(placement_md("uniform", &stats).is_empty());
+        stats.placement = vec![
+            ShardPlacement {
+                addr: "10.0.0.1:4917".into(),
+                alive: true,
+                batches: 4,
+                points: 96,
+                ewma_secs_per_point: Some(0.0021),
+                queue_depth: 1,
+                preloaded: 64,
+            },
+            ShardPlacement {
+                addr: "10.0.0.2:4917".into(),
+                alive: false,
+                batches: 1,
+                points: 8,
+                ewma_secs_per_point: None,
+                queue_depth: 0,
+                preloaded: 0,
+            },
+        ];
+        let md = placement_md("weighted", &stats);
+        assert!(md.contains("Fleet placement (weighted)"));
+        assert!(md.contains("| 10.0.0.1:4917 | yes | 4 | 96 | 2.100 | 1 | 64 |"));
+        assert!(md.contains("| 10.0.0.2:4917 | no | 1 | 8 | - | 0 | 0 |"));
+    }
+
+    #[test]
     fn ledger_stats_render() {
         use crate::eval::{BudgetLedger, Origin};
         let ledger = BudgetLedger::new(4);
@@ -258,7 +322,8 @@ mod tests {
             budget,
             true,
             1,
-        );
+        )
+        .unwrap();
         let reports = vec![report];
 
         let t6 = table6_inference(&reports);

@@ -259,6 +259,7 @@ impl SharedRun {
 /// One (framework, task) tuning job — the unit both drivers schedule.
 /// `tenant_label` is the ledger identity (the framework name, uniquified
 /// by the caller when a framework appears twice in one comparison).
+/// `Err` is a lost measurement fleet; the drivers abort the comparison.
 #[allow(clippy::too_many_arguments)]
 fn run_job(
     engine: &eval::Engine,
@@ -273,7 +274,7 @@ fn run_job(
     quick: bool,
     seed: u64,
     shared: Option<&SharedRun>,
-) -> TaskOutcome {
+) -> anyhow::Result<TaskOutcome> {
     let space = ConfigSpace::for_task(task, framework.tunes_hardware());
     let mut strategy = framework.build(space.clone(), quick, seed ^ (task_index as u64) << 32);
     let task_id = task.short_id();
@@ -285,9 +286,9 @@ fn run_job(
                 framework: tenant_label,
                 task_id: &task_id,
             };
-            tune_task_tenant(engine, &space, strategy.as_mut(), budget, Some(&tenant))
+            tune_task_tenant(engine, &space, strategy.as_mut(), budget, Some(&tenant))?
         }
-        None => tune_task_with(engine, &space, strategy.as_mut(), budget),
+        None => tune_task_with(engine, &space, strategy.as_mut(), budget)?,
     };
     crate::log_info!(
         "compare",
@@ -303,7 +304,7 @@ fn run_job(
         result.cache_served,
         strategy.diag()
     );
-    TaskOutcome { task_id, weight, result }
+    Ok(TaskOutcome { task_id, weight, result })
 }
 
 /// Roll task outcomes up into one (framework, model) aggregate.
@@ -339,13 +340,17 @@ fn aggregate(framework: Framework, model: &ModelSpec, tasks: Vec<TaskOutcome>) -
 /// measurement engine. Prefer [`tune_model_with`] with a shared engine when
 /// running several frameworks or models: tasks repeated across frameworks
 /// are then simulated once and served from the cache afterwards.
+///
+/// `Err` on every model-level driver means the measurement infrastructure
+/// was lost (a remote fleet with no reachable shard); local backends never
+/// fail.
 pub fn tune_model(
     framework: Framework,
     model: &ModelSpec,
     budget: TuneBudget,
     quick: bool,
     seed: u64,
-) -> ModelOutcome {
+) -> anyhow::Result<ModelOutcome> {
     let engine = eval::Engine::vta_sim(budget.workers);
     tune_model_with(&engine, framework, model, budget, quick, seed)
 }
@@ -359,7 +364,7 @@ pub fn tune_model_with(
     budget: TuneBudget,
     quick: bool,
     seed: u64,
-) -> ModelOutcome {
+) -> anyhow::Result<ModelOutcome> {
     let uniq = model.unique_tasks();
     let tasks: Vec<TaskOutcome> = uniq
         .iter()
@@ -380,8 +385,8 @@ pub fn tune_model_with(
                 None,
             )
         })
-        .collect();
-    aggregate(framework, model, tasks)
+        .collect::<anyhow::Result<_>>()?;
+    Ok(aggregate(framework, model, tasks))
 }
 
 /// [`tune_model_with`] with every task tuned as a concurrent tenant of
@@ -399,7 +404,7 @@ pub fn tune_model_concurrent(
     quick: bool,
     seed: u64,
     shared: &SharedRun,
-) -> ModelOutcome {
+) -> anyhow::Result<ModelOutcome> {
     let uniq = model.unique_tasks();
     let indices: Vec<usize> = (0..uniq.len()).collect();
     let tasks: Vec<TaskOutcome> = parallel_map(&indices, indices.len().max(1), |_, &i| {
@@ -418,8 +423,10 @@ pub fn tune_model_concurrent(
             seed,
             Some(shared),
         )
-    });
-    aggregate(framework, model, tasks)
+    })
+    .into_iter()
+    .collect::<anyhow::Result<_>>()?;
+    Ok(aggregate(framework, model, tasks))
 }
 
 /// Compare a set of frameworks on one model. All frameworks share one
@@ -431,7 +438,7 @@ pub fn compare_frameworks(
     budget: TuneBudget,
     quick: bool,
     seed: u64,
-) -> CompareReport {
+) -> anyhow::Result<CompareReport> {
     let engine = eval::Engine::vta_sim(budget.workers);
     compare_frameworks_with(&engine, frameworks, model, budget, quick, seed)
 }
@@ -445,7 +452,7 @@ pub fn compare_frameworks_with(
     budget: TuneBudget,
     quick: bool,
     seed: u64,
-) -> CompareReport {
+) -> anyhow::Result<CompareReport> {
     let opts = DriverOptions::default();
     compare_frameworks_opts(engine, frameworks, model, budget, quick, seed, opts)
 }
@@ -465,7 +472,7 @@ pub fn compare_frameworks_opts(
     quick: bool,
     seed: u64,
     opts: DriverOptions,
-) -> CompareReport {
+) -> anyhow::Result<CompareReport> {
     let uniq = model.unique_tasks();
     let shared = SharedRun::new(engine, &budget, opts.shared_budget);
     let shared_ref = opts.multi_tenant().then_some(&shared);
@@ -508,7 +515,9 @@ pub fn compare_frameworks_opts(
             seed,
             shared_ref,
         )
-    });
+    })
+    .into_iter()
+    .collect::<anyhow::Result<_>>()?;
 
     // Regroup framework-major (parallel_map preserves input order).
     let mut outcomes = Vec::with_capacity(frameworks.len());
@@ -533,11 +542,11 @@ pub fn compare_frameworks_opts(
     if let Some(stats) = shared.ledger_stats() {
         crate::log_info!("compare", "{}: ledger {}", model.name, stats.summary());
     }
-    CompareReport {
+    Ok(CompareReport {
         model: model.name.to_string(),
         outcomes,
         ledger: shared.ledger_stats(),
-    }
+    })
 }
 
 #[cfg(test)]
@@ -602,7 +611,7 @@ mod tests {
     fn tune_model_aggregates_weighted_inference_time() {
         // AlexNet is the smallest zoo model (5 tasks, weight 1 each).
         let model = model_by_name("alexnet").unwrap();
-        let out = tune_model(Framework::Random, &model, tiny_budget(), true, 3);
+        let out = tune_model(Framework::Random, &model, tiny_budget(), true, 3).unwrap();
         assert_eq!(out.tasks.len(), model.unique_tasks().len());
         let manual: f64 = out
             .tasks
@@ -632,7 +641,8 @@ mod tests {
             tiny_budget(),
             true,
             5,
-        );
+        )
+        .unwrap();
         let rel = report.throughput_vs_autotvm(Framework::AutoTvm).unwrap();
         assert!((rel - 1.0).abs() < 1e-12);
         assert!(report.throughput_vs_autotvm(Framework::Random).unwrap() > 0.0);
@@ -654,7 +664,8 @@ mod tests {
             true,
             5,
             DriverOptions { concurrent: true, shared_budget: true },
-        );
+        )
+        .unwrap();
         let ledger = report.ledger.as_ref().expect("shared-budget run must carry ledger stats");
         assert_eq!(ledger.per_task_points, 8);
         // Every tenant's settled points match its debits, and nothing
@@ -690,7 +701,8 @@ mod tests {
             true,
             7,
             DriverOptions { concurrent: false, shared_budget: true },
-        );
+        )
+        .unwrap();
         // Both entries must spend their own allowance, not drain one.
         assert_eq!(report.outcomes[0].measurements, report.outcomes[1].measurements);
         let ledger = report.ledger.unwrap();

@@ -130,11 +130,15 @@ impl TaskTuneResult {
 /// [`eval::Engine`] when tuning several tasks or frameworks: a shared
 /// engine pays for each unique configuration at most once across all of
 /// them.
+///
+/// `Err` means the measurement infrastructure was lost mid-run (a remote
+/// fleet with no reachable shard — [`crate::eval::FleetLostError`]); local
+/// backends never fail.
 pub fn tune_task(
     space: &ConfigSpace,
     strategy: &mut dyn Strategy,
     budget: TuneBudget,
-) -> TaskTuneResult {
+) -> anyhow::Result<TaskTuneResult> {
     let engine = eval::Engine::vta_sim(budget.workers);
     tune_task_with(&engine, space, strategy, budget)
 }
@@ -162,7 +166,7 @@ pub fn tune_task_with(
     space: &ConfigSpace,
     strategy: &mut dyn Strategy,
     budget: TuneBudget,
-) -> TaskTuneResult {
+) -> anyhow::Result<TaskTuneResult> {
     tune_task_tenant(engine, space, strategy, budget, None)
 }
 
@@ -171,13 +175,18 @@ pub fn tune_task_with(
 /// of monopolizing the fleet) and, when a ledger is present, every batch
 /// is charged against the (framework, task) allowance before measuring —
 /// the plan is truncated to what the ledger admits.
+///
+/// `Err` is a whole-fleet outage surfacing from the engine
+/// ([`crate::eval::FleetLostError`]): points already charged for the
+/// failed batch stay charged-but-unsettled on the ledger (honest
+/// accounting — nobody got numbers for them), and the run fails cleanly.
 pub fn tune_task_tenant(
     engine: &eval::Engine,
     space: &ConfigSpace,
     strategy: &mut dyn Strategy,
     budget: TuneBudget,
     tenant: Option<&TenantContext>,
-) -> TaskTuneResult {
+) -> anyhow::Result<TaskTuneResult> {
     let sw = Stopwatch::start();
     let mut timer = PhaseTimer::new();
     let mut best = MeasureResult {
@@ -233,8 +242,9 @@ pub fn tune_task_tenant(
                 t.dispatcher.checkout()
             })
         });
-        let batch = timer.time("measure", || engine.measure_paired(space, plan));
+        let batch = timer.time("measure", || engine.try_measure_paired(space, plan));
         drop(permit);
+        let batch = batch?;
         let modeled_before = modeled_hw_secs;
         for ((p, r), origin) in batch.pairs.iter().zip(&batch.origins) {
             measured += 1;
@@ -280,7 +290,7 @@ pub fn tune_task_tenant(
         iteration += 1;
     }
 
-    TaskTuneResult {
+    Ok(TaskTuneResult {
         best_point,
         best,
         measurements: measured,
@@ -291,7 +301,7 @@ pub fn tune_task_tenant(
         modeled_hw_secs,
         trace,
         timer,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -344,7 +354,7 @@ mod tests {
             observed: 0,
         };
         let budget = TuneBudget { total_measurements: 100, batch: 32, workers: 2, ..Default::default() };
-        let r = tune_task(&s, &mut strat, budget);
+        let r = tune_task(&s, &mut strat, budget).unwrap();
         assert_eq!(r.measurements, 100);
         assert_eq!(strat.observed, 100);
         assert!(r.best_point.is_some());
@@ -362,7 +372,7 @@ mod tests {
             seen: HashSet::new(),
             observed: 0,
         };
-        let r = tune_task(&s, &mut strat, TuneBudget { total_measurements: 64, batch: 16, workers: 2, ..Default::default() });
+        let r = tune_task(&s, &mut strat, TuneBudget { total_measurements: 64, batch: 16, workers: 2, ..Default::default() }).unwrap();
         for w in r.trace.windows(2) {
             assert!(w[1].best_gflops >= w[0].best_gflops);
             assert_eq!(w[1].ordinal, w[0].ordinal + 1);
@@ -382,7 +392,7 @@ mod tests {
             fn observe(&mut self, _results: &[(PointConfig, MeasureResult)]) {}
         }
         let s = space();
-        let r = tune_task(&s, &mut Dead, TuneBudget::default());
+        let r = tune_task(&s, &mut Dead, TuneBudget::default()).unwrap();
         assert_eq!(r.measurements, 0);
         assert!(r.best_point.is_none());
     }
@@ -400,7 +410,7 @@ mod tests {
                 seen: HashSet::new(),
                 observed: 0,
             };
-            tune_task_with(engine, &s, &mut strat, budget)
+            tune_task_with(engine, &s, &mut strat, budget).unwrap()
         };
         let a = run(&engine);
         let sims_after_first = engine.stats().simulations;
@@ -443,7 +453,7 @@ mod tests {
         };
         let budget =
             TuneBudget { total_measurements: 40, batch: 16, workers: 2, ..Default::default() };
-        let r = tune_task(&s, &mut strat, budget);
+        let r = tune_task(&s, &mut strat, budget).unwrap();
         assert_eq!(r.measurements, 40, "plan truncation must land exactly on the budget");
         assert_eq!(r.trace.len(), 40);
         assert_eq!(r.trace.last().unwrap().ordinal, 40);
@@ -462,7 +472,7 @@ mod tests {
         };
         let budget =
             TuneBudget { total_measurements: 16, batch: 8, workers: 2, ..Default::default() };
-        let r = tune_task(&s, &mut strat, budget);
+        let r = tune_task(&s, &mut strat, budget).unwrap();
         assert!(r.modeled_hw_secs > 0.0);
         // A zero/negative/NaN target (missing or empty baseline) charges
         // the full modeled time instead of "parity at the first entry".
@@ -489,7 +499,7 @@ mod tests {
                 seen: HashSet::new(),
                 observed: 0,
             };
-            tune_task_with(engine, &s, &mut strat, budget)
+            tune_task_with(engine, &s, &mut strat, budget).unwrap()
         };
         let a = run(&engine, 12);
         assert_eq!(a.fresh + a.cache_served, a.measurements);
@@ -511,7 +521,7 @@ mod tests {
             seen: HashSet::new(),
             observed: 0,
         };
-        let r = tune_task(&s, &mut strat, TuneBudget { total_measurements: 32, batch: 16, workers: 1, ..Default::default() });
+        let r = tune_task(&s, &mut strat, TuneBudget { total_measurements: 32, batch: 16, workers: 1, ..Default::default() }).unwrap();
         assert!(r.timer.count("plan") >= 2);
         assert!(r.timer.count("measure") >= 2);
         assert!(r.timer.count("observe") >= 2);

@@ -154,12 +154,12 @@ fn repeated_tuning_run_is_fully_cache_served() {
     let engine = Engine::vta_sim(2);
     let budget = TuneBudget { total_measurements: 64, batch: 16, workers: 2, ..Default::default() };
     let mut r1 = RandomSearch::new(s.clone(), 77);
-    let out1 = tune_task_with(&engine, &s, &mut r1, budget);
+    let out1 = tune_task_with(&engine, &s, &mut r1, budget).unwrap();
     let sims = engine.stats().simulations;
     assert_eq!(sims, out1.measurements);
 
     let mut r2 = RandomSearch::new(s.clone(), 77); // same seed → same plan
-    let out2 = tune_task_with(&engine, &s, &mut r2, budget);
+    let out2 = tune_task_with(&engine, &s, &mut r2, budget).unwrap();
     assert_eq!(out1.best.seconds, out2.best.seconds);
     assert_eq!(engine.stats().simulations, sims, "second identical run must be free");
     assert!(engine.stats().cache_hits >= out2.measurements);
@@ -179,7 +179,8 @@ fn compare_shares_measurements_across_frameworks() {
         budget,
         true,
         11,
-    );
+    )
+    .unwrap();
     assert_eq!(report.outcomes.len(), 2);
     let st = engine.stats();
     let total: usize = report.outcomes.iter().map(|o| o.measurements).sum();

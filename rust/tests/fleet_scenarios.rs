@@ -1,0 +1,404 @@
+//! Scenario tests for degraded and heterogeneous measurement fleets:
+//!
+//! - weighted placement starves an artificially 10×-slower shard of
+//!   points (and wall-clock) while producing bit-identical results and
+//!   identical ledger charges to uniform placement,
+//! - a shard started with `--warm-start` answers previously-journaled
+//!   points from its cache (the client ledger sees `fresh = false`),
+//! - `arco journal merge` + warm start reproduces an in-process run's
+//!   numbers exactly with zero fresh simulator runs, and
+//! - a whole-fleet outage surfaces as a typed [`FleetLostError`] through
+//!   the engine and the tuning loop instead of a panic.
+//!
+//! All shards run the analytical backend (CI-fast) with the server's
+//! injectable per-point latency hook standing in for genuinely slow
+//! hardware.
+
+use arco::baselines::RandomSearch;
+use arco::eval::{
+    merge_journals, serve_measure_local, serve_measure_local_with, BackendKind, BackendSpec,
+    Engine, EngineConfig, FleetLostError, Origin, Placement, PointKey, RemoteBackend,
+    ServeOptions, ServerHandle, ShardPlacement,
+};
+use arco::space::{ConfigSpace, PointConfig};
+use arco::tuner::{
+    compare_frameworks_opts, tune_task_with, CompareReport, DriverOptions, Framework, TuneBudget,
+};
+use arco::util::rng::Pcg32;
+use arco::workload::{model_by_name, Conv2dTask};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn space() -> ConfigSpace {
+    ConfigSpace::for_task(&Conv2dTask::new(1, 32, 28, 28, 32, 3, 3, 1, 1), true)
+}
+
+fn analytical_engine() -> Engine {
+    Engine::new(EngineConfig {
+        backend: BackendKind::Analytical.into(),
+        workers: 2,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+/// Loopback analytical shard with an artificial per-point service latency.
+fn throttled_shard(delay: Duration) -> ServerHandle {
+    serve_measure_local_with(
+        Arc::new(analytical_engine()),
+        ServeOptions { measure_delay: delay },
+    )
+    .unwrap()
+}
+
+/// `n` points with pairwise-distinct cache identities (so every one of
+/// them must cross the wire; cache hits would bypass placement).
+fn distinct_points(s: &ConfigSpace, seed: u64, n: usize) -> Vec<PointConfig> {
+    let mut rng = Pcg32::seeded(seed);
+    let mut seen = std::collections::HashSet::new();
+    let mut out = Vec::new();
+    while out.len() < n {
+        let p = s.random_point(&mut rng);
+        if seen.insert(PointKey::of(s, &p)) {
+            out.push(p);
+        }
+    }
+    out
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    PathBuf::from("target/tmp").join(format!("fleet_{tag}_{}.jsonl", std::process::id()))
+}
+
+fn cleanup(path: &Path) {
+    let _ = std::fs::remove_file(path);
+    let _ = std::fs::remove_file(PathBuf::from(format!("{}.lock", path.display())));
+}
+
+/// Drive `batches` through a fresh two-shard fleet (one 10×-slower) under
+/// `placement`; returns (results, per-shard stats of the slow shard,
+/// wall-clock).
+fn run_hetero_fleet(
+    placement: Placement,
+    batches: &[Vec<PointConfig>],
+    s: &ConfigSpace,
+) -> (Vec<arco::eval::MeasureResult>, ShardPlacement, Duration) {
+    let fast = throttled_shard(Duration::from_millis(1));
+    let slow = throttled_shard(Duration::from_millis(10));
+    let slow_addr = slow.addr().to_string();
+    let backend = RemoteBackend::connect_with(
+        &[fast.addr().to_string(), slow_addr.clone()],
+        placement,
+    )
+    .unwrap();
+    let engine = Engine::with_backend(Box::new(backend), 2, true);
+
+    let started = Instant::now();
+    let mut results = Vec::new();
+    for batch in batches {
+        results.extend(engine.measure_batch(s, batch));
+    }
+    let elapsed = started.elapsed();
+
+    let slow_stats = engine
+        .stats()
+        .placement
+        .into_iter()
+        .find(|p| p.addr == slow_addr)
+        .expect("slow shard must appear in placement stats");
+    fast.shutdown();
+    slow.shutdown();
+    (results, slow_stats, elapsed)
+}
+
+#[test]
+fn weighted_placement_starves_slow_shard_with_identical_results() {
+    let s = space();
+    // Six batches of 36 distinct points each (distinct across batches too,
+    // so nothing is answered by the client cache).
+    let all = distinct_points(&s, 4242, 216);
+    let batches: Vec<Vec<PointConfig>> = all.chunks(36).map(<[PointConfig]>::to_vec).collect();
+
+    let (uniform_results, uniform_slow, uniform_elapsed) =
+        run_hetero_fleet(Placement::Uniform, &batches, &s);
+    let (weighted_results, weighted_slow, weighted_elapsed) =
+        run_hetero_fleet(Placement::Weighted, &batches, &s);
+
+    // Same numbers, bit for bit: placement only decides *where* each
+    // deterministic simulation runs.
+    assert_eq!(uniform_results, weighted_results, "placement changed measured numbers");
+
+    // Uniform splits evenly: the 10x-slower shard served half the points.
+    assert_eq!(uniform_slow.points, 108, "uniform must split the batch evenly");
+    // Weighted placement learns the slow shard's service time after the
+    // first (uniform-ish) batch and sends it measurably fewer points.
+    assert!(
+        weighted_slow.points * 2 < uniform_slow.points,
+        "slow shard got {} of 216 points under weighted placement (uniform: {})",
+        weighted_slow.points,
+        uniform_slow.points
+    );
+    assert!(
+        weighted_slow.ewma_secs_per_point.unwrap_or(0.0) > 0.0,
+        "weighted placement must have profiled the slow shard"
+    );
+    // The artificial latency dominates the run (10ms/point on half the
+    // batch under uniform), so moving points off the slow shard must show
+    // up as wall-clock.
+    assert!(
+        weighted_elapsed < uniform_elapsed,
+        "weighted {weighted_elapsed:?} should beat uniform {uniform_elapsed:?} \
+         on a 10x-heterogeneous fleet"
+    );
+}
+
+/// Compare-level acceptance: on a heterogeneous fleet, `--placement
+/// weighted` under `--shared-budget` produces the identical report —
+/// best points, measurement counts, and per-tenant ledger charges — as
+/// uniform placement.
+#[test]
+fn weighted_and_uniform_compare_runs_are_identical_including_ledger() {
+    fn compare_through(placement: Placement) -> CompareReport {
+        let fast = throttled_shard(Duration::ZERO);
+        let slow = throttled_shard(Duration::from_millis(2));
+        let fleet = Engine::new(EngineConfig {
+            backend: BackendSpec::Remote(vec![
+                fast.addr().to_string(),
+                slow.addr().to_string(),
+            ]),
+            workers: 2,
+            placement,
+            ..Default::default()
+        })
+        .unwrap();
+        let model = model_by_name("alexnet").unwrap();
+        let budget =
+            TuneBudget { total_measurements: 12, batch: 4, workers: 2, ..Default::default() };
+        let report = compare_frameworks_opts(
+            &fleet,
+            &[Framework::Random, Framework::AutoTvm],
+            &model,
+            budget,
+            true,
+            5,
+            DriverOptions { concurrent: true, shared_budget: true },
+        )
+        .unwrap();
+        fast.shutdown();
+        slow.shutdown();
+        report
+    }
+
+    let uniform = compare_through(Placement::Uniform);
+    let weighted = compare_through(Placement::Weighted);
+
+    assert_eq!(uniform.outcomes.len(), weighted.outcomes.len());
+    for (u, w) in uniform.outcomes.iter().zip(&weighted.outcomes) {
+        assert_eq!(u.framework, w.framework);
+        assert_eq!(u.inference_secs, w.inference_secs, "{}: best diverged", u.framework.name());
+        assert_eq!(u.measurements, w.measurements);
+        for (ut, wt) in u.tasks.iter().zip(&w.tasks) {
+            assert_eq!(ut.result.best_point, wt.result.best_point, "task {}", ut.task_id);
+            assert_eq!(ut.result.best.seconds, wt.result.best.seconds);
+        }
+    }
+    // Identical ledger charges, tenant by tenant.
+    let ul = uniform.ledger.as_ref().unwrap();
+    let wl = weighted.ledger.as_ref().unwrap();
+    assert_eq!(ul.per_task_points, wl.per_task_points);
+    assert_eq!(ul.tenants.len(), wl.tenants.len());
+    for (ut, wt) in ul.tenants.iter().zip(&wl.tenants) {
+        assert_eq!((&ut.framework, &ut.task), (&wt.framework, &wt.task));
+        assert_eq!(ut.account.charged, wt.account.charged, "{}/{}", ut.framework, ut.task);
+        assert_eq!(ut.account.settled(), wt.account.settled());
+    }
+}
+
+#[test]
+fn warm_started_shard_answers_journaled_points_from_cache() {
+    let s = space();
+    let journal = tmp_path("warm_shard");
+    cleanup(&journal);
+    let points = distinct_points(&s, 77, 20);
+
+    // Build the history in-process, journaled.
+    {
+        let first = Engine::new(EngineConfig {
+            backend: BackendKind::Analytical.into(),
+            workers: 2,
+            journal: Some(journal.clone()),
+            ..Default::default()
+        })
+        .unwrap();
+        first.measure_batch(&s, &points);
+        first.flush_journal();
+    }
+
+    // A brand-new shard inherits it via --warm-start (read-only).
+    let shard_engine = Arc::new(
+        Engine::new(EngineConfig {
+            backend: BackendKind::Analytical.into(),
+            workers: 2,
+            warm_start: Some(journal.clone()),
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    assert_eq!(shard_engine.preloaded_entries(), 20);
+    let server = serve_measure_local(Arc::clone(&shard_engine)).unwrap();
+
+    let client = Engine::new(EngineConfig {
+        backend: BackendSpec::Remote(vec![server.addr().to_string()]),
+        workers: 2,
+        ..Default::default()
+    })
+    .unwrap();
+    // The handshake reported the inherited coverage to the client.
+    let placement = client.stats().placement;
+    assert_eq!(placement.len(), 1);
+    assert_eq!(placement[0].preloaded, 20, "handshake must carry the warm-start coverage");
+
+    // Replaying the journaled points: the shard answers everything from
+    // its warm cache — the client ledger sees fresh=false on every point.
+    let traced = client.try_measure_batch_traced(&s, &points).unwrap();
+    assert!(
+        traced.origins.iter().all(|o| *o == Origin::ShardCached),
+        "warm-started shard must answer from cache: {:?}",
+        traced.origins.iter().take(5).collect::<Vec<_>>()
+    );
+    assert_eq!(client.stats().simulations, 0);
+    assert_eq!(client.stats().shard_cached, 20);
+    assert_eq!(shard_engine.stats().simulations, 0, "the shard must not re-simulate");
+    assert!(shard_engine.stats().cache_hits >= 20);
+
+    server.shutdown();
+    cleanup(&journal);
+}
+
+#[test]
+fn journal_merge_then_warm_start_reproduces_in_process_run_exactly() {
+    let task_a = Conv2dTask::new(1, 32, 28, 28, 32, 3, 3, 1, 1);
+    let task_b = Conv2dTask::new(1, 64, 14, 14, 64, 3, 3, 1, 1);
+    let space_a = ConfigSpace::for_task(&task_a, true);
+    let space_b = ConfigSpace::for_task(&task_b, true);
+    let j_a = tmp_path("merge_a");
+    let j_b = tmp_path("merge_b");
+    let merged = tmp_path("merged");
+    cleanup(&j_a);
+    cleanup(&j_b);
+    cleanup(&merged);
+    let budget = TuneBudget { total_measurements: 24, batch: 8, workers: 2, ..Default::default() };
+
+    // Two separate in-process runs (think: two fleet shards, each with a
+    // local journal).
+    let run_local = |space: &ConfigSpace, journal: &PathBuf, seed: u64| {
+        let engine = Engine::new(EngineConfig {
+            backend: BackendKind::Analytical.into(),
+            workers: 2,
+            journal: Some(journal.clone()),
+            ..Default::default()
+        })
+        .unwrap();
+        let mut strat = RandomSearch::new(space.clone(), seed);
+        let out = tune_task_with(&engine, space, &mut strat, budget).unwrap();
+        engine.flush_journal();
+        out
+    };
+    let local_a = run_local(&space_a, &j_a, 42);
+    let local_b = run_local(&space_b, &j_b, 43);
+
+    // Union the shard journals, warm-start a fresh shard from the union.
+    let stats = merge_journals(&merged, &[j_a.clone(), j_b.clone()]).unwrap();
+    assert!(stats.added > 0);
+    let shard_engine = Arc::new(
+        Engine::new(EngineConfig {
+            backend: BackendKind::Analytical.into(),
+            workers: 2,
+            warm_start: Some(merged.clone()),
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let server = serve_measure_local(Arc::clone(&shard_engine)).unwrap();
+    let client = Engine::new(EngineConfig {
+        backend: BackendSpec::Remote(vec![server.addr().to_string()]),
+        workers: 2,
+        ..Default::default()
+    })
+    .unwrap();
+
+    // Same seeds, same spaces, through the warm fleet: identical numbers,
+    // zero fresh simulator runs anywhere.
+    let mut strat = RandomSearch::new(space_a.clone(), 42);
+    let remote_a = tune_task_with(&client, &space_a, &mut strat, budget).unwrap();
+    let mut strat = RandomSearch::new(space_b.clone(), 43);
+    let remote_b = tune_task_with(&client, &space_b, &mut strat, budget).unwrap();
+
+    for (local, remote) in [(&local_a, &remote_a), (&local_b, &remote_b)] {
+        assert_eq!(local.best_point, remote.best_point);
+        assert_eq!(local.best.seconds, remote.best.seconds);
+        assert_eq!(local.best.cycles, remote.best.cycles);
+        assert_eq!(local.measurements, remote.measurements);
+        assert_eq!(remote.fresh, 0, "warm fleet must serve the replay entirely from cache");
+        assert_eq!(remote.cache_served, remote.measurements);
+    }
+    assert_eq!(client.stats().simulations, 0);
+    assert_eq!(shard_engine.stats().simulations, 0, "zero fresh simulator runs on the shard");
+
+    server.shutdown();
+    cleanup(&j_a);
+    cleanup(&j_b);
+    cleanup(&merged);
+}
+
+#[test]
+fn whole_fleet_outage_is_a_typed_error_not_a_panic() {
+    let s = space();
+    let server = throttled_shard(Duration::ZERO);
+    let engine = Engine::new(EngineConfig {
+        backend: BackendSpec::Remote(vec![server.addr().to_string()]),
+        workers: 2,
+        ..Default::default()
+    })
+    .unwrap();
+
+    // Healthy first: the fleet serves a batch.
+    let warmup = distinct_points(&s, 9, 4);
+    engine.measure_batch(&s, &warmup);
+    assert_eq!(engine.concurrent_batch_capacity(), 1);
+
+    // Then the only shard goes away for good. (Filter the new batch
+    // against the warmup identities: a cached point would be served
+    // locally and shrink the undeliverable count.)
+    server.shutdown();
+    let warm_keys: std::collections::HashSet<PointKey> =
+        warmup.iter().map(|p| PointKey::of(&s, p)).collect();
+    let fresh: Vec<PointConfig> = distinct_points(&s, 10, 12)
+        .into_iter()
+        .filter(|p| !warm_keys.contains(&PointKey::of(&s, p)))
+        .take(6)
+        .collect();
+    assert_eq!(fresh.len(), 6);
+    let err = engine.try_measure_batch_traced(&s, &fresh).unwrap_err();
+    let fleet_lost = err
+        .as_ref()
+        .downcast_ref::<FleetLostError>()
+        .unwrap_or_else(|| panic!("expected FleetLostError, got: {err}"));
+    assert_eq!(fleet_lost.undeliverable, 6);
+    assert!(err.to_string().contains("fleet lost"), "unexpected message: {err}");
+
+    // Cached points are still served without touching the dead fleet.
+    let replay = engine.try_measure_batch_traced(&s, &warmup).unwrap();
+    assert_eq!(replay.results.len(), 4);
+
+    // And the tuning loop fails cleanly end to end (no panic, no partial
+    // TaskTuneResult pretending the run succeeded).
+    let mut strat = RandomSearch::new(s.clone(), 91);
+    let budget = TuneBudget { total_measurements: 16, batch: 8, workers: 2, ..Default::default() };
+    let tune_err = tune_task_with(&engine, &s, &mut strat, budget).unwrap_err();
+    assert!(
+        tune_err.as_ref().downcast_ref::<FleetLostError>().is_some(),
+        "tuning loop must propagate the typed fleet error, got: {tune_err}"
+    );
+}

@@ -50,6 +50,7 @@ fn flaky_shard(fp: Fingerprint) -> std::net::SocketAddr {
                                 backend: "vta-sim".to_string(),
                                 proto: PROTO_VERSION,
                                 fingerprint: fp.clone(),
+                                preloaded: 0,
                             };
                             if write_frame(&mut writer, &pong.to_json()).is_err() {
                                 return;
@@ -104,7 +105,7 @@ fn remote_tuning_run_matches_in_process() {
 
     let local = Engine::vta_sim(2);
     let mut planner = RandomSearch::new(s.clone(), 99);
-    let local_out = tune_task_with(&local, &s, &mut planner, budget);
+    let local_out = tune_task_with(&local, &s, &mut planner, budget).unwrap();
 
     let remote = Engine::new(EngineConfig {
         backend: BackendSpec::Remote(vec![addr]),
@@ -113,7 +114,7 @@ fn remote_tuning_run_matches_in_process() {
     })
     .unwrap();
     let mut planner = RandomSearch::new(s.clone(), 99);
-    let remote_out = tune_task_with(&remote, &s, &mut planner, budget);
+    let remote_out = tune_task_with(&remote, &s, &mut planner, budget).unwrap();
 
     assert_eq!(local_out.best.seconds, remote_out.best.seconds);
     assert_eq!(local_out.best.cycles, remote_out.best.cycles);
@@ -164,10 +165,11 @@ fn protocol_error_paths_answer_instead_of_hanging() {
     write_frame(&mut writer, &Request::Ping.to_json()).unwrap();
     let pong = Response::from_json(&read_frame(&mut reader).unwrap().unwrap()).unwrap();
     match pong {
-        Response::Pong { backend, proto, fingerprint } => {
+        Response::Pong { backend, proto, fingerprint, preloaded } => {
             assert_eq!(backend, "analytical");
             assert_eq!(proto, PROTO_VERSION);
             assert_eq!(fingerprint, Fingerprint::current());
+            assert_eq!(preloaded, 0, "a cold shard must report no inherited coverage");
         }
         other => panic!("expected pong, got {other:?}"),
     }

@@ -28,7 +28,7 @@ fn all_frameworks_complete_a_model() {
         Framework::Arco,
         Framework::Random,
     ] {
-        let out = tune_model(f, &model, budget(48, 16), true, 5);
+        let out = tune_model(f, &model, budget(48, 16), true, 5).unwrap();
         assert!(out.inference_secs.is_finite(), "{f:?}");
         assert!(out.inference_secs > 0.0, "{f:?}");
         assert_eq!(out.tasks.len(), model.unique_tasks().len(), "{f:?}");
@@ -39,8 +39,8 @@ fn all_frameworks_complete_a_model() {
 #[test]
 fn tuning_is_deterministic_per_seed() {
     let model = model_by_name("alexnet").unwrap();
-    let a = tune_model(Framework::AutoTvm, &model, budget(64, 16), true, 9);
-    let b = tune_model(Framework::AutoTvm, &model, budget(64, 16), true, 9);
+    let a = tune_model(Framework::AutoTvm, &model, budget(64, 16), true, 9).unwrap();
+    let b = tune_model(Framework::AutoTvm, &model, budget(64, 16), true, 9).unwrap();
     assert_eq!(a.inference_secs, b.inference_secs);
     assert_eq!(a.measurements, b.measurements);
 }
@@ -49,8 +49,8 @@ fn tuning_is_deterministic_per_seed() {
 fn arco_beats_software_only_arco_on_codesign_space() {
     // The headline co-design claim at small scale.
     let model = model_by_name("alexnet").unwrap();
-    let full = tune_model(Framework::Arco, &model, budget(160, 32), true, 13);
-    let sw = tune_model(Framework::ArcoSwOnly, &model, budget(160, 32), true, 13);
+    let full = tune_model(Framework::Arco, &model, budget(160, 32), true, 13).unwrap();
+    let sw = tune_model(Framework::ArcoSwOnly, &model, budget(160, 32), true, 13).unwrap();
     assert!(
         full.inference_secs <= sw.inference_secs * 1.001,
         "co-design {} vs sw-only {}",
@@ -74,7 +74,7 @@ fn arco_constraint_awareness_cuts_invalid_measurements() {
         Backend::native(ModelDims::default()),
         3,
     );
-    let r_arco = tune_task(&space_hw, &mut arco, b);
+    let r_arco = tune_task(&space_hw, &mut arco, b).unwrap();
 
     struct RawRandom {
         space: ConfigSpace,
@@ -104,7 +104,7 @@ fn arco_constraint_awareness_cuts_invalid_measurements() {
         rng: arco::util::rng::Pcg32::seeded(3),
         seen: Default::default(),
     };
-    let r_raw = tune_task(&space_hw, &mut raw, b);
+    let r_raw = tune_task(&space_hw, &mut raw, b).unwrap();
 
     assert!(
         r_arco.invalid * 2 <= r_raw.invalid.max(2),
@@ -129,7 +129,7 @@ fn cost_models_learn_the_landscape() {
             "autotvm" => Box::new(AutoTvm::new(space.clone(), AutoTvmParams::quick(), 21)),
             _ => Box::new(Chameleon::new(space.clone(), ChameleonParams::quick(), 21)),
         };
-        let r = tune_task(&space, strat.as_mut(), b);
+        let r = tune_task(&space, strat.as_mut(), b).unwrap();
         let n = r.trace.len();
         assert!(n >= 64, "{which}: got {n} measurements");
         let first: Vec<f64> = r.trace[..32].iter().map(|e| e.gflops).collect();
@@ -145,7 +145,7 @@ fn cost_models_learn_the_landscape() {
 #[test]
 fn trace_cumulative_time_is_monotone() {
     let model = model_by_name("alexnet").unwrap();
-    let out = tune_model(Framework::Arco, &model, budget(96, 32), true, 2);
+    let out = tune_model(Framework::Arco, &model, budget(96, 32), true, 2).unwrap();
     for t in &out.tasks {
         for w in t.result.trace.windows(2) {
             assert!(w[1].modeled_cum_secs >= w[0].modeled_cum_secs);
@@ -160,6 +160,6 @@ fn trace_cumulative_time_is_monotone() {
 #[test]
 fn search_secs_below_compile_secs() {
     let model = model_by_name("alexnet").unwrap();
-    let out = tune_model(Framework::AutoTvm, &model, budget(64, 32), true, 4);
+    let out = tune_model(Framework::AutoTvm, &model, budget(64, 32), true, 4).unwrap();
     assert!(out.search_secs <= out.compile_secs);
 }

@@ -5,7 +5,8 @@
 //! measurements flow through a loopback two-shard `serve-measure` fleet.
 
 use arco::eval::{
-    serve_measure_local, BackendKind, BackendSpec, Engine, EngineConfig, ServerHandle,
+    serve_measure_local, serve_measure_local_with, BackendKind, BackendSpec, Engine,
+    EngineConfig, RemoteBackend, ServeOptions, ServerHandle,
 };
 use arco::tuner::{
     compare_frameworks_opts, compare_frameworks_with, tune_model_concurrent, tune_model_with,
@@ -13,6 +14,7 @@ use arco::tuner::{
 };
 use arco::workload::model_by_name;
 use std::sync::Arc;
+use std::time::Duration;
 
 /// The analytical backend keeps these end-to-end runs CI-fast while still
 /// exercising the full plan → charge → dispatch → measure → settle path.
@@ -65,7 +67,7 @@ fn concurrent_tune_model_matches_serial_best_points() {
     let model = model_by_name("alexnet").unwrap();
 
     let serial_engine = analytical_engine();
-    let serial = tune_model_with(&serial_engine, Framework::AutoTvm, &model, budget(), true, 9);
+    let serial = tune_model_with(&serial_engine, Framework::AutoTvm, &model, budget(), true, 9).unwrap();
 
     let concurrent_engine = analytical_engine();
     let shared = SharedRun::new(&concurrent_engine, &budget(), true);
@@ -77,7 +79,8 @@ fn concurrent_tune_model_matches_serial_best_points() {
         true,
         9,
         &shared,
-    );
+    )
+    .unwrap();
 
     assert_eq!(serial.tasks.len(), concurrent.tasks.len());
     for (s, c) in serial.tasks.iter().zip(&concurrent.tasks) {
@@ -111,7 +114,8 @@ fn shared_budget_paper_set_over_two_shard_fleet() {
         budget(),
         true,
         5,
-    );
+    )
+    .unwrap();
 
     // The same comparison, concurrent with a shared ledger, measuring
     // through a loopback two-shard fleet.
@@ -135,7 +139,8 @@ fn shared_budget_paper_set_over_two_shard_fleet() {
         true,
         5,
         DriverOptions { concurrent: true, shared_budget: true },
-    );
+    )
+    .unwrap();
 
     // Trustworthy numbers: the fleet-concurrent run reproduces the serial
     // in-process run point for point — per (framework, task), the same
@@ -182,6 +187,107 @@ fn shared_budget_paper_set_over_two_shard_fleet() {
 }
 
 #[test]
+fn capacity_shrinks_on_shard_death_and_regrows_on_revival_without_starving_tenants() {
+    use arco::baselines::RandomSearch;
+    use arco::eval::{BudgetLedger, Dispatcher};
+    use arco::space::ConfigSpace;
+    use arco::tuner::{tune_task_tenant, TenantContext};
+    use arco::workload::Conv2dTask;
+
+    // Throttled shards (15 ms/point) so the run reliably outlives the
+    // mid-run kill below; the sleep dominates, so the timing is stable
+    // even on loaded CI machines.
+    let throttle = ServeOptions { measure_delay: Duration::from_millis(15) };
+    let shard_a = serve_measure_local_with(Arc::new(analytical_engine()), throttle).unwrap();
+    let shard_b = serve_measure_local_with(Arc::new(analytical_engine()), throttle).unwrap();
+    let addr_b = shard_b.addr().to_string();
+
+    // The test keeps its own handle to the fleet client (revival probe,
+    // liveness asserts) while the engine owns a shared one.
+    let fleet = Arc::new(
+        RemoteBackend::connect(&[shard_a.addr().to_string(), addr_b.clone()]).unwrap(),
+    );
+    let engine = Engine::with_backend(Box::new(Arc::clone(&fleet)), 2, true);
+    assert_eq!(engine.concurrent_batch_capacity(), 2);
+
+    let budget = TuneBudget { total_measurements: 24, batch: 4, workers: 2, ..Default::default() };
+    let ledger = BudgetLedger::new(24);
+    let dispatcher = Dispatcher::new(engine.concurrent_batch_capacity());
+    let spaces = [
+        ConfigSpace::for_task(&Conv2dTask::new(1, 32, 28, 28, 32, 3, 3, 1, 1), true),
+        ConfigSpace::for_task(&Conv2dTask::new(1, 64, 14, 14, 64, 3, 3, 1, 1), true),
+    ];
+    let task_ids = ["t0", "t1"];
+
+    // Two tenants tune concurrently under --shared-budget semantics while
+    // shard B is killed mid-run (each tenant has >= 6 batches x 30 ms of
+    // mandated shard sleep, so 100 ms lands well inside the run).
+    let run = |idx: usize| {
+        let mut strategy = RandomSearch::new(spaces[idx].clone(), 90 + idx as u64);
+        let tenant = TenantContext {
+            ledger: Some(&ledger),
+            dispatcher: &dispatcher,
+            framework: "random",
+            task_id: task_ids[idx],
+        };
+        tune_task_tenant(&engine, &spaces[idx], &mut strategy, budget, Some(&tenant))
+    };
+    let (out_a, out_b) = std::thread::scope(|scope| {
+        let killer = scope.spawn(move || {
+            std::thread::sleep(Duration::from_millis(100));
+            shard_b.shutdown();
+        });
+        let h0 = scope.spawn(|| run(0));
+        let h1 = scope.spawn(|| run(1));
+        killer.join().unwrap();
+        (h0.join().unwrap(), h1.join().unwrap())
+    });
+
+    // No tenant starves: both complete their full allowance despite the
+    // mid-run capacity loss, and the ledger agrees.
+    let out_a = out_a.expect("survivor shard must keep the run alive");
+    let out_b = out_b.expect("survivor shard must keep the run alive");
+    assert_eq!(out_a.measurements, 24, "tenant t0 starved");
+    assert_eq!(out_b.measurements, 24, "tenant t1 starved");
+    for id in task_ids {
+        let account = ledger.account("random", id);
+        assert_eq!(account.charged, 24);
+        assert_eq!(account.settled(), 24);
+    }
+
+    // Capacity shrank: the dead shard was detected by re-dispatch, and the
+    // tuning loop's per-batch set_slots pushed the shrink into the
+    // dispatcher (FIFO admission kept every permit accounted for).
+    assert_eq!(fleet.alive_count(), 1, "shard B must be marked dead");
+    assert_eq!(engine.concurrent_batch_capacity(), 1);
+    let d = dispatcher.stats();
+    assert_eq!(d.slots, 1, "dispatcher must track the shrunken fleet");
+    assert_eq!(d.in_flight, 0, "every permit must be released");
+    assert_eq!(d.dispatched, 12, "2 tenants x 6 batches, FIFO-admitted exactly once each");
+
+    // Revival: a new shard process on the same address rejoins after a
+    // probe, and the next tenant batch regrows dispatcher admission.
+    let shard_b2 = arco::eval::serve_measure(&addr_b, Arc::new(analytical_engine())).unwrap();
+    fleet.revive_now();
+    assert_eq!(fleet.alive_count(), 2, "revived shard must rejoin");
+    assert_eq!(engine.concurrent_batch_capacity(), 2);
+    let mut strategy = RandomSearch::new(spaces[0].clone(), 777);
+    let tenant = TenantContext {
+        ledger: None,
+        dispatcher: &dispatcher,
+        framework: "random",
+        task_id: "t2",
+    };
+    let small = TuneBudget { total_measurements: 4, batch: 4, workers: 2, ..Default::default() };
+    let r = tune_task_tenant(&engine, &spaces[0], &mut strategy, small, Some(&tenant)).unwrap();
+    assert_eq!(r.measurements, 4);
+    assert_eq!(dispatcher.stats().slots, 2, "revival must regrow dispatcher admission");
+
+    shard_a.shutdown();
+    shard_b2.shutdown();
+}
+
+#[test]
 fn ledger_exhaustion_stops_a_job_mid_batch() {
     // A ledger smaller than the local budget is the binding constraint:
     // with 10 points and batches of 4 the last batch is truncated to 2.
@@ -202,7 +308,7 @@ fn ledger_exhaustion_stops_a_job_mid_batch() {
     };
     let mut strategy = arco::baselines::RandomSearch::new(space.clone(), 3);
     let big = TuneBudget { total_measurements: 100, batch: 4, workers: 2, ..Default::default() };
-    let result = tune_task_tenant(&engine, &space, &mut strategy, big, Some(&tenant));
+    let result = tune_task_tenant(&engine, &space, &mut strategy, big, Some(&tenant)).unwrap();
     assert_eq!(result.measurements, 10, "the shared ledger must cap the job");
     assert_eq!(ledger.account("random", "t0").charged, 10);
     assert_eq!(ledger.remaining("random", "t0"), 0);

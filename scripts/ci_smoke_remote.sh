@@ -2,24 +2,52 @@
 # End-to-end measurement-fleet smoke: the same seeded compare run must
 # produce identical inference numbers through the in-process backend and
 # through a loopback `serve-measure` shard — for both the analytical proxy
-# and the vta-sim cycle oracle. Wall-clock outputs (compile time)
-# legitimately differ between runs, so the diff targets
-# results/table6_inference.md, which is a pure function of the
-# measurements.
+# and the vta-sim cycle oracle — plus two fleet-operations checks:
+# weighted placement on a heterogeneous (one-shard-throttled) fleet must
+# still match in-process numbers, and a `journal merge` → `--warm-start`
+# round trip must replay a journaled run with zero fresh simulations.
+# Wall-clock outputs (compile time) legitimately differ between runs, so
+# the diffs target results/table6_inference.md, which is a pure function
+# of the measurements.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 BIN=${ARCO_BIN:-target/release/arco}
 SERVE_LOG=$(mktemp)
+SERVE_LOG2=$(mktemp)
 SERVER_PID=0
+SERVER2_PID=0
 cleanup() {
     # Never `kill 0` (the whole process group) when no server is running.
     if [ "$SERVER_PID" -ne 0 ]; then
         kill "$SERVER_PID" 2>/dev/null || true
     fi
-    rm -f "$SERVE_LOG"
+    if [ "$SERVER2_PID" -ne 0 ]; then
+        kill "$SERVER2_PID" 2>/dev/null || true
+    fi
+    rm -f "$SERVE_LOG" "$SERVE_LOG2"
 }
 trap cleanup EXIT
+
+# Start a serve-measure shard ($1 = log file, extra args passed through).
+# Prints "ADDR PID" on success. Runs inside command substitution, so the
+# pid must travel via stdout (a subshell cannot set the caller's vars).
+start_shard() {
+    local log=$1
+    shift
+    : >"$log"
+    "$BIN" serve-measure --addr 127.0.0.1:0 --workers 2 "$@" >"$log" 2>&1 &
+    local pid=$!
+    local addr=""
+    for _ in $(seq 1 100); do
+        addr=$(sed -n 's/^serve-measure: listening on //p' "$log" | head -n1)
+        [ -n "$addr" ] && break
+        kill -0 "$pid" 2>/dev/null || { cat "$log" >&2; echo "server died" >&2; exit 1; }
+        sleep 0.1
+    done
+    [ -n "$addr" ] || { cat "$log" >&2; echo "server never reported its address" >&2; exit 1; }
+    echo "$addr $pid"
+}
 
 run_compare() {
     "$BIN" compare --models alexnet --frameworks autotvm \
@@ -61,6 +89,76 @@ smoke_backend() {
     echo "[$backend] ok: remote fleet measurements identical to in-process"
 }
 
+smoke_heterogeneous() {
+    echo "== heterogeneous fleet: weighted placement on a throttled shard =="
+    run_compare --backend analytical
+    cp results/table6_inference.md /tmp/arco_t6_hetero_local.md
+
+    local out fast slow
+    out=$(start_shard "$SERVE_LOG" --backend analytical)
+    fast=${out%% *}
+    SERVER_PID=${out##* }
+    # The second shard is artificially 5 ms/point slower: weighted
+    # placement must route around it without changing a single number.
+    out=$(start_shard "$SERVE_LOG2" --backend analytical --throttle-ms 5)
+    slow=${out%% *}
+    SERVER2_PID=${out##* }
+    echo "fleet: fast=$fast slow=$slow (throttled)"
+
+    run_compare --backend "remote:$fast,$slow" --placement weighted
+    cp results/table6_inference.md /tmp/arco_t6_hetero_weighted.md
+
+    kill "$SERVER_PID" "$SERVER2_PID" 2>/dev/null || true
+    wait "$SERVER_PID" 2>/dev/null || true
+    wait "$SERVER2_PID" 2>/dev/null || true
+    SERVER_PID=0
+    SERVER2_PID=0
+
+    diff -u /tmp/arco_t6_hetero_local.md /tmp/arco_t6_hetero_weighted.md
+    echo "heterogeneous ok: weighted placement matches in-process numbers"
+}
+
+smoke_warm_start() {
+    echo "== journal merge -> warm start round trip =="
+    local j1=/tmp/arco_smoke_journal.jsonl
+    local merged=/tmp/arco_smoke_merged.jsonl
+    rm -f "$j1" "$j1.lock" "$merged" "$merged.lock"
+
+    # Pass 1: in-process, journaling every measurement.
+    run_compare --backend analytical --journal "$j1"
+    cp results/table6_inference.md /tmp/arco_t6_warm_local.md
+
+    "$BIN" journal merge "$merged" "$j1"
+
+    # Pass 2: the same run through a shard warm-started from the merged
+    # journal — identical numbers, and the client must report zero fresh
+    # simulations (everything answered from the shard's inherited cache).
+    local out addr
+    out=$(start_shard "$SERVE_LOG" --backend analytical --warm-start "$merged")
+    addr=${out%% *}
+    SERVER_PID=${out##* }
+    grep -q "preloaded=" "$SERVE_LOG" || { cat "$SERVE_LOG"; echo "shard must report preloaded count"; exit 1; }
+
+    local warm_log=/tmp/arco_warm_run.log
+    run_compare --backend "remote:$addr" | tee "$warm_log"
+    cp results/table6_inference.md /tmp/arco_t6_warm_remote.md
+
+    kill "$SERVER_PID" 2>/dev/null || true
+    wait "$SERVER_PID" 2>/dev/null || true
+    SERVER_PID=0
+
+    diff -u /tmp/arco_t6_warm_local.md /tmp/arco_t6_warm_remote.md
+    grep -q " simulations=0 " "$warm_log" || {
+        echo "warm-started replay must cost zero fresh simulations; engine summary was:"
+        grep "eval engine:" "$warm_log" || true
+        exit 1
+    }
+    rm -f "$j1" "$j1.lock" "$merged" "$merged.lock"
+    echo "warm start ok: merge -> warm-start replays the run from cache"
+}
+
 smoke_backend analytical
 smoke_backend vta-sim
-echo "smoke ok: remote == in-process for both backends"
+smoke_heterogeneous
+smoke_warm_start
+echo "smoke ok: remote == in-process, weighted placement and warm start verified"
