@@ -190,6 +190,15 @@ impl Strategy for AutoTvm {
         self.model.fit(&self.xs, &self.ys);
     }
 
+    /// Safe at any pipeline depth: `seen` is updated at plan time (an
+    /// in-flight point is never re-proposed), and a GBT refit that lands a
+    /// batch late only means one SA round runs on a slightly stale
+    /// surrogate — the regressor is refit from the *full* history on every
+    /// observe, so no data is lost, it is just consulted later.
+    fn max_pipeline_depth(&self) -> usize {
+        usize::MAX
+    }
+
     fn diag(&self) -> String {
         format!("gbt_trees={} data={}", self.model.num_trees(), self.ys.len())
     }

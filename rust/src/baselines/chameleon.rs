@@ -329,6 +329,14 @@ impl Strategy for Chameleon {
         self.model.fit(&self.xs, &self.ys);
     }
 
+    /// Safe at any pipeline depth: `seen` is updated at plan time, so
+    /// Adaptive Exploration never revisits an in-flight candidate, and a
+    /// late surrogate refit (the GBT is rebuilt from the full history each
+    /// observe) only staleness-shifts one PPO round's reward landscape.
+    fn max_pipeline_depth(&self) -> usize {
+        usize::MAX
+    }
+
     fn diag(&self) -> String {
         format!(
             "gbt_trees={} data={} best_fit={:.3e}",

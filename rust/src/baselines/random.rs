@@ -39,6 +39,13 @@ impl Strategy for RandomSearch {
     }
 
     fn observe(&mut self, _results: &[(PointConfig, MeasureResult)]) {}
+
+    /// Uniform sampling never consults results at all, and `seen` is
+    /// updated at plan time, so any pipeline depth is safe: plans are
+    /// identical whether observations arrive promptly or batches late.
+    fn max_pipeline_depth(&self) -> usize {
+        usize::MAX
+    }
 }
 
 #[cfg(test)]

@@ -121,6 +121,10 @@ impl RunConfig {
                 .unwrap_or(self.budget.total_measurements);
             self.budget.batch = b.get_usize("batch").unwrap_or(self.budget.batch);
             self.budget.workers = b.get_usize("workers").unwrap_or(self.budget.workers);
+            self.budget.pipeline_depth = b
+                .get_usize("pipeline_depth")
+                .unwrap_or(self.budget.pipeline_depth)
+                .max(1);
         }
         if let Some(a) = doc.get("arco") {
             self.arco.explore = explore_from_json(a, self.arco.explore);
@@ -220,6 +224,19 @@ mod tests {
     }
 
     #[test]
+    fn pipeline_depth_parses_and_clamps() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.budget.pipeline_depth, 1, "serial is the reproducibility default");
+        c.apply_json(&Json::parse(r#"{"budget": {"pipeline_depth": 4}}"#).unwrap());
+        assert_eq!(c.budget.pipeline_depth, 4);
+        // Partial overlay leaves it alone; zero clamps to serial.
+        c.apply_json(&Json::parse(r#"{"budget": {"batch": 16}}"#).unwrap());
+        assert_eq!(c.budget.pipeline_depth, 4);
+        c.apply_json(&Json::parse(r#"{"budget": {"pipeline_depth": 0}}"#).unwrap());
+        assert_eq!(c.budget.pipeline_depth, 1);
+    }
+
+    #[test]
     fn json_overlay_partial() {
         let mut c = RunConfig::default();
         let doc = Json::parse(
@@ -304,7 +321,7 @@ mod tests {
 
     #[test]
     fn shipped_configs_parse() {
-        for name in ["arco", "autotvm", "chameleon", "quick", "smoke"] {
+        for name in ["arco", "autotvm", "chameleon", "quick", "smoke", "pipelined"] {
             let path = std::path::Path::new("configs").join(format!("{name}.json"));
             if path.exists() {
                 RunConfig::from_file(&path).unwrap_or_else(|e| panic!("{name}: {e}"));

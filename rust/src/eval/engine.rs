@@ -277,6 +277,38 @@ impl PairedBatch {
     }
 }
 
+/// A batch submitted with [`Engine::submit_batch`] that is (or was) being
+/// measured in the background: a join handle over the eventual
+/// [`PairedBatch`]. `Err` on [`wait`](Self::wait) is the same whole-fleet
+/// outage [`Engine::try_measure_paired`] reports
+/// ([`super::remote::FleetLostError`]); a panicking backend resumes its
+/// panic on the waiter, exactly as the synchronous path would.
+pub struct PendingBatch<'scope> {
+    handle: std::thread::ScopedJoinHandle<'scope, anyhow::Result<PairedBatch>>,
+    len: usize,
+}
+
+impl PendingBatch<'_> {
+    /// Points in the submitted batch.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Block until the batch is measured and take its results.
+    pub fn wait(self) -> anyhow::Result<PairedBatch> {
+        match self.handle.join() {
+            Ok(out) => out,
+            // A backend panic on the measurement thread is re-raised on
+            // the waiting thread, matching the synchronous call's shape.
+            Err(panic) => std::panic::resume_unwind(panic),
+        }
+    }
+}
+
 impl Engine {
     /// Build an engine from a full configuration. Fails fast when the
     /// journal or warm-start file cannot be opened safely (another writer
@@ -682,6 +714,44 @@ impl Engine {
         })
     }
 
+    /// Submit a batch for *asynchronous* measurement: the batch starts
+    /// measuring on a scoped worker thread immediately and the caller gets
+    /// a join-handle-style [`PendingBatch`] back, so it can keep computing
+    /// (planning the next batch) while the hardware evaluates this one —
+    /// the pipelined tuning loop's engine seam.
+    ///
+    /// Semantics are identical to
+    /// [`try_measure_paired`](Self::try_measure_paired): the submitted
+    /// batch rides the same cache, claim-registry and in-flight coalescing
+    /// machinery (two concurrently submitted batches sharing a brand-new
+    /// point never double-measure it — one owns, the other waits on the
+    /// in-flight cell) and the same `util::pool`/fleet fan-out underneath.
+    ///
+    /// `ticket` is an arbitrary value dropped the moment the measurement
+    /// returns, *before* [`PendingBatch::wait`] can observe the result —
+    /// the hook the tuning loop uses to hold a dispatcher admission permit
+    /// for exactly the batch's time in flight (per in-flight batch, not
+    /// per tenant turn).
+    pub fn submit_batch<'scope, 'env, T>(
+        &'env self,
+        scope: &'scope std::thread::Scope<'scope, 'env>,
+        space: &ConfigSpace,
+        points: Vec<PointConfig>,
+        ticket: T,
+    ) -> PendingBatch<'scope>
+    where
+        T: Send + 'scope,
+    {
+        let len = points.len();
+        let space = space.clone();
+        let handle = scope.spawn(move || {
+            let out = self.try_measure_paired(&space, points);
+            drop(ticket);
+            out
+        });
+        PendingBatch { handle, len }
+    }
+
     /// How many batches the backend can usefully serve at once (local:
     /// one; remote fleet: one per alive shard). The multi-tenant
     /// dispatcher re-reads this between batches, so shard death and
@@ -1005,6 +1075,57 @@ mod tests {
         assert_eq!(e.stats().simulations, 0);
         // try_measure_paired carries the same error.
         assert!(e.try_measure_paired(&s, vec![p]).is_err());
+    }
+
+    #[test]
+    fn submitted_batches_coalesce_instead_of_double_measuring() {
+        let s = space();
+        let e = Engine::vta_sim(2);
+        let p = s.default_point();
+        let mut rng = Pcg32::seeded(41);
+        let q = loop {
+            let q = s.random_point(&mut rng);
+            if PointKey::of(&s, &q) != PointKey::of(&s, &p) {
+                break q;
+            }
+        };
+        let (a, b) = std::thread::scope(|scope| {
+            // Both async batches share both points; the claim registry must
+            // hand each point to exactly one owner whatever the interleave.
+            let pending_a = e.submit_batch(scope, &s, vec![p.clone(), q.clone()], ());
+            let pending_b = e.submit_batch(scope, &s, vec![p.clone(), q.clone()], ());
+            assert_eq!(pending_a.len(), 2);
+            assert!(!pending_a.is_empty());
+            (pending_a.wait().unwrap(), pending_b.wait().unwrap())
+        });
+        assert_eq!(a.pairs[0].1, b.pairs[0].1);
+        assert_eq!(a.pairs[1].1, b.pairs[1].1);
+        assert_eq!(a.pairs[0].1, crate::codegen::measure_point(&s, &p));
+        let st = e.stats();
+        assert_eq!(st.simulations, 2, "concurrent submitted batches double-measured");
+        assert!(e.inflight.lock().unwrap().is_empty(), "in-flight registry must drain");
+    }
+
+    #[test]
+    fn submit_batch_drops_its_ticket_when_measurement_completes() {
+        struct Flag(Arc<std::sync::atomic::AtomicBool>);
+        impl Drop for Flag {
+            fn drop(&mut self) {
+                self.0.store(true, Ordering::SeqCst);
+            }
+        }
+        let s = space();
+        let e = Engine::vta_sim(2);
+        let released = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        std::thread::scope(|scope| {
+            let pending =
+                e.submit_batch(scope, &s, vec![s.default_point()], Flag(Arc::clone(&released)));
+            let out = pending.wait().unwrap();
+            assert_eq!(out.pairs.len(), 1);
+            // The ticket (a dispatcher permit in the tuning loop) was
+            // released by the measurement thread, not by this wait().
+            assert!(released.load(Ordering::SeqCst), "ticket must drop with the measurement");
+        });
     }
 
     #[test]

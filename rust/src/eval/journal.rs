@@ -71,6 +71,67 @@ fn holder_is_dead(holder: &str) -> bool {
     proc_root.is_dir() && !proc_root.join(holder).exists()
 }
 
+/// How an attempt to take a `<path>.lock` writer sentinel ended.
+enum LockAcquire {
+    /// Sentinel created; the caller owns the lock.
+    Acquired,
+    /// A live (or unverifiable) writer holds it; `holder` is its recorded
+    /// pid, empty when unreadable.
+    Busy { holder: String },
+    /// Filesystem trouble unrelated to contention (e.g. read-only dir).
+    Failed(std::io::Error),
+}
+
+/// Take the `<path>.lock` writer sentinel for the journal at `path`. A
+/// sentinel left behind by a killed process (SIGTERM skips Drop) is
+/// reclaimed when the recorded pid is verifiably dead (Linux `/proc`).
+/// The reclaim must not race another reclaimer into two writers: the
+/// sentinel is renamed aside (atomic; one winner) and its content
+/// re-checked — if the rename grabbed a *fresh* lock instead (a racer
+/// already reclaimed and re-locked), it is put back and the retry
+/// collides with that live lock and reports `Busy`. Shared by every
+/// writer-mode entry point ([`Journal::open`], [`compact_journal`]) so
+/// the two writers' lock semantics cannot drift.
+fn acquire_lock_sentinel(path: &Path) -> LockAcquire {
+    let lock = sibling(path, ".lock");
+    let mut attempts = 0;
+    loop {
+        match std::fs::OpenOptions::new().write(true).create_new(true).open(&lock) {
+            Ok(mut f) => {
+                let _ = writeln!(f, "{}", std::process::id());
+                return LockAcquire::Acquired;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                let holder = std::fs::read_to_string(&lock)
+                    .map(|s| s.trim().to_string())
+                    .unwrap_or_default();
+                if attempts == 0 && holder_is_dead(&holder) {
+                    attempts += 1;
+                    let aside = sibling(path, &format!(".lock.stale.{}", std::process::id()));
+                    if std::fs::rename(&lock, &aside).is_ok() {
+                        let renamed = std::fs::read_to_string(&aside)
+                            .map(|s| s.trim().to_string())
+                            .unwrap_or_default();
+                        if renamed == holder {
+                            crate::log_warn!(
+                                "eval",
+                                "journal {}: reclaimed stale lock from dead pid {holder}",
+                                path.display()
+                            );
+                            let _ = std::fs::remove_file(&aside);
+                        } else {
+                            let _ = std::fs::rename(&aside, &lock);
+                        }
+                    }
+                    continue;
+                }
+                return LockAcquire::Busy { holder };
+            }
+            Err(e) => return LockAcquire::Failed(e),
+        }
+    }
+}
+
 /// An append-only measurement log bound to one file.
 pub struct Journal {
     path: PathBuf,
@@ -117,72 +178,32 @@ impl Journal {
                 }
             }
         }
-        let lock = sibling(path, ".lock");
-        let mut attempts = 0;
-        loop {
-            match std::fs::OpenOptions::new().write(true).create_new(true).open(&lock) {
-                Ok(mut f) => {
-                    let _ = writeln!(f, "{}", std::process::id());
-                    break;
-                }
-                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
-                    let holder = std::fs::read_to_string(&lock)
-                        .map(|s| s.trim().to_string())
-                        .unwrap_or_default();
-                    // A killed process (SIGTERM skips Drop) leaves its
-                    // sentinel behind; reclaim it when the recorded pid is
-                    // verifiably dead (Linux /proc). Otherwise fail fast.
-                    // The reclaim must not race another reclaimer into two
-                    // writers: the sentinel is renamed aside (atomic; one
-                    // winner) and its content re-checked — if the rename
-                    // grabbed a *fresh* lock instead (a racer already
-                    // reclaimed and re-locked), it is put back and the
-                    // retry collides with that live lock and fails fast.
-                    if attempts == 0 && holder_is_dead(&holder) {
-                        attempts += 1;
-                        let aside =
-                            sibling(path, &format!(".lock.stale.{}", std::process::id()));
-                        if std::fs::rename(&lock, &aside).is_ok() {
-                            let renamed = std::fs::read_to_string(&aside)
-                                .map(|s| s.trim().to_string())
-                                .unwrap_or_default();
-                            if renamed == holder {
-                                crate::log_warn!(
-                                    "eval",
-                                    "journal {}: reclaimed stale lock from dead pid {holder}",
-                                    path.display()
-                                );
-                                let _ = std::fs::remove_file(&aside);
-                            } else {
-                                let _ = std::fs::rename(&aside, &lock);
-                            }
-                        }
-                        continue;
-                    }
-                    anyhow::bail!(
-                        "journal {} is locked by another writer (pid {}): one writing engine \
-                         per journal; if that process is dead, delete {}",
-                        path.display(),
-                        if holder.is_empty() { "unknown".to_string() } else { holder },
-                        lock.display()
-                    );
-                }
-                Err(e) => {
-                    crate::log_warn!(
-                        "eval",
-                        "cannot lock journal {} ({e}); journal opens read-only, \
-                         measurements will not be persisted",
-                        path.display()
-                    );
-                    return Journal::load(path, false);
-                }
+        match acquire_lock_sentinel(path) {
+            LockAcquire::Acquired => {}
+            LockAcquire::Busy { holder } => {
+                anyhow::bail!(
+                    "journal {} is locked by another writer (pid {}): one writing engine \
+                     per journal; if that process is dead, delete {}",
+                    path.display(),
+                    if holder.is_empty() { "unknown".to_string() } else { holder },
+                    sibling(path, ".lock").display()
+                );
+            }
+            LockAcquire::Failed(e) => {
+                crate::log_warn!(
+                    "eval",
+                    "cannot lock journal {} ({e}); journal opens read-only, \
+                     measurements will not be persisted",
+                    path.display()
+                );
+                return Journal::load(path, false);
             }
         }
         match Journal::load(path, true) {
             Ok(j) => Ok(j),
             Err(e) => {
                 // Do not leave the sentinel behind on a refused open.
-                let _ = std::fs::remove_file(&lock);
+                let _ = std::fs::remove_file(sibling(path, ".lock"));
                 Err(e)
             }
         }
@@ -477,6 +498,187 @@ pub fn merge_journals(out: &Path, inputs: &[PathBuf]) -> anyhow::Result<MergeSta
     Ok(stats)
 }
 
+/// Outcome of a [`compact_journal`] run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CompactStats {
+    /// Record lines read from the file (header excluded).
+    pub read: usize,
+    /// Records kept in the compacted output.
+    pub kept: usize,
+    /// Duplicate `(backend, task, decoded knobs)` records dropped.
+    pub dropped_duplicates: usize,
+    /// Malformed lines dropped (torn flushes, line-level corruption).
+    pub dropped_malformed: usize,
+    /// Records dropped because the file was measured under a foreign or
+    /// stale fingerprint (a simulator bump, or an unfingerprinted v1
+    /// file): their numbers cannot be trusted by this binary.
+    pub dropped_stale: usize,
+    /// Whether the file was rewritten (false: already compact, untouched).
+    pub rewritten: bool,
+}
+
+impl CompactStats {
+    /// Total records dropped, all causes.
+    pub fn dropped(&self) -> usize {
+        self.dropped_duplicates + self.dropped_malformed + self.dropped_stale
+    }
+}
+
+/// Removes the writer lock sentinel on drop, covering every error path.
+struct LockGuard(PathBuf);
+
+impl Drop for LockGuard {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.0);
+    }
+}
+
+/// Rewrite the journal at `path` in place, dropping duplicate `(backend,
+/// task, decoded knobs)` records, malformed (torn) lines, and records
+/// measured under a foreign or stale fingerprint — the GC pass that keeps
+/// long-lived warm-start files bounded (`arco journal compact`).
+///
+/// Unlike [`Journal::open`], which *refuses* fingerprint-mismatched and
+/// v1 files (silently reusing their numbers would be wrong), compaction
+/// is the explicit cleanup tool: a journal stamped by a different
+/// simulator (or an unfingerprinted v1 journal) has nothing this binary
+/// can reuse, so its records are dropped wholesale and the file becomes
+/// a valid, empty v2 journal under the current fingerprint. A healthy,
+/// already-compact file is left byte-untouched. A file that is not a
+/// measurement journal at all — a typo'd path, a torn header, a future
+/// format version — is refused with an error, never rewritten: GC only
+/// touches data it can positively identify as journal records.
+///
+/// Takes the `<path>.lock` writer sentinel for the duration (failing fast
+/// if a live writer holds it; a dead writer's stale sentinel is reclaimed,
+/// exactly as [`Journal::open`] does) and replaces the file atomically
+/// (temp file + rename), so a crash mid-compaction never loses the
+/// original.
+pub fn compact_journal(path: &Path) -> anyhow::Result<CompactStats> {
+    if !path.exists() {
+        anyhow::bail!("journal compact: {} does not exist", path.display());
+    }
+    match acquire_lock_sentinel(path) {
+        LockAcquire::Acquired => {}
+        LockAcquire::Busy { holder } => {
+            anyhow::bail!(
+                "journal {} is locked by another writer (pid {}): compact it when no engine \
+                 is journaling to it; if that process is dead, delete {}",
+                path.display(),
+                if holder.is_empty() { "unknown".to_string() } else { holder },
+                sibling(path, ".lock").display()
+            );
+        }
+        LockAcquire::Failed(e) => {
+            anyhow::bail!("journal compact: cannot lock {}: {e}", path.display());
+        }
+    }
+    let _guard = LockGuard(sibling(path, ".lock"));
+
+    let text = std::fs::read_to_string(path)?;
+    let current = Fingerprint::current();
+    let mut stats = CompactStats::default();
+    let mut kept_lines: Vec<String> = Vec::new();
+    let mut seen: HashSet<(String, PointKey)> = HashSet::new();
+
+    let mut lines = text.lines();
+    let first = lines.next().unwrap_or("");
+    let header = Json::parse(first)
+        .ok()
+        .filter(|h| h.get_str("format") == Some("arco-journal"));
+    let trusted = match &header {
+        Some(h) => {
+            let version = h.get_usize("version").unwrap_or(0);
+            if version != Journal::VERSION {
+                // A future format may hold data this binary cannot even
+                // parse: wiping it would be destruction, not GC.
+                anyhow::bail!(
+                    "journal compact: {} is journal version {version}, this binary compacts \
+                     v{} — refusing to touch it",
+                    path.display(),
+                    Journal::VERSION
+                );
+            }
+            // Same version, different simulator fingerprint: the records
+            // are parseable but their numbers are stale — the documented
+            // GC case, dropped wholesale below.
+            h.get("fingerprint").and_then(Fingerprint::from_json).as_ref() == Some(&current)
+        }
+        None => {
+            // No v2 header. A v1 whole-file journal carries no fingerprint
+            // at all, so its records are stale by construction and
+            // compacting it into an empty v2 journal is the documented
+            // migration. Anything else is NOT a journal — a results file,
+            // a typo'd path — and rewriting it would destroy data the
+            // operator never asked us to manage: refuse.
+            let v1_entries = Json::parse(&text).ok().and_then(|doc| {
+                if doc.get_usize("version") == Some(1) {
+                    Some(doc.get("entries").and_then(Json::as_arr).map_or(0, Vec::len))
+                } else {
+                    None
+                }
+            });
+            let Some(entries) = v1_entries else {
+                anyhow::bail!(
+                    "journal compact: {} is not a measurement journal (no v2 header, not a \
+                     v1 journal) — refusing to rewrite it",
+                    path.display()
+                );
+            };
+            stats.read = entries;
+            stats.dropped_stale = entries;
+            false
+        }
+    };
+    if header.is_some() {
+        for line in lines {
+            if line.trim().is_empty() {
+                continue;
+            }
+            stats.read += 1;
+            if !trusted {
+                stats.dropped_stale += 1;
+                continue;
+            }
+            match Json::parse(line).ok().as_ref().and_then(record_from_json) {
+                Some((backend, key, _result)) => {
+                    if seen.insert((backend, key)) {
+                        stats.kept += 1;
+                        kept_lines.push(line.to_string());
+                    } else {
+                        stats.dropped_duplicates += 1;
+                    }
+                }
+                None => stats.dropped_malformed += 1,
+            }
+        }
+    }
+
+    // Already compact (healthy header, nothing dropped, clean final
+    // newline): leave the bytes untouched — compaction is idempotent.
+    if trusted && stats.dropped() == 0 && text.ends_with('\n') {
+        return Ok(stats);
+    }
+
+    let header_line = Json::obj(vec![
+        ("format", Json::str("arco-journal")),
+        ("version", Json::num(Journal::VERSION as f64)),
+        ("fingerprint", current.to_json()),
+    ])
+    .dump();
+    let mut out = header_line;
+    out.push('\n');
+    for line in &kept_lines {
+        out.push_str(line);
+        out.push('\n');
+    }
+    let tmp = sibling(path, ".tmp");
+    std::fs::write(&tmp, out)?;
+    std::fs::rename(&tmp, path)?;
+    stats.rewritten = true;
+    Ok(stats)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -654,6 +856,16 @@ mod tests {
         // An unparsable sentinel is never reclaimed.
         std::fs::write(sibling(&path, ".lock"), "not-a-pid\n").unwrap();
         assert!(Journal::open(&path).is_err());
+        let _ = std::fs::remove_file(sibling(&path, ".lock"));
+
+        // Compaction shares the same acquisition: a dead writer's sentinel
+        // is reclaimed, a live/unverifiable one fails fast.
+        let _ = write_journal(&path, "vta-sim", 63, 2);
+        std::fs::write(sibling(&path, ".lock"), "4294967294\n").unwrap();
+        assert!(compact_journal(&path).is_ok());
+        assert!(!sibling(&path, ".lock").exists());
+        std::fs::write(sibling(&path, ".lock"), "not-a-pid\n").unwrap();
+        assert!(compact_journal(&path).unwrap_err().to_string().contains("locked"));
         cleanup(&path);
     }
 
@@ -826,6 +1038,152 @@ mod tests {
         assert!(Journal::open_read_only(&out).unwrap().is_empty());
         cleanup(&header_only);
         cleanup(&out);
+    }
+
+    #[test]
+    fn compact_drops_duplicates_and_is_idempotent() {
+        let path = tmp_path("compact_dup");
+        let keys = write_journal(&path, "vta-sim", 61, 4);
+        assert_eq!(keys.len(), 4);
+        // Simulate journals concatenated by hand / duplicated flushes: the
+        // last two record lines appended again, plus a torn tail.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let records: Vec<&str> = text.lines().skip(1).collect();
+        {
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            writeln!(f, "{}", records[2]).unwrap();
+            writeln!(f, "{}", records[3]).unwrap();
+            f.write_all(b"{\"backend\":\"vta-sim\",\"task\":{\"n\":").unwrap();
+        }
+
+        let stats = compact_journal(&path).unwrap();
+        assert_eq!(stats.read, 7, "4 originals + 2 duplicates + 1 torn line");
+        assert_eq!(stats.kept, 4);
+        assert_eq!(stats.dropped_duplicates, 2);
+        assert_eq!(stats.dropped_malformed, 1);
+        assert_eq!(stats.dropped_stale, 0);
+        assert!(stats.rewritten);
+        // The compacted file is a healthy journal holding the 4 identities.
+        let j = Journal::open_read_only(&path).unwrap();
+        assert_eq!(j.len(), 4);
+        // No writer lock left behind.
+        assert!(!sibling(&path, ".lock").exists());
+
+        // Compacting a compact journal is a byte-level no-op.
+        let before = std::fs::read_to_string(&path).unwrap();
+        let again = compact_journal(&path).unwrap();
+        assert_eq!(again.read, 4);
+        assert_eq!(again.kept, 4);
+        assert_eq!(again.dropped(), 0);
+        assert!(!again.rewritten, "an already-compact journal must not be rewritten");
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), before);
+        cleanup(&path);
+    }
+
+    #[test]
+    fn compact_drops_foreign_fingerprint_records_wholesale() {
+        let path = tmp_path("compact_foreign");
+        cleanup(&path);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).unwrap();
+        }
+        // A journal stamped by a bumped cycle model, holding one record:
+        // nothing in it can be trusted by this binary.
+        let s = space();
+        let p = s.default_point();
+        let key = PointKey::of(&s, &p);
+        let mut fp = Fingerprint::current();
+        fp.cycle_model += 1;
+        let header = Json::obj(vec![
+            ("format", Json::str("arco-journal")),
+            ("version", Json::num(Journal::VERSION as f64)),
+            ("fingerprint", fp.to_json()),
+        ]);
+        let record = record_to_json("vta-sim", &key, &measure_point(&s, &p));
+        std::fs::write(&path, format!("{}\n{}\n", header.dump(), record.dump())).unwrap();
+
+        // Journal::open refuses the file outright...
+        assert!(Journal::open(&path).is_err());
+        // ...compaction is the sanctioned cleanup: stale records dropped,
+        // the file reborn as a valid empty journal under this fingerprint.
+        let stats = compact_journal(&path).unwrap();
+        assert_eq!(stats.read, 1);
+        assert_eq!(stats.kept, 0);
+        assert_eq!(stats.dropped_stale, 1);
+        assert!(stats.rewritten);
+        let j = Journal::open(&path).unwrap();
+        assert!(j.is_empty());
+        drop(j);
+        cleanup(&path);
+    }
+
+    #[test]
+    fn compact_converts_v1_to_empty_v2() {
+        let path = tmp_path("compact_v1");
+        cleanup(&path);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).unwrap();
+        }
+        std::fs::write(&path, "{\n  \"version\": 1,\n  \"entries\": [{}, {}]\n}\n").unwrap();
+        let stats = compact_journal(&path).unwrap();
+        assert_eq!(stats.dropped_stale, 2, "v1 records carry no fingerprint: all stale");
+        assert_eq!(stats.kept, 0);
+        assert!(stats.rewritten);
+        // The unfingerprinted v1 file, which open() refused, is now a
+        // valid empty v2 journal.
+        assert!(Journal::open_read_only(&path).unwrap().is_empty());
+        cleanup(&path);
+    }
+
+    #[test]
+    fn compact_refuses_files_that_are_not_journals() {
+        // GC must never destroy data it cannot positively identify as
+        // journal records: a typo'd path (some results JSON), a torn
+        // header, or a future format version are refused, not wiped.
+        let path = tmp_path("compact_not_a_journal");
+        cleanup(&path);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).unwrap();
+        }
+        for content in [
+            "{\"model\": \"alexnet\", \"outcomes\": []}\n", // some other JSON file
+            "not json at all {\n",                          // garbage / torn header
+        ] {
+            std::fs::write(&path, content).unwrap();
+            let err = compact_journal(&path).unwrap_err().to_string();
+            assert!(err.contains("not a measurement journal"), "unexpected error: {err}");
+            assert_eq!(std::fs::read_to_string(&path).unwrap(), content, "file must be untouched");
+            assert!(!sibling(&path, ".lock").exists(), "refusal must not leak the lock");
+        }
+        // A future journal version is refused too.
+        let header = Json::obj(vec![
+            ("format", Json::str("arco-journal")),
+            ("version", Json::num((Journal::VERSION + 1) as f64)),
+            ("fingerprint", Fingerprint::current().to_json()),
+        ]);
+        std::fs::write(&path, header.dump() + "\n").unwrap();
+        let err = compact_journal(&path).unwrap_err().to_string();
+        assert!(err.contains("refusing to touch"), "unexpected error: {err}");
+        cleanup(&path);
+    }
+
+    #[test]
+    fn compact_refuses_missing_and_locked_files() {
+        let missing = tmp_path("compact_missing");
+        cleanup(&missing);
+        let err = compact_journal(&missing).unwrap_err().to_string();
+        assert!(err.contains("does not exist"), "unexpected error: {err}");
+
+        let locked = tmp_path("compact_locked");
+        let _ = write_journal(&locked, "vta-sim", 62, 2);
+        let writer = Journal::open(&locked).unwrap();
+        let err = compact_journal(&locked).unwrap_err().to_string();
+        assert!(err.contains("locked"), "unexpected error: {err}");
+        drop(writer);
+        // Once the writer is gone, compaction proceeds (and the journal
+        // was already compact).
+        assert!(!compact_journal(&locked).unwrap().rewritten);
+        cleanup(&locked);
     }
 
     #[test]

@@ -23,10 +23,13 @@
 //!
 //! The [`Dispatcher`] is the scheduling half: it admits at most
 //! `slots` measurement batches to the engine at once and serves waiting
-//! tenants strictly first-come-first-served. A tenant that just measured
-//! re-queues behind every waiting competitor, so concurrent (framework,
-//! task) jobs interleave batch-by-batch instead of one framework
-//! monopolizing the shards. The slot count tracks
+//! tenants strictly first-come-first-served. Permits are held per
+//! *in-flight batch* — a pipelining tenant (`--pipeline-depth >= 2`)
+//! checks out one ticket per submitted batch and releases each slot the
+//! moment that batch's measurement returns — and a tenant that just
+//! measured re-queues behind every waiting competitor, so concurrent
+//! (framework, task) jobs interleave batch-by-batch instead of one
+//! framework monopolizing the shards. The slot count tracks
 //! [`Engine::concurrent_batch_capacity`](super::Engine::concurrent_batch_capacity)
 //! — for a remote fleet, the number of alive `serve-measure` shards — so
 //! shard death shrinks admission and revival grows it again.

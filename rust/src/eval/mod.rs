@@ -62,8 +62,10 @@ pub use backend::{
     VtaSimBackend,
 };
 pub use cache::{CacheStats, MeasureCache, PointKey};
-pub use engine::{Engine, EngineConfig, EngineStats, PairedBatch, TracedBatch};
-pub use journal::{merge_journals, Journal, JournalEntry, MergeStats};
+pub use engine::{Engine, EngineConfig, EngineStats, PairedBatch, PendingBatch, TracedBatch};
+pub use journal::{
+    compact_journal, merge_journals, CompactStats, Journal, JournalEntry, MergeStats,
+};
 pub use ledger::{Account, BudgetLedger, DispatchStats, Dispatcher, LedgerStats, TenantStats};
 pub use proto::{Fingerprint, Origin, PROTO_VERSION};
 pub use remote::{FleetLostError, RemoteBackend};

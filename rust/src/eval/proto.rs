@@ -306,7 +306,12 @@ pub enum Response {
     /// answered it from shared state — its cache, in-batch dedup, or a
     /// coalesced concurrent batch (`false`). Budget ledgers on the client
     /// side use this to tell fleet-fresh from fleet-cached work.
-    Results { results: Vec<MeasureResult>, fresh: Vec<bool> },
+    /// `active_batches` piggybacks the shard's queue depth (batches still
+    /// being measured for *other* requests as this reply was built), so
+    /// weighted placement gets its load signal for free instead of paying
+    /// one extra `stats` round trip per batch. Additive field: `None`
+    /// from an older peer, and clients fall back to polling then.
+    Results { results: Vec<MeasureResult>, fresh: Vec<bool>, active_batches: Option<usize> },
     /// Engine counters as a free-form object.
     Stats(Json),
     /// The request could not be served (malformed, unknown op, skew).
@@ -323,11 +328,17 @@ impl Response {
                 ("fingerprint", fingerprint.to_json()),
                 ("preloaded", Json::num(*preloaded as f64)),
             ]),
-            Response::Results { results, fresh } => Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("results", Json::Arr(results.iter().map(result_to_json).collect())),
-                ("fresh", Json::Arr(fresh.iter().map(|&f| Json::Bool(f)).collect())),
-            ]),
+            Response::Results { results, fresh, active_batches } => {
+                let mut fields = vec![
+                    ("ok", Json::Bool(true)),
+                    ("results", Json::Arr(results.iter().map(result_to_json).collect())),
+                    ("fresh", Json::Arr(fresh.iter().map(|&f| Json::Bool(f)).collect())),
+                ];
+                if let Some(depth) = active_batches {
+                    fields.push(("active_batches", Json::num(*depth as f64)));
+                }
+                Json::obj(fields)
+            }
             Response::Stats(stats) => {
                 Json::obj(vec![("ok", Json::Bool(true)), ("stats", stats.clone())])
             }
@@ -356,7 +367,10 @@ impl Response {
                 .map(|a| a.iter().map(|b| b.as_bool().unwrap_or(true)).collect())
                 .unwrap_or_default();
             fresh.resize(rs.len(), true);
-            return Some(Response::Results { results: rs, fresh });
+            // Additive field: an older peer omits the piggybacked queue
+            // depth and the client keeps polling `stats` instead.
+            let active_batches = v.get_usize("active_batches");
+            return Some(Response::Results { results: rs, fresh, active_batches });
         }
         if let Some(stats) = v.get("stats") {
             return Some(Response::Stats(stats.clone()));
@@ -484,7 +498,8 @@ mod tests {
                 fingerprint: Fingerprint::current(),
                 preloaded: 123,
             },
-            Response::Results { results: vec![r, r], fresh: vec![true, false] },
+            Response::Results { results: vec![r, r], fresh: vec![true, false], active_batches: Some(2) },
+            Response::Results { results: vec![r], fresh: vec![true], active_batches: None },
             Response::Stats(Json::obj(vec![("batches", Json::num(3.0))])),
             Response::Error("boom".into()),
         ] {
@@ -518,15 +533,20 @@ mod tests {
         // charged conservatively (everything fresh).
         let s = space();
         let r = crate::codegen::measure_point(&s, &s.default_point());
-        let mut json =
-            Response::Results { results: vec![r, r], fresh: vec![false, false] }.to_json();
+        let mut json = Response::Results {
+            results: vec![r, r],
+            fresh: vec![false, false],
+            active_batches: Some(1),
+        }
+        .to_json();
         if let Json::Obj(fields) = &mut json {
-            fields.retain(|(k, _)| k != "fresh");
+            fields.retain(|(k, _)| k != "fresh" && k != "active_batches");
         }
         match Response::from_json(&json).unwrap() {
-            Response::Results { results, fresh } => {
+            Response::Results { results, fresh, active_batches } => {
                 assert_eq!(results.len(), 2);
                 assert_eq!(fresh, vec![true, true]);
+                assert_eq!(active_batches, None, "older peers piggyback no queue depth");
             }
             other => panic!("expected results, got {other:?}"),
         }

@@ -19,11 +19,12 @@
 //! - [`Placement::Weighted`]: chunks proportional to estimated shard
 //!   throughput. The estimate is an EWMA of each shard's observed
 //!   per-point service time, discounted by the queue depth
-//!   (`active_batches`) the shard's `stats` op reports at the start of the
-//!   batch — so a 10×-slower or heavily-loaded shard receives
-//!   proportionally fewer points. Measured *numbers* are identical under
-//!   both policies (shards embed the same deterministic simulator);
-//!   placement only moves wall-clock.
+//!   (`active_batches`) the shard piggybacks on every measure response —
+//!   a `stats` poll is only paid for shards that have not reported one
+//!   yet (first contact, revival, or an older peer) — so a 10×-slower or
+//!   heavily-loaded shard receives proportionally fewer points. Measured
+//!   *numbers* are identical under both policies (shards embed the same
+//!   deterministic simulator); placement only moves wall-clock.
 //!
 //! A shard that fails mid-batch — connection refused, reset, short reply —
 //! is marked dead and its chunk is re-dispatched to the survivors on the
@@ -99,9 +100,16 @@ struct Shard {
     batches: AtomicUsize,
     /// Points this shard served (placement counter).
     points: AtomicUsize,
-    /// Queue depth (`active_batches`) last reported by the shard's
-    /// `stats` op — weighted placement's load signal.
+    /// Queue depth (`active_batches`) the shard last reported — weighted
+    /// placement's load signal. Normally piggybacked on every measure
+    /// response; polled from the `stats` op only while no served chunk has
+    /// reported one yet.
     queue_depth: AtomicUsize,
+    /// Whether any measure response from this shard has piggybacked a
+    /// queue depth. Until it has (a brand-new or just-revived shard, or an
+    /// older peer that omits the additive field), weighted placement falls
+    /// back to polling the shard's `stats` op before the batch.
+    depth_piggybacked: AtomicBool,
     /// Preloaded cache entries the shard reported at handshake (journal
     /// seeding + warm start): inherited fleet coverage.
     preloaded: AtomicUsize,
@@ -116,6 +124,7 @@ impl Shard {
             batches: AtomicUsize::new(0),
             points: AtomicUsize::new(0),
             queue_depth: AtomicUsize::new(0),
+            depth_piggybacked: AtomicBool::new(false),
             preloaded: AtomicUsize::new(0),
         }
     }
@@ -362,6 +371,7 @@ impl RemoteBackend {
                     // same address: forget the dead one's service profile.
                     s.ewma_bits.store(0, Ordering::Relaxed);
                     s.queue_depth.store(0, Ordering::Relaxed);
+                    s.depth_piggybacked.store(false, Ordering::Relaxed);
                     s.alive.store(true, Ordering::Relaxed);
                 }
             }
@@ -415,11 +425,19 @@ impl RemoteBackend {
         // that can never serve, starving points that the healthy rest of
         // the fleet could have absorbed.
         let err = match call(addr, &Request::Measure { task, points: values }, MEASURE_TIMEOUT) {
-            Ok(Response::Results { results, fresh }) if results.len() == expect => {
+            Ok(Response::Results { results, fresh, active_batches }) if results.len() == expect => {
                 let s = &self.shards[shard];
                 s.observe_service(started.elapsed().as_secs_f64() / expect.max(1) as f64);
                 s.batches.fetch_add(1, Ordering::Relaxed);
                 s.points.fetch_add(expect, Ordering::Relaxed);
+                // The queue depth rides the reply (shards report it with
+                // every measure response), sparing weighted placement its
+                // per-batch `stats` round trip. Older peers omit the
+                // field; those shards keep being polled instead.
+                if let Some(depth) = active_batches {
+                    s.queue_depth.store(depth, Ordering::Relaxed);
+                    s.depth_piggybacked.store(true, Ordering::Relaxed);
+                }
                 return Ok((results, fresh));
             }
             Ok(Response::Results { results, .. }) => {
@@ -501,7 +519,18 @@ impl RemoteBackend {
             Placement::Uniform => uniform_counts(pending, alive.len()),
             Placement::Weighted => {
                 if first_round {
-                    self.poll_queue_depths(alive);
+                    // The load signal normally piggybacks on measure
+                    // responses; an explicit `stats` poll is only worth a
+                    // round trip for shards that have not reported one yet
+                    // (first contact, a revival, or an older peer).
+                    let unpiggybacked: Vec<usize> = alive
+                        .iter()
+                        .copied()
+                        .filter(|&i| !self.shards[i].depth_piggybacked.load(Ordering::Relaxed))
+                        .collect();
+                    if !unpiggybacked.is_empty() {
+                        self.poll_queue_depths(&unpiggybacked);
+                    }
                 }
                 let mut counts = apportion(pending, &self.shard_weights(alive));
                 // Probe floor: an alive shard that receives zero points

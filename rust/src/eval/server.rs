@@ -213,7 +213,11 @@ fn handle(engine: &Engine, clients: &AtomicUsize, req: Request, opts: ServeOptio
             // fleet-wide "measure once, charge everyone" accounting honest.
             let traced = engine.measure_batch_traced(&space, &decoded);
             let fresh = traced.origins.iter().map(|o| o.is_fresh()).collect();
-            Response::Results { results: traced.results, fresh }
+            // Piggyback the queue depth (batches still measuring for other
+            // clients — this request's own batch has already drained from
+            // the gauge) so weighted placement needs no extra `stats` RTT.
+            let active_batches = Some(engine.stats().active_batches);
+            Response::Results { results: traced.results, fresh, active_batches }
         }
     }
 }

@@ -7,6 +7,7 @@
 //! arco fig4          --model resnet18            # CS ablation trace
 //! arco serve-measure --addr 127.0.0.1:4917       # measurement fleet shard
 //! arco journal merge out.jsonl a.jsonl b.jsonl   # union shard journals
+//! arco journal compact fleet.jsonl               # GC a long-lived journal
 //! arco report-models                             # Table 3
 //! arco info                                      # backend / artifact status
 //! ```
@@ -17,7 +18,9 @@
 //! thread pool, `--journal results/journal.jsonl` persists measurements
 //! for reuse across runs, `--no-cache` disables in-memory memoization,
 //! `--cache-cap N` bounds the cache to N entries (LRU), `--placement
-//! uniform|weighted` picks how a fleet splits batches across shards.
+//! uniform|weighted` picks how a fleet splits batches across shards, and
+//! `--pipeline-depth N` overlaps strategy compute with in-flight
+//! measurement (1 = serial paper-faithful default).
 
 use arco::config::RunConfig;
 use arco::eval::{self, BackendKind, BackendSpec, Placement};
@@ -50,7 +53,7 @@ fn usage() -> String {
      compare        compare frameworks across models (Figs 5-7, Table 6)\n  \
      fig4           ARCO with/without Confidence Sampling trace (Fig 4)\n  \
      serve-measure  expose a measurement backend to remote tuners (fleet shard)\n  \
-     journal        measurement-journal tooling (merge)\n  \
+     journal        measurement-journal tooling (merge, compact)\n  \
      report-models  print the model zoo (Table 3)\n  \
      info           backend / artifact status\n\nrun `arco <command> --help` for options\n"
         .into()
@@ -104,6 +107,13 @@ fn common_cli(name: &str, about: &str) -> Cli {
              (throughput-proportional chunks for heterogeneous fleets)",
             None,
         )
+        .opt(
+            "pipeline-depth",
+            None,
+            "measurement batches in flight per tuning job: 1 (serial, paper-faithful \
+             default) | N>=2 (pipelined speed mode: plan batch k+1 while batch k measures)",
+            None,
+        )
         .flag("no-cache", None, "disable the measurement cache (every point re-simulated)")
         .flag("quick", Some('q'), "CI-scale RL budgets (same pipeline)")
         .flag("verbose", Some('v'), "debug logging")
@@ -123,6 +133,9 @@ fn load_config(a: &arco::util::cli::Args) -> anyhow::Result<(RunConfig, bool)> {
     }
     if let Some(w) = a.get_usize("workers").map_err(anyhow::Error::msg)? {
         cfg.budget.workers = w;
+    }
+    if let Some(d) = a.get_usize("pipeline-depth").map_err(anyhow::Error::msg)? {
+        cfg.budget.pipeline_depth = d.max(1);
     }
     if let Some(s) = a.get_u64("seed").map_err(anyhow::Error::msg)? {
         cfg.seed = s;
@@ -432,8 +445,45 @@ fn cmd_serve_measure(args: &[String]) -> anyhow::Result<()> {
 fn cmd_journal(args: &[String]) -> anyhow::Result<()> {
     let sub_usage = "arco journal <subcommand>\n\nsubcommands:\n  \
          merge <out.jsonl> <in.jsonl...>  union fingerprint-identical journals \
-         (dedup on backend+task+knobs)\n";
+         (dedup on backend+task+knobs)\n  \
+         compact <file.jsonl>             rewrite a journal in place, dropping duplicate \
+         records and records from foreign/stale fingerprints\n";
     match args.first().map(String::as_str) {
+        Some("compact") => {
+            let cli = Cli::new(
+                "arco journal compact",
+                "rewrite a journal in place, dropping duplicates and stale-fingerprint records",
+            )
+            .flag("verbose", Some('v'), "debug logging")
+            .flag("help", Some('h'), "show help");
+            let a = cli.parse(&args[1..]).map_err(anyhow::Error::msg)?;
+            if a.has_flag("help") {
+                print!("{}", cli.usage());
+                println!("\nusage: arco journal compact <file.jsonl>");
+                return Ok(());
+            }
+            if a.has_flag("verbose") {
+                set_level(Level::Debug);
+            }
+            let paths = a.positional();
+            let [path] = paths else {
+                anyhow::bail!("journal compact takes exactly one file: arco journal compact <file.jsonl>");
+            };
+            let path = PathBuf::from(path);
+            let stats = eval::compact_journal(&path)?;
+            println!(
+                "journal compact: {}: read {} record(s), kept {}, dropped {} duplicate(s), \
+                 {} malformed, {} stale-fingerprint; {}",
+                path.display(),
+                stats.read,
+                stats.kept,
+                stats.dropped_duplicates,
+                stats.dropped_malformed,
+                stats.dropped_stale,
+                if stats.rewritten { "rewritten" } else { "already compact, untouched" }
+            );
+            Ok(())
+        }
         Some("merge") => {
             let cli = Cli::new(
                 "arco journal merge",

@@ -228,6 +228,16 @@ impl Strategy for Arco {
         self.model.fit(&self.xs, &self.ys);
     }
 
+    /// Safe at any pipeline depth: `seen` is updated at plan time (MARL
+    /// exploration, CS selection and the random fallback all dedup
+    /// against it before proposing), so in-flight points are never
+    /// re-planned; observing a batch late only delays the GBT refit and
+    /// the elite-seed refresh by one round — the same
+    /// sample-efficiency-for-wall-clock trade Krishnan et al. exploit.
+    fn max_pipeline_depth(&self) -> usize {
+        usize::MAX
+    }
+
     fn diag(&self) -> String {
         format!(
             "backend={} gbt_trees={} data={} elite={} cs_synth={} best_fit={:.3e}",

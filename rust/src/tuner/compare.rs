@@ -14,6 +14,14 @@
 //!   [`BudgetLedger`] enforces the paper's equal-budget protocol —
 //!   "measure once, charge everyone". Deterministic backends make the
 //!   concurrent outcome identical to the serial one for the same seed.
+//!
+//! Orthogonally, `TuneBudget::pipeline_depth >= 2` pipelines each job's
+//! *own* batches (plan batch k+1 while batch k measures — see
+//! [`super::task_tuner`]); dispatcher admission permits are then held per
+//! in-flight batch, not per tenant turn, so a pipelining tenant queues
+//! one FIFO ticket per submitted batch and releases each slot the moment
+//! that batch's measurement returns. Depth 1 (the default) keeps every
+//! driver shape bit-identical to the pre-pipelining code.
 
 use super::strategy::Strategy;
 use super::task_tuner::{
@@ -531,12 +539,13 @@ pub fn compare_frameworks_opts(
         let d = shared.dispatcher.stats();
         crate::log_info!(
             "compare",
-            "{}: dispatcher slots={} dispatched={} waited={} peak_queue={}",
+            "{}: dispatcher slots={} dispatched={} waited={} peak_queue={} pipeline_depth={}",
             model.name,
             d.slots,
             d.dispatched,
             d.waited,
-            d.peak_queue
+            d.peak_queue,
+            budget.pipeline_depth.max(1)
         );
     }
     if let Some(stats) = shared.ledger_stats() {
@@ -684,6 +693,55 @@ mod tests {
                 .map(|t| t.account.charged)
                 .sum();
             assert_eq!(charged, o.measurements);
+        }
+    }
+
+    #[test]
+    fn pipelined_shared_budget_driver_matches_serial_and_conserves_ledger() {
+        // Pipelined speed mode under the multi-tenant driver: random
+        // search ignores observations, so its plans are identical at any
+        // depth — the depth-2 concurrent run must reproduce the serial
+        // depth-1 driver's numbers while the ledger stays conserved.
+        let model = model_by_name("alexnet").unwrap();
+        let serial_budget =
+            TuneBudget { total_measurements: 12, batch: 4, workers: 2, ..Default::default() };
+        let piped_budget = TuneBudget { pipeline_depth: 2, ..serial_budget };
+
+        let serial_engine = Engine::with_backend(Box::new(AnalyticalBackend), 2, true);
+        let serial = compare_frameworks_with(
+            &serial_engine,
+            &[Framework::Random],
+            &model,
+            serial_budget,
+            true,
+            11,
+        )
+        .unwrap();
+
+        let piped_engine = Engine::with_backend(Box::new(AnalyticalBackend), 2, true);
+        let piped = compare_frameworks_opts(
+            &piped_engine,
+            &[Framework::Random],
+            &model,
+            piped_budget,
+            true,
+            11,
+            DriverOptions { concurrent: true, shared_budget: true },
+        )
+        .unwrap();
+
+        for (s, p) in serial.outcomes.iter().zip(&piped.outcomes) {
+            assert_eq!(s.inference_secs, p.inference_secs, "pipelining changed the numbers");
+            assert_eq!(s.measurements, p.measurements);
+            for (st, pt) in s.tasks.iter().zip(&p.tasks) {
+                assert_eq!(st.result.best_point, pt.result.best_point, "task {}", st.task_id);
+                assert_eq!(st.result.measurements, pt.result.measurements);
+            }
+        }
+        let ledger = piped.ledger.as_ref().expect("shared-budget run must carry ledger stats");
+        for t in &ledger.tenants {
+            assert!(t.account.charged <= 12, "{}/{} over budget", t.framework, t.task);
+            assert_eq!(t.account.settled(), t.account.charged, "in-flight charge never settled");
         }
     }
 

@@ -11,16 +11,58 @@ use crate::space::PointConfig;
 /// This is the same division AutoTVM/CHAMELEON/ARCO share in the paper
 /// (§2.3's argmax over f[τ(Θ)] with different explorers/samplers plugged
 /// in).
+///
+/// # Pipelined lifecycle
+///
+/// The classic (paper-faithful) loop is strictly serial: `plan` → measure
+/// → `observe`, one batch at a time, so every plan sees the results of
+/// every earlier plan. With `--pipeline-depth N` (N ≥ 2) the orchestrator
+/// instead *overlaps* strategy compute with in-flight hardware
+/// measurement: while batch *k* is still being measured it already calls
+/// `plan` for batch *k+1* from the strategy's **current** posterior, and
+/// delivers `observe` calls as batches drain — always in submission
+/// order, but up to [`max_pipeline_depth`](Self::max_pipeline_depth)
+/// batches late. Two contract consequences:
+///
+/// - `plan` may be called while earlier plans have no results yet. A
+///   strategy must track its own outstanding proposals so it never
+///   re-proposes an in-flight point (every in-tree strategy marks points
+///   in its `seen` set at plan time, which satisfies this for free).
+/// - `observe` may deliver results for points planned several batches
+///   ago. Model refits simply see the data a little late — the staleness
+///   the speed mode trades for wall-clock.
+///
+/// The orchestrator clamps the configured depth to
+/// [`max_pipeline_depth`](Self::max_pipeline_depth), so a strategy that
+/// cannot tolerate stale observations keeps its serial semantics even
+/// when the run asks for the speed mode.
 pub trait Strategy {
     /// Framework name for reports.
     fn name(&self) -> &'static str;
 
-    /// Propose up to `batch` *distinct, unmeasured* configurations.
-    /// Returning fewer (or none) ends the tuning run early.
+    /// Propose up to `batch` *distinct, unmeasured, not-in-flight*
+    /// configurations. Returning fewer (or none) ends the tuning run
+    /// early (in a pipelined run the orchestrator still drains and
+    /// delivers every in-flight batch before stopping).
     fn plan(&mut self, batch: usize) -> Vec<PointConfig>;
 
-    /// Digest a batch of hardware measurements.
+    /// Digest a batch of hardware measurements. Delivered in submission
+    /// order; under a pipelined orchestrator the points may have been
+    /// planned up to `max_pipeline_depth - 1` batches before the most
+    /// recent `plan` call.
     fn observe(&mut self, results: &[(PointConfig, MeasureResult)]);
+
+    /// The deepest measurement pipeline this strategy tolerates: how many
+    /// batches may be in flight (planned but unobserved) at once. `1`
+    /// means strictly serial — every `plan` sees every earlier result —
+    /// and is the conservative default for implementations that have not
+    /// audited their plan/observe coupling. Strategies that track
+    /// in-flight proposals themselves (all in-tree ones) return
+    /// `usize::MAX` and let the run's `--pipeline-depth` bound the
+    /// overlap.
+    fn max_pipeline_depth(&self) -> usize {
+        1
+    }
 
     /// Optional: strategy-specific diagnostics line for logs.
     fn diag(&self) -> String {

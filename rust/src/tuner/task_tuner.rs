@@ -1,9 +1,27 @@
 //! Per-task tuning loop: budgeted plan → batched engine measure → observe.
+//!
+//! Two execution shapes share one implementation:
+//!
+//! - **Serial** (`pipeline_depth == 1`, the paper-faithful default): one
+//!   batch at a time — every plan sees every earlier result, reproducing
+//!   the classic lockstep loop bit for bit.
+//! - **Pipelined** (`pipeline_depth >= 2`, the speed mode): batch *k* is
+//!   submitted to the engine asynchronously
+//!   ([`eval::Engine::submit_batch`]) and, while it is in flight, the
+//!   strategy already plans batch *k+1* from its current posterior.
+//!   Completions drain strictly in submission order, so trace ordinals
+//!   stay in order; the ledger is charged *before* each submission, so an
+//!   in-flight pipeline can never overshoot a budget; and both a strategy
+//!   early-stop and a lost measurement fleet drain every in-flight batch
+//!   before the loop returns. On a remote fleet this hides the search
+//!   compute behind measurement RTT — wall-clock approaches
+//!   `max(search, measure)` instead of their sum.
 
 use super::strategy::Strategy;
 use crate::eval::{self, BudgetLedger, Dispatcher, MeasureResult};
 use crate::space::{ConfigSpace, PointConfig};
 use crate::util::timer::{PhaseTimer, Stopwatch};
+use std::collections::VecDeque;
 
 /// Measurement budget (Table 4/5: Σb = 1000, b = 64).
 #[derive(Debug, Clone, Copy)]
@@ -33,6 +51,15 @@ pub struct TuneBudget {
     /// ...and a timeout charge for invalid configurations (a build/run
     /// failure still wastes wall-clock on real hardware).
     pub invalid_timeout_secs: f64,
+    /// Measurement batches the loop may have in flight at once
+    /// (`--pipeline-depth`). `1` (default) is the paper-faithful serial
+    /// loop: plan, measure, observe, repeat — reproduced bit-identically.
+    /// `>= 2` is the speed mode: the strategy plans batch *k+1* while
+    /// batch *k* is still on the hardware, trading posterior freshness
+    /// (observations arrive up to `depth - 1` batches late) for
+    /// wall-clock. Clamped to [`Strategy::max_pipeline_depth`]; values
+    /// below 1 behave as 1.
+    pub pipeline_depth: usize,
 }
 
 impl Default for TuneBudget {
@@ -46,6 +73,7 @@ impl Default for TuneBudget {
             measure_overhead_secs: 0.05,
             measure_repeats: 10,
             invalid_timeout_secs: 1.0,
+            pipeline_depth: 1,
         }
     }
 }
@@ -57,7 +85,12 @@ pub struct TraceEntry {
     pub ordinal: usize,
     /// Iteration the measurement belonged to.
     pub iteration: usize,
-    /// Wall-clock seconds since tuning started when this was measured.
+    /// Seconds of *this job's* clock when this was measured: wall-clock
+    /// since tuning started minus time spent queued behind competing
+    /// tenants at the dispatcher — the same queue-excluded clock as
+    /// [`TaskTuneResult::wall_secs`], so concurrent-driver convergence
+    /// curves (Fig. 6) line up with the serial driver's instead of
+    /// shifting right by arrival-order-dependent scheduling wait.
     pub at_secs: f64,
     /// Achieved GFLOPS (0 for invalid configs).
     pub gflops: f64,
@@ -170,16 +203,39 @@ pub fn tune_task_with(
     tune_task_tenant(engine, space, strategy, budget, None)
 }
 
+/// Modeled testbed seconds one measurement result costs (overhead +
+/// repeats × runtime; a flat timeout for invalid configurations). A pure
+/// function of the deterministic result, so every tenant planning the
+/// same point is debited identically.
+fn modeled_cost(budget: &TuneBudget, r: &MeasureResult) -> f64 {
+    if r.valid {
+        budget.measure_overhead_secs + budget.measure_repeats as f64 * r.seconds
+    } else {
+        budget.invalid_timeout_secs
+    }
+}
+
 /// [`tune_task_with`] as one tenant of a shared multi-tenant run: batches
 /// queue on the tenant's dispatcher (so competing jobs interleave instead
 /// of monopolizing the fleet) and, when a ledger is present, every batch
-/// is charged against the (framework, task) allowance before measuring —
-/// the plan is truncated to what the ledger admits.
+/// is charged against the (framework, task) allowance *before it is
+/// submitted* — the plan is truncated to what the ledger admits, so even
+/// a deep pipeline of in-flight batches can never overshoot.
+///
+/// With `budget.pipeline_depth >= 2` (clamped to the strategy's
+/// [`Strategy::max_pipeline_depth`]) the loop keeps up to that many
+/// batches in flight at once, planning the next batch while earlier ones
+/// measure; dispatcher admission permits are held per in-flight batch
+/// (released by the measurement worker the moment the batch completes),
+/// not per tenant turn. Depth 1 reproduces the classic serial loop
+/// bit-identically.
 ///
 /// `Err` is a whole-fleet outage surfacing from the engine
-/// ([`crate::eval::FleetLostError`]): points already charged for the
-/// failed batch stay charged-but-unsettled on the ledger (honest
-/// accounting — nobody got numbers for them), and the run fails cleanly.
+/// ([`crate::eval::FleetLostError`]): every in-flight batch is drained
+/// first — batches that completed before the loss are still settled on
+/// the ledger — and points charged for batches that never returned stay
+/// charged-but-unsettled (honest accounting — nobody got numbers for
+/// them). The run then fails cleanly.
 pub fn tune_task_tenant(
     engine: &eval::Engine,
     space: &ConfigSpace,
@@ -187,6 +243,15 @@ pub fn tune_task_tenant(
     budget: TuneBudget,
     tenant: Option<&TenantContext>,
 ) -> anyhow::Result<TaskTuneResult> {
+    let requested = budget.pipeline_depth.max(1);
+    let depth = requested.min(strategy.max_pipeline_depth().max(1));
+    if depth < requested {
+        crate::log_info!(
+            "tuner",
+            "{}: pipeline depth {requested} clamped to {depth} (strategy maximum)",
+            strategy.name()
+        );
+    }
     let sw = Stopwatch::start();
     let mut timer = PhaseTimer::new();
     let mut best = MeasureResult {
@@ -199,95 +264,193 @@ pub fn tune_task_tenant(
     };
     let mut best_point: Option<PointConfig> = None;
     let mut trace = Vec::new();
-    let mut measured = 0usize;
+    let mut measured = 0usize; // points observed (drained)
+    let mut submitted = 0usize; // points charged and in flight or drained
     let mut fresh = 0usize;
     let mut cache_served = 0usize;
     let mut invalid = 0usize;
-    let mut iteration = 0usize;
+    let mut iteration = 0usize; // planning iterations started
     let mut modeled_hw_secs = 0.0f64;
+    let mut stopped = false; // the strategy (or its ledger) ended the run
+    let mut failure: Option<anyhow::Error> = None;
 
-    while measured < budget.total_measurements && iteration < budget.max_iterations {
-        let want = budget.batch.min(budget.total_measurements - measured);
-        let mut plan = timer.time("plan", || strategy.plan(want));
-        if plan.len() > want {
-            // Strategies are asked for *up to* `want` points; one that
-            // over-plans must not breach `total_measurements`.
-            crate::log_debug!(
-                "tuner",
-                "{} planned {} configs for a budget slot of {want}; truncating",
-                strategy.name(),
-                plan.len()
-            );
-            plan.truncate(want);
-        }
-        if let Some(t) = tenant {
-            if let Some(ledger) = t.ledger {
-                let admitted = ledger.charge(t.framework, t.task_id, plan.len());
-                plan.truncate(admitted);
+    /// One admitted batch: still measuring in the background, or already
+    /// measured inline (the depth-1 serial path, which pays no worker
+    /// spawn).
+    enum Inflight<'scope> {
+        Pending(eval::PendingBatch<'scope>),
+        Ready(anyhow::Result<eval::PairedBatch>),
+    }
+
+    std::thread::scope(|scope| {
+        // In-flight batches in submission order (front = oldest), each
+        // tagged with the planning iteration that produced it.
+        let mut inflight: VecDeque<(Inflight<'_>, usize)> = VecDeque::new();
+        loop {
+            // Refill: plan and submit until the pipeline is full, the
+            // budget is committed, or the strategy stops. At depth 1 this
+            // admits exactly one batch per turn — the serial loop.
+            while !stopped
+                && failure.is_none()
+                && inflight.len() < depth
+                && submitted < budget.total_measurements
+                && iteration < budget.max_iterations
+            {
+                let want = budget.batch.min(budget.total_measurements - submitted);
+                let mut plan = timer.time("plan", || strategy.plan(want));
+                if plan.len() > want {
+                    // Strategies are asked for *up to* `want` points; one
+                    // that over-plans must not breach `total_measurements`.
+                    crate::log_debug!(
+                        "tuner",
+                        "{} planned {} configs for a budget slot of {want}; truncating",
+                        strategy.name(),
+                        plan.len()
+                    );
+                    plan.truncate(want);
+                }
+                if let Some(t) = tenant {
+                    if let Some(ledger) = t.ledger {
+                        // Charge-before-submit: the allowance is debited
+                        // while the batch is still in hand, so in-flight
+                        // work is always covered by the ledger.
+                        let admitted = ledger.charge(t.framework, t.task_id, plan.len());
+                        plan.truncate(admitted);
+                    }
+                }
+                if plan.is_empty() {
+                    crate::log_debug!(
+                        "tuner",
+                        "{} stopped early at {submitted}",
+                        strategy.name()
+                    );
+                    stopped = true;
+                    break;
+                }
+                // Queueing behind competing tenants is scheduling, not
+                // search compute: time it as its own phase and keep it out
+                // of this job's wall clock, so the concurrent driver
+                // reports the same search/compile seconds the serial
+                // driver would. But with our OWN batches in flight
+                // (depth >= 2), blocking here is a pipeline stall waiting
+                // on measurement capacity — real hardware wait the serial
+                // loop would have booked under "measure" — so it must not
+                // be subtracted from this job's clock.
+                let checkout_phase = if inflight.is_empty() { "queue" } else { "measure" };
+                let permit = timer.time(checkout_phase, || {
+                    tenant.map(|t| {
+                        // Fleet capacity moves (shard death/revival):
+                        // re-read it so admission tracks how many batches
+                        // can really run at once.
+                        t.dispatcher.set_slots(engine.concurrent_batch_capacity());
+                        t.dispatcher.checkout()
+                    })
+                });
+                submitted += plan.len();
+                let batch_entry = if depth == 1 {
+                    // Serial mode measures inline on this thread — no
+                    // worker spawn, no space clone: byte-for-byte the
+                    // classic loop's hot path. The permit is released the
+                    // moment the engine returns, as on the async path.
+                    Inflight::Ready(timer.time("measure", || {
+                        let out = engine.try_measure_paired(space, plan);
+                        drop(permit);
+                        out
+                    }))
+                } else {
+                    // The permit travels with the batch and is released by
+                    // the measurement worker the moment the batch
+                    // completes — held per in-flight batch, not per
+                    // tenant turn.
+                    Inflight::Pending(engine.submit_batch(scope, space, plan, permit))
+                };
+                inflight.push_back((batch_entry, iteration));
+                iteration += 1;
             }
-        }
-        if plan.is_empty() {
-            crate::log_debug!("tuner", "{} stopped early at {measured}", strategy.name());
-            break;
-        }
-        // Queueing behind competing tenants is scheduling, not search
-        // compute: time it as its own phase and keep it out of this job's
-        // wall clock, so the concurrent driver reports the same
-        // search/compile seconds the serial driver would.
-        let permit = timer.time("queue", || {
-            tenant.map(|t| {
-                // Fleet capacity moves (shard death/revival): re-read it so
-                // admission tracks how many batches can really run at once.
-                t.dispatcher.set_slots(engine.concurrent_batch_capacity());
-                t.dispatcher.checkout()
-            })
-        });
-        let batch = timer.time("measure", || engine.try_measure_paired(space, plan));
-        drop(permit);
-        let batch = batch?;
-        let modeled_before = modeled_hw_secs;
-        for ((p, r), origin) in batch.pairs.iter().zip(&batch.origins) {
-            measured += 1;
-            if origin.is_fresh() {
-                fresh += 1;
-            } else {
-                cache_served += 1;
+
+            // Drain the oldest in-flight batch. Completion is consumed in
+            // submission order, so trace ordinals stay in order whatever
+            // the engine's internal timing.
+            let Some((entry, batch_iteration)) = inflight.pop_front() else {
+                break;
+            };
+            let waited = match entry {
+                Inflight::Ready(out) => out,
+                Inflight::Pending(pending) => timer.time("measure", || pending.wait()),
+            };
+            let batch = match waited {
+                Ok(batch) => batch,
+                Err(e) => {
+                    // First failure wins; keep draining so batches that
+                    // did complete are settled honestly on the ledger.
+                    if failure.is_none() {
+                        failure = Some(e);
+                    }
+                    continue;
+                }
+            };
+            if failure.is_some() {
+                // The run is already dead: settle the ledger for this
+                // completed batch (its points were charged and measured),
+                // but the discarded result is neither traced nor observed.
+                if let Some(t) = tenant {
+                    if let Some(ledger) = t.ledger {
+                        let cost: f64 =
+                            batch.pairs.iter().map(|(_, r)| modeled_cost(&budget, r)).sum();
+                        ledger.settle(t.framework, t.task_id, &batch.origins, cost);
+                    }
+                }
+                continue;
             }
-            if !r.valid {
-                invalid += 1;
-                modeled_hw_secs += budget.invalid_timeout_secs;
-            } else {
-                modeled_hw_secs +=
-                    budget.measure_overhead_secs + budget.measure_repeats as f64 * r.seconds;
+            let modeled_before = modeled_hw_secs;
+            // Stamp trace entries on the queue-excluded clock (the same
+            // clock as `wall_secs`), not the raw stopwatch: dispatcher
+            // queue wait is scheduling, and leaving it in shifted
+            // concurrent-driver Fig. 6 curves right of the serial ones.
+            let at_secs = (sw.elapsed_secs() - timer.total_secs("queue")).max(0.0);
+            for ((p, r), origin) in batch.pairs.iter().zip(&batch.origins) {
+                measured += 1;
+                if origin.is_fresh() {
+                    fresh += 1;
+                } else {
+                    cache_served += 1;
+                }
+                if !r.valid {
+                    invalid += 1;
+                }
+                modeled_hw_secs += modeled_cost(&budget, r);
+                if r.valid && r.area_mm2 <= budget.area_budget_mm2 && r.seconds < best.seconds {
+                    best = *r;
+                    best_point = Some(p.clone());
+                }
+                trace.push(TraceEntry {
+                    ordinal: measured,
+                    iteration: batch_iteration,
+                    at_secs,
+                    gflops: r.gflops,
+                    best_gflops: best.gflops,
+                    valid: r.valid,
+                    modeled_cum_secs: modeled_hw_secs,
+                });
             }
-            if r.valid && r.area_mm2 <= budget.area_budget_mm2 && r.seconds < best.seconds {
-                best = *r;
-                best_point = Some(p.clone());
+            if let Some(t) = tenant {
+                if let Some(ledger) = t.ledger {
+                    // Same debit whoever measured first: the modeled cost
+                    // is a pure function of the (deterministic) results.
+                    ledger.settle(
+                        t.framework,
+                        t.task_id,
+                        &batch.origins,
+                        modeled_hw_secs - modeled_before,
+                    );
+                }
             }
-            trace.push(TraceEntry {
-                ordinal: measured,
-                iteration,
-                at_secs: sw.elapsed_secs(),
-                gflops: r.gflops,
-                best_gflops: best.gflops,
-                valid: r.valid,
-                modeled_cum_secs: modeled_hw_secs,
-            });
+            timer.time("observe", || strategy.observe(&batch.pairs));
         }
-        if let Some(t) = tenant {
-            if let Some(ledger) = t.ledger {
-                // Same debit whoever measured first: the modeled cost is a
-                // pure function of the (deterministic) results.
-                ledger.settle(
-                    t.framework,
-                    t.task_id,
-                    &batch.origins,
-                    modeled_hw_secs - modeled_before,
-                );
-            }
-        }
-        timer.time("observe", || strategy.observe(&batch.pairs));
-        iteration += 1;
+    });
+
+    if let Some(e) = failure {
+        return Err(e);
     }
 
     Ok(TaskTuneResult {

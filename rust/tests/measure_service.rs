@@ -200,6 +200,34 @@ fn protocol_error_paths_answer_instead_of_hanging() {
     server.shutdown();
 }
 
+#[test]
+fn measure_responses_piggyback_the_shard_queue_depth() {
+    // Weighted placement's load signal rides every measure reply as the
+    // additive `active_batches` field, so clients do not pay a `stats`
+    // round trip per batch (ROADMAP: cut one RTT on high-latency links).
+    let server = serve_measure_local(local_engine(BackendKind::Analytical, 1)).unwrap();
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = BufWriter::new(stream);
+
+    let s = space();
+    let key = arco::eval::PointKey::of(&s, &s.default_point());
+    let req = Request::Measure { task: s.task, points: vec![key.values] };
+    write_frame(&mut writer, &req.to_json()).unwrap();
+    match Response::from_json(&read_frame(&mut reader).unwrap().unwrap()).unwrap() {
+        Response::Results { results, fresh, active_batches } => {
+            assert_eq!(results.len(), 1);
+            assert_eq!(fresh, vec![true]);
+            // An idle shard reports an empty queue (this request's own
+            // batch has already drained from the gauge by reply time).
+            assert_eq!(active_batches, Some(0), "shards must piggyback their queue depth");
+        }
+        other => panic!("expected results, got {other:?}"),
+    }
+    server.shutdown();
+}
+
 /// An oracle that counts real measurements (and is slow enough for two
 /// batches to overlap).
 struct CountingBackend {

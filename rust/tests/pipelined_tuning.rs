@@ -1,0 +1,409 @@
+//! Acceptance tests for pipelined asynchronous tuning (`--pipeline-depth`):
+//!
+//! - depth 1 reproduces the classic serial plan → measure → observe loop
+//!   bit-identically (best point, trace, ledger charges),
+//! - depth ≥ 2 never breaches `total_measurements` or a shared ledger's
+//!   allowance (charge-before-submit),
+//! - a strategy early-stop and a mid-pipeline fleet loss both drain every
+//!   in-flight batch cleanly (observed or settled — never leaked), and
+//! - on a throttled two-shard fleet, depth 2 completes a fixed budget in
+//!   measurably less wall-clock than depth 1 with identical measured
+//!   values — the paper's optimization-time lever (§ "42.2% reduction").
+
+use arco::baselines::autotvm::{AutoTvm, AutoTvmParams};
+use arco::baselines::RandomSearch;
+use arco::eval::{
+    serve_measure_local_with, AnalyticalBackend, BackendSpec, BudgetLedger, Dispatcher, Engine,
+    EngineConfig, FleetLostError, MeasureBackend, MeasureResult, PointKey, ServeOptions,
+};
+use arco::space::{ConfigSpace, PointConfig};
+use arco::tuner::{tune_task_tenant, tune_task_with, Strategy, TenantContext, TuneBudget};
+use arco::util::rng::Pcg32;
+use arco::workload::Conv2dTask;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn space() -> ConfigSpace {
+    ConfigSpace::for_task(&Conv2dTask::new(1, 32, 28, 28, 32, 3, 3, 1, 1), true)
+}
+
+fn analytical() -> Engine {
+    Engine::with_backend(Box::new(AnalyticalBackend), 2, true)
+}
+
+/// `n` points with pairwise-distinct cache identities.
+fn distinct_points(s: &ConfigSpace, seed: u64, n: usize) -> Vec<PointConfig> {
+    let mut rng = Pcg32::seeded(seed);
+    let mut seen = std::collections::HashSet::new();
+    let mut out = Vec::new();
+    while out.len() < n {
+        let p = s.random_point(&mut rng);
+        if seen.insert(PointKey::of(s, &p)) {
+            out.push(p);
+        }
+    }
+    out
+}
+
+/// Everything a trace entry carries except the wall-clock stamp (which no
+/// two runs can share bit-for-bit).
+type TraceRow = (usize, usize, f64, f64, bool, f64);
+
+fn trace_rows(result: &arco::tuner::TaskTuneResult) -> Vec<TraceRow> {
+    result
+        .trace
+        .iter()
+        .map(|e| (e.ordinal, e.iteration, e.gflops, e.best_gflops, e.valid, e.modeled_cum_secs))
+        .collect()
+}
+
+/// A from-scratch reimplementation of the pre-pipelining serial loop —
+/// the reference the depth-1 pipeline must reproduce bit-identically.
+fn serial_reference(
+    engine: &Engine,
+    s: &ConfigSpace,
+    strategy: &mut dyn Strategy,
+    budget: TuneBudget,
+) -> (Option<PointConfig>, MeasureResult, usize, Vec<TraceRow>) {
+    let mut best = MeasureResult {
+        seconds: f64::INFINITY,
+        cycles: 0,
+        gflops: 0.0,
+        area_mm2: 0.0,
+        occupancy: 0.0,
+        valid: false,
+    };
+    let mut best_point = None;
+    let mut measured = 0usize;
+    let mut iteration = 0usize;
+    let mut modeled = 0.0f64;
+    let mut rows = Vec::new();
+    while measured < budget.total_measurements && iteration < budget.max_iterations {
+        let want = budget.batch.min(budget.total_measurements - measured);
+        let mut plan = strategy.plan(want);
+        plan.truncate(want);
+        if plan.is_empty() {
+            break;
+        }
+        let batch = engine.try_measure_paired(s, plan).unwrap();
+        for (p, r) in &batch.pairs {
+            measured += 1;
+            modeled += if r.valid {
+                budget.measure_overhead_secs + budget.measure_repeats as f64 * r.seconds
+            } else {
+                budget.invalid_timeout_secs
+            };
+            if r.valid && r.area_mm2 <= budget.area_budget_mm2 && r.seconds < best.seconds {
+                best = *r;
+                best_point = Some(p.clone());
+            }
+            rows.push((measured, iteration, r.gflops, best.gflops, r.valid, modeled));
+        }
+        strategy.observe(&batch.pairs);
+        iteration += 1;
+    }
+    (best_point, best, measured, rows)
+}
+
+#[test]
+fn depth_1_reproduces_the_serial_loop_bit_identically() {
+    let s = space();
+    let budget = TuneBudget { total_measurements: 48, batch: 16, workers: 2, ..Default::default() };
+    assert_eq!(budget.pipeline_depth, 1, "serial must be the default");
+
+    // Reference: the hand-rolled pre-refactor loop, model-based strategy
+    // (AutoTVM replans from every observation, so any ordering or
+    // staleness drift in the pipeline would change its plans).
+    let mut reference_strategy = AutoTvm::new(s.clone(), AutoTvmParams::quick(), 17);
+    let (ref_best_point, ref_best, ref_measured, ref_rows) =
+        serial_reference(&analytical(), &s, &mut reference_strategy, budget);
+
+    let mut strategy = AutoTvm::new(s.clone(), AutoTvmParams::quick(), 17);
+    let out = tune_task_with(&analytical(), &s, &mut strategy, budget).unwrap();
+
+    assert_eq!(out.best_point, ref_best_point, "depth-1 best point diverged from serial");
+    assert_eq!(out.best.seconds, ref_best.seconds);
+    assert_eq!(out.best.cycles, ref_best.cycles);
+    assert_eq!(out.measurements, ref_measured);
+    assert_eq!(trace_rows(&out), ref_rows, "depth-1 trace diverged from serial");
+}
+
+#[test]
+fn depth_1_and_depth_2_are_identical_for_an_observation_free_strategy() {
+    // Random search ignores observations entirely, so pipelining cannot
+    // change its plans: depth 2 must reproduce depth 1 exactly — same
+    // best point, same trace values, same in-order ordinals.
+    let s = space();
+    let serial_budget =
+        TuneBudget { total_measurements: 60, batch: 12, workers: 2, ..Default::default() };
+    let piped_budget = TuneBudget { pipeline_depth: 2, ..serial_budget };
+
+    let mut strat = RandomSearch::new(s.clone(), 23);
+    let serial = tune_task_with(&analytical(), &s, &mut strat, serial_budget).unwrap();
+    let mut strat = RandomSearch::new(s.clone(), 23);
+    let piped = tune_task_with(&analytical(), &s, &mut strat, piped_budget).unwrap();
+
+    assert_eq!(serial.best_point, piped.best_point);
+    assert_eq!(serial.best.seconds, piped.best.seconds);
+    assert_eq!(serial.measurements, piped.measurements);
+    assert_eq!(trace_rows(&serial), trace_rows(&piped));
+    for (i, e) in piped.trace.iter().enumerate() {
+        assert_eq!(e.ordinal, i + 1, "pipelined trace ordinals must stay in order");
+    }
+}
+
+#[test]
+fn deep_pipeline_never_breaches_budget_or_ledger() {
+    let s = space();
+    let engine = analytical();
+    let ledger = BudgetLedger::new(10);
+    let dispatcher = Dispatcher::new(1);
+    let tenant = TenantContext {
+        ledger: Some(&ledger),
+        dispatcher: &dispatcher,
+        framework: "random",
+        task_id: "t0",
+    };
+    let mut strategy = RandomSearch::new(s.clone(), 3);
+    // The local budget is not binding (100 points allowed); the shared
+    // 10-point ledger is — and three batches can be in flight at once, so
+    // only charge-before-submit keeps the pipeline inside the allowance.
+    let budget = TuneBudget {
+        total_measurements: 100,
+        batch: 4,
+        workers: 2,
+        pipeline_depth: 3,
+        ..Default::default()
+    };
+    let out = tune_task_tenant(&engine, &s, &mut strategy, budget, Some(&tenant)).unwrap();
+    assert_eq!(out.measurements, 10, "the shared ledger must cap the pipelined job");
+    assert_eq!(out.trace.len(), 10);
+    let account = ledger.account("random", "t0");
+    assert_eq!(account.charged, 10);
+    assert_eq!(account.settled(), 10, "every in-flight charge must settle");
+    assert_eq!(ledger.remaining("random", "t0"), 0);
+
+    // And the local budget cap holds on its own at depth 2.
+    let engine = analytical();
+    let mut strategy = RandomSearch::new(s.clone(), 5);
+    let budget = TuneBudget {
+        total_measurements: 10,
+        batch: 4,
+        workers: 2,
+        pipeline_depth: 2,
+        ..Default::default()
+    };
+    let out = tune_task_with(&engine, &s, &mut strategy, budget).unwrap();
+    assert_eq!(out.measurements, 10, "total_measurements must bound the pipeline");
+    assert_eq!(out.trace.last().unwrap().ordinal, 10);
+}
+
+/// Plans a fixed script of batches, then stops; counts observations.
+struct ScriptedPlanner {
+    batches: Vec<Vec<PointConfig>>,
+    next: usize,
+    observed: usize,
+}
+
+impl Strategy for ScriptedPlanner {
+    fn name(&self) -> &'static str {
+        "scripted"
+    }
+    fn plan(&mut self, _batch: usize) -> Vec<PointConfig> {
+        let batch = self.batches.get(self.next).cloned().unwrap_or_default();
+        self.next += 1;
+        batch
+    }
+    fn observe(&mut self, results: &[(PointConfig, MeasureResult)]) {
+        self.observed += results.len();
+    }
+    fn max_pipeline_depth(&self) -> usize {
+        usize::MAX
+    }
+}
+
+#[test]
+fn strategy_early_stop_drains_every_inflight_batch() {
+    let s = space();
+    let engine = analytical();
+    let points = distinct_points(&s, 71, 12);
+    let mut strategy = ScriptedPlanner {
+        batches: points.chunks(4).map(<[PointConfig]>::to_vec).collect(),
+        next: 0,
+        observed: 0,
+    };
+    // Depth 3: all three batches can be in flight when the strategy
+    // returns its empty fourth plan — every one must still be observed.
+    let budget = TuneBudget {
+        total_measurements: 100,
+        batch: 4,
+        workers: 2,
+        pipeline_depth: 3,
+        ..Default::default()
+    };
+    let out = tune_task_with(&engine, &s, &mut strategy, budget).unwrap();
+    assert_eq!(out.measurements, 12, "early stop must drain in-flight batches, not drop them");
+    assert_eq!(strategy.observed, 12, "every drained batch must reach observe()");
+    assert_eq!(out.trace.len(), 12);
+    for (i, e) in out.trace.iter().enumerate() {
+        assert_eq!(e.ordinal, i + 1);
+    }
+    assert_eq!(out.trace.last().unwrap().iteration, 2, "three planning iterations ran");
+}
+
+/// An analytical oracle whose substrate vanishes after serving two batch
+/// calls — the mid-pipeline whole-fleet outage.
+struct DyingBackend {
+    calls: AtomicUsize,
+}
+
+impl MeasureBackend for DyingBackend {
+    fn name(&self) -> &'static str {
+        "dying"
+    }
+    fn measure(&self, space: &ConfigSpace, point: &PointConfig) -> MeasureResult {
+        AnalyticalBackend.measure(space, point)
+    }
+    fn try_measure_many_traced(
+        &self,
+        space: &ConfigSpace,
+        points: &[PointConfig],
+        workers: usize,
+    ) -> anyhow::Result<(Vec<MeasureResult>, Vec<bool>)> {
+        if self.calls.fetch_add(1, Ordering::SeqCst) >= 2 {
+            return Err(anyhow::Error::new(FleetLostError {
+                undeliverable: points.len(),
+                rounds: 1,
+                last_error: "synthetic mid-pipeline outage".into(),
+            }));
+        }
+        Ok(self.measure_many_traced(space, points, workers))
+    }
+}
+
+#[test]
+fn fleet_loss_mid_pipeline_fails_cleanly_and_settles_completed_batches() {
+    let s = space();
+    let engine = Engine::with_backend(Box::new(DyingBackend { calls: AtomicUsize::new(0) }), 2, true);
+    let ledger = BudgetLedger::new(100);
+    let dispatcher = Dispatcher::new(2);
+    let tenant = TenantContext {
+        ledger: Some(&ledger),
+        dispatcher: &dispatcher,
+        framework: "random",
+        task_id: "t0",
+    };
+    let mut strategy = RandomSearch::new(s.clone(), 7);
+    let budget = TuneBudget {
+        total_measurements: 24,
+        batch: 4,
+        workers: 2,
+        pipeline_depth: 2,
+        ..Default::default()
+    };
+    let err = tune_task_tenant(&engine, &s, &mut strategy, budget, Some(&tenant)).unwrap_err();
+    assert!(
+        err.as_ref().downcast_ref::<FleetLostError>().is_some(),
+        "expected FleetLostError, got: {err}"
+    );
+
+    // The backend served exactly two 4-point batches before the outage:
+    // those 8 points are settled — even a batch that completed *after*
+    // the failure was first observed settles via the error-path drain —
+    // while the batches the fleet never answered stay
+    // charged-but-unsettled (honest accounting). How many batches got
+    // submitted before the failure drained (3 or 4) depends on thread
+    // scheduling, so the charge is bounded, not exact.
+    let account = ledger.account("random", "t0");
+    assert_eq!(account.settled(), 8, "completed batches must settle even on the error path");
+    assert!(
+        account.charged >= 12 && account.charged <= 16,
+        "charge-before-submit must cover every submitted batch (charged {})",
+        account.charged
+    );
+    assert!(
+        account.charged > account.settled(),
+        "the unanswered batches must stay charged-but-unsettled"
+    );
+    // The dispatcher leaked no permits: a fresh checkout succeeds at once.
+    drop(dispatcher.checkout());
+}
+
+#[test]
+fn depth_2_on_a_throttled_two_shard_fleet_beats_depth_1_with_identical_numbers() {
+    // The acceptance scenario: a fixed budget on a two-shard fleet with
+    // injected per-point latency. Depth 1 pays (batches x batch-latency)
+    // serially; depth 2 keeps both batches' chunks in flight, so the
+    // shards' (parallel) sleeps overlap and wall-clock roughly halves.
+    // Measured values must be bit-identical — pipelining moves time, not
+    // numbers.
+    let delay = Duration::from_millis(5);
+    let budget_points = 144usize;
+    let batch = 24usize;
+    let run = |depth: usize| {
+        let shard_a = serve_measure_local_with(
+            Arc::new(Engine::new(EngineConfig {
+                backend: arco::eval::BackendKind::Analytical.into(),
+                workers: 2,
+                ..Default::default()
+            })
+            .unwrap()),
+            ServeOptions { measure_delay: delay },
+        )
+        .unwrap();
+        let shard_b = serve_measure_local_with(
+            Arc::new(Engine::new(EngineConfig {
+                backend: arco::eval::BackendKind::Analytical.into(),
+                workers: 2,
+                ..Default::default()
+            })
+            .unwrap()),
+            ServeOptions { measure_delay: delay },
+        )
+        .unwrap();
+        let engine = Engine::new(EngineConfig {
+            backend: BackendSpec::Remote(vec![
+                shard_a.addr().to_string(),
+                shard_b.addr().to_string(),
+            ]),
+            workers: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let s = space();
+        let mut strategy = RandomSearch::new(s.clone(), 29);
+        let budget = TuneBudget {
+            total_measurements: budget_points,
+            batch,
+            workers: 2,
+            pipeline_depth: depth,
+            ..Default::default()
+        };
+        let started = Instant::now();
+        let out = tune_task_with(&engine, &s, &mut strategy, budget).unwrap();
+        let elapsed = started.elapsed();
+        shard_a.shutdown();
+        shard_b.shutdown();
+        (out, elapsed)
+    };
+
+    let (serial, serial_elapsed) = run(1);
+    let (piped, piped_elapsed) = run(2);
+
+    // Identical numbers for the shared (identically planned) points.
+    assert_eq!(serial.measurements, budget_points);
+    assert_eq!(piped.measurements, budget_points);
+    assert_eq!(serial.best_point, piped.best_point, "pipelining changed the best point");
+    assert_eq!(serial.best.seconds, piped.best.seconds);
+    assert_eq!(trace_rows(&serial), trace_rows(&piped), "pipelining changed measured values");
+
+    // Measurably less wall-clock: the injected latency dominates both
+    // runs (6 batches x 12 points/shard x 5 ms >= 360 ms serial), so the
+    // overlap must show even on a loaded CI machine.
+    assert!(
+        piped_elapsed.as_secs_f64() < serial_elapsed.as_secs_f64() * 0.85,
+        "depth 2 ({piped_elapsed:?}) should beat depth 1 ({serial_elapsed:?}) \
+         on a throttled two-shard fleet"
+    );
+}

@@ -157,8 +157,71 @@ smoke_warm_start() {
     echo "warm start ok: merge -> warm-start replays the run from cache"
 }
 
+smoke_pipelined() {
+    echo "== pipelined tuning: depth-1 parity and depth-2 budget conservation =="
+    run_compare --backend analytical
+    cp results/table6_inference.md /tmp/arco_t6_pipe_local.md
+
+    local out fast second
+    out=$(start_shard "$SERVE_LOG" --backend analytical)
+    fast=${out%% *}
+    SERVER_PID=${out##* }
+    out=$(start_shard "$SERVE_LOG2" --backend analytical)
+    second=${out%% *}
+    SERVER2_PID=${out##* }
+    echo "fleet: $fast, $second"
+
+    # Depth 1 over the fleet must reproduce the in-process numbers exactly
+    # (the serial loop is the reproducibility contract).
+    run_compare --backend "remote:$fast,$second" --pipeline-depth 1
+    cp results/table6_inference.md /tmp/arco_t6_pipe_d1.md
+    diff -u /tmp/arco_t6_pipe_local.md /tmp/arco_t6_pipe_d1.md
+    echo "pipelined ok: depth 1 over the fleet is identical to in-process"
+
+    # Depth 2 with the shared ledger: budget conservation — no tenant may
+    # be charged more than the per-task allowance, and every charge must
+    # settle (no in-flight batch may leak a debit).
+    local pipe_log=/tmp/arco_pipe2.log
+    run_compare --backend "remote:$fast,$second" --pipeline-depth 2 --shared-budget | tee "$pipe_log"
+
+    kill "$SERVER_PID" "$SERVER2_PID" 2>/dev/null || true
+    wait "$SERVER_PID" 2>/dev/null || true
+    wait "$SERVER2_PID" 2>/dev/null || true
+    SERVER_PID=0
+    SERVER2_PID=0
+
+    grep -q "^ledger\[alexnet\]: " "$pipe_log" || {
+        echo "depth-2 shared-budget run must print its ledger summary"; exit 1;
+    }
+    # ledger[alexnet]: budget=N/task tenants=T charged=C fresh=F cache_served=S
+    awk '/^ledger\[alexnet\]: / {
+        found = 1   # the line exists; set before any early exit so END
+                    # does not mis-report a parse/breach failure as "no
+                    # ledger line found"
+        for (i = 1; i <= NF; i++) {
+            if ($i ~ /^budget=/)  { split($i, a, /[=\/]/); per_task = a[2] }
+            if ($i ~ /^tenants=/) { split($i, a, "=");     tenants  = a[2] }
+            if ($i ~ /^charged=/) { split($i, a, "=");     charged  = a[2] }
+        }
+        if (per_task == "" || tenants == "" || charged == "") {
+            print "could not parse ledger summary: " $0; bad = 1; exit 1
+        }
+        if (charged + 0 > per_task * tenants) {
+            print "budget breached: charged " charged " > " per_task "/task x " tenants " tenants"
+            bad = 1; exit 1
+        }
+        print "pipelined ok: depth 2 conserved the budget (charged " charged \
+              " <= " per_task "/task x " tenants " tenants)"
+    }
+    END {
+        if (bad) { exit 1 }
+        if (!found) { print "no ledger line found"; exit 1 }
+    }' "$pipe_log"
+}
+
 smoke_backend analytical
 smoke_backend vta-sim
 smoke_heterogeneous
 smoke_warm_start
-echo "smoke ok: remote == in-process, weighted placement and warm start verified"
+smoke_pipelined
+echo "smoke ok: remote == in-process, weighted placement, warm start and pipelined tuning verified"
