@@ -1,0 +1,114 @@
+//! Wire codec micro-benchmarks: the per-frame cost of the measurement
+//! protocol, streaming vs the legacy JSON-tree paths.
+//!
+//! The unit of work is the fleet's hot frame pair: a 64-point `measure`
+//! request and its 64-result `results` response (the per-iteration batch
+//! shape of a tuning loop), plus the single journal record line. Encode
+//! benches serialize into a reused buffer, as `RemoteBackend` and the
+//! shard do into their socket buffers; decode benches parse one
+//! pre-rendered line, as `serve-measure` and the client reply path do.
+
+use arco::eval::proto::{
+    record_from_json, record_from_line, record_to_json, request_from_line, response_from_line,
+    write_frame, write_record_line, write_request_frame, write_response_frame, Request, Response,
+};
+use arco::eval::{MeasureResult, PointKey};
+use arco::space::ConfigSpace;
+use arco::util::bench::{black_box, BenchRunner};
+use arco::util::json::Json;
+use arco::util::rng::Pcg32;
+use arco::workload::Conv2dTask;
+
+fn main() {
+    arco::util::log::init_from_env();
+    let mut runner = BenchRunner::new("codec");
+    let space = ConfigSpace::for_task(&Conv2dTask::new(1, 64, 56, 56, 64, 3, 3, 1, 1), true);
+    let mut rng = Pcg32::seeded(17);
+    let points: Vec<Vec<usize>> =
+        (0..64).map(|_| PointKey::of(&space, &space.random_point(&mut rng)).values).collect();
+    let request = Request::Measure { task: space.task, points };
+    let results: Vec<MeasureResult> = (0..64)
+        .map(|i| {
+            let valid = i % 9 != 0;
+            MeasureResult {
+                seconds: if valid { 1.5e-3 + i as f64 * 1e-6 } else { f64::INFINITY },
+                cycles: if valid { 1_000_000 + i as u64 * 977 } else { 0 },
+                gflops: 40.0 + i as f64,
+                area_mm2: 3.25,
+                occupancy: 0.5,
+                valid,
+            }
+        })
+        .collect();
+    let fresh: Vec<bool> = (0..64).map(|i| i % 3 != 0).collect();
+    let response = Response::Results { results, fresh, active_batches: Some(3) };
+    let elems = Some(64u64);
+
+    // Encode: straight into a reused byte buffer (the socket-buffer shape).
+    let mut buf: Vec<u8> = Vec::with_capacity(16 * 1024);
+    runner.bench_with_elements("encode/request64_stream", elems, || {
+        buf.clear();
+        write_request_frame(&mut buf, &request).unwrap();
+        black_box(buf.len());
+    });
+    runner.bench_with_elements("encode/request64_tree", elems, || {
+        buf.clear();
+        write_frame(&mut buf, &request.to_json()).unwrap();
+        black_box(buf.len());
+    });
+    runner.bench_with_elements("encode/response64_stream", elems, || {
+        buf.clear();
+        write_response_frame(&mut buf, &response).unwrap();
+        black_box(buf.len());
+    });
+    runner.bench_with_elements("encode/response64_tree", elems, || {
+        buf.clear();
+        write_frame(&mut buf, &response.to_json()).unwrap();
+        black_box(buf.len());
+    });
+
+    // Decode: one pre-rendered frame line per call.
+    let mut line = Vec::new();
+    write_request_frame(&mut line, &request).unwrap();
+    let request_line = String::from_utf8(line).unwrap().trim_end().to_string();
+    let mut line = Vec::new();
+    write_response_frame(&mut line, &response).unwrap();
+    let response_line = String::from_utf8(line).unwrap().trim_end().to_string();
+    runner.bench_with_elements("decode/request64_stream", elems, || {
+        black_box(request_from_line(&request_line).unwrap());
+    });
+    runner.bench_with_elements("decode/request64_tree", elems, || {
+        black_box(Request::from_json(&Json::parse(&request_line).unwrap()).unwrap());
+    });
+    runner.bench_with_elements("decode/response64_stream", elems, || {
+        black_box(response_from_line(&response_line).unwrap());
+    });
+    runner.bench_with_elements("decode/response64_tree", elems, || {
+        black_box(Response::from_json(&Json::parse(&response_line).unwrap()).unwrap());
+    });
+
+    // The journal record line, both directions.
+    let key = PointKey::of(&space, &space.random_point(&mut rng));
+    let result = MeasureResult {
+        seconds: 1.25e-3,
+        cycles: 5_000_000,
+        gflops: 42.0,
+        area_mm2: 3.25,
+        occupancy: 0.75,
+        valid: true,
+    };
+    runner.bench("encode/record_stream", || {
+        buf.clear();
+        write_record_line(&mut buf, "vta-sim", &key, &result).unwrap();
+        buf.len()
+    });
+    runner.bench("encode/record_tree", || record_to_json("vta-sim", &key, &result).dump());
+    let mut line = Vec::new();
+    write_record_line(&mut line, "vta-sim", &key, &result).unwrap();
+    let record_line = String::from_utf8(line).unwrap().trim_end().to_string();
+    runner.bench("decode/record_stream", || record_from_line(&record_line).unwrap());
+    runner.bench("decode/record_tree", || {
+        record_from_json(&Json::parse(&record_line).unwrap()).unwrap()
+    });
+    runner.finish();
+}

@@ -1,0 +1,122 @@
+//! Journal replay at scale: the warm-start hot path.
+//!
+//! A fleet shard replays its journal on every start; the tuner's journal
+//! merge/compact tools walk the same lines. This bench measures one full
+//! pass over a million-record journal (50k in `ARCO_BENCH_QUICK=1` mode)
+//! three ways:
+//!
+//!  - `tree_full_decode`   — the legacy path: `Json::parse` builds a tree
+//!    per line, then `record_from_json` walks it;
+//!  - `stream_full_decode` — the zero-copy streaming decoder;
+//!  - `stream_identity_only` — lazy extraction of just `(backend, task,
+//!    values)`, skipping the payload subtree (what merge dedup and compact
+//!    GC actually need);
+//!
+//! plus `open_read_only`, the end-to-end `Journal` replay (I/O, UTF-8
+//! checks, dedup set) on the same corpus written to a real file. The
+//! speedup of streaming over tree is printed at the end — the acceptance
+//! gate for the codec is >=3x on the full decode.
+
+use arco::eval::proto::{
+    record_from_json, record_from_line, record_identity_from_line, write_record_line,
+};
+use arco::eval::{Fingerprint, Journal, MeasureResult, PointKey};
+use arco::space::ConfigSpace;
+use arco::util::bench::{black_box, BenchRunner};
+use arco::util::json::Json;
+use arco::util::rng::Pcg32;
+use arco::workload::Conv2dTask;
+
+fn main() {
+    arco::util::log::init_from_env();
+    let quick = std::env::var("ARCO_BENCH_QUICK").is_ok_and(|v| v == "1");
+    let n: usize = if quick { 50_000 } else { 1_000_000 };
+    let mut runner = BenchRunner::new("journal_replay");
+
+    // Corpus: n record lines over a realistic tuning space. Identities
+    // cycle through a 4096-point pool (so the journal's dedup set stays
+    // small and the bench measures parsing, not allocator churn), while
+    // payloads vary per line so no two lines are byte-equal.
+    let space = ConfigSpace::for_task(&Conv2dTask::new(1, 64, 56, 56, 64, 3, 3, 1, 1), true);
+    let mut rng = Pcg32::seeded(9);
+    let keys: Vec<PointKey> =
+        (0..4096).map(|_| PointKey::of(&space, &space.random_point(&mut rng))).collect();
+    let mut corpus = String::with_capacity(n * 280);
+    let mut buf = Vec::with_capacity(512);
+    for i in 0..n {
+        let key = &keys[i % keys.len()];
+        let valid = i % 16 != 0;
+        let result = MeasureResult {
+            seconds: if valid { 1e-9 * (i as f64 + 1.0) } else { f64::INFINITY },
+            cycles: if valid { (i as u64).wrapping_mul(0x9E37_79B9) } else { 0 },
+            gflops: (i % 97) as f64 * 0.5,
+            area_mm2: 3.25,
+            occupancy: (i % 100) as f64 / 100.0,
+            valid,
+        };
+        let backend = if i % 2 == 0 { "vta-sim" } else { "analytical" };
+        buf.clear();
+        write_record_line(&mut buf, backend, key, &result).unwrap();
+        corpus.push_str(std::str::from_utf8(&buf).unwrap());
+    }
+    println!("corpus: {n} record lines, {:.1} MB", corpus.len() as f64 / 1e6);
+    let elems = Some(n as u64);
+
+    runner.bench_with_elements("replay/tree_full_decode", elems, || {
+        let mut ok = 0usize;
+        for line in corpus.lines() {
+            if let Some(r) = Json::parse(line).ok().and_then(|v| record_from_json(&v)) {
+                black_box(&r);
+                ok += 1;
+            }
+        }
+        assert_eq!(black_box(ok), n);
+    });
+    runner.bench_with_elements("replay/stream_full_decode", elems, || {
+        let mut ok = 0usize;
+        for line in corpus.lines() {
+            if let Some(r) = record_from_line(line) {
+                black_box(&r);
+                ok += 1;
+            }
+        }
+        assert_eq!(black_box(ok), n);
+    });
+    runner.bench_with_elements("replay/stream_identity_only", elems, || {
+        let mut ok = 0usize;
+        for line in corpus.lines() {
+            if let Some(r) = record_identity_from_line(line) {
+                black_box(&r);
+                ok += 1;
+            }
+        }
+        assert_eq!(black_box(ok), n);
+    });
+
+    // End-to-end replay: header check, buffered I/O, per-line UTF-8
+    // validation, dedup set — everything a shard pays on warm start.
+    let path =
+        std::env::temp_dir().join(format!("arco_bench_journal_{}.jsonl", std::process::id()));
+    let header = Json::obj(vec![
+        ("format", Json::str("arco-journal")),
+        ("version", Json::num(Journal::VERSION as f64)),
+        ("fingerprint", Fingerprint::current().to_json()),
+    ]);
+    std::fs::write(&path, format!("{}\n{corpus}", header.dump())).unwrap();
+    runner.bench_with_elements("replay/journal_open_read_only", elems, || {
+        let j = Journal::open_read_only(&path).unwrap();
+        assert_eq!(black_box(j.len()), keys.len().min(n));
+    });
+    let _ = std::fs::remove_file(&path);
+
+    let results = runner.finish();
+    let mean = |name: &str| {
+        results.iter().find(|r| r.name == name).map(|r| r.mean_ns).unwrap_or(f64::NAN)
+    };
+    let tree = mean("replay/tree_full_decode");
+    println!(
+        "speedup over tree parse: full decode {:.2}x, identity-only {:.2}x",
+        tree / mean("replay/stream_full_decode"),
+        tree / mean("replay/stream_identity_only"),
+    );
+}

@@ -38,11 +38,11 @@
 //!   Delete or archive the old file; re-runs repopulate it in v2 form.
 
 use super::cache::PointKey;
-use super::proto::{record_from_json, record_to_json, Fingerprint};
+use super::proto::{record_from_line, record_identity_from_line, write_record_line, Fingerprint};
 use crate::codegen::MeasureResult;
 use crate::util::json::Json;
 use std::collections::HashSet;
-use std::io::Write;
+use std::io::{BufRead, Read, Write};
 use std::path::{Path, PathBuf};
 
 /// One persisted measurement.
@@ -130,6 +130,65 @@ fn acquire_lock_sentinel(path: &Path) -> LockAcquire {
             Err(e) => return LockAcquire::Failed(e),
         }
     }
+}
+
+/// Verdict of [`check_header`] on a journal's first line.
+enum HeaderCheck {
+    /// A valid v2 header stamped with this binary's fingerprint.
+    Journal,
+    /// Not a v2 journal header at all; the caller discriminates v1 files
+    /// from garbage (that needs the whole text, which only it may have).
+    NotAJournal,
+}
+
+/// Validate a v2 journal header line. The fatal data-safety refusals
+/// (unsupported version, missing or foreign fingerprint) are shared by
+/// [`Journal::open`] and [`merge_journals`] through this helper so the two
+/// entry points cannot drift.
+fn check_header(path: &Path, first: &str) -> anyhow::Result<HeaderCheck> {
+    let header = match Json::parse(first) {
+        Ok(h) if h.get_str("format") == Some("arco-journal") => h,
+        _ => return Ok(HeaderCheck::NotAJournal),
+    };
+    let version = header.get_usize("version").unwrap_or(0);
+    if version != Journal::VERSION {
+        anyhow::bail!(
+            "journal {}: unsupported version {version} (this binary writes v{})",
+            path.display(),
+            Journal::VERSION
+        );
+    }
+    let stamped = header.get("fingerprint").and_then(Fingerprint::from_json).ok_or_else(|| {
+        anyhow::anyhow!("journal {}: header carries no fingerprint", path.display())
+    })?;
+    let current = Fingerprint::current();
+    if stamped != current {
+        anyhow::bail!(
+            "journal {} was measured under a different simulator — refusing to mix numbers.\n  \
+             journal: {}\n  binary:  {}\nDelete or archive the file and re-run to re-measure",
+            path.display(),
+            stamped.describe(),
+            current.describe()
+        );
+    }
+    Ok(HeaderCheck::Journal)
+}
+
+/// The first line was not a v2 header: refuse the whole text if it is a v1
+/// whole-file journal (its numbers carry no fingerprint), otherwise let the
+/// caller treat the file as garbage.
+fn refuse_if_v1(path: &Path, text: &str) -> anyhow::Result<()> {
+    if let Ok(doc) = Json::parse(text) {
+        if doc.get("entries").is_some() || doc.get_usize("version").is_some() {
+            anyhow::bail!(
+                "journal {} is in the v1 whole-file JSON format, which carries no \
+                 simulator fingerprint; its numbers cannot be safely reused. Delete \
+                 or archive the file and re-run to repopulate it in v2 form",
+                path.display()
+            );
+        }
+    }
+    Ok(())
 }
 
 /// An append-only measurement log bound to one file.
@@ -225,8 +284,8 @@ impl Journal {
             rewrite: false,
             writer,
         };
-        let text = match std::fs::read_to_string(path) {
-            Ok(t) => t,
+        let file = match std::fs::File::open(path) {
+            Ok(f) => f,
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(journal),
             Err(e) => {
                 crate::log_warn!("eval", "ignoring unreadable journal {}: {e}", path.display());
@@ -234,27 +293,30 @@ impl Journal {
                 return Ok(journal);
             }
         };
-        if text.trim().is_empty() {
+        // Stream the file line by line: a million-record warm-start journal
+        // is replayed without ever holding the whole file (or a JSON tree
+        // per record) in memory.
+        let mut reader = std::io::BufReader::new(file);
+        let mut first_raw: Vec<u8> = Vec::new();
+        if let Err(e) = reader.read_until(b'\n', &mut first_raw) {
+            crate::log_warn!("eval", "ignoring unreadable journal {}: {e}", path.display());
             journal.rewrite = true;
             return Ok(journal);
         }
-        let mut lines = text.lines();
-        let first = lines.next().unwrap_or("");
-        let header = match Json::parse(first) {
-            Ok(h) if h.get_str("format") == Some("arco-journal") => h,
-            _ => {
+        let first_line = String::from_utf8_lossy(&first_raw);
+        match check_header(path, first_line.trim_end_matches(['\n', '\r']))? {
+            HeaderCheck::Journal => {}
+            HeaderCheck::NotAJournal => {
                 // Not a v2 header. A v1 journal is a single pretty-printed
                 // JSON document; anything else is garbage.
-                if let Ok(doc) = Json::parse(&text) {
-                    if doc.get("entries").is_some() || doc.get_usize("version").is_some() {
-                        anyhow::bail!(
-                            "journal {} is in the v1 whole-file JSON format, which carries no \
-                             simulator fingerprint; its numbers cannot be safely reused. Delete \
-                             or archive the file and re-run to repopulate it in v2 form",
-                            path.display()
-                        );
-                    }
+                let mut rest = String::new();
+                let _ = reader.read_to_string(&mut rest);
+                let text = format!("{first_line}{rest}");
+                if text.trim().is_empty() {
+                    journal.rewrite = true;
+                    return Ok(journal);
                 }
+                refuse_if_v1(path, &text)?;
                 crate::log_warn!(
                     "eval",
                     "file {} is not a measurement journal; treating as empty",
@@ -263,38 +325,35 @@ impl Journal {
                 journal.rewrite = true;
                 return Ok(journal);
             }
-        };
-        let version = header.get_usize("version").unwrap_or(0);
-        if version != Self::VERSION {
-            anyhow::bail!(
-                "journal {}: unsupported version {version} (this binary writes v{})",
-                path.display(),
-                Self::VERSION
-            );
-        }
-        let stamped = header
-            .get("fingerprint")
-            .and_then(Fingerprint::from_json)
-            .ok_or_else(|| {
-                anyhow::anyhow!("journal {}: header carries no fingerprint", path.display())
-            })?;
-        let current = Fingerprint::current();
-        if stamped != current {
-            anyhow::bail!(
-                "journal {} was measured under a different simulator — refusing to mix numbers.\n  \
-                 journal: {}\n  binary:  {}\nDelete or archive the file and re-run to re-measure",
-                path.display(),
-                stamped.describe(),
-                current.describe()
-            );
         }
         let mut skipped = 0usize;
-        for line in lines {
+        let mut ends_with_newline = first_raw.last() == Some(&b'\n');
+        let mut buf: Vec<u8> = Vec::new();
+        loop {
+            buf.clear();
+            match reader.read_until(b'\n', &mut buf) {
+                Ok(0) => break,
+                Ok(_) => {}
+                Err(e) => {
+                    crate::log_warn!(
+                        "eval",
+                        "ignoring rest of unreadable journal {}: {e}",
+                        path.display()
+                    );
+                    journal.rewrite = true;
+                    break;
+                }
+            }
+            ends_with_newline = buf.last() == Some(&b'\n');
+            let Ok(line) = std::str::from_utf8(&buf) else {
+                skipped += 1;
+                continue;
+            };
+            let line = line.trim_end_matches(['\n', '\r']);
             if line.trim().is_empty() {
                 continue;
             }
-            let parsed = Json::parse(line).ok().as_ref().and_then(record_from_json);
-            match parsed {
+            match record_from_line(line) {
                 Some((backend, key, result)) => {
                     if journal.seen.insert((backend.clone(), key.clone())) {
                         journal.entries.push(JournalEntry { backend, key, result });
@@ -312,7 +371,7 @@ impl Journal {
             );
             journal.rewrite = true;
         }
-        if !text.ends_with('\n') {
+        if !ends_with_newline {
             // A torn final line without its newline would corrupt the next
             // appended record; rewrite instead.
             journal.rewrite = true;
@@ -377,6 +436,13 @@ impl Journal {
         self.seen.len()
     }
 
+    /// Whether a `(backend, key)` identity is already journaled. Lets a
+    /// merge reject a duplicate from the identity prefix of its line alone,
+    /// before paying for a full record decode.
+    pub(crate) fn contains_identity(&self, backend: &str, key: &PointKey) -> bool {
+        self.seen.contains(&(backend.to_string(), key.clone()))
+    }
+
     fn header_json(&self) -> Json {
         Json::obj(vec![
             ("format", Json::str("arco-journal")),
@@ -386,9 +452,13 @@ impl Journal {
     }
 
     fn entry_line(e: &JournalEntry) -> String {
-        let mut line = record_to_json(&e.backend, &e.key, &e.result).dump();
-        line.push('\n');
-        line
+        // Serialized straight into a buffer by the streaming writer — no
+        // intermediate JSON tree — byte-identical to the tree encoding
+        // (including the trailing newline).
+        let mut buf = Vec::with_capacity(256);
+        write_record_line(&mut buf, &e.backend, &e.key, &e.result)
+            .expect("writing a record to a Vec cannot fail");
+        String::from_utf8(buf).expect("serialized records are valid UTF-8")
     }
 
     /// Persist any records added since the last flush. Appends only the new
@@ -476,15 +546,7 @@ pub fn merge_journals(out: &Path, inputs: &[PathBuf]) -> anyhow::Result<MergeSta
         if !path.exists() {
             anyhow::bail!("journal merge: input {} does not exist", path.display());
         }
-        let src = Journal::open_read_only(path)?;
-        for e in src.entries() {
-            stats.read += 1;
-            if dst.record(&e.backend, &e.key, &e.result) {
-                stats.added += 1;
-            } else {
-                stats.duplicates += 1;
-            }
-        }
+        merge_one_input(&mut dst, path, &mut stats)?;
     }
     dst.flush()?;
     if !out.exists() {
@@ -496,6 +558,76 @@ pub fn merge_journals(out: &Path, inputs: &[PathBuf]) -> anyhow::Result<MergeSta
     }
     stats.total = dst.identities();
     Ok(stats)
+}
+
+/// Stream one input journal into `dst`, line by line. A record already in
+/// `dst` (the common case for mostly-overlapping fleet journals) is counted
+/// as a duplicate from the `(backend, task, values)` identity prefix of its
+/// line alone — the payload fields are decoded only for records that will
+/// actually be added. Header safety checks (version, fingerprint, v1) are
+/// the same refusals [`Journal::open`] makes, via [`check_header`].
+fn merge_one_input(dst: &mut Journal, path: &Path, stats: &mut MergeStats) -> anyhow::Result<()> {
+    let file = std::fs::File::open(path)?;
+    let mut reader = std::io::BufReader::new(file);
+    let mut first_raw: Vec<u8> = Vec::new();
+    reader.read_until(b'\n', &mut first_raw)?;
+    let first_line = String::from_utf8_lossy(&first_raw);
+    match check_header(path, first_line.trim_end_matches(['\n', '\r']))? {
+        HeaderCheck::Journal => {}
+        HeaderCheck::NotAJournal => {
+            let mut rest = String::new();
+            let _ = reader.read_to_string(&mut rest);
+            let text = format!("{first_line}{rest}");
+            if text.trim().is_empty() {
+                return Ok(());
+            }
+            refuse_if_v1(path, &text)?;
+            crate::log_warn!(
+                "eval",
+                "file {} is not a measurement journal; treating as empty",
+                path.display()
+            );
+            return Ok(());
+        }
+    }
+    // Per-input dedup mirrors what loading the input as a Journal would do:
+    // a line repeated inside one input counts as a single read.
+    let mut local_seen: HashSet<(String, PointKey)> = HashSet::new();
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        buf.clear();
+        if reader.read_until(b'\n', &mut buf)? == 0 {
+            break;
+        }
+        let Ok(line) = std::str::from_utf8(&buf) else {
+            continue; // corrupt line: dropped, as on any load
+        };
+        let line = line.trim_end_matches(['\n', '\r']);
+        if line.trim().is_empty() {
+            continue;
+        }
+        let Some((backend, key)) = record_identity_from_line(line) else {
+            continue; // torn/malformed line: dropped, as on any load
+        };
+        if !local_seen.insert((backend.clone(), key.clone())) {
+            continue;
+        }
+        stats.read += 1;
+        if dst.contains_identity(&backend, &key) {
+            stats.duplicates += 1;
+            continue;
+        }
+        // New identity: now (and only now) decode the payload.
+        let Some((backend, key, result)) = record_from_line(line) else {
+            continue;
+        };
+        if dst.record(&backend, &key, &result) {
+            stats.added += 1;
+        } else {
+            stats.duplicates += 1;
+        }
+    }
+    Ok(())
 }
 
 /// Outcome of a [`compact_journal`] run.
@@ -640,8 +772,10 @@ pub fn compact_journal(path: &Path) -> anyhow::Result<CompactStats> {
                 stats.dropped_stale += 1;
                 continue;
             }
-            match Json::parse(line).ok().as_ref().and_then(record_from_json) {
-                Some((backend, key, _result)) => {
+            // GC only needs each record's identity: the payload bytes are
+            // carried over verbatim, never decoded.
+            match record_identity_from_line(line) {
+                Some((backend, key)) => {
                     if seen.insert((backend, key)) {
                         stats.kept += 1;
                         kept_lines.push(line.to_string());
@@ -683,6 +817,7 @@ pub fn compact_journal(path: &Path) -> anyhow::Result<CompactStats> {
 mod tests {
     use super::*;
     use crate::codegen::measure_point;
+    use crate::eval::proto::record_to_json;
     use crate::space::ConfigSpace;
     use crate::util::rng::Pcg32;
     use crate::workload::Conv2dTask;

@@ -32,10 +32,26 @@
 //! `points` carry *decoded knob values* in space knob order, not value
 //! indices: both sides rebuild the identical [`ConfigSpace`] from the task
 //! shape, so decoded values are the only portable point identity.
+//!
+//! # Two codecs, one schema
+//!
+//! Every message exists in two encodings that produce and accept the same
+//! bytes: the original `Json` tree functions (`*_to_json` / `*_from_json`,
+//! kept for configs, reports and as the compatibility fallback) and the
+//! zero-copy streaming functions (`write_*_frame`, `*_from_line`,
+//! [`write_record_line`], [`record_from_line`]) built on
+//! [`crate::util::json::stream`]. The streaming writers are byte-identical
+//! to `Json::dump` of the tree encoding, with one deliberate exception:
+//! integer fields (`cycles`) are written exactly over the full `u64` range,
+//! where the `f64` tree detour silently corrupts values above 2^53. The
+//! streaming decoders are strict about the shapes our own writers emit and
+//! fall back to the lenient tree decoder for anything unusual, so old
+//! journals and version-skewed peers parse exactly as before.
 
 use super::cache::PointKey;
 use crate::codegen::MeasureResult;
 use crate::space::{ConfigSpace, PointConfig};
+use crate::util::json::stream::{Reader, StreamWriter, Token};
 use crate::util::json::Json;
 use crate::vta::{VtaConfig, CYCLE_MODEL_VERSION};
 use crate::workload::Conv2dTask;
@@ -410,6 +426,465 @@ pub fn read_frame(r: &mut impl BufRead) -> anyhow::Result<Option<Json>> {
     }
     let v = Json::parse(text).map_err(|e| anyhow::anyhow!("malformed frame: {e}"))?;
     Ok(Some(v))
+}
+
+// ---------------------------------------------------------------------------
+// Streaming codec: the zero-copy hot path over the same schema.
+// ---------------------------------------------------------------------------
+
+/// Read one raw frame line without parsing it; `Ok(None)` on a clean EOF
+/// before any bytes. Trailing `\n`/`\r` are stripped; hand the line to
+/// [`request_from_line`] / [`response_from_line`] / [`record_from_line`].
+pub fn read_frame_line(r: &mut impl BufRead) -> std::io::Result<Option<String>> {
+    let mut line = String::new();
+    let n = r.read_line(&mut line)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    while line.ends_with('\n') || line.ends_with('\r') {
+        line.pop();
+    }
+    Ok(Some(line))
+}
+
+/// Streaming twin of [`push_result_fields`], byte-identical except that
+/// `cycles` is written exactly (full `u64` range, not via `f64`).
+fn write_result_fields<W: Write>(
+    sw: &mut StreamWriter<W>,
+    r: &MeasureResult,
+) -> std::io::Result<()> {
+    sw.key("valid")?;
+    sw.bool_val(r.valid)?;
+    // Infinite runtimes (invalid configs) serialize as null.
+    sw.key("seconds")?;
+    sw.f64_val(r.seconds)?;
+    sw.key("cycles")?;
+    sw.u64_val(r.cycles)?;
+    sw.key("gflops")?;
+    sw.f64_val(r.gflops)?;
+    sw.key("area_mm2")?;
+    sw.f64_val(r.area_mm2)?;
+    sw.key("occupancy")?;
+    sw.f64_val(r.occupancy)
+}
+
+/// Serialize one record as a journal line (record + `\n`) straight into
+/// `w`, no intermediate tree or string. Byte-identical to
+/// `record_to_json(..).dump() + "\n"` for every value the tree can
+/// represent exactly; `cycles` above 2^53 are written exactly where the
+/// tree encoding would corrupt them.
+pub fn write_record_line<W: Write>(
+    w: &mut W,
+    backend: &str,
+    key: &PointKey,
+    r: &MeasureResult,
+) -> std::io::Result<()> {
+    let mut sw = StreamWriter::new(&mut *w);
+    sw.begin_obj()?;
+    sw.key("backend")?;
+    sw.str_val(backend)?;
+    sw.key("task")?;
+    key.task.write_stream(&mut sw)?;
+    sw.key("values")?;
+    sw.begin_arr()?;
+    for &v in &key.values {
+        sw.usize_val(v)?;
+    }
+    sw.end_arr()?;
+    write_result_fields(&mut sw, r)?;
+    sw.end_obj()?;
+    w.write_all(b"\n")
+}
+
+/// Streaming decode of a full record line. Strict fast path for the shape
+/// our writers emit (any field order, unknown fields skipped lazily);
+/// falls back to the tree decoder so anything the old parser accepted
+/// still parses. `None` means the line is not a record either way.
+pub fn record_from_line(line: &str) -> Option<(String, PointKey, MeasureResult)> {
+    if let Some(rec) = record_from_line_strict(line) {
+        return Some(rec);
+    }
+    record_from_json(&Json::parse(line).ok()?)
+}
+
+/// Lazily extract just the `(backend, task, values)` identity of a record
+/// line, skipping the payload subtrees without materializing them — the
+/// dedup/routing hot path of journal replay, merge and compact.
+pub fn record_identity_from_line(line: &str) -> Option<(String, PointKey)> {
+    if let Some(id) = record_identity_from_line_strict(line) {
+        return Some(id);
+    }
+    let (backend, key, _) = record_from_json(&Json::parse(line).ok()?)?;
+    Some((backend, key))
+}
+
+fn record_from_line_strict(line: &str) -> Option<(String, PointKey, MeasureResult)> {
+    let mut r = Reader::new(line);
+    if !matches!(r.next_token()?, Token::ObjStart) {
+        return None;
+    }
+    let mut backend: Option<String> = None;
+    let mut task: Option<Conv2dTask> = None;
+    let mut values: Option<Vec<usize>> = None;
+    let mut valid: Option<bool> = None;
+    let mut seconds: Option<f64> = None;
+    let mut cycles = 0u64;
+    let mut gflops = 0.0f64;
+    let mut area_mm2 = 0.0f64;
+    let mut occupancy = 0.0f64;
+    loop {
+        match r.next_token()? {
+            Token::ObjEnd => break,
+            Token::Key(k) => match k.as_ref() {
+                "backend" => match r.next_token()? {
+                    Token::Str(s) => backend = Some(s.into_owned()),
+                    _ => return None,
+                },
+                "task" => task = Some(Conv2dTask::from_stream(&mut r)?),
+                "values" => values = Some(values_from_stream(&mut r)?),
+                "valid" => match r.next_token()? {
+                    Token::Bool(b) => valid = Some(b),
+                    _ => return None,
+                },
+                "seconds" => match r.next_token()? {
+                    Token::Num(n) => seconds = Some(n.as_f64()),
+                    // Our writer spells the infinite runtime of invalid
+                    // configs as null; the tree decoder reads it as
+                    // "absent", which `valid: false` below restores.
+                    Token::Null => {}
+                    _ => return None,
+                },
+                "cycles" => match r.next_token()? {
+                    // Exact for the full u64 range; saturating f64 cast
+                    // for exotic spellings, matching the tree decoder.
+                    Token::Num(n) => {
+                        cycles = n.as_u64().unwrap_or_else(|| n.as_f64() as u64);
+                    }
+                    _ => return None,
+                },
+                "gflops" => match r.next_token()? {
+                    Token::Num(n) => gflops = n.as_f64(),
+                    _ => return None,
+                },
+                "area_mm2" => match r.next_token()? {
+                    Token::Num(n) => area_mm2 = n.as_f64(),
+                    _ => return None,
+                },
+                "occupancy" => match r.next_token()? {
+                    Token::Num(n) => occupancy = n.as_f64(),
+                    _ => return None,
+                },
+                _ => r.skip_value().ok()?,
+            },
+            _ => return None,
+        }
+    }
+    if !r.at_end() {
+        return None;
+    }
+    let valid = valid?;
+    let seconds = if valid { seconds? } else { f64::INFINITY };
+    Some((
+        backend?,
+        PointKey { task: task?, values: values? },
+        MeasureResult { seconds, cycles, gflops, area_mm2, occupancy, valid },
+    ))
+}
+
+fn record_identity_from_line_strict(line: &str) -> Option<(String, PointKey)> {
+    let mut r = Reader::new(line);
+    if !matches!(r.next_token()?, Token::ObjStart) {
+        return None;
+    }
+    let mut backend: Option<String> = None;
+    let mut task: Option<Conv2dTask> = None;
+    let mut values: Option<Vec<usize>> = None;
+    loop {
+        match r.next_token()? {
+            Token::ObjEnd => break,
+            Token::Key(k) => match k.as_ref() {
+                "backend" => match r.next_token()? {
+                    Token::Str(s) => backend = Some(s.into_owned()),
+                    _ => return None,
+                },
+                "task" => task = Some(Conv2dTask::from_stream(&mut r)?),
+                "values" => values = Some(values_from_stream(&mut r)?),
+                // Payload (and unknown) fields are skipped, never built.
+                _ => r.skip_value().ok()?,
+            },
+            _ => return None,
+        }
+    }
+    if !r.at_end() {
+        return None;
+    }
+    Some((backend?, PointKey { task: task?, values: values? }))
+}
+
+/// Streaming decode of a decoded-knob-values array, in value position.
+pub fn values_from_stream(r: &mut Reader<'_>) -> Option<Vec<usize>> {
+    if !matches!(r.next_token()?, Token::ArrStart) {
+        return None;
+    }
+    values_rest_from_stream(r)
+}
+
+/// Elements + closing `]` of a values array whose `[` is already consumed.
+fn values_rest_from_stream(r: &mut Reader<'_>) -> Option<Vec<usize>> {
+    let mut out = Vec::with_capacity(8);
+    loop {
+        match r.next_token()? {
+            Token::ArrEnd => return Some(out),
+            Token::Num(n) => out.push(n.as_usize()?),
+            _ => return None,
+        }
+    }
+}
+
+/// Serialize a request as one frame straight into the socket writer.
+/// Byte-identical to `write_frame(w, &req.to_json())`; the hot `measure`
+/// op never builds a tree.
+pub fn write_request_frame<W: Write>(w: &mut W, req: &Request) -> std::io::Result<()> {
+    match req {
+        Request::Measure { task, points } => {
+            let mut sw = StreamWriter::new(&mut *w);
+            sw.begin_obj()?;
+            sw.key("op")?;
+            sw.str_val("measure")?;
+            sw.key("task")?;
+            task.write_stream(&mut sw)?;
+            sw.key("points")?;
+            sw.begin_arr()?;
+            for values in points {
+                sw.begin_arr()?;
+                for &v in values {
+                    sw.usize_val(v)?;
+                }
+                sw.end_arr()?;
+            }
+            sw.end_arr()?;
+            sw.end_obj()?;
+            w.write_all(b"\n")?;
+            w.flush()
+        }
+        // Ping/Stats are tiny one-field objects, once per connection.
+        _ => write_frame(w, &req.to_json()),
+    }
+}
+
+/// Serialize a response as one frame straight into the socket writer.
+/// Byte-identical to `write_frame(w, &resp.to_json())`; the hot `results`
+/// frame never builds a tree.
+pub fn write_response_frame<W: Write>(w: &mut W, resp: &Response) -> std::io::Result<()> {
+    match resp {
+        Response::Results { results, fresh, active_batches } => {
+            let mut sw = StreamWriter::new(&mut *w);
+            sw.begin_obj()?;
+            sw.key("ok")?;
+            sw.bool_val(true)?;
+            sw.key("results")?;
+            sw.begin_arr()?;
+            for r in results {
+                sw.begin_obj()?;
+                write_result_fields(&mut sw, r)?;
+                sw.end_obj()?;
+            }
+            sw.end_arr()?;
+            sw.key("fresh")?;
+            sw.begin_arr()?;
+            for &f in fresh {
+                sw.bool_val(f)?;
+            }
+            sw.end_arr()?;
+            if let Some(depth) = active_batches {
+                sw.key("active_batches")?;
+                sw.usize_val(*depth)?;
+            }
+            sw.end_obj()?;
+            w.write_all(b"\n")?;
+            w.flush()
+        }
+        // Pong / Stats / Error are off the per-batch hot path.
+        _ => write_frame(w, &resp.to_json()),
+    }
+}
+
+/// Zero-copy request decode: strict streaming fast path for the hot
+/// `measure` op, tree fallback for everything else (ping, stats, unknown
+/// ops, odd spellings). `None` means not a request either way.
+pub fn request_from_line(line: &str) -> Option<Request> {
+    if let Some(req) = measure_request_from_line(line) {
+        return Some(req);
+    }
+    Request::from_json(&Json::parse(line).ok()?)
+}
+
+fn measure_request_from_line(line: &str) -> Option<Request> {
+    let mut r = Reader::new(line);
+    if !matches!(r.next_token()?, Token::ObjStart) {
+        return None;
+    }
+    let mut is_measure = false;
+    let mut task: Option<Conv2dTask> = None;
+    let mut points: Option<Vec<Vec<usize>>> = None;
+    loop {
+        match r.next_token()? {
+            Token::ObjEnd => break,
+            Token::Key(k) => match k.as_ref() {
+                "op" => match r.next_token()? {
+                    Token::Str(s) if s == "measure" => is_measure = true,
+                    _ => return None,
+                },
+                "task" => task = Some(Conv2dTask::from_stream(&mut r)?),
+                "points" => {
+                    if !matches!(r.next_token()?, Token::ArrStart) {
+                        return None;
+                    }
+                    let mut ps: Vec<Vec<usize>> = Vec::new();
+                    loop {
+                        match r.next_token()? {
+                            Token::ArrEnd => break,
+                            Token::ArrStart => ps.push(values_rest_from_stream(&mut r)?),
+                            _ => return None,
+                        }
+                    }
+                    points = Some(ps);
+                }
+                _ => r.skip_value().ok()?,
+            },
+            _ => return None,
+        }
+    }
+    if !is_measure || !r.at_end() {
+        return None;
+    }
+    Some(Request::Measure { task: task?, points: points? })
+}
+
+/// Zero-copy response decode: strict streaming fast path for the hot
+/// `results` frame, tree fallback for pong / stats / error frames and any
+/// unusual spelling. `None` means not a response either way.
+pub fn response_from_line(line: &str) -> Option<Response> {
+    if let Some(resp) = results_response_from_line(line) {
+        return Some(resp);
+    }
+    Response::from_json(&Json::parse(line).ok()?)
+}
+
+fn results_response_from_line(line: &str) -> Option<Response> {
+    let mut r = Reader::new(line);
+    if !matches!(r.next_token()?, Token::ObjStart) {
+        return None;
+    }
+    let mut ok: Option<bool> = None;
+    let mut results: Option<Vec<MeasureResult>> = None;
+    let mut fresh: Option<Vec<bool>> = None;
+    let mut active_batches: Option<usize> = None;
+    loop {
+        match r.next_token()? {
+            Token::ObjEnd => break,
+            Token::Key(k) => match k.as_ref() {
+                "ok" => match r.next_token()? {
+                    Token::Bool(b) => ok = Some(b),
+                    _ => return None,
+                },
+                "results" => {
+                    if !matches!(r.next_token()?, Token::ArrStart) {
+                        return None;
+                    }
+                    let mut rs = Vec::new();
+                    loop {
+                        match r.next_token()? {
+                            Token::ArrEnd => break,
+                            Token::ObjStart => rs.push(result_rest_from_stream(&mut r)?),
+                            _ => return None,
+                        }
+                    }
+                    results = Some(rs);
+                }
+                "fresh" => {
+                    if !matches!(r.next_token()?, Token::ArrStart) {
+                        return None;
+                    }
+                    let mut fs = Vec::new();
+                    loop {
+                        match r.next_token()? {
+                            Token::ArrEnd => break,
+                            Token::Bool(b) => fs.push(b),
+                            // The tree decoder charges malformed entries
+                            // as fresh (the conservative reading).
+                            Token::Num(_) | Token::Str(_) | Token::Null => fs.push(true),
+                            _ => return None,
+                        }
+                    }
+                    fresh = Some(fs);
+                }
+                "active_batches" => match r.next_token()? {
+                    // Non-integer spellings read as absent, like the tree.
+                    Token::Num(n) => active_batches = n.as_usize(),
+                    _ => return None,
+                },
+                _ => r.skip_value().ok()?,
+            },
+            _ => return None,
+        }
+    }
+    if !r.at_end() || !ok? {
+        return None;
+    }
+    let results = results?;
+    let mut fresh = fresh.unwrap_or_default();
+    fresh.resize(results.len(), true);
+    Some(Response::Results { results, fresh, active_batches })
+}
+
+/// Fields + closing `}` of a result object whose `{` is already consumed.
+fn result_rest_from_stream(r: &mut Reader<'_>) -> Option<MeasureResult> {
+    let mut valid: Option<bool> = None;
+    let mut seconds: Option<f64> = None;
+    let mut cycles = 0u64;
+    let mut gflops = 0.0f64;
+    let mut area_mm2 = 0.0f64;
+    let mut occupancy = 0.0f64;
+    loop {
+        match r.next_token()? {
+            Token::ObjEnd => break,
+            Token::Key(k) => match k.as_ref() {
+                "valid" => match r.next_token()? {
+                    Token::Bool(b) => valid = Some(b),
+                    _ => return None,
+                },
+                "seconds" => match r.next_token()? {
+                    Token::Num(n) => seconds = Some(n.as_f64()),
+                    Token::Null => {}
+                    _ => return None,
+                },
+                "cycles" => match r.next_token()? {
+                    Token::Num(n) => {
+                        cycles = n.as_u64().unwrap_or_else(|| n.as_f64() as u64);
+                    }
+                    _ => return None,
+                },
+                "gflops" => match r.next_token()? {
+                    Token::Num(n) => gflops = n.as_f64(),
+                    _ => return None,
+                },
+                "area_mm2" => match r.next_token()? {
+                    Token::Num(n) => area_mm2 = n.as_f64(),
+                    _ => return None,
+                },
+                "occupancy" => match r.next_token()? {
+                    Token::Num(n) => occupancy = n.as_f64(),
+                    _ => return None,
+                },
+                _ => r.skip_value().ok()?,
+            },
+            _ => return None,
+        }
+    }
+    let valid = valid?;
+    let seconds = if valid { seconds? } else { f64::INFINITY };
+    Some(MeasureResult { seconds, cycles, gflops, area_mm2, occupancy, valid })
 }
 
 #[cfg(test)]

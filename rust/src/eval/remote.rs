@@ -37,7 +37,10 @@
 
 use super::backend::{BackendKind, MeasureBackend, Placement, ShardPlacement};
 use super::cache::PointKey;
-use super::proto::{read_frame, write_frame, Fingerprint, Request, Response, PROTO_VERSION};
+use super::proto::{
+    read_frame_line, response_from_line, write_request_frame, Fingerprint, Request, Response,
+    PROTO_VERSION,
+};
 use crate::codegen::MeasureResult;
 use crate::space::{ConfigSpace, PointConfig};
 use crate::util::json::Json;
@@ -173,18 +176,19 @@ fn connect(addr: &str) -> anyhow::Result<TcpStream> {
     Ok(stream)
 }
 
-/// One request → one response over a fresh connection.
+/// One request → one response over a fresh connection. Both directions use
+/// the streaming codec: the request is serialized straight into the socket
+/// buffer and the reply line is decoded without building a JSON tree.
 fn call(addr: &str, req: &Request, read_timeout: Duration) -> anyhow::Result<Response> {
     let stream = connect(addr)?;
     stream.set_read_timeout(Some(read_timeout)).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
-    write_frame(&mut writer, &req.to_json())?;
-    let Some(frame) = read_frame(&mut reader)? else {
+    write_request_frame(&mut writer, req)?;
+    let Some(line) = read_frame_line(&mut reader)? else {
         anyhow::bail!("{addr} closed the connection before replying");
     };
-    Response::from_json(&frame)
-        .ok_or_else(|| anyhow::anyhow!("{addr} sent an unintelligible reply"))
+    response_from_line(&line).ok_or_else(|| anyhow::anyhow!("{addr} sent an unintelligible reply"))
 }
 
 /// Handshake with one shard, returning its advertised backend id and

@@ -13,7 +13,8 @@
 
 use super::engine::Engine;
 use super::proto::{
-    point_from_values, read_frame, write_frame, Fingerprint, Request, Response, PROTO_VERSION,
+    point_from_values, read_frame_line, request_from_line, write_response_frame, Fingerprint,
+    Request, Response, PROTO_VERSION,
 };
 use crate::space::ConfigSpace;
 use crate::util::json::Json;
@@ -150,14 +151,17 @@ fn serve_connection(
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
     loop {
-        let Some(frame) = read_frame(&mut reader)? else {
+        let Some(line) = read_frame_line(&mut reader)? else {
             return Ok(());
         };
-        let response = match Request::from_json(&frame) {
+        // Streaming decode with tree fallback inside `request_from_line`; a
+        // frame that is not JSON at all gets a structured Error reply (the
+        // client sees *why* instead of a dropped connection).
+        let response = match request_from_line(&line) {
             Some(req) => handle(engine, clients, req, opts),
             None => Response::Error("unintelligible request".to_string()),
         };
-        write_frame(&mut writer, &response.to_json())?;
+        write_response_frame(&mut writer, &response)?;
     }
 }
 

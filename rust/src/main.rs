@@ -53,7 +53,7 @@ fn usage() -> String {
      compare        compare frameworks across models (Figs 5-7, Table 6)\n  \
      fig4           ARCO with/without Confidence Sampling trace (Fig 4)\n  \
      serve-measure  expose a measurement backend to remote tuners (fleet shard)\n  \
-     journal        measurement-journal tooling (merge, compact)\n  \
+     journal        measurement-journal tooling (merge, compact, synth)\n  \
      report-models  print the model zoo (Table 3)\n  \
      info           backend / artifact status\n\nrun `arco <command> --help` for options\n"
         .into()
@@ -447,8 +447,104 @@ fn cmd_journal(args: &[String]) -> anyhow::Result<()> {
          merge <out.jsonl> <in.jsonl...>  union fingerprint-identical journals \
          (dedup on backend+task+knobs)\n  \
          compact <file.jsonl>             rewrite a journal in place, dropping duplicate \
-         records and records from foreign/stale fingerprints\n";
+         records and records from foreign/stale fingerprints\n  \
+         synth <out.jsonl> --records N    generate a synthetic warm-start journal of \
+         measured random points (scale tests, codec benchmarks)\n";
     match args.first().map(String::as_str) {
+        Some("synth") => {
+            let cli = Cli::new(
+                "arco journal synth",
+                "generate a synthetic warm-start journal of measured random points",
+            )
+            .opt("records", Some('n'), "distinct records to generate", Some("1000"))
+            .opt("model", Some('m'), "model whose tasks seed the workload shapes", Some("alexnet"))
+            .opt(
+                "backend",
+                None,
+                "backend measuring the points: vta-sim | analytical",
+                Some("analytical"),
+            )
+            .opt("seed", Some('s'), "RNG seed", Some("1"))
+            .flag("verbose", Some('v'), "debug logging")
+            .flag("help", Some('h'), "show help");
+            let a = cli.parse(&args[1..]).map_err(anyhow::Error::msg)?;
+            if a.has_flag("help") {
+                print!("{}", cli.usage());
+                println!("\nusage: arco journal synth <out.jsonl> [--records N]");
+                return Ok(());
+            }
+            if a.has_flag("verbose") {
+                set_level(Level::Debug);
+            }
+            let paths = a.positional();
+            let [out] = paths else {
+                anyhow::bail!(
+                    "journal synth takes exactly one output file: \
+                     arco journal synth <out.jsonl> [--records N]"
+                );
+            };
+            let records = a.get_usize("records").map_err(anyhow::Error::msg)?.unwrap_or(1000);
+            let seed = a.get_usize("seed").map_err(anyhow::Error::msg)?.unwrap_or(1) as u64;
+            let model_name = a.get("model").unwrap();
+            let model = model_by_name(model_name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown model '{model_name}' (known: {})",
+                    model_names().join(", ")
+                )
+            })?;
+            let backend_name = a.get("backend").unwrap();
+            let kind = BackendKind::from_name(backend_name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown backend '{backend_name}' (known: {})",
+                    BackendKind::known_names().join(", ")
+                )
+            })?;
+            let backend = kind.build();
+            let out = PathBuf::from(out);
+            let started = std::time::Instant::now();
+            let mut journal = eval::Journal::open(&out)?;
+            let spaces: Vec<arco::space::ConfigSpace> = model
+                .unique_tasks()
+                .iter()
+                .map(|(t, _)| arco::space::ConfigSpace::for_task(t, true))
+                .collect();
+            let mut rng = arco::util::rng::Pcg32::seeded(seed);
+            let mut added = 0usize;
+            let mut attempts = 0usize;
+            while added < records {
+                attempts += 1;
+                if attempts > records.saturating_mul(20) + 1000 {
+                    anyhow::bail!(
+                        "journal synth: exhausted candidate points after {attempts} attempts \
+                         ({added}/{records} records; the spaces may be too small)"
+                    );
+                }
+                let space = &spaces[attempts % spaces.len()];
+                let p = space.random_point(&mut rng);
+                let key = eval::PointKey::of(space, &p);
+                let m = backend.measure(space, &p);
+                if journal.record(kind.name(), &key, &m) {
+                    added += 1;
+                    // Flush in slabs so a million-record synth holds a
+                    // bounded tail in memory, exactly like a live shard.
+                    if added % 10_000 == 0 {
+                        journal.flush()?;
+                    }
+                }
+            }
+            journal.flush()?;
+            let identities = journal.identities();
+            drop(journal);
+            println!(
+                "journal synth: {}: {added} new record(s) ({identities} identities) across \
+                 {} task(s) via {} in {:.2}s",
+                out.display(),
+                spaces.len(),
+                kind.name(),
+                started.elapsed().as_secs_f64()
+            );
+            Ok(())
+        }
         Some("compact") => {
             let cli = Cli::new(
                 "arco journal compact",

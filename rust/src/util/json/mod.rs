@@ -5,9 +5,17 @@
 //! implementation instead. It supports the full JSON grammar (objects,
 //! arrays, strings with escapes, numbers, bools, null) and preserves object
 //! key insertion order, which keeps emitted reports diffable.
+//!
+//! The grammar itself lives in [`stream`]: a zero-copy pull reader and a
+//! direct-to-`Write` serializer used by the measurement wire protocol and
+//! the journal hot paths. The tree parser here is a thin fold over that
+//! reader, so the crate has exactly one JSON grammar implementation.
+
+pub mod stream;
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::io;
 
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -112,21 +120,107 @@ impl Json {
 
     /// Parse a JSON document.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
-        p.skip_ws();
-        let v = p.value()?;
-        p.skip_ws();
-        if p.pos != p.bytes.len() {
-            return Err(p.err("trailing characters"));
-        }
+        let mut r = stream::Reader::new(text);
+        let v = Json::from_reader(&mut r)?;
+        // A complete top-level value leaves the reader in its end state;
+        // `next()` reports trailing non-space characters as an error.
+        r.next()?;
         Ok(v)
+    }
+
+    /// Build one complete value from a streaming reader positioned at a
+    /// value. Used by `parse` for whole documents and by the wire decoder
+    /// to materialize an embedded subtree (e.g. shard stats) mid-line.
+    ///
+    /// Iterative fold with an explicit frame stack: the reader already
+    /// caps nesting at [`stream::MAX_DEPTH`], and keeping the builder
+    /// non-recursive means hostile input can never exhaust the thread
+    /// stack anywhere in the pipeline.
+    pub fn from_reader(r: &mut stream::Reader<'_>) -> Result<Json, JsonError> {
+        use stream::Token;
+        enum Frame {
+            Arr(Vec<Json>),
+            Obj(Vec<(String, Json)>, Option<String>),
+        }
+        let mut stack: Vec<Frame> = Vec::new();
+        loop {
+            let tok = match r.next()? {
+                Some(t) => t,
+                None => return Err(JsonError { pos: r.pos(), msg: "expected a JSON value".into() }),
+            };
+            let value = match tok {
+                Token::ObjStart => {
+                    stack.push(Frame::Obj(Vec::new(), None));
+                    continue;
+                }
+                Token::ArrStart => {
+                    stack.push(Frame::Arr(Vec::new()));
+                    continue;
+                }
+                Token::Key(k) => {
+                    if let Some(Frame::Obj(_, pending)) = stack.last_mut() {
+                        *pending = Some(k.into_owned());
+                    }
+                    continue;
+                }
+                Token::ObjEnd | Token::ArrEnd => match stack.pop() {
+                    Some(Frame::Obj(fields, _)) => Json::Obj(fields),
+                    Some(Frame::Arr(items)) => Json::Arr(items),
+                    // The reader never emits a closer without its opener.
+                    None => {
+                        return Err(JsonError { pos: r.pos(), msg: "unbalanced close".into() })
+                    }
+                },
+                Token::Str(s) => Json::Str(s.into_owned()),
+                Token::Num(n) => Json::Num(n.as_f64()),
+                Token::Bool(b) => Json::Bool(b),
+                Token::Null => Json::Null,
+            };
+            match stack.last_mut() {
+                None => return Ok(value),
+                Some(Frame::Arr(items)) => items.push(value),
+                Some(Frame::Obj(fields, pending)) => {
+                    // The reader guarantees a key precedes every value.
+                    let key = pending.take().unwrap_or_default();
+                    fields.push((key, value));
+                }
+            }
+        }
     }
 
     /// Serialize compactly.
     pub fn dump(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s, None, 0);
-        s
+        let mut buf = Vec::with_capacity(64);
+        let mut w = stream::StreamWriter::new(&mut buf);
+        self.write_stream(&mut w).expect("writing JSON to a Vec cannot fail");
+        String::from_utf8(buf).expect("serialized JSON is valid UTF-8")
+    }
+
+    /// Serialize compactly into a [`stream::StreamWriter`] — the bridge
+    /// for embedding a tree value (config, stats) inside a streamed frame.
+    /// Byte-identical to `dump()`.
+    pub fn write_stream<W: io::Write>(&self, w: &mut stream::StreamWriter<W>) -> io::Result<()> {
+        match self {
+            Json::Null => w.null_val(),
+            Json::Bool(b) => w.bool_val(*b),
+            Json::Num(x) => w.f64_val(*x),
+            Json::Str(s) => w.str_val(s),
+            Json::Arr(items) => {
+                w.begin_arr()?;
+                for item in items {
+                    item.write_stream(w)?;
+                }
+                w.end_arr()
+            }
+            Json::Obj(fields) => {
+                w.begin_obj()?;
+                for (k, v) in fields {
+                    w.key(k)?;
+                    v.write_stream(w)?;
+                }
+                w.end_obj()
+            }
+        }
     }
 
     /// Serialize with 2-space indentation.
@@ -190,31 +284,15 @@ fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
 }
 
 fn fmt_num(x: f64) -> String {
-    if x.is_finite() && x.fract() == 0.0 && x.abs() < 1e15 {
-        format!("{}", x as i64)
-    } else if x.is_finite() {
-        // Shortest roundtrip representation rust provides.
-        format!("{x}")
-    } else {
-        // JSON has no inf/nan; emit null like most lenient writers.
-        "null".to_string()
-    }
+    let mut buf = Vec::with_capacity(24);
+    stream::write_f64(&mut buf, x).expect("writing a number to a Vec cannot fail");
+    String::from_utf8(buf).expect("formatted numbers are ASCII")
 }
 
 fn write_escaped(out: &mut String, s: &str) {
-    out.push('"');
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out.push('"');
+    let mut buf = Vec::with_capacity(s.len() + 2);
+    stream::write_escaped(&mut buf, s).expect("writing a string to a Vec cannot fail");
+    out.push_str(std::str::from_utf8(&buf).expect("escaped JSON strings are valid UTF-8"));
 }
 
 /// Parse error with byte offset.
@@ -231,214 +309,6 @@ impl fmt::Display for JsonError {
 }
 
 impl std::error::Error for JsonError {}
-
-struct Parser<'a> {
-    bytes: &'a [u8],
-    pos: usize,
-}
-
-impl<'a> Parser<'a> {
-    fn err(&self, msg: &str) -> JsonError {
-        JsonError { pos: self.pos, msg: msg.to_string() }
-    }
-
-    fn peek(&self) -> Option<u8> {
-        self.bytes.get(self.pos).copied()
-    }
-
-    fn bump(&mut self) -> Option<u8> {
-        let b = self.peek();
-        if b.is_some() {
-            self.pos += 1;
-        }
-        b
-    }
-
-    fn skip_ws(&mut self) {
-        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
-            self.pos += 1;
-        }
-    }
-
-    fn expect(&mut self, b: u8) -> Result<(), JsonError> {
-        if self.bump() == Some(b) {
-            Ok(())
-        } else {
-            self.pos = self.pos.saturating_sub(1);
-            Err(self.err(&format!("expected '{}'", b as char)))
-        }
-    }
-
-    fn literal(&mut self, lit: &str, v: Json) -> Result<Json, JsonError> {
-        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
-            self.pos += lit.len();
-            Ok(v)
-        } else {
-            Err(self.err(&format!("expected '{lit}'")))
-        }
-    }
-
-    fn value(&mut self) -> Result<Json, JsonError> {
-        match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
-            Some(b'"') => Ok(Json::Str(self.string()?)),
-            Some(b't') => self.literal("true", Json::Bool(true)),
-            Some(b'f') => self.literal("false", Json::Bool(false)),
-            Some(b'n') => self.literal("null", Json::Null),
-            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            _ => Err(self.err("expected a JSON value")),
-        }
-    }
-
-    fn object(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'{')?;
-        let mut fields = Vec::new();
-        self.skip_ws();
-        if self.peek() == Some(b'}') {
-            self.pos += 1;
-            return Ok(Json::Obj(fields));
-        }
-        loop {
-            self.skip_ws();
-            let key = self.string()?;
-            self.skip_ws();
-            self.expect(b':')?;
-            self.skip_ws();
-            let val = self.value()?;
-            fields.push((key, val));
-            self.skip_ws();
-            match self.bump() {
-                Some(b',') => continue,
-                Some(b'}') => return Ok(Json::Obj(fields)),
-                _ => {
-                    self.pos = self.pos.saturating_sub(1);
-                    return Err(self.err("expected ',' or '}'"));
-                }
-            }
-        }
-    }
-
-    fn array(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'[')?;
-        let mut items = Vec::new();
-        self.skip_ws();
-        if self.peek() == Some(b']') {
-            self.pos += 1;
-            return Ok(Json::Arr(items));
-        }
-        loop {
-            self.skip_ws();
-            items.push(self.value()?);
-            self.skip_ws();
-            match self.bump() {
-                Some(b',') => continue,
-                Some(b']') => return Ok(Json::Arr(items)),
-                _ => {
-                    self.pos = self.pos.saturating_sub(1);
-                    return Err(self.err("expected ',' or ']'"));
-                }
-            }
-        }
-    }
-
-    fn string(&mut self) -> Result<String, JsonError> {
-        self.expect(b'"')?;
-        let mut s = String::new();
-        loop {
-            match self.bump() {
-                None => return Err(self.err("unterminated string")),
-                Some(b'"') => return Ok(s),
-                Some(b'\\') => match self.bump() {
-                    Some(b'"') => s.push('"'),
-                    Some(b'\\') => s.push('\\'),
-                    Some(b'/') => s.push('/'),
-                    Some(b'b') => s.push('\u{8}'),
-                    Some(b'f') => s.push('\u{c}'),
-                    Some(b'n') => s.push('\n'),
-                    Some(b'r') => s.push('\r'),
-                    Some(b't') => s.push('\t'),
-                    Some(b'u') => {
-                        let cp = self.hex4()?;
-                        // Handle surrogate pairs.
-                        let c = if (0xD800..0xDC00).contains(&cp) {
-                            if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
-                                return Err(self.err("unpaired surrogate"));
-                            }
-                            let lo = self.hex4()?;
-                            if !(0xDC00..0xE000).contains(&lo) {
-                                return Err(self.err("invalid low surrogate"));
-                            }
-                            let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
-                            char::from_u32(c).ok_or_else(|| self.err("invalid codepoint"))?
-                        } else {
-                            char::from_u32(cp).ok_or_else(|| self.err("invalid codepoint"))?
-                        };
-                        s.push(c);
-                    }
-                    _ => return Err(self.err("bad escape")),
-                },
-                Some(b) if b < 0x80 => s.push(b as char),
-                Some(b) => {
-                    // Multi-byte UTF-8: copy the remaining continuation bytes.
-                    let len = if b >= 0xF0 {
-                        4
-                    } else if b >= 0xE0 {
-                        3
-                    } else {
-                        2
-                    };
-                    let start = self.pos - 1;
-                    let end = start + len;
-                    if end > self.bytes.len() {
-                        return Err(self.err("truncated utf-8"));
-                    }
-                    let chunk = std::str::from_utf8(&self.bytes[start..end])
-                        .map_err(|_| self.err("invalid utf-8"))?;
-                    s.push_str(chunk);
-                    self.pos = end;
-                }
-            }
-        }
-    }
-
-    fn hex4(&mut self) -> Result<u32, JsonError> {
-        let mut v = 0u32;
-        for _ in 0..4 {
-            let b = self.bump().ok_or_else(|| self.err("truncated \\u escape"))?;
-            let d = (b as char).to_digit(16).ok_or_else(|| self.err("bad hex digit"))?;
-            v = v * 16 + d;
-        }
-        Ok(v)
-    }
-
-    fn number(&mut self) -> Result<Json, JsonError> {
-        let start = self.pos;
-        if self.peek() == Some(b'-') {
-            self.pos += 1;
-        }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-            self.pos += 1;
-        }
-        if self.peek() == Some(b'.') {
-            self.pos += 1;
-            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-                self.pos += 1;
-            }
-        }
-        if matches!(self.peek(), Some(b'e' | b'E')) {
-            self.pos += 1;
-            if matches!(self.peek(), Some(b'+' | b'-')) {
-                self.pos += 1;
-            }
-            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-                self.pos += 1;
-            }
-        }
-        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
-        text.parse::<f64>().map(Json::Num).map_err(|_| self.err("bad number"))
-    }
-}
 
 /// Parse a JSON file from disk.
 pub fn read_json_file(path: &std::path::Path) -> anyhow::Result<Json> {

@@ -1,0 +1,801 @@
+//! Zero-copy streaming JSON reader and direct-to-`Write` serializer.
+//!
+//! The tree API in the parent module builds a `Json` value for every
+//! document, which is the right shape for configs and reports but a tax on
+//! the measurement hot paths: the wire protocol and the journal mostly
+//! *route* records (dedup on identity, forward bytes) without inspecting
+//! every field. This module provides the allocation-light alternative both
+//! are built on:
+//!
+//! - [`Reader`]: a pull-style tokenizer over a borrowed `&str`. Strings
+//!   that contain no escapes are returned as `Cow::Borrowed` slices of the
+//!   input; only escaped strings allocate. Parsing is iterative with an
+//!   explicit container stack (capped at [`MAX_DEPTH`]), so adversarially
+//!   deep documents fail with an error instead of overflowing the thread
+//!   stack — these parsers face untrusted network input.
+//! - [`Reader::skip_value`]: lazy field extraction — skip a whole subtree
+//!   without materializing it, so a journal line can yield just its
+//!   `(backend, task, knobs)` identity.
+//! - [`StreamWriter`]: a push serializer writing straight into any
+//!   `io::Write` (socket buffer, `Vec<u8>`), managing commas and colons.
+//!   Its output is byte-identical to `Json::dump()` for the same value,
+//!   which is what keeps new journals hash-compatible with old ones.
+//! - [`Num`]: numbers are handed out as raw slices and converted lazily,
+//!   so integers up to the full `u64`/`i64` range round-trip exactly
+//!   (the `f64` tree representation silently corrupts integers > 2^53).
+//!
+//! The tree parser in the parent module is itself implemented on this
+//! reader, so there is exactly one grammar implementation in the crate.
+
+use std::borrow::Cow;
+use std::io::{self, Write};
+
+use super::JsonError;
+
+/// Container nesting limit for the reader. Deeper input is a parse error,
+/// never a stack overflow: the reader holds its state on the heap.
+pub const MAX_DEPTH: usize = 512;
+
+/// A JSON number, kept as the raw input slice and converted on demand.
+///
+/// Deferring conversion is both the zero-copy win (most journal fields are
+/// skipped, not read) and the integer-fidelity fix: a pure-digit slice is
+/// parsed directly as `u64`/`i64`, bypassing the lossy `f64` detour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Num<'a> {
+    raw: &'a str,
+}
+
+impl<'a> Num<'a> {
+    /// The raw number text exactly as it appeared in the input.
+    pub fn raw(&self) -> &'a str {
+        self.raw
+    }
+
+    pub fn as_f64(&self) -> f64 {
+        self.raw.parse().unwrap_or(f64::NAN)
+    }
+
+    /// Lossless for every `u64`, including values above 2^53; falls back
+    /// to the `f64` interpretation for `1e3`-style spellings.
+    pub fn as_u64(&self) -> Option<u64> {
+        if let Ok(v) = self.raw.parse::<u64>() {
+            return Some(v);
+        }
+        let x = self.as_f64();
+        if x.is_finite() && x >= 0.0 && x.fract() == 0.0 && x < 18446744073709551616.0 {
+            Some(x as u64)
+        } else {
+            None
+        }
+    }
+
+    /// Lossless for every `i64`; falls back to the `f64` interpretation.
+    pub fn as_i64(&self) -> Option<i64> {
+        if let Ok(v) = self.raw.parse::<i64>() {
+            return Some(v);
+        }
+        let x = self.as_f64();
+        if x.is_finite()
+            && x.fract() == 0.0
+            && x >= -9223372036854775808.0
+            && x < 9223372036854775808.0
+        {
+            Some(x as i64)
+        } else {
+            None
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().and_then(|v| usize::try_from(v).ok())
+    }
+}
+
+/// One parse event from [`Reader::next`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Token<'a> {
+    ObjStart,
+    ObjEnd,
+    ArrStart,
+    ArrEnd,
+    /// An object key; the reader has already consumed the `:`.
+    Key(Cow<'a, str>),
+    Str(Cow<'a, str>),
+    Num(Num<'a>),
+    Bool(bool),
+    Null,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum St {
+    /// Expecting a value (top level, after a key, or after `,` in an array).
+    Value,
+    /// Just opened an array: an element or `]`.
+    ElemOrEnd,
+    /// Just opened an object: a key or `}`.
+    FirstKey,
+    /// After `,` in an object: a key.
+    NextKey,
+    /// After a value inside a container: `,` or the closer.
+    PostValue,
+    /// Top-level value complete; only whitespace may remain.
+    Done,
+}
+
+/// Pull-style JSON tokenizer over a borrowed string.
+pub struct Reader<'a> {
+    text: &'a str,
+    bytes: &'a [u8],
+    pos: usize,
+    /// Open containers, `true` = object.
+    stack: Vec<bool>,
+    state: St,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(text: &'a str) -> Self {
+        Reader { text, bytes: text.as_bytes(), pos: 0, stack: Vec::new(), state: St::Value }
+    }
+
+    /// Byte offset of the read head (for error reporting).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Current container nesting depth.
+    pub fn depth(&self) -> usize {
+        self.stack.len()
+    }
+
+    /// True when nothing but whitespace remains after a complete value.
+    pub fn at_end(&mut self) -> bool {
+        self.skip_ws();
+        self.state == St::Done && self.pos == self.bytes.len()
+    }
+
+    /// Next token, `Ok(None)` at clean end of input. Trailing non-space
+    /// characters after the top-level value are an error.
+    pub fn next(&mut self) -> Result<Option<Token<'a>>, JsonError> {
+        loop {
+            self.skip_ws();
+            match self.state {
+                St::Done => {
+                    return if self.pos == self.bytes.len() {
+                        Ok(None)
+                    } else {
+                        Err(self.err("trailing characters"))
+                    };
+                }
+                St::Value => return self.value_token().map(Some),
+                St::ElemOrEnd => {
+                    if self.peek() == Some(b']') {
+                        self.pos += 1;
+                        return self.close().map(Some);
+                    }
+                    self.state = St::Value;
+                }
+                St::FirstKey => {
+                    if self.peek() == Some(b'}') {
+                        self.pos += 1;
+                        return self.close().map(Some);
+                    }
+                    return self.key_token().map(Some);
+                }
+                St::NextKey => return self.key_token().map(Some),
+                St::PostValue => match (self.stack.last().copied(), self.peek()) {
+                    (Some(true), Some(b',')) => {
+                        self.pos += 1;
+                        self.state = St::NextKey;
+                    }
+                    (Some(true), Some(b'}')) => {
+                        self.pos += 1;
+                        return self.close().map(Some);
+                    }
+                    (Some(true), _) => return Err(self.err("expected ',' or '}'")),
+                    (Some(false), Some(b',')) => {
+                        self.pos += 1;
+                        self.state = St::Value;
+                    }
+                    (Some(false), Some(b']')) => {
+                        self.pos += 1;
+                        return self.close().map(Some);
+                    }
+                    (Some(false), _) => return Err(self.err("expected ',' or ']'")),
+                    (None, _) => return Err(self.err("trailing characters")),
+                },
+            }
+        }
+    }
+
+    /// `next()` flattened to an `Option` for hot-path parsers that treat
+    /// any malformation as "not a record".
+    pub fn next_token(&mut self) -> Option<Token<'a>> {
+        self.next().ok().flatten()
+    }
+
+    /// Consume exactly one complete value (scalar or whole subtree)
+    /// without materializing it. Must be called in value position, i.e.
+    /// right after a [`Token::Key`] or between array elements.
+    pub fn skip_value(&mut self) -> Result<(), JsonError> {
+        let base = self.stack.len();
+        match self.next()? {
+            None => Err(self.err("expected a JSON value")),
+            Some(Token::ObjEnd | Token::ArrEnd) => Err(self.err("expected a JSON value")),
+            Some(Token::Key(_)) => self.skip_value(),
+            Some(Token::ObjStart | Token::ArrStart) => self.skip_to_depth(base),
+            Some(_) => Ok(()),
+        }
+    }
+
+    /// Drain tokens until the container nesting returns to `base` — the
+    /// complement of [`Self::skip_value`] when an opener has already been
+    /// consumed.
+    pub fn skip_to_depth(&mut self, base: usize) -> Result<(), JsonError> {
+        while self.stack.len() > base {
+            if self.next()?.is_none() {
+                return Err(self.err("unterminated container"));
+            }
+        }
+        Ok(())
+    }
+
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError { pos: self.pos, msg: msg.to_string() }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek();
+        if b.is_some() {
+            self.pos += 1;
+        }
+        b
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn push(&mut self, is_obj: bool) -> Result<(), JsonError> {
+        if self.stack.len() >= MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        self.stack.push(is_obj);
+        Ok(())
+    }
+
+    /// A container just closed: pop it and emit the matching end token.
+    fn close(&mut self) -> Result<Token<'a>, JsonError> {
+        let was_obj = self.stack.pop().unwrap_or(false);
+        self.after_value();
+        Ok(if was_obj { Token::ObjEnd } else { Token::ArrEnd })
+    }
+
+    fn after_value(&mut self) {
+        self.state = if self.stack.is_empty() { St::Done } else { St::PostValue };
+    }
+
+    fn value_token(&mut self) -> Result<Token<'a>, JsonError> {
+        match self.peek() {
+            Some(b'{') => {
+                self.pos += 1;
+                self.push(true)?;
+                self.state = St::FirstKey;
+                Ok(Token::ObjStart)
+            }
+            Some(b'[') => {
+                self.pos += 1;
+                self.push(false)?;
+                self.state = St::ElemOrEnd;
+                Ok(Token::ArrStart)
+            }
+            Some(b'"') => {
+                let s = self.string()?;
+                self.after_value();
+                Ok(Token::Str(s))
+            }
+            Some(b't') => {
+                self.literal("true")?;
+                self.after_value();
+                Ok(Token::Bool(true))
+            }
+            Some(b'f') => {
+                self.literal("false")?;
+                self.after_value();
+                Ok(Token::Bool(false))
+            }
+            Some(b'n') => {
+                self.literal("null")?;
+                self.after_value();
+                Ok(Token::Null)
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                let n = self.number()?;
+                self.after_value();
+                Ok(Token::Num(n))
+            }
+            _ => Err(self.err("expected a JSON value")),
+        }
+    }
+
+    fn key_token(&mut self) -> Result<Token<'a>, JsonError> {
+        let k = self.string()?;
+        self.skip_ws();
+        if self.peek() == Some(b':') {
+            self.pos += 1;
+        } else {
+            return Err(self.err("expected ':'"));
+        }
+        self.state = St::Value;
+        Ok(Token::Key(k))
+    }
+
+    fn literal(&mut self, lit: &str) -> Result<(), JsonError> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{lit}'")))
+        }
+    }
+
+    /// Scan a string. The common no-escape case borrows straight from the
+    /// input: the bounds are both at ASCII `"` bytes, so the slice is
+    /// always on a char boundary of the (already valid UTF-8) input.
+    fn string(&mut self) -> Result<Cow<'a, str>, JsonError> {
+        if self.peek() != Some(b'"') {
+            return Err(self.err("expected a string"));
+        }
+        self.pos += 1;
+        let start = self.pos;
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    let end = self.pos;
+                    self.pos += 1;
+                    let s = self
+                        .text
+                        .get(start..end)
+                        .ok_or_else(|| self.err("string not on a char boundary"))?;
+                    return Ok(Cow::Borrowed(s));
+                }
+                Some(b'\\') => {
+                    let prefix = self
+                        .text
+                        .get(start..self.pos)
+                        .ok_or_else(|| self.err("string not on a char boundary"))?;
+                    let mut s = String::with_capacity(prefix.len() + 16);
+                    s.push_str(prefix);
+                    return self.string_owned(s).map(Cow::Owned);
+                }
+                Some(_) => self.pos += 1,
+            }
+        }
+    }
+
+    /// Slow path after the first escape: decode the rest into `s`.
+    fn string_owned(&mut self, mut s: String) -> Result<String, JsonError> {
+        loop {
+            match self.bump() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => return Ok(s),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => s.push('"'),
+                    Some(b'\\') => s.push('\\'),
+                    Some(b'/') => s.push('/'),
+                    Some(b'b') => s.push('\u{8}'),
+                    Some(b'f') => s.push('\u{c}'),
+                    Some(b'n') => s.push('\n'),
+                    Some(b'r') => s.push('\r'),
+                    Some(b't') => s.push('\t'),
+                    Some(b'u') => {
+                        let cp = self.hex4()?;
+                        let c = if (0xD800..0xDC00).contains(&cp) {
+                            if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
+                                return Err(self.err("unpaired surrogate"));
+                            }
+                            let lo = self.hex4()?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                return Err(self.err("invalid low surrogate"));
+                            }
+                            let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                            char::from_u32(c).ok_or_else(|| self.err("invalid codepoint"))?
+                        } else {
+                            char::from_u32(cp).ok_or_else(|| self.err("invalid codepoint"))?
+                        };
+                        s.push(c);
+                    }
+                    _ => return Err(self.err("bad escape")),
+                },
+                Some(b) if b < 0x80 => s.push(b as char),
+                Some(b) => {
+                    // Multi-byte UTF-8: copy the whole sequence through.
+                    let len = if b >= 0xF0 {
+                        4
+                    } else if b >= 0xE0 {
+                        3
+                    } else {
+                        2
+                    };
+                    let start = self.pos - 1;
+                    let end = start + len;
+                    if end > self.bytes.len() {
+                        return Err(self.err("truncated utf-8"));
+                    }
+                    let chunk = std::str::from_utf8(&self.bytes[start..end])
+                        .map_err(|_| self.err("invalid utf-8"))?;
+                    s.push_str(chunk);
+                    self.pos = end;
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let b = self.bump().ok_or_else(|| self.err("truncated \\u escape"))?;
+            let d = (b as char).to_digit(16).ok_or_else(|| self.err("bad hex digit"))?;
+            v = v * 16 + d;
+        }
+        Ok(v)
+    }
+
+    /// Scan a number and validate its shape structurally (the same set of
+    /// spellings Rust's `f64` parser accepts for JSON-scannable text), but
+    /// do NOT convert: [`Num`] converts lazily on demand.
+    fn number(&mut self) -> Result<Num<'a>, JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        let int_digits = self.digits();
+        let mut frac_digits = 0;
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            frac_digits = self.digits();
+        }
+        let mut exp_ok = true;
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            exp_ok = self.digits() > 0;
+        }
+        if int_digits + frac_digits == 0 || !exp_ok {
+            return Err(self.err("bad number"));
+        }
+        let raw = self
+            .text
+            .get(start..self.pos)
+            .ok_or_else(|| self.err("number not on a char boundary"))?;
+        Ok(Num { raw })
+    }
+
+    fn digits(&mut self) -> usize {
+        let start = self.pos;
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        self.pos - start
+    }
+}
+
+/// Format an `f64` exactly like `Json::dump()` does: integral values below
+/// 1e15 as plain integers, other finite values via Rust's shortest
+/// round-trip `Display`, non-finite as `null`.
+pub fn write_f64<W: Write>(w: &mut W, x: f64) -> io::Result<()> {
+    if x.is_finite() && x.fract() == 0.0 && x.abs() < 1e15 {
+        write!(w, "{}", x as i64)
+    } else if x.is_finite() {
+        write!(w, "{x}")
+    } else {
+        w.write_all(b"null")
+    }
+}
+
+/// Write a JSON string literal, escaping exactly like `Json::dump()`:
+/// `" \ \n \r \t` by name, other control bytes as `\u00XX`, everything
+/// else (including multi-byte UTF-8) passed through raw. Unescaped runs
+/// are written in single calls.
+pub fn write_escaped<W: Write>(w: &mut W, s: &str) -> io::Result<()> {
+    w.write_all(b"\"")?;
+    let bytes = s.as_bytes();
+    let mut run = 0usize;
+    for (i, &b) in bytes.iter().enumerate() {
+        if b != b'"' && b != b'\\' && b >= 0x20 {
+            continue;
+        }
+        if run < i {
+            w.write_all(&bytes[run..i])?;
+        }
+        match b {
+            b'"' => w.write_all(b"\\\"")?,
+            b'\\' => w.write_all(b"\\\\")?,
+            b'\n' => w.write_all(b"\\n")?,
+            b'\r' => w.write_all(b"\\r")?,
+            b'\t' => w.write_all(b"\\t")?,
+            _ => write!(w, "\\u{:04x}", b as u32)?,
+        }
+        run = i + 1;
+    }
+    w.write_all(&bytes[run..])?;
+    w.write_all(b"\"")
+}
+
+/// Push-style serializer writing compact JSON straight into an
+/// `io::Write`. Commas and the key/value colon are managed by the writer;
+/// callers just emit structure. Output is byte-identical to
+/// `Json::dump()` of the equivalent tree (modulo the deliberate exception
+/// that `u64_val`/`i64_val` print integers above 2^53 exactly, where the
+/// `f64` tree could not represent them in the first place).
+pub struct StreamWriter<W: Write> {
+    w: W,
+    /// Per open container: has an entry been written yet (comma needed)?
+    stack: Vec<bool>,
+    /// A key was just written; the next value takes no separator.
+    after_key: bool,
+}
+
+impl<W: Write> StreamWriter<W> {
+    pub fn new(w: W) -> Self {
+        StreamWriter { w, stack: Vec::new(), after_key: false }
+    }
+
+    pub fn into_inner(self) -> W {
+        self.w
+    }
+
+    /// The underlying writer, e.g. to append a record separator `\n`.
+    pub fn get_mut(&mut self) -> &mut W {
+        &mut self.w
+    }
+
+    fn sep(&mut self) -> io::Result<()> {
+        if self.after_key {
+            self.after_key = false;
+        } else if let Some(written) = self.stack.last_mut() {
+            if *written {
+                self.w.write_all(b",")?;
+            }
+            *written = true;
+        }
+        Ok(())
+    }
+
+    pub fn begin_obj(&mut self) -> io::Result<()> {
+        self.sep()?;
+        self.stack.push(false);
+        self.w.write_all(b"{")
+    }
+
+    pub fn end_obj(&mut self) -> io::Result<()> {
+        self.stack.pop();
+        self.w.write_all(b"}")
+    }
+
+    pub fn begin_arr(&mut self) -> io::Result<()> {
+        self.sep()?;
+        self.stack.push(false);
+        self.w.write_all(b"[")
+    }
+
+    pub fn end_arr(&mut self) -> io::Result<()> {
+        self.stack.pop();
+        self.w.write_all(b"]")
+    }
+
+    pub fn key(&mut self, k: &str) -> io::Result<()> {
+        self.sep()?;
+        write_escaped(&mut self.w, k)?;
+        self.w.write_all(b":")?;
+        self.after_key = true;
+        Ok(())
+    }
+
+    pub fn str_val(&mut self, s: &str) -> io::Result<()> {
+        self.sep()?;
+        write_escaped(&mut self.w, s)
+    }
+
+    pub fn f64_val(&mut self, x: f64) -> io::Result<()> {
+        self.sep()?;
+        write_f64(&mut self.w, x)
+    }
+
+    /// Exact, full-range integer output (the >2^53 fidelity fix).
+    pub fn u64_val(&mut self, x: u64) -> io::Result<()> {
+        self.sep()?;
+        write!(self.w, "{x}")
+    }
+
+    pub fn i64_val(&mut self, x: i64) -> io::Result<()> {
+        self.sep()?;
+        write!(self.w, "{x}")
+    }
+
+    pub fn usize_val(&mut self, x: usize) -> io::Result<()> {
+        self.u64_val(x as u64)
+    }
+
+    pub fn bool_val(&mut self, b: bool) -> io::Result<()> {
+        self.sep()?;
+        self.w.write_all(if b { b"true" } else { b"false" })
+    }
+
+    pub fn null_val(&mut self) -> io::Result<()> {
+        self.sep()?;
+        self.w.write_all(b"null")
+    }
+
+    /// Splice pre-serialized JSON (e.g. a retained raw journal line) as
+    /// one value. The caller guarantees `raw` is a complete JSON value.
+    pub fn raw_val(&mut self, raw: &str) -> io::Result<()> {
+        self.sep()?;
+        self.w.write_all(raw.as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tokens(text: &str) -> Result<Vec<Token<'_>>, JsonError> {
+        let mut r = Reader::new(text);
+        let mut out = Vec::new();
+        while let Some(t) = r.next()? {
+            out.push(t);
+        }
+        Ok(out)
+    }
+
+    #[test]
+    fn scalar_tokens() {
+        assert_eq!(tokens("null").unwrap(), vec![Token::Null]);
+        assert_eq!(tokens(" true ").unwrap(), vec![Token::Bool(true)]);
+        assert_eq!(tokens("\"hi\"").unwrap(), vec![Token::Str(Cow::Borrowed("hi"))]);
+        let ts = tokens("-12.5e3").unwrap();
+        assert_eq!(ts.len(), 1);
+        match &ts[0] {
+            Token::Num(n) => {
+                assert_eq!(n.raw(), "-12.5e3");
+                assert_eq!(n.as_f64(), -12500.0);
+            }
+            t => panic!("unexpected token {t:?}"),
+        }
+    }
+
+    #[test]
+    fn object_walk_borrows_clean_strings() {
+        let mut r = Reader::new(r#"{"name":"arco","esc":"a\nb","n":7}"#);
+        assert_eq!(r.next().unwrap(), Some(Token::ObjStart));
+        match r.next().unwrap() {
+            Some(Token::Key(Cow::Borrowed(k))) => assert_eq!(k, "name"),
+            t => panic!("key should borrow, got {t:?}"),
+        }
+        match r.next().unwrap() {
+            Some(Token::Str(Cow::Borrowed(s))) => assert_eq!(s, "arco"),
+            t => panic!("clean string should borrow, got {t:?}"),
+        }
+        assert_eq!(r.next().unwrap(), Some(Token::Key(Cow::Borrowed("esc"))));
+        match r.next().unwrap() {
+            Some(Token::Str(Cow::Owned(s))) => assert_eq!(s, "a\nb"),
+            t => panic!("escaped string should own, got {t:?}"),
+        }
+        assert_eq!(r.next().unwrap(), Some(Token::Key(Cow::Borrowed("n"))));
+        match r.next().unwrap() {
+            Some(Token::Num(n)) => assert_eq!(n.as_u64(), Some(7)),
+            t => panic!("unexpected {t:?}"),
+        }
+        assert_eq!(r.next().unwrap(), Some(Token::ObjEnd));
+        assert_eq!(r.next().unwrap(), None);
+        assert!(r.at_end());
+    }
+
+    #[test]
+    fn skip_value_skips_subtrees() {
+        let mut r = Reader::new(r#"{"skip":{"a":[1,2,{"b":null}]},"keep":42}"#);
+        assert_eq!(r.next().unwrap(), Some(Token::ObjStart));
+        assert_eq!(r.next().unwrap(), Some(Token::Key(Cow::Borrowed("skip"))));
+        r.skip_value().unwrap();
+        assert_eq!(r.next().unwrap(), Some(Token::Key(Cow::Borrowed("keep"))));
+        match r.next().unwrap() {
+            Some(Token::Num(n)) => assert_eq!(n.as_u64(), Some(42)),
+            t => panic!("unexpected {t:?}"),
+        }
+        assert_eq!(r.next().unwrap(), Some(Token::ObjEnd));
+        assert_eq!(r.next().unwrap(), None);
+    }
+
+    #[test]
+    fn integers_above_2_53_roundtrip() {
+        let big = (1u64 << 53) + 3;
+        let text = format!("{big}");
+        let mut r = Reader::new(&text);
+        match r.next().unwrap() {
+            Some(Token::Num(n)) => {
+                assert_eq!(n.as_u64(), Some(big));
+                // The f64 interpretation is lossy for the same input.
+                assert_ne!(n.as_f64() as u64, big);
+            }
+            t => panic!("unexpected {t:?}"),
+        }
+        let mut buf = Vec::new();
+        let mut w = StreamWriter::new(&mut buf);
+        w.u64_val(big).unwrap();
+        assert_eq!(String::from_utf8(buf).unwrap(), text);
+    }
+
+    #[test]
+    fn i64_extremes_roundtrip() {
+        for v in [i64::MIN, i64::MAX, -1, 0] {
+            let text = format!("{v}");
+            let mut r = Reader::new(&text);
+            match r.next().unwrap() {
+                Some(Token::Num(n)) => assert_eq!(n.as_i64(), Some(v), "{text}"),
+                t => panic!("unexpected {t:?}"),
+            }
+        }
+        assert_eq!(Num { raw: "18446744073709551615" }.as_u64(), Some(u64::MAX));
+        assert_eq!(Num { raw: "1e3" }.as_u64(), Some(1000));
+        assert_eq!(Num { raw: "1.5" }.as_u64(), None);
+        assert_eq!(Num { raw: "-1" }.as_u64(), None);
+    }
+
+    #[test]
+    fn depth_is_capped_not_fatal() {
+        let text = "[".repeat(MAX_DEPTH + 10);
+        let mut r = Reader::new(&text);
+        let mut res = Ok(());
+        loop {
+            match r.next() {
+                Ok(Some(_)) => continue,
+                Ok(None) => break,
+                Err(e) => {
+                    res = Err(e);
+                    break;
+                }
+            }
+        }
+        let e = res.unwrap_err();
+        assert!(e.msg.contains("nesting too deep"), "{e}");
+    }
+
+    #[test]
+    fn malformed_inputs_error() {
+        for text in ["{", "[1,", "tru", "\"abc", "{\"a\" 1}", "01x", "", "1 2", "{]", "[,1]"] {
+            assert!(tokens(text).is_err(), "{text:?}");
+        }
+    }
+
+    #[test]
+    fn writer_matches_tree_dump() {
+        let mut buf = Vec::new();
+        let mut w = StreamWriter::new(&mut buf);
+        w.begin_obj().unwrap();
+        w.key("a").unwrap();
+        w.begin_arr().unwrap();
+        w.u64_val(1).unwrap();
+        w.f64_val(2.5).unwrap();
+        w.null_val().unwrap();
+        w.end_arr().unwrap();
+        w.key("s").unwrap();
+        w.str_val("x\ny\"z\"").unwrap();
+        w.key("b").unwrap();
+        w.bool_val(false).unwrap();
+        w.key("empty").unwrap();
+        w.begin_obj().unwrap();
+        w.end_obj().unwrap();
+        w.end_obj().unwrap();
+        let got = String::from_utf8(buf).unwrap();
+        assert_eq!(got, r#"{"a":[1,2.5,null],"s":"x\ny\"z\"","b":false,"empty":{}}"#);
+    }
+}

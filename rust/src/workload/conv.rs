@@ -7,7 +7,9 @@
 //! weighted sum of its tasks' runtimes (weight = how many layers share that
 //! shape).
 
+use crate::util::json::stream::{Reader, StreamWriter, Token};
 use crate::util::json::Json;
+use std::io;
 
 /// One convolution workload shape (NCHW).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -123,6 +125,86 @@ impl Conv2dTask {
             kw: v.get_usize("kw")?,
             stride: v.get_usize("stride")?,
             pad: v.get_usize("pad")?,
+        })
+    }
+
+    /// Streaming twin of [`Self::to_json`]`.dump()`: same fields, same
+    /// order, byte-identical output, no intermediate tree.
+    pub fn write_stream<W: io::Write>(&self, w: &mut StreamWriter<W>) -> io::Result<()> {
+        w.begin_obj()?;
+        w.key("n")?;
+        w.usize_val(self.n)?;
+        w.key("ci")?;
+        w.usize_val(self.ci)?;
+        w.key("h")?;
+        w.usize_val(self.h)?;
+        w.key("w")?;
+        w.usize_val(self.w)?;
+        w.key("co")?;
+        w.usize_val(self.co)?;
+        w.key("kh")?;
+        w.usize_val(self.kh)?;
+        w.key("kw")?;
+        w.usize_val(self.kw)?;
+        w.key("stride")?;
+        w.usize_val(self.stride)?;
+        w.key("pad")?;
+        w.usize_val(self.pad)?;
+        w.end_obj()
+    }
+
+    /// Streaming decode in value position: consumes one complete object.
+    /// Field-order-insensitive; unknown fields are skipped lazily.
+    pub fn from_stream(r: &mut Reader<'_>) -> Option<Self> {
+        if !matches!(r.next_token()?, Token::ObjStart) {
+            return None;
+        }
+        let mut n = None;
+        let mut ci = None;
+        let mut h = None;
+        let mut wd = None;
+        let mut co = None;
+        let mut kh = None;
+        let mut kw = None;
+        let mut stride = None;
+        let mut pad = None;
+        loop {
+            match r.next_token()? {
+                Token::ObjEnd => break,
+                Token::Key(k) => {
+                    let slot = match k.as_ref() {
+                        "n" => &mut n,
+                        "ci" => &mut ci,
+                        "h" => &mut h,
+                        "w" => &mut wd,
+                        "co" => &mut co,
+                        "kh" => &mut kh,
+                        "kw" => &mut kw,
+                        "stride" => &mut stride,
+                        "pad" => &mut pad,
+                        _ => {
+                            r.skip_value().ok()?;
+                            continue;
+                        }
+                    };
+                    match r.next_token()? {
+                        Token::Num(v) => *slot = Some(v.as_usize()?),
+                        _ => return None,
+                    }
+                }
+                _ => return None,
+            }
+        }
+        Some(Conv2dTask {
+            n: n?,
+            ci: ci?,
+            h: h?,
+            w: wd?,
+            co: co?,
+            kh: kh?,
+            kw: kw?,
+            stride: stride?,
+            pad: pad?,
         })
     }
 }

@@ -1,0 +1,303 @@
+//! Differential and regression tests for the zero-copy streaming codec.
+//!
+//! The contract under test: the streaming reader/writer and the JSON tree
+//! codec are two implementations of ONE grammar and ONE record schema.
+//! Every record, request and response frame the tree encoder produces must
+//! come out of the streaming encoder byte-for-byte identical (so old
+//! journals hash-match new writer output), and the streaming decoders must
+//! invert the writers exactly. The single sanctioned divergence is integer
+//! fidelity: `cycles` above 2^53 survive the streaming path exactly where
+//! the tree's f64 numbers corrupt them.
+
+use arco::eval::proto::{
+    record_from_line, record_identity_from_line, record_to_json, request_from_line,
+    response_from_line, write_frame, write_record_line, write_request_frame, write_response_frame,
+    Request, Response,
+};
+use arco::eval::{MeasureResult, PointKey};
+use arco::prop_assert;
+use arco::space::ConfigSpace;
+use arco::util::json::stream::{Reader, StreamWriter, Token};
+use arco::util::json::Json;
+use arco::util::prop::check;
+use arco::util::rng::Pcg32;
+use arco::workload::Conv2dTask;
+
+fn space() -> ConfigSpace {
+    ConfigSpace::for_task(&Conv2dTask::new(1, 32, 28, 28, 32, 3, 3, 1, 1), true)
+}
+
+/// A measurement with tree-exact numbers (`cycles` kept below 2^53 so the
+/// byte-identity comparison against the f64 tree encoding is fair).
+fn random_result(rng: &mut Pcg32, valid: bool) -> MeasureResult {
+    if valid {
+        MeasureResult {
+            seconds: (rng.gen_range(1_000_000) as f64 + 1.0) * 1e-9,
+            cycles: rng.next_u64() >> 12,
+            gflops: rng.gen_f64() * 100.0,
+            area_mm2: rng.gen_f64() * 10.0,
+            occupancy: rng.gen_f64(),
+            valid: true,
+        }
+    } else {
+        MeasureResult {
+            seconds: f64::INFINITY,
+            cycles: 0,
+            gflops: 0.0,
+            area_mm2: 0.0,
+            occupancy: 0.0,
+            valid: false,
+        }
+    }
+}
+
+/// Random bounded-depth JSON documents: every scalar kind, strings with
+/// and without escapes, finite numbers in several spellings.
+fn gen_json(rng: &mut Pcg32, depth: usize) -> Json {
+    let pick = if depth == 0 { rng.gen_range(4) } else { rng.gen_range(6) };
+    match pick {
+        0 => Json::Null,
+        1 => Json::Bool(rng.gen_bool(0.5)),
+        2 => match rng.gen_range(3) {
+            0 => Json::num(rng.gen_range(1_000_000) as f64),
+            1 => Json::num(-(rng.gen_range(1_000) as f64) - 0.5),
+            _ => Json::num(rng.gen_f64() * 1e9),
+        },
+        3 => Json::str(gen_string(rng)),
+        4 => Json::Arr((0..rng.gen_range(4)).map(|_| gen_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.gen_range(4)).map(|_| (gen_string(rng), gen_json(rng, depth - 1))).collect(),
+        ),
+    }
+}
+
+fn gen_string(rng: &mut Pcg32) -> String {
+    let pool: [&str; 8] = [
+        "plain",
+        "with space",
+        "q\"uote",
+        "back\\slash",
+        "tab\tand\nnewline",
+        "ünïcodé 😀",
+        "\u{1}control\u{1f}",
+        "",
+    ];
+    (*rng.choose(&pool)).to_string()
+}
+
+#[test]
+fn generated_documents_roundtrip_compact_and_pretty() {
+    check(
+        "json-roundtrip",
+        0xC0DEC,
+        300,
+        |rng| gen_json(rng, 3),
+        |v| {
+            let dump = v.dump();
+            let back = Json::parse(&dump).map_err(|e| format!("reparse of {dump}: {e}"))?;
+            prop_assert!(back == *v, "dump/parse drifted for {dump}");
+            let pretty = v.pretty();
+            let back = Json::parse(&pretty).map_err(|e| format!("pretty reparse: {e}"))?;
+            prop_assert!(back == *v, "pretty/parse drifted for {dump}");
+            // The streaming reader must skip any document it can parse,
+            // landing exactly at the end of input.
+            let mut r = Reader::new(&dump);
+            r.skip_value().map_err(|e| format!("skip_value on {dump}: {e}"))?;
+            prop_assert!(r.at_end(), "skip_value left input behind in {dump}");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn tricky_documents_pin_the_grammar() {
+    // (input, canonical dump) pairs pin escape decoding, surrogate pairs,
+    // number spellings and nesting — the cases where a second grammar
+    // implementation would quietly drift.
+    let cases: [(&str, &str); 8] = [
+        (r#"{"a":1,"b":[true,false,null]}"#, r#"{"a":1,"b":[true,false,null]}"#),
+        ("  [ 1 , 2.5 , -3e2 ]  ", "[1,2.5,-300]"),
+        (r#""\u0041\u00e9\ud83d\ude00""#, "\"Aé😀\""),
+        ("\"tab\\tnewline\\n\"", "\"tab\\tnewline\\n\""),
+        ("1e3", "1000"),
+        ("0.5", "0.5"),
+        (r#"{"nested":{"deep":[[[]]]}}"#, r#"{"nested":{"deep":[[[]]]}}"#),
+        ("-0.25e1", "-2.5"),
+    ];
+    for (input, want) in cases {
+        let v = Json::parse(input).unwrap_or_else(|e| panic!("{input}: {e}"));
+        assert_eq!(v.dump(), want, "input {input}");
+    }
+    let rejects = [
+        "",
+        "{",
+        "[1,",
+        "tru",
+        "{\"a\" 1}",
+        "1 2",
+        "{]",
+        "[,1]",
+        "\"\\ud800\"",
+        "\"\\q\"",
+    ];
+    for bad in rejects {
+        assert!(Json::parse(bad).is_err(), "should reject {bad:?}");
+    }
+}
+
+#[test]
+fn record_lines_match_the_tree_encoding_byte_for_byte() {
+    let s = space();
+    check(
+        "record-line-identity",
+        7,
+        150,
+        |rng| {
+            let p = s.random_point(rng);
+            let key = PointKey::of(&s, &p);
+            let backend = if rng.gen_bool(0.5) { "vta-sim" } else { "analytical" };
+            let valid = rng.gen_bool(0.8);
+            (backend, key, random_result(rng, valid))
+        },
+        |(backend, key, result)| {
+            let mut buf = Vec::new();
+            write_record_line(&mut buf, backend, key, result).unwrap();
+            let mut tree = record_to_json(backend, key, result).dump();
+            tree.push('\n');
+            prop_assert!(
+                buf == tree.as_bytes(),
+                "streaming line != tree line:\n  stream: {}\n  tree:   {tree}",
+                String::from_utf8_lossy(&buf)
+            );
+            // The streaming decoders invert the writer.
+            let line = std::str::from_utf8(&buf).unwrap().trim_end_matches('\n');
+            let (b2, k2, r2) = record_from_line(line)
+                .ok_or_else(|| "record_from_line rejected its own writer".to_string())?;
+            prop_assert!(b2 == *backend && k2 == *key, "record identity drifted");
+            prop_assert!(r2 == *result, "record payload drifted: {r2:?} vs {result:?}");
+            let (b3, k3) = record_identity_from_line(line)
+                .ok_or_else(|| "lazy identity decode failed".to_string())?;
+            prop_assert!(b3 == *backend && k3 == *key, "lazy identity drifted");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn wire_frames_match_the_tree_encoding_byte_for_byte() {
+    let s = space();
+    let mut rng = Pcg32::seeded(11);
+    let points: Vec<Vec<usize>> =
+        (0..64).map(|_| PointKey::of(&s, &s.random_point(&mut rng)).values).collect();
+    let req = Request::Measure { task: s.task, points };
+    let mut stream_buf = Vec::new();
+    write_request_frame(&mut stream_buf, &req).unwrap();
+    let mut tree_buf = Vec::new();
+    write_frame(&mut tree_buf, &req.to_json()).unwrap();
+    assert_eq!(stream_buf, tree_buf, "measure request frame drifted");
+    let line = std::str::from_utf8(&stream_buf).unwrap().trim_end_matches('\n');
+    assert_eq!(request_from_line(line), Some(req), "request decode must invert the writer");
+
+    let results: Vec<MeasureResult> = (0..64)
+        .map(|i| {
+            let valid = i % 7 != 0;
+            random_result(&mut rng, valid)
+        })
+        .collect();
+    let fresh: Vec<bool> = (0..64).map(|i| i % 3 != 0).collect();
+    for active_batches in [None, Some(5)] {
+        let resp = Response::Results {
+            results: results.clone(),
+            fresh: fresh.clone(),
+            active_batches,
+        };
+        let mut stream_buf = Vec::new();
+        write_response_frame(&mut stream_buf, &resp).unwrap();
+        let mut tree_buf = Vec::new();
+        write_frame(&mut tree_buf, &resp.to_json()).unwrap();
+        assert_eq!(stream_buf, tree_buf, "results response frame drifted");
+        let line = std::str::from_utf8(&stream_buf).unwrap().trim_end_matches('\n');
+        assert_eq!(
+            response_from_line(line),
+            Some(resp),
+            "response decode must invert the writer"
+        );
+    }
+}
+
+#[test]
+fn non_hot_frames_still_roundtrip_through_the_line_decoders() {
+    // Ping / stats / error frames take the tree fallback inside the
+    // streaming entry points; they must keep working unchanged.
+    for req in [Request::Ping, Request::Stats] {
+        let mut buf = Vec::new();
+        write_request_frame(&mut buf, &req).unwrap();
+        let line = std::str::from_utf8(&buf).unwrap().trim_end_matches('\n');
+        assert_eq!(request_from_line(line), Some(req));
+    }
+    let err = Response::Error("unintelligible request".to_string());
+    let mut buf = Vec::new();
+    write_response_frame(&mut buf, &err).unwrap();
+    let line = std::str::from_utf8(&buf).unwrap().trim_end_matches('\n');
+    assert_eq!(response_from_line(line), Some(err));
+    // Field order must not matter to the strict decoders.
+    let reordered = r#"{"results":[],"ok":true,"fresh":[]}"#;
+    assert_eq!(
+        response_from_line(reordered),
+        Some(Response::Results { results: vec![], fresh: vec![], active_batches: None })
+    );
+    // Junk is rejected by both decode paths.
+    assert_eq!(request_from_line("{\"op\":\"measure\",\"task\":"), None);
+    assert_eq!(response_from_line("not json"), None);
+}
+
+#[test]
+fn cycle_counts_above_2_53_survive_the_streaming_codec() {
+    let s = space();
+    let mut rng = Pcg32::seeded(3);
+    let key = PointKey::of(&s, &s.random_point(&mut rng));
+    let big = (1u64 << 53) + 3; // not representable as f64
+    let r = MeasureResult {
+        seconds: 1.5e-3,
+        cycles: big,
+        gflops: 1.0,
+        area_mm2: 2.0,
+        occupancy: 0.5,
+        valid: true,
+    };
+    let mut buf = Vec::new();
+    write_record_line(&mut buf, "vta-sim", &key, &r).unwrap();
+    let line = std::str::from_utf8(&buf).unwrap().trim_end_matches('\n');
+    let (_, _, back) = record_from_line(line).unwrap();
+    assert_eq!(back.cycles, big, "u64 cycles must survive the streaming path exactly");
+    // The legacy tree path really is lossy here — the corruption the
+    // streaming codec exists to fix.
+    let tree_line = record_to_json("vta-sim", &key, &r).dump();
+    let (_, _, tree_back) = record_from_line(&tree_line).unwrap();
+    assert_ne!(tree_back.cycles, big, "sanity: the f64 tree encoding rounds 2^53+3");
+    assert_eq!(tree_back.cycles, (big as f64) as u64);
+}
+
+#[test]
+fn u64_and_i64_values_roundtrip_exactly_through_writer_and_reader() {
+    for v in [0u64, 1, (1 << 53) - 1, 1 << 53, (1 << 53) + 1, u64::MAX - 1, u64::MAX] {
+        let mut buf = Vec::new();
+        StreamWriter::new(&mut buf).u64_val(v).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let mut r = Reader::new(&text);
+        match r.next_token() {
+            Some(Token::Num(n)) => assert_eq!(n.as_u64(), Some(v), "u64 {v} via {text}"),
+            t => panic!("unexpected token {t:?} for u64 {v}"),
+        }
+    }
+    for v in [i64::MIN, i64::MIN + 1, -1i64, 0, 1, i64::MAX - 1, i64::MAX] {
+        let mut buf = Vec::new();
+        StreamWriter::new(&mut buf).i64_val(v).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let mut r = Reader::new(&text);
+        match r.next_token() {
+            Some(Token::Num(n)) => assert_eq!(n.as_i64(), Some(v), "i64 {v} via {text}"),
+            t => panic!("unexpected token {t:?} for i64 {v}"),
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! Fuzz-corpus replay for the wire and journal decoders.
+//!
+//! Not a coverage-guided fuzzer (no harness in-tree), but the next best
+//! thing that runs under plain `cargo test`: a seed corpus of real record
+//! lines, wire frames and hand-picked pathological documents, expanded by
+//! a deterministic mutation engine (truncation, byte flips, splices,
+//! insertions). Every mutant is fed to every decoder entry point. Passing
+//! means: no panic, no stack overflow — decoders may reject (`None`/`Err`)
+//! but must never die, because one torn journal line or malicious peer
+//! must not take down a shard.
+
+use arco::eval::proto::{
+    record_from_line, record_identity_from_line, record_to_json, request_from_line,
+    response_from_line, write_record_line, write_request_frame, write_response_frame, Request,
+    Response,
+};
+use arco::eval::{MeasureResult, PointKey};
+use arco::space::ConfigSpace;
+use arco::util::json::stream::Reader;
+use arco::util::json::Json;
+use arco::util::rng::Pcg32;
+use arco::workload::Conv2dTask;
+
+/// Real journal lines + wire frames: the corpus the decoders must accept,
+/// and the raw material mutations start from.
+fn seed_corpus() -> Vec<String> {
+    let space = ConfigSpace::for_task(&Conv2dTask::new(1, 16, 14, 14, 64, 3, 3, 1, 1), true);
+    let mut rng = Pcg32::seeded(0xF0);
+    let mut corpus = Vec::new();
+    for i in 0..8 {
+        let key = PointKey::of(&space, &space.random_point(&mut rng));
+        let valid = i % 3 != 0;
+        let result = MeasureResult {
+            seconds: if valid { 1.25e-3 * (i + 1) as f64 } else { f64::INFINITY },
+            cycles: if valid { rng.next_u64() } else { 0 },
+            gflops: 42.5,
+            area_mm2: 3.25,
+            occupancy: 0.75,
+            valid,
+        };
+        let mut buf = Vec::new();
+        write_record_line(&mut buf, "vta-sim", &key, &result).unwrap();
+        corpus.push(String::from_utf8(buf).unwrap().trim_end().to_string());
+        // The tree spelling of the same record is equally load-bearing.
+        corpus.push(record_to_json("analytical", &key, &result).dump());
+    }
+    let points: Vec<Vec<usize>> =
+        (0..4).map(|_| PointKey::of(&space, &space.random_point(&mut rng)).values).collect();
+    let mut buf = Vec::new();
+    write_request_frame(&mut buf, &Request::Measure { task: space.task, points }).unwrap();
+    corpus.push(String::from_utf8(buf).unwrap().trim_end().to_string());
+    for req in [Request::Ping, Request::Stats] {
+        let mut buf = Vec::new();
+        write_request_frame(&mut buf, &req).unwrap();
+        corpus.push(String::from_utf8(buf).unwrap().trim_end().to_string());
+    }
+    let resp = Response::Results {
+        results: vec![MeasureResult {
+            seconds: 0.5,
+            cycles: (1 << 60) + 7,
+            gflops: 1.0,
+            area_mm2: 1.0,
+            occupancy: 1.0,
+            valid: true,
+        }],
+        fresh: vec![true],
+        active_batches: Some(2),
+    };
+    let mut buf = Vec::new();
+    write_response_frame(&mut buf, &resp).unwrap();
+    corpus.push(String::from_utf8(buf).unwrap().trim_end().to_string());
+    // Journal header line.
+    corpus.push(r#"{"format":"arco-journal","version":2,"fingerprint":"abc123"}"#.to_string());
+    // Pathological hand-picked seeds: broken escapes, lone surrogates,
+    // absurd exponents, wrong types in right places, torn tails.
+    for s in [
+        r#"{"backend":"vta-sim","task":"#,
+        r#"{"backend":123,"task":{},"values":[],"valid":true}"#,
+        r#""\ud800""#,
+        r#""\udc00\ud800""#,
+        r#""\u12"#,
+        r#""\x41""#,
+        "1e999",
+        "-1e-999",
+        "00",
+        "[1,2,",
+        "{\"a\":}",
+        "nul",
+        "\u{0}\u{1}\u{2}",
+        r#"{"ok":true,"results":[{"valid":true,"seconds":"fast"}],"fresh":[true]}"#,
+        r#"{"op":"measure","task":{"n":-1},"points":[[0]]}"#,
+    ] {
+        corpus.push(s.to_string());
+    }
+    corpus
+}
+
+/// Everything a peer or a journal file can reach, called on one input.
+/// The only acceptable outcomes are a value or a rejection.
+fn exercise(input: &str) {
+    let _ = record_from_line(input);
+    let _ = record_identity_from_line(input);
+    let _ = request_from_line(input);
+    let _ = response_from_line(input);
+    if let Ok(v) = Json::parse(input) {
+        // Round-trip fixpoint: anything we accept must re-serialize to a
+        // form we accept again, identically.
+        let dump = v.dump();
+        let again = Json::parse(&dump).expect("re-parse of our own dump failed");
+        assert_eq!(again.dump(), dump, "dump is not a fixpoint for {input:?}");
+    }
+    // Raw token stream, to the bitter end.
+    let mut r = Reader::new(input);
+    while let Ok(Some(_)) = r.next() {}
+}
+
+fn mutate(line: &str, rng: &mut Pcg32) -> String {
+    let mut bytes = line.as_bytes().to_vec();
+    match rng.gen_range(5) {
+        // Torn line: the crash-mid-append case the journal must survive.
+        0 => {
+            let cut = rng.gen_range(bytes.len().max(1));
+            bytes.truncate(cut);
+        }
+        // Bit flip anywhere, including into invalid UTF-8.
+        1 => {
+            if !bytes.is_empty() {
+                let i = rng.gen_range(bytes.len());
+                bytes[i] ^= 1 << rng.gen_range(8);
+            }
+        }
+        // Splice two prefixes/suffixes of itself.
+        2 => {
+            let a = rng.gen_range(bytes.len().max(1));
+            let b = rng.gen_range(bytes.len().max(1));
+            let mut out = bytes[..a].to_vec();
+            out.extend_from_slice(&bytes[b..]);
+            bytes = out;
+        }
+        // Insert structural noise.
+        3 => {
+            const NOISE: [&[u8]; 6] = [b"{", b"]", b"\\u", b"\"", b",,", b"\xff\xfe"];
+            let i = rng.gen_range(bytes.len() + 1);
+            bytes.splice(i..i, NOISE[rng.gen_range(6)].iter().copied());
+        }
+        // Duplicate the whole line (two values on one line is invalid).
+        _ => {
+            let dup = bytes.clone();
+            bytes.extend_from_slice(&dup);
+        }
+    }
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[test]
+fn decoders_never_panic_on_corpus_or_mutants() {
+    let corpus = seed_corpus();
+    for line in &corpus {
+        exercise(line);
+    }
+    let mut rng = Pcg32::seeded(0xFACADE);
+    for round in 0..400 {
+        let base = &corpus[round % corpus.len()];
+        let mut mutant = base.clone();
+        for _ in 0..=rng.gen_range(3) {
+            mutant = mutate(&mutant, &mut rng);
+        }
+        exercise(&mutant);
+    }
+}
+
+#[test]
+fn deep_nesting_is_an_error_not_a_stack_overflow() {
+    let deep_arr = "[".repeat(100_000);
+    assert!(Json::parse(&deep_arr).is_err());
+    let deep_obj = "{\"a\":".repeat(100_000);
+    assert!(Json::parse(&deep_obj).is_err());
+    // The depth guard must also cover the skipping path used by lazy
+    // journal identity extraction.
+    let mut r = Reader::new(&deep_arr);
+    assert!(r.skip_value().is_err());
+    let buried = format!("{}{}{}", "[".repeat(600), "1", "]".repeat(600));
+    assert!(Json::parse(&buried).is_err(), "over MAX_DEPTH must reject, not recurse");
+    let shallow = format!("{}{}{}", "[".repeat(100), "1", "]".repeat(100));
+    assert!(Json::parse(&shallow).is_ok());
+}
+
+#[test]
+fn valid_lines_keep_decoding_after_hostile_neighbours() {
+    // A decoder must be stateless across lines: hostile input on one line
+    // cannot poison the next (each line gets a fresh Reader, but this
+    // pins the contract).
+    let corpus = seed_corpus();
+    let good = &corpus[0];
+    let (b1, k1) = record_identity_from_line(good).expect("seed line must decode");
+    exercise("\u{0}\u{feff}{{{{{{{{");
+    exercise(r#""\ud800\ud800\ud800"#);
+    let (b2, k2) = record_identity_from_line(good).expect("seed line must still decode");
+    assert_eq!(b1, b2);
+    assert_eq!(k1, k2);
+}

@@ -157,6 +157,45 @@ smoke_warm_start() {
     echo "warm start ok: merge -> warm-start replays the run from cache"
 }
 
+smoke_warm_start_scale() {
+    echo "== warm start at scale: synthetic 20k-record journal preload =="
+    local big=/tmp/arco_smoke_big_journal.jsonl
+    rm -f "$big" "$big.lock"
+
+    # Populate a journal an order of magnitude past what the compare smoke
+    # produces; the streaming codec must replay it without noticeable
+    # startup cost.
+    "$BIN" journal synth "$big" --records 20000 --backend analytical --seed 11
+
+    local t0 t1 out addr
+    t0=$(date +%s)
+    out=$(start_shard "$SERVE_LOG" --backend analytical --warm-start "$big")
+    t1=$(date +%s)
+    addr=${out%% *}
+    SERVER_PID=${out##* }
+
+    # Every synthesized record is unique and backend-matched, so the shard
+    # must inherit all of them — an exact count, not a lower bound.
+    grep -q "preloaded=20000" "$SERVE_LOG" || {
+        cat "$SERVE_LOG"
+        echo "shard must preload all 20000 synthesized records"
+        exit 1
+    }
+    # Preload happens before the shard reports its address, so the shard
+    # startup wall time bounds the replay; 30s catches any accidental
+    # return to tree-parsing (or worse) without flaking on slow CI.
+    if [ $((t1 - t0)) -gt 30 ]; then
+        echo "warm-start preload of 20000 records took $((t1 - t0))s (>30s budget)"
+        exit 1
+    fi
+
+    kill "$SERVER_PID" 2>/dev/null || true
+    wait "$SERVER_PID" 2>/dev/null || true
+    SERVER_PID=0
+    rm -f "$big" "$big.lock"
+    echo "warm start scale ok: 20000 records preloaded in $((t1 - t0))s"
+}
+
 smoke_pipelined() {
     echo "== pipelined tuning: depth-1 parity and depth-2 budget conservation =="
     run_compare --backend analytical
@@ -223,5 +262,6 @@ smoke_backend analytical
 smoke_backend vta-sim
 smoke_heterogeneous
 smoke_warm_start
+smoke_warm_start_scale
 smoke_pipelined
-echo "smoke ok: remote == in-process, weighted placement, warm start and pipelined tuning verified"
+echo "smoke ok: remote == in-process, weighted placement, warm start (incl. 20k-record preload) and pipelined tuning verified"
