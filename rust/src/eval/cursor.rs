@@ -1,0 +1,319 @@
+//! Cursor/keyset pagination primitives for the `serve-tune` daemon.
+//!
+//! Two pieces, both deliberately tiny and wire-agnostic:
+//!
+//! - [`Cursor`] — an opaque resumption token a client hands back verbatim
+//!   to fetch the next page. It is *keyset* state (the last-seen trace
+//!   ordinal or job id), not an offset, so it stays correct while the
+//!   underlying sequence keeps growing: a page fetched after 10k more
+//!   appends continues exactly where the previous one ended, gap-free.
+//!   The encoding is checksummed so a corrupted or hand-edited token is
+//!   rejected instead of silently serving the wrong page.
+//! - [`PagedTrace`] — a bounded append-only window over a monotone
+//!   sequence. Appends are O(1); when a capacity is set, the oldest
+//!   entries are evicted (compacted away) and a cursor pointing before
+//!   the window is reported as [`PageError::Stale`] — the client must
+//!   restart rather than silently skip a gap.
+//!
+//! Neither piece buffers the whole sequence per client: the daemon holds
+//! one window per job and every client carries its own position in its
+//! cursor.
+
+use std::collections::VecDeque;
+use std::fmt;
+
+/// What a cursor paginates over. Encoded into the token so a trace cursor
+/// replayed against a job listing (or vice versa) is rejected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CursorKind {
+    /// Pages over one job's trace entries; `last` is a trace ordinal.
+    Trace,
+    /// Pages over the daemon's job table; `last` is a job id.
+    Jobs,
+}
+
+impl CursorKind {
+    fn tag(self) -> &'static str {
+        match self {
+            CursorKind::Trace => "t",
+            CursorKind::Jobs => "j",
+        }
+    }
+
+    fn from_tag(tag: &str) -> Option<CursorKind> {
+        match tag {
+            "t" => Some(CursorKind::Trace),
+            "j" => Some(CursorKind::Jobs),
+            _ => None,
+        }
+    }
+}
+
+/// Opaque pagination token: "everything up to and including `last` has
+/// been delivered". Clients treat the encoded form as a black box.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Cursor {
+    /// What the token paginates over.
+    pub kind: CursorKind,
+    /// Job the token belongs to (0 for job listings, which span jobs).
+    pub job: u64,
+    /// Last-seen key: trace ordinal ([`CursorKind::Trace`]) or job id
+    /// ([`CursorKind::Jobs`]). 0 means "from the beginning".
+    pub last: u64,
+}
+
+/// FNV-1a over the payload — not cryptographic, just enough to catch
+/// truncation, concatenation and hand-editing of tokens.
+fn checksum(payload: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in payload.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl Cursor {
+    /// First-page cursor for one job's trace.
+    pub fn trace_start(job: u64) -> Cursor {
+        Cursor { kind: CursorKind::Trace, job, last: 0 }
+    }
+
+    /// First-page cursor for the job listing.
+    pub fn jobs_start() -> Cursor {
+        Cursor { kind: CursorKind::Jobs, job: 0, last: 0 }
+    }
+
+    /// Serialize to the opaque wire form (`c1.<kind>.<job>.<last>.<sum>`).
+    pub fn encode(&self) -> String {
+        let payload = format!("{}.{}.{}", self.kind.tag(), self.job, self.last);
+        format!("c1.{payload}.{:016x}", checksum(&payload))
+    }
+
+    /// Parse a token a client handed back. `None` for anything that is
+    /// not a well-formed, checksum-intact cursor of a known version.
+    pub fn decode(token: &str) -> Option<Cursor> {
+        let rest = token.strip_prefix("c1.")?;
+        let (payload, sum_hex) = rest.rsplit_once('.')?;
+        let sum = u64::from_str_radix(sum_hex, 16).ok()?;
+        if sum_hex.len() != 16 || sum != checksum(payload) {
+            return None;
+        }
+        let mut parts = payload.split('.');
+        let kind = CursorKind::from_tag(parts.next()?)?;
+        let job = parts.next()?.parse().ok()?;
+        let last = parts.next()?.parse().ok()?;
+        if parts.next().is_some() {
+            return None;
+        }
+        Some(Cursor { kind, job, last })
+    }
+}
+
+/// Why a page could not be served.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PageError {
+    /// The cursor points at entries the bounded window has already
+    /// evicted: resuming would silently skip `missing` entries, so the
+    /// caller must restart from the current window instead.
+    Stale {
+        /// Position the cursor asked to resume after.
+        after: u64,
+        /// Oldest key still held by the window.
+        oldest_kept: u64,
+    },
+}
+
+impl fmt::Display for PageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PageError::Stale { after, oldest_kept } => write!(
+                f,
+                "stale cursor: position {after} compacted away (oldest retained entry is {oldest_kept})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PageError {}
+
+/// A bounded window over an append-only monotone sequence, keyed by the
+/// 1-based position of each entry. With `cap == 0` the window is
+/// unbounded (every entry retained); otherwise appends beyond `cap`
+/// evict from the front and cursors pointing before the window are
+/// rejected as stale.
+#[derive(Debug)]
+pub struct PagedTrace<T> {
+    window: VecDeque<T>,
+    /// Entries evicted from the front — the first retained entry has
+    /// 1-based key `dropped + 1`.
+    dropped: u64,
+    cap: usize,
+}
+
+impl<T: Clone> PagedTrace<T> {
+    /// `cap == 0`: unbounded. Otherwise at most `cap` entries retained.
+    pub fn new(cap: usize) -> PagedTrace<T> {
+        PagedTrace { window: VecDeque::new(), dropped: 0, cap }
+    }
+
+    /// Append one entry (its key is `self.total() + 1` at call time).
+    pub fn push(&mut self, entry: T) {
+        self.window.push_back(entry);
+        if self.cap != 0 {
+            while self.window.len() > self.cap {
+                self.window.pop_front();
+                self.dropped += 1;
+            }
+        }
+    }
+
+    /// Total entries ever appended (retained + evicted).
+    pub fn total(&self) -> u64 {
+        self.dropped + self.window.len() as u64
+    }
+
+    /// Entries currently retained.
+    pub fn retained(&self) -> usize {
+        self.window.len()
+    }
+
+    /// Serve up to `limit` entries with keys strictly greater than
+    /// `after`, each tagged with its key. An empty page means the caller
+    /// has caught up (page again later, or stop if the producer is done).
+    /// `Err(Stale)` means `after` precedes the retained window.
+    pub fn page(&self, after: u64, limit: usize) -> Result<Vec<(u64, T)>, PageError> {
+        if after < self.dropped {
+            return Err(PageError::Stale { after, oldest_kept: self.dropped + 1 });
+        }
+        let skip = (after - self.dropped) as usize;
+        Ok(self
+            .window
+            .iter()
+            .enumerate()
+            .skip(skip)
+            .take(limit)
+            .map(|(i, e)| (self.dropped + i as u64 + 1, e.clone()))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn cursor_round_trip() {
+        for c in [
+            Cursor::trace_start(7),
+            Cursor::jobs_start(),
+            Cursor { kind: CursorKind::Trace, job: u64::MAX, last: 123_456 },
+            Cursor { kind: CursorKind::Jobs, job: 0, last: u64::MAX },
+        ] {
+            let token = c.encode();
+            assert_eq!(Cursor::decode(&token), Some(c), "token {token}");
+        }
+    }
+
+    #[test]
+    fn tampered_or_malformed_cursors_are_rejected() {
+        let good = Cursor { kind: CursorKind::Trace, job: 3, last: 41 }.encode();
+        assert!(Cursor::decode(&good).is_some());
+        // Flip the payload without fixing the checksum.
+        let tampered = good.replace(".41.", ".42.");
+        assert_ne!(tampered, good);
+        assert_eq!(Cursor::decode(&tampered), None);
+        // Truncation, garbage, wrong version, empty.
+        assert_eq!(Cursor::decode(&good[..good.len() - 2]), None);
+        assert_eq!(Cursor::decode("not a cursor"), None);
+        assert_eq!(Cursor::decode(""), None);
+        assert_eq!(Cursor::decode(&good.replacen("c1.", "c9.", 1)), None);
+        // A jobs cursor is not a trace cursor even with a valid checksum.
+        let jobs = Cursor { kind: CursorKind::Jobs, job: 0, last: 41 }.encode();
+        assert_eq!(Cursor::decode(&jobs).unwrap().kind, CursorKind::Jobs);
+    }
+
+    #[test]
+    fn pages_are_gap_free_and_terminate_on_empty() {
+        let mut t = PagedTrace::new(0);
+        for i in 1..=25u64 {
+            t.push(i * 10);
+        }
+        let mut after = 0u64;
+        let mut seen = Vec::new();
+        loop {
+            let page = t.page(after, 4).unwrap();
+            if page.is_empty() {
+                break; // empty page is the termination signal
+            }
+            for (key, v) in page {
+                assert_eq!(key, after + 1, "keys must be dense and monotone");
+                assert_eq!(v, key * 10);
+                after = key;
+                seen.push(v);
+            }
+        }
+        assert_eq!(seen.len(), 25);
+        // Caught up: paging again stays empty until a new append.
+        assert!(t.page(after, 4).unwrap().is_empty());
+        t.push(260);
+        assert_eq!(t.page(after, 4).unwrap(), vec![(26, 260)]);
+    }
+
+    #[test]
+    fn pagination_is_stable_under_concurrent_append() {
+        // A writer keeps appending while a reader pages: every page must
+        // resume exactly where the previous ended, with no gap and no
+        // duplicate, whatever interleaving occurs.
+        let t = Arc::new(Mutex::new(PagedTrace::new(0)));
+        let total = 2_000u64;
+        let writer = {
+            let t = Arc::clone(&t);
+            std::thread::spawn(move || {
+                for i in 1..=total {
+                    t.lock().unwrap().push(i);
+                    if i % 64 == 0 {
+                        std::thread::yield_now();
+                    }
+                }
+            })
+        };
+        let mut after = 0u64;
+        let mut got = Vec::new();
+        while after < total {
+            let page = t.lock().unwrap().page(after, 7).unwrap();
+            if page.is_empty() {
+                std::thread::yield_now();
+                continue;
+            }
+            for (key, v) in page {
+                assert_eq!(key, after + 1, "gap or duplicate under concurrent append");
+                assert_eq!(v, key);
+                after = key;
+                got.push(v);
+            }
+        }
+        writer.join().unwrap();
+        assert_eq!(got.len() as u64, total);
+    }
+
+    #[test]
+    fn stale_cursor_on_compacted_window_is_rejected() {
+        let mut t = PagedTrace::new(10);
+        for i in 1..=30u64 {
+            t.push(i);
+        }
+        assert_eq!(t.total(), 30);
+        assert_eq!(t.retained(), 10);
+        // Entries 1..=20 are gone; resuming "after 5" would skip 15..=20.
+        let err = t.page(5, 4).unwrap_err();
+        assert_eq!(err, PageError::Stale { after: 5, oldest_kept: 21 });
+        assert!(err.to_string().contains("stale cursor"));
+        // The boundary: "after 20" is exactly the window start — fine.
+        let page = t.page(20, 4).unwrap();
+        assert_eq!(page.first().unwrap().0, 21);
+        // And a fully caught-up cursor still terminates with empty pages.
+        assert!(t.page(30, 4).unwrap().is_empty());
+    }
+}

@@ -49,12 +49,16 @@
 
 pub mod backend;
 pub mod cache;
+pub mod cursor;
 pub mod engine;
 pub mod journal;
 pub mod ledger;
 pub mod proto;
 pub mod remote;
 pub mod server;
+pub mod tune_client;
+pub mod tune_proto;
+pub mod tune_server;
 
 pub use crate::codegen::MeasureResult;
 pub use backend::{
@@ -69,8 +73,16 @@ pub use journal::{
 pub use ledger::{Account, BudgetLedger, DispatchStats, Dispatcher, LedgerStats, TenantStats};
 pub use proto::{Fingerprint, Origin, PROTO_VERSION};
 pub use remote::{FleetLostError, RemoteBackend};
+pub use cursor::{Cursor, CursorKind, PageError, PagedTrace};
 pub use server::{
     spawn as serve_measure, spawn_local as serve_measure_local,
     spawn_local_with as serve_measure_local_with, spawn_with as serve_measure_with, ServeOptions,
     ServerHandle,
+};
+pub use tune_client::{TracePage, TuneClient, WaitResult};
+pub use tune_proto::{
+    JobOutcome, JobSpec, JobState, JobStatus, TuneRequest, TuneResponse, TUNE_PROTO_VERSION,
+};
+pub use tune_server::{
+    spawn_tune, spawn_tune_local, TuneServeOptions, TuneServerHandle,
 };

@@ -1,0 +1,241 @@
+//! Client for the `arco serve-tune` daemon ([`super::tune_server`]).
+//!
+//! One TCP connection, one request → one response per line, exactly like
+//! [`super::remote`] against `serve-measure` shards. [`TuneClient::connect`]
+//! handshakes first — protocol version and simulator [`Fingerprint`] must
+//! match the daemon, so a skewed binary is refused before it can submit a
+//! job — and every later call is a blocking round trip. Server-side
+//! refusals (`quota exhausted`, `unknown job`, stale cursors) surface as
+//! `Err` with the daemon's exact error text.
+//!
+//! Traces stream through [`TuneClient::trace_page`]: the client holds its
+//! position in the opaque cursor the daemon returned, so a 100k-point
+//! trace arrives in bounded frames and several clients can follow the
+//! same job independently. [`TuneClient::wait`] is the convenience loop:
+//! page until the job is terminal and fully drained.
+
+use super::proto::{read_frame_line, Fingerprint};
+use super::tune_proto::{
+    tune_response_from_line, write_tune_request_frame, JobOutcome, JobSpec, JobState, JobStatus,
+    TuneRequest, TuneResponse, TUNE_PROTO_VERSION,
+};
+use crate::tuner::TraceEntry;
+use std::io::{BufReader, BufWriter};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// One page of a job's trace, as returned by [`TuneClient::trace_page`].
+#[derive(Debug, Clone)]
+pub struct TracePage {
+    /// Entries after the request's cursor, in ordinal order (possibly
+    /// empty: caught up with a live job).
+    pub entries: Vec<TraceEntry>,
+    /// Opaque resumption token for the next page.
+    pub cursor: String,
+    /// The job is terminal *and* this page reached the end of its trace.
+    pub done: bool,
+    /// Final outcome; rides the `done` page of a Done/Cancelled job.
+    pub outcome: Option<JobOutcome>,
+}
+
+/// Everything [`TuneClient::wait`] collected about a finished job.
+#[derive(Debug, Clone)]
+pub struct WaitResult {
+    /// The full trace as streamed (bounded by the daemon's `--trace-cap`:
+    /// a capped daemon only retains the newest window).
+    pub trace: Vec<TraceEntry>,
+    /// Final outcome (None for a Failed job).
+    pub outcome: Option<JobOutcome>,
+    /// Terminal status (state, error text, latency counters).
+    pub status: JobStatus,
+}
+
+/// A handshake-verified connection to one tuning daemon.
+pub struct TuneClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    addr: String,
+    client: String,
+    backend: String,
+    quota: usize,
+}
+
+impl TuneClient {
+    /// Connect and handshake as `client` (the daemon's quota account key).
+    /// Fails on an unreachable daemon, a protocol-version mismatch, or a
+    /// foreign simulator fingerprint.
+    pub fn connect(addr: &str, client: &str) -> anyhow::Result<TuneClient> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| anyhow::anyhow!("connecting to tune daemon {addr}: {e}"))?;
+        stream.set_nodelay(true).ok();
+        let mut c = TuneClient {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+            addr: addr.to_string(),
+            client: client.to_string(),
+            backend: String::new(),
+            quota: usize::MAX,
+        };
+        let hello = TuneRequest::Hello {
+            client: client.to_string(),
+            proto: TUNE_PROTO_VERSION,
+            fingerprint: Fingerprint::current(),
+        };
+        match c.call(&hello)? {
+            TuneResponse::Hello { proto, backend, fingerprint, quota, .. } => {
+                if proto != TUNE_PROTO_VERSION {
+                    anyhow::bail!(
+                        "daemon {addr} speaks tune-protocol v{proto}, this binary v{TUNE_PROTO_VERSION}"
+                    );
+                }
+                let local = Fingerprint::current();
+                if fingerprint != local {
+                    anyhow::bail!(
+                        "daemon {addr} embeds a different simulator — refusing to mix numbers.\n  \
+                         daemon: {}\n  binary: {}",
+                        fingerprint.describe(),
+                        local.describe()
+                    );
+                }
+                c.backend = backend;
+                c.quota = quota;
+                Ok(c)
+            }
+            other => anyhow::bail!("daemon {addr}: unexpected handshake reply {other:?}"),
+        }
+    }
+
+    /// The daemon's measurement backend name (from the handshake).
+    pub fn backend(&self) -> &str {
+        &self.backend
+    }
+
+    /// The daemon's per-(client, task) quota (from the handshake).
+    pub fn quota(&self) -> usize {
+        self.quota
+    }
+
+    /// The identity this connection submits under.
+    pub fn client(&self) -> &str {
+        &self.client
+    }
+
+    /// One blocking round trip; an `Error` reply becomes `Err` carrying
+    /// the daemon's exact refusal text.
+    fn call(&mut self, req: &TuneRequest) -> anyhow::Result<TuneResponse> {
+        write_tune_request_frame(&mut self.writer, req)?;
+        let Some(line) = read_frame_line(&mut self.reader)? else {
+            anyhow::bail!("tune daemon {} closed the connection", self.addr);
+        };
+        let resp = tune_response_from_line(&line)
+            .ok_or_else(|| anyhow::anyhow!("unintelligible reply from {}: {line}", self.addr))?;
+        match resp {
+            TuneResponse::Error(msg) => anyhow::bail!("tune daemon {}: {msg}", self.addr),
+            other => Ok(other),
+        }
+    }
+
+    /// Submit one job; returns `(job id, queue position)`. The spec's
+    /// `client` should normally be [`Self::client`] — the daemon meters
+    /// whatever identity the spec carries.
+    pub fn submit(&mut self, spec: JobSpec) -> anyhow::Result<(u64, usize)> {
+        match self.call(&TuneRequest::Submit(spec))? {
+            TuneResponse::Submitted { job, position } => Ok((job, position)),
+            other => anyhow::bail!("unexpected submit reply: {other:?}"),
+        }
+    }
+
+    /// Point-in-time status of one job.
+    pub fn status(&mut self, job: u64) -> anyhow::Result<JobStatus> {
+        match self.call(&TuneRequest::Status { job: Some(job), cursor: None, limit: 1 })? {
+            TuneResponse::Status(status) => Ok(*status),
+            other => anyhow::bail!("unexpected status reply: {other:?}"),
+        }
+    }
+
+    /// One keyset page of the daemon's job table; `cursor: None` starts
+    /// from the beginning. An empty page means the listing is exhausted.
+    pub fn jobs_page(
+        &mut self,
+        cursor: Option<String>,
+        limit: usize,
+    ) -> anyhow::Result<(Vec<JobStatus>, String)> {
+        match self.call(&TuneRequest::Status { job: None, cursor, limit })? {
+            TuneResponse::Jobs { jobs, cursor } => Ok((jobs, cursor)),
+            other => anyhow::bail!("unexpected listing reply: {other:?}"),
+        }
+    }
+
+    /// The whole job table, paged `limit` at a time until an empty page
+    /// terminates the listing.
+    pub fn list_jobs(&mut self, limit: usize) -> anyhow::Result<Vec<JobStatus>> {
+        let mut all = Vec::new();
+        let mut cursor: Option<String> = None;
+        loop {
+            let (jobs, next) = self.jobs_page(cursor, limit)?;
+            if jobs.is_empty() {
+                return Ok(all);
+            }
+            all.extend(jobs);
+            cursor = Some(next);
+        }
+    }
+
+    /// One page of a job's trace; `cursor: None` starts from the first
+    /// entry. Pass the returned cursor back to resume — pages are
+    /// gap-free and monotone however many entries land in between.
+    pub fn trace_page(
+        &mut self,
+        job: u64,
+        cursor: Option<String>,
+        limit: usize,
+    ) -> anyhow::Result<TracePage> {
+        match self.call(&TuneRequest::Results { job, cursor, limit })? {
+            TuneResponse::Page { entries, cursor, done, outcome, .. } => {
+                Ok(TracePage { entries, cursor, done, outcome })
+            }
+            other => anyhow::bail!("unexpected results reply: {other:?}"),
+        }
+    }
+
+    /// Request cooperative cancellation; returns the job's state after
+    /// the request (a finished job stays finished).
+    pub fn cancel(&mut self, job: u64) -> anyhow::Result<JobState> {
+        match self.call(&TuneRequest::Cancel { job })? {
+            TuneResponse::Cancelled { state, .. } => Ok(state),
+            other => anyhow::bail!("unexpected cancel reply: {other:?}"),
+        }
+    }
+
+    /// Stream `job`'s trace to completion: page `page_size` entries at a
+    /// time, sleeping `poll` between empty pages while the job still
+    /// runs, until the terminal page drains. Returns the collected trace,
+    /// the final outcome (None for a Failed job) and the terminal status.
+    pub fn wait(
+        &mut self,
+        job: u64,
+        page_size: usize,
+        poll: Duration,
+    ) -> anyhow::Result<WaitResult> {
+        let mut trace = Vec::new();
+        let mut cursor: Option<String> = None;
+        let mut outcome = None;
+        loop {
+            let page = self.trace_page(job, cursor.take(), page_size)?;
+            let advanced = !page.entries.is_empty();
+            trace.extend(page.entries);
+            if page.done {
+                outcome = page.outcome;
+                break;
+            }
+            if !advanced {
+                // Caught up with a live (or still-queued) job: back off
+                // instead of hammering the daemon with empty pages.
+                std::thread::sleep(poll);
+            }
+            cursor = Some(page.cursor);
+        }
+        let status = self.status(job)?;
+        Ok(WaitResult { trace, outcome, status })
+    }
+}

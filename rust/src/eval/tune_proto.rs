@@ -1,0 +1,883 @@
+//! Wire schema for the tuning service (`arco serve-tune`).
+//!
+//! Same transport and rules as the measurement protocol in
+//! [`super::proto`]: newline-delimited JSON frames (one request → one
+//! response per line), a version handshake plus simulator
+//! [`Fingerprint`] refusal, and the **additive-field compatibility
+//! rule** — new optional fields may be added without a version bump as
+//! long as a reader treats their absence as a safe default; removing or
+//! re-typing a field bumps [`TUNE_PROTO_VERSION`]. The hot frame (a
+//! `results` page streaming trace entries) is serialized straight into
+//! the socket writer via the zero-copy streaming codec
+//! ([`crate::util::json::stream`]) with a strict streaming decode on the
+//! client and a lenient tree fallback, mirroring `proto.rs`.
+//!
+//! `docs/WIRE.md` is the field-by-field reference for every frame here;
+//! keep the two in sync.
+
+use super::proto::{result_from_json, result_to_json, values_from_json, values_to_json};
+use super::proto::{write_frame, Fingerprint};
+use crate::codegen::MeasureResult;
+use crate::tuner::{Framework, TraceEntry};
+use crate::util::json::stream::{Reader, StreamWriter, Token};
+use crate::util::json::Json;
+use crate::workload::Conv2dTask;
+use std::io::Write;
+
+/// Version of the tune-ops wire protocol (independent of the measure
+/// protocol's `PROTO_VERSION`; both ride the same framing).
+pub const TUNE_PROTO_VERSION: u64 = 1;
+
+/// One tuning job as submitted over the wire: which task to tune, with
+/// which framework, under what budget. The server rebuilds the exact
+/// in-process tuning run from this — a depth-1 spec reproduces the
+/// `arco compare` driver bit for bit on the same seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    /// Client identity: the ledger's quota account key (first half).
+    pub client: String,
+    /// Search framework to run (by wire name, see [`Framework::name`]).
+    pub framework: Framework,
+    /// The conv2d task to tune.
+    pub task: Conv2dTask,
+    /// Total measurement budget (`TuneBudget::total_measurements`).
+    pub trials: usize,
+    /// Points per planning batch (`TuneBudget::batch`).
+    pub batch: usize,
+    /// In-flight measurement batches (`TuneBudget::pipeline_depth`);
+    /// 1 = the serial, bit-reproducible loop.
+    pub pipeline_depth: usize,
+    /// Strategy RNG seed. (Tree-encoded via f64: exact below 2^53,
+    /// which covers every seed the CLI derives.)
+    pub seed: u64,
+    /// Quick-mode strategy parameters (smaller models, CI-sized runs).
+    pub quick: bool,
+}
+
+impl JobSpec {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("client", Json::str(self.client.clone())),
+            ("framework", Json::str(self.framework.name())),
+            ("task", self.task.to_json()),
+            ("trials", Json::num(self.trials as f64)),
+            ("batch", Json::num(self.batch as f64)),
+            ("pipeline_depth", Json::num(self.pipeline_depth as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("quick", Json::Bool(self.quick)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<JobSpec> {
+        Some(JobSpec {
+            client: v.get_str("client")?.to_string(),
+            framework: Framework::from_name(v.get_str("framework")?)?,
+            task: Conv2dTask::from_json(v.get("task")?)?,
+            trials: v.get_usize("trials")?,
+            // Additive fields: absent reads as the CLI defaults.
+            batch: v.get_usize("batch").unwrap_or(64),
+            pipeline_depth: v.get_usize("pipeline_depth").unwrap_or(1),
+            seed: v.get_f64("seed").unwrap_or(0.0) as u64,
+            quick: v.get_bool("quick").unwrap_or(false),
+        })
+    }
+}
+
+/// Lifecycle of a submitted job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Accepted and waiting for a runner slot.
+    Queued,
+    /// A runner thread is tuning it now.
+    Running,
+    /// Finished; the outcome rides the final results page.
+    Done,
+    /// The tuning loop failed (e.g. whole-fleet loss); see `error`.
+    Failed,
+    /// Cancelled by the client; partial results remain queryable.
+    Cancelled,
+}
+
+impl JobState {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<JobState> {
+        Some(match s {
+            "queued" => JobState::Queued,
+            "running" => JobState::Running,
+            "done" => JobState::Done,
+            "failed" => JobState::Failed,
+            "cancelled" => JobState::Cancelled,
+            _ => return None,
+        })
+    }
+
+    /// Terminal states never change again — a client can stop polling.
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+/// Point-in-time view of one job (the `status` reply).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobStatus {
+    pub id: u64,
+    pub client: String,
+    /// Framework wire name.
+    pub framework: String,
+    /// `Conv2dTask::short_id()` — the ledger's quota account key
+    /// (second half).
+    pub task_id: String,
+    pub state: JobState,
+    /// Points measured (observed) so far.
+    pub measured: usize,
+    /// Points charged against the client's quota so far.
+    pub charged: usize,
+    /// Running best (0 until something valid lands).
+    pub best_gflops: f64,
+    /// Seconds from submit to the first trace entry (None until then) —
+    /// the latency the soak test bounds.
+    pub first_result_secs: Option<f64>,
+    /// Failure cause, for [`JobState::Failed`].
+    pub error: Option<String>,
+}
+
+impl JobStatus {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("id", Json::num(self.id as f64)),
+            ("client", Json::str(self.client.clone())),
+            ("framework", Json::str(self.framework.clone())),
+            ("task_id", Json::str(self.task_id.clone())),
+            ("state", Json::str(self.state.name())),
+            ("measured", Json::num(self.measured as f64)),
+            ("charged", Json::num(self.charged as f64)),
+            ("best_gflops", Json::num(self.best_gflops)),
+        ];
+        if let Some(secs) = self.first_result_secs {
+            fields.push(("first_result_secs", Json::num(secs)));
+        }
+        if let Some(e) = &self.error {
+            fields.push(("error", Json::str(e.clone())));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> Option<JobStatus> {
+        Some(JobStatus {
+            id: v.get_f64("id")? as u64,
+            client: v.get_str("client")?.to_string(),
+            framework: v.get_str("framework")?.to_string(),
+            task_id: v.get_str("task_id")?.to_string(),
+            state: JobState::from_name(v.get_str("state")?)?,
+            measured: v.get_usize("measured").unwrap_or(0),
+            charged: v.get_usize("charged").unwrap_or(0),
+            best_gflops: v.get_f64("best_gflops").unwrap_or(0.0),
+            first_result_secs: v.get_f64("first_result_secs"),
+            error: v.get_str("error").map(str::to_string),
+        })
+    }
+}
+
+/// Final outcome of a finished job — the wire form of
+/// [`crate::tuner::TaskTuneResult`] minus the full trace (which pages
+/// separately).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobOutcome {
+    /// Decoded knob values of the best point (None if nothing valid);
+    /// map back with [`super::proto::point_from_values`].
+    pub best_values: Option<Vec<usize>>,
+    pub best: MeasureResult,
+    pub measurements: usize,
+    pub fresh: usize,
+    pub cache_served: usize,
+    pub invalid: usize,
+    pub modeled_hw_secs: f64,
+    pub wall_secs: f64,
+}
+
+impl JobOutcome {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![("best", result_to_json(&self.best))];
+        if let Some(values) = &self.best_values {
+            fields.push(("best_values", values_to_json(values)));
+        }
+        fields.push(("measurements", Json::num(self.measurements as f64)));
+        fields.push(("fresh", Json::num(self.fresh as f64)));
+        fields.push(("cache_served", Json::num(self.cache_served as f64)));
+        fields.push(("invalid", Json::num(self.invalid as f64)));
+        fields.push(("modeled_hw_secs", Json::num(self.modeled_hw_secs)));
+        fields.push(("wall_secs", Json::num(self.wall_secs)));
+        Json::obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> Option<JobOutcome> {
+        Some(JobOutcome {
+            best_values: v.get("best_values").and_then(values_from_json),
+            best: result_from_json(v.get("best")?)?,
+            measurements: v.get_usize("measurements").unwrap_or(0),
+            fresh: v.get_usize("fresh").unwrap_or(0),
+            cache_served: v.get_usize("cache_served").unwrap_or(0),
+            invalid: v.get_usize("invalid").unwrap_or(0),
+            modeled_hw_secs: v.get_f64("modeled_hw_secs").unwrap_or(0.0),
+            wall_secs: v.get_f64("wall_secs").unwrap_or(0.0),
+        })
+    }
+}
+
+/// Tree encoding of one trace entry (pages also have a streaming twin,
+/// [`write_trace_entry_stream`], byte-identical for finite values).
+pub fn trace_to_json(e: &TraceEntry) -> Json {
+    Json::obj(vec![
+        ("ordinal", Json::num(e.ordinal as f64)),
+        ("iteration", Json::num(e.iteration as f64)),
+        ("at_secs", Json::num(e.at_secs)),
+        ("gflops", Json::num(e.gflops)),
+        ("best_gflops", Json::num(e.best_gflops)),
+        ("valid", Json::Bool(e.valid)),
+        ("modeled_cum_secs", Json::num(e.modeled_cum_secs)),
+    ])
+}
+
+pub fn trace_from_json(v: &Json) -> Option<TraceEntry> {
+    Some(TraceEntry {
+        ordinal: v.get_usize("ordinal")?,
+        iteration: v.get_usize("iteration").unwrap_or(0),
+        at_secs: v.get_f64("at_secs").unwrap_or(0.0),
+        gflops: v.get_f64("gflops").unwrap_or(0.0),
+        best_gflops: v.get_f64("best_gflops").unwrap_or(0.0),
+        valid: v.get_bool("valid").unwrap_or(true),
+        modeled_cum_secs: v.get_f64("modeled_cum_secs").unwrap_or(0.0),
+    })
+}
+
+/// One client → daemon message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TuneRequest {
+    /// Handshake: protocol version + simulator fingerprint must match the
+    /// daemon or the connection is refused (numbers from different
+    /// simulators must never mix, exactly as on the measure wire).
+    Hello { client: String, proto: u64, fingerprint: Fingerprint },
+    /// Submit one tuning job; admission-controlled by the quota ledger.
+    Submit(JobSpec),
+    /// `job: Some(id)` — one job's status. `job: None` — page through
+    /// the daemon's job table (keyset on job id via `cursor`).
+    Status { job: Option<u64>, cursor: Option<String>, limit: usize },
+    /// Page through one job's trace: `cursor` is the opaque resumption
+    /// token from the previous page (None = from the start), `limit`
+    /// caps entries per page so a 100k-point trace streams in bounded
+    /// frames without the daemon buffering it per client.
+    Results { job: u64, cursor: Option<String>, limit: usize },
+    /// Request cooperative cancellation; partial results stay queryable.
+    Cancel { job: u64 },
+}
+
+impl TuneRequest {
+    pub fn to_json(&self) -> Json {
+        match self {
+            TuneRequest::Hello { client, proto, fingerprint } => Json::obj(vec![
+                ("op", Json::str("hello")),
+                ("client", Json::str(client.clone())),
+                ("proto", Json::num(*proto as f64)),
+                ("fingerprint", fingerprint.to_json()),
+            ]),
+            TuneRequest::Submit(spec) => {
+                let mut v = spec.to_json();
+                v.set("op", Json::str("submit"));
+                v
+            }
+            TuneRequest::Status { job, cursor, limit } => {
+                let mut fields = vec![("op", Json::str("status"))];
+                if let Some(id) = job {
+                    fields.push(("job", Json::num(*id as f64)));
+                }
+                if let Some(c) = cursor {
+                    fields.push(("cursor", Json::str(c.clone())));
+                }
+                fields.push(("limit", Json::num(*limit as f64)));
+                Json::obj(fields)
+            }
+            TuneRequest::Results { job, cursor, limit } => {
+                let mut fields =
+                    vec![("op", Json::str("results")), ("job", Json::num(*job as f64))];
+                if let Some(c) = cursor {
+                    fields.push(("cursor", Json::str(c.clone())));
+                }
+                fields.push(("limit", Json::num(*limit as f64)));
+                Json::obj(fields)
+            }
+            TuneRequest::Cancel { job } => Json::obj(vec![
+                ("op", Json::str("cancel")),
+                ("job", Json::num(*job as f64)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Option<TuneRequest> {
+        match v.get_str("op")? {
+            "hello" => Some(TuneRequest::Hello {
+                client: v.get_str("client").unwrap_or("anonymous").to_string(),
+                proto: v.get_f64("proto")? as u64,
+                fingerprint: Fingerprint::from_json(v.get("fingerprint")?)?,
+            }),
+            "submit" => Some(TuneRequest::Submit(JobSpec::from_json(v)?)),
+            "status" => Some(TuneRequest::Status {
+                job: v.get_f64("job").map(|x| x as u64),
+                cursor: v.get_str("cursor").map(str::to_string),
+                limit: v.get_usize("limit").unwrap_or(DEFAULT_PAGE_LIMIT),
+            }),
+            "results" => Some(TuneRequest::Results {
+                job: v.get_f64("job")? as u64,
+                cursor: v.get_str("cursor").map(str::to_string),
+                limit: v.get_usize("limit").unwrap_or(DEFAULT_PAGE_LIMIT),
+            }),
+            "cancel" => Some(TuneRequest::Cancel { job: v.get_f64("job")? as u64 }),
+            _ => None,
+        }
+    }
+}
+
+/// Page size a peer gets when it does not ask for one.
+pub const DEFAULT_PAGE_LIMIT: usize = 256;
+
+/// One daemon → client message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TuneResponse {
+    /// Handshake accepted. `quota` is the per-(client, task) point
+    /// allowance this daemon admits; `jobs` the jobs it currently holds.
+    Hello { proto: u64, backend: String, fingerprint: Fingerprint, quota: usize, jobs: usize },
+    /// Job accepted. `position` is its place in the run queue at submit
+    /// time (0 = a runner picks it up next).
+    Submitted { job: u64, position: usize },
+    /// Single-job status.
+    Status(Box<JobStatus>),
+    /// One page of the job table (`status` with no `job`), keyset-ordered
+    /// by id. An empty `jobs` page means the listing is exhausted.
+    Jobs { jobs: Vec<JobStatus>, cursor: String },
+    /// One page of a job's trace, in ordinal order. `cursor` resumes
+    /// after the last entry of this page; an empty page + `done: false`
+    /// means "caught up with a live job, poll again"; `done: true` means
+    /// the job is terminal and `outcome` (on Done/Cancelled) is final.
+    Page {
+        job: u64,
+        entries: Vec<TraceEntry>,
+        cursor: String,
+        done: bool,
+        outcome: Option<JobOutcome>,
+    },
+    /// Cancellation acknowledged; `state` is the job's state afterwards
+    /// (an already-finished job stays finished).
+    Cancelled { job: u64, state: JobState },
+    /// The request could not be served (`docs/WIRE.md` lists the shapes:
+    /// `unintelligible request`, quota-exhausted, unknown-job, stale
+    /// cursor, foreign fingerprint).
+    Error(String),
+}
+
+impl TuneResponse {
+    pub fn to_json(&self) -> Json {
+        match self {
+            TuneResponse::Hello { proto, backend, fingerprint, quota, jobs } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("proto", Json::num(*proto as f64)),
+                ("backend", Json::str(backend.clone())),
+                ("fingerprint", fingerprint.to_json()),
+                ("quota", Json::num(*quota as f64)),
+                ("jobs", Json::num(*jobs as f64)),
+            ]),
+            TuneResponse::Submitted { job, position } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("submitted", Json::num(*job as f64)),
+                ("position", Json::num(*position as f64)),
+            ]),
+            TuneResponse::Status(status) => {
+                Json::obj(vec![("ok", Json::Bool(true)), ("status", status.to_json())])
+            }
+            TuneResponse::Jobs { jobs, cursor } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("listing", Json::Arr(jobs.iter().map(JobStatus::to_json).collect())),
+                ("cursor", Json::str(cursor.clone())),
+            ]),
+            TuneResponse::Page { job, entries, cursor, done, outcome } => {
+                let mut fields = vec![
+                    ("ok", Json::Bool(true)),
+                    ("job", Json::num(*job as f64)),
+                    ("entries", Json::Arr(entries.iter().map(trace_to_json).collect())),
+                    ("cursor", Json::str(cursor.clone())),
+                    ("done", Json::Bool(*done)),
+                ];
+                if let Some(o) = outcome {
+                    fields.push(("outcome", o.to_json()));
+                }
+                Json::obj(fields)
+            }
+            TuneResponse::Cancelled { job, state } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("cancelled", Json::num(*job as f64)),
+                ("state", Json::str(state.name())),
+            ]),
+            TuneResponse::Error(msg) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(msg.clone())),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Option<TuneResponse> {
+        if !v.get_bool("ok")? {
+            return Some(TuneResponse::Error(
+                v.get_str("error").unwrap_or("unspecified").to_string(),
+            ));
+        }
+        if let Some(entries) = v.get("entries") {
+            let entries =
+                entries.as_arr()?.iter().map(trace_from_json).collect::<Option<Vec<_>>>()?;
+            return Some(TuneResponse::Page {
+                job: v.get_f64("job")? as u64,
+                entries,
+                cursor: v.get_str("cursor")?.to_string(),
+                done: v.get_bool("done").unwrap_or(false),
+                outcome: v.get("outcome").and_then(JobOutcome::from_json),
+            });
+        }
+        if let Some(listing) = v.get("listing") {
+            let jobs =
+                listing.as_arr()?.iter().map(JobStatus::from_json).collect::<Option<Vec<_>>>()?;
+            return Some(TuneResponse::Jobs { jobs, cursor: v.get_str("cursor")?.to_string() });
+        }
+        if let Some(status) = v.get("status") {
+            return Some(TuneResponse::Status(Box::new(JobStatus::from_json(status)?)));
+        }
+        if let Some(job) = v.get_f64("submitted") {
+            return Some(TuneResponse::Submitted {
+                job: job as u64,
+                position: v.get_usize("position").unwrap_or(0),
+            });
+        }
+        if let Some(job) = v.get_f64("cancelled") {
+            return Some(TuneResponse::Cancelled {
+                job: job as u64,
+                state: JobState::from_name(v.get_str("state")?)?,
+            });
+        }
+        if let Some(backend) = v.get_str("backend") {
+            return Some(TuneResponse::Hello {
+                proto: v.get_f64("proto")? as u64,
+                backend: backend.to_string(),
+                fingerprint: Fingerprint::from_json(v.get("fingerprint")?)?,
+                quota: v.get_usize("quota").unwrap_or(usize::MAX),
+                jobs: v.get_usize("jobs").unwrap_or(0),
+            });
+        }
+        None
+    }
+}
+
+/// Streaming twin of [`trace_to_json`], byte-identical for finite values.
+fn write_trace_entry_stream<W: Write>(
+    sw: &mut StreamWriter<W>,
+    e: &TraceEntry,
+) -> std::io::Result<()> {
+    sw.begin_obj()?;
+    sw.key("ordinal")?;
+    sw.usize_val(e.ordinal)?;
+    sw.key("iteration")?;
+    sw.usize_val(e.iteration)?;
+    sw.key("at_secs")?;
+    sw.f64_val(e.at_secs)?;
+    sw.key("gflops")?;
+    sw.f64_val(e.gflops)?;
+    sw.key("best_gflops")?;
+    sw.f64_val(e.best_gflops)?;
+    sw.key("valid")?;
+    sw.bool_val(e.valid)?;
+    sw.key("modeled_cum_secs")?;
+    sw.f64_val(e.modeled_cum_secs)?;
+    sw.end_obj()
+}
+
+/// Serialize a request as one frame. Requests are small and rare (one
+/// per page, not per point) — the tree writer is fine for all of them.
+pub fn write_tune_request_frame<W: Write>(
+    w: &mut W,
+    req: &TuneRequest,
+) -> std::io::Result<()> {
+    write_frame(w, &req.to_json())
+}
+
+/// Decode one request line ([`super::proto::read_frame_line`] strips the
+/// newline). `None` means not a tune request.
+pub fn tune_request_from_line(line: &str) -> Option<TuneRequest> {
+    TuneRequest::from_json(&Json::parse(line).ok()?)
+}
+
+/// Serialize a response as one frame straight into the socket writer.
+/// The hot `results` page (potentially thousands of trace entries per
+/// frame) streams via the zero-copy writer and never builds a tree;
+/// byte-identical to `write_frame(w, &resp.to_json())` for finite values.
+pub fn write_tune_response_frame<W: Write>(
+    w: &mut W,
+    resp: &TuneResponse,
+) -> std::io::Result<()> {
+    match resp {
+        TuneResponse::Page { job, entries, cursor, done, outcome } => {
+            let mut sw = StreamWriter::new(&mut *w);
+            sw.begin_obj()?;
+            sw.key("ok")?;
+            sw.bool_val(true)?;
+            sw.key("job")?;
+            sw.u64_val(*job)?;
+            sw.key("entries")?;
+            sw.begin_arr()?;
+            for e in entries {
+                write_trace_entry_stream(&mut sw, e)?;
+            }
+            sw.end_arr()?;
+            sw.key("cursor")?;
+            sw.str_val(cursor)?;
+            sw.key("done")?;
+            sw.bool_val(*done)?;
+            if let Some(o) = outcome {
+                sw.key("outcome")?;
+                o.to_json().write_stream(&mut sw)?;
+            }
+            sw.end_obj()?;
+            w.write_all(b"\n")?;
+            w.flush()
+        }
+        _ => write_frame(w, &resp.to_json()),
+    }
+}
+
+/// Zero-copy response decode: strict streaming fast path for the hot
+/// trace page, tree fallback for every other frame (and any unusual
+/// spelling). `None` means not a tune response either way.
+pub fn tune_response_from_line(line: &str) -> Option<TuneResponse> {
+    if let Some(resp) = page_response_from_line(line) {
+        return Some(resp);
+    }
+    TuneResponse::from_json(&Json::parse(line).ok()?)
+}
+
+fn trace_entry_rest_from_stream(r: &mut Reader<'_>) -> Option<TraceEntry> {
+    let mut ordinal: Option<usize> = None;
+    let mut iteration = 0usize;
+    let mut at_secs = 0.0f64;
+    let mut gflops = 0.0f64;
+    let mut best_gflops = 0.0f64;
+    let mut valid = true;
+    let mut modeled_cum_secs = 0.0f64;
+    loop {
+        match r.next_token()? {
+            Token::ObjEnd => break,
+            Token::Key(k) => match k.as_ref() {
+                "ordinal" => match r.next_token()? {
+                    Token::Num(n) => ordinal = n.as_usize(),
+                    _ => return None,
+                },
+                "iteration" => match r.next_token()? {
+                    Token::Num(n) => iteration = n.as_usize()?,
+                    _ => return None,
+                },
+                "at_secs" => match r.next_token()? {
+                    Token::Num(n) => at_secs = n.as_f64(),
+                    _ => return None,
+                },
+                "gflops" => match r.next_token()? {
+                    Token::Num(n) => gflops = n.as_f64(),
+                    _ => return None,
+                },
+                "best_gflops" => match r.next_token()? {
+                    Token::Num(n) => best_gflops = n.as_f64(),
+                    _ => return None,
+                },
+                "valid" => match r.next_token()? {
+                    Token::Bool(b) => valid = b,
+                    _ => return None,
+                },
+                "modeled_cum_secs" => match r.next_token()? {
+                    Token::Num(n) => modeled_cum_secs = n.as_f64(),
+                    _ => return None,
+                },
+                _ => r.skip_value().ok()?,
+            },
+            _ => return None,
+        }
+    }
+    Some(TraceEntry {
+        ordinal: ordinal?,
+        iteration,
+        at_secs,
+        gflops,
+        best_gflops,
+        valid,
+        modeled_cum_secs,
+    })
+}
+
+fn page_response_from_line(line: &str) -> Option<TuneResponse> {
+    let mut r = Reader::new(line);
+    if !matches!(r.next_token()?, Token::ObjStart) {
+        return None;
+    }
+    let mut ok: Option<bool> = None;
+    let mut job: Option<u64> = None;
+    let mut entries: Option<Vec<TraceEntry>> = None;
+    let mut cursor: Option<String> = None;
+    let mut done = false;
+    let mut outcome: Option<JobOutcome> = None;
+    loop {
+        match r.next_token()? {
+            Token::ObjEnd => break,
+            Token::Key(k) => match k.as_ref() {
+                "ok" => match r.next_token()? {
+                    Token::Bool(b) => ok = Some(b),
+                    _ => return None,
+                },
+                "job" => match r.next_token()? {
+                    Token::Num(n) => job = n.as_u64(),
+                    _ => return None,
+                },
+                "entries" => {
+                    if !matches!(r.next_token()?, Token::ArrStart) {
+                        return None;
+                    }
+                    let mut es = Vec::new();
+                    loop {
+                        match r.next_token()? {
+                            Token::ArrEnd => break,
+                            Token::ObjStart => es.push(trace_entry_rest_from_stream(&mut r)?),
+                            _ => return None,
+                        }
+                    }
+                    entries = Some(es);
+                }
+                "cursor" => match r.next_token()? {
+                    Token::Str(s) => cursor = Some(s.into_owned()),
+                    _ => return None,
+                },
+                "done" => match r.next_token()? {
+                    Token::Bool(b) => done = b,
+                    _ => return None,
+                },
+                "outcome" => {
+                    // The outcome rides at most one frame per job:
+                    // materialize the subtree and reuse the tree decoder.
+                    let v = Json::from_reader(&mut r).ok()?;
+                    outcome = JobOutcome::from_json(&v);
+                }
+                _ => r.skip_value().ok()?,
+            },
+            _ => return None,
+        }
+    }
+    if !r.at_end() || !ok? {
+        return None;
+    }
+    Some(TuneResponse::Page { job: job?, entries: entries?, cursor: cursor?, done, outcome })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::proto::read_frame_line;
+
+    fn spec() -> JobSpec {
+        JobSpec {
+            client: "tester".to_string(),
+            framework: Framework::Arco,
+            task: Conv2dTask::new(1, 32, 28, 28, 32, 3, 3, 1, 1),
+            trials: 96,
+            batch: 16,
+            pipeline_depth: 2,
+            seed: 0x1234_5678,
+            quick: true,
+        }
+    }
+
+    fn entry(ordinal: usize) -> TraceEntry {
+        TraceEntry {
+            ordinal,
+            iteration: ordinal / 4,
+            at_secs: ordinal as f64 * 0.25,
+            gflops: 1.5 * ordinal as f64,
+            best_gflops: 2.0 * ordinal as f64,
+            valid: ordinal % 3 != 0,
+            modeled_cum_secs: 0.125 * ordinal as f64,
+        }
+    }
+
+    fn round_trip_request(req: &TuneRequest) -> TuneRequest {
+        let mut buf = Vec::new();
+        write_tune_request_frame(&mut buf, req).unwrap();
+        let mut r = std::io::BufReader::new(buf.as_slice());
+        let line = read_frame_line(&mut r).unwrap().unwrap();
+        tune_request_from_line(&line).unwrap()
+    }
+
+    fn round_trip_response(resp: &TuneResponse) -> TuneResponse {
+        let mut buf = Vec::new();
+        write_tune_response_frame(&mut buf, resp).unwrap();
+        let mut r = std::io::BufReader::new(buf.as_slice());
+        let line = read_frame_line(&mut r).unwrap().unwrap();
+        tune_response_from_line(&line).unwrap()
+    }
+
+    #[test]
+    fn requests_round_trip() {
+        for req in [
+            TuneRequest::Hello {
+                client: "c0".to_string(),
+                proto: TUNE_PROTO_VERSION,
+                fingerprint: Fingerprint::current(),
+            },
+            TuneRequest::Submit(spec()),
+            TuneRequest::Status { job: Some(7), cursor: None, limit: 32 },
+            TuneRequest::Status { job: None, cursor: Some("c1.j.0.5.x".to_string()), limit: 8 },
+            TuneRequest::Results { job: 3, cursor: Some("tok".to_string()), limit: 100 },
+            TuneRequest::Cancel { job: 9 },
+        ] {
+            assert_eq!(round_trip_request(&req), req);
+        }
+    }
+
+    #[test]
+    fn responses_round_trip() {
+        let status = JobStatus {
+            id: 4,
+            client: "c0".to_string(),
+            framework: "arco".to_string(),
+            task_id: "c32x28x28-32k3s1p1".to_string(),
+            state: JobState::Running,
+            measured: 48,
+            charged: 64,
+            best_gflops: 17.5,
+            first_result_secs: Some(0.75),
+            error: None,
+        };
+        let outcome = JobOutcome {
+            best_values: Some(vec![4, 8, 1, 2]),
+            best: MeasureResult {
+                seconds: 0.001,
+                cycles: 123_456,
+                gflops: 21.0,
+                area_mm2: 2.5,
+                occupancy: 0.8,
+                valid: true,
+            },
+            measurements: 96,
+            fresh: 80,
+            cache_served: 16,
+            invalid: 3,
+            modeled_hw_secs: 12.5,
+            wall_secs: 2.25,
+        };
+        for resp in [
+            TuneResponse::Hello {
+                proto: TUNE_PROTO_VERSION,
+                backend: "vta-sim".to_string(),
+                fingerprint: Fingerprint::current(),
+                quota: 1000,
+                jobs: 3,
+            },
+            TuneResponse::Submitted { job: 11, position: 2 },
+            TuneResponse::Status(Box::new(status.clone())),
+            TuneResponse::Jobs {
+                jobs: vec![
+                    status.clone(),
+                    JobStatus {
+                        id: 5,
+                        state: JobState::Failed,
+                        error: Some("boom".to_string()),
+                        ..status
+                    },
+                ],
+                cursor: "tok".to_string(),
+            },
+            TuneResponse::Page {
+                job: 4,
+                entries: (1..=10).map(entry).collect(),
+                cursor: "tok2".to_string(),
+                done: true,
+                outcome: Some(outcome),
+            },
+            TuneResponse::Page {
+                job: 4,
+                entries: Vec::new(),
+                cursor: "tok3".to_string(),
+                done: false,
+                outcome: None,
+            },
+            TuneResponse::Cancelled { job: 4, state: JobState::Cancelled },
+            TuneResponse::Error("quota exhausted".to_string()),
+        ] {
+            assert_eq!(round_trip_response(&resp), resp);
+        }
+    }
+
+    #[test]
+    fn page_streaming_encoding_matches_the_tree() {
+        // The streaming fast path must stay byte-identical to the tree
+        // writer — the compatibility contract that lets either end fall
+        // back to the tree codec.
+        let page = TuneResponse::Page {
+            job: 7,
+            entries: (1..=25).map(entry).collect(),
+            cursor: "cur".to_string(),
+            done: false,
+            outcome: None,
+        };
+        let mut streamed = Vec::new();
+        write_tune_response_frame(&mut streamed, &page).unwrap();
+        let mut tree = page.to_json().dump();
+        tree.push('\n');
+        assert_eq!(String::from_utf8(streamed).unwrap(), tree);
+    }
+
+    #[test]
+    fn additive_fields_read_as_defaults() {
+        // A peer that omits optional fields (older writer) must decode
+        // with safe defaults, per the additive-field rule.
+        let line = r#"{"op":"submit","client":"c0","framework":"arco","task":{"n":1,"ci":32,"h":28,"w":28,"co":32,"kh":3,"kw":3,"stride":1,"pad":1},"trials":64}"#;
+        match tune_request_from_line(line) {
+            Some(TuneRequest::Submit(s)) => {
+                assert_eq!(s.batch, 64);
+                assert_eq!(s.pipeline_depth, 1);
+                assert_eq!(s.seed, 0);
+                assert!(!s.quick);
+            }
+            other => panic!("expected submit, got {other:?}"),
+        }
+        // Unknown fields are skipped, not fatal (forward compatibility).
+        let page = r#"{"ok":true,"job":1,"entries":[{"ordinal":1,"gflops":2.0,"future_field":[1,2]}],"cursor":"t","done":false,"novel":"ignored"}"#;
+        match tune_response_from_line(page) {
+            Some(TuneResponse::Page { entries, .. }) => {
+                assert_eq!(entries.len(), 1);
+                assert_eq!(entries[0].ordinal, 1);
+                assert_eq!(entries[0].gflops, 2.0);
+                assert!(entries[0].valid, "absent valid reads as true");
+            }
+            other => panic!("expected page, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_frames_are_rejected() {
+        assert_eq!(tune_request_from_line("not json"), None);
+        assert_eq!(tune_request_from_line(r#"{"op":"warp"}"#), None);
+        assert_eq!(tune_response_from_line("{"), None);
+        // ok:false always decodes as an error reply.
+        match tune_response_from_line(r#"{"ok":false,"error":"unknown job 9"}"#) {
+            Some(TuneResponse::Error(e)) => assert_eq!(e, "unknown job 9"),
+            other => panic!("expected error, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,542 @@
+//! `arco serve-tune`: tuning-as-a-service over the JSONL wire.
+//!
+//! Where [`super::server`] exposes raw *measurement* to the network, this
+//! daemon exposes whole *tuning jobs*: a client submits a
+//! [`JobSpec`](super::tune_proto::JobSpec) (task + framework + budget +
+//! seed), runner threads drive [`crate::tuner::tune_task_tenant`] against
+//! the daemon's shared [`Engine`], and the client streams status, trace
+//! pages and the final outcome back over the same connection. The pieces
+//! PRs 3–5 built in-process become the service's control plane:
+//!
+//! - the [`BudgetLedger`] is **per-client quota/admission control** — every
+//!   job is charged against its `(client, task)` account before each batch
+//!   (charge-before-submit), and a submit against an exhausted account is
+//!   refused at the door;
+//! - the FIFO [`Dispatcher`] is the **fleet-wide fair scheduler** — every
+//!   running job checks out one permit per in-flight batch, so dozens of
+//!   concurrent jobs interleave batch-by-batch instead of any one
+//!   monopolizing the fleet (slots are sized from the engine's concurrent
+//!   batch capacity at startup);
+//! - traces stream through **cursor pagination**
+//!   ([`super::cursor`]) — the daemon holds one bounded
+//!   [`PagedTrace`] per job and each client carries its own position in an
+//!   opaque cursor, so a 100k-point trace is never buffered per client.
+//!
+//! Lifecycle mirrors `serve-measure`: [`spawn_tune`] binds and returns a
+//! [`TuneServerHandle`]; `shutdown()` cancels live jobs, joins the accept
+//! loop and runners, and flushes the engine journal.
+
+use super::cursor::{Cursor, CursorKind, PagedTrace};
+use super::engine::Engine;
+use super::ledger::{BudgetLedger, Dispatcher, LedgerStats};
+use super::proto::{read_frame_line, Fingerprint};
+use super::tune_proto::{
+    tune_request_from_line, write_tune_response_frame, JobOutcome, JobSpec, JobState, JobStatus,
+    TuneRequest, TuneResponse, TUNE_PROTO_VERSION,
+};
+use super::cache::PointKey;
+use crate::space::ConfigSpace;
+use crate::tuner::{tune_task_tenant, TenantContext, TraceEntry, TuneBudget, TuneObserver};
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Daemon behaviour knobs beyond the engine's own configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct TuneServeOptions {
+    /// Measurement points each `(client, task)` account may admit over the
+    /// daemon's lifetime (`--quota`). `usize::MAX` = unmetered.
+    pub quota: usize,
+    /// Concurrent job-runner threads (`--jobs`): how many tuning loops run
+    /// at once. Queued jobs beyond this wait FIFO.
+    pub runners: usize,
+    /// Trace entries retained per job (`--trace-cap`); `0` = unbounded.
+    /// A bounded window keeps a long-lived daemon's memory flat; clients
+    /// that fall further behind than the window see a stale-cursor error
+    /// and must restart their stream.
+    pub trace_cap: usize,
+}
+
+impl Default for TuneServeOptions {
+    fn default() -> Self {
+        TuneServeOptions { quota: usize::MAX, runners: 2, trace_cap: 0 }
+    }
+}
+
+/// Mutable half of one job, behind its lock.
+struct JobInner {
+    state: JobState,
+    trace: PagedTrace<TraceEntry>,
+    outcome: Option<JobOutcome>,
+    error: Option<String>,
+    measured: usize,
+    best_gflops: f64,
+    /// Submit → first trace entry (the latency the soak test bounds).
+    first_result_secs: Option<f64>,
+}
+
+/// One submitted job: immutable spec + supervised mutable progress.
+struct JobRecord {
+    id: u64,
+    spec: JobSpec,
+    /// `spec.task.short_id()` — the ledger account's second key.
+    task_id: String,
+    submitted: Instant,
+    cancel: AtomicBool,
+    inner: Mutex<JobInner>,
+}
+
+impl JobRecord {
+    fn status(&self, ledger: &BudgetLedger) -> JobStatus {
+        let inner = self.inner.lock().unwrap();
+        JobStatus {
+            id: self.id,
+            client: self.spec.client.clone(),
+            framework: self.spec.framework.name().to_string(),
+            task_id: self.task_id.clone(),
+            state: inner.state,
+            measured: inner.measured,
+            charged: ledger.account(&self.spec.client, &self.task_id).charged,
+            best_gflops: inner.best_gflops,
+            first_result_secs: inner.first_result_secs,
+            error: inner.error.clone(),
+        }
+    }
+}
+
+/// The tuning loop's live hooks, wired into the job record: every trace
+/// entry lands in the job's paged window the moment it exists (in ordinal
+/// order, so pagination keys are dense), and the cancel flag is polled
+/// between batches.
+struct JobObserver<'a> {
+    job: &'a JobRecord,
+}
+
+impl TuneObserver for JobObserver<'_> {
+    fn on_trace(&self, entry: &TraceEntry) {
+        let mut inner = self.job.inner.lock().unwrap();
+        if inner.first_result_secs.is_none() {
+            inner.first_result_secs = Some(self.job.submitted.elapsed().as_secs_f64());
+        }
+        inner.measured = entry.ordinal;
+        inner.best_gflops = entry.best_gflops;
+        inner.trace.push(entry.clone());
+    }
+
+    fn cancelled(&self) -> bool {
+        self.job.cancel.load(Ordering::Relaxed)
+    }
+}
+
+/// Everything connection threads and runner threads share.
+struct TuneShared {
+    engine: Arc<Engine>,
+    /// Per-(client, task) quota — admission control at submit, then
+    /// charge-before-submit inside the tuning loop.
+    ledger: BudgetLedger,
+    /// Fleet-wide FIFO fair scheduler across all running jobs.
+    dispatcher: Dispatcher,
+    /// Every job ever submitted, by id (keyset pagination's index).
+    jobs: Mutex<BTreeMap<u64, Arc<JobRecord>>>,
+    /// Jobs waiting for a runner, FIFO.
+    queue: Mutex<VecDeque<Arc<JobRecord>>>,
+    ready: Condvar,
+    next_job: AtomicU64,
+    stop: AtomicBool,
+    opts: TuneServeOptions,
+}
+
+/// A running tuning daemon.
+pub struct TuneServerHandle {
+    addr: std::net::SocketAddr,
+    shared: Arc<TuneShared>,
+    accept: Option<JoinHandle<()>>,
+    runners: Vec<JoinHandle<()>>,
+}
+
+impl TuneServerHandle {
+    /// The actually-bound address (resolves `:0` to the chosen port).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// The engine every job measures through.
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.shared.engine
+    }
+
+    /// Snapshot of the quota ledger — per-(client, task) charged/settled
+    /// accounts (the soak test's conservation oracle).
+    pub fn ledger_stats(&self) -> LedgerStats {
+        self.shared.ledger.stats()
+    }
+
+    /// Status of every job the daemon holds, in id order.
+    pub fn job_statuses(&self) -> Vec<JobStatus> {
+        let jobs = self.shared.jobs.lock().unwrap();
+        jobs.values().map(|j| j.status(&self.shared.ledger)).collect()
+    }
+
+    /// Block until the accept loop exits (the CLI's serve-forever mode).
+    pub fn wait(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting, cancel live jobs, join every thread, flush the
+    /// engine journal. Queued jobs end Cancelled; running jobs drain
+    /// their in-flight batches and keep their partial results.
+    pub fn shutdown(mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        {
+            let jobs = self.shared.jobs.lock().unwrap();
+            for job in jobs.values() {
+                job.cancel.store(true, Ordering::Relaxed);
+            }
+        }
+        self.shared.ready.notify_all();
+        // Nudge the blocking accept() with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in std::mem::take(&mut self.runners) {
+            let _ = h.join();
+        }
+        self.shared.engine.flush_journal();
+    }
+}
+
+/// Bind `addr` and serve tuning jobs over `engine` until shut down.
+pub fn spawn_tune(
+    addr: &str,
+    engine: Arc<Engine>,
+    opts: TuneServeOptions,
+) -> anyhow::Result<TuneServerHandle> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| anyhow::anyhow!("binding tune server to {addr}: {e}"))?;
+    let bound = listener.local_addr()?;
+    let shared = Arc::new(TuneShared {
+        dispatcher: Dispatcher::new(engine.concurrent_batch_capacity()),
+        engine,
+        ledger: BudgetLedger::new(opts.quota),
+        jobs: Mutex::new(BTreeMap::new()),
+        queue: Mutex::new(VecDeque::new()),
+        ready: Condvar::new(),
+        next_job: AtomicU64::new(0),
+        stop: AtomicBool::new(false),
+        opts,
+    });
+    let runners = (0..opts.runners.max(1))
+        .map(|_| {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || runner_loop(&shared))
+        })
+        .collect();
+    let accept = {
+        let shared = Arc::clone(&shared);
+        std::thread::spawn(move || accept_loop(listener, shared))
+    };
+    Ok(TuneServerHandle { addr: bound, shared, accept: Some(accept), runners })
+}
+
+/// [`spawn_tune`] on a loopback port picked by the OS (tests, embedding).
+pub fn spawn_tune_local(
+    engine: Arc<Engine>,
+    opts: TuneServeOptions,
+) -> anyhow::Result<TuneServerHandle> {
+    spawn_tune("127.0.0.1:0", engine, opts)
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<TuneShared>) {
+    for conn in listener.incoming() {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match conn {
+            Ok(stream) => {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || {
+                    let peer = stream
+                        .peer_addr()
+                        .map(|a| a.to_string())
+                        .unwrap_or_else(|_| "?".to_string());
+                    if let Err(e) = serve_connection(stream, &shared) {
+                        crate::log_debug!("eval", "tune connection {peer} ended: {e}");
+                    }
+                });
+            }
+            Err(e) => crate::log_warn!("eval", "tune accept failed: {e}"),
+        }
+    }
+}
+
+/// One request → one response per line until the client hangs up.
+fn serve_connection(stream: TcpStream, shared: &TuneShared) -> anyhow::Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let Some(line) = read_frame_line(&mut reader)? else {
+            return Ok(());
+        };
+        // A frame that is not a tune request gets a structured Error reply
+        // (the client sees *why* instead of a dropped connection), exactly
+        // like the measure wire.
+        let response = match tune_request_from_line(&line) {
+            Some(req) => handle(shared, req),
+            None => TuneResponse::Error("unintelligible request".to_string()),
+        };
+        write_tune_response_frame(&mut writer, &response)?;
+    }
+}
+
+fn handle(shared: &TuneShared, req: TuneRequest) -> TuneResponse {
+    match req {
+        TuneRequest::Hello { client, proto, fingerprint } => {
+            if proto != TUNE_PROTO_VERSION {
+                return TuneResponse::Error(format!(
+                    "client {client} speaks tune-protocol v{proto}, this daemon v{TUNE_PROTO_VERSION}"
+                ));
+            }
+            let local = Fingerprint::current();
+            if fingerprint != local {
+                // Same refusal rule as the measure wire: results from
+                // different simulators must never mix.
+                return TuneResponse::Error(format!(
+                    "foreign fingerprint: client {} vs daemon {}",
+                    fingerprint.describe(),
+                    local.describe()
+                ));
+            }
+            TuneResponse::Hello {
+                proto: TUNE_PROTO_VERSION,
+                backend: shared.engine.backend_name().to_string(),
+                fingerprint: local,
+                quota: shared.opts.quota,
+                jobs: shared.jobs.lock().unwrap().len(),
+            }
+        }
+        TuneRequest::Submit(spec) => submit(shared, spec),
+        TuneRequest::Status { job: Some(id), .. } => match lookup(shared, id) {
+            Some(job) => TuneResponse::Status(Box::new(job.status(&shared.ledger))),
+            None => TuneResponse::Error(format!("unknown job {id}")),
+        },
+        TuneRequest::Status { job: None, cursor, limit } => list_jobs(shared, cursor, limit),
+        TuneRequest::Results { job: id, cursor, limit } => match lookup(shared, id) {
+            Some(job) => trace_page(shared, &job, cursor, limit),
+            None => TuneResponse::Error(format!("unknown job {id}")),
+        },
+        TuneRequest::Cancel { job: id } => match lookup(shared, id) {
+            Some(job) => {
+                job.cancel.store(true, Ordering::Relaxed);
+                let mut inner = job.inner.lock().unwrap();
+                // A job still waiting for a runner dies right here; the
+                // runner that eventually pops it will skip it. Running
+                // jobs stop cooperatively at their next batch boundary;
+                // finished jobs stay finished.
+                if inner.state == JobState::Queued {
+                    inner.state = JobState::Cancelled;
+                }
+                TuneResponse::Cancelled { job: id, state: inner.state }
+            }
+            None => TuneResponse::Error(format!("unknown job {id}")),
+        },
+    }
+}
+
+fn lookup(shared: &TuneShared, id: u64) -> Option<Arc<JobRecord>> {
+    shared.jobs.lock().unwrap().get(&id).cloned()
+}
+
+fn submit(shared: &TuneShared, spec: JobSpec) -> TuneResponse {
+    let task_id = spec.task.short_id();
+    // Admission control at the door: a client whose (client, task) quota
+    // account is already spent gets a refusal, not a job that would sit
+    // at measured=0 forever. The tuning loop's own charge-before-submit
+    // enforces the cap batch-by-batch after admission.
+    if shared.ledger.remaining(&spec.client, &task_id) == 0 {
+        return TuneResponse::Error(format!(
+            "quota exhausted: client {} has spent its {} points for task {task_id}",
+            spec.client, shared.opts.quota
+        ));
+    }
+    let id = shared.next_job.fetch_add(1, Ordering::SeqCst) + 1;
+    let job = Arc::new(JobRecord {
+        id,
+        task_id,
+        submitted: Instant::now(),
+        cancel: AtomicBool::new(false),
+        inner: Mutex::new(JobInner {
+            state: JobState::Queued,
+            trace: PagedTrace::new(shared.opts.trace_cap),
+            outcome: None,
+            error: None,
+            measured: 0,
+            best_gflops: 0.0,
+            first_result_secs: None,
+        }),
+        spec,
+    });
+    shared.jobs.lock().unwrap().insert(id, Arc::clone(&job));
+    let position = {
+        let mut queue = shared.queue.lock().unwrap();
+        queue.push_back(job);
+        queue.len() - 1
+    };
+    shared.ready.notify_all();
+    TuneResponse::Submitted { job: id, position }
+}
+
+/// Keyset page over the job table: ids strictly greater than the cursor's
+/// `last`, in order. Stable under concurrent submits — new jobs get
+/// higher ids and land in later pages.
+fn list_jobs(shared: &TuneShared, cursor: Option<String>, limit: usize) -> TuneResponse {
+    let after = match cursor {
+        None => 0,
+        Some(token) => match Cursor::decode(&token) {
+            Some(c) if c.kind == CursorKind::Jobs => c.last,
+            _ => return TuneResponse::Error("unintelligible cursor".to_string()),
+        },
+    };
+    let jobs_map = shared.jobs.lock().unwrap();
+    let jobs: Vec<JobStatus> = jobs_map
+        .range(after.saturating_add(1)..)
+        .take(limit.max(1))
+        .map(|(_, j)| j.status(&shared.ledger))
+        .collect();
+    let last = jobs.last().map_or(after, |s| s.id);
+    drop(jobs_map);
+    TuneResponse::Jobs { jobs, cursor: Cursor { kind: CursorKind::Jobs, job: 0, last }.encode() }
+}
+
+/// One page of a job's trace. The cursor is the client's own position —
+/// the daemon holds no per-client state, so any number of clients can
+/// stream the same 100k-point trace concurrently at their own pace.
+fn trace_page(
+    shared: &TuneShared,
+    job: &JobRecord,
+    cursor: Option<String>,
+    limit: usize,
+) -> TuneResponse {
+    let after = match cursor {
+        None => 0,
+        Some(token) => match Cursor::decode(&token) {
+            Some(c) if c.kind == CursorKind::Trace && c.job == job.id => c.last,
+            _ => return TuneResponse::Error("unintelligible cursor".to_string()),
+        },
+    };
+    let inner = job.inner.lock().unwrap();
+    let entries = match inner.trace.page(after, limit.max(1)) {
+        Ok(page) => page,
+        Err(stale) => return TuneResponse::Error(stale.to_string()),
+    };
+    let last = entries.last().map_or(after, |(key, _)| *key);
+    // `done` only once the client has drained a *terminal* job's full
+    // trace: a live job's empty page means "caught up, poll again".
+    let done = inner.state.is_terminal() && last == inner.trace.total();
+    let outcome = if done { inner.outcome.clone() } else { None };
+    TuneResponse::Page {
+        job: job.id,
+        entries: entries.into_iter().map(|(_, e)| e).collect(),
+        cursor: Cursor { kind: CursorKind::Trace, job: job.id, last }.encode(),
+        done,
+        outcome,
+    }
+}
+
+fn runner_loop(shared: &TuneShared) {
+    loop {
+        let job = {
+            let mut queue = shared.queue.lock().unwrap();
+            loop {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(job) = queue.pop_front() {
+                    break job;
+                }
+                queue = shared.ready.wait(queue).unwrap();
+            }
+        };
+        {
+            let mut inner = job.inner.lock().unwrap();
+            if inner.state != JobState::Queued {
+                // Cancelled while waiting for a runner.
+                continue;
+            }
+            inner.state = JobState::Running;
+        }
+        run_one(shared, &job);
+    }
+}
+
+/// Drive one job through the same code path as the in-process `arco
+/// compare` driver: identical space construction, strategy build and
+/// tenant loop, so a depth-1 job on the same seed is bit-identical to a
+/// local run.
+fn run_one(shared: &TuneShared, job: &JobRecord) {
+    let spec = &job.spec;
+    let space = ConfigSpace::for_task(&spec.task, spec.framework.tunes_hardware());
+    let mut strategy = spec.framework.build(space.clone(), spec.quick, spec.seed);
+    let budget = TuneBudget {
+        total_measurements: spec.trials,
+        batch: spec.batch,
+        pipeline_depth: spec.pipeline_depth,
+        ..Default::default()
+    };
+    let observer = JobObserver { job };
+    let tenant = TenantContext {
+        ledger: Some(&shared.ledger),
+        dispatcher: &shared.dispatcher,
+        framework: &spec.client,
+        task_id: &job.task_id,
+        observer: Some(&observer),
+    };
+    let result = tune_task_tenant(&shared.engine, &space, strategy.as_mut(), budget, Some(&tenant));
+    let mut inner = job.inner.lock().unwrap();
+    match result {
+        Ok(r) => {
+            inner.measured = r.measurements;
+            inner.best_gflops = r.best.gflops;
+            inner.outcome = Some(JobOutcome {
+                best_values: r.best_point.as_ref().map(|p| PointKey::of(&space, p).values),
+                best: r.best,
+                measurements: r.measurements,
+                fresh: r.fresh,
+                cache_served: r.cache_served,
+                invalid: r.invalid,
+                modeled_hw_secs: r.modeled_hw_secs,
+                wall_secs: r.wall_secs,
+            });
+            inner.state = if job.cancel.load(Ordering::Relaxed) {
+                JobState::Cancelled
+            } else {
+                JobState::Done
+            };
+        }
+        Err(e) => {
+            // A lost fleet fails the job, not the daemon: the error text
+            // is queryable via `status`, the partial trace stays paged,
+            // and charged-but-unsettled points stay visible on the ledger
+            // (honest accounting — nobody got numbers for them).
+            inner.error = Some(format!("{e:#}"));
+            inner.state = JobState::Failed;
+        }
+    }
+    crate::log_info!(
+        "eval",
+        "tune job {} ({} {} for {}): {} after {} measurements",
+        job.id,
+        spec.framework.name(),
+        job.task_id,
+        spec.client,
+        inner.state.name(),
+        inner.measured
+    );
+}

@@ -6,6 +6,8 @@
 //! arco compare       --models alexnet,resnet18 --frameworks autotvm,chameleon,arco
 //! arco fig4          --model resnet18            # CS ablation trace
 //! arco serve-measure --addr 127.0.0.1:4917       # measurement fleet shard
+//! arco serve-tune    --addr 127.0.0.1:4918       # tuning-as-a-service daemon
+//! arco tune submit   --addr 127.0.0.1:4918 --model alexnet --wait   # remote client
 //! arco journal merge out.jsonl a.jsonl b.jsonl   # union shard journals
 //! arco journal compact fleet.jsonl               # GC a long-lived journal
 //! arco report-models                             # Table 3
@@ -49,10 +51,12 @@ fn main() {
 
 fn usage() -> String {
     "arco <command> [options]\n\ncommands:\n  \
-     tune           tune one model with one framework\n  \
+     tune           tune one model with one framework, in-process\n  \
+     tune submit    submit jobs to a serve-tune daemon (also: tune status|results|cancel)\n  \
      compare        compare frameworks across models (Figs 5-7, Table 6)\n  \
      fig4           ARCO with/without Confidence Sampling trace (Fig 4)\n  \
      serve-measure  expose a measurement backend to remote tuners (fleet shard)\n  \
+     serve-tune     tuning-as-a-service daemon: queue remote jobs over one shared engine\n  \
      journal        measurement-journal tooling (merge, compact, synth)\n  \
      report-models  print the model zoo (Table 3)\n  \
      info           backend / artifact status\n\nrun `arco <command> --help` for options\n"
@@ -66,10 +70,17 @@ fn run(args: &[String]) -> anyhow::Result<()> {
     };
     let rest = &args[1..];
     match cmd.as_str() {
-        "tune" => cmd_tune(rest),
+        // `arco tune` doubles as the serve-tune client: a daemon-facing
+        // subcommand word routes to the wire client, anything else to the
+        // in-process tuner.
+        "tune" => match rest.first().map(String::as_str) {
+            Some("submit" | "status" | "results" | "cancel") => cmd_tune_client(rest),
+            _ => cmd_tune(rest),
+        },
         "compare" => cmd_compare(rest),
         "fig4" => cmd_fig4(rest),
         "serve-measure" => cmd_serve_measure(rest),
+        "serve-tune" => cmd_serve_tune(rest),
         "journal" => cmd_journal(rest),
         "report-models" => {
             print!("{}", report::table3_models());
@@ -440,6 +451,420 @@ fn cmd_serve_measure(args: &[String]) -> anyhow::Result<()> {
     }
     handle.wait();
     Ok(())
+}
+
+fn cmd_serve_tune(args: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new(
+        "arco serve-tune",
+        "tuning-as-a-service daemon: accept jobs from remote clients over one shared engine",
+    )
+    .opt("addr", Some('a'), "listen address (port 0 picks a free port)", Some("127.0.0.1:4918"))
+    .opt(
+        "backend",
+        None,
+        "measurement backend the daemon tunes over: vta-sim | analytical | \
+         remote:host:port[,host:port...] (a serve-measure fleet)",
+        Some("vta-sim"),
+    )
+    .opt("workers", Some('w'), "measurement engine worker threads", None)
+    .opt("journal", Some('j'), "persistent measurement journal (JSONL path)", None)
+    .opt(
+        "warm-start",
+        None,
+        "read-only journal (e.g. `arco journal merge` output) preloaded into the cache \
+         before the first job",
+        None,
+    )
+    .opt("cache-cap", None, "bound the measurement cache to N entries (LRU)", None)
+    .opt(
+        "placement",
+        None,
+        "fleet batch placement: uniform (reproducible default) | weighted \
+         (throughput-proportional chunks for heterogeneous fleets)",
+        None,
+    )
+    .opt(
+        "quota",
+        None,
+        "measurement points each (client, task) account may spend over the daemon's \
+         lifetime (admission control; default: unmetered)",
+        None,
+    )
+    .opt(
+        "jobs",
+        None,
+        "concurrent job-runner threads (queued jobs beyond this wait FIFO)",
+        Some("2"),
+    )
+    .opt(
+        "trace-cap",
+        None,
+        "trace entries retained per job for pagination (0 = unbounded; clients that fall \
+         behind a bounded window get a stale-cursor error)",
+        Some("0"),
+    )
+    .flag("no-cache", None, "disable the measurement cache")
+    .flag("verbose", Some('v'), "debug logging")
+    .flag("help", Some('h'), "show help");
+    let a = cli.parse(args).map_err(anyhow::Error::msg)?;
+    if a.has_flag("help") {
+        print!("{}", cli.usage());
+        return Ok(());
+    }
+    if a.has_flag("verbose") {
+        set_level(Level::Debug);
+    }
+    let name = a.get("backend").unwrap();
+    let backend = BackendSpec::parse(name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown backend '{name}' (known: {}, or remote:host:port[,host:port...])",
+            BackendKind::known_names().join(", ")
+        )
+    })?;
+    let placement = match a.get("placement") {
+        Some(p) => Placement::from_name(p).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown placement '{p}' (known: {})",
+                Placement::known_names().join(", ")
+            )
+        })?,
+        None => Placement::default(),
+    };
+    let config = eval::EngineConfig {
+        backend,
+        workers: a
+            .get_usize("workers")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or_else(arco::util::pool::default_workers),
+        cache: !a.has_flag("no-cache"),
+        cache_capacity: a.get_usize("cache-cap").map_err(anyhow::Error::msg)?,
+        journal: a.get("journal").map(PathBuf::from),
+        warm_start: a.get("warm-start").map(PathBuf::from),
+        placement,
+    };
+    let engine = Arc::new(eval::Engine::new(config)?);
+    let opts = eval::TuneServeOptions {
+        quota: a.get_usize("quota").map_err(anyhow::Error::msg)?.unwrap_or(usize::MAX),
+        runners: a.get_usize("jobs").map_err(anyhow::Error::msg)?.unwrap_or(2).max(1),
+        trace_cap: a.get_usize("trace-cap").map_err(anyhow::Error::msg)?.unwrap_or(0),
+    };
+    let handle = eval::spawn_tune(a.get("addr").unwrap(), Arc::clone(&engine), opts)?;
+    // The address line is machine-read by launch scripts (CI smoke): keep
+    // its format stable, exactly like serve-measure's.
+    println!("serve-tune: listening on {}", handle.addr());
+    let quota = if opts.quota == usize::MAX {
+        "unmetered".to_string()
+    } else {
+        opts.quota.to_string()
+    };
+    println!(
+        "serve-tune: backend={} workers={} runners={} quota={quota} trace-cap={} fingerprint [{}]",
+        engine.backend_name(),
+        engine.workers(),
+        opts.runners,
+        opts.trace_cap,
+        eval::Fingerprint::current().describe()
+    );
+    handle.wait();
+    Ok(())
+}
+
+/// Shared options of every `arco tune <sub>` daemon-client subcommand.
+fn tune_client_cli(name: &str, about: &str) -> Cli {
+    Cli::new(name, about)
+        .opt("addr", Some('a'), "serve-tune daemon address", Some("127.0.0.1:4918"))
+        .opt("client", None, "identity to connect as (the daemon's quota account key)", Some("cli"))
+        .flag("verbose", Some('v'), "debug logging")
+        .flag("help", Some('h'), "show help")
+}
+
+fn tune_connect(a: &arco::util::cli::Args) -> anyhow::Result<eval::TuneClient> {
+    if a.has_flag("verbose") {
+        set_level(Level::Debug);
+    }
+    eval::TuneClient::connect(a.get("addr").unwrap(), a.get("client").unwrap())
+}
+
+fn print_job_status(s: &eval::JobStatus) {
+    let first = match s.first_result_secs {
+        Some(t) => format!("{t:.2}s"),
+        None => "-".to_string(),
+    };
+    print!(
+        "job {:<4} {:<9} {}/{}  {}  measured={} charged={} best={:.1} GFLOPS  first-result={first}",
+        s.id, s.state.name(), s.client, s.framework, s.task_id, s.measured, s.charged, s.best_gflops
+    );
+    match &s.error {
+        Some(e) => println!("  error: {e}"),
+        None => println!(),
+    }
+}
+
+fn print_trace_entries(entries: &[arco::tuner::TraceEntry]) {
+    for e in entries {
+        println!(
+            "{},{},{:.6},{:.3},{:.3},{}",
+            e.ordinal, e.iteration, e.at_secs, e.gflops, e.best_gflops, e.valid
+        );
+    }
+}
+
+fn print_outcome(o: &eval::JobOutcome) {
+    println!(
+        "# outcome: best {:.3e}s ({:.1} GFLOPS)  measured={} fresh={} cache_served={} \
+         invalid={} modeled_hw={:.1}s wall={:.1}s",
+        o.best.seconds,
+        o.best.gflops,
+        o.measurements,
+        o.fresh,
+        o.cache_served,
+        o.invalid,
+        o.modeled_hw_secs,
+        o.wall_secs
+    );
+}
+
+/// `arco tune submit|status|results|cancel` — the wire client for a
+/// `serve-tune` daemon. Plain `arco tune` (no subcommand word) stays the
+/// in-process tuner; `run` routes before parsing.
+fn cmd_tune_client(args: &[String]) -> anyhow::Result<()> {
+    match args.first().map(String::as_str) {
+        Some("submit") => {
+            let cli = tune_client_cli(
+                "arco tune submit",
+                "submit one tuning job per unique task of a model to a serve-tune daemon",
+            )
+            .opt("model", Some('m'), "zoo model name", Some("resnet18"))
+            .opt(
+                "framework",
+                Some('f'),
+                "autotvm|chameleon|arco|random|arco-nocs|arco-swonly",
+                Some("arco"),
+            )
+            .opt("trials", Some('n'), "total hardware measurements per task", Some("1000"))
+            .opt("batch", Some('b'), "measurements per planning iteration", Some("64"))
+            .opt(
+                "pipeline-depth",
+                None,
+                "measurement batches in flight per job (1 = serial, bit-identical to the \
+                 in-process driver on the same seed)",
+                Some("1"),
+            )
+            .opt(
+                "seed",
+                Some('s'),
+                "RNG seed (task i runs at seed ^ i << 32, like `arco tune`)",
+                Some("1"),
+            )
+            .opt("page", None, "trace entries per page while --wait streams", Some("256"))
+            .opt("poll-ms", None, "delay between empty pages while --wait streams", Some("50"))
+            .flag("quick", Some('q'), "CI-scale RL budgets (same pipeline)")
+            .flag("wait", None, "stream every job to completion and print outcomes")
+            .flag("help", Some('h'), "show help");
+            let a = cli.parse(&args[1..]).map_err(anyhow::Error::msg)?;
+            if a.has_flag("help") {
+                print!("{}", cli.usage());
+                return Ok(());
+            }
+            let model_name = a.get("model").unwrap();
+            let model = model_by_name(model_name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown model '{model_name}' (known: {})",
+                    model_names().join(", ")
+                )
+            })?;
+            let framework = Framework::from_name(a.get("framework").unwrap())
+                .ok_or_else(|| anyhow::anyhow!("unknown framework"))?;
+            let trials = a.get_usize("trials").map_err(anyhow::Error::msg)?.unwrap();
+            let batch = a.get_usize("batch").map_err(anyhow::Error::msg)?.unwrap();
+            let depth =
+                a.get_usize("pipeline-depth").map_err(anyhow::Error::msg)?.unwrap().max(1);
+            let seed = a.get_u64("seed").map_err(anyhow::Error::msg)?.unwrap();
+            let quick = a.has_flag("quick");
+            let mut client = tune_connect(&a)?;
+            println!(
+                "tune submit: daemon {} backend={} (as client '{}')",
+                a.get("addr").unwrap(),
+                client.backend(),
+                client.client()
+            );
+            let uniq = model.unique_tasks();
+            let mut jobs = Vec::new();
+            for (i, (task, weight)) in uniq.iter().enumerate() {
+                let spec = eval::JobSpec {
+                    client: client.client().to_string(),
+                    framework,
+                    task: *task,
+                    trials,
+                    batch,
+                    pipeline_depth: depth,
+                    // Same per-task derivation as the in-process driver, so
+                    // a depth-1 job reproduces `arco tune` bit-for-bit.
+                    seed: seed ^ (i as u64) << 32,
+                    quick,
+                };
+                let (id, position) = client.submit(spec)?;
+                println!(
+                    "submitted job {id} (queue position {position}): {} {} x{weight}",
+                    framework.name(),
+                    task.short_id()
+                );
+                jobs.push((id, task.short_id(), *weight));
+            }
+            if a.has_flag("wait") {
+                let page = a.get_usize("page").map_err(anyhow::Error::msg)?.unwrap().max(1);
+                let poll_ms = a.get_usize("poll-ms").map_err(anyhow::Error::msg)?.unwrap();
+                let poll = Duration::from_millis(poll_ms as u64);
+                let (mut measured, mut fresh, mut cache_served) = (0usize, 0usize, 0usize);
+                let mut weighted_secs = 0.0f64;
+                let mut failed = Vec::new();
+                for (id, task_id, weight) in &jobs {
+                    let done = client.wait(*id, page, poll)?;
+                    if let Some(o) = &done.outcome {
+                        println!(
+                            "  job {id} {task_id}  x{weight}  best {:.3e}s  ({:.1} GFLOPS)  \
+                             measured={} fresh={} cache_served={} invalid={} [{}]",
+                            o.best.seconds,
+                            o.best.gflops,
+                            o.measurements,
+                            o.fresh,
+                            o.cache_served,
+                            o.invalid,
+                            done.status.state.name()
+                        );
+                        measured += o.measurements;
+                        fresh += o.fresh;
+                        cache_served += o.cache_served;
+                        weighted_secs += *weight as f64 * o.best.seconds;
+                    } else {
+                        let msg = done
+                            .status
+                            .error
+                            .clone()
+                            .unwrap_or_else(|| "no outcome".to_string());
+                        println!("  job {id} {task_id}: {} ({msg})", done.status.state.name());
+                        failed.push((*id, msg));
+                    }
+                }
+                // The summary line is grepped by the CI smoke pass (shared
+                // daemon cache: second client's jobs land fresh=0).
+                println!(
+                    "tune submit: {} on {}: weighted inference {:.5}s; measured={} fresh={} \
+                     cache_served={}",
+                    framework.name(),
+                    model.name,
+                    weighted_secs,
+                    measured,
+                    fresh,
+                    cache_served
+                );
+                if let Some((id, msg)) = failed.first() {
+                    anyhow::bail!(
+                        "{} job(s) did not finish (first: job {id}: {msg})",
+                        failed.len()
+                    );
+                }
+            }
+            Ok(())
+        }
+        Some("status") => {
+            let cli = tune_client_cli(
+                "arco tune status",
+                "one job's status, or a paged listing of every job the daemon holds",
+            )
+            .opt("job", None, "job id (omit to list every job)", None)
+            .opt("limit", None, "jobs per listing page", Some("64"));
+            let a = cli.parse(&args[1..]).map_err(anyhow::Error::msg)?;
+            if a.has_flag("help") {
+                print!("{}", cli.usage());
+                return Ok(());
+            }
+            let mut client = tune_connect(&a)?;
+            match a.get_u64("job").map_err(anyhow::Error::msg)? {
+                Some(id) => print_job_status(&client.status(id)?),
+                None => {
+                    let limit = a.get_usize("limit").map_err(anyhow::Error::msg)?.unwrap().max(1);
+                    let jobs = client.list_jobs(limit)?;
+                    if jobs.is_empty() {
+                        println!("no jobs");
+                    }
+                    for s in &jobs {
+                        print_job_status(s);
+                    }
+                }
+            }
+            Ok(())
+        }
+        Some("results") => {
+            let cli = tune_client_cli(
+                "arco tune results",
+                "stream one job's trace as CSV (one page, or --follow to completion)",
+            )
+            .opt("job", None, "job id", None)
+            .opt("cursor", None, "resume after an earlier page's `# cursor:` token", None)
+            .opt("limit", None, "trace entries per page", Some("256"))
+            .opt("poll-ms", None, "delay between empty pages while --follow streams", Some("50"))
+            .flag("follow", None, "page until the job is terminal and fully drained");
+            let a = cli.parse(&args[1..]).map_err(anyhow::Error::msg)?;
+            if a.has_flag("help") {
+                print!("{}", cli.usage());
+                return Ok(());
+            }
+            let job = a
+                .get_u64("job")
+                .map_err(anyhow::Error::msg)?
+                .ok_or_else(|| anyhow::anyhow!("--job is required: arco tune results --job N"))?;
+            let limit = a.get_usize("limit").map_err(anyhow::Error::msg)?.unwrap().max(1);
+            let mut client = tune_connect(&a)?;
+            println!("ordinal,iteration,at_secs,gflops,best_gflops,valid");
+            if a.has_flag("follow") {
+                let poll_ms = a.get_usize("poll-ms").map_err(anyhow::Error::msg)?.unwrap();
+                let done = client.wait(job, limit, Duration::from_millis(poll_ms as u64))?;
+                print_trace_entries(&done.trace);
+                if let Some(o) = &done.outcome {
+                    print_outcome(o);
+                }
+                println!("# state: {}", done.status.state.name());
+                if let Some(e) = &done.status.error {
+                    println!("# error: {e}");
+                }
+            } else {
+                let cursor = a.get("cursor").map(String::from);
+                let page = client.trace_page(job, cursor, limit)?;
+                print_trace_entries(&page.entries);
+                println!("# cursor: {}", page.cursor);
+                if let Some(o) = &page.outcome {
+                    print_outcome(o);
+                }
+                if page.done {
+                    println!("# done");
+                }
+            }
+            Ok(())
+        }
+        Some("cancel") => {
+            let cli = tune_client_cli(
+                "arco tune cancel",
+                "request cooperative cancellation of a job (takes effect at a batch boundary)",
+            )
+            .opt("job", None, "job id", None);
+            let a = cli.parse(&args[1..]).map_err(anyhow::Error::msg)?;
+            if a.has_flag("help") {
+                print!("{}", cli.usage());
+                return Ok(());
+            }
+            let job = a
+                .get_u64("job")
+                .map_err(anyhow::Error::msg)?
+                .ok_or_else(|| anyhow::anyhow!("--job is required: arco tune cancel --job N"))?;
+            let mut client = tune_connect(&a)?;
+            let state = client.cancel(job)?;
+            println!("job {job}: {}", state.name());
+            Ok(())
+        }
+        // `run` only routes the four words above here.
+        _ => anyhow::bail!("unknown tune subcommand\n\n{}", usage()),
+    }
 }
 
 fn cmd_journal(args: &[String]) -> anyhow::Result<()> {

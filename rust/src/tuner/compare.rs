@@ -293,6 +293,7 @@ fn run_job(
                 dispatcher: &s.dispatcher,
                 framework: tenant_label,
                 task_id: &task_id,
+                observer: None,
             };
             tune_task_tenant(engine, &space, strategy.as_mut(), budget, Some(&tenant))?
         }

@@ -14,5 +14,5 @@ pub use compare::{
 pub use strategy::Strategy;
 pub use task_tuner::{
     tune_task, tune_task_tenant, tune_task_with, TaskTuneResult, TenantContext, TraceEntry,
-    TuneBudget,
+    TuneBudget, TuneObserver,
 };

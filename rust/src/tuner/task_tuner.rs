@@ -176,6 +176,23 @@ pub fn tune_task(
     tune_task_with(&engine, space, strategy, budget)
 }
 
+/// Live hooks into a running [`tune_task_tenant`] loop, for callers that
+/// supervise jobs from outside the loop thread (the `arco serve-tune`
+/// daemon). Both methods are called from the tuning thread itself:
+/// `on_trace` once per trace entry the moment it is appended (in ordinal
+/// order), and `cancelled` once per refill turn. A `true` from `cancelled`
+/// ends the run through the normal early-stop path — in-flight batches
+/// drain, completed ones settle on the ledger, and the partial
+/// [`TaskTuneResult`] is returned intact.
+pub trait TuneObserver {
+    /// A trace entry was just appended (entries arrive in ordinal order).
+    fn on_trace(&self, _entry: &TraceEntry) {}
+    /// Polled between batches; `true` requests a cooperative early stop.
+    fn cancelled(&self) -> bool {
+        false
+    }
+}
+
 /// Multi-tenant identity of one tuning job: who it is (for ledger
 /// accounting) and which shared scheduling infrastructure its measurement
 /// batches go through. Built by the concurrent comparison driver
@@ -191,6 +208,9 @@ pub struct TenantContext<'a> {
     pub framework: &'a str,
     /// Ledger identity, second key.
     pub task_id: &'a str,
+    /// Live trace/cancellation hooks (None: no supervision — the classic
+    /// fire-and-wait behaviour).
+    pub observer: Option<&'a dyn TuneObserver>,
 }
 
 /// Tune one task, measuring through the caller's engine.
@@ -296,6 +316,20 @@ pub fn tune_task_tenant(
                 && submitted < budget.total_measurements
                 && iteration < budget.max_iterations
             {
+                if let Some(o) = tenant.and_then(|t| t.observer) {
+                    // Cooperative cancellation rides the early-stop path:
+                    // nothing new is planned or charged, and the drain
+                    // below settles whatever is already in flight.
+                    if o.cancelled() {
+                        crate::log_debug!(
+                            "tuner",
+                            "{} cancelled at {submitted}",
+                            strategy.name()
+                        );
+                        stopped = true;
+                        break;
+                    }
+                }
                 let want = budget.batch.min(budget.total_measurements - submitted);
                 let mut plan = timer.time("plan", || strategy.plan(want));
                 if plan.len() > want {
@@ -432,6 +466,9 @@ pub fn tune_task_tenant(
                     valid: r.valid,
                     modeled_cum_secs: modeled_hw_secs,
                 });
+                if let Some(o) = tenant.and_then(|t| t.observer) {
+                    o.on_trace(trace.last().expect("entry just pushed"));
+                }
             }
             if let Some(t) = tenant {
                 if let Some(ledger) = t.ledger {

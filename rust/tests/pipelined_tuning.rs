@@ -164,6 +164,7 @@ fn deep_pipeline_never_breaches_budget_or_ledger() {
         dispatcher: &dispatcher,
         framework: "random",
         task_id: "t0",
+        observer: None,
     };
     let mut strategy = RandomSearch::new(s.clone(), 3);
     // The local budget is not binding (100 points allowed); the shared
@@ -293,6 +294,7 @@ fn fleet_loss_mid_pipeline_fails_cleanly_and_settles_completed_batches() {
         dispatcher: &dispatcher,
         framework: "random",
         task_id: "t0",
+        observer: None,
     };
     let mut strategy = RandomSearch::new(s.clone(), 7);
     let budget = TuneBudget {

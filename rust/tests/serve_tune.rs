@@ -1,0 +1,390 @@
+//! Acceptance tests for `arco serve-tune` — tuning-as-a-service:
+//!
+//! - a depth-1 single-client job reproduces the in-process `arco compare`
+//!   driver bit-identically (best point, trace, measurement counts),
+//! - the per-(client, task) quota refuses exhausted accounts at the door
+//!   and the ledger conserves every charge (charged == settled),
+//! - a repeat job from a second client is served from the daemon's shared
+//!   cache with zero fresh measurements,
+//! - cancellation stops a queued job immediately and a running job at its
+//!   next batch boundary, keeping partial results,
+//! - every documented refusal (`unintelligible request`, unknown job,
+//!   unintelligible/stale cursors) comes back as a structured error with
+//!   the exact text the runbook promises, and
+//! - the soak: a dozen concurrent clients against a churning two-shard
+//!   loopback fleet (one shard killed and revived mid-run) — no
+//!   starvation, gap-free monotone paginated traces, exact ledger
+//!   conservation, bounded submit → first-result latency.
+
+use arco::eval::{
+    serve_measure, serve_measure_local_with, spawn_tune_local, BackendKind, BackendSpec, Cursor,
+    CursorKind, Engine, EngineConfig, JobSpec, JobState, PointKey, ServeOptions, ServerHandle,
+    TuneClient, TuneServeOptions,
+};
+use arco::space::ConfigSpace;
+use arco::tuner::{tune_model_with, Framework, TraceEntry, TuneBudget};
+use arco::workload::{model_by_name, Conv2dTask};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn analytical_engine() -> Engine {
+    Engine::new(EngineConfig {
+        backend: BackendKind::Analytical.into(),
+        workers: 2,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+/// Loopback analytical measure shard with injected per-point latency.
+fn throttled_shard(delay: Duration) -> ServerHandle {
+    serve_measure_local_with(
+        Arc::new(analytical_engine()),
+        ServeOptions { measure_delay: delay },
+    )
+    .unwrap()
+}
+
+/// Everything a trace entry carries except the wall-clock stamp.
+type TraceRow = (usize, usize, f64, f64, bool, f64);
+
+fn rows(trace: &[TraceEntry]) -> Vec<TraceRow> {
+    trace
+        .iter()
+        .map(|e| (e.ordinal, e.iteration, e.gflops, e.best_gflops, e.valid, e.modeled_cum_secs))
+        .collect()
+}
+
+fn spec(client: &str, framework: Framework, task: Conv2dTask, trials: usize, seed: u64) -> JobSpec {
+    JobSpec {
+        client: client.to_string(),
+        framework,
+        task,
+        trials,
+        batch: 8,
+        pipeline_depth: 1,
+        seed,
+        quick: true,
+    }
+}
+
+#[test]
+fn depth_1_job_is_bit_identical_to_the_in_process_driver() {
+    let model = model_by_name("alexnet").unwrap();
+    let budget = TuneBudget { total_measurements: 24, batch: 8, workers: 2, ..Default::default() };
+    let seed = 9u64;
+
+    // Reference: the in-process compare driver (AutoTVM replans from every
+    // observation, so any ordering drift in the service path would change
+    // its plans and show up here).
+    let local =
+        tune_model_with(&analytical_engine(), Framework::AutoTvm, &model, budget, true, seed)
+            .unwrap();
+
+    let handle =
+        spawn_tune_local(Arc::new(analytical_engine()), TuneServeOptions::default()).unwrap();
+    let addr = handle.addr().to_string();
+    let mut client = TuneClient::connect(&addr, "parity").unwrap();
+    assert_eq!(client.backend(), "analytical");
+
+    let uniq = model.unique_tasks();
+    assert_eq!(local.tasks.len(), uniq.len());
+    let mut jobs = Vec::new();
+    for (i, (task, _)) in uniq.iter().enumerate() {
+        // Same per-task seed derivation as the in-process driver.
+        let s = spec("parity", Framework::AutoTvm, *task, 24, seed ^ (i as u64) << 32);
+        let (id, _) = client.submit(s).unwrap();
+        jobs.push(id);
+    }
+    for (i, id) in jobs.iter().enumerate() {
+        let done = client.wait(*id, 7, Duration::from_millis(5)).unwrap();
+        assert_eq!(done.status.state, JobState::Done, "job {id}: {:?}", done.status.error);
+        let outcome = done.outcome.expect("done job must carry an outcome");
+        let reference = &local.tasks[i].result;
+        assert_eq!(outcome.measurements, reference.measurements, "task {i}");
+        assert_eq!(outcome.best.seconds, reference.best.seconds, "task {i}: best diverged");
+        assert_eq!(outcome.best.cycles, reference.best.cycles);
+        let space = ConfigSpace::for_task(&uniq[i].0, Framework::AutoTvm.tunes_hardware());
+        let ref_values = reference.best_point.as_ref().map(|p| PointKey::of(&space, p).values);
+        assert_eq!(outcome.best_values, ref_values, "task {i}: best point diverged");
+        assert_eq!(rows(&done.trace), rows(&reference.trace), "task {i}: trace diverged");
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn quota_admission_refuses_exhausted_accounts_and_the_ledger_conserves() {
+    let opts = TuneServeOptions { quota: 10, ..Default::default() };
+    let handle = spawn_tune_local(Arc::new(analytical_engine()), opts).unwrap();
+    let addr = handle.addr().to_string();
+    let task = Conv2dTask::new(1, 32, 28, 28, 32, 3, 3, 1, 1);
+
+    let mut alice = TuneClient::connect(&addr, "alice").unwrap();
+    assert_eq!(alice.quota(), 10);
+    // The job asks for 100 points; the 10-point account is binding.
+    let (id, _) = alice.submit(spec("alice", Framework::Random, task, 100, 3)).unwrap();
+    let done = alice.wait(id, 4, Duration::from_millis(5)).unwrap();
+    assert_eq!(done.status.state, JobState::Done);
+    let outcome = done.outcome.unwrap();
+    assert_eq!(outcome.measurements, 10, "the quota must cap the job");
+    assert_eq!(outcome.fresh + outcome.cache_served, outcome.measurements);
+    assert_eq!(done.trace.len(), 10);
+
+    // The spent account is refused at the door with the documented text.
+    let err = alice.submit(spec("alice", Framework::Random, task, 10, 4)).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("quota exhausted: client alice"), "unexpected refusal: {msg}");
+
+    // Quotas are per (client, task): a different client still gets in, and
+    // the repeat of the same points is served from the daemon's shared
+    // cache — zero fresh measurements (measure once, charge everyone).
+    let mut bob = TuneClient::connect(&addr, "bob").unwrap();
+    let (id, _) = bob.submit(spec("bob", Framework::Random, task, 10, 3)).unwrap();
+    let done = bob.wait(id, 4, Duration::from_millis(5)).unwrap();
+    let outcome = done.outcome.unwrap();
+    assert_eq!(outcome.measurements, 10);
+    assert_eq!(outcome.fresh, 0, "repeat job must be cache-served");
+    assert_eq!(outcome.cache_served, 10);
+
+    // Exact conservation, account by account: everything charged settled.
+    let stats = handle.ledger_stats();
+    assert_eq!(stats.per_task_points, 10);
+    assert_eq!(stats.tenants.len(), 2);
+    for t in &stats.tenants {
+        assert_eq!(t.account.charged, 10, "{}/{}", t.framework, t.task);
+        assert_eq!(t.account.settled(), 10, "{}/{}", t.framework, t.task);
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn cancel_stops_queued_jobs_immediately_and_running_jobs_at_a_batch_boundary() {
+    // One runner and a throttled fleet: job 1 occupies the runner while
+    // job 2 waits in the queue.
+    let shard = throttled_shard(Duration::from_millis(5));
+    let engine = Engine::new(EngineConfig {
+        backend: BackendSpec::Remote(vec![shard.addr().to_string()]),
+        workers: 2,
+        ..Default::default()
+    })
+    .unwrap();
+    let opts = TuneServeOptions { runners: 1, ..Default::default() };
+    let handle = spawn_tune_local(Arc::new(engine), opts).unwrap();
+    let addr = handle.addr().to_string();
+    let task = Conv2dTask::new(1, 32, 28, 28, 32, 3, 3, 1, 1);
+
+    let mut client = TuneClient::connect(&addr, "cli").unwrap();
+    let (running, _) = client.submit(spec("cli", Framework::Random, task, 400, 11)).unwrap();
+    let (queued, _) = client.submit(spec("cli", Framework::Random, task, 400, 12)).unwrap();
+
+    // The queued job dies right where it stands: no runner ever picks it
+    // up, its trace stays empty, it carries no outcome.
+    assert_eq!(client.cancel(queued).unwrap(), JobState::Cancelled);
+    let done = client.wait(queued, 8, Duration::from_millis(5)).unwrap();
+    assert_eq!(done.status.state, JobState::Cancelled);
+    assert!(done.trace.is_empty());
+    assert!(done.outcome.is_none());
+
+    // The running job: wait for real progress, then cancel. It stops at
+    // the next batch boundary, keeping the partial trace and an outcome.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let status = client.status(running).unwrap();
+        if status.measured > 0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "job {running} never made progress");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let state = client.cancel(running).unwrap();
+    assert!(state == JobState::Running || state == JobState::Cancelled);
+    let done = client.wait(running, 64, Duration::from_millis(5)).unwrap();
+    assert_eq!(done.status.state, JobState::Cancelled);
+    let outcome = done.outcome.expect("a cancelled running job keeps its partial outcome");
+    assert!(outcome.measurements > 0);
+    assert!(outcome.measurements < 400, "cancel must stop the job early");
+    assert_eq!(done.trace.len(), outcome.measurements);
+
+    handle.shutdown();
+    shard.shutdown();
+}
+
+#[test]
+fn refusals_carry_the_documented_error_text() {
+    let opts = TuneServeOptions { trace_cap: 8, ..Default::default() };
+    let handle = spawn_tune_local(Arc::new(analytical_engine()), opts).unwrap();
+    let addr = handle.addr().to_string();
+    let task = Conv2dTask::new(1, 32, 28, 28, 32, 3, 3, 1, 1);
+    let mut client = TuneClient::connect(&addr, "cli").unwrap();
+
+    // Unknown job, all three job-addressed ops.
+    for err in [
+        client.status(99).unwrap_err(),
+        client.trace_page(99, None, 4).unwrap_err(),
+        client.cancel(99).unwrap_err(),
+    ] {
+        assert!(err.to_string().contains("unknown job 99"), "unexpected: {err}");
+    }
+
+    // A finished 32-point job on a trace_cap=8 daemon retains 25..=32.
+    let (id, _) = client.submit(spec("cli", Framework::Random, task, 32, 5)).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while client.status(id).unwrap().state != JobState::Done {
+        assert!(Instant::now() < deadline, "job never finished");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // A cursor of the wrong kind (or for the wrong job) is unintelligible.
+    let jobs_cursor = Cursor::jobs_start().encode();
+    let err = client.trace_page(id, Some(jobs_cursor), 4).unwrap_err();
+    assert!(err.to_string().contains("unintelligible cursor"), "unexpected: {err}");
+    let foreign = Cursor { kind: CursorKind::Trace, job: id + 1, last: 0 }.encode();
+    let err = client.trace_page(id, Some(foreign), 4).unwrap_err();
+    assert!(err.to_string().contains("unintelligible cursor"), "unexpected: {err}");
+
+    // A cursor pointing into the compacted-away prefix is stale.
+    let stale = Cursor { kind: CursorKind::Trace, job: id, last: 2 }.encode();
+    let err = client.trace_page(id, Some(stale), 4).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("stale cursor"), "unexpected: {msg}");
+    assert!(msg.contains("oldest retained entry is 25"), "unexpected: {msg}");
+
+    // Resuming exactly at the window start still works, gap-free.
+    let resume = Cursor { kind: CursorKind::Trace, job: id, last: 24 }.encode();
+    let page = client.trace_page(id, Some(resume), 100).unwrap();
+    assert_eq!(page.entries.first().unwrap().ordinal, 25);
+    assert_eq!(page.entries.len(), 8);
+    assert!(page.done);
+
+    // A frame that is not a tune request at all gets the measure wire's
+    // classic structured refusal, not a dropped connection.
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    raw.write_all(b"this is not json\n").unwrap();
+    raw.flush().unwrap();
+    let mut line = String::new();
+    BufReader::new(raw.try_clone().unwrap()).read_line(&mut line).unwrap();
+    assert!(line.contains("unintelligible request"), "unexpected reply: {line}");
+
+    handle.shutdown();
+}
+
+#[test]
+fn soak_concurrent_clients_on_a_churning_fleet() {
+    // Two loopback measure shards behind the daemon; shard B is killed
+    // mid-soak and revived at the same address.
+    let shard_a = throttled_shard(Duration::from_millis(1));
+    let shard_b = throttled_shard(Duration::from_millis(1));
+    let addr_b = shard_b.addr().to_string();
+    let engine = Engine::new(EngineConfig {
+        backend: BackendSpec::Remote(vec![shard_a.addr().to_string(), addr_b.clone()]),
+        workers: 2,
+        ..Default::default()
+    })
+    .unwrap();
+    let opts = TuneServeOptions { runners: 4, ..Default::default() };
+    let handle = spawn_tune_local(Arc::new(engine), opts).unwrap();
+    let daemon_addr = handle.addr().to_string();
+
+    let tasks = [
+        Conv2dTask::new(1, 32, 28, 28, 32, 3, 3, 1, 1),
+        Conv2dTask::new(1, 64, 14, 14, 64, 3, 3, 1, 1),
+    ];
+    let clients = 12usize;
+    let trials = 24usize;
+
+    // Churn: kill shard B mid-run, then bring a fresh shard up on the same
+    // address (the fleet re-pings dead shards and revives them).
+    let churn = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(150));
+        shard_b.shutdown();
+        std::thread::sleep(Duration::from_millis(150));
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            match serve_measure(&addr_b, Arc::new(analytical_engine())) {
+                Ok(handle) => break handle,
+                Err(_) if Instant::now() < deadline => {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) => panic!("could not revive shard at {addr_b}: {e}"),
+            }
+        }
+    });
+
+    // Each client submits one job per task, then streams both with small
+    // pages, checking that pagination is gap-free and monotone however the
+    // fleet churns underneath.
+    let workers: Vec<_> = (0..clients)
+        .map(|c| {
+            let daemon_addr = daemon_addr.clone();
+            std::thread::spawn(move || -> anyhow::Result<()> {
+                let name = format!("client{c}");
+                let mut client = TuneClient::connect(&daemon_addr, &name)?;
+                let mut jobs = Vec::new();
+                for (t, task) in tasks.iter().enumerate() {
+                    let mut s =
+                        spec(&name, Framework::Random, *task, trials, (c as u64) << 8 | t as u64);
+                    s.batch = 6;
+                    s.pipeline_depth = 2;
+                    let (id, _) = client.submit(s)?;
+                    jobs.push(id);
+                }
+                for id in jobs {
+                    let done = client.wait(id, 5, Duration::from_millis(10))?;
+                    anyhow::ensure!(
+                        done.status.state == JobState::Done,
+                        "job {id} ended {} ({:?})",
+                        done.status.state.name(),
+                        done.status.error
+                    );
+                    let outcome = done.outcome.expect("done job must carry an outcome");
+                    anyhow::ensure!(outcome.measurements == trials);
+                    anyhow::ensure!(
+                        outcome.fresh + outcome.cache_served == outcome.measurements,
+                        "provenance must partition the measurements"
+                    );
+                    // Gap-free, monotone stream: dense ordinals, monotone
+                    // running best.
+                    anyhow::ensure!(done.trace.len() == trials);
+                    let mut best = 0.0f64;
+                    for (i, e) in done.trace.iter().enumerate() {
+                        anyhow::ensure!(e.ordinal == i + 1, "gap at ordinal {}", e.ordinal);
+                        anyhow::ensure!(e.best_gflops >= best, "running best went backwards");
+                        best = e.best_gflops;
+                    }
+                    // Bounded submit → first-result latency (loose: CI).
+                    let first = done.status.first_result_secs.unwrap_or(f64::INFINITY);
+                    anyhow::ensure!(first < 60.0, "first result took {first:.1}s");
+                }
+                Ok(())
+            })
+        })
+        .collect();
+
+    for (c, worker) in workers.into_iter().enumerate() {
+        worker.join().unwrap().unwrap_or_else(|e| panic!("client{c}: {e:#}"));
+    }
+    let revived = churn.join().unwrap();
+
+    // No starvation: every job the daemon ever held is Done.
+    let statuses = handle.job_statuses();
+    assert_eq!(statuses.len(), clients * tasks.len());
+    for s in &statuses {
+        assert_eq!(s.state, JobState::Done, "job {} ({}/{})", s.id, s.client, s.task_id);
+    }
+
+    // Exact conservation on every (client, task) account: the loop charges
+    // exactly what it submits and everything submitted was observed.
+    let stats = handle.ledger_stats();
+    assert_eq!(stats.tenants.len(), clients * tasks.len());
+    for t in &stats.tenants {
+        assert_eq!(t.account.charged, trials, "{}/{}", t.framework, t.task);
+        assert_eq!(t.account.settled(), trials, "{}/{}", t.framework, t.task);
+        assert_eq!(t.account.fresh + t.account.cache_served, trials);
+    }
+
+    handle.shutdown();
+    shard_a.shutdown();
+    revived.shutdown();
+}

@@ -229,6 +229,7 @@ fn capacity_shrinks_on_shard_death_and_regrows_on_revival_without_starving_tenan
             dispatcher: &dispatcher,
             framework: "random",
             task_id: task_ids[idx],
+            observer: None,
         };
         tune_task_tenant(&engine, &spaces[idx], &mut strategy, budget, Some(&tenant))
     };
@@ -277,6 +278,7 @@ fn capacity_shrinks_on_shard_death_and_regrows_on_revival_without_starving_tenan
         dispatcher: &dispatcher,
         framework: "random",
         task_id: "t2",
+        observer: None,
     };
     let small = TuneBudget { total_measurements: 4, batch: 4, workers: 2, ..Default::default() };
     let r = tune_task_tenant(&engine, &spaces[0], &mut strategy, small, Some(&tenant)).unwrap();
@@ -305,6 +307,7 @@ fn ledger_exhaustion_stops_a_job_mid_batch() {
         dispatcher: &dispatcher,
         framework: "random",
         task_id: "t0",
+        observer: None,
     };
     let mut strategy = arco::baselines::RandomSearch::new(space.clone(), 3);
     let big = TuneBudget { total_measurements: 100, batch: 4, workers: 2, ..Default::default() };

@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# Docs link check: every relative markdown link in README.md and docs/
+# must point at a file (or file#anchor) that exists in the repo. External
+# links (http/https/mailto) are skipped — CI has no network. Run from
+# anywhere; paths resolve against the repo root.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+fail=0
+# shellcheck disable=SC2207
+files=(README.md $(ls docs/*.md 2>/dev/null || true))
+
+for f in "${files[@]}"; do
+    [ -f "$f" ] || continue
+    dir=$(dirname "$f")
+    # Pull out every inline-link target: [text](target). One per line,
+    # tolerating several links on one line.
+    while IFS= read -r target; do
+        [ -n "$target" ] || continue
+        case "$target" in
+        http://* | https://* | mailto:*) continue ;;
+        '#'*) continue ;; # same-file anchor; section drift is a review concern
+        esac
+        path=${target%%#*}
+        [ -n "$path" ] || continue
+        if ! [ -e "$dir/$path" ]; then
+            echo "dead link in $f: ($target) -> $dir/$path does not exist" >&2
+            fail=1
+        fi
+    done < <(grep -o '\[[^]]*\]([^)]*)' "$f" | sed 's/.*](\([^)]*\))/\1/')
+done
+
+if [ "$fail" -ne 0 ]; then
+    echo "docs link check failed" >&2
+    exit 1
+fi
+echo "docs link check ok: all relative links in README.md and docs/ resolve"

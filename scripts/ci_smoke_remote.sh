@@ -1,11 +1,21 @@
 #!/usr/bin/env bash
-# End-to-end measurement-fleet smoke: the same seeded compare run must
-# produce identical inference numbers through the in-process backend and
-# through a loopback `serve-measure` shard — for both the analytical proxy
-# and the vta-sim cycle oracle — plus two fleet-operations checks:
-# weighted placement on a heterogeneous (one-shard-throttled) fleet must
-# still match in-process numbers, and a `journal merge` → `--warm-start`
-# round trip must replay a journaled run with zero fresh simulations.
+# End-to-end fleet smoke. Each pass below proves one workflow documented
+# in docs/OPERATIONS.md end to end, binary-only, over loopback:
+#
+#   smoke_backend          "Starting a fleet" — remote == in-process, per
+#                          backend (analytical and vta-sim)
+#   smoke_heterogeneous    "Heterogeneous fleets" — weighted placement on
+#                          a throttled shard, identical numbers
+#   smoke_warm_start       "Journal merge and warm start" — merge →
+#                          --warm-start replays with zero fresh sims
+#   smoke_warm_start_scale "Journal merge and warm start" — 20k-record
+#                          preload inside the startup budget
+#   smoke_pipelined        "Pipelined tuning" — depth-1 parity, depth-2
+#                          shared-budget conservation
+#   smoke_serve_tune       "Tuning as a service" — serve-tune daemon over
+#                          a loopback shard; a second client's identical
+#                          job is served from the shared cache (fresh=0)
+#
 # Wall-clock outputs (compile time) legitimately differ between runs, so
 # the diffs target results/table6_inference.md, which is a pure function
 # of the measurements.
@@ -54,6 +64,8 @@ run_compare() {
         --config configs/smoke.json --quick --seed 7 --workers 2 "$@"
 }
 
+# docs/OPERATIONS.md § "Starting a fleet": a compare run through a
+# loopback shard must be bit-identical to the in-process backend.
 smoke_backend() {
     local backend=$1
 
@@ -89,6 +101,8 @@ smoke_backend() {
     echo "[$backend] ok: remote fleet measurements identical to in-process"
 }
 
+# docs/OPERATIONS.md § "Heterogeneous fleets": --placement weighted
+# moves wall-clock off a slow shard without changing a single number.
 smoke_heterogeneous() {
     echo "== heterogeneous fleet: weighted placement on a throttled shard =="
     run_compare --backend analytical
@@ -118,6 +132,8 @@ smoke_heterogeneous() {
     echo "heterogeneous ok: weighted placement matches in-process numbers"
 }
 
+# docs/OPERATIONS.md § "Journal merge and warm start": merge shard
+# journals, warm-start a fresh shard, replay with zero fresh simulations.
 smoke_warm_start() {
     echo "== journal merge -> warm start round trip =="
     local j1=/tmp/arco_smoke_journal.jsonl
@@ -157,6 +173,8 @@ smoke_warm_start() {
     echo "warm start ok: merge -> warm-start replays the run from cache"
 }
 
+# docs/OPERATIONS.md § "Journal merge and warm start", at scale: a
+# 20k-record preload must fit inside the shard's startup budget.
 smoke_warm_start_scale() {
     echo "== warm start at scale: synthetic 20k-record journal preload =="
     local big=/tmp/arco_smoke_big_journal.jsonl
@@ -196,6 +214,8 @@ smoke_warm_start_scale() {
     echo "warm start scale ok: 20000 records preloaded in $((t1 - t0))s"
 }
 
+# docs/OPERATIONS.md § "Pipelined tuning": depth 1 over the fleet stays
+# bit-identical; depth 2 under --shared-budget conserves the ledger.
 smoke_pipelined() {
     echo "== pipelined tuning: depth-1 parity and depth-2 budget conservation =="
     run_compare --backend analytical
@@ -258,10 +278,76 @@ smoke_pipelined() {
     }' "$pipe_log"
 }
 
+# docs/OPERATIONS.md § "Tuning as a service": a serve-tune daemon over a
+# loopback measure shard runs two clients' identical jobs; the first pays
+# fresh measurements, the second is served entirely from the daemon's
+# shared cache (fresh=0) — "measure once, charge everyone" over the wire.
+smoke_serve_tune() {
+    echo "== serve-tune: tuning-as-a-service daemon over a loopback shard =="
+    local out shard_addr
+    out=$(start_shard "$SERVE_LOG" --backend analytical)
+    shard_addr=${out%% *}
+    SERVER_PID=${out##* }
+
+    : >"$SERVE_LOG2"
+    "$BIN" serve-tune --addr 127.0.0.1:0 --backend "remote:$shard_addr" \
+        --workers 2 --jobs 2 >"$SERVE_LOG2" 2>&1 &
+    SERVER2_PID=$!
+    local daemon_addr=""
+    for _ in $(seq 1 100); do
+        daemon_addr=$(sed -n 's/^serve-tune: listening on //p' "$SERVE_LOG2" | head -n1)
+        [ -n "$daemon_addr" ] && break
+        kill -0 "$SERVER2_PID" 2>/dev/null || { cat "$SERVE_LOG2" >&2; echo "daemon died" >&2; exit 1; }
+        sleep 0.1
+    done
+    [ -n "$daemon_addr" ] || { cat "$SERVE_LOG2" >&2; echo "daemon never reported its address" >&2; exit 1; }
+    echo "serve-tune daemon at $daemon_addr (fleet: $shard_addr)"
+
+    submit_jobs() {
+        "$BIN" tune submit --addr "$daemon_addr" --client "$1" --model alexnet \
+            --framework random --trials 24 --batch 8 --seed 7 --quick --wait
+    }
+
+    local log1=/tmp/arco_tune_client1.log log2=/tmp/arco_tune_client2.log
+    submit_jobs smoke1 | tee "$log1"
+    grep -q "^tune submit: random on alexnet:" "$log1" || {
+        echo "client 1 must print the submit summary"; exit 1;
+    }
+    # Same tasks, same seeds, a different client: the daemon's shared
+    # engine has everything cached, so not one fresh simulation runs.
+    submit_jobs smoke2 | tee "$log2"
+    grep -q "fresh=0 " "$log2" || {
+        echo "client 2 must be served from the shared cache (fresh=0); summary was:"
+        grep "^tune submit:" "$log2" || true
+        exit 1
+    }
+    # Both clients' identical jobs must land on identical numbers.
+    local inf1 inf2
+    inf1=$(sed -n 's/^tune submit: .*weighted inference \([0-9.e-]*\)s.*/\1/p' "$log1")
+    inf2=$(sed -n 's/^tune submit: .*weighted inference \([0-9.e-]*\)s.*/\1/p' "$log2")
+    [ -n "$inf1" ] && [ "$inf1" = "$inf2" ] || {
+        echo "cache-served rerun changed the numbers: '$inf1' vs '$inf2'"; exit 1;
+    }
+    # The job table survives both runs and every job finished.
+    "$BIN" tune status --addr "$daemon_addr" | tee /tmp/arco_tune_status.log
+    [ "$(grep -c "^job " /tmp/arco_tune_status.log)" -eq 10 ] || {
+        echo "daemon must hold 2 clients x 5 alexnet tasks = 10 jobs"; exit 1;
+    }
+    grep -q " failed " /tmp/arco_tune_status.log && { echo "no job may fail"; exit 1; }
+
+    kill "$SERVER_PID" "$SERVER2_PID" 2>/dev/null || true
+    wait "$SERVER_PID" 2>/dev/null || true
+    wait "$SERVER2_PID" 2>/dev/null || true
+    SERVER_PID=0
+    SERVER2_PID=0
+    echo "serve-tune ok: second client served from the shared cache with identical numbers"
+}
+
 smoke_backend analytical
 smoke_backend vta-sim
 smoke_heterogeneous
 smoke_warm_start
 smoke_warm_start_scale
 smoke_pipelined
-echo "smoke ok: remote == in-process, weighted placement, warm start (incl. 20k-record preload) and pipelined tuning verified"
+smoke_serve_tune
+echo "smoke ok: remote == in-process, weighted placement, warm start (incl. 20k-record preload), pipelined tuning and serve-tune verified"
