@@ -1,0 +1,112 @@
+//! Rule `codec-discipline`: the measurement wire and journal hot paths
+//! use the zero-copy streaming codec. The allocating tree parser
+//! (`Json::parse`) is reserved for *named lenient-fallback functions* —
+//! the compatibility escape hatches that accept frames from older or
+//! foreign writers. Anywhere else in the codec files it is a hot-path
+//! regression.
+
+use super::model::SourceFile;
+use super::Finding;
+
+pub const RULE: &str = "codec-discipline";
+
+/// (file, functions where the tree parser is the designated fallback).
+pub const ALLOWED: &[(&str, &[&str])] = &[
+    (
+        "rust/src/eval/proto.rs",
+        &[
+            "read_frame",
+            "record_from_line",
+            "record_identity_from_line",
+            "request_from_line",
+            "response_from_line",
+        ],
+    ),
+    (
+        "rust/src/eval/journal.rs",
+        &["check_header", "refuse_if_v1", "compact_journal"],
+    ),
+    (
+        "rust/src/eval/tune_proto.rs",
+        &["tune_request_from_line", "tune_response_from_line"],
+    ),
+    ("rust/src/eval/remote.rs", &[]),
+    ("rust/src/eval/server.rs", &[]),
+    ("rust/src/eval/tune_server.rs", &[]),
+];
+
+pub fn applies_to(path: &str) -> bool {
+    ALLOWED.iter().any(|(f, _)| *f == path)
+}
+
+fn allowed_fns(path: &str) -> &'static [&'static str] {
+    ALLOWED
+        .iter()
+        .find(|(f, _)| *f == path)
+        .map(|(_, fns)| *fns)
+        .unwrap_or(&[])
+}
+
+pub fn check(file: &SourceFile) -> Vec<Finding> {
+    let allowed = allowed_fns(&file.path);
+    let mut out = Vec::new();
+    for i in 0..file.tokens.len() {
+        if file.excluded[i] {
+            continue;
+        }
+        // Json :: parse
+        let hit = file.tokens[i].is_ident("Json")
+            && file.tokens.get(i + 1).is_some_and(|t| t.is_punct(':'))
+            && file.tokens.get(i + 2).is_some_and(|t| t.is_punct(':'))
+            && file.tokens.get(i + 3).is_some_and(|t| t.is_ident("parse"));
+        if !hit {
+            continue;
+        }
+        let in_fallback = file
+            .enclosing_fn(i)
+            .is_some_and(|f| allowed.contains(&f.name.as_str()));
+        if in_fallback {
+            continue;
+        }
+        let where_ = file
+            .enclosing_fn(i)
+            .map(|f| format!("`{}`", f.name))
+            .unwrap_or_else(|| "module scope".to_string());
+        out.push(Finding {
+            rule: RULE,
+            file: file.path.clone(),
+            line: file.tokens[i].line,
+            message: format!(
+                "tree `Json::parse` in {where_} — hot-path codec files must \
+                 stream; tree parsing belongs only in the named lenient-fallback \
+                 functions"
+            ),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_outside_fallback_is_flagged() {
+        let f = SourceFile::parse(
+            "rust/src/eval/proto.rs".to_string(),
+            "fn hot_path(line: &str) { let v = Json::parse(line); }",
+        );
+        let fs = check(&f);
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].message.contains("hot_path"));
+    }
+
+    #[test]
+    fn parse_inside_named_fallback_is_allowed() {
+        let f = SourceFile::parse(
+            "rust/src/eval/proto.rs".to_string(),
+            "fn request_from_line(line: &str) { let v = Json::parse(line); }",
+        );
+        assert!(check(&f).is_empty());
+    }
+}

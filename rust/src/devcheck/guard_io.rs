@@ -1,0 +1,195 @@
+//! Rule `guard-io`: a live `MutexGuard` must not span a socket write or
+//! other blocking I/O. A slow or dead peer would hold the lock for the
+//! whole daemon — every other connection stalls behind one client's TCP
+//! window.
+//!
+//! Heuristic: a `let` binding whose initializer calls `lock`,
+//! `try_lock`, `lock_unpoisoned` or `wait_unpoisoned` is treated as a
+//! guard. While that binding is in scope (until its block closes or an
+//! explicit `drop(name)`), any token naming a known I/O entry point is
+//! flagged.
+
+use super::model::SourceFile;
+use super::Finding;
+
+pub const RULE: &str = "guard-io";
+
+pub const CHECKED_FILES: &[&str] = &[
+    "rust/src/eval/server.rs",
+    "rust/src/eval/tune_server.rs",
+    "rust/src/eval/remote.rs",
+    "rust/src/eval/tune_client.rs",
+];
+
+/// Calls whose result is (or contains) a lock guard.
+const GUARD_SOURCES: &[&str] = &["lock", "try_lock", "lock_unpoisoned", "wait_unpoisoned"];
+
+/// Free functions that hit the wire.
+const IO_FNS: &[&str] = &[
+    "write_frame",
+    "write_request_frame",
+    "write_response_frame",
+    "write_tune_request_frame",
+    "write_tune_response_frame",
+    "write_record_line",
+    "read_frame",
+    "read_frame_line",
+];
+
+/// Methods that hit the wire (flagged as `.name(`).
+const IO_METHODS: &[&str] = &["write_all", "write_fmt", "flush", "read_line", "read_exact"];
+
+pub fn applies_to(path: &str) -> bool {
+    CHECKED_FILES.contains(&path)
+}
+
+struct Guard {
+    name: String,
+    depth: usize,
+    line: usize,
+}
+
+pub fn check(file: &SourceFile) -> Vec<Finding> {
+    let toks = &file.tokens;
+    let mut out = Vec::new();
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut depth = 0usize;
+    let mut i = 0usize;
+    while i < toks.len() {
+        if file.excluded[i] {
+            i += 1;
+            continue;
+        }
+        let t = &toks[i];
+        if t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct('}') {
+            depth = depth.saturating_sub(1);
+            guards.retain(|g| g.depth <= depth);
+        } else if t.is_ident("let")
+            && !(i > 0 && (toks[i - 1].is_ident("if") || toks[i - 1].is_ident("while")))
+        {
+            // `let [mut] name = <init> ;` — guard if the initializer
+            // calls one of the guard sources. `if let`/`while let` are
+            // pattern matches, not bindings this scan can track.
+            let mut j = i + 1;
+            if toks.get(j).is_some_and(|t| t.is_ident("mut")) {
+                j += 1;
+            }
+            if let Some(name) = toks.get(j).and_then(|t| t.ident()) {
+                let name = name.to_string();
+                // Scan the initializer to its `;` at the current depth.
+                let mut k = j + 1;
+                let mut d = 0usize;
+                let mut is_guard = false;
+                while k < toks.len() {
+                    let tk = &toks[k];
+                    if tk.is_punct('{') || tk.is_punct('(') || tk.is_punct('[') {
+                        d += 1;
+                    } else if tk.is_punct('}') || tk.is_punct(')') || tk.is_punct(']') {
+                        if d == 0 {
+                            break;
+                        }
+                        d -= 1;
+                    } else if tk.is_punct(';') && d == 0 {
+                        break;
+                    } else if d == 0
+                        && tk.ident().is_some_and(|n| GUARD_SOURCES.contains(&n))
+                        && toks.get(k + 1).is_some_and(|t| t.is_punct('('))
+                    {
+                        // Depth 0 only: a lock taken inside a nested
+                        // block (`let v = { let g = lock(...); ... };`)
+                        // is dropped before the binding exists.
+                        is_guard = true;
+                    }
+                    k += 1;
+                }
+                if is_guard {
+                    guards.push(Guard { name, depth, line: t.line });
+                }
+                i = k;
+                continue;
+            }
+        } else if t.is_ident("drop")
+            && toks.get(i + 1).is_some_and(|t| t.is_punct('('))
+        {
+            if let Some(dropped) = toks.get(i + 2).and_then(|t| t.ident()) {
+                guards.retain(|g| g.name != dropped);
+            }
+        } else if let Some(name) = t.ident() {
+            let is_io_fn = IO_FNS.contains(&name)
+                && toks.get(i + 1).is_some_and(|t| t.is_punct('('));
+            let is_io_method = IO_METHODS.contains(&name)
+                && i > 0
+                && toks[i - 1].is_punct('.');
+            if (is_io_fn || is_io_method) && !guards.is_empty() {
+                let g = guards.last().expect("non-empty");
+                out.push(Finding {
+                    rule: RULE,
+                    file: file.path.clone(),
+                    line: t.line,
+                    message: format!(
+                        "`{name}` performs I/O while lock guard `{}` (line {}) \
+                         is live — drop the guard before touching the wire",
+                        g.name, g.line
+                    ),
+                });
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(src: &str) -> SourceFile {
+        SourceFile::parse("rust/src/eval/server.rs".to_string(), src)
+    }
+
+    #[test]
+    fn io_under_guard_is_flagged() {
+        let f = parse(
+            "fn serve() { let st = state.lock().unwrap(); \
+             write_frame(&mut out, &resp); }",
+        );
+        let fs = check(&f);
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].message.contains("`st`"));
+    }
+
+    #[test]
+    fn guard_scoped_to_inner_block_is_fine() {
+        let f = parse(
+            "fn serve() { { let st = lock_unpoisoned(&state); st.bump(); } \
+             write_frame(&mut out, &resp); }",
+        );
+        assert!(check(&f).is_empty());
+    }
+
+    #[test]
+    fn lock_inside_a_block_initializer_is_not_a_guard() {
+        let f = parse(
+            "fn serve() { let resp = { let g = lock_unpoisoned(&s); g.val() }; \
+             write_frame(&mut out, &resp); }",
+        );
+        assert!(check(&f).is_empty());
+    }
+
+    #[test]
+    fn explicit_drop_releases_the_guard() {
+        let f = parse(
+            "fn serve() { let st = state.lock().unwrap(); drop(st); \
+             out.write_all(b\"x\"); }",
+        );
+        assert!(check(&f).is_empty());
+    }
+
+    #[test]
+    fn plain_bindings_are_not_guards() {
+        let f = parse("fn serve() { let n = count(); out.flush(); }");
+        assert!(check(&f).is_empty());
+    }
+}

@@ -1,0 +1,119 @@
+//! Rule `ledger-order`: the equal-budget protocol ("measure once,
+//! charge everyone") only holds if every tuning-path batch is charged
+//! to the [`crate::eval::BudgetLedger`] *before* it is submitted to the
+//! engine, and settled only *after* results come back.
+//!
+//! Mechanically: in any function (outside `eval/engine.rs`, which owns
+//! the batch API) that calls `submit_batch` or `measure_batch*`, a
+//! `charge(...)` call must lexically precede the submission and no
+//! `settle(...)` call may precede it.
+
+use super::model::SourceFile;
+use super::Finding;
+
+pub const RULE: &str = "ledger-order";
+
+/// The engine module defines the batch API; calls inside it are the
+/// implementation, not tuning-path submissions.
+const DEFINING_FILE: &str = "rust/src/eval/engine.rs";
+
+pub fn applies_to(path: &str) -> bool {
+    path.starts_with("rust/src/") && path.ends_with(".rs") && path != DEFINING_FILE
+}
+
+fn is_submit_name(name: &str) -> bool {
+    name == "submit_batch" || name.starts_with("measure_batch")
+}
+
+/// A call (not a definition): `name` followed by `(`, not preceded by
+/// `fn`, and not a path segment being defined (`fn measure_batch`).
+fn is_call(file: &SourceFile, i: usize) -> bool {
+    file.tokens.get(i + 1).is_some_and(|t| t.is_punct('('))
+        && !(i > 0 && file.tokens[i - 1].is_ident("fn"))
+}
+
+pub fn check(file: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (i, tok) in file.tokens.iter().enumerate() {
+        if file.excluded[i] {
+            continue;
+        }
+        let Some(name) = tok.ident() else { continue };
+        if !is_submit_name(name) || !is_call(file, i) {
+            continue;
+        }
+        let Some(f) = file.enclosing_fn(i) else { continue };
+        let mut saw_charge = false;
+        let mut settle_line = None;
+        for j in f.body_start..i {
+            if let Some(n) = file.tokens[j].ident() {
+                if n == "charge" && is_call(file, j) {
+                    saw_charge = true;
+                } else if n == "settle" && is_call(file, j) {
+                    settle_line = Some(file.tokens[j].line);
+                }
+            }
+        }
+        if !saw_charge {
+            out.push(Finding {
+                rule: RULE,
+                file: file.path.clone(),
+                line: tok.line,
+                message: format!(
+                    "`{name}` submits measurements in `{}` with no preceding \
+                     `charge(...)` — the batch bypasses the budget ledger",
+                    f.name
+                ),
+            });
+        } else if let Some(sl) = settle_line {
+            out.push(Finding {
+                rule: RULE,
+                file: file.path.clone(),
+                line: tok.line,
+                message: format!(
+                    "`settle(...)` on line {sl} precedes `{name}` in `{}` — \
+                     settlement must follow the submission it pays for",
+                    f.name
+                ),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(src: &str) -> SourceFile {
+        SourceFile::parse("rust/src/tuner/task_tuner.rs".to_string(), src)
+    }
+
+    #[test]
+    fn charge_before_submit_is_clean() {
+        let f = parse("fn tune() { ledger.charge(a); engine.submit_batch(b); ledger.settle(c); }");
+        assert!(check(&f).is_empty());
+    }
+
+    #[test]
+    fn missing_charge_is_flagged() {
+        let f = parse("fn tune() { engine.measure_batch_traced(b); }");
+        let fs = check(&f);
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].message.contains("no preceding `charge"));
+    }
+
+    #[test]
+    fn settle_before_submit_is_flagged() {
+        let f = parse("fn tune() { ledger.charge(a); ledger.settle(c); engine.submit_batch(b); }");
+        let fs = check(&f);
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].message.contains("settlement must follow"));
+    }
+
+    #[test]
+    fn definitions_do_not_trip() {
+        let f = parse("impl Engine { fn submit_batch(&self) { inner(); } }");
+        assert!(check(&f).is_empty());
+    }
+}

@@ -1,0 +1,428 @@
+//! A small token-level Rust lexer for the devcheck lints.
+//!
+//! This is deliberately *not* a parser: the lints below only need a
+//! stream of identifiers, punctuation and string literals with correct
+//! line numbers, where nothing inside a string, char literal, raw
+//! string or comment can masquerade as code. Handling exactly those
+//! four confusables correctly is the whole job — `"a.unwrap()"` in an
+//! error message, `'{'` as a char literal, `r#"{"op":"ping"}"#` test
+//! payloads and commented-out code must all be invisible to the rules.
+//!
+//! Numbers, lifetimes and multi-character operators are kept only as
+//! far as the rules need them (`=>` stays two puncts; the rules match
+//! the `=`,`>` pair).
+
+/// One lexed token. Strings carry their *cooked* contents (escapes
+/// resolved), so rules compare against what the program would print.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tok {
+    /// Identifier or keyword (`fn`, `unwrap`, `Json`, ...).
+    Ident(String),
+    /// String literal contents — cooked for `"..."`, verbatim for raw
+    /// strings. The quotes and `r#` framing are stripped.
+    Str(String),
+    /// Char or byte-char literal (contents irrelevant to the rules).
+    Char,
+    /// Lifetime (`'a`, `'static`).
+    Lifetime,
+    /// Numeric literal (contents irrelevant to the rules).
+    Num,
+    /// Any other single character (`.`, `(`, `{`, `!`, `=`, `>`, ...).
+    Punct(char),
+}
+
+/// A token plus the 1-based source line it starts on.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: usize,
+}
+
+impl Token {
+    /// The identifier text, if this token is an identifier.
+    pub fn ident(&self) -> Option<&str> {
+        match &self.tok {
+            Tok::Ident(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The string-literal contents, if this token is a string.
+    pub fn str_lit(&self) -> Option<&str> {
+        match &self.tok {
+            Tok::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// True when this token is exactly the punctuation `c`.
+    pub fn is_punct(&self, c: char) -> bool {
+        self.tok == Tok::Punct(c)
+    }
+
+    /// True when this token is exactly the identifier `s`.
+    pub fn is_ident(&self, s: &str) -> bool {
+        matches!(&self.tok, Tok::Ident(t) if t.as_str() == s)
+    }
+}
+
+/// Lex `src` into a token stream. Unterminated constructs consume to
+/// end of input rather than erroring — a lint pass must never die on
+/// the code it is judging.
+pub fn lex(src: &str) -> Vec<Token> {
+    Lexer { chars: src.chars().collect(), pos: 0, line: 1, out: Vec::new() }.run()
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    pos: usize,
+    line: usize,
+    out: Vec<Token>,
+}
+
+impl Lexer {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.pos + ahead).copied()
+    }
+
+    /// Consume one char, tracking line numbers.
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.pos).copied();
+        if let Some(ch) = c {
+            self.pos += 1;
+            if ch == '\n' {
+                self.line += 1;
+            }
+        }
+        c
+    }
+
+    fn push(&mut self, tok: Tok, line: usize) {
+        self.out.push(Token { tok, line });
+    }
+
+    fn run(mut self) -> Vec<Token> {
+        while let Some(c) = self.peek(0) {
+            let line = self.line;
+            match c {
+                ch if ch.is_whitespace() => {
+                    self.bump();
+                }
+                '/' if self.peek(1) == Some('/') => self.line_comment(),
+                '/' if self.peek(1) == Some('*') => self.block_comment(),
+                '"' => {
+                    self.bump();
+                    let s = self.cooked_string();
+                    self.push(Tok::Str(s), line);
+                }
+                'r' if matches!(self.peek(1), Some('"') | Some('#')) && self.raw_ahead(1) => {
+                    self.bump();
+                    let s = self.raw_string();
+                    self.push(Tok::Str(s), line);
+                }
+                'b' => self.byte_prefixed(line),
+                '\'' => self.quote(line),
+                ch if ch.is_alphabetic() || ch == '_' => {
+                    let s = self.ident();
+                    self.push(Tok::Ident(s), line);
+                }
+                ch if ch.is_ascii_digit() => {
+                    self.number();
+                    self.push(Tok::Num, line);
+                }
+                ch => {
+                    self.bump();
+                    self.push(Tok::Punct(ch), line);
+                }
+            }
+        }
+        self.out
+    }
+
+    fn line_comment(&mut self) {
+        while let Some(c) = self.peek(0) {
+            if c == '\n' {
+                break;
+            }
+            self.bump();
+        }
+    }
+
+    /// Rust block comments nest.
+    fn block_comment(&mut self) {
+        self.bump();
+        self.bump();
+        let mut depth = 1usize;
+        while depth > 0 {
+            match (self.peek(0), self.peek(1)) {
+                (Some('/'), Some('*')) => {
+                    self.bump();
+                    self.bump();
+                    depth += 1;
+                }
+                (Some('*'), Some('/')) => {
+                    self.bump();
+                    self.bump();
+                    depth -= 1;
+                }
+                (Some(_), _) => {
+                    self.bump();
+                }
+                (None, _) => break,
+            }
+        }
+    }
+
+    /// Contents of a `"..."` literal, opening quote already consumed.
+    /// Common escapes are cooked; `\` + newline (line continuation)
+    /// swallows the newline and leading whitespace like rustc does.
+    fn cooked_string(&mut self) -> String {
+        let mut s = String::new();
+        loop {
+            match self.bump() {
+                None | Some('"') => break,
+                Some('\\') => match self.bump() {
+                    Some('n') => s.push('\n'),
+                    Some('r') => s.push('\r'),
+                    Some('t') => s.push('\t'),
+                    Some('0') => s.push('\0'),
+                    Some('\\') => s.push('\\'),
+                    Some('"') => s.push('"'),
+                    Some('\'') => s.push('\''),
+                    Some('\n') => {
+                        while matches!(self.peek(0), Some(c) if c.is_whitespace()) {
+                            self.bump();
+                        }
+                    }
+                    Some('u') => {
+                        // \u{...}: decode if well-formed, else keep raw.
+                        let mut hex = String::new();
+                        if self.peek(0) == Some('{') {
+                            self.bump();
+                            while let Some(c) = self.peek(0) {
+                                self.bump();
+                                if c == '}' {
+                                    break;
+                                }
+                                hex.push(c);
+                            }
+                        }
+                        match u32::from_str_radix(&hex, 16).ok().and_then(char::from_u32) {
+                            Some(c) => s.push(c),
+                            None => s.push_str(&hex),
+                        }
+                    }
+                    Some(other) => s.push(other),
+                    None => break,
+                },
+                Some(c) => s.push(c),
+            }
+        }
+        s
+    }
+
+    /// Is `r`/`br` at `self.pos + offset` really a raw string head —
+    /// zero or more `#` then `"`?
+    fn raw_ahead(&self, offset: usize) -> bool {
+        let mut i = offset;
+        while self.peek(i) == Some('#') {
+            i += 1;
+        }
+        self.peek(i) == Some('"')
+    }
+
+    /// Contents of a raw string; `r` already consumed, `#…"` not yet.
+    fn raw_string(&mut self) -> String {
+        let mut hashes = 0usize;
+        while self.peek(0) == Some('#') {
+            self.bump();
+            hashes += 1;
+        }
+        self.bump(); // opening quote
+        let mut s = String::new();
+        'outer: while let Some(c) = self.bump() {
+            if c == '"' {
+                // A quote closes only when followed by `hashes` hashes.
+                for i in 0..hashes {
+                    if self.peek(i) != Some('#') {
+                        s.push('"');
+                        continue 'outer;
+                    }
+                }
+                for _ in 0..hashes {
+                    self.bump();
+                }
+                break;
+            }
+            s.push(c);
+        }
+        s
+    }
+
+    /// `b"..."`, `br"..."`, `b'.'` — or just an identifier starting
+    /// with `b`.
+    fn byte_prefixed(&mut self, line: usize) {
+        match self.peek(1) {
+            Some('"') => {
+                self.bump();
+                self.bump();
+                let s = self.cooked_string();
+                self.push(Tok::Str(s), line);
+            }
+            Some('\'') => {
+                self.bump();
+                self.bump();
+                self.char_body();
+                self.push(Tok::Char, line);
+            }
+            Some('r') if self.raw_ahead(2) => {
+                self.bump();
+                self.bump();
+                let s = self.raw_string();
+                self.push(Tok::Str(s), line);
+            }
+            _ => {
+                let s = self.ident();
+                self.push(Tok::Ident(s), line);
+            }
+        }
+    }
+
+    /// `'` starts either a char literal or a lifetime. A backslash or a
+    /// single char followed by `'` is a char literal; otherwise it is a
+    /// lifetime (`'a`, `'static`).
+    fn quote(&mut self, line: usize) {
+        self.bump();
+        if self.peek(0) == Some('\\') || self.peek(1) == Some('\'') {
+            self.char_body();
+            self.push(Tok::Char, line);
+        } else {
+            while matches!(self.peek(0), Some(c) if c.is_alphanumeric() || c == '_') {
+                self.bump();
+            }
+            self.push(Tok::Lifetime, line);
+        }
+    }
+
+    /// Consume a char-literal body up to and including the closing `'`
+    /// (opening quote already consumed).
+    fn char_body(&mut self) {
+        loop {
+            match self.bump() {
+                None | Some('\'') => break,
+                Some('\\') => {
+                    self.bump();
+                }
+                Some(_) => {}
+            }
+        }
+    }
+
+    fn ident(&mut self) -> String {
+        let mut s = String::new();
+        while matches!(self.peek(0), Some(c) if c.is_alphanumeric() || c == '_') {
+            s.push(self.bump().unwrap_or('_'));
+        }
+        s
+    }
+
+    /// Numeric literal: digits plus suffix/exponent chars. `..` after a
+    /// number (`0..n`) must stay punctuation, so a dot is consumed only
+    /// when it is not itself followed by a dot.
+    fn number(&mut self) {
+        while let Some(c) = self.peek(0) {
+            if c.is_alphanumeric() || c == '_' {
+                self.bump();
+            } else if c == '.' && matches!(self.peek(1), Some(d) if d.is_ascii_digit()) {
+                self.bump();
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .into_iter()
+            .filter_map(|t| match t.tok {
+                Tok::Ident(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn strings_hide_their_contents_from_the_ident_stream() {
+        let src = r#"let msg = "please do not unwrap() here"; msg.len();"#;
+        let ids = idents(src);
+        assert!(!ids.contains(&"unwrap".to_string()), "ident leaked out of a string: {ids:?}");
+        assert!(ids.contains(&"len".to_string()));
+    }
+
+    #[test]
+    fn escapes_are_cooked_and_line_numbers_survive() {
+        let src = "let a = \"x\\n\\\"y\\\"\";\nlet b = 1;";
+        let toks = lex(src);
+        let s = toks.iter().find_map(|t| t.str_lit()).unwrap();
+        assert_eq!(s, "x\n\"y\"");
+        let b = toks.iter().find(|t| t.is_ident("b")).unwrap();
+        assert_eq!(b.line, 2);
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_do_not_end_early() {
+        let src = r###"let j = r#"{"op":"ping","q":"a\"b"}"#; j.parse();"###;
+        let toks = lex(src);
+        let s = toks.iter().find_map(|t| t.str_lit()).unwrap();
+        assert_eq!(s, r#"{"op":"ping","q":"a\"b"}"#);
+        assert!(toks.iter().any(|t| t.is_ident("parse")));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes_disambiguate() {
+        let src = "fn f<'a>(x: &'a str) -> char { let c = '{'; let q = '\\''; c }";
+        let toks = lex(src);
+        let chars = toks.iter().filter(|t| t.tok == Tok::Char).count();
+        let lifetimes = toks.iter().filter(|t| t.tok == Tok::Lifetime).count();
+        assert_eq!(chars, 2, "{toks:?}");
+        assert_eq!(lifetimes, 2, "{toks:?}");
+        // The brace inside '{' must not unbalance the real braces.
+        let open = toks.iter().filter(|t| t.is_punct('{')).count();
+        let close = toks.iter().filter(|t| t.is_punct('}')).count();
+        assert_eq!(open, close);
+    }
+
+    #[test]
+    fn comments_including_nested_blocks_vanish() {
+        let src = "a(); // x.unwrap()\n/* outer /* inner.expect() */ still comment */ b();";
+        let ids = idents(src);
+        assert_eq!(ids, vec!["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn line_continuation_swallows_indentation() {
+        let src = "let s = \"one \\\n         two\";";
+        let toks = lex(src);
+        assert_eq!(toks.iter().find_map(|t| t.str_lit()).unwrap(), "one two");
+    }
+
+    #[test]
+    fn byte_and_raw_byte_strings_lex_as_strings() {
+        let src = r##"w.write_all(b"\n")?; let r = br#"raw"#;"##;
+        let toks = lex(src);
+        let strs: Vec<&str> = toks.iter().filter_map(|t| t.str_lit()).collect();
+        assert_eq!(strs, vec!["\n", "raw"]);
+    }
+
+    #[test]
+    fn numeric_ranges_keep_their_dots() {
+        let toks = lex("for i in 0..10 { v[i] = 2.5; }");
+        let dots = toks.iter().filter(|t| t.is_punct('.')).count();
+        assert_eq!(dots, 2, "0..10 must lex as Num Punct(.) Punct(.) Num: {toks:?}");
+    }
+}

@@ -1,0 +1,166 @@
+//! `arco devcheck` — a domain-specific static-analysis pass over this
+//! repository's own sources. Generic lints (clippy) cannot see the
+//! eval-layer contracts; this pass enforces them mechanically:
+//!
+//! - [`panic_free`]: no reachable panic in the daemon/wire modules —
+//!   one bad peer must not take down the process.
+//! - [`ledger_order`]: `charge(...)` lexically precedes every engine
+//!   batch submission; `settle(...)` never does.
+//! - [`codec`]: the tree parser (`Json::parse`) stays out of the codec
+//!   hot paths, confined to named lenient-fallback functions.
+//! - [`guard_io`]: no live `MutexGuard` spans a socket write.
+//! - [`wire_docs`]: docs/WIRE.md and docs/OPERATIONS.md track the wire
+//!   protocol — field names and error texts — in both directions.
+//!
+//! The pass works on a token stream from a small purpose-built Rust
+//! lexer ([`lexer`]) — enough structure to be precise about strings,
+//! comments and `#[cfg(test)]` regions without dragging in a full
+//! parser. Findings anchor to `file:line` and can be waived, one line
+//! at a time, with `// devcheck:allow(<rule>)` on the finding's line or
+//! the line above. Run as `arco devcheck` (exit 1 on findings); CI runs
+//! it alongside clippy.
+
+pub mod codec;
+pub mod guard_io;
+pub mod ledger_order;
+pub mod lexer;
+pub mod model;
+pub mod panic_free;
+pub mod wire_docs;
+
+use model::SourceFile;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// One rule violation, anchored to a repo-relative file and line.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn render(&self) -> String {
+        format!(
+            "devcheck: {}: {}:{}: {}",
+            self.rule, self.file, self.line, self.message
+        )
+    }
+}
+
+/// Every rule name, for `devcheck:allow(...)` validation and docs.
+pub const RULES: &[&str] = &[
+    panic_free::RULE,
+    ledger_order::RULE,
+    codec::RULE,
+    guard_io::RULE,
+    wire_docs::RULE,
+];
+
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?
+        .collect::<Result<Vec<_>, _>>()?
+        .into_iter()
+        .map(|e| e.path())
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lex and check every file under `<root>/rust/src` plus the two wire
+/// docs. Returns suppression-filtered findings sorted by (file, line).
+pub fn check_repo(root: &Path) -> anyhow::Result<Vec<Finding>> {
+    let src_root = root.join("rust/src");
+    let mut paths = Vec::new();
+    walk_rs(&src_root, &mut paths)?;
+
+    let mut files: Vec<SourceFile> = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = fs::read_to_string(p)?;
+        files.push(SourceFile::parse(rel, &text));
+    }
+
+    let wire_md = fs::read_to_string(root.join("docs/WIRE.md"))?;
+    let ops_md = fs::read_to_string(root.join("docs/OPERATIONS.md"))?;
+
+    let mut findings = Vec::new();
+    for f in &files {
+        if panic_free::applies_to(&f.path) {
+            findings.extend(panic_free::check(f));
+        }
+        if ledger_order::applies_to(&f.path) {
+            findings.extend(ledger_order::check(f));
+        }
+        if codec::applies_to(&f.path) {
+            findings.extend(codec::check(f));
+        }
+        if guard_io::applies_to(&f.path) {
+            findings.extend(guard_io::check(f));
+        }
+    }
+    let eval_files: Vec<&SourceFile> = files
+        .iter()
+        .filter(|f| f.path.starts_with("rust/src/eval/"))
+        .collect();
+    findings.extend(wire_docs::check(&eval_files, &wire_md, &ops_md));
+
+    // Suppressions: source files carry theirs in the lexed model; the
+    // two docs get the same text-level scan.
+    let wire_allows = model::collect_allows(&wire_md);
+    let ops_allows = model::collect_allows(&ops_md);
+    let doc_allowed = |path: &str, rule: &str, line: usize| {
+        let allows = match path {
+            "docs/WIRE.md" => &wire_allows,
+            "docs/OPERATIONS.md" => &ops_allows,
+            _ => return false,
+        };
+        allows
+            .iter()
+            .any(|(r, l)| r == rule && (*l == line || l + 1 == line))
+    };
+    findings.retain(|fd| {
+        if let Some(sf) = files.iter().find(|f| f.path == fd.file) {
+            !sf.allowed(fd.rule, fd.line)
+        } else {
+            !doc_allowed(&fd.file, fd.rule, fd.line)
+        }
+    });
+
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(findings)
+}
+
+/// CLI entry: print findings (or a clean summary) and return the exit
+/// code — 1 if anything was found, 0 when clean.
+pub fn run(root: &Path) -> anyhow::Result<i32> {
+    let findings = check_repo(root)?;
+    if findings.is_empty() {
+        println!(
+            "devcheck: clean ({} rules: {})",
+            RULES.len(),
+            RULES.join(", ")
+        );
+        return Ok(0);
+    }
+    for f in &findings {
+        println!("{}", f.render());
+    }
+    println!("devcheck: {} finding(s)", findings.len());
+    Ok(1)
+}

@@ -1,0 +1,274 @@
+//! Shared source model for the devcheck rules: a lexed file plus the
+//! structure every rule needs — function spans, `#[cfg(test)]` regions
+//! (exempt from all rules) and `// devcheck:allow(<rule>)` suppressions.
+
+use super::lexer::{lex, Token};
+use std::collections::BTreeSet;
+
+/// One function's token span: `tokens[body_start..=body_end]` is the
+/// body including both braces.
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    pub line: usize,
+    pub body_start: usize,
+    pub body_end: usize,
+}
+
+/// A lexed source file plus rule-relevant structure.
+pub struct SourceFile {
+    /// Repo-relative path with forward slashes (`rust/src/eval/...`).
+    pub path: String,
+    pub tokens: Vec<Token>,
+    /// `excluded[i]` — token i sits inside a `#[cfg(test)]` item.
+    pub excluded: Vec<bool>,
+    pub fns: Vec<FnSpan>,
+    /// Lines carrying a `devcheck:allow(<rule>)` marker, per rule. A
+    /// marker suppresses that rule on its own line and the next line.
+    allows: Vec<(String, usize)>,
+}
+
+impl SourceFile {
+    pub fn parse(path: String, text: &str) -> SourceFile {
+        let tokens = lex(text);
+        let excluded = mark_cfg_test(&tokens);
+        let fns = fn_spans(&tokens);
+        let allows = collect_allows(text);
+        SourceFile { path, tokens, excluded, fns, allows }
+    }
+
+    /// The innermost function span containing token `i`, by name.
+    pub fn enclosing_fn(&self, i: usize) -> Option<&FnSpan> {
+        self.fns
+            .iter()
+            .filter(|f| f.body_start <= i && i <= f.body_end)
+            .min_by_key(|f| f.body_end - f.body_start)
+    }
+
+    /// Is the finding at `line` suppressed for `rule` by an inline
+    /// `devcheck:allow(rule)` marker on the same or previous line?
+    pub fn allowed(&self, rule: &str, line: usize) -> bool {
+        self.allows
+            .iter()
+            .any(|(r, l)| r == rule && (*l == line || l + 1 == line))
+    }
+}
+
+/// Scan the raw text for allow markers. Text-level (not token-level) on
+/// purpose: the marker lives in comments, which the lexer drops. Also
+/// used directly on markdown files, where no lexing happens at all.
+pub fn collect_allows(text: &str) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    let marker = "devcheck:allow(";
+    for (idx, line) in text.lines().enumerate() {
+        let mut rest = line;
+        while let Some(at) = rest.find(marker) {
+            let tail = &rest[at + marker.len()..];
+            if let Some(end) = tail.find(')') {
+                out.push((tail[..end].trim().to_string(), idx + 1));
+                rest = &tail[end..];
+            } else {
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// Mark every token inside a `#[cfg(test)]` item. The item is whatever
+/// follows the attribute (and any further attributes): a `mod`/`fn`/
+/// `impl` block through its matching brace, or a braceless item through
+/// its `;`.
+fn mark_cfg_test(tokens: &[Token]) -> Vec<bool> {
+    let mut excluded = vec![false; tokens.len()];
+    let mut i = 0usize;
+    while i < tokens.len() {
+        if is_cfg_test_attr(tokens, i) {
+            // Skip this attribute and any stacked ones.
+            let mut j = skip_attr(tokens, i);
+            while j < tokens.len() && tokens[j].is_punct('#') {
+                j = skip_attr(tokens, j);
+            }
+            // The guarded item: brace block or `;`-terminated.
+            let mut depth = 0usize;
+            let mut k = j;
+            while k < tokens.len() {
+                if tokens[k].is_punct('{') {
+                    depth += 1;
+                } else if tokens[k].is_punct('}') {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if tokens[k].is_punct(';') && depth == 0 {
+                    break;
+                }
+                k += 1;
+            }
+            let end = k.min(tokens.len().saturating_sub(1));
+            for flag in excluded.iter_mut().take(end + 1).skip(i) {
+                *flag = true;
+            }
+            i = end + 1;
+        } else {
+            i += 1;
+        }
+    }
+    excluded
+}
+
+/// Does `#[cfg(test)]` (optionally `#[cfg(any(test, ...))]`) start at
+/// token `i`?
+fn is_cfg_test_attr(tokens: &[Token], i: usize) -> bool {
+    if !(i + 4 < tokens.len()
+        && tokens[i].is_punct('#')
+        && tokens[i + 1].is_punct('[')
+        && tokens[i + 2].is_ident("cfg"))
+    {
+        return false;
+    }
+    // Anything of the form cfg(...test...) is treated as test-gated.
+    let mut j = i + 3;
+    let mut depth = 0usize;
+    while j < tokens.len() {
+        if tokens[j].is_punct('[') || tokens[j].is_punct('(') {
+            depth += 1;
+        } else if tokens[j].is_punct(']') && depth == 0 {
+            return false;
+        } else if tokens[j].is_punct(')') || tokens[j].is_punct(']') {
+            depth = depth.saturating_sub(1);
+        } else if tokens[j].is_ident("test") {
+            return true;
+        }
+        j += 1;
+    }
+    false
+}
+
+/// Index just past an attribute starting at `#` token `i`.
+fn skip_attr(tokens: &[Token], i: usize) -> usize {
+    let mut j = i + 1;
+    if j < tokens.len() && tokens[j].is_punct('!') {
+        j += 1;
+    }
+    if j >= tokens.len() || !tokens[j].is_punct('[') {
+        return i + 1;
+    }
+    let mut depth = 0usize;
+    while j < tokens.len() {
+        if tokens[j].is_punct('[') {
+            depth += 1;
+        } else if tokens[j].is_punct(']') {
+            depth -= 1;
+            if depth == 0 {
+                return j + 1;
+            }
+        }
+        j += 1;
+    }
+    tokens.len()
+}
+
+/// Every `fn name ... { body }` span, including nested functions.
+/// Bodiless declarations (trait methods) are skipped, as are `fn`
+/// tokens not followed by a name (`fn(...)` pointer types).
+fn fn_spans(tokens: &[Token]) -> Vec<FnSpan> {
+    let mut out = Vec::new();
+    for i in 0..tokens.len() {
+        if !tokens[i].is_ident("fn") {
+            continue;
+        }
+        let Some(name) = tokens.get(i + 1).and_then(|t| t.ident()) else {
+            continue;
+        };
+        // Find the body `{` — or a `;` first for bodiless declarations.
+        // Angle brackets in generics/returns can contain parens but not
+        // braces, so scanning for the first `{`/top-level `;` is sound.
+        let mut j = i + 2;
+        let mut paren = 0usize;
+        let mut body_start = None;
+        while j < tokens.len() {
+            if tokens[j].is_punct('(') {
+                paren += 1;
+            } else if tokens[j].is_punct(')') {
+                paren = paren.saturating_sub(1);
+            } else if tokens[j].is_punct('{') {
+                body_start = Some(j);
+                break;
+            } else if tokens[j].is_punct(';') && paren == 0 {
+                break;
+            }
+            j += 1;
+        }
+        let Some(start) = body_start else {
+            continue;
+        };
+        let mut depth = 0usize;
+        let mut end = start;
+        while end < tokens.len() {
+            if tokens[end].is_punct('{') {
+                depth += 1;
+            } else if tokens[end].is_punct('}') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            end += 1;
+        }
+        out.push(FnSpan {
+            name: name.to_string(),
+            line: tokens[i].line,
+            body_start: start,
+            body_end: end.min(tokens.len().saturating_sub(1)),
+        });
+    }
+    out
+}
+
+/// Names of functions whose bodies contain token `i` — outermost first.
+pub fn enclosing_fn_names(file: &SourceFile, i: usize) -> BTreeSet<String> {
+    file.fns
+        .iter()
+        .filter(|f| f.body_start <= i && i <= f.body_end)
+        .map(|f| f.name.clone())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cfg_test_mods_are_excluded() {
+        let src = "fn live() { x.unwrap(); }\n#[cfg(test)]\nmod tests { fn t() { y.unwrap(); } }";
+        let f = SourceFile::parse("a.rs".to_string(), src);
+        let unwraps: Vec<bool> = f
+            .tokens
+            .iter()
+            .zip(&f.excluded)
+            .filter(|(t, _)| t.is_ident("unwrap"))
+            .map(|(_, e)| *e)
+            .collect();
+        assert_eq!(unwraps, vec![false, true]);
+    }
+
+    #[test]
+    fn fn_spans_nest_and_name_correctly() {
+        let src = "fn outer() { fn inner() { a(); } inner(); }";
+        let f = SourceFile::parse("a.rs".to_string(), src);
+        assert_eq!(f.fns.len(), 2);
+        let a_idx = f.tokens.iter().position(|t| t.is_ident("a")).unwrap();
+        assert_eq!(f.enclosing_fn(a_idx).unwrap().name, "inner");
+    }
+
+    #[test]
+    fn allow_markers_cover_their_line_and_the_next() {
+        let src = "line1\n// devcheck:allow(panic-free)\nflagged_here\nnot_here";
+        let f = SourceFile::parse("a.rs".to_string(), src);
+        assert!(f.allowed("panic-free", 2));
+        assert!(f.allowed("panic-free", 3));
+        assert!(!f.allowed("panic-free", 4));
+        assert!(!f.allowed("ledger-order", 3));
+    }
+}

@@ -1,0 +1,106 @@
+//! Rule `panic-free`: the daemon and wire modules must not contain a
+//! reachable panic. A poisoned lock, a malformed frame or a dead peer
+//! takes down one connection (or returns a structured error reply) —
+//! never the process serving every other client.
+//!
+//! Banned in non-test code: `.unwrap()`, `.expect(...)`, `panic!`,
+//! `unreachable!`, `todo!`, `unimplemented!`. The designated
+//! poisoned-lock helpers in `eval/sync.rs` (`lock_unpoisoned`,
+//! `wait_unpoisoned`) are the one place allowed to touch the poison
+//! `Result` — their bodies are exempt.
+
+use super::model::SourceFile;
+use super::Finding;
+
+pub const RULE: &str = "panic-free";
+
+/// Files the rule applies to (repo-relative).
+pub const CHECKED_FILES: &[&str] = &[
+    "rust/src/eval/server.rs",
+    "rust/src/eval/tune_server.rs",
+    "rust/src/eval/remote.rs",
+    "rust/src/eval/tune_client.rs",
+    "rust/src/eval/sync.rs",
+];
+
+/// The designated poisoned-lock helpers: the only function bodies in
+/// the checked set where the panic family is permitted.
+const ALLOWED_FNS: &[&str] = &["lock_unpoisoned", "wait_unpoisoned"];
+
+const BANNED_METHODS: &[&str] = &["unwrap", "expect"];
+const BANNED_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+pub fn applies_to(path: &str) -> bool {
+    CHECKED_FILES.contains(&path)
+}
+
+pub fn check(file: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (i, tok) in file.tokens.iter().enumerate() {
+        if file.excluded[i] {
+            continue;
+        }
+        let Some(name) = tok.ident() else { continue };
+        let is_method = BANNED_METHODS.contains(&name)
+            && i > 0
+            && file.tokens[i - 1].is_punct('.');
+        let is_macro = BANNED_MACROS.contains(&name)
+            && file.tokens.get(i + 1).is_some_and(|t| t.is_punct('!'));
+        if !(is_method || is_macro) {
+            continue;
+        }
+        if let Some(f) = file.enclosing_fn(i) {
+            if ALLOWED_FNS.contains(&f.name.as_str()) {
+                continue;
+            }
+        }
+        let what = if is_macro {
+            format!("{name}!")
+        } else {
+            format!(".{name}()")
+        };
+        out.push(Finding {
+            rule: RULE,
+            file: file.path.clone(),
+            line: tok.line,
+            message: format!(
+                "`{what}` can panic a daemon thread; return a structured error \
+                 or route lock poisoning through eval/sync.rs"
+            ),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(src: &str) -> SourceFile {
+        SourceFile::parse("rust/src/eval/server.rs".to_string(), src)
+    }
+
+    #[test]
+    fn flags_unwrap_and_panic_macros() {
+        let f = parse("fn a() { x.unwrap(); panic!(\"boom\"); }");
+        let rules: Vec<usize> = check(&f).iter().map(|f| f.line).collect();
+        assert_eq!(rules.len(), 2);
+    }
+
+    #[test]
+    fn designated_helpers_are_exempt() {
+        let f = parse("fn lock_unpoisoned() { m.lock().unwrap(); }");
+        assert!(check(&f).is_empty());
+    }
+
+    #[test]
+    fn bare_idents_and_tests_do_not_trip() {
+        // `unwrap_or_else` is a distinct token; `expect` without a
+        // leading dot is just a word; cfg(test) code is exempt.
+        let f = parse(
+            "fn a() { x.unwrap_or_else(f); }\n\
+             #[cfg(test)] mod t { fn b() { y.unwrap(); } }",
+        );
+        assert!(check(&f).is_empty());
+    }
+}

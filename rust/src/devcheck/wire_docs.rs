@@ -1,0 +1,389 @@
+//! Rule `wire-docs`: docs/WIRE.md and docs/OPERATIONS.md are the
+//! operator-facing contract for the measurement and tune wires. Field
+//! names and error texts there must track `proto.rs`/`tune_proto.rs`
+//! exactly, in both directions:
+//!
+//! 1. every wire field the codecs read or write appears in WIRE.md;
+//! 2. every field documented in a WIRE.md table exists in the codecs;
+//! 3. every error text in the OPERATIONS.md failure-mode table (and the
+//!    WIRE.md error sections) matches a literal in `rust/src/eval`;
+//! 4. every error *reply* the daemons construct is documented.
+//!
+//! Error texts are compared as *skeletons*: each `{...}` placeholder —
+//! on either side — becomes a wildcard, a doc text ending in `...`
+//! matches by prefix, and a code literal may continue past the
+//! documented text at a newline (multi-line refusals document their
+//! first line).
+
+use super::model::SourceFile;
+use super::Finding;
+
+pub const RULE: &str = "wire-docs";
+
+const PROTO_FILES: &[&str] = &["rust/src/eval/proto.rs", "rust/src/eval/tune_proto.rs"];
+const ERROR_REPLY_FILES: &[&str] =
+    &["rust/src/eval/server.rs", "rust/src/eval/tune_server.rs"];
+
+/// Lower-snake-case identifier — the shape of a wire field name.
+fn is_field_ident(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_lowercase() => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+/// Replace every balanced `{...}` region (either side's placeholder
+/// syntax) with a single NUL wildcard, innermost first.
+fn skeleton(s: &str) -> String {
+    let mut cur: Vec<char> = s.chars().collect();
+    loop {
+        let mut out: Vec<char> = Vec::with_capacity(cur.len());
+        let mut changed = false;
+        let mut i = 0;
+        while i < cur.len() {
+            if cur[i] == '{' {
+                let mut j = i + 1;
+                let mut simple = true;
+                while j < cur.len() && cur[j] != '}' {
+                    if cur[j] == '{' {
+                        simple = false;
+                        break;
+                    }
+                    j += 1;
+                }
+                if simple && j < cur.len() {
+                    out.push('\u{0}');
+                    i = j + 1;
+                    changed = true;
+                    continue;
+                }
+            }
+            out.push(cur[i]);
+            i += 1;
+        }
+        cur = out;
+        if !changed {
+            break;
+        }
+    }
+    cur.into_iter().collect()
+}
+
+/// Match a doc skeleton against a code skeleton: wildcard segments must
+/// appear in order; `full` additionally anchors the tail at the end.
+fn wildcard_match(doc: &str, code: &str, full: bool) -> bool {
+    let segs: Vec<&str> = doc.split('\u{0}').collect();
+    let mut pos = 0usize;
+    for (si, seg) in segs.iter().enumerate() {
+        if si == 0 {
+            if !code.starts_with(seg) {
+                return false;
+            }
+            pos = seg.len();
+        } else {
+            match code[pos..].find(seg) {
+                Some(at) => pos = pos + at + seg.len(),
+                None => return false,
+            }
+        }
+    }
+    if full {
+        let last = segs.last().copied().unwrap_or("");
+        if last.is_empty() {
+            return true;
+        }
+        code.ends_with(last) && pos == code.len()
+    } else {
+        true
+    }
+}
+
+/// Does documented error text `doc` describe code literal `code`?
+pub fn skel_match(doc: &str, code: &str) -> bool {
+    let d = skeleton(doc);
+    let c = skeleton(code);
+    if let Some(prefix) = d.strip_suffix("...") {
+        return wildcard_match(prefix, &c, false);
+    }
+    wildcard_match(&d, &c, true) || wildcard_match(&format!("{d}\n"), &c, false)
+}
+
+/// All `` `span` `` backtick spans in a line, with byte-free simplicity.
+fn backtick_spans(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = line;
+    while let Some(open) = rest.find('`') {
+        let tail = &rest[open + 1..];
+        let Some(close) = tail.find('`') else { break };
+        out.push(tail[..close].to_string());
+        rest = &tail[close + 1..];
+    }
+    out
+}
+
+/// Wire field names the codecs read or write, with their location:
+/// `key("x")` / `get("x")` writers-readers, `("x", ...)` object-builder
+/// tuples, and `"x" =>` / `=> "x"` match arms.
+fn code_fields(files: &[&SourceFile]) -> Vec<(String, String, usize)> {
+    let mut out = Vec::new();
+    for f in files {
+        let toks = &f.tokens;
+        for i in 0..toks.len() {
+            if f.excluded[i] {
+                continue;
+            }
+            let Some(s) = toks[i].str_lit() else { continue };
+            if !is_field_ident(s) {
+                continue;
+            }
+            let prev = i.checked_sub(1).map(|j| &toks[j]);
+            let prev2 = i.checked_sub(2).map(|j| &toks[j]);
+            let nxt = toks.get(i + 1);
+            let nxt2 = toks.get(i + 2);
+            let after_accessor = prev.is_some_and(|t| t.is_punct('('))
+                && prev2
+                    .and_then(|t| t.ident())
+                    .is_some_and(|n| n == "key" || n == "get");
+            let tuple_head = prev.is_some_and(|t| t.is_punct('('))
+                && nxt.is_some_and(|t| t.is_punct(','));
+            let arm_lhs = nxt.is_some_and(|t| t.is_punct('='))
+                && nxt2.is_some_and(|t| t.is_punct('>'));
+            let arm_rhs = prev.is_some_and(|t| t.is_punct('>'))
+                && prev2.is_some_and(|t| t.is_punct('='));
+            if after_accessor || tuple_head || arm_lhs || arm_rhs {
+                out.push((s.to_string(), f.path.clone(), toks[i].line));
+            }
+        }
+    }
+    out
+}
+
+/// Backticked identifiers in the first column of WIRE.md tables — the
+/// documented field names.
+fn doc_field_idents(wire_md: &str) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for (idx, line) in wire_md.lines().enumerate() {
+        let ls = line.trim();
+        if !ls.starts_with('|') {
+            continue;
+        }
+        let Some(col1) = ls.split('|').nth(1) else { continue };
+        for span in backtick_spans(col1) {
+            if is_field_ident(&span) {
+                out.push((span, idx + 1));
+            }
+        }
+    }
+    out
+}
+
+/// Documented error texts: OPERATIONS.md "Failure modes" table column 1
+/// plus backticked spans in WIRE.md sections whose heading mentions
+/// errors. Spans without a space are field names, not error texts.
+fn doc_error_texts(ops_md: &str, wire_md: &str) -> Vec<(String, String, usize)> {
+    let mut out = Vec::new();
+    let mut in_table = false;
+    for (idx, line) in ops_md.lines().enumerate() {
+        let ls = line.trim();
+        if let Some(h) = ls.strip_prefix("## ") {
+            in_table = h.to_ascii_lowercase().starts_with("failure");
+            continue;
+        }
+        if in_table && ls.starts_with('|') {
+            if let Some(col1) = ls.split('|').nth(1) {
+                for span in backtick_spans(col1) {
+                    if span.contains(' ') {
+                        out.push((span, "docs/OPERATIONS.md".to_string(), idx + 1));
+                    }
+                }
+            }
+        }
+    }
+    let mut in_err = false;
+    for (idx, line) in wire_md.lines().enumerate() {
+        let ls = line.trim();
+        if ls.starts_with('#') {
+            in_err = ls.to_ascii_lowercase().contains("error");
+            continue;
+        }
+        if in_err {
+            for span in backtick_spans(line) {
+                if span.contains(' ') {
+                    out.push((span, "docs/WIRE.md".to_string(), idx + 1));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// String literals the daemons put in `Error(...)` replies — directly
+/// or via `Error(format!("..."))`.
+fn error_reply_literals(files: &[&SourceFile]) -> Vec<(String, String, usize)> {
+    let mut out = Vec::new();
+    for f in files {
+        if !ERROR_REPLY_FILES.contains(&f.path.as_str()) {
+            continue;
+        }
+        let toks = &f.tokens;
+        for i in 0..toks.len() {
+            if f.excluded[i] || !toks[i].is_ident("Error") {
+                continue;
+            }
+            if !toks.get(i + 1).is_some_and(|t| t.is_punct('(')) {
+                continue;
+            }
+            if let Some(s) = toks.get(i + 2).and_then(|t| t.str_lit()) {
+                out.push((s.to_string(), f.path.clone(), toks[i + 2].line));
+            } else if toks.get(i + 2).is_some_and(|t| t.is_ident("format"))
+                && toks.get(i + 3).is_some_and(|t| t.is_punct('!'))
+                && toks.get(i + 4).is_some_and(|t| t.is_punct('('))
+            {
+                if let Some(s) = toks.get(i + 5).and_then(|t| t.str_lit()) {
+                    out.push((s.to_string(), f.path.clone(), toks[i + 5].line));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Run the whole bidirectional sync check. `eval_files` is every lexed
+/// file under `rust/src/eval/`.
+pub fn check(eval_files: &[&SourceFile], wire_md: &str, ops_md: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let proto: Vec<&SourceFile> = eval_files
+        .iter()
+        .copied()
+        .filter(|f| PROTO_FILES.contains(&f.path.as_str()))
+        .collect();
+
+    // 1. code fields -> WIRE.md
+    for (name, path, line) in code_fields(&proto) {
+        let documented =
+            wire_md.contains(&format!("`{name}`")) || wire_md.contains(&format!("\"{name}\""));
+        if !documented {
+            out.push(Finding {
+                rule: RULE,
+                file: path,
+                line,
+                message: format!("wire field \"{name}\" is not documented in docs/WIRE.md"),
+            });
+        }
+    }
+
+    // 2. WIRE.md table fields -> code
+    let mut code_strs: Vec<&str> = Vec::new();
+    for f in &proto {
+        for (i, t) in f.tokens.iter().enumerate() {
+            if !f.excluded[i] {
+                if let Some(s) = t.str_lit() {
+                    code_strs.push(s);
+                }
+            }
+        }
+    }
+    for (name, line) in doc_field_idents(wire_md) {
+        if !code_strs.contains(&name.as_str()) {
+            out.push(Finding {
+                rule: RULE,
+                file: "docs/WIRE.md".to_string(),
+                line,
+                message: format!(
+                    "documented field `{name}` does not exist in proto.rs/tune_proto.rs"
+                ),
+            });
+        }
+    }
+
+    // 3. documented error texts -> some literal in rust/src/eval
+    let mut pool: Vec<&str> = Vec::new();
+    for f in eval_files {
+        for (i, t) in f.tokens.iter().enumerate() {
+            if !f.excluded[i] {
+                if let Some(s) = t.str_lit() {
+                    pool.push(s);
+                }
+            }
+        }
+    }
+    let doc_errors = doc_error_texts(ops_md, wire_md);
+    for (txt, dfile, line) in &doc_errors {
+        if !pool.iter().any(|c| skel_match(txt, c)) {
+            out.push(Finding {
+                rule: RULE,
+                file: dfile.clone(),
+                line: *line,
+                message: format!(
+                    "documented error text `{txt}` matches no literal in rust/src/eval \
+                     — stale docs or changed wording"
+                ),
+            });
+        }
+    }
+
+    // 4. daemon Error(...) replies -> documented somewhere
+    for (lit, path, line) in error_reply_literals(eval_files) {
+        if !doc_errors.iter().any(|(d, _, _)| skel_match(d, &lit)) {
+            out.push(Finding {
+                rule: RULE,
+                file: path,
+                line,
+                message: format!(
+                    "error reply \"{lit}\" is not documented in the OPERATIONS.md \
+                     failure-mode table or a WIRE.md error section"
+                ),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skeletons_wildcard_placeholders_on_both_sides() {
+        assert!(skel_match(
+            "client {c} speaks tune-protocol v{n}, this daemon v{v}",
+            "client {client} speaks tune-protocol v{proto}, this daemon v{TUNE_PROTO_VERSION}"
+        ));
+        assert!(!skel_match(
+            "client {c} speaks tune-protocol v{n}, this daemon v1",
+            "client {client} speaks tune-protocol v{proto}, this daemon v{TUNE_PROTO_VERSION}"
+        ));
+    }
+
+    #[test]
+    fn doc_ellipsis_matches_by_prefix() {
+        assert!(skel_match(
+            "journal {path} is in the v1 whole-file JSON format, ...",
+            "journal {} is in the v1 whole-file JSON format, which has no fingerprint"
+        ));
+    }
+
+    #[test]
+    fn code_may_continue_past_a_newline() {
+        assert!(skel_match(
+            "shard {addr} embeds a different simulator — refusing to mix numbers.",
+            "shard {addr} embeds a different simulator — refusing to mix numbers.\n  shard: {a}\n  binary: {b}"
+        ));
+    }
+
+    #[test]
+    fn undocumented_field_is_flagged_both_ways() {
+        let proto = SourceFile::parse(
+            "rust/src/eval/proto.rs".to_string(),
+            r#"fn enc() { w.key("task"); w.key("mystery"); }"#,
+        );
+        let wire = "| `task` | the task | yes |\n| `ghost` | gone | no |";
+        let fs = check(&[&proto], wire, "");
+        let msgs: Vec<&str> = fs.iter().map(|f| f.message.as_str()).collect();
+        assert!(msgs.iter().any(|m| m.contains("\"mystery\"")));
+        assert!(msgs.iter().any(|m| m.contains("`ghost`")));
+        assert!(!msgs.iter().any(|m| m.contains("task")));
+    }
+}

@@ -56,6 +56,7 @@ pub mod ledger;
 pub mod proto;
 pub mod remote;
 pub mod server;
+pub(crate) mod sync;
 pub mod tune_client;
 pub mod tune_proto;
 pub mod tune_server;

@@ -37,6 +37,7 @@
 
 use super::backend::{BackendKind, MeasureBackend, Placement, ShardPlacement};
 use super::cache::PointKey;
+use super::sync::lock_unpoisoned;
 use super::proto::{
     read_frame_line, response_from_line, write_request_frame, Fingerprint, Request, Response,
     PROTO_VERSION,
@@ -324,7 +325,9 @@ impl RemoteBackend {
                 Some(_) => {}
             }
         }
-        let served = served.expect("at least one shard");
+        let Some(served) = served else {
+            anyhow::bail!("remote backend needs at least one shard address");
+        };
         let name = match BackendKind::from_name(&served) {
             Some(kind) => kind.name(),
             None => "remote",
@@ -386,7 +389,7 @@ impl RemoteBackend {
     /// [`REVIVE_INTERVAL`] spacing. Costs up to a connect timeout per dead
     /// shard; meant for operators (and tests) that just restarted one.
     pub fn revive_now(&self) {
-        *self.last_probe.lock().unwrap() = Some(Instant::now());
+        *lock_unpoisoned(&self.last_probe) = Some(Instant::now());
         self.revive_dead();
     }
 
@@ -398,7 +401,7 @@ impl RemoteBackend {
             return;
         }
         {
-            let mut last = self.last_probe.lock().unwrap();
+            let mut last = lock_unpoisoned(&self.last_probe);
             let now = Instant::now();
             if last.is_some_and(|t| now.duration_since(t) < REVIVE_INTERVAL) {
                 return;
@@ -601,17 +604,22 @@ impl RemoteBackend {
                 let handles: Vec<_> = chunks
                     .into_iter()
                     .map(|(shard, idxs)| {
-                        scope.spawn(move || {
-                            let vals: Vec<Vec<usize>> =
-                                idxs.iter().map(|&i| values[i].clone()).collect();
-                            let res = self.measure_on(shard, task, vals);
-                            (idxs, res)
-                        })
+                        let vals: Vec<Vec<usize>> =
+                            idxs.iter().map(|&i| values[i].clone()).collect();
+                        let h = scope.spawn(move || self.measure_on(shard, task, vals));
+                        (idxs, h)
                     })
                     .collect();
                 handles
                     .into_iter()
-                    .map(|h| h.join().expect("remote dispatch thread panicked"))
+                    .map(|(idxs, h)| {
+                        // A panicked dispatch thread is indistinguishable
+                        // from a failed chunk: re-dispatch it like one.
+                        let res = h.join().unwrap_or_else(|_| {
+                            Err("dispatch thread panicked; re-dispatching its chunk".to_string())
+                        });
+                        (idxs, res)
+                    })
                     .collect()
             });
             let mut next = Vec::new();
@@ -649,7 +657,11 @@ impl RemoteBackend {
         let mut results = Vec::with_capacity(n);
         let mut fresh = Vec::with_capacity(n);
         for cell in out {
-            let (r, f) = cell.expect("every point measured");
+            // Every slot is filled once `pending` drains; an accounting
+            // hole must surface as a fleet error, not kill the caller.
+            let Some((r, f)) = cell else {
+                anyhow::bail!("remote dispatch bug: a point was neither measured nor re-dispatched");
+            };
             results.push(r);
             fresh.push(f);
         }
@@ -713,6 +725,8 @@ impl MeasureBackend for RemoteBackend {
     ) -> (Vec<MeasureResult>, Vec<bool>) {
         match self.try_measure_many_traced(space, points, workers) {
             Ok(out) => out,
+            // Deliberately infallible facade: direct MeasureBackend callers
+            // have no error channel. devcheck:allow(panic-free)
             Err(e) => panic!("{e}"),
         }
     }

@@ -215,6 +215,9 @@ fn handle(engine: &Engine, clients: &AtomicUsize, req: Request, opts: ServeOptio
             // this shard served from its cache (another tenant already
             // paid) is reported non-fresh so client-side ledgers can keep
             // fleet-wide "measure once, charge everyone" accounting honest.
+            // The shard sits *below* the ledger: budgets are charged on the
+            // client side (RemoteBackend callers), so this submission is
+            // intentionally unmetered. devcheck:allow(ledger-order)
             let traced = engine.measure_batch_traced(&space, &decoded);
             let fresh = traced.origins.iter().map(|o| o.is_fresh()).collect();
             // Piggyback the queue depth (batches still measuring for other

@@ -1,0 +1,22 @@
+//! Poison-tolerant locking for the daemon and wire modules.
+//!
+//! The serve daemons must not die because one worker thread panicked
+//! while holding a lock: the state those locks guard (job tables, trace
+//! windows, liveness maps) is plain data that is consistent at every
+//! point a guard can be dropped, so recovering the guard is always
+//! sound here. Routing every daemon-path lock through these helpers
+//! keeps `unwrap()` out of connection handlers — `arco devcheck`
+//! rule `panic-free` designates these functions as the only place the
+//! daemon/wire modules may touch lock poisoning.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+
+/// Lock `m`, recovering the data if a previous holder panicked.
+pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Wait on `cv`, recovering the guard if a peer panicked mid-hold.
+pub(crate) fn wait_unpoisoned<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+}

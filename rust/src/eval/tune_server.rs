@@ -30,6 +30,7 @@ use super::cursor::{Cursor, CursorKind, PagedTrace};
 use super::engine::Engine;
 use super::ledger::{BudgetLedger, Dispatcher, LedgerStats};
 use super::proto::{read_frame_line, Fingerprint};
+use super::sync::{lock_unpoisoned, wait_unpoisoned};
 use super::tune_proto::{
     tune_request_from_line, write_tune_response_frame, JobOutcome, JobSpec, JobState, JobStatus,
     TuneRequest, TuneResponse, TUNE_PROTO_VERSION,
@@ -92,7 +93,7 @@ struct JobRecord {
 
 impl JobRecord {
     fn status(&self, ledger: &BudgetLedger) -> JobStatus {
-        let inner = self.inner.lock().unwrap();
+        let inner = lock_unpoisoned(&self.inner);
         JobStatus {
             id: self.id,
             client: self.spec.client.clone(),
@@ -118,7 +119,7 @@ struct JobObserver<'a> {
 
 impl TuneObserver for JobObserver<'_> {
     fn on_trace(&self, entry: &TraceEntry) {
-        let mut inner = self.job.inner.lock().unwrap();
+        let mut inner = lock_unpoisoned(&self.job.inner);
         if inner.first_result_secs.is_none() {
             inner.first_result_secs = Some(self.job.submitted.elapsed().as_secs_f64());
         }
@@ -177,7 +178,7 @@ impl TuneServerHandle {
 
     /// Status of every job the daemon holds, in id order.
     pub fn job_statuses(&self) -> Vec<JobStatus> {
-        let jobs = self.shared.jobs.lock().unwrap();
+        let jobs = lock_unpoisoned(&self.shared.jobs);
         jobs.values().map(|j| j.status(&self.shared.ledger)).collect()
     }
 
@@ -194,7 +195,7 @@ impl TuneServerHandle {
     pub fn shutdown(mut self) {
         self.shared.stop.store(true, Ordering::SeqCst);
         {
-            let jobs = self.shared.jobs.lock().unwrap();
+            let jobs = lock_unpoisoned(&self.shared.jobs);
             for job in jobs.values() {
                 job.cancel.store(true, Ordering::Relaxed);
             }
@@ -319,7 +320,7 @@ fn handle(shared: &TuneShared, req: TuneRequest) -> TuneResponse {
                 backend: shared.engine.backend_name().to_string(),
                 fingerprint: local,
                 quota: shared.opts.quota,
-                jobs: shared.jobs.lock().unwrap().len(),
+                jobs: lock_unpoisoned(&shared.jobs).len(),
             }
         }
         TuneRequest::Submit(spec) => submit(shared, spec),
@@ -335,7 +336,7 @@ fn handle(shared: &TuneShared, req: TuneRequest) -> TuneResponse {
         TuneRequest::Cancel { job: id } => match lookup(shared, id) {
             Some(job) => {
                 job.cancel.store(true, Ordering::Relaxed);
-                let mut inner = job.inner.lock().unwrap();
+                let mut inner = lock_unpoisoned(&job.inner);
                 // A job still waiting for a runner dies right here; the
                 // runner that eventually pops it will skip it. Running
                 // jobs stop cooperatively at their next batch boundary;
@@ -351,7 +352,7 @@ fn handle(shared: &TuneShared, req: TuneRequest) -> TuneResponse {
 }
 
 fn lookup(shared: &TuneShared, id: u64) -> Option<Arc<JobRecord>> {
-    shared.jobs.lock().unwrap().get(&id).cloned()
+    lock_unpoisoned(&shared.jobs).get(&id).cloned()
 }
 
 fn submit(shared: &TuneShared, spec: JobSpec) -> TuneResponse {
@@ -383,9 +384,9 @@ fn submit(shared: &TuneShared, spec: JobSpec) -> TuneResponse {
         }),
         spec,
     });
-    shared.jobs.lock().unwrap().insert(id, Arc::clone(&job));
+    lock_unpoisoned(&shared.jobs).insert(id, Arc::clone(&job));
     let position = {
-        let mut queue = shared.queue.lock().unwrap();
+        let mut queue = lock_unpoisoned(&shared.queue);
         queue.push_back(job);
         queue.len() - 1
     };
@@ -404,7 +405,7 @@ fn list_jobs(shared: &TuneShared, cursor: Option<String>, limit: usize) -> TuneR
             _ => return TuneResponse::Error("unintelligible cursor".to_string()),
         },
     };
-    let jobs_map = shared.jobs.lock().unwrap();
+    let jobs_map = lock_unpoisoned(&shared.jobs);
     let jobs: Vec<JobStatus> = jobs_map
         .range(after.saturating_add(1)..)
         .take(limit.max(1))
@@ -431,7 +432,7 @@ fn trace_page(
             _ => return TuneResponse::Error("unintelligible cursor".to_string()),
         },
     };
-    let inner = job.inner.lock().unwrap();
+    let inner = lock_unpoisoned(&job.inner);
     let entries = match inner.trace.page(after, limit.max(1)) {
         Ok(page) => page,
         Err(stale) => return TuneResponse::Error(stale.to_string()),
@@ -453,7 +454,7 @@ fn trace_page(
 fn runner_loop(shared: &TuneShared) {
     loop {
         let job = {
-            let mut queue = shared.queue.lock().unwrap();
+            let mut queue = lock_unpoisoned(&shared.queue);
             loop {
                 if shared.stop.load(Ordering::SeqCst) {
                     return;
@@ -461,11 +462,11 @@ fn runner_loop(shared: &TuneShared) {
                 if let Some(job) = queue.pop_front() {
                     break job;
                 }
-                queue = shared.ready.wait(queue).unwrap();
+                queue = wait_unpoisoned(&shared.ready, queue);
             }
         };
         {
-            let mut inner = job.inner.lock().unwrap();
+            let mut inner = lock_unpoisoned(&job.inner);
             if inner.state != JobState::Queued {
                 // Cancelled while waiting for a runner.
                 continue;
@@ -499,7 +500,7 @@ fn run_one(shared: &TuneShared, job: &JobRecord) {
         observer: Some(&observer),
     };
     let result = tune_task_tenant(&shared.engine, &space, strategy.as_mut(), budget, Some(&tenant));
-    let mut inner = job.inner.lock().unwrap();
+    let mut inner = lock_unpoisoned(&job.inner);
     match result {
         Ok(r) => {
             inner.measured = r.measurements;

@@ -49,3 +49,4 @@ pub mod baselines;
 pub mod tuner;
 pub mod config;
 pub mod report;
+pub mod devcheck;

@@ -58,6 +58,7 @@ fn usage() -> String {
      serve-measure  expose a measurement backend to remote tuners (fleet shard)\n  \
      serve-tune     tuning-as-a-service daemon: queue remote jobs over one shared engine\n  \
      journal        measurement-journal tooling (merge, compact, synth)\n  \
+     devcheck       static-analysis pass enforcing the eval-layer invariants\n  \
      report-models  print the model zoo (Table 3)\n  \
      info           backend / artifact status\n\nrun `arco <command> --help` for options\n"
         .into()
@@ -82,6 +83,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "serve-measure" => cmd_serve_measure(rest),
         "serve-tune" => cmd_serve_tune(rest),
         "journal" => cmd_journal(rest),
+        "devcheck" => cmd_devcheck(rest),
         "report-models" => {
             print!("{}", report::table3_models());
             report::write_result("table3_models.md", &report::table3_models())?;
@@ -94,6 +96,30 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         }
         other => anyhow::bail!("unknown command '{other}'\n\n{}", usage()),
     }
+}
+
+/// `arco devcheck [root]` — run the in-tree static-analysis pass over
+/// the repository at `root` (default: the current directory). Exits
+/// non-zero when any invariant is violated, so CI can gate on it.
+fn cmd_devcheck(rest: &[String]) -> anyhow::Result<()> {
+    if matches!(rest.first().map(String::as_str), Some("--help" | "-h")) {
+        println!(
+            "arco devcheck [root]\n\nstatic-analysis pass over rust/src and docs/ \
+             enforcing the eval-layer\ninvariants ({}).\nSuppress one finding with \
+             `// devcheck:allow(<rule>)` on or above its line.",
+            arco::devcheck::RULES.join(", ")
+        );
+        return Ok(());
+    }
+    let root = rest
+        .first()
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("."));
+    let code = arco::devcheck::run(&root)?;
+    if code != 0 {
+        anyhow::bail!("devcheck found invariant violations (listed above)");
+    }
+    Ok(())
 }
 
 fn common_cli(name: &str, about: &str) -> Cli {

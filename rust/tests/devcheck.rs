@@ -1,0 +1,146 @@
+//! `arco devcheck` integration tests: each fixture under
+//! `rust/tests/fixtures/devcheck/` trips exactly one rule with the
+//! documented diagnostic (checked under a *virtual* path, so the
+//! fixtures themselves never pollute the real-repo walk), and the
+//! repository itself is clean.
+
+use arco::devcheck::model::SourceFile;
+use arco::devcheck::{check_repo, codec, guard_io, ledger_order, panic_free, wire_docs, Finding};
+use std::path::Path;
+
+/// Parse a fixture under a virtual repo path and run one rule over it,
+/// applying the same suppression filter `check_repo` uses.
+fn run_rule<F>(virtual_path: &str, fixture: &str, rule: F) -> Vec<Finding>
+where
+    F: Fn(&SourceFile) -> Vec<Finding>,
+{
+    let f = SourceFile::parse(virtual_path.to_string(), fixture);
+    rule(&f)
+        .into_iter()
+        .filter(|fd| !f.allowed(fd.rule, fd.line))
+        .collect()
+}
+
+#[test]
+fn panic_fixture_trips_panic_free_once() {
+    let fs = run_rule(
+        "rust/src/eval/server.rs",
+        include_str!("fixtures/devcheck/panic_unwrap.rs"),
+        panic_free::check,
+    );
+    assert_eq!(fs.len(), 1, "{fs:?}");
+    assert_eq!(fs[0].rule, "panic-free");
+    assert_eq!(fs[0].line, 5);
+    assert!(fs[0].message.contains(".unwrap()"), "{}", fs[0].message);
+    // The documented diagnostic line format.
+    assert!(fs[0]
+        .render()
+        .starts_with("devcheck: panic-free: rust/src/eval/server.rs:5: "));
+}
+
+#[test]
+fn suppression_marker_waives_the_finding() {
+    let fs = run_rule(
+        "rust/src/eval/server.rs",
+        include_str!("fixtures/devcheck/panic_suppressed.rs"),
+        panic_free::check,
+    );
+    assert!(fs.is_empty(), "{fs:?}");
+}
+
+#[test]
+fn ledger_fixture_trips_ledger_order_once() {
+    let fs = run_rule(
+        "rust/src/tuner/task_tuner.rs",
+        include_str!("fixtures/devcheck/ledger_missing_charge.rs"),
+        ledger_order::check,
+    );
+    assert_eq!(fs.len(), 1, "{fs:?}");
+    assert_eq!(fs[0].rule, "ledger-order");
+    assert_eq!(fs[0].line, 5);
+    assert!(fs[0].message.contains("rogue_tuner"), "{}", fs[0].message);
+    assert!(
+        fs[0].message.contains("no preceding `charge"),
+        "{}",
+        fs[0].message
+    );
+}
+
+#[test]
+fn codec_fixture_trips_codec_discipline_once() {
+    let fs = run_rule(
+        "rust/src/eval/proto.rs",
+        include_str!("fixtures/devcheck/codec_tree_parse.rs"),
+        codec::check,
+    );
+    assert_eq!(fs.len(), 1, "{fs:?}");
+    assert_eq!(fs[0].rule, "codec-discipline");
+    assert_eq!(fs[0].line, 6);
+    assert!(fs[0].message.contains("decode_hot"), "{}", fs[0].message);
+}
+
+#[test]
+fn guard_fixture_trips_guard_io_once() {
+    let fs = run_rule(
+        "rust/src/eval/tune_server.rs",
+        include_str!("fixtures/devcheck/guard_across_io.rs"),
+        guard_io::check,
+    );
+    assert_eq!(fs.len(), 1, "{fs:?}");
+    assert_eq!(fs[0].rule, "guard-io");
+    assert_eq!(fs[0].line, 7);
+    assert!(fs[0].message.contains("`jobs`"), "{}", fs[0].message);
+}
+
+#[test]
+fn wire_fixture_trips_wire_docs_once() {
+    let proto = SourceFile::parse(
+        "rust/src/eval/proto.rs".to_string(),
+        include_str!("fixtures/devcheck/wire_undocumented_field.rs"),
+    );
+    let wire_md = "| `task` | the task shape | yes |";
+    let fs = wire_docs::check(&[&proto], wire_md, "");
+    assert_eq!(fs.len(), 1, "{fs:?}");
+    assert_eq!(fs[0].rule, "wire-docs");
+    assert_eq!(fs[0].line, 6);
+    assert!(fs[0].message.contains("\"mystery\""), "{}", fs[0].message);
+}
+
+#[test]
+fn wire_docs_catches_drift_in_both_directions() {
+    let proto = SourceFile::parse(
+        "rust/src/eval/tune_server.rs".to_string(),
+        r#"fn reply() -> TuneResponse {
+            TuneResponse::Error(format!("quota exhausted: client {c} has spent its {q} points"))
+        }"#,
+    );
+    // Direction docs -> code: a documented text with drifted wording.
+    let ops = "## Failure modes\n\
+               | `quota exhausted: client {c} ran out of {q} points` | quota | raise it |";
+    let fs = wire_docs::check(&[&proto], "", ops);
+    let rules: Vec<&str> = fs.iter().map(|f| f.file.as_str()).collect();
+    // Both sides flag: the doc text matches no literal, and the Error
+    // reply matches no doc text.
+    assert!(rules.contains(&"docs/OPERATIONS.md"), "{fs:?}");
+    assert!(rules.contains(&"rust/src/eval/tune_server.rs"), "{fs:?}");
+
+    // With matching wording both directions are clean.
+    let ops_ok = "## Failure modes\n\
+                  | `quota exhausted: client {c} has spent its {q} points` | quota | raise it |";
+    assert!(wire_docs::check(&[&proto], "", ops_ok).is_empty());
+}
+
+/// The acceptance gate: the repository itself carries no violations.
+/// Every deliberate exception is suppressed at its site with a
+/// justification comment.
+#[test]
+fn repository_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let findings = check_repo(root).expect("devcheck walk");
+    let rendered: Vec<String> = findings.iter().map(|f| f.render()).collect();
+    assert!(
+        findings.is_empty(),
+        "devcheck found violations in the repo:\n{}",
+        rendered.join("\n")
+    );
+}

@@ -1,0 +1,11 @@
+// Fixture: trips `codec-discipline` exactly once — tree `Json::parse`
+// on the hot path. The call inside `request_from_line` is the named
+// lenient fallback for the proto.rs virtual path and must NOT be
+// flagged.
+pub fn decode_hot(line: &str) -> Option<Request> {
+    Request::from_json(&Json::parse(line).ok()?)
+}
+
+pub fn request_from_line(line: &str) -> Option<Request> {
+    Request::from_json(&Json::parse(line).ok()?)
+}

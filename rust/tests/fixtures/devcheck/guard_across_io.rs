@@ -1,0 +1,16 @@
+// Fixture: trips `guard-io` exactly once — `write_tune_response_frame`
+// runs while the `jobs` guard is live. The second function drops the
+// guard first and must NOT be flagged.
+pub fn reply_while_locked(shared: &Shared, out: &mut impl Write) {
+    let jobs = lock_unpoisoned(&shared.jobs);
+    let resp = jobs.status_of(7);
+    write_tune_response_frame(out, &resp);
+}
+
+pub fn reply_after_unlock(shared: &Shared, out: &mut impl Write) {
+    let resp = {
+        let jobs = lock_unpoisoned(&shared.jobs);
+        jobs.status_of(7)
+    };
+    write_tune_response_frame(out, &resp);
+}

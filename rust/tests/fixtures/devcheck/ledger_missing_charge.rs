@@ -1,0 +1,13 @@
+// Fixture: trips `ledger-order` exactly once — `submit_batch` with no
+// lexically preceding `charge(...)` in the same function. The second
+// function is the compliant shape and must NOT be flagged.
+pub fn rogue_tuner(engine: &Engine, points: &[Point]) {
+    let batch = engine.submit_batch(points);
+    batch.wait();
+}
+
+pub fn honest_tuner(ledger: &Ledger, engine: &Engine, points: &[Point]) {
+    ledger.charge("arco", points.len());
+    let batch = engine.submit_batch(points);
+    ledger.settle("arco", batch.wait());
+}

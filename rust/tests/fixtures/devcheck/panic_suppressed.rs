@@ -1,0 +1,7 @@
+// Fixture: the same violation as panic_unwrap.rs, but waived with an
+// inline suppression — devcheck must report nothing.
+pub fn serve_connection(state: &std::sync::Mutex<u32>) -> u32 {
+    // A deliberate exception, documented at the site. devcheck:allow(panic-free)
+    let guard = state.lock().unwrap();
+    *guard
+}

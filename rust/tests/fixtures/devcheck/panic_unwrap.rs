@@ -1,0 +1,14 @@
+// Fixture: trips `panic-free` exactly once — the `.unwrap()` below.
+// Checked under the virtual path rust/src/eval/server.rs; the panic!
+// in the #[cfg(test)] module must NOT be flagged.
+pub fn serve_connection(state: &std::sync::Mutex<u32>) -> u32 {
+    let guard = state.lock().unwrap();
+    *guard
+}
+
+#[cfg(test)]
+mod tests {
+    pub fn helper() {
+        panic!("fine here: test code is exempt");
+    }
+}

@@ -1,0 +1,7 @@
+// Fixture: trips `wire-docs` exactly once — the codec writes a
+// `mystery` field that the fixture WIRE.md table does not mention.
+// `task` is documented and must NOT be flagged.
+pub fn encode(w: &mut StreamWriter) {
+    w.key("task");
+    w.key("mystery");
+}

@@ -1,0 +1,61 @@
+#!/usr/bin/env bash
+# Fingerprint guard: a change to the cycle-accounting code in
+# rust/src/vta/sim.rs silently invalidates every journal and every
+# cross-fleet comparison unless CYCLE_MODEL_VERSION is bumped with it
+# (the version feeds eval::Fingerprint, which gates journal reuse and
+# shard admission — see docs/WIRE.md "Fingerprint").
+#
+# This script fails when a diff touches substantive (non-comment,
+# non-blank) lines of sim.rs without also changing the
+# CYCLE_MODEL_VERSION line. Pure comment/whitespace edits pass.
+#
+# Usage: check_fingerprint_bump.sh [base-ref]
+#   base-ref defaults to origin/$GITHUB_BASE_REF (in a PR), else HEAD^.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+SIM=rust/src/vta/sim.rs
+
+base="${1:-}"
+if [ -z "$base" ]; then
+    if [ -n "${GITHUB_BASE_REF:-}" ]; then
+        base="origin/${GITHUB_BASE_REF}"
+    else
+        base="HEAD^"
+    fi
+fi
+
+if ! git rev-parse --verify --quiet "$base" >/dev/null; then
+    echo "fingerprint-guard: base ref '$base' not found; skipping" >&2
+    exit 0
+fi
+
+# Only added/removed lines of the simulator, no context lines.
+diff=$(git diff -U0 "$base" -- "$SIM" || true)
+if [ -z "$diff" ]; then
+    echo "fingerprint-guard: $SIM untouched vs $base"
+    exit 0
+fi
+
+# Substantive = an added/removed line that is not blank and not a pure
+# comment line (//, //!, ///, or block-comment interior starting with *).
+substantive=$(printf '%s\n' "$diff" |
+    grep -E '^[+-]' | grep -vE '^(\+\+\+|---)' |
+    sed -E 's/^[+-][[:space:]]*//' |
+    grep -vE '^(//|\*|/\*|\*/|$)' || true)
+
+if [ -z "$substantive" ]; then
+    echo "fingerprint-guard: only comments/whitespace changed in $SIM"
+    exit 0
+fi
+
+if printf '%s\n' "$diff" | grep -E '^[+-]' | grep -q 'CYCLE_MODEL_VERSION'; then
+    echo "fingerprint-guard: $SIM changed and CYCLE_MODEL_VERSION was bumped"
+    exit 0
+fi
+
+echo "fingerprint-guard: $SIM cycle-accounting code changed vs $base without a" >&2
+echo "CYCLE_MODEL_VERSION bump. Old journals would replay numbers from a" >&2
+echo "different cycle model. Bump CYCLE_MODEL_VERSION in $SIM (and mention the" >&2
+echo "change in docs/WIRE.md if the fingerprint schema moved)." >&2
+exit 1
