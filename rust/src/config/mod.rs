@@ -60,6 +60,7 @@ impl EvalSettings {
             cache_capacity: self.cache_capacity,
             journal: self.journal.clone(),
             warm_start: None,
+            store: None,
             placement: self.placement,
         }
     }

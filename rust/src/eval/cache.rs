@@ -196,7 +196,7 @@ impl MeasureCache {
 
     /// Look up a key, counting the hit or miss and refreshing recency.
     pub fn get(&self, key: &PointKey) -> Option<MeasureResult> {
-        let found = self.inner.lock().unwrap().get(key);
+        let found = super::sync::lock_unpoisoned(&self.inner).get(key);
         match found {
             Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
             None => self.misses.fetch_add(1, Ordering::Relaxed),
@@ -208,7 +208,7 @@ impl MeasureCache {
     /// miss — for the engine's under-lock re-check of keys whose miss was
     /// already counted by the first pass.
     pub fn get_hit_only(&self, key: &PointKey) -> Option<MeasureResult> {
-        let found = self.inner.lock().unwrap().get(key);
+        let found = super::sync::lock_unpoisoned(&self.inner).get(key);
         if found.is_some() {
             self.hits.fetch_add(1, Ordering::Relaxed);
         }
@@ -218,7 +218,7 @@ impl MeasureCache {
     /// Store a result. Only [`get`](Self::get) touches the hit/miss
     /// counters; inserts are not counted.
     pub fn insert(&self, key: PointKey, result: MeasureResult) {
-        self.inner.lock().unwrap().insert(key, result, self.capacity);
+        super::sync::lock_unpoisoned(&self.inner).insert(key, result, self.capacity);
     }
 
     /// Intent-named alias of [`insert`](Self::insert) for seeding entries
@@ -228,7 +228,7 @@ impl MeasureCache {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        super::sync::lock_unpoisoned(&self.inner).map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -236,7 +236,7 @@ impl MeasureCache {
     }
 
     pub fn stats(&self) -> CacheStats {
-        let inner = self.inner.lock().unwrap();
+        let inner = super::sync::lock_unpoisoned(&self.inner);
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),

@@ -4,6 +4,8 @@ use super::backend::{BackendKind, BackendSpec, MeasureBackend, Placement, ShardP
 use super::cache::{CacheStats, MeasureCache, PointKey};
 use super::journal::Journal;
 use super::proto::Origin;
+use super::store::{MeasureStore, StoreConfig};
+use super::sync;
 use crate::codegen::MeasureResult;
 use crate::space::{ConfigSpace, PointConfig};
 use crate::util::json::Json;
@@ -36,6 +38,11 @@ pub struct EngineConfig {
     /// `serve-measure --warm-start` at the union to inherit the fleet's
     /// history before its first batch.
     pub warm_start: Option<PathBuf>,
+    /// Optional shared measurement store (`serve-measure --store`): a
+    /// directory of journal segments shared by every process pointed at
+    /// it. Cache misses consult the store before the backend; fresh
+    /// measurements are appended for every other tenant, forever.
+    pub store: Option<StoreConfig>,
     /// How a remote fleet backend splits batches across shards (ignored by
     /// built-in local backends).
     pub placement: Placement,
@@ -50,6 +57,7 @@ impl Default for EngineConfig {
             cache_capacity: None,
             journal: None,
             warm_start: None,
+            store: None,
             placement: Placement::default(),
         }
     }
@@ -72,6 +80,9 @@ pub struct EngineStats {
     /// Points a remote fleet answered from shard-side shared state
     /// (another tenant or an earlier run paid for the simulation).
     pub shard_cached: usize,
+    /// Points answered from the shared measurement store (`--store`):
+    /// some other process, possibly long dead, already paid for them.
+    pub store_served: usize,
     /// Batches currently being measured (a queue-depth gauge: the
     /// `serve-measure` `stats` op exposes it so fleet clients can see how
     /// loaded each shard is).
@@ -105,6 +116,7 @@ impl EngineStats {
             ("batch_dedup", Json::num(self.batch_dedup as f64)),
             ("coalesced", Json::num(self.coalesced as f64)),
             ("shard_cached", Json::num(self.shard_cached as f64)),
+            ("store_served", Json::num(self.store_served as f64)),
             ("active_batches", Json::num(self.active_batches as f64)),
             ("cache_hits", Json::num(self.cache_hits as f64)),
             ("cache_misses", Json::num(self.cache_misses as f64)),
@@ -148,23 +160,23 @@ impl InflightCell {
     }
 
     fn fill(&self, r: MeasureResult) {
-        *self.slot.lock().unwrap() = CellState::Done(r);
+        *sync::lock_unpoisoned(&self.slot) = CellState::Done(r);
         self.ready.notify_all();
     }
 
     fn abandon(&self) {
-        *self.slot.lock().unwrap() = CellState::Abandoned;
+        *sync::lock_unpoisoned(&self.slot) = CellState::Abandoned;
         self.ready.notify_all();
     }
 
     /// Block until the owner publishes; `None` when it abandoned instead.
     fn wait(&self) -> Option<MeasureResult> {
-        let mut guard = self.slot.lock().unwrap();
+        let mut guard = sync::lock_unpoisoned(&self.slot);
         loop {
             match *guard {
                 CellState::Done(r) => return Some(r),
                 CellState::Abandoned => return None,
-                CellState::Pending => guard = self.ready.wait(guard).unwrap(),
+                CellState::Pending => guard = sync::wait_unpoisoned(&self.ready, guard),
             }
         }
     }
@@ -203,11 +215,12 @@ impl Drop for ClaimGuard<'_> {
         if !self.armed {
             return;
         }
-        if let Ok(mut map) = self.inflight.lock() {
-            for k in &self.keys {
-                if let Some(cell) = map.remove(k) {
-                    cell.abandon();
-                }
+        // Runs during unwinds: recover a poisoned registry rather than
+        // leave followers hanging on claims nobody will ever fill.
+        let mut map = sync::lock_unpoisoned(self.inflight);
+        for k in &self.keys {
+            if let Some(cell) = map.remove(k) {
+                cell.abandon();
             }
         }
     }
@@ -233,6 +246,7 @@ pub struct Engine {
     cache: Option<MeasureCache>,
     inflight: Mutex<HashMap<PointKey, Arc<InflightCell>>>,
     journal: Option<Mutex<Journal>>,
+    store: Option<Mutex<MeasureStore>>,
     journal_seeded: usize,
     warm_seeded: usize,
     batches: AtomicUsize,
@@ -240,6 +254,7 @@ pub struct Engine {
     batch_dedup: AtomicUsize,
     coalesced: AtomicUsize,
     shard_cached: AtomicUsize,
+    store_served: AtomicUsize,
     active: AtomicUsize,
 }
 
@@ -334,6 +349,10 @@ impl Engine {
             }
             None => None,
         };
+        let store = match &config.store {
+            Some(cfg) => Some(MeasureStore::open(cfg)?),
+            None => None,
+        };
         Ok(Engine::from_parts(
             backend,
             config.workers,
@@ -341,18 +360,19 @@ impl Engine {
             config.cache_capacity,
             journal,
             warm,
+            store,
         ))
     }
 
     /// Engine over a caller-provided backend (tests, custom oracles).
     pub fn with_backend(backend: Box<dyn MeasureBackend>, workers: usize, cache: bool) -> Engine {
-        Engine::from_parts(backend, workers, cache, None, None, None)
+        Engine::from_parts(backend, workers, cache, None, None, None, None)
     }
 
     /// The common case: cycle-accurate simulator backend, cache on, no
     /// journal.
     pub fn vta_sim(workers: usize) -> Engine {
-        Engine::from_parts(BackendKind::VtaSim.build(), workers, true, None, None, None)
+        Engine::from_parts(BackendKind::VtaSim.build(), workers, true, None, None, None, None)
     }
 
     fn from_parts(
@@ -362,6 +382,7 @@ impl Engine {
         cache_capacity: Option<usize>,
         journal: Option<Journal>,
         warm: Option<Journal>,
+        mut store: Option<MeasureStore>,
     ) -> Engine {
         let cache = cache.then(|| MeasureCache::with_capacity(cache_capacity));
         if cache.is_none() && journal.is_some() {
@@ -422,12 +443,37 @@ impl Engine {
                 w.path().display()
             );
         }
+        // The store inherits this process's local history: a shard started
+        // with `--warm-start union.jsonl --store dir` imports the fleet's
+        // merged journal into the shared tier (rotating and pruning as it
+        // goes), so every other tenant sees it without its own warm start.
+        if let Some(s) = store.as_mut() {
+            let mut imported = 0usize;
+            for j in journal.iter().chain(warm.iter()) {
+                for e in j.entries() {
+                    if e.backend == backend.name() && s.record(&e.backend, &e.key, &e.result) {
+                        imported += 1;
+                    }
+                }
+            }
+            if imported > 0 {
+                if let Err(e) = s.flush() {
+                    crate::log_warn!("eval", "store flush failed: {e}");
+                }
+                crate::log_info!(
+                    "eval",
+                    "store {}: imported {imported} measurements from local history",
+                    s.dir().display()
+                );
+            }
+        }
         Engine {
             backend,
             workers: workers.max(1),
             cache,
             inflight: Mutex::new(HashMap::new()),
             journal: journal.map(Mutex::new),
+            store: store.map(Mutex::new),
             journal_seeded,
             warm_seeded,
             batches: AtomicUsize::new(0),
@@ -435,6 +481,7 @@ impl Engine {
             batch_dedup: AtomicUsize::new(0),
             coalesced: AtomicUsize::new(0),
             shard_cached: AtomicUsize::new(0),
+            store_served: AtomicUsize::new(0),
             active: AtomicUsize::new(0),
         }
     }
@@ -483,7 +530,7 @@ impl Engine {
     ) -> TracedBatch {
         match self.try_measure_batch_traced(space, points) {
             Ok(batch) => batch,
-            Err(e) => panic!("{e}"),
+            Err(e) => sync::raise(e),
         }
     }
 
@@ -534,7 +581,7 @@ impl Engine {
         let mut alias: Vec<(usize, usize)> = Vec::new(); // (input index, uniq slot)
         let mut follows: Vec<(usize, Arc<InflightCell>)> = Vec::new();
         {
-            let mut inflight = self.inflight.lock().unwrap();
+            let mut inflight = sync::lock_unpoisoned(&self.inflight);
             for i in 0..n {
                 if out[i].is_some() {
                     continue;
@@ -562,7 +609,19 @@ impl Engine {
             }
         }
 
-        // 3. Measure the owned misses (backend decides local vs remote
+        // 2b. Consult the shared store for the owned misses: a point any
+        //     tenant ever measured under this fingerprint is answered from
+        //     disk instead of the backend. Claims stay in place so a store
+        //     hit still resolves followers through the normal publish path.
+        let store_hits: Vec<Option<MeasureResult>> = match &self.store {
+            Some(store) if !uniq.is_empty() => {
+                let miss_keys: Vec<PointKey> = uniq.iter().map(|&i| keys[i].clone()).collect();
+                sync::lock_unpoisoned(store).lookup_many(self.backend.name(), &miss_keys)
+            }
+            _ => vec![None; uniq.len()],
+        };
+
+        // 3. Measure the remaining misses (backend decides local vs remote
         //    parallelism). The guard withdraws our claims and wakes any
         //    followers if the backend unwinds before we publish.
         let guard = ClaimGuard {
@@ -570,44 +629,88 @@ impl Engine {
             keys: uniq.iter().map(|&i| keys[i].clone()).collect(),
             armed: true,
         };
-        let miss_points: Vec<PointConfig> = uniq.iter().map(|&i| points[i].clone()).collect();
+        let miss_points: Vec<PointConfig> = uniq
+            .iter()
+            .enumerate()
+            .filter(|&(slot, _)| store_hits[slot].is_none())
+            .map(|(_, &i)| points[i].clone())
+            .collect();
         // On a lost backend the armed guard withdraws this batch's claims
         // and wakes followers with `Abandoned` on the way out; the journal
         // is flushed first so measurements other batches already paid for
         // are not stranded in memory when the run exits on this error
         // (Journal's Drop releases the lock but never flushes).
-        let (results, fresh_flags): (Vec<MeasureResult>, Vec<bool>) =
-            match self.backend.try_measure_many_traced(space, &miss_points, self.workers) {
-                Ok(out) => out,
-                Err(e) => {
-                    self.flush_journal();
-                    return Err(e);
+        let (backend_results, backend_fresh): (Vec<MeasureResult>, Vec<bool>) =
+            if miss_points.is_empty() {
+                (Vec::new(), Vec::new())
+            } else {
+                match self.backend.try_measure_many_traced(space, &miss_points, self.workers) {
+                    Ok(out) => out,
+                    Err(e) => {
+                        self.flush_journal();
+                        return Err(e);
+                    }
                 }
             };
+        // Stitch store hits and backend answers back into uniq-slot order:
+        // the backend only saw the filtered misses, so its results are
+        // consumed with a cursor wherever the store had no answer.
+        let mut slot_results: Vec<MeasureResult> = Vec::with_capacity(uniq.len());
+        let mut slot_origin: Vec<Origin> = Vec::with_capacity(uniq.len());
+        let mut bi = 0usize;
+        for hit in &store_hits {
+            match hit {
+                Some(r) => {
+                    slot_results.push(*r);
+                    slot_origin.push(Origin::StoreServed);
+                }
+                None => {
+                    slot_results.push(backend_results[bi]);
+                    slot_origin.push(if backend_fresh[bi] {
+                        Origin::Fresh
+                    } else {
+                        Origin::ShardCached
+                    });
+                    bi += 1;
+                }
+            }
+        }
         // Only freshly-run points count as simulations; a warm fleet shard
         // answering from its own cache did not re-simulate (those are
-        // tallied under `shard_cached` instead of being double-counted).
+        // tallied under `shard_cached` instead of being double-counted),
+        // and store-served points never left this process.
         self.simulations
-            .fetch_add(fresh_flags.iter().filter(|&&f| f).count(), Ordering::Relaxed);
+            .fetch_add(backend_fresh.iter().filter(|&&f| f).count(), Ordering::Relaxed);
         self.shard_cached
-            .fetch_add(fresh_flags.iter().filter(|&&f| !f).count(), Ordering::Relaxed);
+            .fetch_add(backend_fresh.iter().filter(|&&f| !f).count(), Ordering::Relaxed);
+        self.store_served
+            .fetch_add(store_hits.iter().filter(|h| h.is_some()).count(), Ordering::Relaxed);
         self.batch_dedup.fetch_add(alias.len(), Ordering::Relaxed);
 
         // 4. Publish: cache and journal first (so late arrivals hit the
         //    cache), then resolve the in-flight cells for any followers.
         for (slot, &i) in uniq.iter().enumerate() {
-            let r = results[slot];
-            self.publish_one(&keys[i], r);
-            out[i] = Some(r);
-            if !fresh_flags[slot] {
-                origins[i] = Origin::ShardCached;
+            let r = slot_results[slot];
+            match slot_origin[slot] {
+                // A store-served point is already durable fleet-wide; only
+                // the in-memory cache needs it (re-journaling would bloat
+                // every tenant's local history with copies of the shared
+                // tier).
+                Origin::StoreServed => {
+                    if let Some(cache) = &self.cache {
+                        cache.insert(keys[i].clone(), r);
+                    }
+                }
+                _ => self.publish_one(&keys[i], r),
             }
+            out[i] = Some(r);
+            origins[i] = slot_origin[slot];
         }
         {
-            let mut inflight = self.inflight.lock().unwrap();
+            let mut inflight = sync::lock_unpoisoned(&self.inflight);
             for (slot, &i) in uniq.iter().enumerate() {
                 if let Some(cell) = inflight.remove(&keys[i]) {
-                    cell.fill(results[slot]);
+                    cell.fill(slot_results[slot]);
                 }
             }
         }
@@ -656,16 +759,22 @@ impl Engine {
             }
         }
         for (i, slot) in alias {
-            out[i] = Some(results[slot]);
+            out[i] = Some(slot_results[slot]);
             origins[i] = Origin::Dedup;
         }
         if !uniq.is_empty() || recovered {
             self.flush_journal();
         }
-        Ok(TracedBatch {
-            results: out.into_iter().map(|r| r.expect("every point measured")).collect(),
-            origins,
-        })
+        let mut results = Vec::with_capacity(n);
+        for r in out {
+            match r {
+                Some(r) => results.push(r),
+                None => anyhow::bail!(
+                    "measurement engine bug: a point was neither measured, cached, nor coalesced"
+                ),
+            }
+        }
+        Ok(TracedBatch { results, origins })
     }
 
     /// Make one fresh measurement visible to every future lookup: the
@@ -676,7 +785,10 @@ impl Engine {
             cache.insert(key.clone(), r);
         }
         if let Some(journal) = &self.journal {
-            journal.lock().unwrap().record(self.backend.name(), key, &r);
+            sync::lock_unpoisoned(journal).record(self.backend.name(), key, &r);
+        }
+        if let Some(store) = &self.store {
+            sync::lock_unpoisoned(store).record(self.backend.name(), key, &r);
         }
     }
 
@@ -772,8 +884,13 @@ impl Engine {
     /// tuning run.
     pub fn flush_journal(&self) {
         if let Some(journal) = &self.journal {
-            if let Err(e) = journal.lock().unwrap().flush() {
+            if let Err(e) = sync::lock_unpoisoned(journal).flush() {
                 crate::log_warn!("eval", "journal flush failed: {e}");
+            }
+        }
+        if let Some(store) = &self.store {
+            if let Err(e) = sync::lock_unpoisoned(store).flush() {
+                crate::log_warn!("eval", "store flush failed: {e}");
             }
         }
     }
@@ -790,6 +907,7 @@ impl Engine {
             batch_dedup: self.batch_dedup.load(Ordering::Relaxed),
             coalesced: self.coalesced.load(Ordering::Relaxed),
             shard_cached: self.shard_cached.load(Ordering::Relaxed),
+            store_served: self.store_served.load(Ordering::Relaxed),
             active_batches: self.active.load(Ordering::Relaxed),
             cache_hits: cs.hits,
             cache_misses: cs.misses,
@@ -805,13 +923,15 @@ impl Engine {
     pub fn summary(&self) -> String {
         let s = self.stats();
         format!(
-            "backend={} workers={} batches={} simulations={} shard_cached={} cache_hits={} \
-             batch_dedup={} coalesced={} evictions={} journal_seeded={} warm_seeded={}",
+            "backend={} workers={} batches={} simulations={} shard_cached={} store_served={} \
+             cache_hits={} batch_dedup={} coalesced={} evictions={} journal_seeded={} \
+             warm_seeded={}",
             self.backend_name(),
             self.workers,
             s.batches,
             s.simulations,
             s.shard_cached,
+            s.store_served,
             s.cache_hits,
             s.batch_dedup,
             s.coalesced,
@@ -1153,5 +1273,109 @@ mod tests {
         assert!(st.cache_entries <= 8, "cache held {} entries", st.cache_entries);
         assert_eq!(st.cache_evictions, 24 - 8);
         assert_eq!(st.simulations, 24);
+    }
+
+    /// A backend that panics on its first batch and behaves normally
+    /// afterwards — the regression shape for a worker thread dying while
+    /// holding engine locks.
+    struct PanicOnce {
+        tripped: std::sync::atomic::AtomicBool,
+        inner: super::super::AnalyticalBackend,
+    }
+
+    impl MeasureBackend for PanicOnce {
+        fn name(&self) -> &'static str {
+            "panic-once"
+        }
+        fn measure(&self, space: &ConfigSpace, point: &PointConfig) -> MeasureResult {
+            self.inner.measure(space, point)
+        }
+        fn try_measure_many_traced(
+            &self,
+            space: &ConfigSpace,
+            points: &[PointConfig],
+            workers: usize,
+        ) -> anyhow::Result<(Vec<MeasureResult>, Vec<bool>)> {
+            if !self.tripped.swap(true, Ordering::SeqCst) {
+                panic!("backend crashed mid-batch");
+            }
+            self.inner.try_measure_many_traced(space, points, workers)
+        }
+    }
+
+    #[test]
+    fn panicking_backend_leaves_engine_usable() {
+        let s = space();
+        let e = Engine::with_backend(
+            Box::new(PanicOnce {
+                tripped: std::sync::atomic::AtomicBool::new(false),
+                inner: super::super::AnalyticalBackend,
+            }),
+            2,
+            true,
+        );
+        let p = s.default_point();
+        let crashed = std::thread::scope(|scope| {
+            scope.spawn(|| e.measure_batch(&s, std::slice::from_ref(&p))).join()
+        });
+        assert!(crashed.is_err(), "first batch must observe the backend panic");
+        // The unwound batch must leave no residue: claims withdrawn, gauge
+        // drained, and the locks it poisoned recoverable by the next batch.
+        assert!(e.inflight.lock().unwrap().is_empty(), "claims must be withdrawn");
+        assert_eq!(e.stats().active_batches, 0, "gauge must drain");
+        let traced = e.measure_batch_traced(&s, &[p.clone()]);
+        assert_eq!(traced.origins, vec![Origin::Fresh]);
+        assert_eq!(traced.results[0], super::super::AnalyticalBackend.measure(&s, &p));
+    }
+
+    #[test]
+    fn store_dedups_across_engine_instances() {
+        let s = space();
+        let dir =
+            std::path::PathBuf::from(format!("target/tmp/engine_store_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut rng = Pcg32::seeded(77);
+        let mut seen = std::collections::HashSet::new();
+        let mut points = Vec::new();
+        while points.len() < 5 {
+            let p = s.random_point(&mut rng);
+            if seen.insert(PointKey::of(&s, &p)) {
+                points.push(p);
+            }
+        }
+        let first = {
+            let a = Engine::new(EngineConfig {
+                backend: BackendKind::Analytical.into(),
+                workers: 2,
+                store: Some(StoreConfig::new(dir.clone())),
+                ..Default::default()
+            })
+            .unwrap();
+            let out = a.measure_batch(&s, &points);
+            assert_eq!(a.stats().simulations, points.len());
+            a.flush_journal();
+            out
+        };
+        // A second engine (a different process in production) answers the
+        // same batch from the shared store: bit-identical results, zero
+        // simulations, every origin StoreServed so ledgers see fresh=false.
+        let b = Engine::new(EngineConfig {
+            backend: BackendKind::Analytical.into(),
+            workers: 2,
+            store: Some(StoreConfig::new(dir.clone())),
+            ..Default::default()
+        })
+        .unwrap();
+        let traced = b.measure_batch_traced(&s, &points);
+        assert_eq!(traced.results, first);
+        assert!(
+            traced.origins.iter().all(|o| *o == Origin::StoreServed),
+            "origins: {:?}",
+            traced.origins
+        );
+        let st = b.stats();
+        assert_eq!(st.simulations, 0);
+        assert_eq!(st.store_served, points.len());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -54,7 +54,7 @@ pub struct JournalEntry {
 }
 
 /// `path` with `suffix` appended to the file name (keeps any extension).
-fn sibling(path: &Path, suffix: &str) -> PathBuf {
+pub(crate) fn sibling(path: &Path, suffix: &str) -> PathBuf {
     let mut os = path.as_os_str().to_os_string();
     os.push(suffix);
     PathBuf::from(os)
@@ -63,7 +63,7 @@ fn sibling(path: &Path, suffix: &str) -> PathBuf {
 /// Can we *prove* the lock-holding pid is gone? Only where a process table
 /// is inspectable (Linux `/proc`); anywhere else — or for an unparsable
 /// sentinel — assume it is alive and fail fast.
-fn holder_is_dead(holder: &str) -> bool {
+pub(crate) fn holder_is_dead(holder: &str) -> bool {
     if holder.is_empty() || holder.parse::<u32>().is_err() {
         return false;
     }
@@ -133,7 +133,7 @@ fn acquire_lock_sentinel(path: &Path) -> LockAcquire {
 }
 
 /// Verdict of [`check_header`] on a journal's first line.
-enum HeaderCheck {
+pub(crate) enum HeaderCheck {
     /// A valid v2 header stamped with this binary's fingerprint.
     Journal,
     /// Not a v2 journal header at all; the caller discriminates v1 files
@@ -145,7 +145,7 @@ enum HeaderCheck {
 /// (unsupported version, missing or foreign fingerprint) are shared by
 /// [`Journal::open`] and [`merge_journals`] through this helper so the two
 /// entry points cannot drift.
-fn check_header(path: &Path, first: &str) -> anyhow::Result<HeaderCheck> {
+pub(crate) fn check_header(path: &Path, first: &str) -> anyhow::Result<HeaderCheck> {
     let header = match Json::parse(first) {
         Ok(h) if h.get_str("format") == Some("arco-journal") => h,
         _ => return Ok(HeaderCheck::NotAJournal),
@@ -272,6 +272,31 @@ impl Journal {
     /// but [`flush`](Self::flush) is a no-op.
     pub fn open_read_only(path: &Path) -> anyhow::Result<Journal> {
         Journal::load(path, false)
+    }
+
+    /// Open `path` for writing without treating contention as an error:
+    /// `Ok(None)` when a live writer holds the `<path>.lock` sentinel.
+    /// The measurement store uses this to skip past a segment another
+    /// shard is appending to. Unlike [`Journal::open`], filesystem
+    /// trouble is an error here rather than a read-only degradation —
+    /// the caller wants a *writable* segment or none at all. Data-safety
+    /// refusals (foreign fingerprint, v1 file) are the same as `open`.
+    pub(crate) fn try_open_writer(path: &Path) -> anyhow::Result<Option<Journal>> {
+        match acquire_lock_sentinel(path) {
+            LockAcquire::Acquired => {}
+            LockAcquire::Busy { .. } => return Ok(None),
+            LockAcquire::Failed(e) => {
+                anyhow::bail!("cannot lock {}: {e}", path.display());
+            }
+        }
+        match Journal::load(path, true) {
+            Ok(j) => Ok(Some(j)),
+            Err(e) => {
+                // Do not leave the sentinel behind on a refused open.
+                let _ = std::fs::remove_file(sibling(path, ".lock"));
+                Err(e)
+            }
+        }
     }
 
     fn load(path: &Path, writer: bool) -> anyhow::Result<Journal> {

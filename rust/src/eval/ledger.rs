@@ -151,7 +151,7 @@ impl BudgetLedger {
     /// debiting the account. Returns how many were admitted: fewer than
     /// requested when the allowance is nearly spent, zero once exhausted.
     pub fn charge(&self, framework: &str, task: &str, points: usize) -> usize {
-        let mut accounts = self.accounts.lock().unwrap();
+        let mut accounts = super::sync::lock_unpoisoned(&self.accounts);
         let account = accounts
             .entry((framework.to_string(), task.to_string()))
             .or_default();
@@ -172,7 +172,7 @@ impl BudgetLedger {
     /// every tenant planning the same points is debited identically.
     pub fn settle(&self, framework: &str, task: &str, origins: &[Origin], modeled_hw_secs: f64) {
         let fresh = origins.iter().filter(|o| o.is_fresh()).count();
-        let mut accounts = self.accounts.lock().unwrap();
+        let mut accounts = super::sync::lock_unpoisoned(&self.accounts);
         let account = accounts
             .entry((framework.to_string(), task.to_string()))
             .or_default();
@@ -183,9 +183,7 @@ impl BudgetLedger {
 
     /// Snapshot of one tenant's account (zeroed when it never charged).
     pub fn account(&self, framework: &str, task: &str) -> Account {
-        self.accounts
-            .lock()
-            .unwrap()
+        super::sync::lock_unpoisoned(&self.accounts)
             .get(&(framework.to_string(), task.to_string()))
             .copied()
             .unwrap_or_default()
@@ -193,7 +191,7 @@ impl BudgetLedger {
 
     /// Snapshot of every account, in deterministic (framework, task) order.
     pub fn stats(&self) -> LedgerStats {
-        let accounts = self.accounts.lock().unwrap();
+        let accounts = super::sync::lock_unpoisoned(&self.accounts);
         LedgerStats {
             per_task_points: self.per_task_points,
             tenants: accounts
@@ -257,7 +255,7 @@ impl Dispatcher {
     /// to call from any tenant at any time; shrinking never cancels
     /// permits already in flight, it only gates new admissions.
     pub fn set_slots(&self, slots: usize) {
-        let mut state = self.state.lock().unwrap();
+        let mut state = super::sync::lock_unpoisoned(&self.state);
         let slots = slots.max(1);
         if state.slots != slots {
             state.slots = slots;
@@ -269,7 +267,7 @@ impl Dispatcher {
     /// turn (strict FIFO) *and* a slot is free. Dropping the permit
     /// releases the slot and wakes the next tenant in line.
     pub fn checkout(&self) -> DispatchPermit<'_> {
-        let mut state = self.state.lock().unwrap();
+        let mut state = super::sync::lock_unpoisoned(&self.state);
         let ticket = state.next_ticket;
         state.next_ticket += 1;
         state.queue.push_back(ticket);
@@ -290,19 +288,19 @@ impl Dispatcher {
                 state.waited += 1;
                 counted_wait = true;
             }
-            state = self.ready.wait(state).unwrap();
+            state = super::sync::wait_unpoisoned(&self.ready, state);
         }
     }
 
     fn release(&self) {
-        let mut state = self.state.lock().unwrap();
+        let mut state = super::sync::lock_unpoisoned(&self.state);
         state.in_flight -= 1;
         drop(state);
         self.ready.notify_all();
     }
 
     pub fn stats(&self) -> DispatchStats {
-        let state = self.state.lock().unwrap();
+        let state = super::sync::lock_unpoisoned(&self.state);
         DispatchStats {
             slots: state.slots,
             in_flight: state.in_flight,

@@ -56,6 +56,7 @@ pub mod ledger;
 pub mod proto;
 pub mod remote;
 pub mod server;
+pub mod store;
 pub(crate) mod sync;
 pub mod tune_client;
 pub mod tune_proto;
@@ -74,6 +75,7 @@ pub use journal::{
 pub use ledger::{Account, BudgetLedger, DispatchStats, Dispatcher, LedgerStats, TenantStats};
 pub use proto::{Fingerprint, Origin, PROTO_VERSION};
 pub use remote::{FleetLostError, RemoteBackend};
+pub use store::{prune_store, store_stat, MeasureStore, PruneStats, StoreConfig, StoreStats};
 pub use cursor::{Cursor, CursorKind, PageError, PagedTrace};
 pub use server::{
     spawn as serve_measure, spawn_local as serve_measure_local,

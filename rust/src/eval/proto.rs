@@ -84,6 +84,10 @@ pub enum Origin {
     /// A fleet shard answered from its own shared state (another tenant or
     /// an earlier run already paid); the fleet did not re-simulate.
     ShardCached,
+    /// Answered from the shared measurement store (`--store`): some
+    /// process, possibly long dead, measured the point under the same
+    /// fingerprint and persisted it fleet-wide.
+    StoreServed,
 }
 
 impl Origin {
@@ -1026,7 +1030,13 @@ mod tests {
             other => panic!("expected results, got {other:?}"),
         }
         assert!(Origin::Fresh.is_fresh());
-        for o in [Origin::Cached, Origin::Dedup, Origin::Coalesced, Origin::ShardCached] {
+        for o in [
+            Origin::Cached,
+            Origin::Dedup,
+            Origin::Coalesced,
+            Origin::ShardCached,
+            Origin::StoreServed,
+        ] {
             assert!(!o.is_fresh());
         }
     }

@@ -726,8 +726,8 @@ impl MeasureBackend for RemoteBackend {
         match self.try_measure_many_traced(space, points, workers) {
             Ok(out) => out,
             // Deliberately infallible facade: direct MeasureBackend callers
-            // have no error channel. devcheck:allow(panic-free)
-            Err(e) => panic!("{e}"),
+            // have no error channel.
+            Err(e) => super::sync::raise(e),
         }
     }
 

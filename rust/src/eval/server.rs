@@ -26,7 +26,7 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 /// Shard behaviour knobs beyond the engine's own configuration.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy)]
 pub struct ServeOptions {
     /// Artificial service latency added *per point* of every measure
     /// request (`--throttle-ms`). Zero in production; non-zero turns a
@@ -35,6 +35,38 @@ pub struct ServeOptions {
     /// before the engine runs, so cached answers are throttled too, just
     /// like a genuinely slow host.
     pub measure_delay: Duration,
+    /// Per-response write deadline. A client that requests a batch and
+    /// then stops draining its socket would otherwise pin this
+    /// connection's thread forever once the kernel send buffer fills;
+    /// hitting the deadline ends the connection like a hangup. Zero
+    /// disables the deadline. The default mirrors the client-side
+    /// measure read timeout so neither end outwaits the other.
+    pub write_timeout: Duration,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            measure_delay: Duration::ZERO,
+            write_timeout: Duration::from_secs(600),
+        }
+    }
+}
+
+/// Hard ceiling on the *total* artificial delay charged to one request.
+/// Keeps `--throttle-ms` proportional for realistic batches while making
+/// a giant batch bounded instead of a multi-hour (or, unchecked, an
+/// overflowing) sleep.
+const MAX_BATCH_THROTTLE: Duration = Duration::from_secs(60);
+
+/// Total throttle for a `points`-sized batch: a saturating per-point
+/// multiply capped at [`MAX_BATCH_THROTTLE`]. `Duration * u32` panics on
+/// overflow and `points.len()` silently truncates through `as u32` —
+/// both reachable from the wire by a large enough batch.
+fn throttle_duration(per_point: Duration, points: usize) -> Duration {
+    per_point
+        .saturating_mul(u32::try_from(points).unwrap_or(u32::MAX))
+        .min(MAX_BATCH_THROTTLE)
 }
 
 /// A running measurement server.
@@ -148,6 +180,12 @@ fn serve_connection(
     opts: ServeOptions,
 ) -> anyhow::Result<()> {
     stream.set_nodelay(true).ok();
+    // Symmetric with the client's measure read timeout (`RemoteBackend`
+    // arms `set_read_timeout` on every request): a reader that stalls
+    // mid-response releases this thread instead of holding it hostage.
+    if !opts.write_timeout.is_zero() {
+        stream.set_write_timeout(Some(opts.write_timeout)).ok();
+    }
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
     loop {
@@ -161,7 +199,15 @@ fn serve_connection(
             Some(req) => handle(engine, clients, req, opts),
             None => Response::Error("unintelligible request".to_string()),
         };
-        write_response_frame(&mut writer, &response)?;
+        if let Err(e) = write_response_frame(&mut writer, &response) {
+            // A write deadline expiring means the client stopped reading:
+            // treat it as a hangup (clean connection end), not a fault.
+            use std::io::ErrorKind;
+            return match e.kind() {
+                ErrorKind::TimedOut | ErrorKind::WouldBlock => Ok(()),
+                _ => Err(e.into()),
+            };
+        }
     }
 }
 
@@ -193,7 +239,7 @@ fn handle(engine: &Engine, clients: &AtomicUsize, req: Request, opts: ServeOptio
             // charged per point, before the engine — a throttled shard is
             // slow even when it answers from its cache, like a slow host.
             if !opts.measure_delay.is_zero() && !points.is_empty() {
-                std::thread::sleep(opts.measure_delay * points.len() as u32);
+                std::thread::sleep(throttle_duration(opts.measure_delay, points.len()));
             }
             // Both sides rebuild the identical space from the task shape;
             // decoded values are the portable point identity.
@@ -239,4 +285,39 @@ pub fn spawn_local(engine: Arc<Engine>) -> anyhow::Result<ServerHandle> {
 /// loopback shards with injected per-point latency).
 pub fn spawn_local_with(engine: Arc<Engine>, opts: ServeOptions) -> anyhow::Result<ServerHandle> {
     spawn_with("127.0.0.1:0", engine, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throttle_is_proportional_then_capped() {
+        let per = Duration::from_millis(10);
+        assert_eq!(throttle_duration(per, 3), Duration::from_millis(30));
+        assert_eq!(throttle_duration(per, 100), Duration::from_secs(1));
+        // Far past the cap: bounded, not hours.
+        assert_eq!(throttle_duration(per, 1_000_000), MAX_BATCH_THROTTLE);
+    }
+
+    #[test]
+    fn throttle_survives_overflowing_batch_sizes() {
+        // Pre-fix this panicked (Duration mul overflow) or truncated
+        // (usize → u32 `as` cast). Saturate, then cap.
+        let huge = Duration::from_secs(u64::MAX / 2);
+        assert_eq!(throttle_duration(huge, usize::MAX), MAX_BATCH_THROTTLE);
+        assert_eq!(throttle_duration(Duration::from_nanos(1), usize::MAX), MAX_BATCH_THROTTLE);
+        // u32::MAX + 1 used to truncate to 0 points → zero sleep; now it
+        // saturates to the cap instead.
+        assert_eq!(
+            throttle_duration(Duration::from_millis(10), u32::MAX as usize + 1),
+            MAX_BATCH_THROTTLE
+        );
+    }
+
+    #[test]
+    fn default_write_timeout_matches_client_measure_timeout() {
+        assert_eq!(ServeOptions::default().write_timeout, Duration::from_secs(600));
+        assert_eq!(ServeOptions::default().measure_delay, Duration::ZERO);
+    }
 }

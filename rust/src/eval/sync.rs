@@ -20,3 +20,14 @@ pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 pub(crate) fn wait_unpoisoned<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
     cv.wait(g).unwrap_or_else(PoisonError::into_inner)
 }
+
+/// Abort the calling thread with `e` — the one sanctioned escape hatch
+/// for *deliberately infallible facades*: trait methods with no error
+/// channel (e.g. [`super::backend::MeasureBackend::measure_many`])
+/// whose fallible implementation hit an unrecoverable error. Keeping the
+/// panic here, next to the lock-poisoning recovery it forces callers to
+/// survive, is what lets `arco devcheck` ban ad-hoc `panic!` everywhere
+/// else in the daemon modules.
+pub(crate) fn raise(e: anyhow::Error) -> ! {
+    panic!("{e}")
+}

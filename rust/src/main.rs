@@ -10,6 +10,8 @@
 //! arco tune submit   --addr 127.0.0.1:4918 --model alexnet --wait   # remote client
 //! arco journal merge out.jsonl a.jsonl b.jsonl   # union shard journals
 //! arco journal compact fleet.jsonl               # GC a long-lived journal
+//! arco store stat results/store                  # shared-store shape
+//! arco store prune results/store --budget-kib N  # bound a shared store
 //! arco report-models                             # Table 3
 //! arco info                                      # backend / artifact status
 //! ```
@@ -58,6 +60,7 @@ fn usage() -> String {
      serve-measure  expose a measurement backend to remote tuners (fleet shard)\n  \
      serve-tune     tuning-as-a-service daemon: queue remote jobs over one shared engine\n  \
      journal        measurement-journal tooling (merge, compact, synth)\n  \
+     store          shared measurement-store tooling (stat, prune)\n  \
      devcheck       static-analysis pass enforcing the eval-layer invariants\n  \
      report-models  print the model zoo (Table 3)\n  \
      info           backend / artifact status\n\nrun `arco <command> --help` for options\n"
@@ -83,6 +86,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "serve-measure" => cmd_serve_measure(rest),
         "serve-tune" => cmd_serve_tune(rest),
         "journal" => cmd_journal(rest),
+        "store" => cmd_store(rest),
         "devcheck" => cmd_devcheck(rest),
         "report-models" => {
             print!("{}", report::table3_models());
@@ -424,6 +428,15 @@ fn cmd_serve_measure(args: &[String]) -> anyhow::Result<()> {
              benchmarks; 0 = off)",
             None,
         )
+        .opt(
+            "store",
+            None,
+            "shared measurement store directory: answer points any tenant ever measured, \
+             append fresh ones for everyone (fleet-wide \"measure once, ever\")",
+            None,
+        )
+        .opt("store-segment-kib", None, "store segment rotation threshold in KiB", None)
+        .opt("store-budget-kib", None, "store directory byte budget in KiB", None)
         .flag("no-cache", None, "disable the measurement cache")
         .flag("verbose", Some('v'), "debug logging")
         .flag("help", Some('h'), "show help");
@@ -446,6 +459,19 @@ fn cmd_serve_measure(args: &[String]) -> anyhow::Result<()> {
             BackendKind::known_names().join(", ")
         ),
     };
+    let store = match a.get("store") {
+        Some(dir) => {
+            let mut cfg = eval::StoreConfig::new(PathBuf::from(dir));
+            if let Some(kib) = a.get_u64("store-segment-kib").map_err(anyhow::Error::msg)? {
+                cfg.segment_bytes = kib.saturating_mul(1024).max(1);
+            }
+            if let Some(kib) = a.get_u64("store-budget-kib").map_err(anyhow::Error::msg)? {
+                cfg.budget_bytes = kib.saturating_mul(1024).max(1);
+            }
+            Some(cfg)
+        }
+        None => None,
+    };
     let config = eval::EngineConfig {
         backend: backend.into(),
         workers: a
@@ -456,11 +482,16 @@ fn cmd_serve_measure(args: &[String]) -> anyhow::Result<()> {
         cache_capacity: a.get_usize("cache-cap").map_err(anyhow::Error::msg)?,
         journal: a.get("journal").map(PathBuf::from),
         warm_start: a.get("warm-start").map(PathBuf::from),
+        store,
         placement: Placement::default(),
     };
+    let store_dir = config.store.as_ref().map(|c| c.dir.clone());
     let engine = Arc::new(eval::Engine::new(config)?);
     let throttle_ms = a.get_usize("throttle-ms").map_err(anyhow::Error::msg)?.unwrap_or(0);
-    let opts = eval::ServeOptions { measure_delay: Duration::from_millis(throttle_ms as u64) };
+    let opts = eval::ServeOptions {
+        measure_delay: Duration::from_millis(throttle_ms as u64),
+        ..eval::ServeOptions::default()
+    };
     let handle = eval::serve_measure_with(a.get("addr").unwrap(), Arc::clone(&engine), opts)?;
     // The address line is machine-read by fleet launch scripts (CI smoke):
     // keep its format stable.
@@ -472,6 +503,9 @@ fn cmd_serve_measure(args: &[String]) -> anyhow::Result<()> {
         engine.preloaded_entries(),
         eval::Fingerprint::current().describe()
     );
+    if let Some(dir) = store_dir {
+        println!("serve-measure: shared store at {}", dir.display());
+    }
     if throttle_ms > 0 {
         println!("serve-measure: throttled {throttle_ms} ms/point (testing mode)");
     }
@@ -566,6 +600,7 @@ fn cmd_serve_tune(args: &[String]) -> anyhow::Result<()> {
         cache_capacity: a.get_usize("cache-cap").map_err(anyhow::Error::msg)?,
         journal: a.get("journal").map(PathBuf::from),
         warm_start: a.get("warm-start").map(PathBuf::from),
+        store: None,
         placement,
     };
     let engine = Arc::new(eval::Engine::new(config)?);
@@ -1074,6 +1109,102 @@ fn cmd_journal(args: &[String]) -> anyhow::Result<()> {
             Ok(())
         }
         Some(other) => anyhow::bail!("unknown journal subcommand '{other}'\n\n{sub_usage}"),
+    }
+}
+
+/// `arco store stat|prune` — operator tooling for the shared measurement
+/// store (`serve-measure --store <dir>`).
+fn cmd_store(args: &[String]) -> anyhow::Result<()> {
+    let sub_usage = "arco store <subcommand>\n\nsubcommands:\n  \
+         stat <dir>                     segment count, bytes, identities, live locks\n  \
+         prune <dir> [--budget-kib N]   delete oldest segments until the store fits \
+         the byte budget (never the newest segment or a live writer's)\n";
+    match args.first().map(String::as_str) {
+        Some("stat") => {
+            let cli = Cli::new("arco store stat", "read-only scan of a shared store directory")
+                .flag("verbose", Some('v'), "debug logging")
+                .flag("help", Some('h'), "show help");
+            let a = cli.parse(&args[1..]).map_err(anyhow::Error::msg)?;
+            if a.has_flag("help") {
+                print!("{}", cli.usage());
+                println!("\nusage: arco store stat <dir>");
+                return Ok(());
+            }
+            if a.has_flag("verbose") {
+                set_level(Level::Debug);
+            }
+            let paths = a.positional();
+            let [dir] = paths else {
+                anyhow::bail!("store stat takes exactly one directory: arco store stat <dir>");
+            };
+            let dir = PathBuf::from(dir);
+            let stats = eval::store_stat(&dir)?;
+            println!(
+                "store stat: {}: {} segment(s), {} bytes, {} identities, {} locked by live \
+                 writers",
+                dir.display(),
+                stats.segments,
+                stats.bytes,
+                stats.identities,
+                stats.locked
+            );
+            Ok(())
+        }
+        Some("prune") => {
+            let cli = Cli::new(
+                "arco store prune",
+                "delete oldest store segments until the directory fits the byte budget",
+            )
+            .opt(
+                "budget-kib",
+                None,
+                "byte budget in KiB",
+                Some("262144"), // = StoreConfig::DEFAULT_BUDGET_BYTES
+            )
+            .flag("verbose", Some('v'), "debug logging")
+            .flag("help", Some('h'), "show help");
+            let a = cli.parse(&args[1..]).map_err(anyhow::Error::msg)?;
+            if a.has_flag("help") {
+                print!("{}", cli.usage());
+                println!("\nusage: arco store prune <dir> [--budget-kib N]");
+                return Ok(());
+            }
+            if a.has_flag("verbose") {
+                set_level(Level::Debug);
+            }
+            let paths = a.positional();
+            let [dir] = paths else {
+                anyhow::bail!(
+                    "store prune takes exactly one directory: \
+                     arco store prune <dir> [--budget-kib N]"
+                );
+            };
+            let dir = PathBuf::from(dir);
+            let budget = a
+                .get_u64("budget-kib")
+                .map_err(anyhow::Error::msg)?
+                .unwrap_or(eval::StoreConfig::DEFAULT_BUDGET_BYTES / 1024)
+                .saturating_mul(1024)
+                .max(1);
+            let stats = eval::prune_store(&dir, budget)?;
+            println!(
+                "store prune: {}: {} of {} segment(s) deleted, {} -> {} bytes (budget {}), \
+                 {} kept by live writers",
+                dir.display(),
+                stats.deleted,
+                stats.segments_before,
+                stats.bytes_before,
+                stats.bytes_after,
+                budget,
+                stats.locked_kept
+            );
+            Ok(())
+        }
+        Some("--help") | Some("-h") | Some("help") | None => {
+            print!("{sub_usage}");
+            Ok(())
+        }
+        Some(other) => anyhow::bail!("unknown store subcommand '{other}'\n\n{sub_usage}"),
     }
 }
 

@@ -47,7 +47,7 @@ fn analytical_engine() -> Engine {
 fn throttled_shard(delay: Duration) -> ServerHandle {
     serve_measure_local_with(
         Arc::new(analytical_engine()),
-        ServeOptions { measure_delay: delay },
+        ServeOptions { measure_delay: delay, ..ServeOptions::default() },
     )
     .unwrap()
 }

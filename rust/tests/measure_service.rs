@@ -4,10 +4,12 @@
 //! when a shard dies mid-batch.
 
 use arco::baselines::RandomSearch;
-use arco::eval::proto::{read_frame, write_frame, Request, Response, PROTO_VERSION};
+use arco::eval::proto::{
+    read_frame, write_frame, write_request_frame, Request, Response, PROTO_VERSION,
+};
 use arco::eval::{
-    serve_measure_local, AnalyticalBackend, BackendKind, BackendSpec, Engine, EngineConfig,
-    Fingerprint, MeasureBackend, RemoteBackend,
+    serve_measure_local, serve_measure_local_with, AnalyticalBackend, BackendKind, BackendSpec,
+    Engine, EngineConfig, Fingerprint, MeasureBackend, RemoteBackend, ServeOptions,
 };
 use arco::space::ConfigSpace;
 use arco::tuner::{tune_task_with, TuneBudget};
@@ -225,6 +227,65 @@ fn measure_responses_piggyback_the_shard_queue_depth() {
         }
         other => panic!("expected results, got {other:?}"),
     }
+    server.shutdown();
+}
+
+#[test]
+fn stalled_reader_is_disconnected_by_the_write_timeout() {
+    // A client that requests a big batch and then never drains its socket
+    // used to pin the connection thread forever once the kernel send
+    // buffer filled. With a write deadline armed, the server treats the
+    // expiry as a hangup and the connection gauge returns to zero while
+    // the stalled client still holds its end open.
+    let server = serve_measure_local_with(
+        local_engine(BackendKind::Analytical, 1),
+        ServeOptions { write_timeout: Duration::from_millis(200), ..ServeOptions::default() },
+    )
+    .unwrap();
+
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = BufWriter::new(stream);
+
+    // Handshake: prove the connection is alive and being served.
+    write_frame(&mut writer, &Request::Ping.to_json()).unwrap();
+    assert!(read_frame(&mut reader).unwrap().is_some());
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    while server.active_connections() != 1 {
+        assert!(std::time::Instant::now() < deadline, "connection never registered");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // Requests whose responses total far more than any loopback socket
+    // buffering (the point repeats, so the engine pays for it once) —
+    // and never read a byte back. A later request's write fails once the
+    // server wedges mid-response and stops reading; the client's own
+    // write deadline keeps this loop from blocking forever.
+    let s = space();
+    let key = arco::eval::PointKey::of(&s, &s.default_point());
+    let req = Request::Measure { task: s.task, points: vec![key.values; 200_000] };
+    writer.get_ref().set_write_timeout(Some(Duration::from_secs(2))).unwrap();
+    for _ in 0..8 {
+        if write_request_frame(&mut writer, &req).is_err() {
+            break;
+        }
+    }
+
+    // The server blocks writing tens of MB of responses into a socket
+    // nobody drains, hits the 200 ms deadline, and ends the connection
+    // cleanly.
+    while server.active_connections() != 0 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "write timeout never released the connection thread"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // The stalled client's end is still open; drop it only after the
+    // server has already let go.
+    drop(writer);
+    drop(reader);
     server.shutdown();
 }
 

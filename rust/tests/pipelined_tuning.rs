@@ -351,7 +351,7 @@ fn depth_2_on_a_throttled_two_shard_fleet_beats_depth_1_with_identical_numbers()
                 ..Default::default()
             })
             .unwrap()),
-            ServeOptions { measure_delay: delay },
+            ServeOptions { measure_delay: delay, ..ServeOptions::default() },
         )
         .unwrap();
         let shard_b = serve_measure_local_with(
@@ -361,7 +361,7 @@ fn depth_2_on_a_throttled_two_shard_fleet_beats_depth_1_with_identical_numbers()
                 ..Default::default()
             })
             .unwrap()),
-            ServeOptions { measure_delay: delay },
+            ServeOptions { measure_delay: delay, ..ServeOptions::default() },
         )
         .unwrap();
         let engine = Engine::new(EngineConfig {

@@ -197,7 +197,8 @@ fn capacity_shrinks_on_shard_death_and_regrows_on_revival_without_starving_tenan
     // Throttled shards (15 ms/point) so the run reliably outlives the
     // mid-run kill below; the sleep dominates, so the timing is stable
     // even on loaded CI machines.
-    let throttle = ServeOptions { measure_delay: Duration::from_millis(15) };
+    let throttle =
+        ServeOptions { measure_delay: Duration::from_millis(15), ..ServeOptions::default() };
     let shard_a = serve_measure_local_with(Arc::new(analytical_engine()), throttle).unwrap();
     let shard_b = serve_measure_local_with(Arc::new(analytical_engine()), throttle).unwrap();
     let addr_b = shard_b.addr().to_string();

@@ -15,6 +15,10 @@
 #   smoke_serve_tune       "Tuning as a service" — serve-tune daemon over
 #                          a loopback shard; a second client's identical
 #                          job is served from the shared cache (fresh=0)
+#   smoke_store            "The shared measurement store" — a killed
+#                          shard's measurements survive in --store; a
+#                          fresh shard answers the same batch with zero
+#                          simulations; store prune bounds the directory
 #
 # Wall-clock outputs (compile time) legitimately differ between runs, so
 # the diffs target results/table6_inference.md, which is a pure function
@@ -343,6 +347,97 @@ smoke_serve_tune() {
     echo "serve-tune ok: second client served from the shared cache with identical numbers"
 }
 
+# docs/OPERATIONS.md § "The shared measurement store": measurements a
+# killed shard paid for survive in the store directory; a brand-new
+# shard on the same --store answers the identical batch without running
+# one simulation; a 20k-record import then proves `store prune` bounds
+# the directory to its byte budget.
+smoke_store() {
+    echo "== shared store: measure once, ever =="
+    local store=/tmp/arco_smoke_store
+    rm -rf "$store"
+
+    run_compare --backend analytical
+    cp results/table6_inference.md /tmp/arco_t6_store_local.md
+
+    # Shard A pays for the measurements and writes them to the store.
+    local out addr_a addr_b
+    out=$(start_shard "$SERVE_LOG" --backend analytical --store "$store")
+    addr_a=${out%% *}
+    SERVER_PID=${out##* }
+    grep -q "shared store at" "$SERVE_LOG" || {
+        cat "$SERVE_LOG"; echo "shard must report its store directory"; exit 1;
+    }
+    run_compare --backend "remote:$addr_a"
+    cp results/table6_inference.md /tmp/arco_t6_store_a.md
+    diff -u /tmp/arco_t6_store_local.md /tmp/arco_t6_store_a.md
+
+    # Kill shard A outright. Its cache and journal die with the process;
+    # only the store survives.
+    kill "$SERVER_PID" 2>/dev/null || true
+    wait "$SERVER_PID" 2>/dev/null || true
+    SERVER_PID=0
+
+    # Shard B has an empty cache and no journal, yet the identical batch
+    # must cost zero fresh simulations: every point is store-served and
+    # rides the wire as fresh=false.
+    out=$(start_shard "$SERVE_LOG2" --backend analytical --store "$store")
+    addr_b=${out%% *}
+    SERVER2_PID=${out##* }
+    local store_log=/tmp/arco_store_run.log
+    run_compare --backend "remote:$addr_b" | tee "$store_log"
+    cp results/table6_inference.md /tmp/arco_t6_store_b.md
+    diff -u /tmp/arco_t6_store_local.md /tmp/arco_t6_store_b.md
+    grep -q " simulations=0 " "$store_log" || {
+        echo "store-backed replay must cost zero fresh simulations; engine summary was:"
+        grep "eval engine:" "$store_log" || true
+        exit 1
+    }
+    "$BIN" store stat "$store"
+
+    kill "$SERVER2_PID" 2>/dev/null || true
+    wait "$SERVER2_PID" 2>/dev/null || true
+    SERVER2_PID=0
+
+    # Scale + bound: import a 20k-record synthetic history through tiny
+    # segments (forcing rotation), then prune to a 256 KiB budget and
+    # assert the directory actually fits it.
+    local big=/tmp/arco_smoke_store_big.jsonl
+    rm -f "$big" "$big.lock"
+    "$BIN" journal synth "$big" --records 20000 --backend analytical --seed 11
+    out=$(start_shard "$SERVE_LOG" --backend analytical \
+        --warm-start "$big" --store "$store" --store-segment-kib 64)
+    SERVER_PID=${out##* }
+    grep -q "imported" "$SERVE_LOG" || {
+        cat "$SERVE_LOG"; echo "shard must import its warm-start history into the store"; exit 1;
+    }
+    kill "$SERVER_PID" 2>/dev/null || true
+    wait "$SERVER_PID" 2>/dev/null || true
+    SERVER_PID=0
+
+    local prune_log=/tmp/arco_store_prune.log
+    "$BIN" store prune "$store" --budget-kib 256 | tee "$prune_log"
+    awk '/^store prune: / {
+        found = 1
+        # store prune: {dir}: {d} of {n} segment(s) deleted, {b0} -> {b1} bytes (budget {q}), ...
+        for (i = 1; i <= NF; i++) {
+            if ($i == "->") { after = $(i + 1) }
+        }
+        if (after == "" ) { print "could not parse prune summary: " $0; exit 1 }
+        if (after + 0 > 256 * 1024) {
+            print "store prune left " after " bytes, over the 256 KiB budget"; exit 1
+        }
+        print "store prune bounded the directory to " after " bytes (budget 262144)"
+    }
+    END { if (!found) { print "no store prune summary printed"; exit 1 } }' "$prune_log"
+    du -sb "$store" | awk '{ if ($1 + 0 > 512 * 1024) {
+        print "store directory still holds " $1 " bytes on disk after prune"; exit 1 } }'
+
+    rm -f "$big" "$big.lock"
+    rm -rf "$store"
+    echo "store ok: a fresh shard replayed a dead shard's run from the store, and prune bounded it"
+}
+
 smoke_backend analytical
 smoke_backend vta-sim
 smoke_heterogeneous
@@ -350,4 +445,5 @@ smoke_warm_start
 smoke_warm_start_scale
 smoke_pipelined
 smoke_serve_tune
-echo "smoke ok: remote == in-process, weighted placement, warm start (incl. 20k-record preload), pipelined tuning and serve-tune verified"
+smoke_store
+echo "smoke ok: remote == in-process, weighted placement, warm start (incl. 20k-record preload), pipelined tuning, serve-tune and the shared store verified"
