@@ -1,0 +1,87 @@
+//! Multi-fidelity tuning overheads (`--fidelity screen:<keep>`):
+//!
+//!  - `screen/score_batch64` — the screening hot path: one calibrated
+//!    analytical evaluation per candidate (what every admitted batch pays
+//!    before the split);
+//!  - `screen/calibration_observe` — the online-calibration update fed by
+//!    every fresh cycle-model point, plus the per-batch overlap lookup;
+//!  - `tune/quick128_exact` vs `tune/quick128_screen25` — the end-to-end
+//!    quick-scale loop at both fidelities on the analytical oracle, so a
+//!    regression in the screening stage (or any screening cost leaking
+//!    into the exact path, which must stay bit-identical to the classic
+//!    loop) shows up in the bench trend.
+
+use arco::eval::{
+    analytical_terms, AnalyticalBackend, Calibration, Engine, Fingerprint, SEED_OVERLAP,
+};
+use arco::space::{ConfigSpace, PointConfig};
+use arco::tuner::{tune_task_with, Fidelity, Framework, TuneBudget};
+use arco::util::bench::{black_box, BenchRunner};
+use arco::util::rng::Pcg32;
+use arco::workload::Conv2dTask;
+
+fn main() {
+    arco::util::log::init_from_env();
+    let mut runner = BenchRunner::new("multi_fidelity");
+    let task = Conv2dTask::new(1, 64, 56, 56, 64, 3, 3, 1, 1);
+    let space = ConfigSpace::for_task(&task, true);
+    let mut rng = Pcg32::seeded(61);
+    let batch: Vec<PointConfig> = (0..64).map(|_| space.random_point(&mut rng)).collect();
+
+    // Screening hot path: one calibrated analytical score per candidate.
+    runner.bench_with_elements("screen/score_batch64", Some(64), || {
+        for p in &batch {
+            black_box(AnalyticalBackend::measure_with_overlaps(&space, p, SEED_OVERLAP));
+        }
+    });
+
+    // Online calibration: the per-point least-squares update every fresh
+    // cycle-model measurement feeds, and the per-batch overlap lookup.
+    let calib = Calibration::new(Fingerprint::current());
+    let terms: Vec<_> = batch
+        .iter()
+        .map(|p| analytical_terms(&space, p))
+        .filter(|t| t.valid)
+        .collect();
+    let n_terms = terms.len() as u64;
+    runner.bench_with_elements("screen/calibration_observe", Some(n_terms), || {
+        for t in &terms {
+            calib.observe("bench", t, 1_000_000);
+        }
+    });
+    runner.bench("screen/calibration_overlaps", || black_box(calib.overlaps("bench")));
+
+    // End-to-end quick-scale tuning (configs/quick.json's 128-point
+    // budget) at both fidelities. Elements are *candidates*, so per-point
+    // cost stays comparable across tiers even though screening sends far
+    // fewer of them to the (here analytical) simulator.
+    let quick = |fidelity| TuneBudget {
+        total_measurements: 128,
+        batch: 32,
+        workers: 2,
+        fidelity,
+        ..Default::default()
+    };
+    runner.bench_with_elements("tune/quick128_exact", Some(128), || {
+        let engine = Engine::with_backend(Box::new(AnalyticalBackend), 2, true);
+        let mut strat = Framework::Random.build(space.clone(), true, 13);
+        black_box(
+            tune_task_with(&engine, &space, strat.as_mut(), quick(Fidelity::Exact)).unwrap(),
+        );
+    });
+    runner.bench_with_elements("tune/quick128_screen25", Some(128), || {
+        let engine = Engine::with_backend(Box::new(AnalyticalBackend), 2, true);
+        let mut strat = Framework::Random.build(space.clone(), true, 13);
+        black_box(
+            tune_task_with(
+                &engine,
+                &space,
+                strat.as_mut(),
+                quick(Fidelity::Screen { keep: 0.25, explore: 0.1 }),
+            )
+            .unwrap(),
+        );
+    });
+
+    runner.finish();
+}

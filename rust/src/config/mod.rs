@@ -13,7 +13,7 @@ use crate::costmodel::GbtParams;
 use crate::eval::{BackendKind, BackendSpec, EngineConfig, Placement};
 use crate::marl::exploration::ExploreParams;
 use crate::marl::strategy::ArcoParams;
-use crate::tuner::{DriverOptions, TuneBudget};
+use crate::tuner::{DriverOptions, Fidelity, TuneBudget};
 use crate::util::json::{read_json_file, Json};
 use std::path::{Path, PathBuf};
 
@@ -126,6 +126,18 @@ impl RunConfig {
                 .get_usize("pipeline_depth")
                 .unwrap_or(self.budget.pipeline_depth)
                 .max(1);
+            if let Some(name) = b.get_str("fidelity") {
+                if let Some(f) = Fidelity::parse(name) {
+                    self.budget.fidelity = f;
+                } else {
+                    crate::log_warn!(
+                        "config",
+                        "bad budget fidelity '{name}' (expected exact | \
+                         screen:<keep>[:<explore>]); keeping {}",
+                        self.budget.fidelity.describe()
+                    );
+                }
+            }
         }
         if let Some(a) = doc.get("arco") {
             self.arco.explore = explore_from_json(a, self.arco.explore);
@@ -235,6 +247,27 @@ mod tests {
         assert_eq!(c.budget.pipeline_depth, 4);
         c.apply_json(&Json::parse(r#"{"budget": {"pipeline_depth": 0}}"#).unwrap());
         assert_eq!(c.budget.pipeline_depth, 1);
+    }
+
+    #[test]
+    fn fidelity_overlays_and_rejects_bad_strings() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.budget.fidelity, Fidelity::Exact, "exact is the reproducibility default");
+        c.apply_json(&Json::parse(r#"{"budget": {"fidelity": "screen:0.25"}}"#).unwrap());
+        assert_eq!(
+            c.budget.fidelity,
+            Fidelity::Screen { keep: 0.25, explore: crate::tuner::DEFAULT_EXPLORE_FRAC }
+        );
+        // Explicit exploration slice.
+        c.apply_json(&Json::parse(r#"{"budget": {"fidelity": "screen:0.5:0.2"}}"#).unwrap());
+        assert_eq!(c.budget.fidelity, Fidelity::Screen { keep: 0.5, explore: 0.2 });
+        // Partial overlay leaves it alone; a bad string warns and keeps.
+        c.apply_json(&Json::parse(r#"{"budget": {"batch": 16}}"#).unwrap());
+        assert_eq!(c.budget.fidelity, Fidelity::Screen { keep: 0.5, explore: 0.2 });
+        c.apply_json(&Json::parse(r#"{"budget": {"fidelity": "screen:2.0"}}"#).unwrap());
+        assert_eq!(c.budget.fidelity, Fidelity::Screen { keep: 0.5, explore: 0.2 });
+        c.apply_json(&Json::parse(r#"{"budget": {"fidelity": "exact"}}"#).unwrap());
+        assert_eq!(c.budget.fidelity, Fidelity::Exact);
     }
 
     #[test]

@@ -4,9 +4,12 @@
 //! engine, and settled only *after* results come back.
 //!
 //! Mechanically: in any function (outside `eval/engine.rs`, which owns
-//! the batch API) that calls `submit_batch` or `measure_batch*`, a
-//! `charge(...)` call must lexically precede the submission and no
-//! `settle(...)` call may precede it.
+//! the batch API) that calls `submit_batch`, `measure_batch*` or
+//! `screen_batch` (the multi-fidelity screening split — admitted
+//! candidates leave the simulator path there, so the admission must
+//! already be on the books), a `charge(...)`/`charge_screen(...)` call
+//! must lexically precede the submission and no `settle(...)` call may
+//! precede it.
 
 use super::model::SourceFile;
 use super::Finding;
@@ -22,7 +25,14 @@ pub fn applies_to(path: &str) -> bool {
 }
 
 fn is_submit_name(name: &str) -> bool {
-    name == "submit_batch" || name.starts_with("measure_batch")
+    name == "submit_batch" || name == "screen_batch" || name.starts_with("measure_batch")
+}
+
+/// Charge-family calls that admit points against the ledger before a
+/// submission: plain admission, or the screening tier's own settlement
+/// (which may only run on already-admitted points).
+fn is_charge_name(name: &str) -> bool {
+    name == "charge" || name == "charge_screen"
 }
 
 /// A call (not a definition): `name` followed by `(`, not preceded by
@@ -47,7 +57,7 @@ pub fn check(file: &SourceFile) -> Vec<Finding> {
         let mut settle_line = None;
         for j in f.body_start..i {
             if let Some(n) = file.tokens[j].ident() {
-                if n == "charge" && is_call(file, j) {
+                if is_charge_name(n) && is_call(file, j) {
                     saw_charge = true;
                 } else if n == "settle" && is_call(file, j) {
                     settle_line = Some(file.tokens[j].line);
@@ -114,6 +124,31 @@ mod tests {
     #[test]
     fn definitions_do_not_trip() {
         let f = parse("impl Engine { fn submit_batch(&self) { inner(); } }");
+        assert!(check(&f).is_empty());
+    }
+
+    #[test]
+    fn screen_split_requires_a_preceding_charge() {
+        // The multi-fidelity screening split diverts admitted candidates
+        // away from the simulator; doing it before admission would let
+        // low-fidelity points bypass the budget entirely.
+        let f = parse("fn tune() { let split = screen_batch(space, plan); }");
+        let fs = check(&f);
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].message.contains("`screen_batch`"));
+        assert!(fs[0].message.contains("no preceding `charge"));
+
+        let clean =
+            parse("fn tune() { ledger.charge(a); let split = screen_batch(space, plan); }");
+        assert!(check(&clean).is_empty());
+        // A definition of the split helper is not a submission.
+        let def = parse("fn screen_batch(space: &S, plan: Vec<P>) -> Split { rank(plan) }");
+        assert!(check(&def).is_empty());
+    }
+
+    #[test]
+    fn charge_screen_counts_as_a_charge() {
+        let f = parse("fn tune() { ledger.charge_screen(a); engine.submit_batch(b); }");
         assert!(check(&f).is_empty());
     }
 }

@@ -26,6 +26,7 @@ pub const CHECKED_FILES: &[&str] = &[
     "rust/src/eval/ledger.rs",
     "rust/src/eval/cache.rs",
     "rust/src/eval/store.rs",
+    "rust/src/eval/calib.rs",
 ];
 
 /// The designated poisoned-lock helpers plus the sanctioned panic escape

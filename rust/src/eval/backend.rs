@@ -337,7 +337,137 @@ impl MeasureBackend for VtaSimBackend {
 /// coefficients): it is part of the measurement [`super::proto::Fingerprint`],
 /// so stale analytical journals and skewed analytical shards are refused
 /// the same way cycle-model drift is.
+///
+/// *Online* calibration ([`super::calib::Calibration`]) deliberately does
+/// NOT require a bump: it only affects screening estimates that are never
+/// journaled, while [`MeasureBackend::measure`] keeps producing the seed
+/// (uncalibrated) numbers this version stamps.
 pub const ANALYTICAL_MODEL_VERSION: u32 = 1;
+
+/// Seed overlap coefficients, indexed by vthread class (`[single, dual]`):
+/// the fraction of the smaller roofline term that load/compute overlap
+/// hides. These are the historical hard-coded constants; online
+/// calibration ([`super::calib::Calibration`]) starts from them and
+/// refines them per task against fresh cycle-model observations.
+pub const SEED_OVERLAP: [f64; 2] = [0.60, 0.85];
+
+/// The decomposed pieces of one analytical roofline evaluation — every
+/// input the final cycle count needs, *except* the overlap coefficient.
+/// This is the seam online calibration fits against: the model is
+/// `cycles = serial_cycles + (1 - overlap) * overlap_cycles`, linear in
+/// the unknown `(1 - overlap)` per vthread class.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AnalyticalTerms {
+    /// `max(compute, dram)` cycles — the roofline floor no overlap removes.
+    pub serial_cycles: f64,
+    /// `min(compute, dram)` cycles — the term overlap (partially) hides.
+    pub overlap_cycles: f64,
+    /// Virtual-thread count, clamped to `[1, 2]` (selects the overlap class).
+    pub vthreads: usize,
+    /// Accelerator area (mm²), valid or not.
+    pub area_mm2: f64,
+    /// GEMM-array occupancy (true MACs / padded MACs).
+    pub occupancy: f64,
+    /// Seconds per cycle at the configured clock.
+    pub cycle_time: f64,
+    /// Task FLOPs, for the GFLOPS readout.
+    pub flops: f64,
+    /// Structurally buildable? Invalid terms carry only `area_mm2`.
+    pub valid: bool,
+}
+
+impl AnalyticalTerms {
+    /// Overlap-coefficient class this point falls in: `0` single-threaded,
+    /// `1` dual virtual threads — the index into [`SEED_OVERLAP`] and into
+    /// a calibration's fitted coefficients.
+    pub fn class(&self) -> usize {
+        usize::from(self.vthreads >= 2)
+    }
+
+    /// Assemble the [`MeasureResult`] under explicit overlap coefficients
+    /// (`[single, dual]`). `result_with(SEED_OVERLAP)` reproduces the
+    /// uncalibrated backend bit for bit.
+    pub fn result_with(&self, overlaps: [f64; 2]) -> MeasureResult {
+        if !self.valid {
+            return MeasureResult {
+                seconds: f64::INFINITY,
+                cycles: 0,
+                gflops: 0.0,
+                area_mm2: self.area_mm2,
+                occupancy: 0.0,
+                valid: false,
+            };
+        }
+        let overlap = overlaps[self.class()];
+        let cycles = self.serial_cycles + (1.0 - overlap) * self.overlap_cycles;
+        let seconds = cycles * self.cycle_time;
+        MeasureResult {
+            seconds,
+            cycles: cycles as u64,
+            gflops: self.flops / seconds / 1e9,
+            area_mm2: self.area_mm2,
+            occupancy: self.occupancy,
+            valid: true,
+        }
+    }
+}
+
+/// Decompose one point into its roofline terms (see [`AnalyticalTerms`]).
+/// Pure function of `(space, point)`, a few hundred nanoseconds per call.
+pub fn analytical_terms(space: &ConfigSpace, point: &PointConfig) -> AnalyticalTerms {
+    let (hw, sw) = space.decode(point);
+    let area_mm2 = total_area_mm2(&hw);
+    // Same validity surface as the lowering path: structurally bad
+    // hardware or tile working sets that overflow a scratchpad
+    // partition cannot be built.
+    if hw.validate().is_err() || memory_overflow_ratio(space, point) > 0.0 {
+        return AnalyticalTerms {
+            serial_cycles: 0.0,
+            overlap_cycles: 0.0,
+            vthreads: 1,
+            area_mm2,
+            occupancy: 0.0,
+            cycle_time: 0.0,
+            flops: 0.0,
+            valid: false,
+        };
+    }
+
+    let t = &space.task;
+    // Padded problem dims on the GEMM array.
+    let pad_n = ceil_div(t.n, hw.batch) * hw.batch;
+    let pad_ci = ceil_div(t.ci, hw.block_in) * hw.block_in;
+    let pad_co = ceil_div(t.co, hw.block_out) * hw.block_out;
+    let true_macs = t.macs() as f64;
+    let padded_macs = (pad_n * pad_co * t.oh() * t.ow()) as f64 * (pad_ci * t.kh * t.kw) as f64;
+    let occupancy = true_macs / padded_macs;
+    let compute_cycles = padded_macs / hw.macs_per_cycle() as f64;
+
+    // DRAM traffic: inputs and outputs stream once; weights re-stream
+    // once per spatial tile (the scratchpad holds one tile's working
+    // set); every tile pays three DMA setup latencies.
+    let tiles = ceil_div(t.oh(), sw.tile_h.max(1)) * ceil_div(t.ow(), sw.tile_w.max(1));
+    let tiles = tiles.max(1);
+    let inp_bytes = (pad_n * pad_ci * t.h * t.w * INP_BYTES) as f64;
+    let wgt_bytes = (pad_co * pad_ci * t.kh * t.kw * WGT_BYTES) as f64 * tiles as f64;
+    let out_bytes = (pad_n * pad_co * t.oh() * t.ow() * OUT_BYTES) as f64;
+    let dram_cycles = (inp_bytes + wgt_bytes + out_bytes) / hw.dram_bytes_per_cycle as f64
+        + (3 * tiles * hw.dma_latency) as f64;
+
+    // Virtual threads overlap load/compute; a single thread exposes
+    // more of the smaller term.
+    let vthreads = (sw.h_threading * sw.oc_threading).clamp(1, 2);
+    AnalyticalTerms {
+        serial_cycles: compute_cycles.max(dram_cycles),
+        overlap_cycles: compute_cycles.min(dram_cycles),
+        vthreads,
+        area_mm2,
+        occupancy,
+        cycle_time: hw.cycle_time(),
+        flops: t.flops() as f64,
+        valid: true,
+    }
+}
 
 /// A roofline-style analytical proxy: a few hundred nanoseconds per point
 /// instead of a full instruction-stream simulation.
@@ -352,66 +482,29 @@ pub const ANALYTICAL_MODEL_VERSION: u32 = 1;
 #[derive(Debug, Clone, Copy, Default)]
 pub struct AnalyticalBackend;
 
+impl AnalyticalBackend {
+    /// Measure under explicit overlap coefficients — the screening path,
+    /// which gets per-task fitted coefficients from a
+    /// [`super::calib::Calibration`] instead of the seeds.
+    pub fn measure_with_overlaps(
+        space: &ConfigSpace,
+        point: &PointConfig,
+        overlaps: [f64; 2],
+    ) -> MeasureResult {
+        analytical_terms(space, point).result_with(overlaps)
+    }
+}
+
 impl MeasureBackend for AnalyticalBackend {
     fn name(&self) -> &'static str {
         "analytical"
     }
 
     fn measure(&self, space: &ConfigSpace, point: &PointConfig) -> MeasureResult {
-        let (hw, sw) = space.decode(point);
-        let area_mm2 = total_area_mm2(&hw);
-        let invalid = MeasureResult {
-            seconds: f64::INFINITY,
-            cycles: 0,
-            gflops: 0.0,
-            area_mm2,
-            occupancy: 0.0,
-            valid: false,
-        };
-        // Same validity surface as the lowering path: structurally bad
-        // hardware or tile working sets that overflow a scratchpad
-        // partition cannot be built.
-        if hw.validate().is_err() || memory_overflow_ratio(space, point) > 0.0 {
-            return invalid;
-        }
-
-        let t = &space.task;
-        // Padded problem dims on the GEMM array.
-        let pad_n = ceil_div(t.n, hw.batch) * hw.batch;
-        let pad_ci = ceil_div(t.ci, hw.block_in) * hw.block_in;
-        let pad_co = ceil_div(t.co, hw.block_out) * hw.block_out;
-        let true_macs = t.macs() as f64;
-        let padded_macs =
-            (pad_n * pad_co * t.oh() * t.ow()) as f64 * (pad_ci * t.kh * t.kw) as f64;
-        let occupancy = true_macs / padded_macs;
-        let compute_cycles = padded_macs / hw.macs_per_cycle() as f64;
-
-        // DRAM traffic: inputs and outputs stream once; weights re-stream
-        // once per spatial tile (the scratchpad holds one tile's working
-        // set); every tile pays three DMA setup latencies.
-        let tiles = ceil_div(t.oh(), sw.tile_h.max(1)) * ceil_div(t.ow(), sw.tile_w.max(1));
-        let tiles = tiles.max(1);
-        let inp_bytes = (pad_n * pad_ci * t.h * t.w * INP_BYTES) as f64;
-        let wgt_bytes = (pad_co * pad_ci * t.kh * t.kw * WGT_BYTES) as f64 * tiles as f64;
-        let out_bytes = (pad_n * pad_co * t.oh() * t.ow() * OUT_BYTES) as f64;
-        let dram_cycles = (inp_bytes + wgt_bytes + out_bytes) / hw.dram_bytes_per_cycle as f64
-            + (3 * tiles * hw.dma_latency) as f64;
-
-        // Virtual threads overlap load/compute; a single thread exposes
-        // more of the smaller term.
-        let vthreads = (sw.h_threading * sw.oc_threading).clamp(1, 2);
-        let overlap = if vthreads >= 2 { 0.85 } else { 0.60 };
-        let cycles =
-            compute_cycles.max(dram_cycles) + (1.0 - overlap) * compute_cycles.min(dram_cycles);
-        let seconds = cycles * hw.cycle_time();
-        MeasureResult {
-            seconds,
-            cycles: cycles as u64,
-            gflops: t.flops() as f64 / seconds / 1e9,
-            area_mm2,
-            occupancy,
-            valid: true,
-        }
+        // Always the *seed* coefficients: backend numbers are journaled
+        // under ANALYTICAL_MODEL_VERSION and must not drift with whatever
+        // a run's online calibration has learned.
+        AnalyticalBackend::measure_with_overlaps(space, point, SEED_OVERLAP)
     }
 }
 
@@ -432,6 +525,46 @@ mod tests {
             assert_eq!(k.build().name(), k.name());
         }
         assert_eq!(BackendKind::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn every_accepted_backend_spelling_roundtrips() {
+        // The documented flags table lists every alias; this pins the set
+        // so a new spelling (or a dropped one) must update the docs too.
+        let spellings = [
+            ("vta-sim", BackendKind::VtaSim),
+            ("vtasim", BackendKind::VtaSim),
+            ("sim", BackendKind::VtaSim),
+            ("analytical", BackendKind::Analytical),
+            ("roofline", BackendKind::Analytical),
+        ];
+        for (s, want) in spellings {
+            assert_eq!(BackendKind::from_name(s), Some(want), "alias {s}");
+            // Every alias lands on a kind whose canonical name re-parses
+            // to itself — the round trip.
+            let canon = want.name();
+            assert_eq!(BackendKind::from_name(canon), Some(want));
+            assert_eq!(BackendSpec::parse(s), Some(BackendSpec::Builtin(want)));
+        }
+        // Canonical names are exactly the advertised ones.
+        assert_eq!(BackendKind::known_names(), &["vta-sim", "analytical"]);
+    }
+
+    #[test]
+    fn seed_overlap_terms_reproduce_the_backend_exactly() {
+        let s = space();
+        let b = AnalyticalBackend;
+        let mut rng = Pcg32::seeded(11);
+        for _ in 0..100 {
+            let p = s.random_point(&mut rng);
+            let via_terms = analytical_terms(&s, &p).result_with(SEED_OVERLAP);
+            assert_eq!(via_terms, b.measure(&s, &p));
+        }
+        // Calibrated overlaps move the numbers; the seed path must not.
+        let p = s.default_point();
+        let warped = AnalyticalBackend::measure_with_overlaps(&s, &p, [0.0, 0.0]);
+        let seeded = b.measure(&s, &p);
+        assert!(warped.seconds >= seeded.seconds);
     }
 
     #[test]

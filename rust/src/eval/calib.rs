@@ -1,0 +1,392 @@
+//! Online calibration of the analytical roofline proxy.
+//!
+//! The analytical model charges `serial + (1 - overlap) * overlapped`
+//! cycles per point ([`super::backend::analytical_terms`]). Historically
+//! `overlap` was a pair of hard-coded constants ([`SEED_OVERLAP`]); for
+//! multi-fidelity screening the model must track the *cycle model* it is
+//! standing in for, so a [`Calibration`] refits the overlap coefficient
+//! per task and per vthread class against every fresh cycle-model point
+//! the engine observes.
+//!
+//! The fit is an incremental one-parameter ridge regression. With
+//! `x = overlap_cycles` and `y = measured_cycles - serial_cycles`, the
+//! model is `y = a·x` where `a = 1 - overlap`; the estimate shrinks
+//! toward the seed coefficient with a scale-free pseudo-observation
+//! weight, so a task with three observations screens barely differently
+//! from the seeds while a task with hundreds follows the simulator.
+//!
+//! Calibration state persists as a JSON sidecar next to the measurement
+//! journal ([`Calibration::sidecar_path`]) and is gated on the full
+//! measurement [`Fingerprint`]: a `CYCLE_MODEL_VERSION` (or analytical
+//! version, or hardware-default) bump makes old coefficients describe a
+//! simulator that no longer exists, so loading discards them and restarts
+//! from the seeds.
+
+use super::backend::{AnalyticalTerms, SEED_OVERLAP};
+use super::proto::Fingerprint;
+use crate::util::json::{read_json_file, write_json_file, Json};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use super::sync::lock_unpoisoned;
+use std::sync::Mutex;
+
+/// Observations required in a class before the fitted coefficient is
+/// trusted over the seed at all.
+const MIN_OBSERVATIONS: u64 = 3;
+
+/// Pseudo-observation weight of the seed coefficient in the ridge fit
+/// (scale-free: multiplied by the mean `x²`, so it acts like this many
+/// typical observations that agree with the seed).
+const RIDGE_PSEUDO_OBS: f64 = 8.0;
+
+/// Incremental sufficient statistics of `y = a·x` for one vthread class.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+struct ClassFit {
+    sum_xx: f64,
+    sum_xy: f64,
+    n: u64,
+}
+
+impl ClassFit {
+    fn observe(&mut self, x: f64, y: f64) {
+        self.sum_xx += x * x;
+        self.sum_xy += x * y;
+        self.n += 1;
+    }
+
+    /// Ridge estimate of `a = 1 - overlap`, shrunk toward the seed `a0`.
+    /// Clamped to `[0, 1]`: outside that range the "overlap" reading is
+    /// meaningless and the residual is model error, not overlap.
+    fn coeff(&self, a0: f64) -> f64 {
+        if self.n < MIN_OBSERVATIONS || self.sum_xx <= 0.0 {
+            return a0;
+        }
+        let mean_xx = self.sum_xx / self.n as f64;
+        let lambda = RIDGE_PSEUDO_OBS * mean_xx;
+        ((self.sum_xy + lambda * a0) / (self.sum_xx + lambda)).clamp(0.0, 1.0)
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("sum_xx", Json::num(self.sum_xx)),
+            ("sum_xy", Json::num(self.sum_xy)),
+            ("n", Json::num(self.n as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Option<ClassFit> {
+        Some(ClassFit {
+            sum_xx: v.get_f64("sum_xx")?,
+            sum_xy: v.get_f64("sum_xy")?,
+            n: v.get_f64("n")? as u64,
+        })
+    }
+}
+
+/// Per-task fit: one [`ClassFit`] per vthread class (single, dual).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+struct TaskFit {
+    class: [ClassFit; 2],
+}
+
+struct CalibState {
+    fingerprint: Fingerprint,
+    tasks: BTreeMap<String, TaskFit>,
+    observations: u64,
+}
+
+/// Shared, thread-safe calibration of the analytical overlap coefficients.
+/// One lives on the measurement [`super::Engine`] when a run screens
+/// (`--fidelity screen:...`); every fresh cycle-model point the engine
+/// publishes feeds it, and the tuning loop reads fitted
+/// [`overlaps`](Calibration::overlaps) per task when scoring candidates.
+pub struct Calibration {
+    state: Mutex<CalibState>,
+}
+
+impl Calibration {
+    /// Fresh calibration at the seed coefficients, bound to a fingerprint.
+    pub fn new(fingerprint: Fingerprint) -> Calibration {
+        Calibration {
+            state: Mutex::new(CalibState {
+                fingerprint,
+                tasks: BTreeMap::new(),
+                observations: 0,
+            }),
+        }
+    }
+
+    /// Feed one fresh oracle observation: the analytical decomposition of
+    /// the point and the cycles the oracle actually charged. Invalid
+    /// points and degenerate terms are ignored — the model has nothing to
+    /// learn from them.
+    pub fn observe(&self, task_id: &str, terms: &AnalyticalTerms, measured_cycles: u64) {
+        if !terms.valid || measured_cycles == 0 || terms.overlap_cycles <= 0.0 {
+            return;
+        }
+        let x = terms.overlap_cycles;
+        let y = measured_cycles as f64 - terms.serial_cycles;
+        let mut st = lock_unpoisoned(&self.state);
+        let fit = st.tasks.entry(task_id.to_string()).or_default();
+        fit.class[terms.class()].observe(x, y);
+        st.observations += 1;
+    }
+
+    /// Fitted overlap coefficients (`[single, dual]`) for one task.
+    /// Unobserved tasks/classes answer the seeds, so screening before the
+    /// first oracle batch behaves exactly like the uncalibrated backend.
+    pub fn overlaps(&self, task_id: &str) -> [f64; 2] {
+        let st = lock_unpoisoned(&self.state);
+        let fit = st.tasks.get(task_id).copied().unwrap_or_default();
+        let mut out = [0.0; 2];
+        for (c, slot) in out.iter_mut().enumerate() {
+            let a0 = 1.0 - SEED_OVERLAP[c];
+            *slot = 1.0 - fit.class[c].coeff(a0);
+        }
+        out
+    }
+
+    /// Total observations absorbed (diagnostics).
+    pub fn observations(&self) -> u64 {
+        lock_unpoisoned(&self.state).observations
+    }
+
+    /// The fingerprint this calibration was fitted under.
+    pub fn fingerprint(&self) -> Fingerprint {
+        lock_unpoisoned(&self.state).fingerprint.clone()
+    }
+
+    /// Sidecar path for a journal: calibration journals alongside the
+    /// measurements that produced it (`foo.jsonl` → `foo.jsonl.calib.json`).
+    pub fn sidecar_path(journal: &Path) -> PathBuf {
+        let mut os = journal.as_os_str().to_os_string();
+        os.push(".calib.json");
+        PathBuf::from(os)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let st = lock_unpoisoned(&self.state);
+        let tasks: Vec<(String, Json)> = st
+            .tasks
+            .iter()
+            .map(|(id, fit)| {
+                (
+                    id.clone(),
+                    Json::obj(vec![
+                        ("single", fit.class[0].to_json()),
+                        ("dual", fit.class[1].to_json()),
+                    ]),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("fingerprint", st.fingerprint.to_json()),
+            ("observations", Json::num(st.observations as f64)),
+            ("tasks", Json::Obj(tasks)),
+        ])
+    }
+
+    /// Decode a persisted calibration. `None` when the document is
+    /// malformed or was fitted under a *different* fingerprint — the
+    /// caller restarts from the seeds in both cases.
+    pub fn from_json(v: &Json, expected: &Fingerprint) -> Option<Calibration> {
+        let fp = Fingerprint::from_json(v.get("fingerprint")?)?;
+        if &fp != expected {
+            return None;
+        }
+        let mut tasks = BTreeMap::new();
+        if let Json::Obj(fields) = v.get("tasks")? {
+            for (id, fit) in fields {
+                let task = TaskFit {
+                    class: [
+                        ClassFit::from_json(fit.get("single")?)?,
+                        ClassFit::from_json(fit.get("dual")?)?,
+                    ],
+                };
+                tasks.insert(id.clone(), task);
+            }
+        }
+        let observations = v.get_f64("observations").unwrap_or(0.0) as u64;
+        Some(Calibration {
+            state: Mutex::new(CalibState { fingerprint: fp, tasks, observations }),
+        })
+    }
+
+    /// Persist to a sidecar file.
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        write_json_file(path, &self.to_json())
+    }
+
+    /// Load from a sidecar, restarting from the seeds when the file is
+    /// missing, unreadable, or fingerprint-gated out (a cycle-model bump
+    /// invalidates coefficients fitted against the old simulator).
+    pub fn load_or_new(path: &Path, expected: &Fingerprint) -> Calibration {
+        match read_json_file(path) {
+            Ok(v) => match Calibration::from_json(&v, expected) {
+                Some(c) => {
+                    crate::log_info!(
+                        "calib",
+                        "{}: resumed calibration ({} observations)",
+                        path.display(),
+                        c.observations()
+                    );
+                    c
+                }
+                None => {
+                    crate::log_info!(
+                        "calib",
+                        "{}: calibration is stale or malformed (fingerprint mismatch?) — \
+                         restarting from seed coefficients",
+                        path.display()
+                    );
+                    Calibration::new(expected.clone())
+                }
+            },
+            Err(_) => Calibration::new(expected.clone()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn terms(x: f64, serial: f64, vthreads: usize) -> AnalyticalTerms {
+        AnalyticalTerms {
+            serial_cycles: serial,
+            overlap_cycles: x,
+            vthreads,
+            area_mm2: 1.0,
+            occupancy: 0.5,
+            cycle_time: 1e-9,
+            flops: 1e9,
+            valid: true,
+        }
+    }
+
+    #[test]
+    fn unobserved_calibration_answers_the_seeds() {
+        let c = Calibration::new(Fingerprint::current());
+        assert_eq!(c.overlaps("anything"), SEED_OVERLAP);
+        assert_eq!(c.observations(), 0);
+    }
+
+    #[test]
+    fn fit_converges_to_synthetic_ground_truth() {
+        // Synthetic oracle with known overlaps: dual threads hide 92% of
+        // the smaller term, a single thread only 40%.
+        let truth = [0.40, 0.92];
+        let c = Calibration::new(Fingerprint::current());
+        let mut rng = Pcg32::seeded(9);
+        for _ in 0..500 {
+            let vthreads = 1 + rng.gen_range(2);
+            let class = usize::from(vthreads >= 2);
+            let x = 1e5 + rng.gen_f64() * 1e7;
+            let serial = x * (1.0 + rng.gen_f64());
+            let measured = serial + (1.0 - truth[class]) * x;
+            c.observe("t", &terms(x, serial, vthreads), measured as u64);
+        }
+        let got = c.overlaps("t");
+        for class in 0..2 {
+            assert!(
+                (got[class] - truth[class]).abs() < 0.02,
+                "class {class}: fitted {} vs truth {}",
+                got[class],
+                truth[class]
+            );
+        }
+        // A task nobody observed still answers the seeds.
+        assert_eq!(c.overlaps("other"), SEED_OVERLAP);
+    }
+
+    #[test]
+    fn few_observations_stay_near_the_seeds() {
+        // One wild observation must not yank the coefficient: below
+        // MIN_OBSERVATIONS the seed answers verbatim.
+        let c = Calibration::new(Fingerprint::current());
+        c.observe("t", &terms(1e6, 2e6, 2), (2e6 + 1e6) as u64); // implies overlap 0
+        assert_eq!(c.overlaps("t"), SEED_OVERLAP);
+        // Even past the floor, the ridge prior keeps early estimates
+        // between the seed and the data.
+        c.observe("t", &terms(1e6, 2e6, 2), (2e6 + 1e6) as u64);
+        c.observe("t", &terms(1e6, 2e6, 2), (2e6 + 1e6) as u64);
+        let got = c.overlaps("t")[1];
+        assert!(got < SEED_OVERLAP[1] && got > 0.0, "shrunk estimate: {got}");
+    }
+
+    #[test]
+    fn invalid_and_degenerate_observations_are_ignored() {
+        let c = Calibration::new(Fingerprint::current());
+        let mut bad = terms(1e6, 2e6, 2);
+        bad.valid = false;
+        c.observe("t", &bad, 1_000_000);
+        c.observe("t", &terms(0.0, 2e6, 2), 1_000_000); // no overlapped term
+        c.observe("t", &terms(1e6, 2e6, 2), 0); // empty measurement
+        assert_eq!(c.observations(), 0);
+        assert_eq!(c.overlaps("t"), SEED_OVERLAP);
+    }
+
+    #[test]
+    fn calibration_state_survives_a_save_load_replay() {
+        let c = Calibration::new(Fingerprint::current());
+        for i in 0..40u64 {
+            let x = 1e6 + i as f64 * 1e4;
+            let serial = 3e6;
+            c.observe("c3x28x28-32k3s1p1", &terms(x, serial, 2), (serial + 0.2 * x) as u64);
+            c.observe("c3x28x28-32k3s1p1", &terms(x, serial, 1), (serial + 0.7 * x) as u64);
+        }
+        let dir = std::env::temp_dir().join(format!("arco_calib_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let journal = dir.join("measure.jsonl");
+        let path = Calibration::sidecar_path(&journal);
+        assert!(path.to_string_lossy().ends_with("measure.jsonl.calib.json"));
+        c.save(&path).unwrap();
+
+        let replayed = Calibration::load_or_new(&path, &Fingerprint::current());
+        assert_eq!(replayed.observations(), c.observations());
+        assert_eq!(replayed.overlaps("c3x28x28-32k3s1p1"), c.overlaps("c3x28x28-32k3s1p1"));
+        assert_eq!(replayed.overlaps("unseen"), SEED_OVERLAP);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fingerprint_bump_discards_stale_calibration() {
+        let c = Calibration::new(Fingerprint::current());
+        for _ in 0..20 {
+            c.observe("t", &terms(1e6, 3e6, 2), (3e6 + 0.05 * 1e6) as u64);
+        }
+        assert_ne!(c.overlaps("t"), SEED_OVERLAP);
+        let dir = std::env::temp_dir().join(format!("arco_calib_fp_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("j.jsonl.calib.json");
+        c.save(&path).unwrap();
+
+        // Same fingerprint: coefficients come back.
+        let same = Calibration::load_or_new(&path, &Fingerprint::current());
+        assert_eq!(same.overlaps("t"), c.overlaps("t"));
+
+        // Bumped cycle model: the sidecar is refused and the seeds return.
+        let mut bumped = Fingerprint::current();
+        bumped.cycle_model += 1;
+        assert!(Calibration::from_json(&c.to_json(), &bumped).is_none());
+        let reset = Calibration::load_or_new(&path, &bumped);
+        assert_eq!(reset.overlaps("t"), SEED_OVERLAP);
+        assert_eq!(reset.observations(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn malformed_sidecar_restarts_from_seeds() {
+        let dir = std::env::temp_dir().join(format!("arco_calib_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.calib.json");
+        std::fs::write(&path, "{not json").unwrap();
+        let c = Calibration::load_or_new(&path, &Fingerprint::current());
+        assert_eq!(c.overlaps("t"), SEED_OVERLAP);
+        // Missing file: also a clean start.
+        let missing = Calibration::load_or_new(&dir.join("absent.json"), &Fingerprint::current());
+        assert_eq!(missing.observations(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,9 +1,11 @@
 //! The batched, cached, coalescing, backend-abstracted measurement engine.
 
-use super::backend::{BackendKind, BackendSpec, MeasureBackend, Placement, ShardPlacement};
+use super::backend::{analytical_terms, BackendKind, BackendSpec, MeasureBackend, Placement,
+    ShardPlacement};
 use super::cache::{CacheStats, MeasureCache, PointKey};
+use super::calib::Calibration;
 use super::journal::Journal;
-use super::proto::Origin;
+use super::proto::{Fingerprint, Origin};
 use super::store::{MeasureStore, StoreConfig};
 use super::sync;
 use crate::codegen::MeasureResult;
@@ -100,6 +102,10 @@ pub struct EngineStats {
     /// Cache entries pre-seeded from the warm-start journal at
     /// construction (inherited fleet history).
     pub warm_seeded: usize,
+    /// Candidates the multi-fidelity screening stage answered with the
+    /// calibrated analytical model instead of this engine's backend
+    /// (`--fidelity screen:...`; 0 in exact mode).
+    pub screened: usize,
     /// Per-shard placement counters when the backend is a remote fleet
     /// (empty for local backends): points/batches served per shard, the
     /// service-time EWMA and queue depth behind weighted placement, and
@@ -125,6 +131,9 @@ impl EngineStats {
             ("journal_seeded", Json::num(self.journal_seeded as f64)),
             ("warm_seeded", Json::num(self.warm_seeded as f64)),
         ];
+        if self.screened > 0 {
+            fields.push(("screened", Json::num(self.screened as f64)));
+        }
         if !self.placement.is_empty() {
             fields.push((
                 "placement",
@@ -256,6 +265,11 @@ pub struct Engine {
     shard_cached: AtomicUsize,
     store_served: AtomicUsize,
     active: AtomicUsize,
+    /// Screened-out candidates tallied by [`Engine::note_screened`].
+    screened: AtomicUsize,
+    /// Online calibration of the analytical proxy, fed by every fresh
+    /// backend measurement while attached (`--fidelity screen:...`).
+    calibration: Mutex<Option<Arc<Calibration>>>,
 }
 
 /// Results of one batch plus per-point [`Origin`] provenance.
@@ -483,6 +497,8 @@ impl Engine {
             shard_cached: AtomicUsize::new(0),
             store_served: AtomicUsize::new(0),
             active: AtomicUsize::new(0),
+            screened: AtomicUsize::new(0),
+            calibration: Mutex::new(None),
         }
     }
 
@@ -706,6 +722,18 @@ impl Engine {
             out[i] = Some(r);
             origins[i] = slot_origin[slot];
         }
+        // Feed the online calibration every point the oracle genuinely ran
+        // this batch (fresh only: cached/store/shard answers were either
+        // observed when first measured or predate this calibration).
+        if let Some(calib) = self.calibration() {
+            let task_id = space.task.short_id();
+            for (slot, &i) in uniq.iter().enumerate() {
+                if matches!(slot_origin[slot], Origin::Fresh) {
+                    let terms = analytical_terms(space, &points[i]);
+                    calib.observe(&task_id, &terms, slot_results[slot].cycles);
+                }
+            }
+        }
         {
             let mut inflight = sync::lock_unpoisoned(&self.inflight);
             for (slot, &i) in uniq.iter().enumerate() {
@@ -749,6 +777,10 @@ impl Engine {
                     if fr.first().copied().unwrap_or(true) {
                         self.simulations.fetch_add(1, Ordering::Relaxed);
                         origins[i] = Origin::Fresh;
+                        if let Some(calib) = self.calibration() {
+                            let terms = analytical_terms(space, &points[i]);
+                            calib.observe(&space.task.short_id(), &terms, r.cycles);
+                        }
                     } else {
                         self.shard_cached.fetch_add(1, Ordering::Relaxed);
                         origins[i] = Origin::ShardCached;
@@ -895,6 +927,32 @@ impl Engine {
         }
     }
 
+    /// Attach a shared [`Calibration`] (e.g. one resumed from a journal
+    /// sidecar): from now on every fresh backend measurement feeds it.
+    pub fn attach_calibration(&self, calib: Arc<Calibration>) {
+        *sync::lock_unpoisoned(&self.calibration) = Some(calib);
+    }
+
+    /// The attached calibration, if any.
+    pub fn calibration(&self) -> Option<Arc<Calibration>> {
+        sync::lock_unpoisoned(&self.calibration).clone()
+    }
+
+    /// The attached calibration, creating a fresh seed-coefficient one
+    /// (bound to the current measurement fingerprint) on first use — the
+    /// screening tuning loop's entry point, so every tenant of a shared
+    /// engine fits against the same state.
+    pub fn ensure_calibration(&self) -> Arc<Calibration> {
+        let mut slot = sync::lock_unpoisoned(&self.calibration);
+        slot.get_or_insert_with(|| Arc::new(Calibration::new(Fingerprint::current()))).clone()
+    }
+
+    /// Tally candidates the screening stage answered analytically instead
+    /// of submitting here (`screened` in [`EngineStats`]).
+    pub fn note_screened(&self, n: usize) {
+        self.screened.fetch_add(n, Ordering::Relaxed);
+    }
+
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.as_ref().map(|c| c.stats()).unwrap_or_default()
     }
@@ -915,6 +973,7 @@ impl Engine {
             cache_evictions: cs.evictions,
             journal_seeded: self.journal_seeded,
             warm_seeded: self.warm_seeded,
+            screened: self.screened.load(Ordering::Relaxed),
             placement: self.backend.placement_stats(),
         }
     }
@@ -922,7 +981,7 @@ impl Engine {
     /// One-line diagnostic summary for logs and CLI output.
     pub fn summary(&self) -> String {
         let s = self.stats();
-        format!(
+        let mut line = format!(
             "backend={} workers={} batches={} simulations={} shard_cached={} store_served={} \
              cache_hits={} batch_dedup={} coalesced={} evictions={} journal_seeded={} \
              warm_seeded={}",
@@ -938,7 +997,11 @@ impl Engine {
             s.cache_evictions,
             s.journal_seeded,
             s.warm_seeded
-        )
+        );
+        if s.screened > 0 {
+            line.push_str(&format!(" screened={}", s.screened));
+        }
+        line
     }
 }
 
@@ -978,6 +1041,29 @@ mod tests {
         let st = e.stats();
         assert_eq!(st.simulations, 1);
         assert_eq!(st.cache_hits, 1);
+    }
+
+    #[test]
+    fn fresh_measurements_feed_an_attached_calibration() {
+        let s = space();
+        let e = Engine::vta_sim(2);
+        assert!(e.calibration().is_none(), "no calibration until asked for");
+        let calib = e.ensure_calibration();
+        assert!(Arc::ptr_eq(&calib, &e.ensure_calibration()), "one shared instance");
+        let mut rng = Pcg32::seeded(5);
+        let points: Vec<PointConfig> = (0..8).map(|_| s.random_point(&mut rng)).collect();
+        e.measure_batch(&s, &points);
+        assert!(calib.observations() > 0, "fresh points must feed the fit");
+        // Cache-served repeats are not re-observed.
+        let before = calib.observations();
+        e.measure_batch(&s, &points);
+        assert_eq!(calib.observations(), before);
+        // Screened-candidate accounting is opt-in and additive.
+        assert_eq!(e.stats().screened, 0);
+        assert!(!e.summary().contains("screened="));
+        e.note_screened(3);
+        assert_eq!(e.stats().screened, 3);
+        assert!(e.summary().contains("screened=3"));
     }
 
     #[test]

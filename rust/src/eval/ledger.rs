@@ -52,13 +52,21 @@ pub struct Account {
     /// Modeled hardware-measurement seconds debited. Identical for every
     /// tenant that plans the same point, fresh or cache-served.
     pub modeled_hw_secs: f64,
+    /// Admitted points resolved at *screening* fidelity (scored by the
+    /// calibrated analytical model, never simulated) under
+    /// `--fidelity screen:<keep>`. Zero in exact mode.
+    pub screened: usize,
+    /// Modeled seconds debited for the screened points, at the screening
+    /// tier's own (tiny) per-point cost — honest equal-cost accounting:
+    /// every fidelity is charged at its modeled price.
+    pub screened_secs: f64,
 }
 
 impl Account {
     /// Points settled so far (equals `charged` once every admitted batch
-    /// has been measured and settled).
+    /// has been measured — or screened out — and settled).
     pub fn settled(&self) -> usize {
-        self.fresh + self.cache_served
+        self.fresh + self.cache_served + self.screened
     }
 }
 
@@ -91,16 +99,27 @@ impl LedgerStats {
         self.tenants.iter().map(|t| t.account.cache_served).sum()
     }
 
-    /// One-line rendering for logs and CLI output.
+    pub fn total_screened(&self) -> usize {
+        self.tenants.iter().map(|t| t.account.screened).sum()
+    }
+
+    /// One-line rendering for logs and CLI output. The `screened=` token
+    /// only appears when some account actually screened — an exact-mode
+    /// run's summary is byte-identical to the pre-multi-fidelity one.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "budget={}/task tenants={} charged={} fresh={} cache_served={}",
             self.per_task_points,
             self.tenants.len(),
             self.total_charged(),
             self.total_fresh(),
             self.total_cache_served()
-        )
+        );
+        let screened = self.total_screened();
+        if screened > 0 {
+            s.push_str(&format!(" screened={screened}"));
+        }
+        s
     }
 
     /// Machine-readable rendering (reports, `compare.json`).
@@ -113,14 +132,22 @@ impl LedgerStats {
                     self.tenants
                         .iter()
                         .map(|t| {
-                            Json::obj(vec![
+                            let mut o = Json::obj(vec![
                                 ("framework", Json::str(t.framework.clone())),
                                 ("task", Json::str(t.task.clone())),
                                 ("charged", Json::num(t.account.charged as f64)),
                                 ("fresh", Json::num(t.account.fresh as f64)),
                                 ("cache_served", Json::num(t.account.cache_served as f64)),
                                 ("modeled_hw_secs", Json::num(t.account.modeled_hw_secs)),
-                            ])
+                            ]);
+                            // Additive fields: only rendered when the run
+                            // actually screened, so exact-mode reports stay
+                            // bit-identical.
+                            if t.account.screened > 0 {
+                                o.set("screened", Json::num(t.account.screened as f64));
+                                o.set("screened_secs", Json::num(t.account.screened_secs));
+                            }
+                            o
                         })
                         .collect(),
                 ),
@@ -163,6 +190,25 @@ impl BudgetLedger {
     /// Measurements (framework, task) may still admit.
     pub fn remaining(&self, framework: &str, task: &str) -> usize {
         self.per_task_points.saturating_sub(self.account(framework, task).charged)
+    }
+
+    /// Settle `points` already-admitted candidates at *screening* fidelity:
+    /// they were scored by the calibrated analytical model instead of the
+    /// simulator, and are debited `secs_per_point` modeled seconds each —
+    /// the screening tier's own price. The points must have been admitted
+    /// by a preceding [`charge`](Self::charge) (the screening split happens
+    /// after admission), so this never consumes extra allowance; it records
+    /// how the allowance was spent.
+    pub fn charge_screen(&self, framework: &str, task: &str, points: usize, secs_per_point: f64) {
+        if points == 0 {
+            return;
+        }
+        let mut accounts = super::sync::lock_unpoisoned(&self.accounts);
+        let account = accounts
+            .entry((framework.to_string(), task.to_string()))
+            .or_default();
+        account.screened += points;
+        account.screened_secs += points as f64 * secs_per_point;
     }
 
     /// Record the provenance and modeled hardware cost of one measured
@@ -366,6 +412,39 @@ mod tests {
         assert_eq!(stats.total_cache_served(), 3);
         assert!(stats.summary().contains("charged=6"));
         assert!(stats.to_json().dump().contains("cache_served"));
+    }
+
+    #[test]
+    fn screened_points_settle_against_the_same_allowance() {
+        let ledger = BudgetLedger::new(32);
+        // A screened batch: 8 candidates admitted, 2 kept for the
+        // simulator, 6 resolved at screening fidelity.
+        assert_eq!(ledger.charge("arco", "t", 8), 8);
+        ledger.charge_screen("arco", "t", 6, 1e-6);
+        ledger.settle("arco", "t", &[Origin::Fresh, Origin::Fresh], 2.0);
+        let a = ledger.account("arco", "t");
+        assert_eq!(a.charged, 8);
+        assert_eq!(a.screened, 6);
+        assert_eq!((a.fresh, a.cache_served), (2, 0));
+        assert_eq!(a.settled(), a.charged, "screened points settle the allowance too");
+        assert!((a.screened_secs - 6e-6).abs() < 1e-12);
+        // Screening consumed allowance via the preceding charge: only 24
+        // candidates remain for this tenant.
+        assert_eq!(ledger.remaining("arco", "t"), 24);
+        let stats = ledger.stats();
+        assert_eq!(stats.total_screened(), 6);
+        assert!(stats.summary().ends_with(" screened=6"));
+        assert!(stats.to_json().dump().contains("screened_secs"));
+        // Zero-screen accounts render exactly as before multi-fidelity.
+        let exact = BudgetLedger::new(32);
+        exact.charge("a", "t", 4);
+        exact.settle("a", "t", &[Origin::Fresh; 4], 1.0);
+        let s = exact.stats().summary();
+        assert!(!s.contains("screened"), "exact-mode summary must be unchanged: {s}");
+        assert!(!exact.stats().to_json().dump().contains("screened"));
+        // Zero-point screen settles are a no-op, not an account creation.
+        exact.charge_screen("ghost", "t", 0, 1e-6);
+        assert_eq!(exact.stats().tenants.len(), 1);
     }
 
     #[test]

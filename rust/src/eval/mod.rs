@@ -49,6 +49,7 @@
 
 pub mod backend;
 pub mod cache;
+pub mod calib;
 pub mod cursor;
 pub mod engine;
 pub mod journal;
@@ -64,10 +65,11 @@ pub mod tune_server;
 
 pub use crate::codegen::MeasureResult;
 pub use backend::{
-    AnalyticalBackend, BackendKind, BackendSpec, MeasureBackend, Placement, ShardPlacement,
-    VtaSimBackend,
+    analytical_terms, AnalyticalBackend, AnalyticalTerms, BackendKind, BackendSpec,
+    MeasureBackend, Placement, ShardPlacement, VtaSimBackend, SEED_OVERLAP,
 };
 pub use cache::{CacheStats, MeasureCache, PointKey};
+pub use calib::Calibration;
 pub use engine::{Engine, EngineConfig, EngineStats, PairedBatch, PendingBatch, TracedBatch};
 pub use journal::{
     compact_journal, merge_journals, CompactStats, Journal, JournalEntry, MergeStats,

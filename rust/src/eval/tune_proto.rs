@@ -18,7 +18,7 @@
 use super::proto::{result_from_json, result_to_json, values_from_json, values_to_json};
 use super::proto::{write_frame, Fingerprint};
 use crate::codegen::MeasureResult;
-use crate::tuner::{Framework, TraceEntry};
+use crate::tuner::{Fidelity, Framework, TraceEntry, TraceFidelity};
 use crate::util::json::stream::{Reader, StreamWriter, Token};
 use crate::util::json::Json;
 use crate::workload::Conv2dTask;
@@ -52,11 +52,15 @@ pub struct JobSpec {
     pub seed: u64,
     /// Quick-mode strategy parameters (smaller models, CI-sized runs).
     pub quick: bool,
+    /// Evaluation fidelity (`TuneBudget::fidelity`), wire-encoded via
+    /// [`Fidelity::describe`]. Additive: omitted on the wire for the
+    /// default `exact`, and absence reads as `exact`.
+    pub fidelity: Fidelity,
 }
 
 impl JobSpec {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("client", Json::str(self.client.clone())),
             ("framework", Json::str(self.framework.name())),
             ("task", self.task.to_json()),
@@ -65,7 +69,11 @@ impl JobSpec {
             ("pipeline_depth", Json::num(self.pipeline_depth as f64)),
             ("seed", Json::num(self.seed as f64)),
             ("quick", Json::Bool(self.quick)),
-        ])
+        ];
+        if self.fidelity != Fidelity::Exact {
+            fields.push(("fidelity", Json::str(self.fidelity.describe())));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(v: &Json) -> Option<JobSpec> {
@@ -79,6 +87,7 @@ impl JobSpec {
             pipeline_depth: v.get_usize("pipeline_depth").unwrap_or(1),
             seed: v.get_f64("seed").unwrap_or(0.0) as u64,
             quick: v.get_bool("quick").unwrap_or(false),
+            fidelity: v.get_str("fidelity").and_then(Fidelity::parse).unwrap_or_default(),
         })
     }
 }
@@ -202,6 +211,9 @@ pub struct JobOutcome {
     pub invalid: usize,
     pub modeled_hw_secs: f64,
     pub wall_secs: f64,
+    /// Candidates the screening stage answered analytically instead of
+    /// measuring (0 in exact mode; additive on the wire).
+    pub screened: usize,
 }
 
 impl JobOutcome {
@@ -216,6 +228,9 @@ impl JobOutcome {
         fields.push(("invalid", Json::num(self.invalid as f64)));
         fields.push(("modeled_hw_secs", Json::num(self.modeled_hw_secs)));
         fields.push(("wall_secs", Json::num(self.wall_secs)));
+        if self.screened > 0 {
+            fields.push(("screened", Json::num(self.screened as f64)));
+        }
         Json::obj(fields)
     }
 
@@ -229,6 +244,7 @@ impl JobOutcome {
             invalid: v.get_usize("invalid").unwrap_or(0),
             modeled_hw_secs: v.get_f64("modeled_hw_secs").unwrap_or(0.0),
             wall_secs: v.get_f64("wall_secs").unwrap_or(0.0),
+            screened: v.get_usize("screened").unwrap_or(0),
         })
     }
 }
@@ -236,7 +252,7 @@ impl JobOutcome {
 /// Tree encoding of one trace entry (pages also have a streaming twin,
 /// [`write_trace_entry_stream`], byte-identical for finite values).
 pub fn trace_to_json(e: &TraceEntry) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("ordinal", Json::num(e.ordinal as f64)),
         ("iteration", Json::num(e.iteration as f64)),
         ("at_secs", Json::num(e.at_secs)),
@@ -244,7 +260,13 @@ pub fn trace_to_json(e: &TraceEntry) -> Json {
         ("best_gflops", Json::num(e.best_gflops)),
         ("valid", Json::Bool(e.valid)),
         ("modeled_cum_secs", Json::num(e.modeled_cum_secs)),
-    ])
+    ];
+    // Additive: only screened entries carry the tag; absence reads as
+    // the exact tier, so exact-mode frames are byte-identical to old ones.
+    if e.fidelity == TraceFidelity::Screened {
+        fields.push(("fidelity", Json::str("screen")));
+    }
+    Json::obj(fields)
 }
 
 pub fn trace_from_json(v: &Json) -> Option<TraceEntry> {
@@ -256,6 +278,10 @@ pub fn trace_from_json(v: &Json) -> Option<TraceEntry> {
         best_gflops: v.get_f64("best_gflops").unwrap_or(0.0),
         valid: v.get_bool("valid").unwrap_or(true),
         modeled_cum_secs: v.get_f64("modeled_cum_secs").unwrap_or(0.0),
+        fidelity: match v.get_str("fidelity") {
+            Some("screen") => TraceFidelity::Screened,
+            _ => TraceFidelity::Exact,
+        },
     })
 }
 
@@ -501,6 +527,10 @@ fn write_trace_entry_stream<W: Write>(
     sw.bool_val(e.valid)?;
     sw.key("modeled_cum_secs")?;
     sw.f64_val(e.modeled_cum_secs)?;
+    if e.fidelity == TraceFidelity::Screened {
+        sw.key("fidelity")?;
+        sw.str_val("screen")?;
+    }
     sw.end_obj()
 }
 
@@ -575,6 +605,7 @@ fn trace_entry_rest_from_stream(r: &mut Reader<'_>) -> Option<TraceEntry> {
     let mut best_gflops = 0.0f64;
     let mut valid = true;
     let mut modeled_cum_secs = 0.0f64;
+    let mut fidelity = TraceFidelity::Exact;
     loop {
         match r.next_token()? {
             Token::ObjEnd => break,
@@ -607,6 +638,16 @@ fn trace_entry_rest_from_stream(r: &mut Reader<'_>) -> Option<TraceEntry> {
                     Token::Num(n) => modeled_cum_secs = n.as_f64(),
                     _ => return None,
                 },
+                "fidelity" => match r.next_token()? {
+                    Token::Str(s) => {
+                        fidelity = if s.as_ref() == "screen" {
+                            TraceFidelity::Screened
+                        } else {
+                            TraceFidelity::Exact
+                        }
+                    }
+                    _ => return None,
+                },
                 _ => r.skip_value().ok()?,
             },
             _ => return None,
@@ -620,6 +661,7 @@ fn trace_entry_rest_from_stream(r: &mut Reader<'_>) -> Option<TraceEntry> {
         best_gflops,
         valid,
         modeled_cum_secs,
+        fidelity,
     })
 }
 
@@ -700,6 +742,7 @@ mod tests {
             pipeline_depth: 2,
             seed: 0x1234_5678,
             quick: true,
+            fidelity: Fidelity::Screen { keep: 0.25, explore: 0.1 },
         }
     }
 
@@ -712,6 +755,8 @@ mod tests {
             best_gflops: 2.0 * ordinal as f64,
             valid: ordinal % 3 != 0,
             modeled_cum_secs: 0.125 * ordinal as f64,
+            // Mixed-tier pages exercise the conditional tag end to end.
+            fidelity: if ordinal % 4 == 0 { TraceFidelity::Screened } else { TraceFidelity::Exact },
         }
     }
 
@@ -779,6 +824,7 @@ mod tests {
             invalid: 3,
             modeled_hw_secs: 12.5,
             wall_secs: 2.25,
+            screened: 24,
         };
         for resp in [
             TuneResponse::Hello {
@@ -853,6 +899,7 @@ mod tests {
                 assert_eq!(s.pipeline_depth, 1);
                 assert_eq!(s.seed, 0);
                 assert!(!s.quick);
+                assert_eq!(s.fidelity, Fidelity::Exact, "absent fidelity reads as exact");
             }
             other => panic!("expected submit, got {other:?}"),
         }
@@ -864,6 +911,7 @@ mod tests {
                 assert_eq!(entries[0].ordinal, 1);
                 assert_eq!(entries[0].gflops, 2.0);
                 assert!(entries[0].valid, "absent valid reads as true");
+                assert_eq!(entries[0].fidelity, TraceFidelity::Exact, "absent tag = exact tier");
             }
             other => panic!("expected page, got {other:?}"),
         }

@@ -489,6 +489,7 @@ fn run_one(shared: &TuneShared, job: &JobRecord) {
         total_measurements: spec.trials,
         batch: spec.batch,
         pipeline_depth: spec.pipeline_depth,
+        fidelity: spec.fidelity,
         ..Default::default()
     };
     let observer = JobObserver { job };
@@ -514,6 +515,7 @@ fn run_one(shared: &TuneShared, job: &JobRecord) {
                 invalid: r.invalid,
                 modeled_hw_secs: r.modeled_hw_secs,
                 wall_secs: r.wall_secs,
+                screened: r.screened,
             });
             inner.state = if job.cancel.load(Ordering::Relaxed) {
                 JobState::Cancelled

@@ -29,7 +29,7 @@
 use arco::config::RunConfig;
 use arco::eval::{self, BackendKind, BackendSpec, Placement};
 use arco::report;
-use arco::tuner::{compare_frameworks_opts, tune_model_with, DriverOptions, Framework};
+use arco::tuner::{compare_frameworks_opts, tune_model_with, DriverOptions, Fidelity, Framework};
 use arco::util::cli::Cli;
 use arco::util::json::write_json_file;
 use arco::util::log::{set_level, Level};
@@ -155,6 +155,15 @@ fn common_cli(name: &str, about: &str) -> Cli {
              default) | N>=2 (pipelined speed mode: plan batch k+1 while batch k measures)",
             None,
         )
+        .opt(
+            "fidelity",
+            None,
+            "evaluation tier: exact (every planned point simulated, bit-identical \
+             default) | screen:<keep>[:<explore>] (calibrated analytical screening keeps \
+             the top <keep> fraction of each batch for the simulator, plus an <explore> \
+             exploration slice of the rest)",
+            None,
+        )
         .flag("no-cache", None, "disable the measurement cache (every point re-simulated)")
         .flag("quick", Some('q'), "CI-scale RL budgets (same pipeline)")
         .flag("verbose", Some('v'), "debug logging")
@@ -177,6 +186,14 @@ fn load_config(a: &arco::util::cli::Args) -> anyhow::Result<(RunConfig, bool)> {
     }
     if let Some(d) = a.get_usize("pipeline-depth").map_err(anyhow::Error::msg)? {
         cfg.budget.pipeline_depth = d.max(1);
+    }
+    if let Some(name) = a.get("fidelity") {
+        cfg.budget.fidelity = Fidelity::parse(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "bad --fidelity '{name}' (expected exact | screen:<keep>[:<explore>] with \
+                 0 < keep <= 1 and 0 <= explore <= 1)"
+            )
+        })?;
     }
     if let Some(s) = a.get_u64("seed").map_err(anyhow::Error::msg)? {
         cfg.seed = s;
@@ -220,6 +237,57 @@ fn build_engine(cfg: &RunConfig) -> anyhow::Result<eval::Engine> {
     eval::Engine::new(cfg.eval.engine_config(cfg.budget.workers))
 }
 
+/// When a screening fidelity is active, attach calibration state so every
+/// fresh simulator point refines the analytical overlap model. With a
+/// journal configured the state persists in a fingerprint-gated sidecar
+/// next to it (returned here so the run can save it back on exit); without
+/// one the calibration starts from the seed constants and lives for the
+/// run only.
+fn setup_calibration(engine: &eval::Engine, cfg: &RunConfig) -> Option<PathBuf> {
+    if !cfg.budget.fidelity.is_screen() {
+        return None;
+    }
+    let fp = eval::Fingerprint::current();
+    match &cfg.eval.journal {
+        Some(journal) => {
+            let sidecar = eval::Calibration::sidecar_path(journal);
+            let calib = eval::Calibration::load_or_new(&sidecar, &fp);
+            arco::log_info!(
+                "main",
+                "screening fidelity {}: calibration sidecar {} ({} observations)",
+                cfg.budget.fidelity.describe(),
+                sidecar.display(),
+                calib.observations()
+            );
+            engine.attach_calibration(Arc::new(calib));
+            Some(sidecar)
+        }
+        None => {
+            engine.attach_calibration(Arc::new(eval::Calibration::new(fp)));
+            None
+        }
+    }
+}
+
+/// Persist the run's calibration state back to the journal sidecar (no-op
+/// when screening is off or no journal is configured).
+fn save_calibration(engine: &eval::Engine, sidecar: Option<PathBuf>) {
+    let (Some(path), Some(calib)) = (sidecar, engine.calibration()) else {
+        return;
+    };
+    match calib.save(&path) {
+        Ok(()) => arco::log_info!(
+            "main",
+            "saved calibration sidecar {} ({} observations)",
+            path.display(),
+            calib.observations()
+        ),
+        Err(e) => {
+            arco::log_warn!("main", "failed to save calibration sidecar {}: {e}", path.display())
+        }
+    }
+}
+
 fn parse_models(spec: &str) -> anyhow::Result<Vec<String>> {
     let names: Vec<String> = if spec == "all" {
         model_names().iter().map(|s| s.to_string()).collect()
@@ -250,7 +318,9 @@ fn cmd_tune(args: &[String]) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unknown framework"))?;
 
     let engine = build_engine(&cfg)?;
+    let calib_sidecar = setup_calibration(&engine, &cfg);
     let out = tune_model_with(&engine, framework, &model, cfg.budget, quick, cfg.seed)?;
+    save_calibration(&engine, calib_sidecar);
     println!(
         "{} on {}: mean inference {:.5}s ({:.3} inf/s), compile {:.1}s, {} measurements",
         framework.name(),
@@ -316,6 +386,7 @@ fn cmd_compare(args: &[String]) -> anyhow::Result<()> {
     }
 
     let engine = build_engine(&cfg)?;
+    let calib_sidecar = setup_calibration(&engine, &cfg);
     let mut reports = Vec::new();
     for name in &models {
         let model = model_by_name(name).unwrap();
@@ -324,6 +395,7 @@ fn cmd_compare(args: &[String]) -> anyhow::Result<()> {
             &engine, &frameworks, &model, cfg.budget, quick, cfg.seed, driver,
         )?);
     }
+    save_calibration(&engine, calib_sidecar);
     println!("eval engine: {}", engine.summary());
     for (addr, stats) in engine.fleet_stats() {
         println!("  shard {addr}: {}", stats.dump());
@@ -379,9 +451,11 @@ fn cmd_fig4(args: &[String]) -> anyhow::Result<()> {
     // Both variants share one engine: configurations the two runs have in
     // common are simulated once.
     let engine = build_engine(&cfg)?;
+    let calib_sidecar = setup_calibration(&engine, &cfg);
     let with_cs = tune_model_with(&engine, Framework::Arco, &model, cfg.budget, quick, cfg.seed)?;
     let without_cs =
         tune_model_with(&engine, Framework::ArcoNoCs, &model, cfg.budget, quick, cfg.seed)?;
+    save_calibration(&engine, calib_sidecar);
 
     // Heaviest task's trace under each variant.
     let pick = |o: &arco::tuner::ModelOutcome| {
@@ -604,6 +678,16 @@ fn cmd_serve_tune(args: &[String]) -> anyhow::Result<()> {
         placement,
     };
     let engine = Arc::new(eval::Engine::new(config)?);
+    // With a journal configured, calibration persists next to it so
+    // screening jobs (`--fidelity screen:...` at submit) start from state
+    // refined by every prior fresh measurement the daemon made; attaching
+    // is free for exact jobs (results are untouched).
+    let calib_sidecar = a.get("journal").map(|j| {
+        let sidecar = eval::Calibration::sidecar_path(Path::new(j));
+        let fp = eval::Fingerprint::current();
+        engine.attach_calibration(Arc::new(eval::Calibration::load_or_new(&sidecar, &fp)));
+        sidecar
+    });
     let opts = eval::TuneServeOptions {
         quota: a.get_usize("quota").map_err(anyhow::Error::msg)?.unwrap_or(usize::MAX),
         runners: a.get_usize("jobs").map_err(anyhow::Error::msg)?.unwrap_or(2).max(1),
@@ -627,6 +711,7 @@ fn cmd_serve_tune(args: &[String]) -> anyhow::Result<()> {
         eval::Fingerprint::current().describe()
     );
     handle.wait();
+    save_calibration(&engine, calib_sidecar);
     Ok(())
 }
 
@@ -717,6 +802,12 @@ fn cmd_tune_client(args: &[String]) -> anyhow::Result<()> {
                 "RNG seed (task i runs at seed ^ i << 32, like `arco tune`)",
                 Some("1"),
             )
+            .opt(
+                "fidelity",
+                None,
+                "exact | screen:<keep>[:<explore>] — analytical screening tier",
+                Some("exact"),
+            )
             .opt("page", None, "trace entries per page while --wait streams", Some("256"))
             .opt("poll-ms", None, "delay between empty pages while --wait streams", Some("50"))
             .flag("quick", Some('q'), "CI-scale RL budgets (same pipeline)")
@@ -741,6 +832,13 @@ fn cmd_tune_client(args: &[String]) -> anyhow::Result<()> {
             let depth =
                 a.get_usize("pipeline-depth").map_err(anyhow::Error::msg)?.unwrap().max(1);
             let seed = a.get_u64("seed").map_err(anyhow::Error::msg)?.unwrap();
+            let fidelity_str = a.get("fidelity").unwrap();
+            let fidelity = Fidelity::parse(fidelity_str).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "bad --fidelity '{fidelity_str}' (expected exact | screen:<keep>[:<explore>] \
+                     with 0 < keep <= 1 and 0 <= explore <= 1)"
+                )
+            })?;
             let quick = a.has_flag("quick");
             let mut client = tune_connect(&a)?;
             println!(
@@ -763,6 +861,7 @@ fn cmd_tune_client(args: &[String]) -> anyhow::Result<()> {
                     // a depth-1 job reproduces `arco tune` bit-for-bit.
                     seed: seed ^ (i as u64) << 32,
                     quick,
+                    fidelity,
                 };
                 let (id, position) = client.submit(spec)?;
                 println!(
@@ -782,15 +881,21 @@ fn cmd_tune_client(args: &[String]) -> anyhow::Result<()> {
                 for (id, task_id, weight) in &jobs {
                     let done = client.wait(*id, page, poll)?;
                     if let Some(o) = &done.outcome {
+                        let screened_note = if o.screened > 0 {
+                            format!(" screened={}", o.screened)
+                        } else {
+                            String::new()
+                        };
                         println!(
                             "  job {id} {task_id}  x{weight}  best {:.3e}s  ({:.1} GFLOPS)  \
-                             measured={} fresh={} cache_served={} invalid={} [{}]",
+                             measured={} fresh={} cache_served={} invalid={}{} [{}]",
                             o.best.seconds,
                             o.best.gflops,
                             o.measurements,
                             o.fresh,
                             o.cache_served,
                             o.invalid,
+                            screened_note,
                             done.status.state.name()
                         );
                         measured += o.measurements;

@@ -2,7 +2,7 @@
 //! written under `results/`.
 
 use crate::eval::{EngineStats, LedgerStats};
-use crate::tuner::{CompareReport, Framework};
+use crate::tuner::{CompareReport, Framework, TraceFidelity};
 use crate::util::json::Json;
 use crate::workload::{model_by_name, model_names};
 use std::fmt::Write as _;
@@ -115,22 +115,31 @@ pub fn fig6_compile_time(reports: &[CompareReport]) -> String {
 }
 
 /// Fig. 7: convergence trace (best GFLOPS vs measurement count) for one
-/// model's heaviest task under each framework.
+/// model's heaviest task under each framework. The x-axis counts
+/// *simulator* measurements only — screened (analytical-tier) trace
+/// entries are skipped so multi-fidelity curves stay comparable to exact
+/// ones on the axis the paper plots.
 pub fn fig7_convergence(report: &CompareReport) -> String {
     let mut s = String::from("framework,measurement,best_gflops\n");
     for o in &report.outcomes {
         // Heaviest task = most FLOPs-weighted: use the one with max
         // measurements (ties broken by first).
         if let Some(t) = o.tasks.iter().max_by_key(|t| t.result.trace.len()) {
+            let mut measurement = 0usize;
             for e in &t.result.trace {
-                let _ = writeln!(s, "{},{},{:.4}", o.framework.name(), e.ordinal, e.best_gflops);
+                if e.fidelity != TraceFidelity::Exact {
+                    continue;
+                }
+                measurement += 1;
+                let _ = writeln!(s, "{},{},{:.4}", o.framework.name(), measurement, e.best_gflops);
             }
         }
     }
     s
 }
 
-/// Fig. 4: measured configurations over time (before/after CS).
+/// Fig. 4: measured configurations over time (before/after CS). Like
+/// Fig. 7, only simulator-tier entries are plotted.
 pub fn fig4_configs_over_time(
     label_a: &str,
     trace_a: &[crate::tuner::TraceEntry],
@@ -139,11 +148,16 @@ pub fn fig4_configs_over_time(
 ) -> String {
     let mut s = String::from("variant,measurement,at_secs,gflops,valid\n");
     for (label, trace) in [(label_a, trace_a), (label_b, trace_b)] {
+        let mut measurement = 0usize;
         for e in trace {
+            if e.fidelity != TraceFidelity::Exact {
+                continue;
+            }
+            measurement += 1;
             let _ = writeln!(
                 s,
                 "{label},{},{:.4},{:.4},{}",
-                e.ordinal, e.at_secs, e.gflops, e.valid as u8
+                measurement, e.at_secs, e.gflops, e.valid as u8
             );
         }
     }
@@ -154,16 +168,34 @@ pub fn fig4_configs_over_time(
 /// (framework, task) tenant was debited, split into freshly-simulated and
 /// cache-served points ("measure once, charge everyone").
 pub fn ledger_stats_md(stats: &LedgerStats) -> String {
+    // The Screened column only appears when some account actually resolved
+    // points at screening fidelity, so exact-mode reports stay
+    // byte-identical to the pre-multi-fidelity rendering.
+    let screening = stats.total_screened() > 0;
     let mut s = format!(
-        "Shared measurement budget: {} points per (framework, task)\n\n\
-         | Framework | Task | Charged | Fresh | Cache-served | Modeled HW (s) |\n\
-         |---|---|---|---|---|---|\n",
+        "Shared measurement budget: {} points per (framework, task)\n\n",
         stats.per_task_points
     );
+    if screening {
+        s.push_str(
+            "| Framework | Task | Charged | Fresh | Cache-served | Screened | Modeled HW (s) |\n\
+             |---|---|---|---|---|---|---|\n",
+        );
+    } else {
+        s.push_str(
+            "| Framework | Task | Charged | Fresh | Cache-served | Modeled HW (s) |\n\
+             |---|---|---|---|---|---|\n",
+        );
+    }
     for t in &stats.tenants {
+        let screened_col = if screening {
+            format!(" {} |", t.account.screened)
+        } else {
+            String::new()
+        };
         let _ = writeln!(
             s,
-            "| {} | {} | {} | {} | {} | {:.3} |",
+            "| {} | {} | {} | {} | {} |{screened_col} {:.3} |",
             t.framework,
             t.task,
             t.account.charged,
@@ -172,9 +204,14 @@ pub fn ledger_stats_md(stats: &LedgerStats) -> String {
             t.account.modeled_hw_secs
         );
     }
+    let screened_total = if screening {
+        format!(" {} |", stats.total_screened())
+    } else {
+        String::new()
+    };
     let _ = writeln!(
         s,
-        "| **total** | | {} | {} | {} | |",
+        "| **total** | | {} | {} | {} |{screened_total} |",
         stats.total_charged(),
         stats.total_fresh(),
         stats.total_cache_served()
@@ -229,7 +266,7 @@ pub fn compare_json(reports: &[CompareReport]) -> Json {
                             r.outcomes
                                 .iter()
                                 .map(|o| {
-                                    Json::obj(vec![
+                                    let mut obj = Json::obj(vec![
                                         ("framework", Json::str(o.framework.name())),
                                         ("inference_secs", Json::num(o.inference_secs)),
                                         ("compile_secs", Json::num(o.compile_secs)),
@@ -237,7 +274,14 @@ pub fn compare_json(reports: &[CompareReport]) -> Json {
                                         ("fresh", Json::num(o.fresh as f64)),
                                         ("cache_served", Json::num(o.cache_served as f64)),
                                         ("throughput", Json::num(o.throughput())),
-                                    ])
+                                    ]);
+                                    // Additive: only rendered when the run
+                                    // actually screened, keeping exact-mode
+                                    // dumps byte-identical.
+                                    if o.screened > 0 {
+                                        obj.set("screened", Json::num(o.screened as f64));
+                                    }
+                                    obj
                                 })
                                 .collect(),
                         ),
@@ -310,6 +354,20 @@ mod tests {
         assert!(md.contains("| autotvm | t0 | 4 | 4 | 0 |"));
         assert!(md.contains("| arco | t0 | 4 | 0 | 4 |"));
         assert!(md.contains("| **total** | | 8 | 4 | 4 | |"));
+        assert!(!md.contains("Screened"), "exact-mode ledger table must be unchanged");
+    }
+
+    #[test]
+    fn ledger_stats_render_screened_column_when_screening_ran() {
+        use crate::eval::{BudgetLedger, Origin};
+        let ledger = BudgetLedger::new(8);
+        ledger.charge("arco", "t0", 8);
+        ledger.charge_screen("arco", "t0", 6, 1e-6);
+        ledger.settle("arco", "t0", &[Origin::Fresh; 2], 0.5);
+        let md = ledger_stats_md(&ledger.stats());
+        assert!(md.contains("| Framework | Task | Charged | Fresh | Cache-served | Screened | Modeled HW (s) |"));
+        assert!(md.contains("| arco | t0 | 8 | 2 | 0 | 6 | 0.500 |"));
+        assert!(md.contains("| **total** | | 8 | 2 | 0 | 6 | |"));
     }
 
     #[test]

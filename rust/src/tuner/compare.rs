@@ -147,6 +147,11 @@ pub struct ModelOutcome {
     /// Of `measurements`, points served from shared state another tenant
     /// (or an earlier batch) already paid for.
     pub cache_served: usize,
+    /// Planned candidates resolved at *screening* fidelity (scored by the
+    /// calibrated analytical model, never simulated) under
+    /// `--fidelity screen:<keep>`. Zero in exact mode; not part of
+    /// `measurements`.
+    pub screened: usize,
 }
 
 impl ModelOutcome {
@@ -324,6 +329,7 @@ fn aggregate(framework: Framework, model: &ModelSpec, tasks: Vec<TaskOutcome>) -
     let mut measurements = 0usize;
     let mut fresh = 0usize;
     let mut cache_served = 0usize;
+    let mut screened = 0usize;
     for t in &tasks {
         inference_secs += t.weight as f64 * t.result.best.seconds;
         compile_secs += t.result.wall_secs + t.result.modeled_hw_secs;
@@ -331,6 +337,7 @@ fn aggregate(framework: Framework, model: &ModelSpec, tasks: Vec<TaskOutcome>) -
         measurements += t.result.measurements;
         fresh += t.result.fresh;
         cache_served += t.result.cache_served;
+        screened += t.result.screened;
     }
     ModelOutcome {
         framework,
@@ -342,6 +349,7 @@ fn aggregate(framework: Framework, model: &ModelSpec, tasks: Vec<TaskOutcome>) -
         measurements,
         fresh,
         cache_served,
+        screened,
     }
 }
 

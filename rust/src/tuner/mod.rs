@@ -13,6 +13,6 @@ pub use compare::{
 };
 pub use strategy::Strategy;
 pub use task_tuner::{
-    tune_task, tune_task_tenant, tune_task_with, TaskTuneResult, TenantContext, TraceEntry,
-    TuneBudget, TuneObserver,
+    tune_task, tune_task_tenant, tune_task_with, Fidelity, TaskTuneResult, TenantContext,
+    TraceEntry, TraceFidelity, TuneBudget, TuneObserver, DEFAULT_EXPLORE_FRAC, SCREEN_COST_SECS,
 };

@@ -52,6 +52,20 @@ pub trait Strategy {
     /// recent `plan` call.
     fn observe(&mut self, results: &[(PointConfig, MeasureResult)]);
 
+    /// Digest *low-fidelity* observations: points the multi-fidelity
+    /// screening stage (`--fidelity screen:<keep>`) scored with the
+    /// calibrated analytical model and filtered out before the simulator.
+    /// The estimates rank candidates well but are not cycle-accurate, so
+    /// they arrive through this separate channel — a posterior can weight
+    /// (or ignore) them without ever confusing them for measurements.
+    ///
+    /// The default drops them: a strategy that only trusts the oracle
+    /// keeps exactly its exact-mode behaviour, merely observing fewer
+    /// measured points per planned batch. Implementations must still treat
+    /// these points as *consumed* (they were planned, so in-tree
+    /// strategies' plan-time `seen` marking already covers this).
+    fn observe_low_fidelity(&mut self, _results: &[(PointConfig, MeasureResult)]) {}
+
     /// The deepest measurement pipeline this strategy tolerates: how many
     /// batches may be in flight (planned but unobserved) at once. `1`
     /// means strictly serial — every `plan` sees every earlier result —

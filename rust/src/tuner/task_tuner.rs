@@ -20,8 +20,86 @@
 use super::strategy::Strategy;
 use crate::eval::{self, BudgetLedger, Dispatcher, MeasureResult};
 use crate::space::{ConfigSpace, PointConfig};
+use crate::util::rng::Pcg32;
 use crate::util::timer::{PhaseTimer, Stopwatch};
 use std::collections::VecDeque;
+
+/// Modeled testbed seconds one analytical screening evaluation costs —
+/// the low-fidelity tier's price on the [`BudgetLedger`]
+/// ([`BudgetLedger::charge_screen`]). A few hundred nanoseconds of real
+/// compute, charged as a microsecond so equal-cost comparisons stay
+/// honest without letting screening distort Fig. 6 time axes.
+pub const SCREEN_COST_SECS: f64 = 1e-6;
+
+/// Exploration fraction used when `screen:<keep>` does not spell one out.
+pub const DEFAULT_EXPLORE_FRAC: f64 = 0.1;
+
+/// Evaluation fidelity of the tuning loop (`--fidelity`).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum Fidelity {
+    /// Every planned candidate goes to the measurement engine — the
+    /// paper-faithful default, bit-identical to the classic loop.
+    #[default]
+    Exact,
+    /// Multi-fidelity screening: each admitted batch is first scored by
+    /// the online-calibrated analytical model; only the top `keep`
+    /// fraction — plus an ε-greedy `explore` slice drawn from the
+    /// filtered-out tail, so the model cannot permanently lock out regions
+    /// it misranks — goes to the simulator. The rest feed the strategy as
+    /// low-fidelity observations ([`Strategy::observe_low_fidelity`]).
+    Screen {
+        /// Fraction of each admitted batch sent to the simulator (0, 1].
+        keep: f64,
+        /// Fraction of the kept count re-drawn uniformly from the rejected
+        /// tail [0, 1].
+        explore: f64,
+    },
+}
+
+impl Fidelity {
+    /// Parse a CLI/config fidelity string: `exact`, `screen:<keep>` or
+    /// `screen:<keep>:<explore>` (fractions; keep in (0, 1], explore in
+    /// [0, 1]).
+    pub fn parse(s: &str) -> Option<Fidelity> {
+        if s == "exact" {
+            return Some(Fidelity::Exact);
+        }
+        let rest = s.strip_prefix("screen:")?;
+        let mut parts = rest.splitn(2, ':');
+        let keep: f64 = parts.next()?.trim().parse().ok()?;
+        let explore: f64 = match parts.next() {
+            Some(e) => e.trim().parse().ok()?,
+            None => DEFAULT_EXPLORE_FRAC,
+        };
+        if !(keep > 0.0 && keep <= 1.0) || !(0.0..=1.0).contains(&explore) {
+            return None;
+        }
+        Some(Fidelity::Screen { keep, explore })
+    }
+
+    /// Canonical rendering; `Fidelity::parse` round-trips it.
+    pub fn describe(&self) -> String {
+        match self {
+            Fidelity::Exact => "exact".to_string(),
+            Fidelity::Screen { keep, explore } => format!("screen:{keep}:{explore}"),
+        }
+    }
+
+    pub fn is_screen(&self) -> bool {
+        matches!(self, Fidelity::Screen { .. })
+    }
+}
+
+/// Which tier produced a trace entry (the tag Fig. 6 plots filter on, so
+/// convergence curves chart simulator-seconds, not screened points).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TraceFidelity {
+    /// A real engine measurement (simulator or cache-served).
+    #[default]
+    Exact,
+    /// A calibrated-analytical screening estimate; never measured.
+    Screened,
+}
 
 /// Measurement budget (Table 4/5: Σb = 1000, b = 64).
 #[derive(Debug, Clone, Copy)]
@@ -60,6 +138,13 @@ pub struct TuneBudget {
     /// wall-clock. Clamped to [`Strategy::max_pipeline_depth`]; values
     /// below 1 behave as 1.
     pub pipeline_depth: usize,
+    /// Evaluation fidelity (`--fidelity`). [`Fidelity::Exact`] (default)
+    /// sends every admitted candidate to the engine — bit-identical to
+    /// the classic loop. [`Fidelity::Screen`] scores each admitted batch
+    /// with the engine's online-calibrated analytical model first and
+    /// only forwards the most promising fraction (plus an exploration
+    /// slice) to the simulator.
+    pub fidelity: Fidelity,
 }
 
 impl Default for TuneBudget {
@@ -74,6 +159,7 @@ impl Default for TuneBudget {
             measure_repeats: 10,
             invalid_timeout_secs: 1.0,
             pipeline_depth: 1,
+            fidelity: Fidelity::Exact,
         }
     }
 }
@@ -101,6 +187,12 @@ pub struct TraceEntry {
     /// Cumulative *modeled* hardware-measurement time (s) up to and
     /// including this measurement (see `TuneBudget::measure_overhead_secs`).
     pub modeled_cum_secs: f64,
+    /// Which tier produced this entry: a real measurement
+    /// ([`TraceFidelity::Exact`]) or a calibrated-analytical screening
+    /// estimate ([`TraceFidelity::Screened`], only under
+    /// `--fidelity screen:<keep>`). Fig. 6 style time-axis plots filter
+    /// to `Exact` so curves chart simulator-seconds.
+    pub fidelity: TraceFidelity,
 }
 
 /// Outcome of tuning one task.
@@ -125,6 +217,15 @@ pub struct TaskTuneResult {
     /// measurements (overhead + repeats x runtime; timeout for invalid) —
     /// the dominant term of "compilation time" in the paper's Fig. 6.
     pub modeled_hw_secs: f64,
+    /// Candidates the screening stage scored analytically and filtered out
+    /// before the simulator (0 under `--fidelity exact`). Screened points
+    /// are *not* part of `measurements`.
+    pub screened: usize,
+    /// Exploration-slice points (screen-rejected, measured anyway) that
+    /// improved the running best — each one is a point the analytical
+    /// filter would have wrongly discarded. A climbing rate signals the
+    /// screening model is misranking this task (see docs/OPERATIONS.md).
+    pub explore_hits: usize,
     pub trace: Vec<TraceEntry>,
     pub timer: PhaseTimer,
 }
@@ -235,6 +336,101 @@ fn modeled_cost(budget: &TuneBudget, r: &MeasureResult) -> f64 {
     }
 }
 
+/// Outcome of screening one admitted batch: the simulator-bound points
+/// (`kept`, in original plan order, each flagged if it rode the
+/// exploration slice) and the filtered-out remainder paired with its
+/// analytical estimate (fed back to the strategy as low-fidelity
+/// observations).
+struct ScreenSplit {
+    kept: Vec<PointConfig>,
+    /// Parallel to `kept`: `true` for exploration-slice points — rejected
+    /// by rank but measured anyway.
+    explore_flags: Vec<bool>,
+    rejected: Vec<(PointConfig, MeasureResult)>,
+}
+
+/// Score `plan` with the calibrated analytical model and split it into
+/// the simulator-bound fraction and the screened-out remainder.
+///
+/// Ranking mirrors the loop's best-point selection: valid-and-within-area
+/// first, then valid-over-area (still useful cost-model signal), then
+/// invalid; within a class by predicted seconds ascending, with original
+/// plan order breaking ties so the split is deterministic. `ceil(keep·n)`
+/// points survive by rank (never fewer than one), and an ε-greedy slice
+/// of `ceil(explore · n_keep)` more is drawn uniformly from the rejected
+/// tail with a per-iteration deterministic RNG — the insurance that a
+/// miscalibrated model cannot permanently lock out a region it misranks.
+fn screen_batch(
+    space: &ConfigSpace,
+    plan: Vec<PointConfig>,
+    calib: &eval::Calibration,
+    task_id: &str,
+    keep: f64,
+    explore: f64,
+    area_budget_mm2: f64,
+    iteration: usize,
+) -> ScreenSplit {
+    let n = plan.len();
+    let overlaps = calib.overlaps(task_id);
+    let scored: Vec<MeasureResult> = plan
+        .iter()
+        .map(|p| eval::AnalyticalBackend::measure_with_overlaps(space, p, overlaps))
+        .collect();
+    let rank_class = |r: &MeasureResult| -> u8 {
+        if r.valid && r.area_mm2 <= area_budget_mm2 {
+            0
+        } else if r.valid {
+            1
+        } else {
+            2
+        }
+    };
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        rank_class(&scored[a])
+            .cmp(&rank_class(&scored[b]))
+            .then_with(|| scored[a].seconds.total_cmp(&scored[b].seconds))
+            .then_with(|| a.cmp(&b))
+    });
+    let n_keep = ((keep * n as f64).ceil() as usize).clamp(1, n);
+    let n_explore = if n_keep < n {
+        ((explore * n_keep as f64).ceil() as usize).min(n - n_keep)
+    } else {
+        0
+    };
+    let mut keep_mask = vec![false; n];
+    let mut explore_mask = vec![false; n];
+    for &i in &order[..n_keep] {
+        keep_mask[i] = true;
+    }
+    if n_explore > 0 {
+        // Partial Fisher-Yates over the rejected tail: after `n_explore`
+        // swaps its first slots hold a uniform sample. Seeded per
+        // iteration so identical runs screen identically.
+        let mut rng = Pcg32::new(0x5c4e_e21b, iteration as u64);
+        let tail = &mut order[n_keep..];
+        for k in 0..n_explore {
+            let j = k + rng.gen_range(tail.len() - k);
+            tail.swap(k, j);
+            keep_mask[tail[k]] = true;
+            explore_mask[tail[k]] = true;
+        }
+    }
+    let total_kept = n_keep + n_explore;
+    let mut kept = Vec::with_capacity(total_kept);
+    let mut explore_flags = Vec::with_capacity(total_kept);
+    let mut rejected = Vec::with_capacity(n - total_kept);
+    for (i, (p, r)) in plan.into_iter().zip(scored).enumerate() {
+        if keep_mask[i] {
+            kept.push(p);
+            explore_flags.push(explore_mask[i]);
+        } else {
+            rejected.push((p, r));
+        }
+    }
+    ScreenSplit { kept, explore_flags, rejected }
+}
+
 /// [`tune_task_with`] as one tenant of a shared multi-tenant run: batches
 /// queue on the tenant's dispatcher (so competing jobs interleave instead
 /// of monopolizing the fleet) and, when a ledger is present, every batch
@@ -291,8 +487,21 @@ pub fn tune_task_tenant(
     let mut invalid = 0usize;
     let mut iteration = 0usize; // planning iterations started
     let mut modeled_hw_secs = 0.0f64;
+    let mut screened = 0usize; // points filtered out by the screening stage
+    let mut explore_hits = 0usize; // exploration points that improved best
+    let mut screen_secs = 0.0f64; // modeled cost of the screened points
+    let mut ordinal = 0usize; // trace ordinal across both fidelities
     let mut stopped = false; // the strategy (or its ledger) ended the run
     let mut failure: Option<anyhow::Error> = None;
+    // Screening needs the engine's online calibration (created on first
+    // use and shared by every tenant of the engine) and the task identity
+    // its per-task fits are keyed by. Exact mode touches neither.
+    let calibration = if budget.fidelity.is_screen() {
+        Some(engine.ensure_calibration())
+    } else {
+        None
+    };
+    let screen_task_id = space.task.short_id();
 
     /// One admitted batch: still measuring in the background, or already
     /// measured inline (the depth-1 serial path, which pays no worker
@@ -305,7 +514,7 @@ pub fn tune_task_tenant(
     std::thread::scope(|scope| {
         // In-flight batches in submission order (front = oldest), each
         // tagged with the planning iteration that produced it.
-        let mut inflight: VecDeque<(Inflight<'_>, usize)> = VecDeque::new();
+        let mut inflight: VecDeque<(Inflight<'_>, usize, Vec<bool>)> = VecDeque::new();
         loop {
             // Refill: plan and submit until the pipeline is full, the
             // budget is committed, or the strategy stops. At depth 1 this
@@ -361,6 +570,71 @@ pub fn tune_task_tenant(
                     stopped = true;
                     break;
                 }
+                // The whole admitted batch counts against the measurement
+                // budget whichever fidelity evaluates each point — the
+                // screened remainder was planned, charged and answered
+                // too, just more cheaply.
+                let admitted_len = plan.len();
+                let mut explore_flags: Vec<bool> = Vec::new();
+                if let (Fidelity::Screen { keep, explore }, Some(calib)) =
+                    (budget.fidelity, &calibration)
+                {
+                    let split = timer.time("screen", || {
+                        screen_batch(
+                            space,
+                            plan,
+                            calib.as_ref(),
+                            &screen_task_id,
+                            keep,
+                            explore,
+                            budget.area_budget_mm2,
+                            iteration,
+                        )
+                    });
+                    plan = split.kept;
+                    explore_flags = split.explore_flags;
+                    if !split.rejected.is_empty() {
+                        screened += split.rejected.len();
+                        engine.note_screened(split.rejected.len());
+                        if let Some(t) = tenant {
+                            if let Some(ledger) = t.ledger {
+                                // The low-fidelity tier pays its own
+                                // (modeled) way: already admitted by
+                                // `charge` above, its points settle at the
+                                // screening cost so equal-budget accounts
+                                // stay conserved.
+                                ledger.charge_screen(
+                                    t.framework,
+                                    t.task_id,
+                                    split.rejected.len(),
+                                    SCREEN_COST_SECS,
+                                );
+                            }
+                        }
+                        let at_secs =
+                            (sw.elapsed_secs() - timer.total_secs("queue")).max(0.0);
+                        for (_, r) in &split.rejected {
+                            ordinal += 1;
+                            screen_secs += SCREEN_COST_SECS;
+                            trace.push(TraceEntry {
+                                ordinal,
+                                iteration,
+                                at_secs,
+                                gflops: r.gflops,
+                                best_gflops: best.gflops,
+                                valid: r.valid,
+                                modeled_cum_secs: modeled_hw_secs + screen_secs,
+                                fidelity: TraceFidelity::Screened,
+                            });
+                            if let Some(o) = tenant.and_then(|t| t.observer) {
+                                o.on_trace(trace.last().expect("entry just pushed"));
+                            }
+                        }
+                        timer.time("observe", || {
+                            strategy.observe_low_fidelity(&split.rejected)
+                        });
+                    }
+                }
                 // Queueing behind competing tenants is scheduling, not
                 // search compute: time it as its own phase and keep it out
                 // of this job's wall clock, so the concurrent driver
@@ -380,7 +654,7 @@ pub fn tune_task_tenant(
                         t.dispatcher.checkout()
                     })
                 });
-                submitted += plan.len();
+                submitted += admitted_len;
                 let batch_entry = if depth == 1 {
                     // Serial mode measures inline on this thread — no
                     // worker spawn, no space clone: byte-for-byte the
@@ -398,14 +672,14 @@ pub fn tune_task_tenant(
                     // tenant turn.
                     Inflight::Pending(engine.submit_batch(scope, space, plan, permit))
                 };
-                inflight.push_back((batch_entry, iteration));
+                inflight.push_back((batch_entry, iteration, explore_flags));
                 iteration += 1;
             }
 
             // Drain the oldest in-flight batch. Completion is consumed in
             // submission order, so trace ordinals stay in order whatever
             // the engine's internal timing.
-            let Some((entry, batch_iteration)) = inflight.pop_front() else {
+            let Some((entry, batch_iteration, explore_flags)) = inflight.pop_front() else {
                 break;
             };
             let waited = match entry {
@@ -442,8 +716,9 @@ pub fn tune_task_tenant(
             // queue wait is scheduling, and leaving it in shifted
             // concurrent-driver Fig. 6 curves right of the serial ones.
             let at_secs = (sw.elapsed_secs() - timer.total_secs("queue")).max(0.0);
-            for ((p, r), origin) in batch.pairs.iter().zip(&batch.origins) {
+            for (idx, ((p, r), origin)) in batch.pairs.iter().zip(&batch.origins).enumerate() {
                 measured += 1;
+                ordinal += 1;
                 if origin.is_fresh() {
                     fresh += 1;
                 } else {
@@ -456,15 +731,31 @@ pub fn tune_task_tenant(
                 if r.valid && r.area_mm2 <= budget.area_budget_mm2 && r.seconds < best.seconds {
                     best = *r;
                     best_point = Some(p.clone());
+                    if explore_flags.get(idx).copied().unwrap_or(false) {
+                        // A point the analytical filter rejected just beat
+                        // everything it kept — the screening model is
+                        // misranking this task. The exploration slice
+                        // exists precisely to surface (and recover from)
+                        // this.
+                        explore_hits += 1;
+                        crate::log_info!(
+                            "tuner",
+                            "{}: exploration point improved best \
+                             (explore_hits={explore_hits}) — screening \
+                             misranked it",
+                            strategy.name()
+                        );
+                    }
                 }
                 trace.push(TraceEntry {
-                    ordinal: measured,
+                    ordinal,
                     iteration: batch_iteration,
                     at_secs,
                     gflops: r.gflops,
                     best_gflops: best.gflops,
                     valid: r.valid,
-                    modeled_cum_secs: modeled_hw_secs,
+                    modeled_cum_secs: modeled_hw_secs + screen_secs,
+                    fidelity: TraceFidelity::Exact,
                 });
                 if let Some(o) = tenant.and_then(|t| t.observer) {
                     o.on_trace(trace.last().expect("entry just pushed"));
@@ -499,6 +790,8 @@ pub fn tune_task_tenant(
         invalid,
         wall_secs: (sw.elapsed_secs() - timer.total_secs("queue")).max(0.0),
         modeled_hw_secs,
+        screened,
+        explore_hits,
         trace,
         timer,
     })
@@ -710,6 +1003,176 @@ mod tests {
         assert_eq!(b.measurements, a.measurements);
         assert_eq!(b.fresh, 0);
         assert_eq!(b.cache_served, b.measurements);
+    }
+
+    #[test]
+    fn fidelity_strings_parse_and_roundtrip() {
+        assert_eq!(Fidelity::parse("exact"), Some(Fidelity::Exact));
+        let short = Fidelity::parse("screen:0.25").unwrap();
+        assert_eq!(short, Fidelity::Screen { keep: 0.25, explore: DEFAULT_EXPLORE_FRAC });
+        let full = Fidelity::parse("screen:0.5:0").unwrap();
+        assert_eq!(full, Fidelity::Screen { keep: 0.5, explore: 0.0 });
+        for f in [Fidelity::Exact, short, full] {
+            assert_eq!(Fidelity::parse(&f.describe()), Some(f), "{}", f.describe());
+        }
+        for bad in
+            ["", "screen", "screen:", "screen:0", "screen:1.5", "screen:0.5:2", "screen:-1", "sim"]
+        {
+            assert!(Fidelity::parse(bad).is_none(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn exact_mode_reports_no_screening() {
+        let s = space();
+        let mut strat = RandomProbe {
+            space: s.clone(),
+            rng: Pcg32::seeded(19),
+            seen: HashSet::new(),
+            observed: 0,
+        };
+        let budget =
+            TuneBudget { total_measurements: 32, batch: 16, workers: 2, ..Default::default() };
+        assert_eq!(budget.fidelity, Fidelity::Exact, "exact is the default");
+        let r = tune_task(&s, &mut strat, budget).unwrap();
+        assert_eq!(r.screened, 0);
+        assert_eq!(r.explore_hits, 0);
+        assert!(r.trace.iter().all(|e| e.fidelity == TraceFidelity::Exact));
+    }
+
+    #[test]
+    fn screening_filters_most_points_and_tags_the_trace() {
+        let s = space();
+        let mut strat = RandomProbe {
+            space: s.clone(),
+            rng: Pcg32::seeded(17),
+            seen: HashSet::new(),
+            observed: 0,
+        };
+        let budget = TuneBudget {
+            total_measurements: 96,
+            batch: 32,
+            workers: 2,
+            fidelity: Fidelity::Screen { keep: 0.25, explore: 0.1 },
+            ..Default::default()
+        };
+        let r = tune_task(&s, &mut strat, budget).unwrap();
+        // The whole admitted budget is accounted: measured + screened.
+        assert!(r.screened > 0);
+        assert_eq!(r.measurements + r.screened, 96);
+        // keep=0.25 plus a 10% exploration slice forwards ~28% per batch.
+        assert!(
+            r.measurements <= 96 / 2,
+            "screening should filter most points, measured {}",
+            r.measurements
+        );
+        assert!(r.best.valid, "the kept fraction still finds a valid best");
+        // The trace interleaves both tiers with contiguous ordinals.
+        assert_eq!(r.trace.len(), 96);
+        for (i, e) in r.trace.iter().enumerate() {
+            assert_eq!(e.ordinal, i + 1);
+        }
+        let tagged = r.trace.iter().filter(|e| e.fidelity == TraceFidelity::Screened).count();
+        assert_eq!(tagged, r.screened);
+        // Only real measurements reach the exact-observation channel.
+        assert_eq!(strat.observed, r.measurements);
+        // Cumulative modeled time stays monotone across the mixed trace.
+        for w in r.trace.windows(2) {
+            assert!(w[1].modeled_cum_secs >= w[0].modeled_cum_secs);
+        }
+    }
+
+    #[test]
+    fn screened_points_reach_the_low_fidelity_channel() {
+        struct LowFi {
+            inner: RandomProbe,
+            low: usize,
+        }
+        impl Strategy for LowFi {
+            fn name(&self) -> &'static str {
+                "lowfi"
+            }
+            fn plan(&mut self, batch: usize) -> Vec<PointConfig> {
+                self.inner.plan(batch)
+            }
+            fn observe(&mut self, results: &[(PointConfig, MeasureResult)]) {
+                self.inner.observe(results);
+            }
+            fn observe_low_fidelity(&mut self, results: &[(PointConfig, MeasureResult)]) {
+                self.low += results.len();
+                // Screening estimates are finite numbers a posterior could
+                // actually use (invalid ones carry gflops 0, like the
+                // exact channel).
+                for (_, r) in results {
+                    assert!(r.gflops.is_finite());
+                }
+            }
+        }
+        let s = space();
+        let mut strat = LowFi {
+            inner: RandomProbe {
+                space: s.clone(),
+                rng: Pcg32::seeded(23),
+                seen: HashSet::new(),
+                observed: 0,
+            },
+            low: 0,
+        };
+        let budget = TuneBudget {
+            total_measurements: 64,
+            batch: 32,
+            workers: 2,
+            fidelity: Fidelity::Screen { keep: 0.5, explore: 0.0 },
+            ..Default::default()
+        };
+        let r = tune_task(&s, &mut strat, budget).unwrap();
+        assert_eq!(strat.low, r.screened);
+        assert_eq!(strat.inner.observed, r.measurements);
+    }
+
+    #[test]
+    fn screen_split_is_deterministic_and_orders_by_predicted_rank() {
+        let s = space();
+        let calib = crate::eval::Calibration::new(crate::eval::Fingerprint::current());
+        let mut rng = Pcg32::seeded(31);
+        let mut seen = HashSet::new();
+        let mut plan = Vec::new();
+        while plan.len() < 40 {
+            let p = s.random_point(&mut rng);
+            if seen.insert(s.flat_index(&p)) {
+                plan.push(p);
+            }
+        }
+        let task_id = s.task.short_id();
+        let area = crate::vta::area::default_area_budget_mm2();
+        let split =
+            screen_batch(&s, plan.clone(), &calib, &task_id, 0.25, 0.1, area, 7);
+        let again =
+            screen_batch(&s, plan.clone(), &calib, &task_id, 0.25, 0.1, area, 7);
+        assert_eq!(split.kept, again.kept, "same iteration seed → same split");
+        assert_eq!(split.explore_flags, again.explore_flags);
+        // ceil(0.25·40)=10 by rank + ceil(0.1·10)=1 exploration point.
+        assert_eq!(split.kept.len(), 11);
+        assert_eq!(split.explore_flags.iter().filter(|&&e| e).count(), 1);
+        assert_eq!(split.rejected.len(), 40 - 11);
+        assert_eq!(split.kept.len(), split.explore_flags.len());
+        // The best predicted point is never screened out.
+        let overlaps = calib.overlaps(&task_id);
+        let best_pred = plan
+            .iter()
+            .map(|p| crate::eval::AnalyticalBackend::measure_with_overlaps(&s, p, overlaps))
+            .enumerate()
+            .filter(|(_, r)| r.valid && r.area_mm2 <= area)
+            .min_by(|(_, a), (_, b)| a.seconds.total_cmp(&b.seconds))
+            .map(|(i, _)| plan[i].clone());
+        if let Some(bp) = best_pred {
+            assert!(split.kept.contains(&bp));
+        }
+        // A keep fraction of 1 screens nothing.
+        let all = screen_batch(&s, plan.clone(), &calib, &task_id, 1.0, 0.5, area, 7);
+        assert_eq!(all.kept.len(), 40);
+        assert!(all.rejected.is_empty());
+        assert!(all.explore_flags.iter().all(|&e| !e));
     }
 
     #[test]

@@ -67,6 +67,24 @@ fn ledger_fixture_trips_ledger_order_once() {
 }
 
 #[test]
+fn screen_fixture_trips_ledger_order_once() {
+    let fs = run_rule(
+        "rust/src/tuner/task_tuner.rs",
+        include_str!("fixtures/devcheck/screen_missing_charge.rs"),
+        ledger_order::check,
+    );
+    assert_eq!(fs.len(), 1, "{fs:?}");
+    assert_eq!(fs[0].rule, "ledger-order");
+    assert_eq!(fs[0].line, 8);
+    assert!(fs[0].message.contains("rogue_screener"), "{}", fs[0].message);
+    assert!(
+        fs[0].message.contains("`screen_batch`"),
+        "{}",
+        fs[0].message
+    );
+}
+
+#[test]
 fn codec_fixture_trips_codec_discipline_once() {
     let fs = run_rule(
         "rust/src/eval/proto.rs",

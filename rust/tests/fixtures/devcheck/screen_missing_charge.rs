@@ -1,0 +1,17 @@
+// Fixture: trips `ledger-order` exactly once — `screen_batch` (the
+// multi-fidelity screening split) with no lexically preceding
+// `charge(...)` in the same function: the diverted low-fidelity points
+// would bypass the budget ledger. The second function is the compliant
+// shape — admit, split, settle the screened remainder — and must NOT be
+// flagged.
+pub fn rogue_screener(space: &Space, plan: Vec<Point>) {
+    let split = screen_batch(space, plan, 0.25);
+    submit(split.kept);
+}
+
+pub fn honest_screener(ledger: &Ledger, space: &Space, plan: Vec<Point>) {
+    let admitted = ledger.charge("arco", "t0", plan.len());
+    let split = screen_batch(space, plan, 0.25);
+    ledger.charge_screen("arco", "t0", split.rejected.len(), 1e-6);
+    submit(split.kept);
+}

@@ -1,0 +1,233 @@
+//! Acceptance tests for multi-fidelity tuning (`--fidelity`):
+//!
+//! - `screen:0.25` reaches a best within 1% of exact mode for every
+//!   in-tree strategy at `configs/quick.json` scale, while sending at
+//!   least 30% fewer points to the simulator,
+//! - the budget ledger stays conserved across tiers (every admitted
+//!   candidate settles exactly once — simulated, cache-served, or
+//!   screened — and each tier is charged at its own modeled price),
+//! - the trace tags tiers honestly (ordinals contiguous across both,
+//!   screened entries tagged [`TraceFidelity::Screened`]), and
+//! - `--fidelity exact` (the default) stays bit-identical to the classic
+//!   loop: no screening state leaks into results, traces, or the ledger,
+//!   and a degenerate `screen:1.0:0.0` — keep everything, explore
+//!   nothing — reproduces exact mode trace-for-trace.
+
+use arco::eval::{AnalyticalBackend, BudgetLedger, Dispatcher, Engine};
+use arco::space::ConfigSpace;
+use arco::tuner::{
+    tune_task_tenant, tune_task_with, Fidelity, Framework, TaskTuneResult, TenantContext,
+    TraceFidelity, TuneBudget,
+};
+use arco::workload::Conv2dTask;
+
+fn space() -> ConfigSpace {
+    ConfigSpace::for_task(&Conv2dTask::new(1, 32, 28, 28, 32, 3, 3, 1, 1), true)
+}
+
+fn analytical() -> Engine {
+    Engine::with_backend(Box::new(AnalyticalBackend), 2, true)
+}
+
+/// `configs/quick.json`'s budget (128 points, batches of 32), at the
+/// requested fidelity.
+fn quick_budget(fidelity: Fidelity) -> TuneBudget {
+    TuneBudget { total_measurements: 128, batch: 32, workers: 2, fidelity, ..Default::default() }
+}
+
+const ALL_FRAMEWORKS: [Framework; 6] = [
+    Framework::AutoTvm,
+    Framework::Chameleon,
+    Framework::Arco,
+    Framework::Random,
+    Framework::ArcoNoCs,
+    Framework::ArcoSwOnly,
+];
+
+/// Run one framework at quick scale under a per-run ledger, so the test
+/// can audit cross-tier conservation afterwards.
+fn run(fw: Framework, fidelity: Fidelity, seed: u64) -> (TaskTuneResult, BudgetLedger) {
+    let s = space();
+    let engine = analytical();
+    let ledger = BudgetLedger::new(128);
+    let dispatcher = Dispatcher::new(1);
+    let tenant = TenantContext {
+        ledger: Some(&ledger),
+        dispatcher: &dispatcher,
+        framework: fw.name(),
+        task_id: "t0",
+        observer: None,
+    };
+    let mut strategy = fw.build(s.clone(), true, seed);
+    let budget = quick_budget(fidelity);
+    let out = tune_task_tenant(&engine, &s, strategy.as_mut(), budget, Some(&tenant)).unwrap();
+    (out, ledger)
+}
+
+/// Everything a trace entry carries except the wall-clock stamp (which no
+/// two runs can share bit-for-bit).
+type TraceRow = (usize, usize, f64, f64, bool, f64, TraceFidelity);
+
+fn trace_rows(result: &TaskTuneResult) -> Vec<TraceRow> {
+    result
+        .trace
+        .iter()
+        .map(|e| {
+            (e.ordinal, e.iteration, e.gflops, e.best_gflops, e.valid, e.modeled_cum_secs, e.fidelity)
+        })
+        .collect()
+}
+
+#[test]
+fn screening_matches_exact_best_with_fewer_simulations_for_every_strategy() {
+    for fw in ALL_FRAMEWORKS {
+        let (exact, _) = run(fw, Fidelity::Exact, 17);
+        let (screen, ledger) =
+            run(fw, Fidelity::Screen { keep: 0.25, explore: 0.1 }, 17);
+
+        // The headline acceptance bar: within 1% of the exact best...
+        assert!(
+            exact.best.valid && screen.best.valid,
+            "{}: both tiers must find a valid best",
+            fw.name()
+        );
+        assert!(
+            screen.best.seconds <= exact.best.seconds * 1.01,
+            "{}: screened best {:.9}s is more than 1% off exact best {:.9}s",
+            fw.name(),
+            screen.best.seconds,
+            exact.best.seconds,
+        );
+        // ...with at least 30% fewer simulator measurements for the same
+        // candidate budget.
+        assert!(
+            (screen.measurements as f64) <= 0.7 * exact.measurements as f64,
+            "{}: screening sent {} of {} exact-mode points to the simulator \
+             (needed <= 70%)",
+            fw.name(),
+            screen.measurements,
+            exact.measurements,
+        );
+        assert!(screen.screened > 0, "{}: screening never filtered a point", fw.name());
+        // The candidate budget bounds *admitted* points at any fidelity: a
+        // screened point was planned, admitted and answered — just more
+        // cheaply — so the tiers together can never overshoot it.
+        assert!(
+            screen.measurements + screen.screened <= 128,
+            "{}: tiers together overshot the candidate budget ({} + {})",
+            fw.name(),
+            screen.measurements,
+            screen.screened,
+        );
+
+        // Honest accounting: every admitted candidate settles exactly
+        // once, whichever tier answered it, and the screened tier pays its
+        // own (tiny but non-zero) modeled price.
+        let account = ledger.account(fw.name(), "t0");
+        assert_eq!(account.charged, screen.measurements + screen.screened);
+        assert_eq!(account.settled(), account.charged, "{}: unsettled charges", fw.name());
+        assert_eq!(account.fresh + account.cache_served, screen.measurements);
+        assert_eq!(account.screened, screen.screened);
+        assert!(account.screened_secs > 0.0);
+        assert!(
+            account.screened_secs < account.modeled_hw_secs,
+            "{}: screening must be charged far below simulator price",
+            fw.name()
+        );
+
+        // The trace covers both tiers with contiguous ordinals and honest
+        // tags — Fig. 6 style plots rely on the tag to chart
+        // simulator-seconds only.
+        assert_eq!(screen.trace.len(), screen.measurements + screen.screened);
+        for (i, e) in screen.trace.iter().enumerate() {
+            assert_eq!(e.ordinal, i + 1, "{}: trace ordinals must stay contiguous", fw.name());
+        }
+        let tagged = screen.trace.iter().filter(|e| e.fidelity == TraceFidelity::Screened).count();
+        assert_eq!(tagged, screen.screened, "{}: screened-entry tags must match", fw.name());
+    }
+}
+
+#[test]
+fn exact_mode_runs_are_deterministic_and_carry_no_screening_state() {
+    for fw in ALL_FRAMEWORKS {
+        let (a, ledger_a) = run(fw, Fidelity::Exact, 29);
+        let (b, _) = run(fw, Fidelity::Exact, 29);
+
+        // Exact is the default and must look exactly like the classic
+        // loop: no screened points, no exploration hits, no screened
+        // trace tags, no screening debits on the ledger.
+        assert_eq!(a.screened, 0, "{}", fw.name());
+        assert_eq!(a.explore_hits, 0, "{}", fw.name());
+        assert!(a.trace.iter().all(|e| e.fidelity == TraceFidelity::Exact), "{}", fw.name());
+        let account = ledger_a.account(fw.name(), "t0");
+        assert_eq!(account.screened, 0);
+        assert_eq!(account.screened_secs, 0.0);
+        assert_eq!(account.settled(), account.charged);
+
+        // And it is bit-reproducible run to run.
+        assert_eq!(a.best_point, b.best_point, "{}", fw.name());
+        assert_eq!(a.best.seconds, b.best.seconds, "{}", fw.name());
+        assert_eq!(trace_rows(&a), trace_rows(&b), "{}", fw.name());
+    }
+}
+
+#[test]
+fn degenerate_screen_keep_all_reproduces_exact_mode_bit_for_bit() {
+    // `screen:1.0:0.0` ranks the batch and then keeps every point: no
+    // candidate is diverted, the strategy observes exactly the exact-mode
+    // stream, and the whole run must reproduce exact mode trace-for-trace
+    // (modeled costs included). This pins the screening stage as a pure
+    // *filter*: with the filter wide open, the loop is the classic one.
+    let s = space();
+    let mut strat = Framework::AutoTvm.build(s.clone(), true, 41);
+    let exact =
+        tune_task_with(&analytical(), &s, strat.as_mut(), quick_budget(Fidelity::Exact)).unwrap();
+    let mut strat = Framework::AutoTvm.build(s.clone(), true, 41);
+    let wide_open = tune_task_with(
+        &analytical(),
+        &s,
+        strat.as_mut(),
+        quick_budget(Fidelity::Screen { keep: 1.0, explore: 0.0 }),
+    )
+    .unwrap();
+
+    assert_eq!(wide_open.screened, 0);
+    assert_eq!(wide_open.measurements, exact.measurements);
+    assert_eq!(wide_open.best_point, exact.best_point);
+    assert_eq!(wide_open.best.seconds, exact.best.seconds);
+    assert_eq!(trace_rows(&wide_open), trace_rows(&exact));
+}
+
+#[test]
+fn screening_respects_a_shared_ledger_cap_across_tiers() {
+    // A 40-point allowance admits 40 *candidates*, not 40 simulations:
+    // with screen:0.25 the job must stop at 40 charged points split
+    // between the tiers — the low-fidelity tier cannot be used to sneak
+    // extra candidates past an equal-budget comparison.
+    let s = space();
+    let engine = analytical();
+    let ledger = BudgetLedger::new(40);
+    let dispatcher = Dispatcher::new(1);
+    let tenant = TenantContext {
+        ledger: Some(&ledger),
+        dispatcher: &dispatcher,
+        framework: "random",
+        task_id: "t0",
+        observer: None,
+    };
+    let mut strategy = Framework::Random.build(s.clone(), true, 7);
+    let budget = TuneBudget {
+        total_measurements: 128,
+        batch: 16,
+        workers: 2,
+        fidelity: Fidelity::Screen { keep: 0.25, explore: 0.1 },
+        ..Default::default()
+    };
+    let out = tune_task_tenant(&engine, &s, strategy.as_mut(), budget, Some(&tenant)).unwrap();
+    assert_eq!(out.measurements + out.screened, 40, "the ledger must cap candidates, not sims");
+    assert!(out.screened > 0);
+    let account = ledger.account("random", "t0");
+    assert_eq!(account.charged, 40);
+    assert_eq!(account.settled(), 40);
+    assert_eq!(ledger.remaining("random", "t0"), 0);
+}

@@ -22,7 +22,7 @@ use arco::eval::{
     TuneClient, TuneServeOptions,
 };
 use arco::space::ConfigSpace;
-use arco::tuner::{tune_model_with, Framework, TraceEntry, TuneBudget};
+use arco::tuner::{tune_model_with, Fidelity, Framework, TraceEntry, TuneBudget};
 use arco::workload::{model_by_name, Conv2dTask};
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -67,6 +67,7 @@ fn spec(client: &str, framework: Framework, task: Conv2dTask, trials: usize, see
         pipeline_depth: 1,
         seed,
         quick: true,
+        fidelity: Fidelity::Exact,
     }
 }
 

@@ -19,6 +19,11 @@
 #                          shard's measurements survive in --store; a
 #                          fresh shard answers the same batch with zero
 #                          simulations; store prune bounds the directory
+#   smoke_multifidelity    "Multi-fidelity screening" — --fidelity exact
+#                          is bit-identical to the default; screen:0.25
+#                          on the analytical oracle lands on the same
+#                          best with far fewer simulations, and the
+#                          shared ledger conserves charges across tiers
 #
 # Wall-clock outputs (compile time) legitimately differ between runs, so
 # the diffs target results/table6_inference.md, which is a pure function
@@ -438,6 +443,90 @@ smoke_store() {
     echo "store ok: a fresh shard replayed a dead shard's run from the store, and prune bounded it"
 }
 
+# docs/OPERATIONS.md § "Multi-fidelity screening": --fidelity exact is
+# bit-identical to the default loop; screen:0.25 against the analytical
+# backend (where the screening model is the oracle) must land on the
+# same best configurations with far fewer simulations, and a
+# shared-budget run must conserve charges across the tiers.
+smoke_multifidelity() {
+    echo "== multi-fidelity: calibrated screening in front of the simulator budget =="
+    # Random search ignores observations, so the planned candidates are
+    # identical at every fidelity — and with the analytical backend the
+    # (seed-calibrated) screening model scores candidates exactly as the
+    # simulator would, so the per-batch best always survives the filter:
+    # table6 must come out identical, only the simulation count may drop.
+    run_multifid() {
+        "$BIN" compare --models alexnet --frameworks random \
+            --config configs/smoke.json --quick --seed 7 --workers 2 \
+            --backend analytical "$@"
+    }
+    local exact_log=/tmp/arco_mf_exact.log screen_log=/tmp/arco_mf_screen.log
+    run_multifid | tee "$exact_log"
+    cp results/table6_inference.md /tmp/arco_t6_mf_default.md
+
+    # `--fidelity exact` spelled out is the default: same table, and no
+    # screening state may leak into the output.
+    run_multifid --fidelity exact
+    cp results/table6_inference.md /tmp/arco_t6_mf_exact.md
+    diff -u /tmp/arco_t6_mf_default.md /tmp/arco_t6_mf_exact.md
+    grep -q " screened=" "$exact_log" && {
+        echo "exact-mode output must carry no screened= token"; exit 1;
+    }
+
+    run_multifid --fidelity screen:0.25 | tee "$screen_log"
+    cp results/table6_inference.md /tmp/arco_t6_mf_screen.md
+    diff -u /tmp/arco_t6_mf_default.md /tmp/arco_t6_mf_screen.md
+    grep -q " screened=" "$screen_log" || {
+        echo "screening run must report screened points"; exit 1;
+    }
+
+    # Fewer simulator measurements for the same candidate budget: with
+    # keep=0.25 (plus the exploration slice) the screening run must cost
+    # at most 70% of exact mode's simulations.
+    local exact_sims screen_sims
+    exact_sims=$(sed -n 's/.* simulations=\([0-9]*\).*/\1/p' "$exact_log" | head -n1)
+    screen_sims=$(sed -n 's/.* simulations=\([0-9]*\).*/\1/p' "$screen_log" | head -n1)
+    [ -n "$exact_sims" ] && [ -n "$screen_sims" ] || {
+        echo "could not parse simulations= from the engine summaries"; exit 1;
+    }
+    if [ $((screen_sims * 10)) -gt $((exact_sims * 7)) ]; then
+        echo "screening ran $screen_sims simulations vs $exact_sims exact (needed <= 70%)"
+        exit 1
+    fi
+    echo "multi-fidelity: $screen_sims simulations at screen:0.25 vs $exact_sims exact, identical table6"
+
+    # Cross-tier conservation on the shared ledger: every admitted
+    # candidate settles exactly once — fresh, cache-served, or screened.
+    local ledger_log=/tmp/arco_mf_ledger.log
+    run_multifid --fidelity screen:0.25 --shared-budget | tee "$ledger_log"
+    awk '/^ledger\[alexnet\]: / {
+        found = 1
+        for (i = 1; i <= NF; i++) {
+            if ($i ~ /^charged=/)      { split($i, a, "="); charged  = a[2] }
+            if ($i ~ /^fresh=/)        { split($i, a, "="); fresh    = a[2] }
+            if ($i ~ /^cache_served=/) { split($i, a, "="); cache    = a[2] }
+            if ($i ~ /^screened=/)     { split($i, a, "="); screened = a[2] }
+        }
+        if (charged == "" || fresh == "" || cache == "") {
+            print "could not parse ledger summary: " $0; bad = 1; exit 1
+        }
+        if (screened + 0 <= 0) {
+            print "shared-budget screening run must screen points: " $0; bad = 1; exit 1
+        }
+        if (charged + 0 != fresh + cache + screened + 0) {
+            print "ledger not conserved across tiers: charged " charged \
+                  " != fresh " fresh " + cache_served " cache " + screened " screened
+            bad = 1; exit 1
+        }
+        print "multi-fidelity ok: ledger conserved (charged " charged " = " fresh \
+              " fresh + " cache " cached + " screened " screened)"
+    }
+    END {
+        if (bad) { exit 1 }
+        if (!found) { print "no ledger line found"; exit 1 }
+    }' "$ledger_log"
+}
+
 smoke_backend analytical
 smoke_backend vta-sim
 smoke_heterogeneous
@@ -446,4 +535,5 @@ smoke_warm_start_scale
 smoke_pipelined
 smoke_serve_tune
 smoke_store
-echo "smoke ok: remote == in-process, weighted placement, warm start (incl. 20k-record preload), pipelined tuning, serve-tune and the shared store verified"
+smoke_multifidelity
+echo "smoke ok: remote == in-process, weighted placement, warm start (incl. 20k-record preload), pipelined tuning, serve-tune, the shared store and multi-fidelity screening verified"
